@@ -1,0 +1,21 @@
+//! Three-layer pipeline demo: Rust coordinator (L3) drives an online
+//! training loop whose entire per-step compute — GRU forward (L1 Pallas
+//! kernel), SnAp-1 influence update (L1), readout/loss/gradients (L2 JAX) —
+//! runs inside ONE AOT-compiled XLA module through PJRT. Python never runs.
+//!
+//! Requires `make artifacts` first.
+//!
+//! Run: `cargo run --release --example aot_pipeline [steps]`
+
+use snap_rtrl::coordinator::cli::Args;
+use snap_rtrl::runtime::demo::run_aot_demo;
+
+fn main() {
+    let steps = std::env::args().nth(1).unwrap_or_else(|| "500".to_string());
+    let args = Args::parse(&["aot-demo".into(), "--steps".into(), steps]).unwrap();
+    if let Err(e) = run_aot_demo(&args) {
+        eprintln!("aot_pipeline failed: {e:#}");
+        eprintln!("hint: run `make artifacts` to build the HLO modules first");
+        std::process::exit(1);
+    }
+}

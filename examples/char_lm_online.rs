@@ -1,0 +1,81 @@
+//! End-to-end driver (the EXPERIMENTS.md §E2E run): character-level language
+//! modelling with a sparse GRU, comparing SnAp-1 (fully online), SnAp-2,
+//! BPTT (sequence-end updates) and the frozen-recurrent baseline on the same
+//! corpus and budget. Logs the full loss curves and writes them to
+//! results/e2e_char_lm.csv.
+//!
+//! Run: `cargo run --release --example char_lm_online [k] [steps]`
+
+use snap_rtrl::cells::Arch;
+use snap_rtrl::coordinator::report::write_csv;
+use snap_rtrl::data::Corpus;
+use snap_rtrl::grad::Method;
+use snap_rtrl::train::{train_charlm, TrainConfig, TrainResult};
+use std::time::Instant;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().collect();
+    let k: usize = argv.get(1).and_then(|v| v.parse().ok()).unwrap_or(64);
+    let steps: usize = argv.get(2).and_then(|v| v.parse().ok()).unwrap_or(300);
+
+    let corpus = Corpus::synthetic(300_000, 1234);
+    println!("corpus: {} bytes (synthetic order-3 Markov; see DESIGN.md)", corpus.len());
+    println!("model: GRU-{k}, 75% weight sparsity, MLP readout -> 256-way softmax");
+    println!("budget: {steps} sequences of 128 bytes each\n");
+
+    let arms: Vec<(&str, Method, usize)> = vec![
+        ("snap-1 (online T=1)", Method::Snap(1), 1),
+        ("snap-2 (online T=1)", Method::Snap(2), 1),
+        ("bptt (seq-end)", Method::Bptt, 0),
+        ("frozen recurrent", Method::Frozen, 0),
+    ];
+
+    let mut csv = Vec::new();
+    let mut finals = Vec::new();
+    for (label, method, trunc) in arms {
+        let cfg = TrainConfig {
+            arch: Arch::Gru,
+            k,
+            density: 0.25,
+            method,
+            lr: 3e-3,
+            batch: 1,
+            seq_len: 128,
+            truncation: trunc,
+            steps,
+            seed: 7,
+            readout_hidden: 256,
+            embed_dim: 64,
+            log_every: (steps / 25).max(1),
+            ..Default::default()
+        };
+        let t0 = Instant::now();
+        let res: TrainResult = train_charlm(&cfg, &corpus);
+        let dt = t0.elapsed();
+        println!(
+            "{label:<22} final valid bpc {:.3}  ({:.1} tokens/s, {:.0} flops/step tracking)",
+            res.final_valid_bpc,
+            res.tokens_seen as f64 / dt.as_secs_f64(),
+            res.tracking_flops_per_step
+        );
+        for p in &res.curve {
+            csv.push(vec![
+                label.to_string(),
+                p.x.to_string(),
+                format!("{:.5}", p.train_bpc),
+                format!("{:.5}", p.valid_bpc),
+            ]);
+        }
+        finals.push((label, res.final_valid_bpc));
+    }
+
+    let path = write_csv("e2e_char_lm.csv", &["method", "step", "train_bpc", "valid_bpc"], &csv);
+    println!("\nwrote {}", path.display());
+
+    // the paper's shape: SnAp methods track BPTT closely and beat frozen.
+    let get = |l: &str| finals.iter().find(|(a, _)| a.starts_with(l)).unwrap().1;
+    let (snap1, frozen) = (get("snap-1"), get("frozen"));
+    println!("\nshape check: snap-1 {snap1:.3} bpc vs frozen {frozen:.3} bpc");
+    assert!(snap1 < frozen, "SnAp-1 must beat the frozen-recurrent baseline");
+    println!("OK — SnAp-1 trains the recurrent core measurably better than not training it");
+}

@@ -1,0 +1,30 @@
+// standalone perf probe for ColJacobian::update
+use snap_rtrl::benchutil::{bench, report};
+use snap_rtrl::cells::Arch;
+use snap_rtrl::grad::{GradAlgo, Method};
+use snap_rtrl::tensor::rng::Pcg32;
+use std::time::Duration;
+
+fn main() {
+    for (arch, k, d, m) in [
+        (Arch::Gru, 64usize, 1.0f64, Method::Snap(1)),
+        (Arch::Gru, 128, 1.0, Method::Snap(1)),
+        (Arch::Gru, 64, 0.25, Method::Snap(2)),
+        (Arch::Gru, 128, 0.25, Method::Snap(2)),
+        (Arch::Vanilla, 128, 0.0625, Method::Snap(3)),
+    ] {
+        let mut rng = Pcg32::seeded(1);
+        let cell = arch.build(k, 32, d, &mut rng);
+        let theta = cell.init_params(&mut rng);
+        let mut algo = m.build(cell.as_ref(), &mut rng);
+        let x: Vec<f32> = (0..32).map(|_| rng.normal()).collect();
+        let dl: Vec<f32> = (0..cell.hidden_size()).map(|_| 0.1).collect();
+        let mut g = vec![0.0f32; cell.num_params()];
+        let t = bench(3, Duration::from_millis(400), || {
+            algo.step(&theta, &x);
+            algo.inject_loss(&dl, &mut g);
+            g[0]
+        });
+        report(&format!("{}/{}/k={k}/d={d}", arch.name(), m.name()), &t, "");
+    }
+}

@@ -1,0 +1,14 @@
+use snap_rtrl::cells::Arch;
+use snap_rtrl::grad::{GradAlgo, Method};
+use snap_rtrl::tensor::rng::Pcg32;
+fn main() {
+    let mut rng = Pcg32::seeded(1);
+    let cell = Arch::Gru.build(128, 32, 1.0, &mut rng);
+    let theta = cell.init_params(&mut rng);
+    let mut algo = Method::Snap(1).build(cell.as_ref(), &mut rng);
+    let x: Vec<f32> = (0..32).map(|_| rng.normal()).collect();
+    let dl: Vec<f32> = (0..128).map(|_| 0.1).collect();
+    let mut g = vec![0.0f32; cell.num_params()];
+    for _ in 0..3000 { algo.step(&theta, &x); algo.inject_loss(&dl, &mut g); }
+    println!("{}", g[0]);
+}

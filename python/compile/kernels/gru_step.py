@@ -1,0 +1,46 @@
+"""L1 Pallas kernel: one fused GRU step (Engel/CuDNN variant, paper eq. 7).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the three h-matmuls and three
+x-matmuls are expressed as one kernel so the weights stream HBM→VMEM once per
+step and the gate fusion (sigmoid/tanh/lerp) runs on the VPU without
+round-tripping h. For the sizes used by the AOT artifact (k ≤ 128) everything
+fits in a single VMEM block, so the BlockSpec is the whole-array default; the
+MXU sees three (k,k)@(k,) and three (k,a)@(a,) contractions.
+
+interpret=True is REQUIRED on this CPU image — real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gru_step_kernel(whz_ref, whr_ref, wha_ref, wxz_ref, wxr_ref, wxa_ref,
+                     bz_ref, br_ref, ba_ref, h_ref, x_ref,
+                     h_out, z_out, r_out, a_out, m_out):
+    h = h_ref[...]
+    x = x_ref[...]
+    z = jax.nn.sigmoid(whz_ref[...] @ h + wxz_ref[...] @ x + bz_ref[...])
+    r = jax.nn.sigmoid(whr_ref[...] @ h + wxr_ref[...] @ x + br_ref[...])
+    m = wha_ref[...] @ h
+    a = jnp.tanh(wxa_ref[...] @ x + r * m + ba_ref[...])
+    h_out[...] = (1.0 - z) * h + z * a
+    z_out[...] = z
+    r_out[...] = r
+    a_out[...] = a
+    m_out[...] = m
+
+
+@functools.partial(jax.jit, static_argnames=())
+def gru_step(whz, whr, wha, wxz, wxr, wxa, bz, br, ba, h, x):
+    """Fused GRU step; returns (h_next, z, r, a, m)."""
+    k = h.shape[0]
+    vec = jax.ShapeDtypeStruct((k,), h.dtype)
+    return pl.pallas_call(
+        _gru_step_kernel,
+        out_shape=(vec, vec, vec, vec, vec),
+        interpret=True,
+    )(whz, whr, wha, wxz, wxr, wxa, bz, br, ba, h, x)

@@ -1,0 +1,112 @@
+"""Pure-jnp oracles for the Pallas kernels and the L2 model.
+
+These are the CORE correctness references: every kernel in this package must
+match its `*_ref` twin to float32 tolerance (pytest enforces this with
+hypothesis sweeps over shapes), and the Rust native implementation mirrors
+the same math (validated end-to-end through the AOT artifact in
+`repro aot-demo`).
+
+Conventions (shared with rust/src/cells/gru.rs — Engel/CuDNN GRU variant,
+paper eq. 7):
+
+    z = sigmoid(Whz @ h + Wxz @ x + bz)
+    r = sigmoid(Whr @ h + Wxr @ x + br)
+    m = Wha @ h
+    a = tanh(Wxa @ x + r * m + ba)
+    h' = (1 - z) * h + z * a
+"""
+
+import jax.numpy as jnp
+
+
+def _sigmoid(v):
+    return 1.0 / (1.0 + jnp.exp(-v))
+
+
+def gru_step_ref(whz, whr, wha, wxz, wxr, wxa, bz, br, ba, h, x):
+    """One GRU step. Returns (h_next, z, r, a, m)."""
+    z = _sigmoid(whz @ h + wxz @ x + bz)
+    r = _sigmoid(whr @ h + wxr @ x + br)
+    m = wha @ h
+    a = jnp.tanh(wxa @ x + r * m + ba)
+    h_next = (1.0 - z) * h + z * a
+    return h_next, z, r, a, m
+
+
+def snap1_update_ref(j_block, coef, src, ddiag):
+    """SnAp-1 influence update for one weight block (paper eq. 3).
+
+    j_block: (k, c) influence values J[u(p), p] laid out as a matrix
+    coef:    (k,)  pre-activation coefficient per unit (∂h'_i/∂pre_i)
+    src:     (c,)  multiplicand per column (h_prev or x)
+    ddiag:   (k,)  diagonal of the dynamics Jacobian D_t
+
+    J' = coef ⊗ src + ddiag[:, None] * J
+    """
+    return coef[:, None] * src[None, :] + ddiag[:, None] * j_block
+
+
+def gru_coefs_ref(h_prev, z, r, a, m):
+    """Pre-activation coefficients (cz, cr, ca).
+
+    cz_i = (a_i - h_i) σ'(z_i);  cr_i = z_i φ'(a_i) m_i σ'(r_i);
+    ca_i = z_i φ'(a_i).
+    """
+    dphi = 1.0 - a * a
+    cz = (a - h_prev) * z * (1.0 - z)
+    cr = z * dphi * m * r * (1.0 - r)
+    ca = z * dphi
+    return cz, cr, ca
+
+
+def gru_ddiag_ref(whz, whr, wha, h_prev, z, r, a, m):
+    """Diagonal of D_t for the Engel GRU (the SnAp-1 dynamics term)."""
+    cz, cr, ca = gru_coefs_ref(h_prev, z, r, a, m)
+    return (
+        (1.0 - z)
+        + cz * jnp.diagonal(whz)
+        + cr * jnp.diagonal(whr)
+        + ca * r * jnp.diagonal(wha)
+    )
+
+
+def gru_dynamics_ref(whz, whr, wha, h_prev, z, r, a, m):
+    """Full dense dynamics Jacobian D_t (k×k) — used by the RTRL oracle."""
+    cz, cr, ca = gru_coefs_ref(h_prev, z, r, a, m)
+    d = jnp.diag(1.0 - z)
+    d = d + cz[:, None] * whz
+    d = d + cr[:, None] * whr
+    d = d + (ca * r)[:, None] * wha
+    return d
+
+
+def rtrl_step_ref(j_full, d, i_full):
+    """Exact RTRL influence update J' = I + D @ J (dense oracle)."""
+    return i_full + d @ j_full
+
+
+def readout_ref(phi, h, hidden, vocab):
+    """ReLU MLP readout; phi layout = [W1 (H,k) row-major, b1, W2 (V,H), b2]."""
+    k = h.shape[0]
+    o = 0
+    w1 = phi[o:o + hidden * k].reshape(hidden, k)
+    o += hidden * k
+    b1 = phi[o:o + hidden]
+    o += hidden
+    w2 = phi[o:o + vocab * hidden].reshape(vocab, hidden)
+    o += vocab * hidden
+    b2 = phi[o:o + vocab]
+    pre1 = w1 @ h + b1
+    act1 = jnp.maximum(pre1, 0.0)
+    logits = w2 @ act1 + b2
+    return logits, pre1, act1, (w1, b1, w2, b2)
+
+
+def softmax_xent_ref(logits, onehot):
+    """Stable log-softmax cross-entropy; returns (loss, dlogits)."""
+    ls = logits - jnp.max(logits)
+    lse = jnp.log(jnp.sum(jnp.exp(ls)))
+    logp = ls - lse
+    loss = -jnp.sum(onehot * logp)
+    dlogits = jnp.exp(logp) - onehot
+    return loss, dlogits

@@ -1,0 +1,87 @@
+"""L1 Pallas kernel: the SnAp-1 influence update for one weight block.
+
+The paper's hot spot, specialised to the n=1 pattern (one kept row per
+parameter column — §3.1): per weight block W[gate] of shape (k, c), the kept
+influence values form a (k, c) matrix J with
+
+    J'[i, l] = coef[i] · src[l] + ddiag[i] · J[i, l]        (paper eq. 3)
+
+i.e. a rank-1 outer product plus a row-scaled copy — no reduction at all,
+which is why SnAp-1 costs no more than backprop.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): tiled over the column axis via
+BlockSpec so J streams HBM→VMEM in (k, BC) tiles; coef/ddiag stay resident.
+The op is elementwise/outer — a pure VPU kernel; it never touches the MXU.
+VMEM per tile at k=128, BC=512: 2·128·512·4B = 512 KiB — double-bufferable.
+
+interpret=True is REQUIRED on this CPU image (see gru_step.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _snap1_kernel(j_ref, coef_ref, src_ref, ddiag_ref, out_ref):
+    out_ref[...] = (
+        coef_ref[...][:, None] * src_ref[...][None, :]
+        + ddiag_ref[...][:, None] * j_ref[...]
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_cols",))
+def snap1_update(j_block, coef, src, ddiag, block_cols=None):
+    """SnAp-1 update J' = coef ⊗ src + ddiag[:,None]·J for one block.
+
+    j_block: (k, c); coef, ddiag: (k,); src: (c,).
+    block_cols tiles the column axis (must divide c); None = single block.
+    """
+    k, c = j_block.shape
+    if block_cols is None or block_cols >= c:
+        return pl.pallas_call(
+            _snap1_kernel,
+            out_shape=jax.ShapeDtypeStruct((k, c), j_block.dtype),
+            interpret=True,
+        )(j_block, coef, src, ddiag)
+    assert c % block_cols == 0, "block_cols must divide c"
+    grid = (c // block_cols,)
+    return pl.pallas_call(
+        _snap1_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k, block_cols), lambda i: (0, i)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((block_cols,), lambda i: (i,)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((k, block_cols), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((k, c), j_block.dtype),
+        interpret=True,
+    )(j_block, coef, src, ddiag)
+
+
+def _snap1_grad_kernel(j_ref, dlh_ref, out_ref):
+    out_ref[...] = dlh_ref[...][:, None] * j_ref[...]
+
+
+@jax.jit
+def snap1_grad(j_block, dl_dh):
+    """Gradient contraction for one block: g[i,l] = dL/dh[i] · J'[i,l]."""
+    k, c = j_block.shape
+    return pl.pallas_call(
+        _snap1_grad_kernel,
+        out_shape=jax.ShapeDtypeStruct((k, c), j_block.dtype),
+        interpret=True,
+    )(j_block, dl_dh)
+
+
+def snap1_grad_ref(j_block, dl_dh):
+    return dl_dh[:, None] * j_block
+
+
+def snap1_update_bias(j_bias, coef, ddiag):
+    """Bias columns: src ≡ 1, so J' = coef + ddiag·J (plain jnp — too small
+    to be worth a kernel launch)."""
+    return coef + ddiag * j_bias

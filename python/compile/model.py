@@ -1,0 +1,155 @@
+"""L2: the JAX model — a fused fully-online GRU + SnAp-1 training step.
+
+Composes the L1 Pallas kernels (`kernels.gru_step`, `kernels.snap_update`)
+with the readout/loss math into ONE jittable function that the AOT path
+lowers to a single HLO module. The Rust coordinator then drives training
+entirely through that module (see rust/src/runtime/demo.rs).
+
+Parameter layouts mirror rust/src/cells/gru.rs and rust/src/models/readout.rs
+exactly (dense masks ⇒ CSR order == row-major):
+
+    theta = [Whz, Whr, Wha, Wxz, Wxr, Wxa (row-major), bz, br, ba]
+    phi   = [W1 (H,k), b1, W2 (V,H), b2]
+    j     = one influence value per theta entry (SnAp-1: J[u(p), p])
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.gru_step import gru_step
+from compile.kernels.snap_update import snap1_grad, snap1_update, snap1_update_bias
+
+
+def unpack_theta(theta, k, a):
+    """Split the flat θ into the nine GRU blocks."""
+    o = 0
+    whz = theta[o:o + k * k].reshape(k, k); o += k * k
+    whr = theta[o:o + k * k].reshape(k, k); o += k * k
+    wha = theta[o:o + k * k].reshape(k, k); o += k * k
+    wxz = theta[o:o + k * a].reshape(k, a); o += k * a
+    wxr = theta[o:o + k * a].reshape(k, a); o += k * a
+    wxa = theta[o:o + k * a].reshape(k, a); o += k * a
+    bz = theta[o:o + k]; o += k
+    br = theta[o:o + k]; o += k
+    ba = theta[o:o + k]; o += k
+    return whz, whr, wha, wxz, wxr, wxa, bz, br, ba
+
+
+def num_params(k, a):
+    return 3 * (k * k + k * a + k)
+
+
+def readout_num_params(k, hidden, vocab):
+    return hidden * k + hidden + vocab * hidden + vocab
+
+
+def gru_snap1_train_step(theta, phi, h, j, x, target_onehot, *, k, a, hidden, vocab):
+    """One fully-online training step. Returns
+    (h_next, j_next, loss, g_rec, g_ro)."""
+    whz, whr, wha, wxz, wxr, wxa, bz, br, ba = unpack_theta(theta, k, a)
+    jhz, jhr, jha, jxz, jxr, jxa, jbz, jbr, jba = unpack_theta(j, k, a)
+
+    # --- L1 kernel: cell forward
+    h_next, z, r, a_act, m = gru_step(whz, whr, wha, wxz, wxr, wxa, bz, br, ba, h, x)
+
+    # --- SnAp-1 tracking: coefficients and D_t diagonal
+    cz, cr, ca = ref.gru_coefs_ref(h, z, r, a_act, m)
+    ddiag = ref.gru_ddiag_ref(whz, whr, wha, h, z, r, a_act, m)
+    ca_h = ca * r  # W_ha's PrevH entries carry an extra r_i (Engel variant)
+
+    # --- L1 kernel: influence update per block (paper eq. 3)
+    jhz_n = snap1_update(jhz, cz, h, ddiag)
+    jhr_n = snap1_update(jhr, cr, h, ddiag)
+    jha_n = snap1_update(jha, ca_h, h, ddiag)
+    jxz_n = snap1_update(jxz, cz, x, ddiag)
+    jxr_n = snap1_update(jxr, cr, x, ddiag)
+    jxa_n = snap1_update(jxa, ca, x, ddiag)
+    jbz_n = snap1_update_bias(jbz, cz, ddiag)
+    jbr_n = snap1_update_bias(jbr, cr, ddiag)
+    jba_n = snap1_update_bias(jba, ca, ddiag)
+
+    # --- readout forward + loss (explicit backprop; mirrors rust readout)
+    logits, pre1, act1, (w1, b1, w2, b2) = ref.readout_ref(phi, h_next, hidden, vocab)
+    loss, dlogits = ref.softmax_xent_ref(logits, target_onehot)
+    g_w2 = dlogits[:, None] * act1[None, :]
+    g_b2 = dlogits
+    dact1 = (w2.T @ dlogits) * (pre1 > 0.0)
+    g_w1 = dact1[:, None] * h_next[None, :]
+    g_b1 = dact1
+    dl_dh = w1.T @ dact1
+    g_ro = jnp.concatenate([g_w1.reshape(-1), g_b1, g_w2.reshape(-1), g_b2])
+
+    # --- recurrent gradient: g[p] = dL/dh[u(p)] · J'[u(p), p]
+    g_rec = jnp.concatenate([
+        snap1_grad(jhz_n, dl_dh).reshape(-1),
+        snap1_grad(jhr_n, dl_dh).reshape(-1),
+        snap1_grad(jha_n, dl_dh).reshape(-1),
+        snap1_grad(jxz_n, dl_dh).reshape(-1),
+        snap1_grad(jxr_n, dl_dh).reshape(-1),
+        snap1_grad(jxa_n, dl_dh).reshape(-1),
+        dl_dh * jbz_n,
+        dl_dh * jbr_n,
+        dl_dh * jba_n,
+    ])
+
+    j_next = jnp.concatenate([
+        jhz_n.reshape(-1), jhr_n.reshape(-1), jha_n.reshape(-1),
+        jxz_n.reshape(-1), jxr_n.reshape(-1), jxa_n.reshape(-1),
+        jbz_n, jbr_n, jba_n,
+    ])
+    return h_next, j_next, jnp.reshape(loss, (1,)), g_rec, g_ro
+
+
+def gru_fwd(theta, h, x, *, k, a):
+    """Inference-only GRU step (separate, smaller artifact)."""
+    whz, whr, wha, wxz, wxr, wxa, bz, br, ba = unpack_theta(theta, k, a)
+    h_next, _, _, _, _ = gru_step(whz, whr, wha, wxz, wxr, wxa, bz, br, ba, h, x)
+    return (h_next,)
+
+
+def adam_update(params, grad, m, v, t, *, lr, beta1=0.9, beta2=0.999, eps=1e-8):
+    """Adam step as a pure function (optional artifact; Rust also has a
+    native Adam — this one exists so the whole update can run in XLA)."""
+    m_n = beta1 * m + (1.0 - beta1) * grad
+    v_n = beta2 * v + (1.0 - beta2) * grad * grad
+    bc1 = 1.0 - beta1 ** t
+    bc2 = 1.0 - beta2 ** t
+    step = lr * jnp.sqrt(bc2) / bc1
+    params_n = params - step * m_n / (jnp.sqrt(v_n) + eps)
+    return params_n, m_n, v_n
+
+
+def train_step_ref(theta, phi, h, j, x, target_onehot, *, k, a, hidden, vocab):
+    """Pure-jnp oracle of the full fused step (no Pallas) — pytest compares
+    the kernel-composed version against this."""
+    whz, whr, wha, wxz, wxr, wxa, bz, br, ba = unpack_theta(theta, k, a)
+    jhz, jhr, jha, jxz, jxr, jxa, jbz, jbr, jba = unpack_theta(j, k, a)
+    h_next, z, r, a_act, m = ref.gru_step_ref(
+        whz, whr, wha, wxz, wxr, wxa, bz, br, ba, h, x)
+    cz, cr, ca = ref.gru_coefs_ref(h, z, r, a_act, m)
+    ddiag = ref.gru_ddiag_ref(whz, whr, wha, h, z, r, a_act, m)
+    blocks = [
+        ref.snap1_update_ref(jhz, cz, h, ddiag),
+        ref.snap1_update_ref(jhr, cr, h, ddiag),
+        ref.snap1_update_ref(jha, ca * r, h, ddiag),
+        ref.snap1_update_ref(jxz, cz, x, ddiag),
+        ref.snap1_update_ref(jxr, cr, x, ddiag),
+        ref.snap1_update_ref(jxa, ca, x, ddiag),
+    ]
+    bias_blocks = [cz + ddiag * jbz, cr + ddiag * jbr, ca + ddiag * jba]
+    logits, pre1, act1, (w1, b1, w2, b2) = ref.readout_ref(phi, h_next, hidden, vocab)
+    loss, dlogits = ref.softmax_xent_ref(logits, target_onehot)
+    dact1 = (w2.T @ dlogits) * (pre1 > 0.0)
+    dl_dh = w1.T @ dact1
+    g_ro = jnp.concatenate([
+        (dact1[:, None] * h_next[None, :]).reshape(-1), dact1,
+        (dlogits[:, None] * act1[None, :]).reshape(-1), dlogits,
+    ])
+    g_rec = jnp.concatenate(
+        [(dl_dh[:, None] * b).reshape(-1) for b in blocks]
+        + [dl_dh * bb for bb in bias_blocks]
+    )
+    j_next = jnp.concatenate(
+        [b.reshape(-1) for b in blocks] + bias_blocks)
+    return h_next, j_next, jnp.reshape(loss, (1,)), g_rec, g_ro

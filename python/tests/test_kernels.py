@@ -1,0 +1,129 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles, hypothesis-swept
+over shapes. This is the build-time gate for the AOT artifacts."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.gru_step import gru_step
+from compile.kernels.snap_update import (
+    snap1_grad,
+    snap1_grad_ref,
+    snap1_update,
+    snap1_update_bias,
+)
+from compile.kernels.ref import snap1_update_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), dtype=jnp.float32)
+
+
+def make_gru_inputs(rng, k, a):
+    return dict(
+        whz=rand(rng, k, k) * 0.3, whr=rand(rng, k, k) * 0.3, wha=rand(rng, k, k) * 0.3,
+        wxz=rand(rng, k, a) * 0.3, wxr=rand(rng, k, a) * 0.3, wxa=rand(rng, k, a) * 0.3,
+        bz=rand(rng, k) * 0.1, br=rand(rng, k) * 0.1, ba=rand(rng, k) * 0.1,
+        h=jnp.tanh(rand(rng, k)), x=rand(rng, a),
+    )
+
+
+@settings(max_examples=12, deadline=None)
+@given(k=st.integers(1, 24), a=st.integers(1, 12), seed=st.integers(0, 2**16))
+def test_gru_step_matches_ref(k, a, seed):
+    rng = np.random.default_rng(seed)
+    inp = make_gru_inputs(rng, k, a)
+    got = gru_step(**inp)
+    want = ref.gru_step_ref(**inp)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=12, deadline=None)
+@given(k=st.integers(1, 32), c=st.integers(1, 48), seed=st.integers(0, 2**16))
+def test_snap1_update_matches_ref(k, c, seed):
+    rng = np.random.default_rng(seed)
+    j = rand(rng, k, c)
+    coef = rand(rng, k)
+    src = rand(rng, c)
+    ddiag = rand(rng, k)
+    got = snap1_update(j, coef, src, ddiag)
+    want = snap1_update_ref(j, coef, src, ddiag)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("block_cols", [4, 8, 16])
+def test_snap1_update_tiled_matches_untiled(block_cols):
+    rng = np.random.default_rng(7)
+    k, c = 16, 48
+    j = rand(rng, k, c)
+    coef, src, ddiag = rand(rng, k), rand(rng, c), rand(rng, k)
+    tiled = snap1_update(j, coef, src, ddiag, block_cols=block_cols)
+    flat = snap1_update(j, coef, src, ddiag)
+    np.testing.assert_allclose(np.asarray(tiled), np.asarray(flat), rtol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(k=st.integers(1, 24), c=st.integers(1, 32), seed=st.integers(0, 2**16))
+def test_snap1_grad_matches_ref(k, c, seed):
+    rng = np.random.default_rng(seed)
+    j = rand(rng, k, c)
+    dlh = rand(rng, k)
+    np.testing.assert_allclose(
+        np.asarray(snap1_grad(j, dlh)), np.asarray(snap1_grad_ref(j, dlh)), rtol=1e-6)
+
+
+def test_snap1_bias_update():
+    rng = np.random.default_rng(3)
+    k = 8
+    jb, coef, dd = rand(rng, k), rand(rng, k), rand(rng, k)
+    np.testing.assert_allclose(
+        np.asarray(snap1_update_bias(jb, coef, dd)), np.asarray(coef + dd * jb), rtol=1e-6)
+
+
+def test_gru_ddiag_matches_full_dynamics_diagonal():
+    rng = np.random.default_rng(11)
+    k, a = 12, 6
+    inp = make_gru_inputs(rng, k, a)
+    h_next, z, r, a_act, m = ref.gru_step_ref(**inp)
+    d_full = ref.gru_dynamics_ref(inp["whz"], inp["whr"], inp["wha"], inp["h"], z, r, a_act, m)
+    ddiag = ref.gru_ddiag_ref(inp["whz"], inp["whr"], inp["wha"], inp["h"], z, r, a_act, m)
+    np.testing.assert_allclose(np.asarray(jnp.diagonal(d_full)), np.asarray(ddiag), rtol=1e-5)
+
+
+def test_gru_dynamics_matches_jacfwd():
+    """The analytic D_t must equal JAX autodiff of the cell step."""
+    rng = np.random.default_rng(13)
+    k, a = 8, 4
+    inp = make_gru_inputs(rng, k, a)
+
+    def step_h(h):
+        return ref.gru_step_ref(
+            inp["whz"], inp["whr"], inp["wha"], inp["wxz"], inp["wxr"], inp["wxa"],
+            inp["bz"], inp["br"], inp["ba"], h, inp["x"])[0]
+
+    d_auto = jax.jacfwd(step_h)(inp["h"])
+    _, z, r, a_act, m = ref.gru_step_ref(**inp)
+    d_ana = ref.gru_dynamics_ref(inp["whz"], inp["whr"], inp["wha"], inp["h"], z, r, a_act, m)
+    np.testing.assert_allclose(np.asarray(d_auto), np.asarray(d_ana), rtol=1e-4, atol=1e-5)
+
+
+def test_snap1_is_diagonal_restriction_of_rtrl():
+    """Iterating the SnAp-1 block update equals full RTRL restricted to the
+    kept entries *when D is replaced by its diagonal* — the paper's eq. 3."""
+    rng = np.random.default_rng(17)
+    k, c = 6, 5
+    j = jnp.zeros((k, c), jnp.float32)
+    for step in range(4):
+        coef, src, dd = rand(rng, k), rand(rng, c), rand(rng, k)
+        j_kernel = snap1_update(j, coef, src, dd)
+        # dense RTRL with diag(D): J' = I + diag(dd) @ J
+        i_full = coef[:, None] * src[None, :]
+        j_dense = i_full + jnp.diag(dd) @ j
+        np.testing.assert_allclose(np.asarray(j_kernel), np.asarray(j_dense), rtol=1e-5)
+        j = j_kernel

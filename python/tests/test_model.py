@@ -1,0 +1,151 @@
+"""L2 model correctness: the fused kernel-composed train step vs the pure-jnp
+oracle, plus autodiff cross-checks of the hand-written backprop."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+K, A, H, V = 8, 4, 12, 10
+
+
+def make_state(seed, k=K, a=A, hidden=H, vocab=V):
+    rng = np.random.default_rng(seed)
+    p_rec = model.num_params(k, a)
+    p_ro = model.readout_num_params(k, hidden, vocab)
+    theta = jnp.asarray(rng.standard_normal(p_rec) * 0.2, jnp.float32)
+    phi = jnp.asarray(rng.standard_normal(p_ro) * 0.2, jnp.float32)
+    h = jnp.asarray(np.tanh(rng.standard_normal(k)), jnp.float32)
+    j = jnp.asarray(rng.standard_normal(p_rec) * 0.1, jnp.float32)
+    x = jnp.asarray(rng.standard_normal(a), jnp.float32)
+    onehot = jnp.zeros(vocab, jnp.float32).at[int(rng.integers(vocab))].set(1.0)
+    return theta, phi, h, j, x, onehot
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_fused_step_matches_pure_jnp_oracle(seed):
+    args = make_state(seed)
+    kw = dict(k=K, a=A, hidden=H, vocab=V)
+    got = model.gru_snap1_train_step(*args, **kw)
+    want = model.train_step_ref(*args, **kw)
+    names = ["h_next", "j_next", "loss", "g_rec", "g_ro"]
+    for n, g, w in zip(names, got, want):
+        np.testing.assert_allclose(
+            np.asarray(g), np.asarray(w), rtol=2e-5, atol=1e-6, err_msg=n)
+
+
+def test_readout_grads_match_autodiff():
+    theta, phi, h, j, x, onehot = make_state(123)
+    kw = dict(k=K, a=A, hidden=H, vocab=V)
+
+    def loss_wrt_phi(phi_):
+        out = model.train_step_ref(theta, phi_, h, j, x, onehot, **kw)
+        return out[2][0]
+
+    g_auto = jax.grad(loss_wrt_phi)(phi)
+    g_ours = model.train_step_ref(theta, phi, h, j, x, onehot, **kw)[4]
+    np.testing.assert_allclose(np.asarray(g_auto), np.asarray(g_ours), rtol=1e-4, atol=1e-6)
+
+
+def test_recurrent_grad_matches_autodiff_single_step():
+    """From J=0, one step of SnAp-1 gives the exact single-step gradient, so
+    g_rec must equal jax.grad of the one-step loss w.r.t. θ."""
+    theta, phi, h, _, x, onehot = make_state(99)
+    j0 = jnp.zeros_like(theta)
+    kw = dict(k=K, a=A, hidden=H, vocab=V)
+
+    def loss_wrt_theta(theta_):
+        out = model.train_step_ref(theta_, phi, h, j0, x, onehot, **kw)
+        return out[2][0]
+
+    g_auto = jax.grad(loss_wrt_theta)(theta)
+    g_ours = model.train_step_ref(theta, phi, h, j0, x, onehot, **kw)[3]
+    np.testing.assert_allclose(np.asarray(g_auto), np.asarray(g_ours), rtol=1e-4, atol=1e-5)
+
+
+def test_snap1_vs_exact_rtrl_multi_step_bias_is_bounded():
+    """Run 5 steps tracking both SnAp-1 (diagonal) and exact dense RTRL; the
+    cosine similarity of the gradients should be high (the paper's central
+    empirical claim at n=1 for short horizons)."""
+    theta, phi, h0, _, _, _ = make_state(7)
+    rng = np.random.default_rng(8)
+    kw = dict(k=K, a=A, hidden=H, vocab=V)
+    p_rec = model.num_params(K, A)
+
+    j_snap = jnp.zeros(p_rec, jnp.float32)
+    j_full = jnp.zeros((K, p_rec), jnp.float32)
+    g_snap = jnp.zeros(p_rec, jnp.float32)
+    g_full = jnp.zeros(p_rec, jnp.float32)
+    h = h0
+
+    whz, whr, wha, wxz, wxr, wxa, bz, br, ba = model.unpack_theta(theta, K, A)
+    for _ in range(5):
+        x = jnp.asarray(rng.standard_normal(A), jnp.float32)
+        onehot = jnp.zeros(V, jnp.float32).at[int(rng.integers(V))].set(1.0)
+        out = model.train_step_ref(theta, phi, h, j_snap, x, onehot, **kw)
+        h_next, j_snap, _, g_step = out[0], out[1], out[2], out[3]
+        g_snap = g_snap + g_step
+
+        # exact RTRL side
+        _, z, r, a_act, m = ref.gru_step_ref(whz, whr, wha, wxz, wxr, wxa, bz, br, ba, h, x)
+        d = ref.gru_dynamics_ref(whz, whr, wha, h, z, r, a_act, m)
+        i_full = build_dense_immediate(h, x, z, r, a_act, m)
+        j_full = ref.rtrl_step_ref(j_full, d, i_full)
+        logits, pre1, act1, (w1, b1, w2, b2) = ref.readout_ref(phi, h_next, H, V)
+        _, dlogits = ref.softmax_xent_ref(logits, onehot)
+        dact1 = (w2.T @ dlogits) * (pre1 > 0.0)
+        dl_dh = w1.T @ dact1
+        g_full = g_full + dl_dh @ j_full
+        h = h_next
+
+    ga, gb = np.asarray(g_snap, np.float64), np.asarray(g_full, np.float64)
+    cos = ga @ gb / (np.linalg.norm(ga) * np.linalg.norm(gb) + 1e-12)
+    assert cos > 0.7, f"SnAp-1 gradient should correlate with RTRL: cos={cos}"
+
+
+def build_dense_immediate(h, x, z, r, a_act, m):
+    """Dense I_t (K × p) matching the flat θ layout."""
+    cz, cr, ca = ref.gru_coefs_ref(h, z, r, a_act, m)
+    k, a = h.shape[0], x.shape[0]
+    blocks = []
+    for coef, src in [
+        (cz, h), (cr, h), (ca * r, h),
+        (cz, x), (cr, x), (ca, x),
+    ]:
+        # I for block: unit i, col (i*cols + l): value coef[i]*src[l]
+        cols = src.shape[0]
+        blk = jnp.zeros((k, k * cols), jnp.float32)
+        rows = jnp.repeat(jnp.arange(k), cols)
+        cidx = jnp.arange(k * cols)
+        vals = (coef[:, None] * src[None, :]).reshape(-1)
+        blk = blk.at[rows, cidx].set(vals)
+        blocks.append(blk)
+    for coef in [cz, cr, ca]:
+        blk = jnp.zeros((k, k), jnp.float32)
+        blk = blk.at[jnp.arange(k), jnp.arange(k)].set(coef)
+        blocks.append(blk)
+    return jnp.concatenate(blocks, axis=1)
+
+
+def test_adam_update_decreases_quadratic():
+    n = 6
+    params = jnp.ones(n, jnp.float32) * 3.0
+    m = jnp.zeros(n, jnp.float32)
+    v = jnp.zeros(n, jnp.float32)
+    for t in range(1, 200):
+        grad = 2.0 * params
+        params, m, v = model.adam_update(params, grad, m, v, jnp.float32(t), lr=0.1)
+    assert float(jnp.sum(params * params)) < 1e-2
+
+
+def test_param_count_formulas():
+    assert model.num_params(32, 16) == 3 * (32 * 32 + 32 * 16 + 32)
+    assert model.readout_num_params(32, 64, 256) == 64 * 32 + 64 + 256 * 64 + 256

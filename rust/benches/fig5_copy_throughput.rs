@@ -1,0 +1,61 @@
+//! Figure 5 support bench: end-to-end Copy-task training throughput
+//! (tokens/sec) per method in the fully-online regime — the wall-clock side
+//! of the data-efficiency comparison, and the end-to-end driver the §Perf
+//! pass profiles.
+//!
+//! Run: `cargo bench --bench fig5_copy_throughput`
+
+use snap_rtrl::cells::Arch;
+use snap_rtrl::grad::Method;
+use snap_rtrl::train::{train_copy, TrainConfig};
+use std::time::Instant;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let k = flag(&args, "--k").unwrap_or(32);
+    let steps = flag(&args, "--steps").unwrap_or(30);
+
+    println!("# fig5_copy_throughput — online Copy training (k={k}, {steps} minibatches of 4)\n");
+    println!("{:<28} {:>12} {:>14} {:>8}", "config", "tokens/s", "wall", "level");
+
+    for arch in [Arch::Gru, Arch::Lstm] {
+        for (m, trunc, label) in [
+            (Method::Bptt, 1, "bptt-online"),
+            (Method::Bptt, 0, "bptt-full"),
+            (Method::Snap(1), 1, "snap-1"),
+            (Method::Snap(2), 1, "snap-2"),
+            (Method::Snap(3), 1, "snap-3"),
+            (Method::Rflo, 1, "rflo"),
+        ] {
+            let cfg = TrainConfig {
+                arch,
+                k,
+                density: 0.25,
+                method: m,
+                lr: 3e-3,
+                batch: 4,
+                truncation: trunc,
+                steps,
+                seed: 9,
+                readout_hidden: 64,
+                log_every: steps,
+                ..Default::default()
+            };
+            let t0 = Instant::now();
+            let res = train_copy(&cfg);
+            let dt = t0.elapsed();
+            println!(
+                "{:<28} {:>12.0} {:>14?} {:>8}",
+                format!("{}/{}", arch.name(), label),
+                res.tokens_seen as f64 / dt.as_secs_f64(),
+                dt,
+                res.final_level
+            );
+        }
+        println!();
+    }
+}
+
+fn flag(args: &[String], name: &str) -> Option<usize> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).and_then(|v| v.parse().ok())
+}

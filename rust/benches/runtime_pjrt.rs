@@ -1,0 +1,66 @@
+//! PJRT runtime bench: per-step dispatch latency of the AOT-compiled fused
+//! training step and sustained online-training throughput through XLA —
+//! the L3-runtime side of the §Perf pass.
+//!
+//! Requires `make artifacts`. Skips cleanly when artifacts are missing.
+//!
+//! Run: `cargo bench --bench runtime_pjrt`
+
+use snap_rtrl::benchutil::{bench, report};
+use snap_rtrl::runtime::demo::{run_step, StepIo};
+use snap_rtrl::runtime::{ArtifactSet, PjrtRuntime};
+use snap_rtrl::tensor::rng::Pcg32;
+use std::time::Duration;
+
+fn main() {
+    let set = match ArtifactSet::discover() {
+        Ok(s) => s,
+        Err(e) => {
+            println!("runtime_pjrt: SKIPPED — {e}");
+            return;
+        }
+    };
+    let io = StepIo::from_manifest(&set).expect("manifest");
+    let rt = PjrtRuntime::cpu().expect("PJRT client");
+    println!(
+        "# runtime_pjrt — platform={} k={} p_rec={} p_ro={}\n",
+        rt.platform(),
+        io.k,
+        io.p_rec,
+        io.p_ro
+    );
+
+    // compile cost (one-time)
+    let t0 = std::time::Instant::now();
+    let module = rt.load_hlo_text(set.online_step().to_str().unwrap()).expect("compile");
+    println!("compile gru_snap1_step: {:?}", t0.elapsed());
+
+    let mut rng = Pcg32::seeded(1);
+    let theta: Vec<f32> = (0..io.p_rec).map(|_| rng.normal() * 0.1).collect();
+    let phi: Vec<f32> = (0..io.p_ro).map(|_| rng.normal() * 0.1).collect();
+    let mut h = vec![0.0f32; io.k];
+    let mut j = vec![0.0f32; io.p_rec];
+    let x: Vec<f32> = (0..io.input_dim).map(|_| rng.normal()).collect();
+
+    let t = bench(5, Duration::from_secs(2), || {
+        let (h1, j1, loss, _, _) =
+            run_step(&module, &io, &theta, &phi, &h, &j, &x, 7).expect("step");
+        h = h1;
+        j = j1;
+        loss
+    });
+    report("pjrt fused step (fwd+snap1+grads)", &t, &format!("{:.0} steps/s", t.per_sec()));
+
+    // inference-only module for dispatch-overhead comparison
+    if let Ok(fwd) = rt.load_hlo_text(set.gru_forward().to_str().unwrap()) {
+        let t2 = bench(5, Duration::from_secs(1), || {
+            fwd.run_f32(&[
+                (&theta, &[io.p_rec as i64]),
+                (&h, &[io.k as i64]),
+                (&x, &[io.input_dim as i64]),
+            ])
+            .expect("fwd")
+        });
+        report("pjrt fwd-only step", &t2, &format!("{:.0} steps/s", t2.per_sec()));
+    }
+}

@@ -1,0 +1,69 @@
+//! Per-step wall-clock of every gradient algorithm across architectures and
+//! sparsity levels — the microbenchmark behind Table 1's "time per step"
+//! column and the §Perf hot-path tracking.
+//!
+//! Run: `cargo bench --bench step_costs [-- --k 128]`
+
+use snap_rtrl::benchutil::{bench, report};
+use snap_rtrl::cells::Arch;
+use snap_rtrl::grad::Method;
+use snap_rtrl::tensor::rng::Pcg32;
+use std::time::Duration;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let k: usize = flag(&args, "--k").unwrap_or(64);
+    let input = 32usize;
+    let budget = Duration::from_millis(flag(&args, "--ms").unwrap_or(300) as u64);
+
+    println!("# step_costs — per-step tracking cost (k={k}, input={input})\n");
+    for arch in [Arch::Vanilla, Arch::Gru, Arch::Lstm] {
+        for density in [1.0f64, 0.25, 0.0625] {
+            let methods: Vec<Method> = vec![
+                Method::Bptt,
+                Method::Uoro,
+                Method::Rflo,
+                Method::Snap(1),
+                Method::Snap(2),
+                Method::SparseRtrl,
+                Method::Rtrl,
+            ];
+            for m in methods {
+                // Full RTRL at k>=128 dense is very slow; keep it bounded.
+                if m == Method::Rtrl && k > 64 && density > 0.5 {
+                    continue;
+                }
+                if m == Method::Snap(2) && density > 0.5 {
+                    continue; // dense SnAp-2 == RTRL (§3.1); skip duplicate
+                }
+                let mut rng = Pcg32::seeded(1);
+                let cell = arch.build(k, input, density, &mut rng);
+                let theta = cell.init_params(&mut rng);
+                let mut algo = m.build(cell.as_ref(), &mut rng);
+                let x: Vec<f32> = (0..input).map(|_| rng.normal()).collect();
+                let dl: Vec<f32> = (0..cell.hidden_size()).map(|_| 0.1).collect();
+                let mut g = vec![0.0f32; cell.num_params()];
+                let t = bench(3, budget, || {
+                    algo.step(&theta, &x);
+                    algo.inject_loss(&dl, &mut g);
+                    algo.flush(&theta, &mut g);
+                    g[0]
+                });
+                report(
+                    &format!("{}/{}/d={:.4}", arch.name(), m.name(), density),
+                    &t,
+                    &format!(
+                        "[{} flops, {} floats]",
+                        algo.tracking_flops_per_step(),
+                        algo.tracking_memory_floats()
+                    ),
+                );
+            }
+            println!();
+        }
+    }
+}
+
+fn flag(args: &[String], name: &str) -> Option<usize> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).and_then(|v| v.parse().ok())
+}

@@ -1,0 +1,68 @@
+//! Table 1 reproduction bench: measured time-per-step and memory vs the
+//! paper's asymptotic formulas, swept over k — verifying the *scaling shape*
+//! (RTRL quartic blow-up, SnAp-1 ≈ BPTT, sparse RTRL's d² saving).
+//!
+//! Run: `cargo bench --bench table1_asymptotics`
+
+use snap_rtrl::benchutil::{bench, fmt_dur};
+use snap_rtrl::cells::Arch;
+use snap_rtrl::grad::Method;
+use snap_rtrl::tensor::rng::Pcg32;
+use snap_rtrl::train::{table1_memory, table1_time, CostInputs};
+use std::time::Duration;
+
+fn measure(arch: Arch, k: usize, input: usize, d: f64, m: Method) -> (f64, usize, u64) {
+    let mut rng = Pcg32::seeded(7);
+    let cell = arch.build(k, input, d, &mut rng);
+    let theta = cell.init_params(&mut rng);
+    let mut algo = m.build(cell.as_ref(), &mut rng);
+    let x: Vec<f32> = (0..input).map(|_| rng.normal()).collect();
+    let dl: Vec<f32> = (0..cell.hidden_size()).map(|_| 0.1).collect();
+    let mut g = vec![0.0f32; cell.num_params()];
+    let t = bench(2, Duration::from_millis(200), || {
+        algo.step(&theta, &x);
+        algo.inject_loss(&dl, &mut g);
+        algo.flush(&theta, &mut g);
+        g[0]
+    });
+    (t.mean_ns(), algo.tracking_memory_floats(), algo.tracking_flops_per_step())
+}
+
+fn main() {
+    let arch = Arch::Gru;
+    let input = 32;
+    println!("# table1_asymptotics — measured vs asymptotic costs (GRU, input={input})");
+    println!("{:<10} {:>4} {:>7} | {:>12} {:>12} | {:>12} {:>14} | {:>10}",
+        "method", "k", "dens", "t_meas", "t_prev_x", "mem_meas", "mem_asym", "flops");
+
+    for (m, d) in [
+        (Method::Bptt, 1.0f64),
+        (Method::Snap(1), 1.0),
+        (Method::Uoro, 1.0),
+        (Method::Rtrl, 1.0),
+        (Method::SparseRtrl, 0.25),
+        (Method::Snap(2), 0.25),
+    ] {
+        let mut prev: Option<f64> = None;
+        for k in [16usize, 32, 64, 128] {
+            if m == Method::Rtrl && k > 64 {
+                continue; // quartic: the blow-up is already visible by k=64
+            }
+            let (t_ns, mem, fl) = measure(arch, k, input, d, m);
+            let p = snap_rtrl::train::flops::dense_params(arch, k, input);
+            let c = CostInputs { t: 128, k, p, d };
+            let growth = prev.map(|p0| format!("{:.2}x", t_ns / p0)).unwrap_or_else(|| "-".into());
+            println!(
+                "{:<10} {:>4} {:>7.3} | {:>12} {:>12} | {:>12} {:>14.0} | {:>10}",
+                m.name(), k, d,
+                fmt_dur(Duration::from_nanos(t_ns as u64)), growth,
+                mem, table1_memory(m, c), fl
+            );
+            let _ = table1_time(m, c);
+            prev = Some(t_ns);
+        }
+        println!();
+    }
+    println!("expected shapes: BPTT/SnAp-1/UORO grow ~4x per k-doubling (k·p term),");
+    println!("RTRL grows ~16x (k²·p); SparseRTRL ≈ d² × RTRL; SnAp-2(d=.25) between.");
+}

@@ -1,0 +1,106 @@
+//! Tiny benchmarking harness shared by the `rust/benches/*` binaries
+//! (criterion is unavailable offline). Warmup + trimmed-mean timing with
+//! per-iteration black-boxing.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// Timing summary for one benchmark case.
+#[derive(Clone, Copy, Debug)]
+pub struct Timing {
+    pub iters: usize,
+    pub mean: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Timing {
+    pub fn mean_ns(&self) -> f64 {
+        self.mean.as_nanos() as f64
+    }
+
+    pub fn per_sec(&self) -> f64 {
+        1e9 / self.mean_ns()
+    }
+}
+
+/// Run `f` until ~`budget` elapses (after `warmup` iterations), reporting a
+/// 10%-trimmed mean. `f`'s return value is black-boxed.
+pub fn bench<R>(warmup: usize, budget: Duration, mut f: impl FnMut() -> R) -> Timing {
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut samples: Vec<Duration> = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < budget || samples.len() < 5 {
+        let t0 = Instant::now();
+        black_box(f());
+        samples.push(t0.elapsed());
+        if samples.len() > 100_000 {
+            break;
+        }
+    }
+    samples.sort_unstable();
+    let trim = samples.len() / 10;
+    let kept = &samples[trim..samples.len() - trim.min(samples.len() - trim - 1)];
+    let sum: Duration = kept.iter().sum();
+    Timing {
+        iters: samples.len(),
+        mean: sum / kept.len() as u32,
+        min: samples[0],
+        max: *samples.last().unwrap(),
+    }
+}
+
+/// Pretty duration.
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.2}s", ns / 1e9)
+    }
+}
+
+/// One row of bench output (aligned, greppable).
+pub fn report(name: &str, t: &Timing, extra: &str) {
+    println!(
+        "{:<44} {:>10}/iter  ({} iters, min {}, max {}) {}",
+        name,
+        fmt_dur(t.mean),
+        t.iters,
+        fmt_dur(t.min),
+        fmt_dur(t.max),
+        extra
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let t = bench(2, Duration::from_millis(20), || {
+            let mut s = 0u64;
+            for i in 0..1000u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert!(t.iters >= 5);
+        assert!(t.mean.as_nanos() > 0);
+        assert!(t.min <= t.mean && t.mean <= t.max.max(t.mean));
+    }
+
+    #[test]
+    fn fmt_dur_ranges() {
+        assert!(fmt_dur(Duration::from_nanos(500)).ends_with("ns"));
+        assert!(fmt_dur(Duration::from_micros(50)).ends_with("µs"));
+        assert!(fmt_dur(Duration::from_millis(5)).ends_with("ms"));
+    }
+}

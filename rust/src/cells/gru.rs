@@ -1,0 +1,384 @@
+//! GRU — the Engel / CuDNN variant the paper adopts (eq. 7):
+//!
+//! ```text
+//! z_t = σ(W_iz x + W_hz h + b_z)
+//! r_t = σ(W_ir x + W_hr h + b_r)
+//! a_t = φ(W_ia x + r_t ⊙ (W_ha h) + b_a)
+//! h_t = (1 - z_t) ⊙ h + z_t ⊙ a_t
+//! ```
+//!
+//! The reset gate is applied *after* the matmul, so no two parameterized
+//! linear maps compose within one step: `I_t` keeps exactly one nonzero row
+//! per parameter column and `pat(D_t) = pat(W_hz) ∪ pat(W_hr) ∪ pat(W_ha) ∪
+//! diag` (§3.3 — the original Cho variant would instead make `D_t` and parts
+//! of `I_t` fully dense).
+//!
+//! Analytic Jacobians (m := W_ha·h, φ = tanh, σ' and φ' from outputs):
+//!
+//! ```text
+//! cz_i = (a_i − h_i)·σ'(z_i)         — pre-activation coef of gate z
+//! cr_i = z_i·φ'(a_i)·m_i·σ'(r_i)     — gate r
+//! ca_i = z_i·φ'(a_i)                 — gate a (its W_ha rows carry r_i·h_l)
+//! D[i,l] = (1−z_i)·δ_il + cz_i·W_hz[i,l] + cr_i·W_hr[i,l] + ca_i·r_i·W_ha[i,l]
+//! ```
+
+use super::*;
+use crate::tensor::ops::{dsigmoid_from_y, dtanh_from_y, sigmoid};
+
+pub const GATE_Z: u8 = 0;
+pub const GATE_R: u8 = 1;
+pub const GATE_A: u8 = 2;
+
+pub struct Gru {
+    k: usize,
+    input: usize,
+    density: f64,
+    /// hidden-to-hidden blocks, gate order [z, r, a]
+    wh: [MaskedLinear; 3],
+    /// input-to-hidden blocks, gate order [z, r, a]
+    wx: [MaskedLinear; 3],
+    bias_offset: usize,
+    num_params: usize,
+    info: Vec<ParamInfo>,
+}
+
+/// Cache slots.
+const C_HPREV: usize = 0;
+const C_X: usize = 1;
+const C_Z: usize = 2;
+const C_R: usize = 3;
+const C_A: usize = 4;
+const C_M: usize = 5; // W_ha · h_prev
+const C_HNEXT: usize = 6;
+
+impl Gru {
+    pub fn new(k: usize, input: usize, density: f64, rng: &mut Pcg32) -> Self {
+        let wh_pats = [
+            make_mask(k, k, density, rng),
+            make_mask(k, k, density, rng),
+            make_mask(k, k, density, rng),
+        ];
+        let wx_pats = [
+            make_mask(k, input, density, rng),
+            make_mask(k, input, density, rng),
+            make_mask(k, input, density, rng),
+        ];
+        Self::with_masks(k, input, density, wh_pats, wx_pats)
+    }
+
+    /// Build with explicit masks per gate — e.g. one mask *shared* across the
+    /// three gate matrices (`repro table3 --shared-mask` ablation; plausibly
+    /// the paper's own setup, see EXPERIMENTS.md Table 3 notes).
+    pub fn with_masks(
+        k: usize,
+        input: usize,
+        density: f64,
+        wh_pats: [Pattern; 3],
+        wx_pats: [Pattern; 3],
+    ) -> Self {
+        let mut offset = 0usize;
+        let mut mk = |pat: &Pattern| {
+            let lin = MaskedLinear::new(pat, offset);
+            offset += lin.nnz();
+            lin
+        };
+        let wh = [mk(&wh_pats[0]), mk(&wh_pats[1]), mk(&wh_pats[2])];
+        let wx = [mk(&wx_pats[0]), mk(&wx_pats[1]), mk(&wx_pats[2])];
+        let bias_offset = offset;
+        let num_params = bias_offset + 3 * k;
+
+        let mut info = Vec::with_capacity(num_params);
+        for (g, lin) in wh.iter().enumerate() {
+            for (_, i, l) in lin.entries() {
+                info.push(ParamInfo { gate: g as u8, unit: i as u32, src: Src::PrevH(l as u32) });
+            }
+        }
+        for (g, lin) in wx.iter().enumerate() {
+            for (_, i, l) in lin.entries() {
+                info.push(ParamInfo { gate: g as u8, unit: i as u32, src: Src::Input(l as u32) });
+            }
+        }
+        for g in 0..3u8 {
+            for i in 0..k {
+                info.push(ParamInfo { gate: g, unit: i as u32, src: Src::Bias });
+            }
+        }
+
+        Gru { k, input, density, wh, wx, bias_offset, num_params, info }
+    }
+
+    /// Pre-activation coefficients (cz, cr, ca) per unit — shared by
+    /// `dynamics` and `immediate`.
+    fn coefs(&self, cache: &Cache) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let (z, r, a, m, hp) =
+            (&cache.bufs[C_Z], &cache.bufs[C_R], &cache.bufs[C_A], &cache.bufs[C_M], &cache.bufs[C_HPREV]);
+        let mut cz = vec![0.0f32; self.k];
+        let mut cr = vec![0.0f32; self.k];
+        let mut ca = vec![0.0f32; self.k];
+        for i in 0..self.k {
+            let dphi = dtanh_from_y(a[i]);
+            cz[i] = (a[i] - hp[i]) * dsigmoid_from_y(z[i]);
+            cr[i] = z[i] * dphi * m[i] * dsigmoid_from_y(r[i]);
+            ca[i] = z[i] * dphi;
+        }
+        (cz, cr, ca)
+    }
+}
+
+impl Cell for Gru {
+    fn state_size(&self) -> usize {
+        self.k
+    }
+
+    fn hidden_size(&self) -> usize {
+        self.k
+    }
+
+    fn input_size(&self) -> usize {
+        self.input
+    }
+
+    fn num_params(&self) -> usize {
+        self.num_params
+    }
+
+    fn dense_param_count(&self) -> usize {
+        3 * (self.k * self.k + self.k * self.input + self.k)
+    }
+
+    fn weight_density(&self) -> f64 {
+        self.density.min(1.0)
+    }
+
+    fn arch(&self) -> Arch {
+        Arch::Gru
+    }
+
+    fn param_info(&self) -> &[ParamInfo] {
+        &self.info
+    }
+
+    fn init_params(&self, rng: &mut Pcg32) -> Vec<f32> {
+        let mut theta = vec![0.0f32; self.num_params];
+        for lin in &self.wh {
+            init_block(lin, &mut theta, self.k, self.density, rng);
+        }
+        for lin in &self.wx {
+            init_block(lin, &mut theta, self.input, self.density, rng);
+        }
+        theta
+    }
+
+    fn make_cache(&self) -> Cache {
+        Cache::with_slots(&[self.k, self.input, self.k, self.k, self.k, self.k, self.k])
+    }
+
+    fn forward(&self, theta: &[f32], s_prev: &[f32], x: &[f32], cache: &mut Cache, s_next: &mut [f32]) {
+        let k = self.k;
+        let b = |g: usize| &theta[self.bias_offset + g * k..self.bias_offset + (g + 1) * k];
+
+        let mut zpre = b(0).to_vec();
+        self.wh[0].matvec_acc(theta, s_prev, &mut zpre);
+        self.wx[0].matvec_acc(theta, x, &mut zpre);
+
+        let mut rpre = b(1).to_vec();
+        self.wh[1].matvec_acc(theta, s_prev, &mut rpre);
+        self.wx[1].matvec_acc(theta, x, &mut rpre);
+
+        // m = W_ha · h_prev (reset applied after the matmul — Engel variant)
+        let mut m = vec![0.0f32; k];
+        self.wh[2].matvec_acc(theta, s_prev, &mut m);
+
+        let mut apre = b(2).to_vec();
+        self.wx[2].matvec_acc(theta, x, &mut apre);
+
+        for i in 0..k {
+            cache.bufs[C_Z][i] = sigmoid(zpre[i]);
+            cache.bufs[C_R][i] = sigmoid(rpre[i]);
+        }
+        for i in 0..k {
+            let a = (apre[i] + cache.bufs[C_R][i] * m[i]).tanh();
+            cache.bufs[C_A][i] = a;
+            s_next[i] = (1.0 - cache.bufs[C_Z][i]) * s_prev[i] + cache.bufs[C_Z][i] * a;
+        }
+        cache.bufs[C_HPREV].copy_from_slice(s_prev);
+        cache.bufs[C_X].copy_from_slice(x);
+        cache.bufs[C_M].copy_from_slice(&m);
+        cache.bufs[C_HNEXT].copy_from_slice(s_next);
+    }
+
+    fn dynamics(&self, theta: &[f32], cache: &Cache, d: &mut Matrix) {
+        d.fill(0.0);
+        let (cz, cr, ca) = self.coefs(cache);
+        let (z, r) = (&cache.bufs[C_Z], &cache.bufs[C_R]);
+        let k = self.k;
+        for i in 0..k {
+            let drow = d.row_mut(i);
+            drow[i] += 1.0 - z[i];
+            // gate z
+            let lin = &self.wh[0];
+            let vals = &theta[lin.val_offset..lin.val_offset + lin.nnz()];
+            for t in lin.row_ptr[i]..lin.row_ptr[i + 1] {
+                drow[lin.col_idx[t] as usize] += cz[i] * vals[t];
+            }
+            // gate r
+            let lin = &self.wh[1];
+            let vals = &theta[lin.val_offset..lin.val_offset + lin.nnz()];
+            for t in lin.row_ptr[i]..lin.row_ptr[i + 1] {
+                drow[lin.col_idx[t] as usize] += cr[i] * vals[t];
+            }
+            // gate a: h' ← z φ'(a) r_i W_ha[i,l]
+            let lin = &self.wh[2];
+            let vals = &theta[lin.val_offset..lin.val_offset + lin.nnz()];
+            let coef = ca[i] * r[i];
+            for t in lin.row_ptr[i]..lin.row_ptr[i + 1] {
+                drow[lin.col_idx[t] as usize] += coef * vals[t];
+            }
+        }
+    }
+
+    fn dynamics_pattern(&self) -> Pattern {
+        self.wh[0]
+            .pattern()
+            .union(&self.wh[1].pattern())
+            .union(&self.wh[2].pattern())
+            .with_diagonal()
+    }
+
+    fn immediate_structure(&self) -> ImmediateJac {
+        let rows: Vec<Vec<u32>> = self.info.iter().map(|p| vec![p.unit]).collect();
+        ImmediateJac::new(self.k, self.num_params, &rows)
+    }
+
+    fn immediate(&self, cache: &Cache, i_jac: &mut ImmediateJac) {
+        // §Perf: block-wise fill (branch-free inner loops over each weight
+        // block's CSR entries) — ~2× faster than the per-param match for
+        // dense GRUs, where this is SnAp-1's second-hottest loop.
+        let (cz, cr, mut ca_x) = self.coefs(cache);
+        let hp = &cache.bufs[C_HPREV];
+        let x = &cache.bufs[C_X];
+        let r = &cache.bufs[C_R];
+        let vals = i_jac.vals_mut();
+        // W_ha's PrevH multiplicand carries the extra r_i (Engel variant).
+        let ca_h: Vec<f32> = ca_x.iter().zip(r).map(|(c, ri)| c * ri).collect();
+
+        let mut fill = |lin: &MaskedLinear, coef: &[f32], src: &[f32]| {
+            for i in 0..lin.rows {
+                let ci = coef[i];
+                let (s, e) = (lin.row_ptr[i], lin.row_ptr[i + 1]);
+                for t in s..e {
+                    vals[lin.val_offset + t] = ci * src[lin.col_idx[t] as usize];
+                }
+            }
+        };
+        fill(&self.wh[0], &cz, hp);
+        fill(&self.wh[1], &cr, hp);
+        fill(&self.wh[2], &ca_h, hp);
+        fill(&self.wx[0], &cz, x);
+        fill(&self.wx[1], &cr, x);
+        fill(&self.wx[2], &ca_x, x);
+        // biases: coef · 1
+        let b0 = self.bias_offset;
+        vals[b0..b0 + self.k].copy_from_slice(&cz);
+        vals[b0 + self.k..b0 + 2 * self.k].copy_from_slice(&cr);
+        ca_x.truncate(self.k);
+        vals[b0 + 2 * self.k..b0 + 3 * self.k].copy_from_slice(&ca_x);
+    }
+
+    fn forward_flops(&self) -> u64 {
+        let wnnz: usize = self.wh.iter().chain(self.wx.iter()).map(|l| l.nnz()).sum();
+        // 2 flops per kept weight + ~8k elementwise per gate fusion.
+        2 * wnnz as u64 + 8 * self.k as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::fdcheck;
+
+    #[test]
+    fn dynamics_matches_finite_diff_dense() {
+        let mut rng = Pcg32::seeded(21);
+        let cell = Gru::new(7, 3, 1.0, &mut rng);
+        let err = fdcheck::check_dynamics(&cell, 100);
+        assert!(err < 2e-3, "err={err}");
+    }
+
+    #[test]
+    fn dynamics_matches_finite_diff_sparse() {
+        let mut rng = Pcg32::seeded(22);
+        let cell = Gru::new(10, 4, 0.25, &mut rng);
+        let err = fdcheck::check_dynamics(&cell, 101);
+        assert!(err < 2e-3, "err={err}");
+    }
+
+    #[test]
+    fn immediate_matches_finite_diff() {
+        let mut rng = Pcg32::seeded(23);
+        for density in [1.0, 0.3] {
+            let cell = Gru::new(6, 3, density, &mut rng);
+            let err = fdcheck::check_immediate(&cell, 102);
+            assert!(err < 2e-3, "density={density} err={err}");
+        }
+    }
+
+    #[test]
+    fn pattern_covers_dynamics() {
+        let mut rng = Pcg32::seeded(24);
+        let cell = Gru::new(8, 2, 0.4, &mut rng);
+        fdcheck::check_dynamics_pattern_covers(&cell, 103);
+    }
+
+    #[test]
+    fn immediate_one_nonzero_per_column() {
+        // The Engel variant's key property (§3.3): one entry per column, like Vanilla.
+        let mut rng = Pcg32::seeded(25);
+        let cell = Gru::new(8, 4, 1.0, &mut rng);
+        assert_eq!(cell.immediate_structure().nnz(), cell.num_params());
+    }
+
+    #[test]
+    fn param_counts_at_75_percent_sparsity() {
+        let mut rng = Pcg32::seeded(26);
+        let cell = Gru::new(8, 8, 0.25, &mut rng);
+        // 6 blocks of 64 entries at 25% density = 96 kept + 24 biases.
+        assert_eq!(cell.num_params(), 96 + 24);
+        assert_eq!(cell.dense_param_count(), 3 * (64 + 64 + 8));
+        assert!((cell.weight_density() - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn state_stays_bounded() {
+        let mut rng = Pcg32::seeded(27);
+        let cell = Gru::new(12, 4, 0.5, &mut rng);
+        let theta = cell.init_params(&mut rng);
+        let mut cache = cell.make_cache();
+        let (mut s, mut s2) = (vec![0.0; 12], vec![0.0; 12]);
+        for _ in 0..100 {
+            let x: Vec<f32> = (0..4).map(|_| rng.normal()).collect();
+            cell.forward(&theta, &s, &x, &mut cache, &mut s2);
+            std::mem::swap(&mut s, &mut s2);
+            assert!(s.iter().all(|v| v.abs() <= 1.0 + 1e-6));
+        }
+    }
+
+    #[test]
+    fn diagonal_always_present_in_dynamics() {
+        // h' = (1-z)⊙h + ... gives D a diagonal term — crucial for SnAp-1
+        // expressivity (paper eq. 3 discussion).
+        let mut rng = Pcg32::seeded(28);
+        let cell = Gru::new(6, 2, 0.2, &mut rng);
+        let theta = cell.init_params(&mut rng);
+        let mut cache = cell.make_cache();
+        let mut s_next = vec![0.0; 6];
+        let s_prev: Vec<f32> = (0..6).map(|_| rng.normal() * 0.3).collect();
+        let x: Vec<f32> = (0..2).map(|_| rng.normal()).collect();
+        cell.forward(&theta, &s_prev, &x, &mut cache, &mut s_next);
+        let mut d = Matrix::zeros(6, 6);
+        cell.dynamics(&theta, &cache, &mut d);
+        for i in 0..6 {
+            assert!(d.get(i, i).abs() > 1e-4, "diagonal D[{i},{i}] vanished");
+        }
+    }
+}

@@ -1,0 +1,409 @@
+//! LSTM (paper eq. 5), with the full state `s = [h; c]` of size `2k` — the
+//! paper's observation that "LSTM is twice as costly to train with RTRL-like
+//! algorithms because it has two components to its state" falls out of this
+//! representation for free.
+//!
+//! ```text
+//! i = σ(W_ii x + W_hi h + b_i)        f = σ(W_if x + W_hf h + b_f)
+//! o = σ(W_io x + W_ho h + b_o)        g = φ(W_ig x + W_hg h + b_g)
+//! c' = f ⊙ c + i ⊙ g                  h' = o ⊙ φ(c')
+//! ```
+//!
+//! Jacobian structure (state rows: h' = 0..k, c' = k..2k):
+//!
+//! ```text
+//! ∂c'/∂c  = diag(f)                    ∂h'/∂c  = diag(o·φ'(c')·f)
+//! ∂c'_i/∂h_l = ci_i·W_hi[i,l] + cf_i·W_hf[i,l] + cg_i·W_hg[i,l]
+//! ∂h'_i/∂h_l = co_i·W_ho[i,l] + o_i·φ'(c'_i)·∂c'_i/∂h_l
+//!   with ci = g·σ'(i), cf = c_prev·σ'(f), cg = i·φ'(g), co = φ(c')·σ'(o)
+//! ```
+//!
+//! `I_t`: gate-o parameters touch only row `i`; gate-i/f/g parameters touch
+//! rows `i` **and** `k+i` — two nonzeros per column (§3.1/§3.3).
+
+use super::*;
+use crate::tensor::ops::{dsigmoid_from_y, dtanh_from_y, sigmoid};
+
+pub const GATE_I: u8 = 0;
+pub const GATE_F: u8 = 1;
+pub const GATE_O: u8 = 2;
+pub const GATE_G: u8 = 3;
+
+pub struct Lstm {
+    k: usize,
+    input: usize,
+    density: f64,
+    /// hidden-to-hidden blocks, gate order [i, f, o, g]
+    wh: [MaskedLinear; 4],
+    /// input-to-hidden blocks, gate order [i, f, o, g]
+    wx: [MaskedLinear; 4],
+    bias_offset: usize,
+    num_params: usize,
+    info: Vec<ParamInfo>,
+}
+
+/// Cache slots.
+const C_HPREV: usize = 0;
+const C_CPREV: usize = 1;
+const C_X: usize = 2;
+const C_I: usize = 3;
+const C_F: usize = 4;
+const C_O: usize = 5;
+const C_G: usize = 6;
+const C_PHIC: usize = 7; // φ(c')
+
+impl Lstm {
+    pub fn new(k: usize, input: usize, density: f64, rng: &mut Pcg32) -> Self {
+        let wh_pats = [
+            make_mask(k, k, density, rng),
+            make_mask(k, k, density, rng),
+            make_mask(k, k, density, rng),
+            make_mask(k, k, density, rng),
+        ];
+        let wx_pats = [
+            make_mask(k, input, density, rng),
+            make_mask(k, input, density, rng),
+            make_mask(k, input, density, rng),
+            make_mask(k, input, density, rng),
+        ];
+        Self::with_masks(k, input, density, wh_pats, wx_pats)
+    }
+
+    /// Build with explicit per-gate masks (shared-mask ablation support).
+    pub fn with_masks(
+        k: usize,
+        input: usize,
+        density: f64,
+        wh_pats: [Pattern; 4],
+        wx_pats: [Pattern; 4],
+    ) -> Self {
+        let mut offset = 0usize;
+        let mut mk = |pat: &Pattern| {
+            let lin = MaskedLinear::new(pat, offset);
+            offset += lin.nnz();
+            lin
+        };
+        let wh = [mk(&wh_pats[0]), mk(&wh_pats[1]), mk(&wh_pats[2]), mk(&wh_pats[3])];
+        let wx = [mk(&wx_pats[0]), mk(&wx_pats[1]), mk(&wx_pats[2]), mk(&wx_pats[3])];
+        let bias_offset = offset;
+        let num_params = bias_offset + 4 * k;
+
+        let mut info = Vec::with_capacity(num_params);
+        for (g, lin) in wh.iter().enumerate() {
+            for (_, i, l) in lin.entries() {
+                info.push(ParamInfo { gate: g as u8, unit: i as u32, src: Src::PrevH(l as u32) });
+            }
+        }
+        for (g, lin) in wx.iter().enumerate() {
+            for (_, i, l) in lin.entries() {
+                info.push(ParamInfo { gate: g as u8, unit: i as u32, src: Src::Input(l as u32) });
+            }
+        }
+        for g in 0..4u8 {
+            for i in 0..k {
+                info.push(ParamInfo { gate: g, unit: i as u32, src: Src::Bias });
+            }
+        }
+
+        Lstm { k, input, density, wh, wx, bias_offset, num_params, info }
+    }
+
+    /// Per-unit pre-activation coefficients for c' rows: (ci, cf, cg) and the
+    /// o-gate h'-row coefficient co, plus the c'→h' chain factor o·φ'(c').
+    #[allow(clippy::type_complexity)]
+    fn coefs(&self, cache: &Cache) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let (ig, fg, og, gg) =
+            (&cache.bufs[C_I], &cache.bufs[C_F], &cache.bufs[C_O], &cache.bufs[C_G]);
+        let cprev = &cache.bufs[C_CPREV];
+        let phic = &cache.bufs[C_PHIC];
+        let k = self.k;
+        let mut ci = vec![0.0f32; k];
+        let mut cf = vec![0.0f32; k];
+        let mut cg = vec![0.0f32; k];
+        let mut co = vec![0.0f32; k];
+        let mut chain = vec![0.0f32; k];
+        for u in 0..k {
+            ci[u] = gg[u] * dsigmoid_from_y(ig[u]);
+            cf[u] = cprev[u] * dsigmoid_from_y(fg[u]);
+            cg[u] = ig[u] * dtanh_from_y(gg[u]);
+            co[u] = phic[u] * dsigmoid_from_y(og[u]);
+            chain[u] = og[u] * dtanh_from_y(phic[u]);
+        }
+        (ci, cf, cg, co, chain)
+    }
+}
+
+impl Cell for Lstm {
+    fn state_size(&self) -> usize {
+        2 * self.k
+    }
+
+    fn hidden_size(&self) -> usize {
+        self.k
+    }
+
+    fn input_size(&self) -> usize {
+        self.input
+    }
+
+    fn num_params(&self) -> usize {
+        self.num_params
+    }
+
+    fn dense_param_count(&self) -> usize {
+        4 * (self.k * self.k + self.k * self.input + self.k)
+    }
+
+    fn weight_density(&self) -> f64 {
+        self.density.min(1.0)
+    }
+
+    fn arch(&self) -> Arch {
+        Arch::Lstm
+    }
+
+    fn param_info(&self) -> &[ParamInfo] {
+        &self.info
+    }
+
+    fn init_params(&self, rng: &mut Pcg32) -> Vec<f32> {
+        let mut theta = vec![0.0f32; self.num_params];
+        for lin in &self.wh {
+            init_block(lin, &mut theta, self.k, self.density, rng);
+        }
+        for lin in &self.wx {
+            init_block(lin, &mut theta, self.input, self.density, rng);
+        }
+        // forget-gate bias = 1 (standard practice; keeps early gradients alive)
+        for i in 0..self.k {
+            theta[self.bias_offset + (GATE_F as usize) * self.k + i] = 1.0;
+        }
+        theta
+    }
+
+    fn make_cache(&self) -> Cache {
+        let k = self.k;
+        Cache::with_slots(&[k, k, self.input, k, k, k, k, k])
+    }
+
+    fn forward(&self, theta: &[f32], s_prev: &[f32], x: &[f32], cache: &mut Cache, s_next: &mut [f32]) {
+        let k = self.k;
+        let (h_prev, c_prev) = s_prev.split_at(k);
+        let b = |g: usize| &theta[self.bias_offset + g * k..self.bias_offset + (g + 1) * k];
+
+        let mut pre: [Vec<f32>; 4] =
+            [b(0).to_vec(), b(1).to_vec(), b(2).to_vec(), b(3).to_vec()];
+        for g in 0..4 {
+            self.wh[g].matvec_acc(theta, h_prev, &mut pre[g]);
+            self.wx[g].matvec_acc(theta, x, &mut pre[g]);
+        }
+
+        for u in 0..k {
+            cache.bufs[C_I][u] = sigmoid(pre[0][u]);
+            cache.bufs[C_F][u] = sigmoid(pre[1][u]);
+            cache.bufs[C_O][u] = sigmoid(pre[2][u]);
+            cache.bufs[C_G][u] = pre[3][u].tanh();
+        }
+        let (hn, cn) = s_next.split_at_mut(k);
+        for u in 0..k {
+            let c = cache.bufs[C_F][u] * c_prev[u] + cache.bufs[C_I][u] * cache.bufs[C_G][u];
+            cn[u] = c;
+            let phic = c.tanh();
+            cache.bufs[C_PHIC][u] = phic;
+            hn[u] = cache.bufs[C_O][u] * phic;
+        }
+        cache.bufs[C_HPREV].copy_from_slice(h_prev);
+        cache.bufs[C_CPREV].copy_from_slice(c_prev);
+        cache.bufs[C_X].copy_from_slice(x);
+    }
+
+    fn dynamics(&self, theta: &[f32], cache: &Cache, d: &mut Matrix) {
+        d.fill(0.0);
+        let k = self.k;
+        let (ci, cf, cg, co, chain) = self.coefs(cache);
+        let fg = &cache.bufs[C_F];
+        // Row blocks: h' rows = 0..k, c' rows = k..2k.
+        for u in 0..k {
+            // ∂c'/∂c and ∂h'/∂c diagonals
+            d.set(k + u, k + u, fg[u]);
+            d.set(u, k + u, chain[u] * fg[u]);
+            // h-dependence through the three c'-feeding gates
+            for (gate, coef) in [(0usize, ci[u]), (1, cf[u]), (3, cg[u])] {
+                let lin = &self.wh[gate];
+                let vals = &theta[lin.val_offset..lin.val_offset + lin.nnz()];
+                for t in lin.row_ptr[u]..lin.row_ptr[u + 1] {
+                    let l = lin.col_idx[t] as usize;
+                    let w = coef * vals[t];
+                    d.add_at(k + u, l, w); // c' row
+                    d.add_at(u, l, chain[u] * w); // h' row through φ(c')
+                }
+            }
+            // o-gate affects h' only
+            let lin = &self.wh[2];
+            let vals = &theta[lin.val_offset..lin.val_offset + lin.nnz()];
+            for t in lin.row_ptr[u]..lin.row_ptr[u + 1] {
+                let l = lin.col_idx[t] as usize;
+                d.add_at(u, l, co[u] * vals[t]);
+            }
+        }
+    }
+
+    fn dynamics_pattern(&self) -> Pattern {
+        let k = self.k;
+        let hdep = self.wh[0]
+            .pattern()
+            .union(&self.wh[1].pattern())
+            .union(&self.wh[3].pattern());
+        let hdep_with_o = hdep.union(&self.wh[2].pattern());
+        let mut coords: Vec<(usize, usize)> = Vec::new();
+        for (u, l) in hdep_with_o.iter() {
+            coords.push((u, l)); // h' ← h
+        }
+        for (u, l) in hdep.iter() {
+            coords.push((k + u, l)); // c' ← h
+        }
+        for u in 0..k {
+            coords.push((k + u, k + u)); // c' ← c
+            coords.push((u, k + u)); // h' ← c
+        }
+        Pattern::from_coords(2 * k, 2 * k, &coords)
+    }
+
+    fn immediate_structure(&self) -> ImmediateJac {
+        let k = self.k as u32;
+        let rows: Vec<Vec<u32>> = self
+            .info
+            .iter()
+            .map(|p| {
+                if p.gate == GATE_O {
+                    vec![p.unit]
+                } else {
+                    vec![p.unit, k + p.unit]
+                }
+            })
+            .collect();
+        ImmediateJac::new(2 * self.k, self.num_params, &rows)
+    }
+
+    fn immediate(&self, cache: &Cache, i_jac: &mut ImmediateJac) {
+        let (ci, cf, cg, co, chain) = self.coefs(cache);
+        let hp = &cache.bufs[C_HPREV];
+        let x = &cache.bufs[C_X];
+        for (j, p) in self.info.iter().enumerate() {
+            let u = p.unit as usize;
+            let srcval = match p.src {
+                Src::PrevH(l) => hp[l as usize],
+                Src::Input(l) => x[l as usize],
+                Src::Bias => 1.0,
+            };
+            let vals = i_jac.col_vals_mut(j);
+            match p.gate {
+                GATE_O => {
+                    vals[0] = co[u] * srcval; // h' row only
+                }
+                g => {
+                    let coef = match g {
+                        GATE_I => ci[u],
+                        GATE_F => cf[u],
+                        _ => cg[u],
+                    };
+                    let dc = coef * srcval;
+                    vals[0] = chain[u] * dc; // h' row (index u)
+                    vals[1] = dc; // c' row (index k+u)
+                }
+            }
+        }
+    }
+
+    fn forward_flops(&self) -> u64 {
+        let wnnz: usize = self.wh.iter().chain(self.wx.iter()).map(|l| l.nnz()).sum();
+        2 * wnnz as u64 + 12 * self.k as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::fdcheck;
+
+    #[test]
+    fn dynamics_matches_finite_diff_dense() {
+        let mut rng = Pcg32::seeded(31);
+        let cell = Lstm::new(6, 3, 1.0, &mut rng);
+        let err = fdcheck::check_dynamics(&cell, 200);
+        assert!(err < 2e-3, "err={err}");
+    }
+
+    #[test]
+    fn dynamics_matches_finite_diff_sparse() {
+        let mut rng = Pcg32::seeded(32);
+        let cell = Lstm::new(8, 4, 0.25, &mut rng);
+        let err = fdcheck::check_dynamics(&cell, 201);
+        assert!(err < 2e-3, "err={err}");
+    }
+
+    #[test]
+    fn immediate_matches_finite_diff() {
+        let mut rng = Pcg32::seeded(33);
+        for density in [1.0, 0.3] {
+            let cell = Lstm::new(5, 3, density, &mut rng);
+            let err = fdcheck::check_immediate(&cell, 202);
+            assert!(err < 2e-3, "density={density} err={err}");
+        }
+    }
+
+    #[test]
+    fn pattern_covers_dynamics() {
+        let mut rng = Pcg32::seeded(34);
+        let cell = Lstm::new(7, 2, 0.4, &mut rng);
+        fdcheck::check_dynamics_pattern_covers(&cell, 203);
+    }
+
+    #[test]
+    fn state_is_twice_hidden() {
+        let mut rng = Pcg32::seeded(35);
+        let cell = Lstm::new(9, 4, 1.0, &mut rng);
+        assert_eq!(cell.state_size(), 18);
+        assert_eq!(cell.hidden_size(), 9);
+    }
+
+    #[test]
+    fn immediate_two_nonzeros_for_non_output_gates() {
+        let mut rng = Pcg32::seeded(36);
+        let cell = Lstm::new(4, 2, 1.0, &mut rng);
+        let ij = cell.immediate_structure();
+        let info = cell.param_info();
+        for j in 0..cell.num_params() {
+            let expected = if info[j].gate == GATE_O { 1 } else { 2 };
+            assert_eq!(ij.col(j).0.len(), expected, "param {j}");
+        }
+    }
+
+    #[test]
+    fn forget_bias_initialized_to_one() {
+        let mut rng = Pcg32::seeded(37);
+        let cell = Lstm::new(4, 2, 1.0, &mut rng);
+        let theta = cell.init_params(&mut rng);
+        let info = cell.param_info();
+        for (j, p) in info.iter().enumerate() {
+            if p.src == Src::Bias && p.gate == GATE_F {
+                assert_eq!(theta[j], 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn long_rollout_stays_finite() {
+        let mut rng = Pcg32::seeded(38);
+        let cell = Lstm::new(10, 4, 0.5, &mut rng);
+        let theta = cell.init_params(&mut rng);
+        let mut cache = cell.make_cache();
+        let (mut s, mut s2) = (vec![0.0; 20], vec![0.0; 20]);
+        for _ in 0..200 {
+            let x: Vec<f32> = (0..4).map(|_| rng.normal()).collect();
+            cell.forward(&theta, &s, &x, &mut cache, &mut s2);
+            std::mem::swap(&mut s, &mut s2);
+            assert!(s.iter().all(|v| v.is_finite()));
+        }
+    }
+}

@@ -1,0 +1,352 @@
+//! Recurrent cells with analytic Jacobians.
+//!
+//! Every cell exposes, besides its forward step, the two Jacobians that the
+//! RTRL family is built from (paper §2.1):
+//!
+//! * `D_t = ∂s_t/∂s_{t-1}` — the *dynamics* Jacobian (state × state), and
+//! * `I_t = ∂s_t/∂θ_t`   — the *immediate* Jacobian (state × params), stored
+//!   compressed ([`ImmediateJac`]) because it has ≤2 nonzero rows per column
+//!   (paper §3.1).
+//!
+//! BPTT's backward step is also expressed through these:
+//! `∂L/∂s_{t-1} = D_tᵀ·∂L/∂s_t` and `∂L/∂θ += I_tᵀ·∂L/∂s_t`, which guarantees
+//! BPTT and RTRL gradients agree to machine precision (verified in
+//! `rust/tests/grad_equivalence.rs`).
+//!
+//! Weight sparsity: each weight block carries a fixed [`Pattern`] mask; the
+//! tracked parameter vector θ contains **only kept entries** (the paper's
+//! "extract the columns of J containing nonzero parameters" optimization,
+//! §3.2), laid out block-by-block in CSR order, then biases (biases are
+//! always dense, §5.1.2).
+
+pub mod gru;
+pub mod lstm;
+pub mod vanilla;
+
+pub use gru::Gru;
+pub use lstm::Lstm;
+pub use vanilla::Vanilla;
+
+use crate::sparse::immediate::ImmediateJac;
+use crate::sparse::pattern::Pattern;
+use crate::tensor::matrix::Matrix;
+use crate::tensor::rng::Pcg32;
+
+/// Architecture tag (used by configs, reports and the pattern constructors).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Arch {
+    Vanilla,
+    Gru,
+    Lstm,
+}
+
+impl Arch {
+    pub fn name(self) -> &'static str {
+        match self {
+            Arch::Vanilla => "vanilla",
+            Arch::Gru => "gru",
+            Arch::Lstm => "lstm",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Arch> {
+        match s.to_ascii_lowercase().as_str() {
+            "vanilla" | "rnn" => Some(Arch::Vanilla),
+            "gru" => Some(Arch::Gru),
+            "lstm" => Some(Arch::Lstm),
+            _ => None,
+        }
+    }
+
+    /// Build a cell of this architecture. `density` < 1 draws a uniform
+    /// random mask for every weight block (paper §5.1.2), identical pattern
+    /// held fixed for the whole run.
+    pub fn build(self, k: usize, input: usize, density: f64, rng: &mut Pcg32) -> Box<dyn Cell> {
+        match self {
+            Arch::Vanilla => Box::new(Vanilla::new(k, input, density, rng)),
+            Arch::Gru => Box::new(Gru::new(k, input, density, rng)),
+            Arch::Lstm => Box::new(Lstm::new(k, input, density, rng)),
+        }
+    }
+}
+
+/// Where a parameter's multiplicand comes from — determines its immediate-
+/// Jacobian value (`coef(gate, unit) · source`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Src {
+    /// multiplies `h_{t-1}[l]`
+    PrevH(u32),
+    /// multiplies `x_t[l]`
+    Input(u32),
+    /// bias (multiplies 1)
+    Bias,
+}
+
+/// One masked weight block `W: rows×cols` with CSR structure whose values
+/// live in the shared flat θ at `[val_offset, val_offset+nnz)`.
+#[derive(Clone, Debug)]
+pub struct MaskedLinear {
+    pub rows: usize,
+    pub cols: usize,
+    pub row_ptr: Vec<usize>,
+    pub col_idx: Vec<u32>,
+    pub val_offset: usize,
+}
+
+impl MaskedLinear {
+    pub fn new(pattern: &Pattern, val_offset: usize) -> Self {
+        let mut row_ptr = Vec::with_capacity(pattern.rows() + 1);
+        let mut col_idx = Vec::with_capacity(pattern.nnz());
+        row_ptr.push(0);
+        for i in 0..pattern.rows() {
+            col_idx.extend_from_slice(pattern.row(i));
+            row_ptr.push(col_idx.len());
+        }
+        MaskedLinear { rows: pattern.rows(), cols: pattern.cols(), row_ptr, col_idx, val_offset }
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    /// `y[i] += (W·x)[i]` using values from the flat θ.
+    pub fn matvec_acc(&self, theta: &[f32], x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.cols);
+        debug_assert_eq!(y.len(), self.rows);
+        let vals = &theta[self.val_offset..self.val_offset + self.nnz()];
+        if self.nnz() == self.rows * self.cols {
+            // §Perf: dense mask ⇒ rows are contiguous 0..cols; skip the
+            // index indirection so the dot product vectorizes.
+            for i in 0..self.rows {
+                y[i] += crate::tensor::ops::dot(&vals[i * self.cols..(i + 1) * self.cols], x);
+            }
+            return;
+        }
+        for i in 0..self.rows {
+            let (s, e) = (self.row_ptr[i], self.row_ptr[i + 1]);
+            let mut acc = 0.0f32;
+            for t in s..e {
+                acc += vals[t] * x[self.col_idx[t] as usize];
+            }
+            y[i] += acc;
+        }
+    }
+
+    /// Iterate `(kept_param_index, row, col)` triples.
+    pub fn entries(&self) -> impl Iterator<Item = (usize, usize, usize)> + '_ {
+        (0..self.rows).flat_map(move |i| {
+            let (s, e) = (self.row_ptr[i], self.row_ptr[i + 1]);
+            (s..e).map(move |t| (self.val_offset + t, i, self.col_idx[t] as usize))
+        })
+    }
+
+    /// Structural pattern of this block.
+    pub fn pattern(&self) -> Pattern {
+        let lists: Vec<Vec<u32>> = (0..self.rows)
+            .map(|i| self.col_idx[self.row_ptr[i]..self.row_ptr[i + 1]].to_vec())
+            .collect();
+        Pattern::from_rows(self.rows, self.cols, &lists)
+    }
+}
+
+/// Per-step forward cache: the quantities the Jacobians are expressed in.
+/// Slot meaning is cell-specific (see each cell's `CACHE_*` constants); the
+/// uniform representation keeps the `Cell` trait object-safe and lets BPTT
+/// store one `Cache` per timestep.
+#[derive(Clone, Debug, Default)]
+pub struct Cache {
+    pub bufs: Vec<Vec<f32>>,
+}
+
+impl Cache {
+    pub fn with_slots(sizes: &[usize]) -> Self {
+        Cache { bufs: sizes.iter().map(|&n| vec![0.0; n]).collect() }
+    }
+}
+
+/// Descriptor of every tracked parameter (kept weights then biases).
+#[derive(Clone, Debug)]
+pub struct ParamInfo {
+    /// gate index, cell-specific (Vanilla: 0; GRU: z/r/a = 0/1/2; LSTM: i/f/o/g = 0/1/2/3)
+    pub gate: u8,
+    /// unit (row) within the gate
+    pub unit: u32,
+    pub src: Src,
+}
+
+/// The cell interface used by every gradient algorithm.
+pub trait Cell: Send + Sync {
+    /// Size of the full recurrent state `s` (k for Vanilla/GRU, 2k for LSTM).
+    fn state_size(&self) -> usize;
+    /// Size of the exposed hidden vector `h` (first `hidden_size` entries of s).
+    fn hidden_size(&self) -> usize;
+    fn input_size(&self) -> usize;
+    /// Number of tracked (kept) recurrent parameters.
+    fn num_params(&self) -> usize;
+    /// Full dense parameter count (as if no mask) — used for cost reporting.
+    fn dense_param_count(&self) -> usize;
+    /// Weight density d = 1 - s over the weight blocks (biases excluded).
+    fn weight_density(&self) -> f64;
+    fn arch(&self) -> Arch;
+    /// Per-parameter metadata, length `num_params()`.
+    fn param_info(&self) -> &[ParamInfo];
+
+    /// Sparse-aware initialization of θ.
+    fn init_params(&self, rng: &mut Pcg32) -> Vec<f32>;
+
+    fn make_cache(&self) -> Cache;
+
+    /// `s_next = f_θ(s_prev, x)`, filling `cache` with everything the
+    /// Jacobians need. `s_prev`/`s_next` have `state_size()` entries.
+    fn forward(&self, theta: &[f32], s_prev: &[f32], x: &[f32], cache: &mut Cache, s_next: &mut [f32]);
+
+    /// Dense dynamics Jacobian `D_t` (state × state) at the cached point.
+    fn dynamics(&self, theta: &[f32], cache: &Cache, d: &mut Matrix);
+
+    /// Structural pattern of `D_t` (fixed over time).
+    fn dynamics_pattern(&self) -> Pattern;
+
+    /// Zero-valued immediate Jacobian with the right structure.
+    fn immediate_structure(&self) -> ImmediateJac;
+
+    /// Refresh `I_t` values at the cached point.
+    fn immediate(&self, cache: &Cache, i_jac: &mut ImmediateJac);
+
+    /// FLOPs of one forward step (multiply-adds × 2), sparsity-aware.
+    fn forward_flops(&self) -> u64;
+}
+
+/// Generic BPTT-style backward step expressed through the Jacobians:
+/// `ds_prev = Dᵀ·ds`, `gθ += Iᵀ·ds`. `d` and `i_jac` must already be
+/// evaluated at this step's cache.
+pub fn backward_step(
+    d: &Matrix,
+    i_jac: &ImmediateJac,
+    ds: &[f32],
+    ds_prev: &mut [f32],
+    g_theta: &mut [f32],
+) {
+    let out = crate::tensor::ops::matvec_t(d, ds);
+    ds_prev.copy_from_slice(&out);
+    i_jac.matvec_t_acc(ds, g_theta);
+}
+
+/// Helper shared by the cells: draw a random mask of the requested density
+/// (or dense when `density >= 1`).
+pub(crate) fn make_mask(rows: usize, cols: usize, density: f64, rng: &mut Pcg32) -> Pattern {
+    if density >= 1.0 {
+        Pattern::dense(rows, cols)
+    } else {
+        Pattern::random(rows, cols, density, rng)
+    }
+}
+
+/// Sparse-aware LeCun-uniform init for one block: U(±1/√(d·fan_in)).
+pub(crate) fn init_block(
+    lin: &MaskedLinear,
+    theta: &mut [f32],
+    fan_in: usize,
+    density: f64,
+    rng: &mut Pcg32,
+) {
+    let eff = ((fan_in as f64) * density).max(1.0);
+    let bound = (1.0 / eff.sqrt()) as f32;
+    for t in 0..lin.nnz() {
+        theta[lin.val_offset + t] = rng.uniform_in(-bound, bound);
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod fdcheck {
+    //! Finite-difference validation used by each cell's tests.
+    use super::*;
+
+    /// Max abs error between analytic D_t and central finite differences.
+    pub fn check_dynamics(cell: &dyn Cell, seed: u64) -> f32 {
+        let mut rng = Pcg32::seeded(seed);
+        let theta = cell.init_params(&mut rng);
+        let (ss, is) = (cell.state_size(), cell.input_size());
+        let s_prev: Vec<f32> = (0..ss).map(|_| rng.normal() * 0.5).collect();
+        let x: Vec<f32> = (0..is).map(|_| rng.normal()).collect();
+        let mut cache = cell.make_cache();
+        let mut s_next = vec![0.0; ss];
+        cell.forward(&theta, &s_prev, &x, &mut cache, &mut s_next);
+        let mut d = Matrix::zeros(ss, ss);
+        cell.dynamics(&theta, &cache, &mut d);
+
+        let eps = 1e-3f32;
+        let mut max_err = 0.0f32;
+        let mut cache2 = cell.make_cache();
+        for l in 0..ss {
+            let mut sp = s_prev.clone();
+            sp[l] += eps;
+            let mut up = vec![0.0; ss];
+            cell.forward(&theta, &sp, &x, &mut cache2, &mut up);
+            sp[l] -= 2.0 * eps;
+            let mut um = vec![0.0; ss];
+            cell.forward(&theta, &sp, &x, &mut cache2, &mut um);
+            for i in 0..ss {
+                let fd = (up[i] - um[i]) / (2.0 * eps);
+                max_err = max_err.max((fd - d.get(i, l)).abs());
+            }
+        }
+        max_err
+    }
+
+    /// Max abs error between analytic I_t and finite differences over θ.
+    pub fn check_immediate(cell: &dyn Cell, seed: u64) -> f32 {
+        let mut rng = Pcg32::seeded(seed);
+        let mut theta = cell.init_params(&mut rng);
+        let (ss, is) = (cell.state_size(), cell.input_size());
+        let s_prev: Vec<f32> = (0..ss).map(|_| rng.normal() * 0.5).collect();
+        let x: Vec<f32> = (0..is).map(|_| rng.normal()).collect();
+        let mut cache = cell.make_cache();
+        let mut s_next = vec![0.0; ss];
+        cell.forward(&theta, &s_prev, &x, &mut cache, &mut s_next);
+        let mut ij = cell.immediate_structure();
+        cell.immediate(&cache, &mut ij);
+        let dense_i = ij.to_dense();
+
+        let eps = 1e-3f32;
+        let mut max_err = 0.0f32;
+        let mut cache2 = cell.make_cache();
+        for j in 0..cell.num_params() {
+            let orig = theta[j];
+            theta[j] = orig + eps;
+            let mut up = vec![0.0; ss];
+            cell.forward(&theta, &s_prev, &x, &mut cache2, &mut up);
+            theta[j] = orig - eps;
+            let mut um = vec![0.0; ss];
+            cell.forward(&theta, &s_prev, &x, &mut cache2, &mut um);
+            theta[j] = orig;
+            for i in 0..ss {
+                let fd = (up[i] - um[i]) / (2.0 * eps);
+                max_err = max_err.max((fd - dense_i.get(i, j)).abs());
+            }
+        }
+        max_err
+    }
+
+    /// The dynamics pattern must cover every analytically-nonzero D entry.
+    pub fn check_dynamics_pattern_covers(cell: &dyn Cell, seed: u64) {
+        let mut rng = Pcg32::seeded(seed);
+        let theta = cell.init_params(&mut rng);
+        let ss = cell.state_size();
+        let s_prev: Vec<f32> = (0..ss).map(|_| rng.normal() * 0.5).collect();
+        let x: Vec<f32> = (0..cell.input_size()).map(|_| rng.normal()).collect();
+        let mut cache = cell.make_cache();
+        let mut s_next = vec![0.0; ss];
+        cell.forward(&theta, &s_prev, &x, &mut cache, &mut s_next);
+        let mut d = Matrix::zeros(ss, ss);
+        cell.dynamics(&theta, &cache, &mut d);
+        let pat = cell.dynamics_pattern();
+        for i in 0..ss {
+            for l in 0..ss {
+                if d.get(i, l).abs() > 1e-12 {
+                    assert!(pat.contains(i, l), "D[{i},{l}] nonzero but not in pattern");
+                }
+            }
+        }
+    }
+}

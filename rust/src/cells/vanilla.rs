@@ -1,0 +1,228 @@
+//! Vanilla (Elman) RNN: `h_t = tanh(W_h h_{t-1} + W_x x_t + b)`.
+//!
+//! The simplest dynamics of the paper: `D_t[i,l] = tanh'(h_i)·W_h[i,l]`, so
+//! the sparsity of `D_t` equals the sparsity of `W_h` exactly (§3.2), and
+//! `I_t` has exactly one nonzero row per parameter column (§3.1).
+
+use super::*;
+use crate::tensor::ops::dtanh_from_y;
+
+pub struct Vanilla {
+    k: usize,
+    input: usize,
+    density: f64,
+    wh: MaskedLinear,
+    wx: MaskedLinear,
+    bias_offset: usize,
+    num_params: usize,
+    info: Vec<ParamInfo>,
+}
+
+/// Cache slots.
+const C_HPREV: usize = 0;
+const C_X: usize = 1;
+const C_HNEXT: usize = 2;
+
+impl Vanilla {
+    pub fn new(k: usize, input: usize, density: f64, rng: &mut Pcg32) -> Self {
+        let wh_pat = make_mask(k, k, density, rng);
+        let wx_pat = make_mask(k, input, density, rng);
+        let wh = MaskedLinear::new(&wh_pat, 0);
+        let wx = MaskedLinear::new(&wx_pat, wh.nnz());
+        let bias_offset = wh.nnz() + wx.nnz();
+        let num_params = bias_offset + k;
+
+        let mut info = Vec::with_capacity(num_params);
+        for (_, i, l) in wh.entries() {
+            info.push(ParamInfo { gate: 0, unit: i as u32, src: Src::PrevH(l as u32) });
+        }
+        for (_, i, l) in wx.entries() {
+            info.push(ParamInfo { gate: 0, unit: i as u32, src: Src::Input(l as u32) });
+        }
+        for i in 0..k {
+            info.push(ParamInfo { gate: 0, unit: i as u32, src: Src::Bias });
+        }
+
+        Vanilla { k, input, density, wh, wx, bias_offset, num_params, info }
+    }
+
+    /// The recurrent weight mask (needed by pruning / pattern analyses).
+    pub fn wh_pattern(&self) -> Pattern {
+        self.wh.pattern()
+    }
+}
+
+impl Cell for Vanilla {
+    fn state_size(&self) -> usize {
+        self.k
+    }
+
+    fn hidden_size(&self) -> usize {
+        self.k
+    }
+
+    fn input_size(&self) -> usize {
+        self.input
+    }
+
+    fn num_params(&self) -> usize {
+        self.num_params
+    }
+
+    fn dense_param_count(&self) -> usize {
+        self.k * self.k + self.k * self.input + self.k
+    }
+
+    fn weight_density(&self) -> f64 {
+        self.density.min(1.0)
+    }
+
+    fn arch(&self) -> Arch {
+        Arch::Vanilla
+    }
+
+    fn param_info(&self) -> &[ParamInfo] {
+        &self.info
+    }
+
+    fn init_params(&self, rng: &mut Pcg32) -> Vec<f32> {
+        let mut theta = vec![0.0f32; self.num_params];
+        init_block(&self.wh, &mut theta, self.k, self.density, rng);
+        init_block(&self.wx, &mut theta, self.input, self.density, rng);
+        // biases start at zero
+        theta
+    }
+
+    fn make_cache(&self) -> Cache {
+        Cache::with_slots(&[self.k, self.input, self.k])
+    }
+
+    fn forward(&self, theta: &[f32], s_prev: &[f32], x: &[f32], cache: &mut Cache, s_next: &mut [f32]) {
+        debug_assert_eq!(s_prev.len(), self.k);
+        debug_assert_eq!(x.len(), self.input);
+        let mut pre = theta[self.bias_offset..self.bias_offset + self.k].to_vec();
+        self.wh.matvec_acc(theta, s_prev, &mut pre);
+        self.wx.matvec_acc(theta, x, &mut pre);
+        for i in 0..self.k {
+            s_next[i] = pre[i].tanh();
+        }
+        cache.bufs[C_HPREV].copy_from_slice(s_prev);
+        cache.bufs[C_X].copy_from_slice(x);
+        cache.bufs[C_HNEXT].copy_from_slice(s_next);
+    }
+
+    fn dynamics(&self, theta: &[f32], cache: &Cache, d: &mut Matrix) {
+        d.fill(0.0);
+        let h = &cache.bufs[C_HNEXT];
+        let vals = &theta[self.wh.val_offset..self.wh.val_offset + self.wh.nnz()];
+        for i in 0..self.k {
+            let coef = dtanh_from_y(h[i]);
+            let (s, e) = (self.wh.row_ptr[i], self.wh.row_ptr[i + 1]);
+            let drow = d.row_mut(i);
+            for t in s..e {
+                drow[self.wh.col_idx[t] as usize] = coef * vals[t];
+            }
+        }
+    }
+
+    fn dynamics_pattern(&self) -> Pattern {
+        self.wh.pattern()
+    }
+
+    fn immediate_structure(&self) -> ImmediateJac {
+        let rows: Vec<Vec<u32>> = self.info.iter().map(|p| vec![p.unit]).collect();
+        ImmediateJac::new(self.k, self.num_params, &rows)
+    }
+
+    fn immediate(&self, cache: &Cache, i_jac: &mut ImmediateJac) {
+        let h = &cache.bufs[C_HNEXT];
+        let hp = &cache.bufs[C_HPREV];
+        let x = &cache.bufs[C_X];
+        let vals = i_jac.vals_mut();
+        for (j, p) in self.info.iter().enumerate() {
+            let coef = dtanh_from_y(h[p.unit as usize]);
+            vals[j] = coef
+                * match p.src {
+                    Src::PrevH(l) => hp[l as usize],
+                    Src::Input(l) => x[l as usize],
+                    Src::Bias => 1.0,
+                };
+        }
+    }
+
+    fn forward_flops(&self) -> u64 {
+        // 2 flops per kept weight (mul+add) + k tanh (counted as 1 each).
+        2 * (self.wh.nnz() + self.wx.nnz()) as u64 + 2 * self.k as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::fdcheck;
+
+    #[test]
+    fn dynamics_matches_finite_diff_dense() {
+        let mut rng = Pcg32::seeded(1);
+        let cell = Vanilla::new(8, 3, 1.0, &mut rng);
+        assert!(fdcheck::check_dynamics(&cell, 10) < 2e-3);
+    }
+
+    #[test]
+    fn dynamics_matches_finite_diff_sparse() {
+        let mut rng = Pcg32::seeded(2);
+        let cell = Vanilla::new(10, 4, 0.25, &mut rng);
+        assert!(fdcheck::check_dynamics(&cell, 11) < 2e-3);
+    }
+
+    #[test]
+    fn immediate_matches_finite_diff() {
+        let mut rng = Pcg32::seeded(3);
+        for density in [1.0, 0.3] {
+            let cell = Vanilla::new(6, 3, density, &mut rng);
+            assert!(fdcheck::check_immediate(&cell, 12) < 2e-3);
+        }
+    }
+
+    #[test]
+    fn pattern_covers_dynamics() {
+        let mut rng = Pcg32::seeded(4);
+        let cell = Vanilla::new(9, 2, 0.4, &mut rng);
+        fdcheck::check_dynamics_pattern_covers(&cell, 13);
+    }
+
+    #[test]
+    fn param_counts() {
+        let mut rng = Pcg32::seeded(5);
+        let cell = Vanilla::new(8, 4, 0.5, &mut rng);
+        // 0.5 * (64 + 32) kept weights + 8 biases
+        assert_eq!(cell.num_params(), 48 + 8);
+        assert_eq!(cell.dense_param_count(), 64 + 32 + 8);
+        assert_eq!(cell.param_info().len(), cell.num_params());
+    }
+
+    #[test]
+    fn immediate_one_nonzero_per_column() {
+        // Paper §3.1: vanilla I_t has sparsity (k-1)/k — one entry per column.
+        let mut rng = Pcg32::seeded(6);
+        let cell = Vanilla::new(8, 4, 1.0, &mut rng);
+        let ij = cell.immediate_structure();
+        assert_eq!(ij.nnz(), cell.num_params());
+    }
+
+    #[test]
+    fn forward_is_bounded() {
+        let mut rng = Pcg32::seeded(7);
+        let cell = Vanilla::new(16, 8, 1.0, &mut rng);
+        let theta = cell.init_params(&mut rng);
+        let mut cache = cell.make_cache();
+        let mut s = vec![0.0; 16];
+        let mut s2 = vec![0.0; 16];
+        for step in 0..50 {
+            let x: Vec<f32> = (0..8).map(|_| rng.normal()).collect();
+            cell.forward(&theta, &s, &x, &mut cache, &mut s2);
+            std::mem::swap(&mut s, &mut s2);
+            assert!(s.iter().all(|v| v.abs() <= 1.0), "step {step}");
+        }
+    }
+}

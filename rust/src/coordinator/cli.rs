@@ -1,0 +1,139 @@
+//! Hand-rolled CLI (the crate registry is offline; no clap). Grammar:
+//!
+//! ```text
+//! repro <command> [--flag value]... [--switch]...
+//! ```
+//!
+//! Flags are collected into a typed bag with defaulting accessors, so each
+//! experiment declares only the knobs it uses.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub command: String,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args, String> {
+        if argv.is_empty() {
+            return Err("missing command".into());
+        }
+        let command = argv[0].clone();
+        let mut flags = HashMap::new();
+        let mut i = 1;
+        while i < argv.len() {
+            let a = &argv[i];
+            let Some(name) = a.strip_prefix("--") else {
+                return Err(format!("expected --flag, got '{a}'"));
+            };
+            if let Some((k, v)) = name.split_once('=') {
+                flags.insert(k.to_string(), v.to_string());
+                i += 1;
+            } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), argv[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        }
+        Ok(Args { command, flags })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> f32 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).map(|v| v == "true" || v == "1" || v == "yes").unwrap_or(default)
+    }
+
+    /// Comma-separated list flag.
+    pub fn list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.get(key) {
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+pub const USAGE: &str = "\
+snap-rtrl reproduction of 'A Practical Sparse Approximation for Real Time
+Recurrent Learning' (Menick et al., 2020).
+
+USAGE: repro <command> [--flag value]...
+
+Experiment commands (one per paper table/figure):
+  table1   Asymptotic + measured cost model          [--k --t --sparsity]
+  fig3     Char-LM learning curves, dense & sparse   [--side dense|sparse --steps --k --batch --lr]
+  table2   BPC vs sparsity at constant params (=fig4)[--steps --base-k --max-mult]
+  table3   Empirical FLOPs & Jacobian sparsity       [--input-dim]
+  table4   SnAp approximation quality (=fig6)        [--steps --checkpoints]
+  fig5     Copy-task curriculum curves               [--arch --sparsity --methods --tokens --seeds]
+
+Training commands:
+  train    Char-LM single run    [--method --arch --k --sparsity --steps --lr --trunc --batch --corpus]
+  copy     Copy-task single run  [--method --arch --k --sparsity --steps --lr --trunc --batch]
+
+Runtime commands:
+  aot-demo Run the AOT-compiled GRU/SnAp-1 step from the PJRT runtime
+  info     Print build/config information
+
+All experiments write CSVs into results/ (override with SNAP_RTRL_RESULTS).
+Scaled-down defaults reproduce the paper's *shapes* in minutes; raise --steps
+/ --tokens for closer replication.
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(&s.iter().map(|x| x.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn parses_flags_and_switches() {
+        let a = parse(&["fig3", "--steps", "100", "--side=sparse", "--verbose"]);
+        assert_eq!(a.command, "fig3");
+        assert_eq!(a.usize_or("steps", 1), 100);
+        assert_eq!(a.str_or("side", "dense"), "sparse");
+        assert!(a.bool_or("verbose", false));
+        assert_eq!(a.usize_or("missing", 7), 7);
+    }
+
+    #[test]
+    fn list_flag() {
+        let a = parse(&["fig5", "--methods", "bptt,snap-1, snap-2"]);
+        assert_eq!(a.list_or("methods", &[]), vec!["bptt", "snap-1", "snap-2"]);
+        assert_eq!(a.list_or("other", &["x"]), vec!["x"]);
+    }
+
+    #[test]
+    fn rejects_bare_args() {
+        let e = Args::parse(&["cmd".into(), "oops".into()]);
+        assert!(e.is_err());
+    }
+}

@@ -1,0 +1,40 @@
+//! L3 coordinator: CLI, experiment registry (one command per paper
+//! table/figure), reporting, and the approximation-quality analysis.
+
+pub mod analysis;
+pub mod cli;
+pub mod experiments;
+pub mod report;
+
+pub use cli::{Args, USAGE};
+
+use anyhow::Result;
+
+/// Dispatch a parsed command. Returns Err for unknown commands.
+pub fn dispatch(args: &Args) -> Result<()> {
+    match args.command.as_str() {
+        "table1" => experiments::run_table1(args),
+        "fig3" => experiments::run_fig3(args),
+        "table2" | "fig4" => experiments::run_table2(args),
+        "table3" => experiments::run_table3(args),
+        "table4" | "fig6" => experiments::run_table4(args),
+        "fig5" => experiments::run_fig5(args),
+        "train" => experiments::run_train(args),
+        "copy" => experiments::run_copy_cmd(args),
+        "aot-demo" => crate::runtime::demo::run_aot_demo(args)?,
+        "info" => info(),
+        "help" | "--help" | "-h" => println!("{USAGE}"),
+        other => anyhow::bail!("unknown command '{other}'\n\n{USAGE}"),
+    }
+    Ok(())
+}
+
+fn info() {
+    println!("snap-rtrl {} — SnAp reproduction", env!("CARGO_PKG_VERSION"));
+    println!("artifacts dir: {}", crate::runtime::artifacts_dir().display());
+    println!("results dir:   {}", crate::coordinator::report::results_dir().display());
+    match crate::runtime::PjrtRuntime::cpu() {
+        Ok(rt) => println!("PJRT: platform={} devices={}", rt.platform(), rt.device_count()),
+        Err(e) => println!("PJRT: unavailable ({e})"),
+    }
+}

@@ -1,0 +1,154 @@
+//! Report sinks: aligned-column tables on stdout (markdown-ish, matching the
+//! paper's table layout) and CSV files under `results/` for the figures.
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+/// Column-aligned table printer.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn rows_len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut width = vec![0usize; ncol];
+        for (c, h) in self.header.iter().enumerate() {
+            width[c] = h.len();
+        }
+        for row in &self.rows {
+            for (c, cell) in row.iter().enumerate() {
+                width[c] = width[c].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], width: &[usize], out: &mut String| {
+            out.push('|');
+            for (c, cell) in cells.iter().enumerate() {
+                let _ = write!(out, " {:<w$} |", cell, w = width[c]);
+            }
+            out.push('\n');
+        };
+        fmt_row(&self.header, &width, &mut out);
+        out.push('|');
+        for w in &width {
+            let _ = write!(out, "{}|", "-".repeat(w + 2));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            fmt_row(row, &width, &mut out);
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Directory for CSV outputs (created on demand).
+pub fn results_dir() -> PathBuf {
+    let dir = std::env::var("SNAP_RTRL_RESULTS").unwrap_or_else(|_| "results".into());
+    let p = PathBuf::from(dir);
+    std::fs::create_dir_all(&p).ok();
+    p
+}
+
+/// Write a CSV file into results/; returns the path.
+pub fn write_csv(name: &str, header: &[&str], rows: &[Vec<String>]) -> PathBuf {
+    let path = results_dir().join(name);
+    let mut f = std::fs::File::create(&path).expect("create csv");
+    writeln!(f, "{}", header.join(",")).unwrap();
+    for row in rows {
+        writeln!(f, "{}", row.join(",")).unwrap();
+    }
+    path
+}
+
+/// Format helpers.
+pub fn f2(v: f64) -> String {
+    format!("{v:.2}")
+}
+
+pub fn f3(v: f64) -> String {
+    format!("{v:.3}")
+}
+
+pub fn pct(v: f64) -> String {
+    format!("{:.1}%", v * 100.0)
+}
+
+pub fn mult(v: f64) -> String {
+    if v >= 100.0 {
+        format!("{v:.0}x")
+    } else if v >= 10.0 {
+        format!("{v:.1}x")
+    } else {
+        format!("{v:.2}x")
+    }
+}
+
+/// Human-readable float count (memory column).
+pub fn floats_h(v: f64) -> String {
+    if v >= 1e9 {
+        format!("{:.2}G", v / 1e9)
+    } else if v >= 1e6 {
+        format!("{:.2}M", v / 1e6)
+    } else if v >= 1e3 {
+        format!("{:.1}k", v / 1e3)
+    } else {
+        format!("{v:.0}")
+    }
+}
+
+pub fn exists(p: &Path) -> bool {
+    p.is_file()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["method", "bpc"]);
+        t.row(&["snap-1".into(), "1.55".into()]);
+        t.row(&["bptt".into(), "1.50".into()]);
+        let r = t.render();
+        assert!(r.contains("| method |"));
+        assert!(r.lines().count() == 4);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(mult(597.4), "597x");
+        assert_eq!(mult(22.13), "22.1x");
+        assert_eq!(mult(1.994), "1.99x");
+        assert_eq!(pct(0.750), "75.0%");
+        assert_eq!(floats_h(2_500_000.0), "2.50M");
+    }
+
+    #[test]
+    fn csv_written() {
+        std::env::set_var("SNAP_RTRL_RESULTS", std::env::temp_dir().join("snap_csv_test"));
+        let p = write_csv("t.csv", &["a", "b"], &[vec!["1".into(), "2".into()]]);
+        let body = std::fs::read_to_string(&p).unwrap();
+        std::env::remove_var("SNAP_RTRL_RESULTS");
+        assert_eq!(body, "a,b\n1,2\n");
+    }
+}

@@ -1,0 +1,169 @@
+//! The Copy task (paper §5.2, following Mujika et al.): observe a random
+//! binary string, then reproduce it after a GO marker.
+//!
+//! Sequence layout for a string `b_1..b_L`:
+//!
+//! ```text
+//! input : START b_1 .. b_L GO    PAD  ..  PAD
+//! target:  -     -  ..  -   b_1  b_2 ..  b_L
+//! ```
+//!
+//! so the full sequence has `2L + 2` steps (the paper's footnote 1). Loss is
+//! measured in bits per character over the L prediction positions.
+//!
+//! Curriculum (§5.2): start at `L = 1`; when the average bits-per-character
+//! of a training minibatch drops below 0.15, increment `L`. Each sampled
+//! sequence draws its target length uniformly from `[max(L-5, 1), L]`.
+
+use crate::tensor::rng::Pcg32;
+
+/// Input token ids (one-hot encoded by the model).
+pub const TOK_BIT0: usize = 0;
+pub const TOK_BIT1: usize = 1;
+pub const TOK_START: usize = 2;
+pub const TOK_GO: usize = 3;
+pub const TOK_PAD: usize = 4;
+/// Input vocabulary size.
+pub const COPY_VOCAB: usize = 5;
+/// Output classes (bit 0 / bit 1).
+pub const COPY_CLASSES: usize = 2;
+
+/// One Copy-task sequence: tokens plus per-position optional targets.
+#[derive(Clone, Debug)]
+pub struct CopySeq {
+    pub inputs: Vec<usize>,
+    /// `Some(bit)` on prediction positions, `None` elsewhere.
+    pub targets: Vec<Option<usize>>,
+    pub target_len: usize,
+}
+
+impl CopySeq {
+    /// Generate one sequence with exact string length `len`.
+    pub fn generate(len: usize, rng: &mut Pcg32) -> CopySeq {
+        assert!(len >= 1);
+        let bits: Vec<usize> = (0..len).map(|_| rng.below(2) as usize).collect();
+        let total = 2 * len + 2;
+        let mut inputs = Vec::with_capacity(total);
+        let mut targets = vec![None; total];
+        inputs.push(TOK_START);
+        inputs.extend(bits.iter().copied()); // bit tokens coincide with bit values
+        inputs.push(TOK_GO);
+        for (i, &b) in bits.iter().enumerate() {
+            inputs.push(TOK_PAD);
+            targets[len + 2 + i] = Some(b);
+        }
+        CopySeq { inputs, targets, target_len: len }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inputs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inputs.is_empty()
+    }
+
+    pub fn num_prediction_positions(&self) -> usize {
+        self.targets.iter().filter(|t| t.is_some()).count()
+    }
+}
+
+/// Curriculum controller (§5.2).
+#[derive(Clone, Debug)]
+pub struct Curriculum {
+    level: usize,
+    threshold_bpc: f32,
+}
+
+impl Curriculum {
+    pub fn new() -> Self {
+        Curriculum { level: 1, threshold_bpc: 0.15 }
+    }
+
+    pub fn with_threshold(threshold_bpc: f32) -> Self {
+        Curriculum { level: 1, threshold_bpc }
+    }
+
+    /// Current curriculum level L.
+    pub fn level(&self) -> usize {
+        self.level
+    }
+
+    /// Sample the next sequence length: uniform in `[max(L-5,1), L]`.
+    pub fn sample_len(&self, rng: &mut Pcg32) -> usize {
+        let lo = self.level.saturating_sub(5).max(1);
+        let hi = self.level;
+        lo + rng.below_usize(hi - lo + 1)
+    }
+
+    /// Report the average bpc of a finished minibatch; advances the level
+    /// when below threshold. Returns true if the level advanced.
+    pub fn report_minibatch_bpc(&mut self, bpc: f32) -> bool {
+        if bpc < self.threshold_bpc {
+            self.level += 1;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+impl Default for Curriculum {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequence_layout() {
+        let mut rng = Pcg32::seeded(1);
+        let s = CopySeq::generate(4, &mut rng);
+        assert_eq!(s.len(), 10); // 2*4 + 2
+        assert_eq!(s.inputs[0], TOK_START);
+        assert_eq!(s.inputs[5], TOK_GO);
+        assert!(s.inputs[1..5].iter().all(|&t| t == TOK_BIT0 || t == TOK_BIT1));
+        assert!(s.inputs[6..].iter().all(|&t| t == TOK_PAD));
+        assert_eq!(s.num_prediction_positions(), 4);
+        // Targets echo the observed bits in order.
+        for i in 0..4 {
+            assert_eq!(s.targets[6 + i], Some(s.inputs[1 + i]));
+        }
+    }
+
+    #[test]
+    fn curriculum_advances_on_low_bpc() {
+        let mut c = Curriculum::new();
+        assert_eq!(c.level(), 1);
+        assert!(!c.report_minibatch_bpc(0.5));
+        assert_eq!(c.level(), 1);
+        assert!(c.report_minibatch_bpc(0.1));
+        assert_eq!(c.level(), 2);
+    }
+
+    #[test]
+    fn sample_len_within_window() {
+        let mut c = Curriculum::new();
+        for _ in 0..10 {
+            c.report_minibatch_bpc(0.0);
+        }
+        assert_eq!(c.level(), 11);
+        let mut rng = Pcg32::seeded(5);
+        for _ in 0..100 {
+            let l = c.sample_len(&mut rng);
+            assert!((6..=11).contains(&l), "len {l}");
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic_per_seed() {
+        let mut r1 = Pcg32::seeded(9);
+        let mut r2 = Pcg32::seeded(9);
+        let a = CopySeq::generate(8, &mut r1);
+        let b = CopySeq::generate(8, &mut r2);
+        assert_eq!(a.inputs, b.inputs);
+    }
+}

@@ -1,0 +1,8 @@
+//! Data pipelines: byte corpora for char-LM (§5.1) and the Copy task with
+//! its curriculum controller (§5.2).
+
+pub mod copy;
+pub mod corpus;
+
+pub use copy::{CopySeq, Curriculum, COPY_CLASSES, COPY_VOCAB};
+pub use corpus::Corpus;

@@ -1,0 +1,252 @@
+//! Backpropagation Through Time (paper §2, eq. 1).
+//!
+//! Stores one forward cache + one loss cotangent per step of the current
+//! window; `flush` runs the reverse sweep
+//! `ds_{t-1} = D_tᵀ·ds_t`, `gθ += I_tᵀ·ds_t` and clears the window.
+//! With `flush` called every step this is truncated BPTT with T=1 (the
+//! fully-online regime of §5.2 where BPTT "completely fails to learn
+//! long-term structure"); with one flush per sequence it is full BPTT.
+
+use crate::cells::{backward_step, Cache, Cell};
+use crate::grad::GradAlgo;
+use crate::sparse::immediate::ImmediateJac;
+use crate::tensor::matrix::Matrix;
+
+pub struct Bptt<'c> {
+    cell: &'c dyn Cell,
+    /// current state
+    s: Vec<f32>,
+    /// per-step: state *before* the step (needed to re-enter the window)
+    caches: Vec<Cache>,
+    dl_dh: Vec<Vec<f32>>,
+    /// scratch
+    d: Matrix,
+    i_jac: ImmediateJac,
+    spare_caches: Vec<Cache>,
+    last_flops: u64,
+}
+
+impl<'c> Bptt<'c> {
+    pub fn new(cell: &'c dyn Cell) -> Self {
+        let ss = cell.state_size();
+        Bptt {
+            cell,
+            s: vec![0.0; ss],
+            caches: Vec::new(),
+            dl_dh: Vec::new(),
+            d: Matrix::zeros(ss, ss),
+            i_jac: cell.immediate_structure(),
+            spare_caches: Vec::new(),
+            last_flops: 0,
+        }
+    }
+
+    /// Number of steps currently buffered.
+    pub fn window_len(&self) -> usize {
+        self.caches.len()
+    }
+}
+
+impl GradAlgo for Bptt<'_> {
+    fn name(&self) -> String {
+        "bptt".into()
+    }
+
+    fn reset(&mut self) {
+        self.s.iter_mut().for_each(|v| *v = 0.0);
+        self.spare_caches.append(&mut self.caches);
+        self.dl_dh.clear();
+    }
+
+    fn step(&mut self, theta: &[f32], x: &[f32]) {
+        let mut cache = self.spare_caches.pop().unwrap_or_else(|| self.cell.make_cache());
+        let mut s_next = vec![0.0; self.s.len()];
+        self.cell.forward(theta, &self.s, x, &mut cache, &mut s_next);
+        self.s = s_next;
+        self.caches.push(cache);
+        self.dl_dh.push(vec![0.0; self.cell.hidden_size()]);
+        self.last_flops = 0;
+    }
+
+    fn hidden(&self) -> &[f32] {
+        &self.s[..self.cell.hidden_size()]
+    }
+
+    fn state(&self) -> &[f32] {
+        &self.s
+    }
+
+    fn inject_loss(&mut self, dl_dh: &[f32], _g: &mut [f32]) {
+        let last = self.dl_dh.last_mut().expect("inject_loss before step");
+        for (a, b) in last.iter_mut().zip(dl_dh) {
+            *a += b;
+        }
+    }
+
+    fn flush(&mut self, theta: &[f32], g: &mut [f32]) {
+        let ss = self.cell.state_size();
+        let hs = self.cell.hidden_size();
+        let mut ds = vec![0.0f32; ss];
+        let mut ds_prev = vec![0.0f32; ss];
+        let mut flops = 0u64;
+        for t in (0..self.caches.len()).rev() {
+            // add this step's direct loss cotangent (hidden part of the state)
+            for (i, &v) in self.dl_dh[t].iter().enumerate() {
+                ds[i] += v;
+            }
+            self.cell.dynamics(theta, &self.caches[t], &mut self.d);
+            self.cell.immediate(&self.caches[t], &mut self.i_jac);
+            backward_step(&self.d, &self.i_jac, &ds, &mut ds_prev, g);
+            std::mem::swap(&mut ds, &mut ds_prev);
+            ds_prev.iter_mut().for_each(|v| *v = 0.0);
+            flops += 2 * (ss * ss) as u64 + 2 * self.i_jac.nnz() as u64 + hs as u64;
+        }
+        self.last_flops = flops;
+        self.spare_caches.append(&mut self.caches);
+        self.dl_dh.clear();
+    }
+
+    fn tracking_flops_per_step(&self) -> u64 {
+        // amortized: backward cost of one step (k² for Dᵀds + p for Iᵀds).
+        let ss = self.cell.state_size() as u64;
+        2 * ss * ss + 2 * self.i_jac.nnz() as u64
+    }
+
+    fn tracking_memory_floats(&self) -> usize {
+        // window of caches (T·k-style storage)
+        let per_cache: usize = self
+            .caches
+            .first()
+            .map(|c| c.bufs.iter().map(|b| b.len()).sum())
+            .unwrap_or(0);
+        self.caches.len() * per_cache + self.dl_dh.iter().map(|v| v.len()).sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::Arch;
+    use crate::tensor::rng::Pcg32;
+
+    /// Finite-difference check of the full BPTT gradient on a toy loss
+    /// L = Σ_t c_tᵀ h_t over a short sequence.
+    fn bptt_fd_check(arch: Arch, density: f64) {
+        let mut rng = Pcg32::seeded(500);
+        let k = 5;
+        let input = 3;
+        let steps = 4;
+        let cell = arch.build(k, input, density, &mut rng);
+        let mut theta = cell.init_params(&mut rng);
+        let xs: Vec<Vec<f32>> =
+            (0..steps).map(|_| (0..input).map(|_| rng.normal()).collect()).collect();
+        let cs: Vec<Vec<f32>> =
+            (0..steps).map(|_| (0..cell.hidden_size()).map(|_| rng.normal()).collect()).collect();
+
+        let loss = |theta: &[f32]| -> f32 {
+            let mut cache = cell.make_cache();
+            let mut s = vec![0.0; cell.state_size()];
+            let mut s2 = vec![0.0; cell.state_size()];
+            let mut total = 0.0f32;
+            for t in 0..steps {
+                cell.forward(theta, &s, &xs[t], &mut cache, &mut s2);
+                std::mem::swap(&mut s, &mut s2);
+                total += s[..cell.hidden_size()]
+                    .iter()
+                    .zip(&cs[t])
+                    .map(|(h, c)| h * c)
+                    .sum::<f32>();
+            }
+            total
+        };
+
+        let mut algo = Bptt::new(cell.as_ref());
+        let mut g = vec![0.0f32; cell.num_params()];
+        algo.reset();
+        for t in 0..steps {
+            algo.step(&theta, &xs[t]);
+            algo.inject_loss(&cs[t], &mut g);
+        }
+        algo.flush(&theta, &mut g);
+
+        let eps = 1e-2f32;
+        let mut checked = 0;
+        for j in (0..cell.num_params()).step_by((cell.num_params() / 25).max(1)) {
+            let orig = theta[j];
+            theta[j] = orig + eps;
+            let lp = loss(&theta);
+            theta[j] = orig - eps;
+            let lm = loss(&theta);
+            theta[j] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - g[j]).abs() < 5e-2 * (1.0 + fd.abs()),
+                "{arch:?} d={density} param {j}: fd={fd} an={}",
+                g[j]
+            );
+            checked += 1;
+        }
+        assert!(checked >= 10);
+    }
+
+    #[test]
+    fn gradient_matches_fd_vanilla() {
+        bptt_fd_check(Arch::Vanilla, 1.0);
+        bptt_fd_check(Arch::Vanilla, 0.4);
+    }
+
+    #[test]
+    fn gradient_matches_fd_gru() {
+        bptt_fd_check(Arch::Gru, 1.0);
+        bptt_fd_check(Arch::Gru, 0.4);
+    }
+
+    #[test]
+    fn gradient_matches_fd_lstm() {
+        bptt_fd_check(Arch::Lstm, 1.0);
+        bptt_fd_check(Arch::Lstm, 0.4);
+    }
+
+    #[test]
+    fn flush_clears_window() {
+        let mut rng = Pcg32::seeded(501);
+        let cell = Arch::Gru.build(4, 2, 1.0, &mut rng);
+        let theta = cell.init_params(&mut rng);
+        let mut algo = Bptt::new(cell.as_ref());
+        let mut g = vec![0.0; cell.num_params()];
+        for _ in 0..3 {
+            algo.step(&theta, &[0.1, -0.2]);
+        }
+        assert_eq!(algo.window_len(), 3);
+        algo.flush(&theta, &mut g);
+        assert_eq!(algo.window_len(), 0);
+        // memory accounting reflects the cleared window
+        assert_eq!(algo.tracking_memory_floats(), 0);
+    }
+
+    #[test]
+    fn t1_flush_equals_single_step_grad() {
+        // With T=1, flushing after each step only credits the immediate path.
+        let mut rng = Pcg32::seeded(502);
+        let cell = Arch::Vanilla.build(4, 2, 1.0, &mut rng);
+        let theta = cell.init_params(&mut rng);
+        let x = vec![0.3f32, -0.4];
+        let c = vec![1.0f32, -1.0, 0.5, 2.0];
+
+        let mut a1 = Bptt::new(cell.as_ref());
+        let mut g1 = vec![0.0; cell.num_params()];
+        a1.step(&theta, &x);
+        a1.inject_loss(&c, &mut g1);
+        a1.flush(&theta, &mut g1);
+
+        // same as a window of 1 inside a longer run
+        let mut a2 = Bptt::new(cell.as_ref());
+        let mut g2 = vec![0.0; cell.num_params()];
+        a2.step(&theta, &x);
+        a2.inject_loss(&c, &mut g2);
+        a2.flush(&theta, &mut g2);
+        for (u, v) in g1.iter().zip(g2.iter()) {
+            assert!((u - v).abs() < 1e-6);
+        }
+    }
+}

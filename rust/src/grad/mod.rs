@@ -1,0 +1,167 @@
+//! Gradient algorithms for recurrent parameters.
+//!
+//! All six methods of the paper share one interface ([`GradAlgo`]) so the
+//! trainer can swap them freely:
+//!
+//! | method       | paper | tracking state                   | per-step cost    |
+//! |--------------|-------|----------------------------------|------------------|
+//! | [`Bptt`]     | §2    | stored caches (window)           | `k² + p`         |
+//! | [`Rtrl`]     | §2.1  | dense `J (state×p)`              | `k²·p`           |
+//! | sparse RTRL  | §3.2  | dense `J̃`, CSR `D`              | `d·k²·p`         |
+//! | [`Snap`]     | §3    | `J̃` on the n-step pattern       | `Σ_j |R_j|²`     |
+//! | [`Uoro`]     | §4    | rank-1 `ũ ṽᵀ`                   | `k² + p`         |
+//! | [`Rflo`]     | §4    | `J` on the I-pattern             | `p`              |
+//!
+//! Protocol per timestep (the trainer drives this):
+//! 1. `step(theta, x)` — advance the recurrent state, update the tracking
+//!    quantities.
+//! 2. compute the loss on `hidden()`, backprop the readout to get
+//!    `∂L_t/∂h_t`, call `inject_loss(dl_dh, g)`.
+//! 3. (BPTT only) `flush(theta, g)` materializes deferred gradients — at
+//!    every step for fully-online T=1, or at the window boundary otherwise.
+//!
+//! `reset()` marks a sequence boundary: state and influence go to zero.
+//! Weight updates *between* steps leave the influence in place — that is the
+//! paper's "stale Jacobian" fully-online regime (§2.2).
+
+pub mod bptt;
+pub mod rtrl;
+pub mod snap;
+pub mod snap_topk;
+pub mod uoro;
+pub mod rflo;
+
+pub use bptt::Bptt;
+pub use rtrl::Rtrl;
+pub use snap::Snap;
+pub use snap_topk::SnapTopK;
+pub use uoro::Uoro;
+pub use rflo::Rflo;
+
+use crate::cells::Cell;
+use crate::tensor::rng::Pcg32;
+
+/// Uniform interface over the gradient algorithms.
+pub trait GradAlgo {
+    fn name(&self) -> String;
+
+    /// Sequence boundary: zero the recurrent state and all influence tracking.
+    fn reset(&mut self);
+
+    /// Advance one timestep with the current parameters.
+    fn step(&mut self, theta: &[f32], x: &[f32]);
+
+    /// Hidden vector exposed to the readout (length `cell.hidden_size()`).
+    fn hidden(&self) -> &[f32];
+
+    /// Full recurrent state (length `cell.state_size()`).
+    fn state(&self) -> &[f32];
+
+    /// Accumulate this step's loss gradient `∂L_t/∂h_t` into `g`
+    /// (length = number of tracked recurrent params). RTRL-family methods
+    /// contract against their influence estimate immediately; BPTT defers.
+    fn inject_loss(&mut self, dl_dh: &[f32], g: &mut [f32]);
+
+    /// Materialize any deferred gradient (BPTT backward). No-op for the
+    /// forward-mode methods.
+    fn flush(&mut self, theta: &[f32], g: &mut [f32]);
+
+    /// Exact FLOPs consumed by tracking (excl. cell forward) in the last
+    /// `step` + `inject_loss` pair — drives Table 3.
+    fn tracking_flops_per_step(&self) -> u64;
+
+    /// f32 slots held by the tracking state — drives Table 1's memory column.
+    fn tracking_memory_floats(&self) -> usize;
+}
+
+/// Which algorithm to build — the coordinator's config surface.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Method {
+    Bptt,
+    Rtrl,
+    /// RTRL with the §3.2 sparse-dynamics optimization.
+    SparseRtrl,
+    /// SnAp-n (n >= 1).
+    Snap(usize),
+    /// §3's alternative: full product + per-column top-k (ablation).
+    SnapTopK(usize),
+    Uoro,
+    Rflo,
+    /// Readout-only baseline: recurrent params left at init (Fig. 3's
+    /// surprisingly strong "not training the recurrent parameters" baseline).
+    Frozen,
+}
+
+impl Method {
+    pub fn name(&self) -> String {
+        match self {
+            Method::Bptt => "bptt".into(),
+            Method::Rtrl => "rtrl".into(),
+            Method::SparseRtrl => "sparse-rtrl".into(),
+            Method::Snap(n) => format!("snap-{n}"),
+            Method::SnapTopK(b) => format!("snap-topk-{b}"),
+            Method::Uoro => "uoro".into(),
+            Method::Rflo => "rflo".into(),
+            Method::Frozen => "frozen".into(),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Method> {
+        let s = s.to_ascii_lowercase();
+        match s.as_str() {
+            "bptt" => Some(Method::Bptt),
+            "rtrl" => Some(Method::Rtrl),
+            "sparse-rtrl" | "sparsertrl" => Some(Method::SparseRtrl),
+            "uoro" => Some(Method::Uoro),
+            "rflo" => Some(Method::Rflo),
+            "frozen" => Some(Method::Frozen),
+            _ => s
+                .strip_prefix("snap-topk-")
+                .and_then(|n| n.parse().ok())
+                .filter(|&n| n >= 1)
+                .map(Method::SnapTopK)
+                .or_else(|| s
+                .strip_prefix("snap-")
+                .or_else(|| s.strip_prefix("snap"))
+                .and_then(|n| n.parse().ok())
+                .filter(|&n| n >= 1)
+                .map(Method::Snap)),
+        }
+    }
+
+    /// Instantiate the algorithm for `cell`.
+    pub fn build<'c>(&self, cell: &'c dyn Cell, rng: &mut Pcg32) -> Box<dyn GradAlgo + 'c> {
+        match *self {
+            Method::Bptt | Method::Frozen => Box::new(Bptt::new(cell)),
+            Method::Rtrl => Box::new(Rtrl::new(cell, false)),
+            Method::SparseRtrl => Box::new(Rtrl::new(cell, true)),
+            Method::Snap(n) => Box::new(Snap::new(cell, n)),
+            Method::SnapTopK(b) => Box::new(SnapTopK::new(cell, b)),
+            Method::Uoro => Box::new(Uoro::new(cell, rng.split(0x714c))),
+            Method::Rflo => Box::new(Rflo::new(cell, 1.0)),
+        }
+    }
+
+    /// Frozen trains the readout only.
+    pub fn trains_recurrent(&self) -> bool {
+        !matches!(self, Method::Frozen)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_parsing() {
+        assert_eq!(Method::parse("bptt"), Some(Method::Bptt));
+        assert_eq!(Method::parse("snap-1"), Some(Method::Snap(1)));
+        assert_eq!(Method::parse("SnAp-3"), Some(Method::Snap(3)));
+        assert_eq!(Method::parse("snap-0"), None);
+        assert_eq!(Method::parse("uoro"), Some(Method::Uoro));
+        assert_eq!(Method::parse("nope"), None);
+        assert_eq!(Method::Snap(2).name(), "snap-2");
+        assert_eq!(Method::parse("snap-topk-4"), Some(Method::SnapTopK(4)));
+        assert_eq!(Method::SnapTopK(4).name(), "snap-topk-4");
+    }
+}

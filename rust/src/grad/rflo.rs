@@ -1,0 +1,171 @@
+//! RFLO — Random Feedback Local Online learning (Murray 2019; paper §4).
+//!
+//! "Amounts to accumulating I_t terms in equation 4 whilst ignoring the
+//! product D_t·J_{t-1}": `J_t = I_t + λ·J_{t-1}` on the SnAp-1 pattern.
+//! λ=1 is the paper's description; λ<1 (leaky accumulation, Murray's 1−1/τ)
+//! is available as an ablation. Strictly more biased than SnAp-1 — it drops
+//! even the diagonal dynamics term that SnAp-1 keeps (eq. 3).
+
+use crate::cells::Cell;
+use crate::grad::GradAlgo;
+use crate::sparse::coljac::ColJacobian;
+use crate::sparse::immediate::ImmediateJac;
+
+pub struct Rflo<'c> {
+    cell: &'c dyn Cell,
+    s: Vec<f32>,
+    j: ColJacobian,
+    i_jac: ImmediateJac,
+    cache: crate::cells::Cache,
+    lambda: f32,
+    last_flops: u64,
+}
+
+impl<'c> Rflo<'c> {
+    pub fn new(cell: &'c dyn Cell, lambda: f32) -> Self {
+        let i_jac = cell.immediate_structure();
+        let pattern = i_jac.pattern();
+        Rflo {
+            cell,
+            s: vec![0.0; cell.state_size()],
+            j: ColJacobian::from_pattern(&pattern),
+            i_jac,
+            cache: cell.make_cache(),
+            lambda,
+            last_flops: 0,
+        }
+    }
+}
+
+impl GradAlgo for Rflo<'_> {
+    fn name(&self) -> String {
+        if self.lambda == 1.0 {
+            "rflo".into()
+        } else {
+            format!("rflo-l{:.2}", self.lambda)
+        }
+    }
+
+    fn reset(&mut self) {
+        self.s.iter_mut().for_each(|v| *v = 0.0);
+        self.j.reset();
+    }
+
+    fn step(&mut self, theta: &[f32], x: &[f32]) {
+        let ss = self.cell.state_size();
+        let mut s_next = vec![0.0; ss];
+        self.cell.forward(theta, &self.s, x, &mut self.cache, &mut s_next);
+        self.s = s_next;
+        self.cell.immediate(&self.cache, &mut self.i_jac);
+        self.j.update_rflo(self.lambda, &self.i_jac);
+        self.last_flops = 2 * self.i_jac.nnz() as u64;
+    }
+
+    fn hidden(&self) -> &[f32] {
+        &self.s[..self.cell.hidden_size()]
+    }
+
+    fn state(&self) -> &[f32] {
+        &self.s
+    }
+
+    fn inject_loss(&mut self, dl_dh: &[f32], g: &mut [f32]) {
+        let ss = self.cell.state_size();
+        if dl_dh.len() == ss {
+            self.j.accumulate_grad(dl_dh, g);
+        } else {
+            let mut dlds = vec![0.0f32; ss];
+            dlds[..dl_dh.len()].copy_from_slice(dl_dh);
+            self.j.accumulate_grad(&dlds, g);
+        }
+        self.last_flops += 2 * self.j.nnz() as u64;
+    }
+
+    fn flush(&mut self, _theta: &[f32], _g: &mut [f32]) {}
+
+    fn tracking_flops_per_step(&self) -> u64 {
+        self.last_flops
+    }
+
+    fn tracking_memory_floats(&self) -> usize {
+        self.j.nnz()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::Arch;
+    use crate::grad::snap::Snap;
+    use crate::tensor::rng::Pcg32;
+
+    #[test]
+    fn single_step_equals_snap1() {
+        // With zero prior influence, one step of RFLO and SnAp-1 both give
+        // J = I, so their gradients coincide on the first step.
+        let mut rng = Pcg32::seeded(900);
+        let cell = Arch::Gru.build(6, 3, 0.5, &mut rng);
+        let theta = cell.init_params(&mut rng);
+        let x: Vec<f32> = (0..3).map(|_| rng.normal()).collect();
+        let c: Vec<f32> = (0..6).map(|_| rng.normal()).collect();
+
+        let mut rflo = Rflo::new(cell.as_ref(), 1.0);
+        let mut snap = Snap::new(cell.as_ref(), 1);
+        let mut g1 = vec![0.0f32; cell.num_params()];
+        let mut g2 = vec![0.0f32; cell.num_params()];
+        rflo.step(&theta, &x);
+        rflo.inject_loss(&c, &mut g1);
+        snap.step(&theta, &x);
+        snap.inject_loss(&c, &mut g2);
+        for (a, b) in g1.iter().zip(g2.iter()) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn multi_step_differs_from_snap1() {
+        // After ≥2 steps SnAp-1's diagonal D term makes them diverge.
+        let mut rng = Pcg32::seeded(901);
+        let cell = Arch::Gru.build(6, 3, 0.5, &mut rng);
+        let theta = cell.init_params(&mut rng);
+        let mut rflo = Rflo::new(cell.as_ref(), 1.0);
+        let mut snap = Snap::new(cell.as_ref(), 1);
+        let mut g1 = vec![0.0f32; cell.num_params()];
+        let mut g2 = vec![0.0f32; cell.num_params()];
+        for t in 0..4 {
+            let x: Vec<f32> = (0..3).map(|_| rng.normal()).collect();
+            let c: Vec<f32> = (0..6).map(|_| (t as f32) - 1.0).collect();
+            rflo.step(&theta, &x);
+            rflo.inject_loss(&c, &mut g1);
+            snap.step(&theta, &x);
+            snap.inject_loss(&c, &mut g2);
+        }
+        let diff: f32 = g1.iter().zip(&g2).map(|(a, b)| (a - b).abs()).sum();
+        assert!(diff > 1e-4, "RFLO should differ from SnAp-1 after multiple steps");
+    }
+
+    #[test]
+    fn memory_equals_param_count_for_gru() {
+        let mut rng = Pcg32::seeded(902);
+        let cell = Arch::Gru.build(8, 4, 0.5, &mut rng);
+        let rflo = Rflo::new(cell.as_ref(), 1.0);
+        assert_eq!(rflo.tracking_memory_floats(), cell.num_params());
+    }
+
+    #[test]
+    fn leaky_variant_decays_influence() {
+        let mut rng = Pcg32::seeded(903);
+        let cell = Arch::Vanilla.build(4, 2, 1.0, &mut rng);
+        let theta = cell.init_params(&mut rng);
+        let mut r1 = Rflo::new(cell.as_ref(), 1.0);
+        let mut r05 = Rflo::new(cell.as_ref(), 0.5);
+        for _ in 0..10 {
+            let x = vec![0.5, -0.5];
+            r1.step(&theta, &x);
+            r05.step(&theta, &x);
+        }
+        let n1: f32 = r1.j.to_dense().norm();
+        let n05: f32 = r05.j.to_dense().norm();
+        assert!(n05 < n1, "leaky RFLO should have smaller influence norm");
+    }
+}

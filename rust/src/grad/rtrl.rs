@@ -1,0 +1,233 @@
+//! Real-Time Recurrent Learning (paper §2.1) and its sparse-network
+//! optimization (§3.2).
+//!
+//! Tracks the exact influence matrix `J_t = ∂s_t/∂θ` (state × p, dense) via
+//! `J_t = I_t + D_t·J_{t-1}`. With `sparse_dynamics`, `D_t` is applied as a
+//! CSR operator on its structural pattern — eq. 4's `J̃_t = Ĩ_t + D_t·J̃_{t-1}`
+//! with cost `d·(d·k²·p)` instead of `k²·p` (the column compression onto kept
+//! parameters is already built into the cells' θ layout).
+
+use crate::cells::Cell;
+use crate::grad::GradAlgo;
+use crate::sparse::csr::Csr;
+use crate::sparse::immediate::ImmediateJac;
+use crate::tensor::matrix::Matrix;
+use crate::tensor::ops::matmul_into;
+
+pub struct Rtrl<'c> {
+    cell: &'c dyn Cell,
+    s: Vec<f32>,
+    /// influence matrix J (state × p)
+    j: Matrix,
+    j_next: Matrix,
+    d: Matrix,
+    d_csr: Option<Csr>,
+    i_jac: ImmediateJac,
+    cache: crate::cells::Cache,
+    sparse_dynamics: bool,
+    last_flops: u64,
+}
+
+impl<'c> Rtrl<'c> {
+    pub fn new(cell: &'c dyn Cell, sparse_dynamics: bool) -> Self {
+        let ss = cell.state_size();
+        let p = cell.num_params();
+        let d_csr = if sparse_dynamics {
+            Some(Csr::from_pattern(&cell.dynamics_pattern()))
+        } else {
+            None
+        };
+        Rtrl {
+            cell,
+            s: vec![0.0; ss],
+            j: Matrix::zeros(ss, p),
+            j_next: Matrix::zeros(ss, p),
+            d: Matrix::zeros(ss, ss),
+            d_csr,
+            i_jac: cell.immediate_structure(),
+            cache: cell.make_cache(),
+            sparse_dynamics,
+            last_flops: 0,
+        }
+    }
+
+    /// Read-only view of the exact influence matrix (Figure 6 / Table 4
+    /// analysis).
+    pub fn influence(&self) -> &Matrix {
+        &self.j
+    }
+}
+
+impl GradAlgo for Rtrl<'_> {
+    fn name(&self) -> String {
+        if self.sparse_dynamics {
+            "sparse-rtrl".into()
+        } else {
+            "rtrl".into()
+        }
+    }
+
+    fn reset(&mut self) {
+        self.s.iter_mut().for_each(|v| *v = 0.0);
+        self.j.fill(0.0);
+    }
+
+    fn step(&mut self, theta: &[f32], x: &[f32]) {
+        let ss = self.cell.state_size();
+        let p = self.cell.num_params();
+        let mut s_next = vec![0.0; ss];
+        self.cell.forward(theta, &self.s, x, &mut self.cache, &mut s_next);
+        self.s = s_next;
+        self.cell.dynamics(theta, &self.cache, &mut self.d);
+        self.cell.immediate(&self.cache, &mut self.i_jac);
+
+        // J_next = D · J
+        if let Some(d_csr) = &mut self.d_csr {
+            d_csr.refresh_from_dense(&self.d);
+            d_csr.spmm_into(&self.j, &mut self.j_next, false);
+            self.last_flops = 2 * d_csr.nnz() as u64 * p as u64;
+        } else {
+            matmul_into(&self.d, &self.j, &mut self.j_next, false);
+            self.last_flops = 2 * (ss * ss) as u64 * p as u64;
+        }
+        // J_next += I (scatter of ≤2 entries per column)
+        for jcol in 0..p {
+            let (rows, vals) = self.i_jac.col(jcol);
+            for (&i, &v) in rows.iter().zip(vals) {
+                self.j_next.add_at(i as usize, jcol, v);
+            }
+        }
+        self.last_flops += self.i_jac.nnz() as u64;
+        std::mem::swap(&mut self.j, &mut self.j_next);
+    }
+
+    fn hidden(&self) -> &[f32] {
+        &self.s[..self.cell.hidden_size()]
+    }
+
+    fn state(&self) -> &[f32] {
+        &self.s
+    }
+
+    fn inject_loss(&mut self, dl_dh: &[f32], g: &mut [f32]) {
+        // g += (∂L/∂s)·J, with ∂L/∂s = [dl_dh ; 0] (loss reads h only).
+        debug_assert_eq!(dl_dh.len(), self.cell.hidden_size());
+        for (i, &di) in dl_dh.iter().enumerate() {
+            if di != 0.0 {
+                crate::tensor::ops::axpy_slice(g, di, self.j.row(i));
+            }
+        }
+        self.last_flops += 2 * dl_dh.len() as u64 * self.cell.num_params() as u64;
+    }
+
+    fn flush(&mut self, _theta: &[f32], _g: &mut [f32]) {}
+
+    fn tracking_flops_per_step(&self) -> u64 {
+        self.last_flops
+    }
+
+    fn tracking_memory_floats(&self) -> usize {
+        self.j.len() + self.d_csr.as_ref().map(|c| c.nnz()).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::Arch;
+    use crate::grad::bptt::Bptt;
+    use crate::tensor::rng::Pcg32;
+
+    /// The fundamental identity: RTRL and BPTT compute the *same* gradient
+    /// (eq. 1 == eq. 2) when the parameters are held fixed over the sequence.
+    fn rtrl_equals_bptt(arch: Arch, density: f64, sparse_dynamics: bool) {
+        let mut rng = Pcg32::seeded(600);
+        let (k, input, steps) = (6, 3, 7);
+        let cell = arch.build(k, input, density, &mut rng);
+        let theta = cell.init_params(&mut rng);
+        let xs: Vec<Vec<f32>> =
+            (0..steps).map(|_| (0..input).map(|_| rng.normal()).collect()).collect();
+        let cs: Vec<Vec<f32>> =
+            (0..steps).map(|_| (0..cell.hidden_size()).map(|_| rng.normal()).collect()).collect();
+
+        let mut rtrl = Rtrl::new(cell.as_ref(), sparse_dynamics);
+        let mut g_rtrl = vec![0.0f32; cell.num_params()];
+        for t in 0..steps {
+            rtrl.step(&theta, &xs[t]);
+            rtrl.inject_loss(&cs[t], &mut g_rtrl);
+        }
+
+        let mut bptt = Bptt::new(cell.as_ref());
+        let mut g_bptt = vec![0.0f32; cell.num_params()];
+        for t in 0..steps {
+            bptt.step(&theta, &xs[t]);
+            bptt.inject_loss(&cs[t], &mut g_bptt);
+        }
+        bptt.flush(&theta, &mut g_bptt);
+
+        let scale = g_bptt.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-6);
+        for (j, (a, b)) in g_rtrl.iter().zip(g_bptt.iter()).enumerate() {
+            assert!(
+                (a - b).abs() / scale < 1e-4,
+                "{arch:?} sd={sparse_dynamics} param {j}: rtrl={a} bptt={b}"
+            );
+        }
+    }
+
+    #[test]
+    fn rtrl_equals_bptt_vanilla() {
+        rtrl_equals_bptt(Arch::Vanilla, 1.0, false);
+        rtrl_equals_bptt(Arch::Vanilla, 0.4, false);
+    }
+
+    #[test]
+    fn rtrl_equals_bptt_gru() {
+        rtrl_equals_bptt(Arch::Gru, 1.0, false);
+        rtrl_equals_bptt(Arch::Gru, 0.4, false);
+    }
+
+    #[test]
+    fn rtrl_equals_bptt_lstm() {
+        rtrl_equals_bptt(Arch::Lstm, 1.0, false);
+        rtrl_equals_bptt(Arch::Lstm, 0.4, false);
+    }
+
+    #[test]
+    fn sparse_dynamics_is_exact() {
+        // §3.2: the sparse optimization changes cost, not the result.
+        rtrl_equals_bptt(Arch::Vanilla, 0.3, true);
+        rtrl_equals_bptt(Arch::Gru, 0.3, true);
+        rtrl_equals_bptt(Arch::Lstm, 0.3, true);
+    }
+
+    #[test]
+    fn reset_zeroes_influence() {
+        let mut rng = Pcg32::seeded(601);
+        let cell = Arch::Gru.build(4, 2, 1.0, &mut rng);
+        let theta = cell.init_params(&mut rng);
+        let mut rtrl = Rtrl::new(cell.as_ref(), false);
+        rtrl.step(&theta, &[1.0, -1.0]);
+        assert!(rtrl.influence().norm() > 0.0);
+        rtrl.reset();
+        assert_eq!(rtrl.influence().norm(), 0.0);
+        assert!(rtrl.state().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn sparse_flops_less_than_dense() {
+        let mut rng = Pcg32::seeded(602);
+        let cell = Arch::Vanilla.build(16, 4, 0.2, &mut rng);
+        let theta = cell.init_params(&mut rng);
+        let x = vec![0.0f32; 4];
+        let mut dense = Rtrl::new(cell.as_ref(), false);
+        let mut sparse = Rtrl::new(cell.as_ref(), true);
+        dense.step(&theta, &x);
+        sparse.step(&theta, &x);
+        assert!(
+            sparse.tracking_flops_per_step() < dense.tracking_flops_per_step() / 2,
+            "sparse={} dense={}",
+            sparse.tracking_flops_per_step(),
+            dense.tracking_flops_per_step()
+        );
+    }
+}

@@ -1,0 +1,247 @@
+//! SnAp — the Sparse n-Step Approximation (paper §3), the main contribution.
+//!
+//! Keeps only the influence-matrix entries that become nonzero within `n`
+//! steps of the recurrent core: `P_n = pat(I) ∪ pat(D)·P_{n-1}`. The tracked
+//! Jacobian lives in a fixed column-compressed layout ([`ColJacobian`]) and
+//! the per-step update restricts `D_t·J_{t-1}` to that pattern.
+//!
+//! * SnAp-1 is effectively diagonal (one kept row per column for
+//!   Vanilla/GRU) and costs no more than backprop (§3.1).
+//! * SnAp-n for sparse nets is strictly less biased and strictly more
+//!   expensive as n grows (§3.3); once `P_n` saturates it *is* sparse RTRL.
+
+use crate::cells::Cell;
+use crate::grad::GradAlgo;
+use crate::sparse::coljac::ColJacobian;
+use crate::sparse::immediate::ImmediateJac;
+use crate::sparse::pattern::{snap_pattern, Pattern};
+use crate::tensor::matrix::Matrix;
+
+pub struct Snap<'c> {
+    cell: &'c dyn Cell,
+    n: usize,
+    s: Vec<f32>,
+    j: ColJacobian,
+    d: Matrix,
+    i_jac: ImmediateJac,
+    cache: crate::cells::Cache,
+    pattern_nnz: usize,
+    last_flops: u64,
+}
+
+impl<'c> Snap<'c> {
+    pub fn new(cell: &'c dyn Cell, n: usize) -> Self {
+        assert!(n >= 1, "SnAp order must be >= 1");
+        let i_jac = cell.immediate_structure();
+        let pattern = snap_pattern(&cell.dynamics_pattern(), &i_jac.pattern(), n);
+        Self::with_pattern(cell, n, &pattern)
+    }
+
+    /// Build with an explicit influence pattern (used by analyses that study
+    /// pattern choices, e.g. Table 4's kept-mass accounting).
+    pub fn with_pattern(cell: &'c dyn Cell, n: usize, pattern: &Pattern) -> Self {
+        let ss = cell.state_size();
+        Snap {
+            cell,
+            n,
+            s: vec![0.0; ss],
+            j: ColJacobian::from_pattern(pattern),
+            d: Matrix::zeros(ss, ss),
+            i_jac: cell.immediate_structure(),
+            cache: cell.make_cache(),
+            pattern_nnz: pattern.nnz(),
+            last_flops: 0,
+        }
+    }
+
+    pub fn order(&self) -> usize {
+        self.n
+    }
+
+    /// Sparsity of the tracked Jacobian (Table 3's "SnAp-n J Sparsity" rows).
+    pub fn jacobian_sparsity(&self) -> f64 {
+        1.0 - self.j.density()
+    }
+
+    /// Read-only view of the approximate influence (Figure 6 analysis).
+    pub fn influence(&self) -> &ColJacobian {
+        &self.j
+    }
+}
+
+impl GradAlgo for Snap<'_> {
+    fn name(&self) -> String {
+        format!("snap-{}", self.n)
+    }
+
+    fn reset(&mut self) {
+        self.s.iter_mut().for_each(|v| *v = 0.0);
+        self.j.reset();
+    }
+
+    fn step(&mut self, theta: &[f32], x: &[f32]) {
+        let ss = self.cell.state_size();
+        let mut s_next = vec![0.0; ss];
+        self.cell.forward(theta, &self.s, x, &mut self.cache, &mut s_next);
+        self.s = s_next;
+        self.cell.dynamics(theta, &self.cache, &mut self.d);
+        self.cell.immediate(&self.cache, &mut self.i_jac);
+        self.j.update(&self.d, &self.i_jac);
+        self.last_flops = self.j.update_flops(self.i_jac.nnz());
+    }
+
+    fn hidden(&self) -> &[f32] {
+        &self.s[..self.cell.hidden_size()]
+    }
+
+    fn state(&self) -> &[f32] {
+        &self.s
+    }
+
+    fn inject_loss(&mut self, dl_dh: &[f32], g: &mut [f32]) {
+        debug_assert_eq!(dl_dh.len(), self.cell.hidden_size());
+        let ss = self.cell.state_size();
+        if dl_dh.len() == ss {
+            self.j.accumulate_grad(dl_dh, g);
+        } else {
+            let mut dlds = vec![0.0f32; ss];
+            dlds[..dl_dh.len()].copy_from_slice(dl_dh);
+            self.j.accumulate_grad(&dlds, g);
+        }
+        self.last_flops += 2 * self.pattern_nnz as u64;
+    }
+
+    fn flush(&mut self, _theta: &[f32], _g: &mut [f32]) {}
+
+    fn tracking_flops_per_step(&self) -> u64 {
+        self.last_flops
+    }
+
+    fn tracking_memory_floats(&self) -> usize {
+        self.j.nnz()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::Arch;
+    use crate::grad::rtrl::Rtrl;
+    use crate::sparse::pattern::saturation_order;
+    use crate::tensor::rng::Pcg32;
+
+    fn run_both(
+        arch: Arch,
+        density: f64,
+        n: usize,
+        steps: usize,
+        seed: u64,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Pcg32::seeded(seed);
+        let (k, input) = (6, 3);
+        let cell = arch.build(k, input, density, &mut rng);
+        let theta = cell.init_params(&mut rng);
+        let xs: Vec<Vec<f32>> =
+            (0..steps).map(|_| (0..input).map(|_| rng.normal()).collect()).collect();
+        let cs: Vec<Vec<f32>> =
+            (0..steps).map(|_| (0..cell.hidden_size()).map(|_| rng.normal()).collect()).collect();
+
+        let mut snap = Snap::new(cell.as_ref(), n);
+        let mut g_snap = vec![0.0f32; cell.num_params()];
+        let mut rtrl = Rtrl::new(cell.as_ref(), false);
+        let mut g_rtrl = vec![0.0f32; cell.num_params()];
+        for t in 0..steps {
+            snap.step(&theta, &xs[t]);
+            snap.inject_loss(&cs[t], &mut g_snap);
+            rtrl.step(&theta, &xs[t]);
+            rtrl.inject_loss(&cs[t], &mut g_rtrl);
+        }
+        (g_snap, g_rtrl)
+    }
+
+    #[test]
+    fn snap_at_saturation_equals_rtrl() {
+        // Paper §1: "SnAp becomes equivalent to RTRL when n is large."
+        for arch in [Arch::Vanilla, Arch::Gru, Arch::Lstm] {
+            let mut rng = Pcg32::seeded(700);
+            let cell = arch.build(6, 3, 0.35, &mut rng);
+            let sat = saturation_order(
+                &cell.dynamics_pattern(),
+                &cell.immediate_structure().pattern(),
+                64,
+            );
+            let (g_snap, g_rtrl) = run_both(arch, 0.35, sat, 6, 700);
+            let scale = g_rtrl.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-6);
+            for (a, b) in g_snap.iter().zip(g_rtrl.iter()) {
+                assert!((a - b).abs() / scale < 1e-4, "{arch:?} sat={sat}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn snap2_on_dense_gru_equals_rtrl() {
+        // §3.1: "for dense networks SnAp-2 already reduces to full RTRL."
+        let (g_snap, g_rtrl) = run_both(Arch::Gru, 1.0, 2, 5, 701);
+        let scale = g_rtrl.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-6);
+        for (a, b) in g_snap.iter().zip(g_rtrl.iter()) {
+            assert!((a - b).abs() / scale < 1e-4);
+        }
+    }
+
+    #[test]
+    fn bias_decreases_with_n() {
+        // SnAp-n is strictly less biased as n increases (§3.3): compare
+        // cosine distance to the exact RTRL gradient.
+        let mut dist = Vec::new();
+        for n in 1..=3 {
+            let (g_snap, g_rtrl) = run_both(Arch::Gru, 0.25, n, 8, 702);
+            let dot: f32 = g_snap.iter().zip(&g_rtrl).map(|(a, b)| a * b).sum();
+            let na: f32 = g_snap.iter().map(|a| a * a).sum::<f32>().sqrt();
+            let nb: f32 = g_rtrl.iter().map(|b| b * b).sum::<f32>().sqrt();
+            dist.push(1.0 - dot / (na * nb).max(1e-12));
+        }
+        assert!(
+            dist[0] >= dist[1] - 1e-5 && dist[1] >= dist[2] - 1e-5,
+            "cosine distance should shrink with n: {dist:?}"
+        );
+        assert!(dist[2] < 0.05, "snap-3 should be close to exact: {dist:?}");
+    }
+
+    #[test]
+    fn snap1_pattern_nnz_equals_params_for_gru() {
+        let mut rng = Pcg32::seeded(703);
+        let cell = Arch::Gru.build(8, 4, 0.5, &mut rng);
+        let snap = Snap::new(cell.as_ref(), 1);
+        // One kept row per column (Engel GRU) → nnz == p.
+        assert_eq!(snap.influence().nnz(), cell.num_params());
+    }
+
+    #[test]
+    fn jacobian_sparsity_decreases_with_n() {
+        let mut rng = Pcg32::seeded(704);
+        let cell = Arch::Gru.build(12, 4, 0.25, &mut rng);
+        let s1 = Snap::new(cell.as_ref(), 1).jacobian_sparsity();
+        let s2 = Snap::new(cell.as_ref(), 2).jacobian_sparsity();
+        let s3 = Snap::new(cell.as_ref(), 3).jacobian_sparsity();
+        assert!(s1 > s2 && s2 > s3, "{s1} {s2} {s3}");
+    }
+
+    #[test]
+    fn stale_jacobian_persists_across_updates() {
+        // §2.2: after a weight update the influence is NOT reset.
+        let mut rng = Pcg32::seeded(705);
+        let cell = Arch::Gru.build(5, 2, 1.0, &mut rng);
+        let mut theta = cell.init_params(&mut rng);
+        let mut snap = Snap::new(cell.as_ref(), 1);
+        snap.step(&theta, &[0.5, -0.5]);
+        let norm_before: f32 =
+            snap.influence().to_dense().norm();
+        // simulate an optimizer update
+        for v in theta.iter_mut() {
+            *v += 0.01;
+        }
+        snap.step(&theta, &[0.1, 0.2]);
+        let norm_after: f32 = snap.influence().to_dense().norm();
+        assert!(norm_before > 0.0 && norm_after > 0.0);
+    }
+}

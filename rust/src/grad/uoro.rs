@@ -1,0 +1,227 @@
+//! UORO — Unbiased Online Recurrent Optimization (Tallec & Ollivier 2018;
+//! paper §1/§4's stochastic baseline).
+//!
+//! Maintains a rank-1 estimate `J_t ≈ ũ_t ṽ_tᵀ` that is unbiased over the
+//! random sign vectors ν:
+//!
+//! ```text
+//! ũ' = ρ0·(D·ũ) + ρ1·ν
+//! ṽ' = ṽ/ρ0 + (Iᵀν)/ρ1
+//! ```
+//!
+//! with the variance-minimizing scalars
+//! `ρ0 = √(‖ṽ‖/‖D·ũ‖)`, `ρ1 = √(‖Iᵀν‖/‖ν‖)`.
+//! Cost is `O(k² + p)` per step — same order as TBPTT — but the estimator's
+//! noise is what the paper's Fig. 3 exposes.
+
+use crate::cells::Cell;
+use crate::grad::GradAlgo;
+use crate::sparse::immediate::ImmediateJac;
+use crate::tensor::matrix::Matrix;
+use crate::tensor::ops::{dot, matvec};
+use crate::tensor::rng::Pcg32;
+
+pub struct Uoro<'c> {
+    cell: &'c dyn Cell,
+    s: Vec<f32>,
+    u: Vec<f32>,
+    v: Vec<f32>,
+    d: Matrix,
+    i_jac: ImmediateJac,
+    cache: crate::cells::Cache,
+    rng: Pcg32,
+    eps: f32,
+    last_flops: u64,
+}
+
+impl<'c> Uoro<'c> {
+    pub fn new(cell: &'c dyn Cell, rng: Pcg32) -> Self {
+        let ss = cell.state_size();
+        let p = cell.num_params();
+        Uoro {
+            cell,
+            s: vec![0.0; ss],
+            u: vec![0.0; ss],
+            v: vec![0.0; p],
+            d: Matrix::zeros(ss, ss),
+            i_jac: cell.immediate_structure(),
+            cache: cell.make_cache(),
+            rng,
+            eps: 1e-7,
+            last_flops: 0,
+        }
+    }
+
+    /// Current rank-1 factors (tests / diagnostics).
+    pub fn factors(&self) -> (&[f32], &[f32]) {
+        (&self.u, &self.v)
+    }
+}
+
+fn norm(xs: &[f32]) -> f32 {
+    dot(xs, xs).sqrt()
+}
+
+impl GradAlgo for Uoro<'_> {
+    fn name(&self) -> String {
+        "uoro".into()
+    }
+
+    fn reset(&mut self) {
+        self.s.iter_mut().for_each(|v| *v = 0.0);
+        self.u.iter_mut().for_each(|v| *v = 0.0);
+        self.v.iter_mut().for_each(|v| *v = 0.0);
+    }
+
+    fn step(&mut self, theta: &[f32], x: &[f32]) {
+        let ss = self.cell.state_size();
+        let p = self.cell.num_params();
+        let mut s_next = vec![0.0; ss];
+        self.cell.forward(theta, &self.s, x, &mut self.cache, &mut s_next);
+        self.s = s_next;
+        self.cell.dynamics(theta, &self.cache, &mut self.d);
+        self.cell.immediate(&self.cache, &mut self.i_jac);
+
+        // ν ∈ {±1}^state
+        let nu: Vec<f32> = (0..ss).map(|_| self.rng.sign()).collect();
+        let du = matvec(&self.d, &self.u);
+        let mut itnu = vec![0.0f32; p];
+        self.i_jac.matvec_t_acc(&nu, &mut itnu);
+
+        let rho0 = ((norm(&self.v) + self.eps) / (norm(&du) + self.eps)).sqrt();
+        let rho1 = ((norm(&itnu) + self.eps) / (norm(&nu) + self.eps)).sqrt();
+
+        for i in 0..ss {
+            self.u[i] = rho0 * du[i] + rho1 * nu[i];
+        }
+        for j in 0..p {
+            self.v[j] = self.v[j] / rho0 + itnu[j] / rho1;
+        }
+        self.last_flops = 2 * (ss * ss) as u64 + 2 * self.i_jac.nnz() as u64 + 4 * (ss + p) as u64;
+    }
+
+    fn hidden(&self) -> &[f32] {
+        &self.s[..self.cell.hidden_size()]
+    }
+
+    fn state(&self) -> &[f32] {
+        &self.s
+    }
+
+    fn inject_loss(&mut self, dl_dh: &[f32], g: &mut [f32]) {
+        // g += (dl_ds·ũ)·ṽ
+        let coef = dl_dh.iter().zip(self.u.iter()).map(|(a, b)| a * b).sum::<f32>();
+        crate::tensor::ops::axpy_slice(g, coef, &self.v);
+        self.last_flops += 2 * (dl_dh.len() + g.len()) as u64;
+    }
+
+    fn flush(&mut self, _theta: &[f32], _g: &mut [f32]) {}
+
+    fn tracking_flops_per_step(&self) -> u64 {
+        self.last_flops
+    }
+
+    fn tracking_memory_floats(&self) -> usize {
+        self.u.len() + self.v.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::Arch;
+    use crate::grad::rtrl::Rtrl;
+    use crate::tensor::rng::Pcg32;
+
+    /// UORO is *unbiased*: averaging the gradient estimate over many sign
+    /// draws must converge to the exact RTRL gradient.
+    #[test]
+    fn mean_estimate_approaches_rtrl() {
+        let mut rng = Pcg32::seeded(800);
+        let (k, input, steps) = (4, 2, 3);
+        let cell = Arch::Vanilla.build(k, input, 1.0, &mut rng);
+        let theta = cell.init_params(&mut rng);
+        let xs: Vec<Vec<f32>> =
+            (0..steps).map(|_| (0..input).map(|_| rng.normal()).collect()).collect();
+        let cs: Vec<Vec<f32>> =
+            (0..steps).map(|_| (0..k).map(|_| rng.normal()).collect()).collect();
+
+        let mut rtrl = Rtrl::new(cell.as_ref(), false);
+        let mut g_exact = vec![0.0f32; cell.num_params()];
+        for t in 0..steps {
+            rtrl.step(&theta, &xs[t]);
+            rtrl.inject_loss(&cs[t], &mut g_exact);
+        }
+
+        let trials = 4000;
+        let mut g_mean = vec![0.0f64; cell.num_params()];
+        for trial in 0..trials {
+            let mut uoro = Uoro::new(cell.as_ref(), Pcg32::seeded(9000 + trial));
+            let mut g = vec![0.0f32; cell.num_params()];
+            for t in 0..steps {
+                uoro.step(&theta, &xs[t]);
+                uoro.inject_loss(&cs[t], &mut g);
+            }
+            for (m, x) in g_mean.iter_mut().zip(&g) {
+                *m += *x as f64 / trials as f64;
+            }
+        }
+        // Compare direction: cosine similarity of the mean to the exact grad.
+        let dot: f64 = g_mean.iter().zip(&g_exact).map(|(a, &b)| a * b as f64).sum();
+        let na: f64 = g_mean.iter().map(|a| a * a).sum::<f64>().sqrt();
+        let nb: f64 = g_exact.iter().map(|&b| (b as f64) * (b as f64)).sum::<f64>().sqrt();
+        let cos = dot / (na * nb).max(1e-12);
+        assert!(cos > 0.9, "mean UORO estimate should align with RTRL: cos={cos}");
+    }
+
+    #[test]
+    fn single_estimate_is_noisy() {
+        // The known pathology (§1): one-sample UORO is far from the truth.
+        let mut rng = Pcg32::seeded(801);
+        let (k, input, steps) = (4, 2, 3);
+        let cell = Arch::Vanilla.build(k, input, 1.0, &mut rng);
+        let theta = cell.init_params(&mut rng);
+        let xs: Vec<Vec<f32>> =
+            (0..steps).map(|_| (0..input).map(|_| rng.normal()).collect()).collect();
+        let cs: Vec<Vec<f32>> =
+            (0..steps).map(|_| (0..k).map(|_| rng.normal()).collect()).collect();
+
+        let mut rtrl = Rtrl::new(cell.as_ref(), false);
+        let mut g_exact = vec![0.0f32; cell.num_params()];
+        let mut uoro = Uoro::new(cell.as_ref(), Pcg32::seeded(123));
+        let mut g_est = vec![0.0f32; cell.num_params()];
+        for t in 0..steps {
+            rtrl.step(&theta, &xs[t]);
+            rtrl.inject_loss(&cs[t], &mut g_exact);
+            uoro.step(&theta, &xs[t]);
+            uoro.inject_loss(&cs[t], &mut g_est);
+        }
+        let err: f32 =
+            g_est.iter().zip(&g_exact).map(|(a, b)| (a - b) * (a - b)).sum::<f32>().sqrt();
+        let nrm: f32 = g_exact.iter().map(|b| b * b).sum::<f32>().sqrt();
+        assert!(err / nrm.max(1e-9) > 0.1, "one-sample UORO is expected to be noisy");
+    }
+
+    #[test]
+    fn memory_is_k_plus_p() {
+        let mut rng = Pcg32::seeded(802);
+        let cell = Arch::Gru.build(10, 4, 1.0, &mut rng);
+        let uoro = Uoro::new(cell.as_ref(), Pcg32::seeded(1));
+        assert_eq!(uoro.tracking_memory_floats(), cell.state_size() + cell.num_params());
+    }
+
+    #[test]
+    fn factors_stay_finite_over_long_runs() {
+        let mut rng = Pcg32::seeded(803);
+        let cell = Arch::Gru.build(8, 3, 1.0, &mut rng);
+        let theta = cell.init_params(&mut rng);
+        let mut uoro = Uoro::new(cell.as_ref(), Pcg32::seeded(7));
+        for _ in 0..500 {
+            let x: Vec<f32> = (0..3).map(|_| rng.normal()).collect();
+            uoro.step(&theta, &x);
+        }
+        let (u, v) = uoro.factors();
+        assert!(u.iter().all(|a| a.is_finite()));
+        assert!(v.iter().all(|a| a.is_finite()));
+    }
+}

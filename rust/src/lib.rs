@@ -1,0 +1,37 @@
+//! # snap-rtrl
+//!
+//! Full-system reproduction of **"A Practical Sparse Approximation for Real
+//! Time Recurrent Learning"** (Menick et al., 2020).
+//!
+//! The library is an online RNN-training framework:
+//!
+//! * [`tensor`] — dense matrix kernels + deterministic RNG.
+//! * [`sparse`] — sparsity patterns, CSR, SnAp's n-step influence pattern and
+//!   the compressed influence matrix.
+//! * [`cells`] — Vanilla RNN / GRU (Engel variant) / LSTM with analytic
+//!   dynamics (`D_t`) and immediate (`I_t`) Jacobians.
+//! * [`grad`] — the six gradient algorithms of the paper: BPTT, full RTRL,
+//!   sparsity-optimized RTRL, SnAp-n, UORO, RFLO.
+//! * [`models`] — char-LM and Copy-task heads (readout MLP + softmax).
+//! * [`data`] — byte corpora and the Copy-task curriculum generator.
+//! * [`opt`] — SGD / Adam.
+//! * [`train`] — online & truncated training loops, pruning, FLOP accounting.
+//! * [`coordinator`] — CLI, experiment registry (one entry per paper
+//!   table/figure), reporting.
+//! * [`runtime`] — XLA/PJRT client that loads the AOT artifacts produced by
+//!   `python/compile/aot.py` and executes them from the Rust hot path.
+//! * [`testing`] — deterministic property-testing mini-framework (offline
+//!   stand-in for proptest).
+
+pub mod benchutil;
+pub mod cells;
+pub mod coordinator;
+pub mod data;
+pub mod grad;
+pub mod models;
+pub mod opt;
+pub mod runtime;
+pub mod sparse;
+pub mod tensor;
+pub mod testing;
+pub mod train;

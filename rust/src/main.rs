@@ -1,0 +1,23 @@
+//! `repro` — the coordinator CLI. See `repro help` / coordinator::USAGE.
+
+use snap_rtrl::coordinator::{dispatch, Args, USAGE};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        println!("{USAGE}");
+        std::process::exit(2);
+    }
+    match Args::parse(&argv) {
+        Ok(args) => {
+            if let Err(e) = dispatch(&args) {
+                eprintln!("error: {e:#}");
+                std::process::exit(1);
+            }
+        }
+        Err(msg) => {
+            eprintln!("argument error: {msg}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}

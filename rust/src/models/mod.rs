@@ -1,0 +1,69 @@
+//! Task heads: fixed random token embedding + the readout MLP.
+//!
+//! The recurrent core consumes a dense input vector. For byte-level language
+//! modelling we embed tokens with a **frozen random embedding** (the paper
+//! does not specify its input encoding; a frozen projection keeps every
+//! trained parameter inside either the recurrent core — handled by the RTRL
+//! family — or the readout — handled by exact backprop, so the comparison
+//! between gradient algorithms stays clean). One-hot encoding is available
+//! for the small-alphabet Copy task.
+
+pub mod readout;
+
+pub use readout::{Readout, ReadoutCache, ReadoutGrad};
+
+use crate::tensor::matrix::Matrix;
+use crate::tensor::rng::Pcg32;
+
+/// Frozen random embedding table (vocab × dim).
+pub struct Embedding {
+    table: Matrix,
+}
+
+impl Embedding {
+    pub fn new(vocab: usize, dim: usize, rng: &mut Pcg32) -> Self {
+        let std = (1.0 / (dim as f64).sqrt()) as f32;
+        Embedding { table: Matrix::from_fn(vocab, dim, |_, _| rng.normal() * std) }
+    }
+
+    /// One-hot "embedding" (identity table).
+    pub fn one_hot(vocab: usize) -> Self {
+        Embedding { table: Matrix::identity(vocab) }
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.table.cols()
+    }
+
+    #[inline]
+    pub fn vocab(&self) -> usize {
+        self.table.rows()
+    }
+
+    #[inline]
+    pub fn lookup(&self, token: usize) -> &[f32] {
+        self.table.row(token)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_hot_lookup() {
+        let e = Embedding::one_hot(4);
+        assert_eq!(e.lookup(2), &[0.0, 0.0, 1.0, 0.0]);
+        assert_eq!(e.dim(), 4);
+    }
+
+    #[test]
+    fn random_embedding_deterministic() {
+        let mut r1 = Pcg32::seeded(1);
+        let mut r2 = Pcg32::seeded(1);
+        let a = Embedding::new(10, 8, &mut r1);
+        let b = Embedding::new(10, 8, &mut r2);
+        assert_eq!(a.lookup(3), b.lookup(3));
+    }
+}

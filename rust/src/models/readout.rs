@@ -1,0 +1,260 @@
+//! Readout stack: one-hidden-layer MLP + softmax (paper §5.1.1: "a one-layer
+//! readout MLP mapping to 1024 hidden units before the final 256-unit
+//! softmax layer").
+//!
+//! The readout has no recurrence, so it is trained with plain backprop at
+//! every step regardless of which RTRL approximation handles the recurrent
+//! core. `backward` returns both the readout parameter gradients and
+//! `∂L/∂h` — the cotangent the recurrent algorithms consume.
+
+use crate::tensor::matrix::Matrix;
+use crate::tensor::ops::{axpy_slice, drelu, matvec, matvec_t, softmax_xent};
+use crate::tensor::rng::Pcg32;
+
+pub struct Readout {
+    pub in_dim: usize,
+    pub hidden: usize,
+    pub out_dim: usize,
+    /// W1: hidden × in, b1: hidden, W2: out × hidden, b2: out
+    w1: Matrix,
+    b1: Vec<f32>,
+    w2: Matrix,
+    b2: Vec<f32>,
+}
+
+/// Forward cache for one step.
+#[derive(Clone, Default)]
+pub struct ReadoutCache {
+    h_in: Vec<f32>,
+    pre1: Vec<f32>,
+    act1: Vec<f32>,
+    pub logits: Vec<f32>,
+}
+
+/// Flat gradient buffer with the same layout as `Readout::num_params`.
+pub struct ReadoutGrad {
+    pub flat: Vec<f32>,
+}
+
+impl Readout {
+    pub fn new(in_dim: usize, hidden: usize, out_dim: usize, rng: &mut Pcg32) -> Self {
+        let bound1 = (1.0 / (in_dim as f64).sqrt()) as f32;
+        let bound2 = (1.0 / (hidden as f64).sqrt()) as f32;
+        Readout {
+            in_dim,
+            hidden,
+            out_dim,
+            w1: Matrix::from_fn(hidden, in_dim, |_, _| rng.uniform_in(-bound1, bound1)),
+            b1: vec![0.0; hidden],
+            w2: Matrix::from_fn(out_dim, hidden, |_, _| rng.uniform_in(-bound2, bound2)),
+            b2: vec![0.0; out_dim],
+        }
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.hidden * self.in_dim + self.hidden + self.out_dim * self.hidden + self.out_dim
+    }
+
+    pub fn make_grad(&self) -> ReadoutGrad {
+        ReadoutGrad { flat: vec![0.0; self.num_params()] }
+    }
+
+    /// Logits for hidden state `h`.
+    pub fn forward(&self, h: &[f32], cache: &mut ReadoutCache) {
+        debug_assert_eq!(h.len(), self.in_dim);
+        cache.h_in = h.to_vec();
+        let mut pre1 = matvec(&self.w1, h);
+        for (p, b) in pre1.iter_mut().zip(&self.b1) {
+            *p += b;
+        }
+        cache.act1 = pre1.iter().map(|&x| x.max(0.0)).collect();
+        cache.pre1 = pre1;
+        let mut logits = matvec(&self.w2, &cache.act1);
+        for (l, b) in logits.iter_mut().zip(&self.b2) {
+            *l += b;
+        }
+        cache.logits = logits;
+    }
+
+    /// Cross-entropy loss vs `target`; accumulates readout grads into `g`
+    /// and returns `(loss_nats, dL/dh)`.
+    pub fn loss_and_backward(
+        &self,
+        cache: &ReadoutCache,
+        target: usize,
+        g: &mut ReadoutGrad,
+    ) -> (f32, Vec<f32>) {
+        let (loss, dlogits) = softmax_xent(&cache.logits, target);
+        let dh = self.backward(cache, &dlogits, g);
+        (loss, dh)
+    }
+
+    /// Backprop an arbitrary logit cotangent.
+    pub fn backward(&self, cache: &ReadoutCache, dlogits: &[f32], g: &mut ReadoutGrad) -> Vec<f32> {
+        let (o_w1, o_b1, o_w2, o_b2) = self.offsets();
+        // dW2 = dlogits ⊗ act1 ; db2 = dlogits
+        for (i, &dl) in dlogits.iter().enumerate() {
+            if dl != 0.0 {
+                axpy_slice(
+                    &mut g.flat[o_w2 + i * self.hidden..o_w2 + (i + 1) * self.hidden],
+                    dl,
+                    &cache.act1,
+                );
+            }
+            g.flat[o_b2 + i] += dl;
+        }
+        // dact1 = W2ᵀ dlogits, gated by relu'
+        let mut dact1 = matvec_t(&self.w2, dlogits);
+        for (da, &pre) in dact1.iter_mut().zip(&cache.pre1) {
+            *da *= drelu(pre);
+        }
+        // dW1 = dact1 ⊗ h ; db1 = dact1
+        for (i, &da) in dact1.iter().enumerate() {
+            if da != 0.0 {
+                axpy_slice(
+                    &mut g.flat[o_w1 + i * self.in_dim..o_w1 + (i + 1) * self.in_dim],
+                    da,
+                    &cache.h_in,
+                );
+            }
+            g.flat[o_b1 + i] += da;
+        }
+        // dL/dh = W1ᵀ dact1
+        matvec_t(&self.w1, &dact1)
+    }
+
+    fn offsets(&self) -> (usize, usize, usize, usize) {
+        let o_w1 = 0;
+        let o_b1 = o_w1 + self.hidden * self.in_dim;
+        let o_w2 = o_b1 + self.hidden;
+        let o_b2 = o_w2 + self.out_dim * self.hidden;
+        (o_w1, o_b1, o_w2, o_b2)
+    }
+
+    /// Apply a flat delta: `params += delta` (optimizer writes).
+    pub fn apply_delta(&mut self, delta: &[f32]) {
+        assert_eq!(delta.len(), self.num_params());
+        let (o_w1, o_b1, o_w2, o_b2) = self.offsets();
+        let w1 = self.w1.as_mut_slice();
+        for (i, v) in w1.iter_mut().enumerate() {
+            *v += delta[o_w1 + i];
+        }
+        for (i, v) in self.b1.iter_mut().enumerate() {
+            *v += delta[o_b1 + i];
+        }
+        let w2 = self.w2.as_mut_slice();
+        for (i, v) in w2.iter_mut().enumerate() {
+            *v += delta[o_w2 + i];
+        }
+        for (i, v) in self.b2.iter_mut().enumerate() {
+            *v += delta[o_b2 + i];
+        }
+    }
+
+    /// Flat parameter vector (layout: W1 row-major, b1, W2 row-major, b2 —
+    /// the same layout `apply_delta` consumes and the AOT artifacts mirror).
+    pub fn params_flat(&self) -> Vec<f32> {
+        let mut flat = Vec::with_capacity(self.num_params());
+        flat.extend_from_slice(self.w1.as_slice());
+        flat.extend_from_slice(&self.b1);
+        flat.extend_from_slice(self.w2.as_slice());
+        flat.extend_from_slice(&self.b2);
+        flat
+    }
+
+    /// Overwrite all parameters from a flat vector.
+    pub fn set_params(&mut self, flat: &[f32]) {
+        assert_eq!(flat.len(), self.num_params());
+        let (o_w1, o_b1, o_w2, o_b2) = self.offsets();
+        self.w1.as_mut_slice().copy_from_slice(&flat[o_w1..o_b1]);
+        self.b1.copy_from_slice(&flat[o_b1..o_w2]);
+        self.w2.as_mut_slice().copy_from_slice(&flat[o_w2..o_b2]);
+        self.b2.copy_from_slice(&flat[o_b2..]);
+    }
+
+    /// FLOPs of one forward pass.
+    pub fn forward_flops(&self) -> u64 {
+        2 * (self.hidden * self.in_dim + self.out_dim * self.hidden) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_backward_finite_diff() {
+        let mut rng = Pcg32::seeded(1000);
+        let mut ro = Readout::new(5, 7, 4, &mut rng);
+        let h: Vec<f32> = (0..5).map(|_| rng.normal()).collect();
+        let target = 2usize;
+        let mut cache = ReadoutCache::default();
+        ro.forward(&h, &mut cache);
+        let mut g = ro.make_grad();
+        let (_, dh) = ro.loss_and_backward(&cache, target, &mut g);
+
+        // FD over h.
+        let eps = 1e-3f32;
+        for l in 0..5 {
+            let mut hp = h.clone();
+            hp[l] += eps;
+            let mut c1 = ReadoutCache::default();
+            ro.forward(&hp, &mut c1);
+            let (l1, _) = softmax_xent(&c1.logits, target);
+            hp[l] -= 2.0 * eps;
+            let mut c2 = ReadoutCache::default();
+            ro.forward(&hp, &mut c2);
+            let (l2, _) = softmax_xent(&c2.logits, target);
+            let fd = (l1 - l2) / (2.0 * eps);
+            assert!((fd - dh[l]).abs() < 2e-3, "dh[{l}]: fd={fd} an={}", dh[l]);
+        }
+
+        // FD over params via apply_delta on a few coordinates.
+        let n = ro.num_params();
+        for j in (0..n).step_by((n / 20).max(1)) {
+            let mut delta = vec![0.0f32; n];
+            delta[j] = eps;
+            ro.apply_delta(&delta);
+            let mut c1 = ReadoutCache::default();
+            ro.forward(&h, &mut c1);
+            let (l1, _) = softmax_xent(&c1.logits, target);
+            delta[j] = -2.0 * eps;
+            ro.apply_delta(&delta);
+            let mut c2 = ReadoutCache::default();
+            ro.forward(&h, &mut c2);
+            let (l2, _) = softmax_xent(&c2.logits, target);
+            delta[j] = eps;
+            ro.apply_delta(&delta); // restore
+            let fd = (l1 - l2) / (2.0 * eps);
+            assert!((fd - g.flat[j]).abs() < 2e-3, "param {j}: fd={fd} an={}", g.flat[j]);
+        }
+    }
+
+    #[test]
+    fn param_count() {
+        let mut rng = Pcg32::seeded(1001);
+        let ro = Readout::new(128, 1024, 256, &mut rng);
+        assert_eq!(ro.num_params(), 1024 * 128 + 1024 + 256 * 1024 + 256);
+    }
+
+    #[test]
+    fn loss_decreases_under_gradient_steps() {
+        let mut rng = Pcg32::seeded(1002);
+        let mut ro = Readout::new(4, 8, 3, &mut rng);
+        let h = vec![0.5f32, -0.3, 0.8, 0.1];
+        let target = 1;
+        let mut cache = ReadoutCache::default();
+        ro.forward(&h, &mut cache);
+        let (l0, _) = softmax_xent(&cache.logits, target);
+        for _ in 0..50 {
+            let mut g = ro.make_grad();
+            ro.forward(&h, &mut cache);
+            ro.loss_and_backward(&cache, target, &mut g);
+            let delta: Vec<f32> = g.flat.iter().map(|&x| -0.1 * x).collect();
+            ro.apply_delta(&delta);
+        }
+        ro.forward(&h, &mut cache);
+        let (l1, _) = softmax_xent(&cache.logits, target);
+        assert!(l1 < l0 * 0.5, "l0={l0} l1={l1}");
+    }
+}

@@ -1,0 +1,163 @@
+//! Optimizers over flat f32 parameter vectors. The trainer keeps two
+//! instances: one for the recurrent θ (fed by the RTRL-family gradient) and
+//! one for the readout φ (fed by exact backprop). Paper §5.1: Adam with
+//! β1=0.9, β2=0.999, ε=1e-8.
+
+/// Uniform optimizer interface: consume a gradient, write the update
+/// in-place into `params`, and zero the gradient buffer.
+pub trait Optimizer {
+    fn step(&mut self, params: &mut [f32], grad: &mut [f32]);
+    fn name(&self) -> &'static str;
+    fn lr(&self) -> f32;
+    fn set_lr(&mut self, lr: f32);
+}
+
+/// Plain SGD (optionally with momentum).
+pub struct Sgd {
+    lr: f32,
+    momentum: f32,
+    velocity: Vec<f32>,
+}
+
+impl Sgd {
+    pub fn new(dim: usize, lr: f32, momentum: f32) -> Self {
+        Sgd { lr, momentum, velocity: vec![0.0; dim] }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, params: &mut [f32], grad: &mut [f32]) {
+        assert_eq!(params.len(), grad.len());
+        assert_eq!(params.len(), self.velocity.len());
+        if self.momentum == 0.0 {
+            for (p, g) in params.iter_mut().zip(grad.iter_mut()) {
+                *p -= self.lr * *g;
+                *g = 0.0;
+            }
+        } else {
+            for ((p, g), v) in params.iter_mut().zip(grad.iter_mut()).zip(&mut self.velocity) {
+                *v = self.momentum * *v + *g;
+                *p -= self.lr * *v;
+                *g = 0.0;
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+
+    fn lr(&self) -> f32 {
+        self.lr
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+}
+
+/// Adam (Kingma & Ba 2015) with the paper's hyperparameters as defaults.
+pub struct Adam {
+    lr: f32,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    t: u64,
+    m: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl Adam {
+    pub fn new(dim: usize, lr: f32) -> Self {
+        Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, t: 0, m: vec![0.0; dim], v: vec![0.0; dim] }
+    }
+
+    pub fn with_betas(dim: usize, lr: f32, beta1: f32, beta2: f32, eps: f32) -> Self {
+        Adam { lr, beta1, beta2, eps, t: 0, m: vec![0.0; dim], v: vec![0.0; dim] }
+    }
+}
+
+impl Optimizer for Adam {
+    fn step(&mut self, params: &mut [f32], grad: &mut [f32]) {
+        assert_eq!(params.len(), grad.len());
+        assert_eq!(params.len(), self.m.len());
+        self.t += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        let lr_t = self.lr * bc2.sqrt() / bc1;
+        for i in 0..params.len() {
+            let g = grad[i];
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * g;
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * g * g;
+            params[i] -= lr_t * self.m[i] / (self.v[i].sqrt() + self.eps);
+            grad[i] = 0.0;
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "adam"
+    }
+
+    fn lr(&self) -> f32 {
+        self.lr
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimize f(x) = Σ (x_i - i)² with each optimizer.
+    fn quad_target(opt: &mut dyn Optimizer, dim: usize, iters: usize) -> f32 {
+        let mut x = vec![0.0f32; dim];
+        let mut g = vec![0.0f32; dim];
+        for _ in 0..iters {
+            for i in 0..dim {
+                g[i] = 2.0 * (x[i] - i as f32);
+            }
+            opt.step(&mut x, &mut g);
+        }
+        (0..dim).map(|i| (x[i] - i as f32).powi(2)).sum()
+    }
+
+    #[test]
+    fn sgd_converges_on_quadratic() {
+        let mut opt = Sgd::new(4, 0.1, 0.0);
+        assert!(quad_target(&mut opt, 4, 200) < 1e-6);
+    }
+
+    #[test]
+    fn sgd_momentum_converges() {
+        let mut opt = Sgd::new(4, 0.05, 0.9);
+        assert!(quad_target(&mut opt, 4, 300) < 1e-4);
+    }
+
+    #[test]
+    fn adam_converges_on_quadratic() {
+        let mut opt = Adam::new(4, 0.5);
+        assert!(quad_target(&mut opt, 4, 500) < 1e-3);
+    }
+
+    #[test]
+    fn grad_is_zeroed_after_step() {
+        let mut opt = Adam::new(2, 0.1);
+        let mut p = vec![1.0f32, 2.0];
+        let mut g = vec![0.5f32, -0.5];
+        opt.step(&mut p, &mut g);
+        assert_eq!(g, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn adam_bias_correction_first_step_magnitude() {
+        // First Adam step ≈ lr (bias-corrected), independent of grad scale.
+        let mut opt = Adam::new(1, 0.01);
+        let mut p = vec![0.0f32];
+        let mut g = vec![1000.0f32];
+        opt.step(&mut p, &mut g);
+        assert!((p[0].abs() - 0.01).abs() < 1e-4, "{}", p[0]);
+    }
+}

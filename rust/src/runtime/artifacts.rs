@@ -1,0 +1,109 @@
+//! Artifact discovery: locate `artifacts/` and name the HLO modules the
+//! Python compile path produces. The artifact set is versioned by a tiny
+//! manifest (`manifest.txt`, `key=value` lines) written by `aot.py` so the
+//! Rust side can validate shapes before compiling.
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Resolve the artifacts directory: `$SNAP_RTRL_ARTIFACTS` or `./artifacts`
+/// relative to the current dir / the crate root.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("SNAP_RTRL_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    for base in [".", env!("CARGO_MANIFEST_DIR")] {
+        let p = Path::new(base).join("artifacts");
+        if p.is_dir() {
+            return p;
+        }
+    }
+    PathBuf::from("artifacts")
+}
+
+/// The named artifact set produced by `python/compile/aot.py`.
+#[derive(Debug, Clone)]
+pub struct ArtifactSet {
+    pub dir: PathBuf,
+    /// parsed manifest (k, input dim, vocab, etc.)
+    pub meta: HashMap<String, String>,
+}
+
+impl ArtifactSet {
+    pub fn discover() -> Result<Self> {
+        let dir = artifacts_dir();
+        let manifest = dir.join("manifest.txt");
+        if !manifest.is_file() {
+            bail!(
+                "no artifact manifest at {} — run `make artifacts` first",
+                manifest.display()
+            );
+        }
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {}", manifest.display()))?;
+        let mut meta = HashMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if let Some((k, v)) = line.split_once('=') {
+                meta.insert(k.trim().to_string(), v.trim().to_string());
+            }
+        }
+        Ok(ArtifactSet { dir, meta })
+    }
+
+    pub fn path(&self, name: &str) -> PathBuf {
+        self.dir.join(name)
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<usize> {
+        self.meta
+            .get(key)
+            .with_context(|| format!("manifest missing key {key}"))?
+            .parse()
+            .with_context(|| format!("manifest key {key} not an integer"))
+    }
+
+    /// The GRU online-training step module (fwd + SnAp-1 update + grads).
+    pub fn online_step(&self) -> PathBuf {
+        self.path("gru_snap1_step.hlo.txt")
+    }
+
+    /// Plain GRU forward step (h, x_embedded → h').
+    pub fn gru_forward(&self) -> PathBuf {
+        self.path("gru_fwd.hlo.txt")
+    }
+
+    /// Adam update module over a flat parameter vector.
+    pub fn adam_update(&self) -> PathBuf {
+        self.path("adam_update.hlo.txt")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifacts_dir_resolves_somewhere() {
+        let d = artifacts_dir();
+        assert!(!d.as_os_str().is_empty());
+    }
+
+    #[test]
+    fn manifest_parsing() {
+        let tmp = std::env::temp_dir().join(format!("snap_rtrl_art_{}", std::process::id()));
+        std::fs::create_dir_all(&tmp).unwrap();
+        std::fs::write(tmp.join("manifest.txt"), "# comment\nk=128\ninput_dim = 64\n").unwrap();
+        std::env::set_var("SNAP_RTRL_ARTIFACTS", &tmp);
+        let set = ArtifactSet::discover().unwrap();
+        std::env::remove_var("SNAP_RTRL_ARTIFACTS");
+        assert_eq!(set.get_usize("k").unwrap(), 128);
+        assert_eq!(set.get_usize("input_dim").unwrap(), 64);
+        assert!(set.get_usize("missing").is_err());
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+}

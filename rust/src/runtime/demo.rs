@@ -1,0 +1,207 @@
+//! `repro aot-demo` — the three-layer composition proof:
+//!
+//! L1 (Pallas kernels) + L2 (JAX model) were AOT-lowered by
+//! `python/compile/aot.py` into `artifacts/gru_snap1_step.hlo.txt`, a single
+//! fused online-training step for a dense GRU with SnAp-1:
+//!
+//! ```text
+//! inputs : theta[p], phi[p_ro], h[k], j[p], x[a], target_onehot[V]
+//! outputs: (h_next[k], j_next[p], loss[1], g_rec[p], g_ro[p_ro])
+//! ```
+//!
+//! This module (a) checks numerical parity of the artifact against the
+//! native Rust implementation (same θ layout by construction) and (b) runs
+//! a fully-online training loop where every step's compute is executed by
+//! the PJRT runtime while Rust owns data, optimizer state and metrics —
+//! Python never runs.
+
+use crate::cells::{Cell, Gru};
+use crate::coordinator::cli::Args;
+use crate::data::Corpus;
+use crate::grad::{GradAlgo, Snap};
+use crate::models::{Embedding, Readout, ReadoutCache};
+use crate::opt::{Adam, Optimizer};
+use crate::runtime::{ArtifactSet, PjrtRuntime};
+use crate::tensor::rng::Pcg32;
+use crate::train::metrics::{bpc_from_nats, RunningMean};
+use anyhow::{Context, Result};
+
+pub struct StepIo {
+    pub k: usize,
+    pub input_dim: usize,
+    pub vocab: usize,
+    pub p_rec: usize,
+    pub p_ro: usize,
+}
+
+impl StepIo {
+    pub fn from_manifest(set: &ArtifactSet) -> Result<Self> {
+        Ok(StepIo {
+            k: set.get_usize("k")?,
+            input_dim: set.get_usize("input_dim")?,
+            vocab: set.get_usize("vocab")?,
+            p_rec: set.get_usize("p_rec")?,
+            p_ro: set.get_usize("p_ro")?,
+        })
+    }
+}
+
+/// Execute one AOT step; returns (h_next, j_next, loss, g_rec, g_ro).
+#[allow(clippy::too_many_arguments)]
+pub fn run_step(
+    module: &crate::runtime::LoadedModule,
+    io: &StepIo,
+    theta: &[f32],
+    phi: &[f32],
+    h: &[f32],
+    j: &[f32],
+    x: &[f32],
+    target: usize,
+) -> Result<(Vec<f32>, Vec<f32>, f32, Vec<f32>, Vec<f32>)> {
+    let mut onehot = vec![0.0f32; io.vocab];
+    onehot[target] = 1.0;
+    let outs = module.run_f32(&[
+        (theta, &[io.p_rec as i64]),
+        (phi, &[io.p_ro as i64]),
+        (h, &[io.k as i64]),
+        (j, &[io.p_rec as i64]),
+        (x, &[io.input_dim as i64]),
+        (&onehot, &[io.vocab as i64]),
+    ])?;
+    anyhow::ensure!(outs.len() == 5, "expected 5 outputs, got {}", outs.len());
+    let mut it = outs.into_iter();
+    let h_next = it.next().unwrap();
+    let j_next = it.next().unwrap();
+    let loss = it.next().unwrap()[0];
+    let g_rec = it.next().unwrap();
+    let g_ro = it.next().unwrap();
+    Ok((h_next, j_next, loss, g_rec, g_ro))
+}
+
+/// Parity check: native Rust GRU + SnAp-1 + readout vs the AOT artifact, one
+/// step from identical inputs. Returns the max relative deviation over all
+/// outputs. The readout hidden size comes from the manifest.
+pub fn parity_check_with_hidden(
+    module: &crate::runtime::LoadedModule,
+    io: &StepIo,
+    readout_hidden: usize,
+    seed: u64,
+) -> Result<f32> {
+    let mut rng = Pcg32::seeded(seed);
+    let cell = Gru::new(io.k, io.input_dim, 1.0, &mut rng);
+    anyhow::ensure!(
+        cell.num_params() == io.p_rec,
+        "θ layout mismatch: rust {} vs manifest {}",
+        cell.num_params(),
+        io.p_rec
+    );
+    let theta = cell.init_params(&mut rng);
+    let readout = Readout::new(io.k, readout_hidden, io.vocab, &mut rng);
+    anyhow::ensure!(readout.num_params() == io.p_ro, "φ layout mismatch");
+    // φ flat vector mirrors Readout's internal layout; rebuild it by probing:
+    // we initialize a fresh Readout from a cloned RNG stream in python? No —
+    // for parity we drive *both* sides from explicit flat vectors.
+    let mut rng2 = Pcg32::seeded(seed ^ 0xabcd);
+    let phi: Vec<f32> = (0..io.p_ro).map(|_| rng2.normal() * 0.05).collect();
+    let x: Vec<f32> = (0..io.input_dim).map(|_| rng2.normal()).collect();
+    let h0 = vec![0.0f32; io.k];
+    let j0 = vec![0.0f32; io.p_rec];
+    let target = 3usize.min(io.vocab - 1);
+
+    // --- AOT side
+    let (h1_aot, j1_aot, loss_aot, grec_aot, _gro_aot) =
+        run_step(module, io, &theta, &phi, &h0, &j0, &x, target)?;
+
+    // --- native side: same readout params
+    let mut native_ro = Readout::new(io.k, readout_hidden, io.vocab, &mut Pcg32::seeded(1));
+    native_ro.set_params(&phi);
+
+    let mut snap = Snap::new(&cell, 1);
+    let mut g_rec = vec![0.0f32; io.p_rec];
+    snap.step(&theta, &x);
+    let mut cache = ReadoutCache::default();
+    native_ro.forward(snap.hidden(), &mut cache);
+    let mut g_ro = native_ro.make_grad();
+    let (loss_native, dh) = native_ro.loss_and_backward(&cache, target, &mut g_ro);
+    snap.inject_loss(&dh, &mut g_rec);
+
+    let h1_native = snap.hidden().to_vec();
+    let j1_native: Vec<f32> = {
+        // SnAp-1 J has exactly one value per column, ordered by param index.
+        let dense = snap.influence().to_dense();
+        let info = cell.param_info();
+        (0..io.p_rec).map(|jc| dense.get(info[jc].unit as usize, jc)).collect()
+    };
+
+    let mut dev = crate::testing::max_rel_dev(&h1_aot, &h1_native);
+    dev = dev.max(crate::testing::max_rel_dev(&j1_aot, &j1_native));
+    dev = dev.max((loss_aot - loss_native).abs() / loss_native.abs().max(1e-6));
+    dev = dev.max(crate::testing::max_rel_dev(&grec_aot, &g_rec));
+    Ok(dev)
+}
+
+/// The `aot-demo` command.
+pub fn run_aot_demo(args: &Args) -> Result<()> {
+    let set = ArtifactSet::discover().context(
+        "artifacts not found — run `make artifacts` (python AOT compile) first",
+    )?;
+    let io = StepIo::from_manifest(&set)?;
+    let readout_hidden = set.get_usize("readout_hidden")?;
+    let rt = PjrtRuntime::cpu()?;
+    println!("PJRT platform: {} ({} devices)", rt.platform(), rt.device_count());
+    let module = rt.load_hlo_text(set.online_step().to_str().unwrap())?;
+    println!("compiled {}", module.name);
+
+    // 1. Parity vs native implementation.
+    let dev = parity_check_with_hidden(&module, &io, readout_hidden, 42)?;
+    println!("parity vs native rust (max rel dev): {dev:.3e}");
+    anyhow::ensure!(dev < 5e-3, "artifact/native mismatch: {dev}");
+
+    // 2. Fully-online training through the artifact.
+    let steps = args.usize_or("steps", 400);
+    let seed = args.u64_or("seed", 1);
+    let mut rng = Pcg32::seeded(seed);
+    let cell = Gru::new(io.k, io.input_dim, 1.0, &mut rng);
+    let mut theta = cell.init_params(&mut rng);
+    let mut phi = Readout::new(io.k, readout_hidden, io.vocab, &mut rng).params_flat();
+    let embed = Embedding::new(io.vocab, io.input_dim, &mut rng);
+    let corpus = Corpus::synthetic(50_000, 77);
+    let bytes = corpus.bytes();
+
+    let mut opt_rec = Adam::new(io.p_rec, args.f32_or("lr", 3e-3));
+    let mut opt_ro = Adam::new(io.p_ro, args.f32_or("lr", 3e-3));
+    let mut h = vec![0.0f32; io.k];
+    let mut j = vec![0.0f32; io.p_rec];
+    let mut nll = RunningMean::new();
+    let t0 = std::time::Instant::now();
+    for step in 0..steps {
+        let pos = step % (bytes.len() - 1);
+        let x = embed.lookup(bytes[pos] as usize).to_vec();
+        let target = bytes[pos + 1] as usize;
+        let (h1, j1, loss, mut g_rec, g_ro) =
+            run_step(&module, &io, &theta, &phi, &h, &j, &x, target)?;
+        h = h1;
+        j = j1; // stale-Jacobian online regime: J persists across updates
+        nll.add(loss as f64);
+        opt_rec.step(&mut theta, &mut g_rec);
+        let mut g_ro = g_ro;
+        opt_ro.step(&mut phi, &mut g_ro);
+        if step % 100 == 99 || step + 1 == steps {
+            println!(
+                "step {:>5}  loss {:.3} nats  bpc {:.3}",
+                step + 1,
+                nll.mean(),
+                bpc_from_nats(nll.mean())
+            );
+            nll.reset();
+        }
+    }
+    let dt = t0.elapsed();
+    println!(
+        "online training via PJRT: {} steps in {:.2?} ({:.1} steps/s) — python never ran",
+        steps,
+        dt,
+        steps as f64 / dt.as_secs_f64()
+    );
+    Ok(())
+}

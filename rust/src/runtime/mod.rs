@@ -1,0 +1,13 @@
+//! XLA/PJRT runtime — loads the AOT artifacts produced by
+//! `python/compile/aot.py` (HLO *text*; see /opt/xla-example/README.md for
+//! why text, not serialized protos) and executes them from the Rust hot
+//! path. Python is never on the request path: `make artifacts` runs once,
+//! then the `repro` binary is self-contained.
+
+pub mod artifacts;
+pub mod pjrt;
+
+pub use artifacts::{artifacts_dir, ArtifactSet};
+pub use pjrt::{LoadedModule, PjrtRuntime};
+
+pub mod demo;

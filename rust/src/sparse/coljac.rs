@@ -1,0 +1,482 @@
+//! Column-compressed influence matrix — SnAp's `J̃_t` with the n-step
+//! sparsity pattern imposed (paper §3, Figure 2 d/e).
+//!
+//! Layout: CSC over parameter columns. Column `j` keeps the state rows
+//! `R_j = { i : (i,j) ∈ P_n }`, fixed for the whole run. The per-step update
+//!
+//! ```text
+//! J'[i,j] = I[i,j] + Σ_{m ∈ R_j} D[i,m] · J[m,j]        (i ∈ R_j)
+//! ```
+//!
+//! restricts the product `D_t·J_{t-1}` to the kept entries, which is exactly
+//! the `d·(d²k²p)` cost line of Table 1. The restriction of the sum to
+//! `m ∈ R_j` is sound because `J[m,j] = 0` for `m ∉ R_j` by construction.
+//!
+//! This is the library's hottest native kernel; see EXPERIMENTS.md §Perf.
+
+use crate::sparse::immediate::ImmediateJac;
+use crate::sparse::pattern::Pattern;
+use crate::tensor::matrix::Matrix;
+
+/// Above this many update FLOPs the masked product fans out across threads
+/// (§Perf: the crossover sits around a few hundred µs of single-core work).
+const PARALLEL_FLOPS_THRESHOLD: u64 = 8_000_000;
+
+#[derive(Clone, Debug)]
+pub struct ColJacobian {
+    state: usize,
+    params: usize,
+    col_ptr: Vec<usize>,
+    row_idx: Vec<u32>,
+    vals: Vec<f32>,
+    /// largest column (1 ⇒ the SnAp-1 diagonal fast path applies).
+    max_col: usize,
+    /// D-diagonal scratch for the fast path.
+    diag: Vec<f32>,
+    /// cached Σ_j 2|R_j|² (pattern is fixed, so this never changes).
+    product_flops: u64,
+    /// run boundaries: maximal ranges of consecutive columns with identical
+    /// row sets (§Perf: parameters wired into the same unit share R_j, so
+    /// the masked product becomes a small dense GEMM with a once-per-run
+    /// gathered D-submatrix).
+    runs: Vec<u32>,
+}
+
+impl ColJacobian {
+    /// Zero-initialized Jacobian with the structure of `pattern`
+    /// (state × params).
+    pub fn from_pattern(pattern: &Pattern) -> Self {
+        let (col_ptr, row_idx) = pattern.to_csc();
+        let nnz = row_idx.len();
+        let max_col = (0..pattern.cols())
+            .map(|j| col_ptr[j + 1] - col_ptr[j])
+            .max()
+            .unwrap_or(0);
+        let product_flops: u64 = (0..pattern.cols())
+            .map(|j| {
+                let n = (col_ptr[j + 1] - col_ptr[j]) as u64;
+                2 * n * n
+            })
+            .sum();
+        // Detect runs of identical columns.
+        let mut runs = vec![0u32];
+        for j in 1..pattern.cols() {
+            let prev = &row_idx[col_ptr[j - 1]..col_ptr[j]];
+            let cur = &row_idx[col_ptr[j]..col_ptr[j + 1]];
+            if prev != cur {
+                runs.push(j as u32);
+            }
+        }
+        runs.push(pattern.cols() as u32);
+        ColJacobian {
+            state: pattern.rows(),
+            params: pattern.cols(),
+            col_ptr,
+            row_idx,
+            vals: vec![0.0; nnz],
+            max_col,
+            diag: vec![0.0; pattern.rows()],
+            product_flops,
+            runs,
+        }
+    }
+
+    #[inline]
+    pub fn state_size(&self) -> usize {
+        self.state
+    }
+
+    #[inline]
+    pub fn num_params(&self) -> usize {
+        self.params
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.row_idx.len()
+    }
+
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.state * self.params).max(1) as f64
+    }
+
+    #[inline]
+    pub fn col(&self, j: usize) -> (&[u32], &[f32]) {
+        let (s, e) = (self.col_ptr[j], self.col_ptr[j + 1]);
+        (&self.row_idx[s..e], &self.vals[s..e])
+    }
+
+    /// Reset the influence to zero (sequence boundary).
+    pub fn reset(&mut self) {
+        self.vals.iter_mut().for_each(|v| *v = 0.0);
+    }
+
+    /// One SnAp step: `J ← P ⊙ (I + D·J)` with P this Jacobian's pattern.
+    /// `d` is the dense dynamics Jacobian (state × state); `i_jac` must share
+    /// a compatible (subset) structure: every I entry must be inside P —
+    /// guaranteed when P = snap_pattern(..) because P ⊇ pat(I).
+    ///
+    /// §Perf: three regimes —
+    /// * SnAp-1 (every column has one row): fused `v = diag·v + I`, no
+    ///   per-column scratch, D's diagonal gathered once per step;
+    /// * small general patterns: single-threaded masked product with an
+    ///   unrolled unchecked gather;
+    /// * large patterns (SnAp-2/3 at scale): the same kernel fanned out over
+    ///   scoped threads on disjoint column ranges.
+    pub fn update(&mut self, d: &Matrix, i_jac: &ImmediateJac) {
+        debug_assert_eq!(d.rows(), self.state);
+        debug_assert_eq!(d.cols(), self.state);
+        debug_assert_eq!(i_jac.num_params(), self.params);
+
+        if self.max_col <= 1 && i_jac.nnz() == self.vals.len() {
+            // --- SnAp-1 fast path: J and I are both "one row per column".
+            for i in 0..self.state {
+                self.diag[i] = d.get(i, i);
+            }
+            let diag = &self.diag;
+            let rows = &self.row_idx;
+            let ivals = i_jac.vals();
+            for (t, v) in self.vals.iter_mut().enumerate() {
+                // structure equality ⇒ slot t belongs to column t's row.
+                let i = unsafe { *rows.get_unchecked(t) } as usize;
+                *v = unsafe { diag.get_unchecked(i) } * *v + ivals[t];
+            }
+            return;
+        }
+
+        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        if self.product_flops >= PARALLEL_FLOPS_THRESHOLD && threads > 1 {
+            self.update_parallel(d, i_jac, threads.min(8));
+        } else {
+            let mut scratch = RunScratch::new(self.max_col);
+            update_runs(
+                &self.col_ptr,
+                &self.row_idx,
+                &self.runs,
+                &mut self.vals,
+                0,
+                self.runs.len() - 1,
+                0,
+                d,
+                i_jac,
+                &mut scratch,
+            );
+        }
+    }
+
+    /// Threaded masked product over disjoint run chunks.
+    fn update_parallel(&mut self, d: &Matrix, i_jac: &ImmediateJac, threads: usize) {
+        // Partition runs so each chunk has roughly equal FLOPs.
+        let per = self.product_flops / threads as u64 + 1;
+        let mut bounds = vec![0usize]; // indices into runs
+        let mut acc = 0u64;
+        for ri in 0..self.runs.len() - 1 {
+            let j0 = self.runs[ri] as usize;
+            let j1 = self.runs[ri + 1] as usize;
+            let n = (self.col_ptr[j0 + 1] - self.col_ptr[j0]) as u64;
+            acc += 2 * n * n * (j1 - j0) as u64;
+            if acc >= per && bounds.len() < threads {
+                bounds.push(ri + 1);
+                acc = 0;
+            }
+        }
+        bounds.push(self.runs.len() - 1);
+
+        let col_ptr = &self.col_ptr;
+        let row_idx = &self.row_idx;
+        let runs = &self.runs;
+        let max_col = self.max_col;
+        // Split vals into per-chunk disjoint slices at run boundaries.
+        let mut tail: &mut [f32] = &mut self.vals;
+        let mut slices = Vec::with_capacity(bounds.len() - 1);
+        let mut consumed = 0usize;
+        for w in bounds.windows(2) {
+            let end = col_ptr[runs[w[1]] as usize];
+            let (head, rest) = tail.split_at_mut(end - consumed);
+            slices.push((w[0], w[1], head));
+            consumed = end;
+            tail = rest;
+        }
+        crossbeam_utils::thread::scope(|s| {
+            for (r0, r1, vals) in slices {
+                s.spawn(move |_| {
+                    let mut scratch = RunScratch::new(max_col);
+                    let base = col_ptr[runs[r0] as usize];
+                    update_runs(col_ptr, row_idx, runs, vals, r0, r1, base, d, i_jac, &mut scratch);
+                });
+            }
+        })
+        .expect("snap update worker panicked");
+    }
+
+    /// Exact FLOPs of the fixed-pattern product (cached at construction).
+    pub fn product_flops(&self) -> u64 {
+        self.product_flops
+    }
+
+    /// RFLO-style update: `J ← λ·J + I` (drops `D·J` entirely — paper §4).
+    pub fn update_rflo(&mut self, lambda: f32, i_jac: &ImmediateJac) {
+        if lambda != 1.0 {
+            self.vals.iter_mut().for_each(|v| *v *= lambda);
+        }
+        for j in 0..self.params {
+            let (s, e) = (self.col_ptr[j], self.col_ptr[j + 1]);
+            let rows = &self.row_idx[s..e];
+            let (irows, ivals) = i_jac.col(j);
+            let mut cursor = 0usize;
+            for (&ir, &iv) in irows.iter().zip(ivals) {
+                while cursor < rows.len() && rows[cursor] < ir {
+                    cursor += 1;
+                }
+                debug_assert!(cursor < rows.len() && rows[cursor] == ir);
+                self.vals[s + cursor] += iv;
+            }
+        }
+    }
+
+    /// Accumulate the parameter gradient: `g[j] += Σ_i dlds[i]·J[i,j]`
+    /// (eq. 2's `(∂L_t/∂h_t)·J_t` contraction).
+    pub fn accumulate_grad(&self, dlds: &[f32], g: &mut [f32]) {
+        assert_eq!(dlds.len(), self.state);
+        assert_eq!(g.len(), self.params);
+        if self.max_col <= 1 && self.vals.len() == self.params {
+            // §Perf: SnAp-1 fast path — slot t IS column t; one flat pass.
+            for (t, (gv, v)) in g.iter_mut().zip(&self.vals).enumerate() {
+                let i = unsafe { *self.row_idx.get_unchecked(t) } as usize;
+                *gv += unsafe { dlds.get_unchecked(i) } * v;
+            }
+            return;
+        }
+        for j in 0..self.params {
+            let (s, e) = (self.col_ptr[j], self.col_ptr[j + 1]);
+            let mut acc = 0.0f32;
+            for t in s..e {
+                acc += dlds[self.row_idx[t] as usize] * self.vals[t];
+            }
+            g[j] += acc;
+        }
+    }
+
+    /// Exact FLOP count of one `update` call (mul+add counted separately):
+    /// per column: 2·|R_j|² for the masked product + |I_j| adds.
+    pub fn update_flops(&self, i_nnz: usize) -> u64 {
+        let mut f = 0u64;
+        for j in 0..self.params {
+            let n = (self.col_ptr[j + 1] - self.col_ptr[j]) as u64;
+            f += 2 * n * n;
+        }
+        f + i_nnz as u64
+    }
+
+    /// Dense materialization (tests / Figure 6 analysis).
+    pub fn to_dense(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.state, self.params);
+        for j in 0..self.params {
+            let (rows, vals) = self.col(j);
+            for (&i, &v) in rows.iter().zip(vals) {
+                m.set(i as usize, j, v);
+            }
+        }
+        m
+    }
+}
+
+/// Per-thread scratch for the run-GEMM update.
+struct RunScratch {
+    /// gathered D submatrix, column-major (n × n)
+    dsub: Vec<f32>,
+    /// old values of one column
+    old: Vec<f32>,
+}
+
+impl RunScratch {
+    fn new(max_col: usize) -> Self {
+        RunScratch { dsub: vec![0.0; max_col * max_col], old: vec![0.0; max_col] }
+    }
+}
+
+/// Masked-product update over runs `[r0, r1)` of identical columns. `vals`
+/// is the slice of value storage covering exactly those runs; `base` is the
+/// global offset of `vals[0]`.
+///
+/// §Perf: per run, the D entries needed (`D[R, R]`) are gathered ONCE into a
+/// column-major submatrix, then every column in the run is updated with
+/// contiguous AXPYs — a small dense GEMM (`out = Dsub · Old`). Parameters
+/// wired into the same unit share their row set, so runs are long (≈ the
+/// block width) and the gather amortizes to nothing; the product runs at
+/// SIMD speed instead of gather speed (~3–4× on SnAp-2/3 shapes).
+#[allow(clippy::too_many_arguments)]
+fn update_runs(
+    col_ptr: &[usize],
+    row_idx: &[u32],
+    runs: &[u32],
+    vals: &mut [f32],
+    r0: usize,
+    r1: usize,
+    base: usize,
+    d: &Matrix,
+    i_jac: &ImmediateJac,
+    scratch: &mut RunScratch,
+) {
+    for ri in r0..r1 {
+        let j_start = runs[ri] as usize;
+        let j_end = runs[ri + 1] as usize;
+        let (s0, e0) = (col_ptr[j_start], col_ptr[j_start + 1]);
+        let n = e0 - s0;
+        if n == 0 {
+            continue;
+        }
+        let rows = &row_idx[s0..e0];
+        // Gather Dsub column-major: dsub[m_slot*n + r_slot] = D[rows[r_slot], rows[m_slot]].
+        let dsub = &mut scratch.dsub[..n * n];
+        for (m_slot, &m) in rows.iter().enumerate() {
+            let col = &mut dsub[m_slot * n..(m_slot + 1) * n];
+            for (r_slot, &r) in rows.iter().enumerate() {
+                col[r_slot] = d.get(r as usize, m as usize);
+            }
+        }
+        // Every column in the run: out = Dsub · old  (contiguous AXPYs).
+        for j in j_start..j_end {
+            let (s, e) = (col_ptr[j], col_ptr[j + 1]);
+            let col_vals = &mut vals[s - base..e - base];
+            let old = &mut scratch.old[..n];
+            old.copy_from_slice(col_vals);
+            col_vals.iter_mut().for_each(|v| *v = 0.0);
+            for (m_slot, &om) in old.iter().enumerate() {
+                if om != 0.0 {
+                    crate::tensor::ops::axpy_slice(col_vals, om, &dsub[m_slot * n..(m_slot + 1) * n]);
+                }
+            }
+            // Immediate term (≤2 entries; rows of I ⊆ R_j, both sorted).
+            let (irows, ivals) = i_jac.col(j);
+            let mut cursor = 0usize;
+            for (&ir, &iv) in irows.iter().zip(ivals) {
+                while cursor < n && rows[cursor] < ir {
+                    cursor += 1;
+                }
+                debug_assert!(cursor < n && rows[cursor] == ir, "I entry outside pattern");
+                col_vals[cursor] += iv;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::pattern::snap_pattern;
+    use crate::tensor::ops::matmul;
+    use crate::tensor::rng::Pcg32;
+
+    /// Dense reference of one masked update: P ⊙ (I + D·J).
+    fn dense_masked_update(p: &Pattern, d: &Matrix, i: &Matrix, j: &Matrix) -> Matrix {
+        let mut out = matmul(d, j);
+        out.axpy(1.0, i);
+        let mut masked = Matrix::zeros(out.rows(), out.cols());
+        for (r, c) in p.iter() {
+            masked.set(r, c, out.get(r, c));
+        }
+        masked
+    }
+
+    fn setup(state: usize, params: usize, seed: u64) -> (Pattern, Matrix, ImmediateJac) {
+        let mut rng = Pcg32::seeded(seed);
+        // immediate: one row per column
+        let rows_per_col: Vec<Vec<u32>> =
+            (0..params).map(|j| vec![(j % state) as u32]).collect();
+        let mut ij = ImmediateJac::new(state, params, &rows_per_col);
+        for v in ij.vals_mut() {
+            *v = rng.normal();
+        }
+        let d_pat = Pattern::random(state, state, 0.4, &mut rng).with_diagonal();
+        let mut d = Matrix::zeros(state, state);
+        for (i, j) in d_pat.iter() {
+            d.set(i, j, rng.normal() * 0.5);
+        }
+        let p = snap_pattern(&d_pat, &ij.pattern(), 2);
+        (p, d, ij)
+    }
+
+    #[test]
+    fn update_matches_dense_masked_reference() {
+        let (p, d, mut ij) = setup(6, 12, 42);
+        let mut cj = ColJacobian::from_pattern(&p);
+        let mut rng = Pcg32::seeded(7);
+        let mut j_dense = Matrix::zeros(6, 12);
+        // run 5 steps with fresh immediate values each step
+        for _ in 0..5 {
+            for v in ij.vals_mut() {
+                *v = rng.normal();
+            }
+            let i_dense = ij.to_dense();
+            j_dense = dense_masked_update(&p, &d, &i_dense, &j_dense);
+            cj.update(&d, &ij);
+        }
+        let got = cj.to_dense();
+        for (a, b) in got.as_slice().iter().zip(j_dense.as_slice()) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn grad_accumulation_matches_dense() {
+        let (p, d, ij) = setup(5, 10, 3);
+        let mut cj = ColJacobian::from_pattern(&p);
+        cj.update(&d, &ij);
+        let dlds: Vec<f32> = (0..5).map(|i| (i as f32) - 2.0).collect();
+        let mut g = vec![0.0f32; 10];
+        cj.accumulate_grad(&dlds, &mut g);
+        let dense = cj.to_dense();
+        let expect = crate::tensor::ops::matvec_t(&dense, &dlds);
+        for (a, b) in g.iter().zip(expect.iter()) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn rflo_update_accumulates_immediate_only() {
+        let (_, _, mut ij) = setup(4, 8, 9);
+        let p1 = ij.pattern();
+        let mut cj = ColJacobian::from_pattern(&p1);
+        for v in ij.vals_mut() {
+            *v = 1.0;
+        }
+        cj.update_rflo(1.0, &ij);
+        cj.update_rflo(1.0, &ij);
+        // J should equal 2·I.
+        for j in 0..8 {
+            let (_, vals) = cj.col(j);
+            assert!(vals.iter().all(|&v| (v - 2.0).abs() < 1e-6));
+        }
+        cj.update_rflo(0.5, &ij);
+        for j in 0..8 {
+            let (_, vals) = cj.col(j);
+            assert!(vals.iter().all(|&v| (v - 2.0).abs() < 1e-6));
+        }
+    }
+
+    #[test]
+    fn reset_zeroes() {
+        let (p, d, ij) = setup(4, 8, 11);
+        let mut cj = ColJacobian::from_pattern(&p);
+        cj.update(&d, &ij);
+        assert!(cj.vals.iter().any(|&v| v != 0.0));
+        cj.reset();
+        assert!(cj.vals.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn flop_count_formula() {
+        let (p, _, ij) = setup(4, 8, 13);
+        let cj = ColJacobian::from_pattern(&p);
+        let f = cj.update_flops(ij.nnz());
+        let manual: u64 = (0..8)
+            .map(|j| {
+                let n = cj.col(j).0.len() as u64;
+                2 * n * n
+            })
+            .sum::<u64>()
+            + ij.nnz() as u64;
+        assert_eq!(f, manual);
+    }
+}

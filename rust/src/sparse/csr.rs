@@ -1,0 +1,257 @@
+//! Numeric CSR matrix and kernels used by the sparse-optimized RTRL update
+//! (paper eq. 4: `J̃_t = Ĩ_t + D_t·J̃_{t-1}` with D_t applied as a sparse
+//! operator) and by sparse cell forward passes.
+
+use crate::sparse::pattern::Pattern;
+use crate::tensor::matrix::Matrix;
+use crate::tensor::ops::axpy_slice;
+
+/// Compressed sparse row matrix of f32.
+#[derive(Clone, Debug)]
+pub struct Csr {
+    rows: usize,
+    cols: usize,
+    row_ptr: Vec<usize>,
+    col_idx: Vec<u32>,
+    vals: Vec<f32>,
+}
+
+impl Csr {
+    /// Zero-valued CSR with the structure of `pattern`.
+    pub fn from_pattern(pattern: &Pattern) -> Self {
+        let mut row_ptr = Vec::with_capacity(pattern.rows() + 1);
+        let mut col_idx = Vec::with_capacity(pattern.nnz());
+        row_ptr.push(0);
+        for i in 0..pattern.rows() {
+            col_idx.extend_from_slice(pattern.row(i));
+            row_ptr.push(col_idx.len());
+        }
+        let n = col_idx.len();
+        Csr { rows: pattern.rows(), cols: pattern.cols(), row_ptr, col_idx, vals: vec![0.0; n] }
+    }
+
+    /// Extract the entries of a dense matrix at `pattern` positions.
+    pub fn from_dense(dense: &Matrix, pattern: &Pattern) -> Self {
+        assert_eq!((dense.rows(), dense.cols()), (pattern.rows(), pattern.cols()));
+        let mut csr = Csr::from_pattern(pattern);
+        for i in 0..csr.rows {
+            let (s, e) = (csr.row_ptr[i], csr.row_ptr[i + 1]);
+            for t in s..e {
+                csr.vals[t] = dense.get(i, csr.col_idx[t] as usize);
+            }
+        }
+        csr
+    }
+
+    /// Gather all entries of `dense` with |x| > 0 into a CSR.
+    pub fn from_dense_nonzero(dense: &Matrix) -> Self {
+        let mut row_ptr = vec![0usize];
+        let mut col_idx = Vec::new();
+        let mut vals = Vec::new();
+        for i in 0..dense.rows() {
+            for (j, &v) in dense.row(i).iter().enumerate() {
+                if v != 0.0 {
+                    col_idx.push(j as u32);
+                    vals.push(v);
+                }
+            }
+            row_ptr.push(col_idx.len());
+        }
+        Csr { rows: dense.rows(), cols: dense.cols(), row_ptr, col_idx, vals }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.rows * self.cols).max(1) as f64
+    }
+
+    #[inline]
+    pub fn row_entries(&self, i: usize) -> (&[u32], &[f32]) {
+        let (s, e) = (self.row_ptr[i], self.row_ptr[i + 1]);
+        (&self.col_idx[s..e], &self.vals[s..e])
+    }
+
+    #[inline]
+    pub fn vals_mut(&mut self) -> &mut [f32] {
+        &mut self.vals
+    }
+
+    #[inline]
+    pub fn vals(&self) -> &[f32] {
+        &self.vals
+    }
+
+    /// Refresh values from a dense matrix, keeping the structure.
+    pub fn refresh_from_dense(&mut self, dense: &Matrix) {
+        assert_eq!((dense.rows(), dense.cols()), (self.rows, self.cols));
+        for i in 0..self.rows {
+            let (s, e) = (self.row_ptr[i], self.row_ptr[i + 1]);
+            for t in s..e {
+                self.vals[t] = dense.get(i, self.col_idx[t] as usize);
+            }
+        }
+    }
+
+    pub fn to_dense(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let (cols, vals) = self.row_entries(i);
+            for (&j, &v) in cols.iter().zip(vals) {
+                m.set(i, j as usize, v);
+            }
+        }
+        m
+    }
+
+    /// `y = self · x` (sparse mat-vec).
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0f32; self.rows];
+        for i in 0..self.rows {
+            let (cols, vals) = self.row_entries(i);
+            let mut s = 0.0f32;
+            for (&j, &v) in cols.iter().zip(vals) {
+                s += v * x[j as usize];
+            }
+            y[i] = s;
+        }
+        y
+    }
+
+    /// `y = selfᵀ · x` without materializing the transpose.
+    pub fn matvec_t(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.rows);
+        let mut y = vec![0.0f32; self.cols];
+        for i in 0..self.rows {
+            let xi = x[i];
+            if xi == 0.0 {
+                continue;
+            }
+            let (cols, vals) = self.row_entries(i);
+            for (&j, &v) in cols.iter().zip(vals) {
+                y[j as usize] += v * xi;
+            }
+        }
+        y
+    }
+
+    /// `C (+)= self · B` where B, C are dense (row-major). The workhorse of
+    /// sparse-optimized RTRL: D_t (CSR, k×k) times J̃ (dense, k×p̃).
+    /// Row-major B makes the inner loop a contiguous AXPY — this is the
+    /// d·(d·k²p) cost line of Table 1.
+    pub fn spmm_into(&self, b: &Matrix, c: &mut Matrix, accumulate: bool) {
+        assert_eq!(self.cols, b.rows(), "spmm: inner dim");
+        assert_eq!((c.rows(), c.cols()), (self.rows, b.cols()), "spmm: out shape");
+        if !accumulate {
+            c.fill(0.0);
+        }
+        for i in 0..self.rows {
+            let (cols, vals) = self.row_entries(i);
+            let crow = c.row_mut(i);
+            for (&m, &v) in cols.iter().zip(vals) {
+                axpy_slice(crow, v, b.row(m as usize));
+            }
+        }
+    }
+
+    pub fn spmm(&self, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(self.rows, b.cols());
+        self.spmm_into(b, &mut c, false);
+        c
+    }
+
+    /// Structural pattern of this matrix.
+    pub fn pattern(&self) -> Pattern {
+        let lists: Vec<Vec<u32>> =
+            (0..self.rows).map(|i| self.row_entries(i).0.to_vec()).collect();
+        Pattern::from_rows(self.rows, self.cols, &lists)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::matmul;
+    use crate::tensor::rng::Pcg32;
+
+    fn random_dense_masked(rows: usize, cols: usize, density: f64, seed: u64) -> (Matrix, Pattern) {
+        let mut rng = Pcg32::seeded(seed);
+        let pat = Pattern::random(rows, cols, density, &mut rng);
+        let mut m = Matrix::zeros(rows, cols);
+        for (i, j) in pat.iter() {
+            m.set(i, j, rng.normal());
+        }
+        (m, pat)
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let (m, pat) = random_dense_masked(6, 8, 0.3, 1);
+        let csr = Csr::from_dense(&m, &pat);
+        assert_eq!(csr.to_dense(), m);
+        let csr2 = Csr::from_dense_nonzero(&m);
+        assert_eq!(csr2.to_dense(), m);
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let (m, pat) = random_dense_masked(7, 5, 0.4, 2);
+        let csr = Csr::from_dense(&m, &pat);
+        let mut rng = Pcg32::seeded(3);
+        let x: Vec<f32> = (0..5).map(|_| rng.normal()).collect();
+        let y1 = csr.matvec(&x);
+        let y2 = crate::tensor::ops::matvec(&m, &x);
+        for (a, b) in y1.iter().zip(y2.iter()) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn matvec_t_matches_dense() {
+        let (m, pat) = random_dense_masked(7, 5, 0.4, 4);
+        let csr = Csr::from_dense(&m, &pat);
+        let mut rng = Pcg32::seeded(5);
+        let x: Vec<f32> = (0..7).map(|_| rng.normal()).collect();
+        let y1 = csr.matvec_t(&x);
+        let y2 = crate::tensor::ops::matvec_t(&m, &x);
+        for (a, b) in y1.iter().zip(y2.iter()) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn spmm_matches_dense_matmul() {
+        let (a, pat) = random_dense_masked(6, 6, 0.5, 6);
+        let csr = Csr::from_dense(&a, &pat);
+        let mut rng = Pcg32::seeded(7);
+        let b = Matrix::from_fn(6, 10, |_, _| rng.normal());
+        let c1 = csr.spmm(&b);
+        let c2 = matmul(&a, &b);
+        for (x, y) in c1.as_slice().iter().zip(c2.as_slice()) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn refresh_keeps_structure() {
+        let (m, pat) = random_dense_masked(4, 4, 0.5, 8);
+        let mut csr = Csr::from_pattern(&pat);
+        assert_eq!(csr.nnz(), pat.nnz());
+        csr.refresh_from_dense(&m);
+        assert_eq!(csr.to_dense(), m);
+    }
+}

@@ -1,0 +1,161 @@
+//! The immediate Jacobian `I_t = ∂s_t/∂θ_t` in compressed-column form.
+//!
+//! Paper §3.1: for Vanilla and GRU (Engel variant) every parameter column has
+//! exactly **one** nonzero row (the unit it is wired into); LSTM has **two**
+//! (the cell row `k+i` and the hidden row `i`). Storing only those entries is
+//! lossless and is what makes SnAp-1 / RFLO as cheap as backprop: the nonzero
+//! values are the same size as θ.
+//!
+//! The *structure* (col_ptr/row_idx) is fixed by the architecture and the
+//! weight mask; the cell refreshes `vals` each timestep.
+
+use crate::sparse::pattern::Pattern;
+
+#[derive(Clone, Debug)]
+pub struct ImmediateJac {
+    state: usize,
+    params: usize,
+    col_ptr: Vec<usize>,
+    row_idx: Vec<u32>,
+    vals: Vec<f32>,
+}
+
+impl ImmediateJac {
+    /// Build from per-column row lists (each sorted ascending).
+    pub fn new(state: usize, params: usize, rows_per_col: &[Vec<u32>]) -> Self {
+        assert_eq!(rows_per_col.len(), params);
+        let mut col_ptr = Vec::with_capacity(params + 1);
+        let mut row_idx = Vec::new();
+        col_ptr.push(0);
+        for rows in rows_per_col {
+            debug_assert!(rows.windows(2).all(|w| w[0] < w[1]));
+            debug_assert!(rows.iter().all(|&r| (r as usize) < state));
+            row_idx.extend_from_slice(rows);
+            col_ptr.push(row_idx.len());
+        }
+        let n = row_idx.len();
+        ImmediateJac { state, params, col_ptr, row_idx, vals: vec![0.0; n] }
+    }
+
+    #[inline]
+    pub fn state_size(&self) -> usize {
+        self.state
+    }
+
+    #[inline]
+    pub fn num_params(&self) -> usize {
+        self.params
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.row_idx.len()
+    }
+
+    #[inline]
+    pub fn col(&self, j: usize) -> (&[u32], &[f32]) {
+        let (s, e) = (self.col_ptr[j], self.col_ptr[j + 1]);
+        (&self.row_idx[s..e], &self.vals[s..e])
+    }
+
+    /// Mutable values of column j (structure untouched).
+    #[inline]
+    pub fn col_vals_mut(&mut self, j: usize) -> &mut [f32] {
+        let (s, e) = (self.col_ptr[j], self.col_ptr[j + 1]);
+        &mut self.vals[s..e]
+    }
+
+    #[inline]
+    pub fn vals(&self) -> &[f32] {
+        &self.vals
+    }
+
+    #[inline]
+    pub fn vals_mut(&mut self) -> &mut [f32] {
+        &mut self.vals
+    }
+
+    pub fn zero(&mut self) {
+        self.vals.iter_mut().for_each(|v| *v = 0.0);
+    }
+
+    /// Structural pattern (state × params) — the SnAp-1 pattern.
+    pub fn pattern(&self) -> Pattern {
+        let coords: Vec<(usize, usize)> = (0..self.params)
+            .flat_map(|j| self.col(j).0.iter().map(move |&i| (i as usize, j)).collect::<Vec<_>>())
+            .collect();
+        Pattern::from_coords(self.state, self.params, &coords)
+    }
+
+    /// `out[j] += Σ_i x[i]·I[i,j]` — i.e. `out += Iᵀ x` (used for the direct
+    /// parameter-gradient term and UORO's `Iᵀν`).
+    pub fn matvec_t_acc(&self, x: &[f32], out: &mut [f32]) {
+        assert_eq!(x.len(), self.state);
+        assert_eq!(out.len(), self.params);
+        for j in 0..self.params {
+            let (rows, vals) = self.col(j);
+            let mut s = 0.0f32;
+            for (&i, &v) in rows.iter().zip(vals) {
+                s += x[i as usize] * v;
+            }
+            out[j] += s;
+        }
+    }
+
+    /// Dense materialization (test/analysis only).
+    pub fn to_dense(&self) -> crate::tensor::Matrix {
+        let mut m = crate::tensor::Matrix::zeros(self.state, self.params);
+        for j in 0..self.params {
+            let (rows, vals) = self.col(j);
+            for (&i, &v) in rows.iter().zip(vals) {
+                m.set(i as usize, j, v);
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ImmediateJac {
+        // 4-state, 3-param: col0 -> row 1; col1 -> rows {0, 2}; col2 -> row 3.
+        let mut ij = ImmediateJac::new(4, 3, &[vec![1], vec![0, 2], vec![3]]);
+        ij.vals_mut().copy_from_slice(&[0.5, 1.0, -1.0, 2.0]);
+        ij
+    }
+
+    #[test]
+    fn structure_and_dense() {
+        let ij = sample();
+        assert_eq!(ij.nnz(), 4);
+        let d = ij.to_dense();
+        assert_eq!(d.get(1, 0), 0.5);
+        assert_eq!(d.get(0, 1), 1.0);
+        assert_eq!(d.get(2, 1), -1.0);
+        assert_eq!(d.get(3, 2), 2.0);
+        assert_eq!(d.nnz(0.0), 4);
+    }
+
+    #[test]
+    fn matvec_t_matches_dense() {
+        let ij = sample();
+        let x = [1.0f32, 2.0, 3.0, 4.0];
+        let mut out = vec![0.0f32; 3];
+        ij.matvec_t_acc(&x, &mut out);
+        let dense = ij.to_dense();
+        let expect = crate::tensor::ops::matvec_t(&dense, &x);
+        for (a, b) in out.iter().zip(expect.iter()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn pattern_matches_structure() {
+        let ij = sample();
+        let p = ij.pattern();
+        assert!(p.contains(1, 0) && p.contains(0, 1) && p.contains(2, 1) && p.contains(3, 2));
+        assert_eq!(p.nnz(), 4);
+    }
+}

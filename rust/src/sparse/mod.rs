@@ -1,0 +1,13 @@
+//! Sparsity substrate: boolean patterns (and the SnAp n-step pattern
+//! constructor), numeric CSR, the compressed immediate Jacobian `I_t`, and
+//! the column-compressed influence matrix `J̃_t` used by SnAp.
+
+pub mod coljac;
+pub mod csr;
+pub mod immediate;
+pub mod pattern;
+
+pub use coljac::ColJacobian;
+pub use csr::Csr;
+pub use immediate::ImmediateJac;
+pub use pattern::{snap_pattern, saturation_order, Pattern};

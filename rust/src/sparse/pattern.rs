@@ -1,0 +1,369 @@
+//! Boolean sparsity patterns (CSR of positions, no values).
+//!
+//! Patterns are the combinatorial core of SnAp: the sparsity pattern of the
+//! influence matrix after n steps is computed by boolean pattern algebra
+//! (`P_1 = pat(I)`, `P_m = pat(I) ∪ pat(D)·P_{m-1}` — paper §3), and the
+//! resulting nnz counts drive both the masked update kernels and the FLOP
+//! accounting of Table 3.
+
+use crate::tensor::rng::Pcg32;
+
+/// CSR boolean pattern: for each row, a sorted list of nonzero column ids.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Pattern {
+    rows: usize,
+    cols: usize,
+    row_ptr: Vec<usize>,
+    col_idx: Vec<u32>,
+}
+
+impl Pattern {
+    pub fn empty(rows: usize, cols: usize) -> Self {
+        Pattern { rows, cols, row_ptr: vec![0; rows + 1], col_idx: Vec::new() }
+    }
+
+    pub fn dense(rows: usize, cols: usize) -> Self {
+        let mut row_ptr = Vec::with_capacity(rows + 1);
+        let mut col_idx = Vec::with_capacity(rows * cols);
+        row_ptr.push(0);
+        for _ in 0..rows {
+            for j in 0..cols {
+                col_idx.push(j as u32);
+            }
+            row_ptr.push(col_idx.len());
+        }
+        Pattern { rows, cols, row_ptr, col_idx }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut row_ptr = Vec::with_capacity(n + 1);
+        row_ptr.push(0);
+        let mut col_idx = Vec::with_capacity(n);
+        for i in 0..n {
+            col_idx.push(i as u32);
+            row_ptr.push(i + 1);
+        }
+        Pattern { rows: n, cols: n, row_ptr, col_idx }
+    }
+
+    /// Build from per-row sorted column lists.
+    pub fn from_rows(rows: usize, cols: usize, lists: &[Vec<u32>]) -> Self {
+        assert_eq!(lists.len(), rows);
+        let mut row_ptr = Vec::with_capacity(rows + 1);
+        let mut col_idx = Vec::new();
+        row_ptr.push(0);
+        for l in lists {
+            debug_assert!(l.windows(2).all(|w| w[0] < w[1]), "rows must be sorted+unique");
+            debug_assert!(l.iter().all(|&c| (c as usize) < cols));
+            col_idx.extend_from_slice(l);
+            row_ptr.push(col_idx.len());
+        }
+        Pattern { rows, cols, row_ptr, col_idx }
+    }
+
+    /// Build from an unsorted list of (row, col) coordinates (dedups).
+    pub fn from_coords(rows: usize, cols: usize, coords: &[(usize, usize)]) -> Self {
+        let mut lists: Vec<Vec<u32>> = vec![Vec::new(); rows];
+        for &(i, j) in coords {
+            assert!(i < rows && j < cols);
+            lists[i].push(j as u32);
+        }
+        for l in lists.iter_mut() {
+            l.sort_unstable();
+            l.dedup();
+        }
+        Self::from_rows(rows, cols, &lists)
+    }
+
+    /// Uniformly random pattern with exactly `round(density*rows*cols)` kept
+    /// entries (the paper's "sparsity pattern chosen uniformly at random").
+    pub fn random(rows: usize, cols: usize, density: f64, rng: &mut Pcg32) -> Self {
+        let total = rows * cols;
+        let keep = ((total as f64) * density).round() as usize;
+        let keep = keep.min(total);
+        let picked = rng.choose_indices(total, keep);
+        let mut lists: Vec<Vec<u32>> = vec![Vec::new(); rows];
+        for flat in picked {
+            lists[flat / cols].push((flat % cols) as u32);
+        }
+        Pattern::from_rows(rows, cols, &lists)
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    pub fn density(&self) -> f64 {
+        if self.rows * self.cols == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / (self.rows * self.cols) as f64
+        }
+    }
+
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.density()
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[u32] {
+        &self.col_idx[self.row_ptr[i]..self.row_ptr[i + 1]]
+    }
+
+    pub fn contains(&self, i: usize, j: usize) -> bool {
+        self.row(i).binary_search(&(j as u32)).is_ok()
+    }
+
+    /// Set union (shapes must match).
+    pub fn union(&self, other: &Pattern) -> Pattern {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let mut lists = Vec::with_capacity(self.rows);
+        for i in 0..self.rows {
+            lists.push(merge_sorted(self.row(i), other.row(i)));
+        }
+        Pattern::from_rows(self.rows, self.cols, &lists)
+    }
+
+    /// Boolean matrix product: (self · other)(i,j) = ∃m self(i,m) ∧ other(m,j).
+    pub fn bool_matmul(&self, other: &Pattern) -> Pattern {
+        assert_eq!(self.cols, other.rows, "bool_matmul shape");
+        let mut lists: Vec<Vec<u32>> = Vec::with_capacity(self.rows);
+        let mut stamp = vec![u32::MAX; other.cols];
+        for i in 0..self.rows {
+            let mut out = Vec::new();
+            for &m in self.row(i) {
+                for &j in other.row(m as usize) {
+                    if stamp[j as usize] != i as u32 {
+                        stamp[j as usize] = i as u32;
+                        out.push(j);
+                    }
+                }
+            }
+            out.sort_unstable();
+            lists.push(out);
+        }
+        Pattern::from_rows(self.rows, other.cols, &lists)
+    }
+
+    pub fn transpose(&self) -> Pattern {
+        let mut lists: Vec<Vec<u32>> = vec![Vec::new(); self.cols];
+        for i in 0..self.rows {
+            for &j in self.row(i) {
+                lists[j as usize].push(i as u32);
+            }
+        }
+        // Rows were scanned in order, so each list is already sorted.
+        Pattern::from_rows(self.cols, self.rows, &lists)
+    }
+
+    /// Add the full diagonal (for square patterns) — skip connections /
+    /// leaky-integration terms that make SnAp-1 expressive (paper eq. 3).
+    pub fn with_diagonal(&self) -> Pattern {
+        assert_eq!(self.rows, self.cols);
+        self.union(&Pattern::identity(self.rows))
+    }
+
+    /// Iterate all (row, col) coordinates.
+    pub fn iter(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        (0..self.rows).flat_map(move |i| self.row(i).iter().map(move |&j| (i, j as usize)))
+    }
+
+    /// Column-compressed view: (col_ptr, row_idx) with rows sorted per column.
+    pub fn to_csc(&self) -> (Vec<usize>, Vec<u32>) {
+        let mut counts = vec![0usize; self.cols + 1];
+        for &j in &self.col_idx {
+            counts[j as usize + 1] += 1;
+        }
+        for c in 1..=self.cols {
+            counts[c] += counts[c - 1];
+        }
+        let col_ptr = counts.clone();
+        let mut cursor = counts;
+        let mut row_idx = vec![0u32; self.nnz()];
+        for i in 0..self.rows {
+            for &j in self.row(i) {
+                row_idx[cursor[j as usize]] = i as u32;
+                cursor[j as usize] += 1;
+            }
+        }
+        (col_ptr, row_idx)
+    }
+}
+
+fn merge_sorted(a: &[u32], b: &[u32]) -> Vec<u32> {
+    let mut out = Vec::with_capacity(a.len() + b.len());
+    let (mut x, mut y) = (0, 0);
+    while x < a.len() && y < b.len() {
+        match a[x].cmp(&b[y]) {
+            std::cmp::Ordering::Less => {
+                out.push(a[x]);
+                x += 1;
+            }
+            std::cmp::Ordering::Greater => {
+                out.push(b[y]);
+                y += 1;
+            }
+            std::cmp::Ordering::Equal => {
+                out.push(a[x]);
+                x += 1;
+                y += 1;
+            }
+        }
+    }
+    out.extend_from_slice(&a[x..]);
+    out.extend_from_slice(&b[y..]);
+    out
+}
+
+/// The SnAp-n influence pattern (paper §3):
+///   P_1 = pat(I);   P_m = pat(I) ∪ pat(D) · P_{m-1}
+/// `d_pat` is the structural pattern of the dynamics Jacobian D_t
+/// (state×state) and `i_pat` the structural pattern of the immediate
+/// Jacobian I_t (state×params). Both are *fixed over time* because the
+/// sparsity pattern of the weights is fixed.
+pub fn snap_pattern(d_pat: &Pattern, i_pat: &Pattern, n: usize) -> Pattern {
+    assert!(n >= 1, "SnAp order must be >= 1");
+    let mut p = i_pat.clone();
+    for _ in 1..n {
+        p = i_pat.union(&d_pat.bool_matmul(&p));
+    }
+    p
+}
+
+/// Number of steps until the SnAp pattern saturates (stops growing); after
+/// saturation SnAp-n is exactly full (sparse-optimized) RTRL — paper §1
+/// "SnAp becomes equivalent to RTRL when n is large".
+pub fn saturation_order(d_pat: &Pattern, i_pat: &Pattern, max_n: usize) -> usize {
+    let mut prev = i_pat.clone();
+    for n in 2..=max_n {
+        let next = i_pat.union(&d_pat.bool_matmul(&prev));
+        if next.nnz() == prev.nnz() {
+            return n - 1;
+        }
+        prev = next;
+    }
+    max_n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_pattern_density() {
+        let mut rng = Pcg32::seeded(1);
+        let p = Pattern::random(64, 64, 0.25, &mut rng);
+        assert_eq!(p.nnz(), (64 * 64) / 4);
+        assert!((p.density() - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn union_and_contains() {
+        let a = Pattern::from_coords(3, 3, &[(0, 0), (1, 2)]);
+        let b = Pattern::from_coords(3, 3, &[(0, 0), (2, 1)]);
+        let u = a.union(&b);
+        assert_eq!(u.nnz(), 3);
+        assert!(u.contains(0, 0) && u.contains(1, 2) && u.contains(2, 1));
+        assert!(!u.contains(2, 2));
+    }
+
+    #[test]
+    fn bool_matmul_matches_dense() {
+        let mut rng = Pcg32::seeded(2);
+        let a = Pattern::random(10, 12, 0.3, &mut rng);
+        let b = Pattern::random(12, 9, 0.3, &mut rng);
+        let c = a.bool_matmul(&b);
+        for i in 0..10 {
+            for j in 0..9 {
+                let expect = (0..12).any(|m| a.contains(i, m) && b.contains(m, j));
+                assert_eq!(c.contains(i, j), expect, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn identity_is_matmul_neutral() {
+        let mut rng = Pcg32::seeded(3);
+        let a = Pattern::random(8, 8, 0.4, &mut rng);
+        assert_eq!(Pattern::identity(8).bool_matmul(&a), a);
+        assert_eq!(a.bool_matmul(&Pattern::identity(8)), a);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Pcg32::seeded(4);
+        let a = Pattern::random(7, 13, 0.2, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+        assert!(a.iter().all(|(i, j)| a.transpose().contains(j, i)));
+    }
+
+    #[test]
+    fn csc_roundtrip() {
+        let mut rng = Pcg32::seeded(5);
+        let a = Pattern::random(9, 11, 0.3, &mut rng);
+        let (col_ptr, row_idx) = a.to_csc();
+        assert_eq!(*col_ptr.last().unwrap(), a.nnz());
+        let mut count = 0;
+        for j in 0..11 {
+            let rows = &row_idx[col_ptr[j]..col_ptr[j + 1]];
+            assert!(rows.windows(2).all(|w| w[0] < w[1]), "csc rows sorted");
+            for &i in rows {
+                assert!(a.contains(i as usize, j));
+                count += 1;
+            }
+        }
+        assert_eq!(count, a.nnz());
+    }
+
+    #[test]
+    fn snap_pattern_grows_monotonically_and_saturates() {
+        // A ring topology: D = shift-by-one + diagonal. I touches one row per col.
+        let k = 6;
+        let d = Pattern::from_coords(
+            k,
+            k,
+            &(0..k).map(|i| (i, (i + 1) % k)).collect::<Vec<_>>(),
+        )
+        .with_diagonal();
+        let i_pat = Pattern::from_coords(k, k, &(0..k).map(|j| (j, j)).collect::<Vec<_>>());
+        let mut last = 0;
+        for n in 1..=k + 2 {
+            let p = snap_pattern(&d, &i_pat, n);
+            assert!(p.nnz() >= last, "monotone growth");
+            last = p.nnz();
+        }
+        // Ring is connected: saturation = fully dense columns.
+        let sat = snap_pattern(&d, &i_pat, k + 1);
+        assert_eq!(sat.nnz(), k * k);
+        assert!(saturation_order(&d, &i_pat, 32) <= k + 1);
+    }
+
+    #[test]
+    fn snap1_equals_immediate_pattern() {
+        let mut rng = Pcg32::seeded(6);
+        let d = Pattern::random(5, 5, 0.5, &mut rng);
+        let i_pat = Pattern::random(5, 20, 0.05, &mut rng);
+        assert_eq!(snap_pattern(&d, &i_pat, 1), i_pat);
+    }
+
+    #[test]
+    fn dense_d_snap2_is_dense_on_touched_cols() {
+        // Paper §3.1: "for dense networks SnAp-2 already reduces to full RTRL".
+        let k = 4;
+        let d = Pattern::dense(k, k);
+        let i_pat = Pattern::from_coords(k, 8, &(0..8).map(|j| (j % k, j)).collect::<Vec<_>>());
+        let p2 = snap_pattern(&d, &i_pat, 2);
+        assert_eq!(p2.nnz(), k * 8);
+    }
+}

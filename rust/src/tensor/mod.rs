@@ -1,0 +1,9 @@
+//! Dense tensor substrate: the `Matrix` type, fast dense kernels, and the
+//! deterministic RNG used across the whole library.
+
+pub mod matrix;
+pub mod ops;
+pub mod rng;
+
+pub use matrix::Matrix;
+pub use rng::Pcg32;

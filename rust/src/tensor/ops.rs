@@ -1,0 +1,315 @@
+//! Dense kernels: GEMM / GEMV, elementwise nonlinearities, softmax
+//! cross-entropy. These are the BPTT/RTRL baselines of Table 1, so they are
+//! written to be genuinely fast (blocked, unrolled, autovectorizable) rather
+//! than naive three-loops — the paper's cost comparisons assume a competent
+//! dense baseline.
+
+use super::matrix::Matrix;
+
+/// `C = A · B` (allocates C).
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.rows(), b.cols());
+    matmul_into(a, b, &mut c, false);
+    c
+}
+
+/// `C (+)= A · B`. If `accumulate` is false, C is overwritten.
+///
+/// i-k-j loop order: the inner j loop is a contiguous AXPY over C's row and
+/// B's row, which LLVM autovectorizes to FMA lanes. This is the single
+/// hottest dense kernel (RTRL's `D·J` is (k×k)·(k×p)).
+pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix, accumulate: bool) {
+    let (m, ka) = a.shape();
+    let (kb, n) = b.shape();
+    assert_eq!(ka, kb, "matmul: inner dims {ka} != {kb}");
+    assert_eq!(c.shape(), (m, n), "matmul: output shape");
+    if !accumulate {
+        c.fill(0.0);
+    }
+    for i in 0..m {
+        let arow = a.row(i);
+        // Split borrow: c row is disjoint from a/b.
+        let crow = c.row_mut(i);
+        for (k, &aik) in arow.iter().enumerate() {
+            if aik == 0.0 {
+                continue; // free win for sparse-ish operands
+            }
+            let brow = b.row(k);
+            axpy_slice(crow, aik, brow);
+        }
+    }
+}
+
+/// `y (+)= alpha * x` over slices — unrolled by 8 for reliable vectorization.
+#[inline]
+pub fn axpy_slice(y: &mut [f32], alpha: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    let n = y.len();
+    let chunks = n / 8;
+    // SAFETY-free manual unroll via chunk iterators.
+    let (yc, yr) = y.split_at_mut(chunks * 8);
+    let (xc, xr) = x.split_at(chunks * 8);
+    for (yy, xx) in yc.chunks_exact_mut(8).zip(xc.chunks_exact(8)) {
+        yy[0] += alpha * xx[0];
+        yy[1] += alpha * xx[1];
+        yy[2] += alpha * xx[2];
+        yy[3] += alpha * xx[3];
+        yy[4] += alpha * xx[4];
+        yy[5] += alpha * xx[5];
+        yy[6] += alpha * xx[6];
+        yy[7] += alpha * xx[7];
+    }
+    for (yy, xx) in yr.iter_mut().zip(xr.iter()) {
+        *yy += alpha * xx;
+    }
+}
+
+/// Dot product, unrolled.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 8];
+    let chunks = a.len() / 8;
+    let (ac, ar) = a.split_at(chunks * 8);
+    let (bc, br) = b.split_at(chunks * 8);
+    for (aa, bb) in ac.chunks_exact(8).zip(bc.chunks_exact(8)) {
+        for l in 0..8 {
+            acc[l] += aa[l] * bb[l];
+        }
+    }
+    let mut s: f32 = acc.iter().sum();
+    for (aa, bb) in ar.iter().zip(br.iter()) {
+        s += aa * bb;
+    }
+    s
+}
+
+/// `y = A · x` (matrix-vector).
+pub fn matvec(a: &Matrix, x: &[f32]) -> Vec<f32> {
+    assert_eq!(a.cols(), x.len());
+    (0..a.rows()).map(|i| dot(a.row(i), x)).collect()
+}
+
+/// `y = Aᵀ · x` without materializing the transpose.
+pub fn matvec_t(a: &Matrix, x: &[f32]) -> Vec<f32> {
+    assert_eq!(a.rows(), x.len());
+    let mut y = vec![0.0f32; a.cols()];
+    for (i, &xi) in x.iter().enumerate() {
+        if xi != 0.0 {
+            axpy_slice(&mut y, xi, a.row(i));
+        }
+    }
+    y
+}
+
+/// Rank-1 update `A += alpha * u vᵀ`.
+pub fn ger(a: &mut Matrix, alpha: f32, u: &[f32], v: &[f32]) {
+    assert_eq!(a.rows(), u.len());
+    assert_eq!(a.cols(), v.len());
+    for (i, &ui) in u.iter().enumerate() {
+        let coef = alpha * ui;
+        if coef != 0.0 {
+            axpy_slice(a.row_mut(i), coef, v);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Nonlinearities (and their derivatives expressed in terms of the *output*,
+// which is what the analytic cell jacobians need).
+// ---------------------------------------------------------------------------
+
+#[inline]
+pub fn sigmoid(x: f32) -> f32 {
+    if x >= 0.0 {
+        let z = (-x).exp();
+        1.0 / (1.0 + z)
+    } else {
+        let z = x.exp();
+        z / (1.0 + z)
+    }
+}
+
+/// σ'(x) given y = σ(x).
+#[inline]
+pub fn dsigmoid_from_y(y: f32) -> f32 {
+    y * (1.0 - y)
+}
+
+#[inline]
+pub fn tanh_f(x: f32) -> f32 {
+    x.tanh()
+}
+
+/// tanh'(x) given y = tanh(x).
+#[inline]
+pub fn dtanh_from_y(y: f32) -> f32 {
+    1.0 - y * y
+}
+
+#[inline]
+pub fn relu(x: f32) -> f32 {
+    x.max(0.0)
+}
+
+#[inline]
+pub fn drelu(x: f32) -> f32 {
+    if x > 0.0 {
+        1.0
+    } else {
+        0.0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Softmax cross-entropy
+// ---------------------------------------------------------------------------
+
+/// Numerically-stable log-softmax in place.
+pub fn log_softmax(logits: &mut [f32]) {
+    let maxv = logits.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+    let mut sum = 0.0f32;
+    for x in logits.iter_mut() {
+        *x -= maxv;
+        sum += x.exp();
+    }
+    let lse = sum.ln();
+    for x in logits.iter_mut() {
+        *x -= lse;
+    }
+}
+
+/// Softmax cross-entropy loss and gradient w.r.t. logits.
+/// Returns (nll_nats, grad). grad = softmax(logits) - onehot(target).
+pub fn softmax_xent(logits: &[f32], target: usize) -> (f32, Vec<f32>) {
+    debug_assert!(target < logits.len());
+    let mut ls = logits.to_vec();
+    log_softmax(&mut ls);
+    let loss = -ls[target];
+    let mut grad: Vec<f32> = ls.iter().map(|&l| l.exp()).collect();
+    grad[target] -= 1.0;
+    (loss, grad)
+}
+
+/// nats → bits.
+#[inline]
+pub fn nats_to_bits(nats: f32) -> f32 {
+    nats / std::f32::consts::LN_2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::rng::Pcg32;
+
+    fn naive_matmul(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut s = 0.0;
+                for k in 0..a.cols() {
+                    s += a.get(i, k) * b.get(k, j);
+                }
+                c.set(i, j, s);
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Pcg32::seeded(1);
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (3, 4, 5), (8, 8, 8), (13, 7, 17)] {
+            let a = Matrix::from_fn(m, k, |_, _| rng.normal());
+            let b = Matrix::from_fn(k, n, |_, _| rng.normal());
+            let c1 = matmul(&a, &b);
+            let c2 = naive_matmul(&a, &b);
+            for (x, y) in c1.as_slice().iter().zip(c2.as_slice()) {
+                assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_accumulate() {
+        let a = Matrix::identity(3);
+        let b = Matrix::filled(3, 2, 1.0);
+        let mut c = Matrix::filled(3, 2, 10.0);
+        matmul_into(&a, &b, &mut c, true);
+        assert_eq!(c.get(0, 0), 11.0);
+    }
+
+    #[test]
+    fn matvec_t_matches_transpose() {
+        let mut rng = Pcg32::seeded(2);
+        let a = Matrix::from_fn(6, 9, |_, _| rng.normal());
+        let x: Vec<f32> = (0..6).map(|_| rng.normal()).collect();
+        let y1 = matvec_t(&a, &x);
+        let y2 = matvec(&a.transpose(), &x);
+        for (u, v) in y1.iter().zip(y2.iter()) {
+            assert!((u - v).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn ger_rank1() {
+        let mut a = Matrix::zeros(2, 3);
+        ger(&mut a, 2.0, &[1.0, -1.0], &[1.0, 2.0, 3.0]);
+        assert_eq!(a.get(0, 2), 6.0);
+        assert_eq!(a.get(1, 0), -2.0);
+    }
+
+    #[test]
+    fn sigmoid_stable_extremes() {
+        assert!((sigmoid(100.0) - 1.0).abs() < 1e-6);
+        assert!(sigmoid(-100.0) < 1e-6);
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-7);
+    }
+
+    #[test]
+    fn derivative_identities_finite_diff() {
+        let eps = 1e-3f32;
+        for &x in &[-2.0f32, -0.5, 0.0, 0.7, 1.9] {
+            let ds = (sigmoid(x + eps) - sigmoid(x - eps)) / (2.0 * eps);
+            assert!((ds - dsigmoid_from_y(sigmoid(x))).abs() < 1e-4);
+            let dt = (tanh_f(x + eps) - tanh_f(x - eps)) / (2.0 * eps);
+            assert!((dt - dtanh_from_y(tanh_f(x))).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn softmax_xent_gradient_sums_to_zero() {
+        let logits = [0.5f32, -1.0, 2.0, 0.0];
+        let (loss, grad) = softmax_xent(&logits, 2);
+        assert!(loss > 0.0);
+        let s: f32 = grad.iter().sum();
+        assert!(s.abs() < 1e-6);
+        // Target entry must be negative (prob - 1).
+        assert!(grad[2] < 0.0);
+    }
+
+    #[test]
+    fn softmax_xent_finite_diff() {
+        let logits = vec![0.3f32, -0.2, 0.9];
+        let (_, grad) = softmax_xent(&logits, 1);
+        let eps = 1e-3;
+        for i in 0..3 {
+            let mut lp = logits.clone();
+            lp[i] += eps;
+            let mut lm = logits.clone();
+            lm[i] -= eps;
+            let (l1, _) = softmax_xent(&lp, 1);
+            let (l2, _) = softmax_xent(&lm, 1);
+            let fd = (l1 - l2) / (2.0 * eps);
+            assert!((fd - grad[i]).abs() < 1e-3, "i={i} fd={fd} an={}", grad[i]);
+        }
+    }
+
+    #[test]
+    fn log_softmax_normalizes() {
+        let mut l = vec![1.0f32, 2.0, 3.0];
+        log_softmax(&mut l);
+        let p: f32 = l.iter().map(|x| x.exp()).sum();
+        assert!((p - 1.0).abs() < 1e-5);
+    }
+}

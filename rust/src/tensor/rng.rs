@@ -1,0 +1,266 @@
+//! Deterministic PCG-XSH-RR 64/32 random number generator.
+//!
+//! Every stochastic component of the library (weight init, sparsity patterns,
+//! data sampling, UORO sign vectors) draws from this generator so that
+//! experiments are exactly reproducible from a seed. No external crates.
+
+/// PCG-XSH-RR 64/32: 64-bit LCG state, 32-bit output with xorshift+rotate.
+/// Reference: O'Neill 2014, "PCG: A Family of Simple Fast Space-Efficient
+/// Statistically Good Algorithms for Random Number Generation".
+#[derive(Clone, Debug)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Pcg32 {
+    /// Seed the generator. `seq` selects an independent stream.
+    pub fn new(seed: u64, seq: u64) -> Self {
+        let mut rng = Pcg32 { state: 0, inc: (seq << 1) | 1 };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Convenience single-stream constructor.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0xda3e39cb94b95bdb)
+    }
+
+    /// Split off an independent child stream (used to give each worker /
+    /// each experiment arm its own reproducible stream).
+    pub fn split(&mut self, tag: u64) -> Pcg32 {
+        let s = self.next_u64();
+        Pcg32::new(s ^ tag.wrapping_mul(0x9e3779b97f4a7c15), tag | 1)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f32 {
+        // 24 high bits -> exactly representable in f32.
+        (self.next_u32() >> 8) as f32 * (1.0 / 16_777_216.0)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n). Lemire's rejection-free-ish method with
+    /// rejection for exactness.
+    #[inline]
+    pub fn below(&mut self, n: u32) -> u32 {
+        debug_assert!(n > 0);
+        let mut x = self.next_u32();
+        let mut m = (x as u64) * (n as u64);
+        let mut l = m as u32;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u32();
+                m = (x as u64) * (n as u64);
+                l = m as u32;
+            }
+        }
+        (m >> 32) as u32
+    }
+
+    /// Uniform usize in [0, n).
+    #[inline]
+    pub fn below_usize(&mut self, n: usize) -> usize {
+        debug_assert!(n as u64 <= u32::MAX as u64, "below_usize: n too large");
+        self.below(n as u32) as usize
+    }
+
+    /// Standard normal via Box-Muller (cached second value).
+    pub fn normal(&mut self) -> f32 {
+        // Marsaglia polar method — avoids trig, numerically fine in f32.
+        loop {
+            let u = 2.0 * self.uniform() - 1.0;
+            let v = 2.0 * self.uniform() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                return u * (-2.0 * s.ln() / s).sqrt();
+            }
+        }
+    }
+
+    /// Normal with given mean / std.
+    #[inline]
+    pub fn normal_ms(&mut self, mean: f32, std: f32) -> f32 {
+        mean + std * self.normal()
+    }
+
+    /// Random sign in {-1.0, +1.0} (UORO's ν vector).
+    #[inline]
+    pub fn sign(&mut self) -> f32 {
+        if self.next_u32() & 1 == 0 { 1.0 } else { -1.0 }
+    }
+
+    /// Fill a slice with N(0, std²).
+    pub fn fill_normal(&mut self, out: &mut [f32], std: f32) {
+        for v in out.iter_mut() {
+            *v = self.normal() * std;
+        }
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        let n = xs.len();
+        for i in (1..n).rev() {
+            let j = self.below_usize(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Choose `m` distinct indices from [0, n) (reservoir when m << n,
+    /// shuffle otherwise). Returned sorted ascending.
+    pub fn choose_indices(&mut self, n: usize, m: usize) -> Vec<usize> {
+        assert!(m <= n);
+        let mut picked: Vec<usize>;
+        if m * 3 > n {
+            let mut all: Vec<usize> = (0..n).collect();
+            self.shuffle(&mut all);
+            picked = all[..m].to_vec();
+        } else {
+            // Floyd's algorithm.
+            let mut set = std::collections::HashSet::with_capacity(m);
+            for j in (n - m)..n {
+                let t = self.below_usize(j + 1);
+                if !set.insert(t) {
+                    set.insert(j);
+                }
+            }
+            picked = set.into_iter().collect();
+        }
+        picked.sort_unstable();
+        picked
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Pcg32::seeded(42);
+        let mut b = Pcg32::seeded(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg32::seeded(1);
+        let mut b = Pcg32::seeded(2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn uniform_bounds_and_mean() {
+        let mut r = Pcg32::seeded(7);
+        let mut sum = 0.0f64;
+        for _ in 0..10_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u as f64;
+        }
+        let mean = sum / 10_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Pcg32::seeded(3);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = r.below(10) as usize;
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg32::seeded(11);
+        let n = 20_000;
+        let (mut s1, mut s2) = (0.0f64, 0.0f64);
+        for _ in 0..n {
+            let x = r.normal() as f64;
+            s1 += x;
+            s2 += x * x;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.03, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn choose_indices_distinct_sorted() {
+        let mut r = Pcg32::seeded(5);
+        for &(n, m) in &[(100usize, 10usize), (50, 40), (8, 8), (1000, 3)] {
+            let idx = r.choose_indices(n, m);
+            assert_eq!(idx.len(), m);
+            for w in idx.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+            assert!(idx.iter().all(|&i| i < n));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg32::seeded(9);
+        let mut v: Vec<usize> = (0..128).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..128).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn split_streams_independent() {
+        let mut root = Pcg32::seeded(1234);
+        let mut c1 = root.split(1);
+        let mut c2 = root.split(2);
+        let same = (0..64).filter(|_| c1.next_u32() == c2.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn sign_is_pm_one() {
+        let mut r = Pcg32::seeded(77);
+        let mut pos = 0;
+        for _ in 0..1000 {
+            let s = r.sign();
+            assert!(s == 1.0 || s == -1.0);
+            if s > 0.0 {
+                pos += 1;
+            }
+        }
+        assert!((300..700).contains(&pos));
+    }
+}

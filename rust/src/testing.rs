@@ -1,0 +1,79 @@
+//! Deterministic property-testing mini-framework (offline stand-in for
+//! proptest). Generates seeded random cases, runs a property, and on failure
+//! reports the seed and case index so the exact case can be replayed.
+
+use crate::tensor::rng::Pcg32;
+
+/// Run `prop` against `cases` randomly-generated inputs. `generate` draws one
+/// input from the RNG. Panics with a replayable seed on the first failure.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    mut generate: impl FnMut(&mut Pcg32) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut root = Pcg32::seeded(seed);
+    for case in 0..cases {
+        let mut case_rng = root.split(case as u64);
+        let input = generate(&mut case_rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed}):\n  input: {input:?}\n  {msg}"
+            );
+        }
+    }
+}
+
+/// Assert two f32 slices are elementwise close.
+pub fn assert_close(a: &[f32], b: &[f32], tol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        if (x - y).abs() > tol * (1.0 + x.abs().max(y.abs())) {
+            return Err(format!("entry {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+/// Relative max-abs deviation between two slices (0 when identical).
+pub fn max_rel_dev(a: &[f32], b: &[f32]) -> f32 {
+    let scale = b.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-9);
+    a.iter().zip(b).fold(0.0f32, |m, (x, y)| m.max((x - y).abs())) / scale
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("sum-commutes", 1, 50, |r| (r.normal(), r.normal()), |&(a, b)| {
+            if (a + b - (b + a)).abs() < 1e-9 {
+                Ok(())
+            } else {
+                Err("non-commutative".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn check_reports_failures() {
+        check("always-fails", 2, 3, |r| r.normal(), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn assert_close_tolerances() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-5).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-5).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-5).is_err());
+    }
+
+    #[test]
+    fn max_rel_dev_zero_for_identical() {
+        assert_eq!(max_rel_dev(&[1.0, -2.0], &[1.0, -2.0]), 0.0);
+    }
+}

@@ -1,0 +1,157 @@
+//! Analytic cost model — Table 1 of the paper, evaluated exactly.
+//!
+//! | Method       | memory     | time per step        |
+//! |--------------|------------|----------------------|
+//! | BPTT         | `Tk + p`   | `k² + p`             |
+//! | UORO         | `k + p`    | `k² + p`             |
+//! | RTRL         | `k + kp`   | `k² + k²p`           |
+//! | Sparse BPTT  | `Tk + dp`  | `d(k² + p)`          |
+//! | Sparse RTRL  | `k + dkp`  | `d(k² + dk²p)`       |
+//! | SnAp-1       | `k + dp`   | `d(k² + p)`          |
+//! | SnAp-2       | `k + d²kp` | `d(k² + d²k²p)`      |
+//!
+//! `T` = sequence length, `k` = hidden units, `p` = recurrent params
+//! (dense count), `s` = sparsity, `d = 1 − s`. These are the asymptotic
+//! entries; `repro table1` prints them next to *measured* memory/FLOPs from
+//! the instrumented algorithms so the shapes can be compared directly.
+
+use crate::grad::Method;
+
+/// Inputs of the cost model.
+#[derive(Clone, Copy, Debug)]
+pub struct CostInputs {
+    /// sequence / truncation length
+    pub t: usize,
+    /// hidden units
+    pub k: usize,
+    /// dense recurrent parameter count
+    pub p: usize,
+    /// weight density d = 1 - sparsity
+    pub d: f64,
+}
+
+/// Asymptotic memory (in floats) per Table 1.
+pub fn table1_memory(method: Method, c: CostInputs) -> f64 {
+    let (t, k, p, d) = (c.t as f64, c.k as f64, c.p as f64, c.d);
+    match method {
+        Method::Bptt | Method::Frozen => {
+            if c.d < 1.0 {
+                t * k + d * p // Sparse BPTT row
+            } else {
+                t * k + p
+            }
+        }
+        Method::Uoro => k + p,
+        Method::Rtrl => k + k * p,
+        Method::SparseRtrl => k + d * k * p,
+        Method::Snap(1) => k + d * p,
+        Method::Snap(2) => k + d * d * k * p,
+        // General SnAp-n: k + d^n·k·p is the paper's extrapolation; exact
+        // values come from the measured pattern (see `repro table3`).
+        Method::Snap(n) => k + d.powi(n as i32) * k * p,
+        // top-k ablation stores budget·p values
+        Method::SnapTopK(b) => k + (b as f64) * p,
+        Method::Rflo => k + d * p,
+    }
+}
+
+/// Asymptotic time per step per Table 1.
+pub fn table1_time(method: Method, c: CostInputs) -> f64 {
+    let (k, p, d) = (c.k as f64, c.p as f64, c.d);
+    match method {
+        Method::Bptt | Method::Frozen => {
+            if c.d < 1.0 {
+                d * (k * k + p)
+            } else {
+                k * k + p
+            }
+        }
+        Method::Uoro => k * k + p,
+        Method::Rtrl => k * k + k * k * p,
+        Method::SparseRtrl => d * (k * k + d * k * k * p),
+        Method::Snap(1) => d * (k * k + p),
+        Method::Snap(2) => d * (k * k + d * d * k * k * p),
+        Method::Snap(n) => d * (k * k + d.powi(2 * (n as i32 - 1)) * k * k * p),
+        // top-k pays the full product plus a selection pass
+        Method::SnapTopK(_) => k * k + k * k * p,
+        Method::Rflo => d * (k * k + p),
+    }
+}
+
+/// Dense recurrent parameter count for an architecture.
+pub fn dense_params(arch: crate::cells::Arch, k: usize, input: usize) -> usize {
+    let gates = match arch {
+        crate::cells::Arch::Vanilla => 1,
+        crate::cells::Arch::Gru => 3,
+        crate::cells::Arch::Lstm => 4,
+    };
+    gates * (k * k + k * input + k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grad::Method;
+
+    const C: CostInputs = CostInputs { t: 128, k: 1000, p: 1_000_000, d: 1.0 };
+
+    #[test]
+    fn rtrl_is_quartic_ish() {
+        // Paper §2.1: RTRL needs ~|θ| times more compute than the forward
+        // pass — "a factor of roughly one million for a vanilla RNN with
+        // 1000 hidden units".
+        let fwd = (C.k * C.k) as f64;
+        let rtrl = table1_time(Method::Rtrl, C);
+        let factor = rtrl / fwd;
+        assert!(factor > 0.9e6 && factor < 1.1e6, "factor={factor}");
+    }
+
+    #[test]
+    fn snap1_no_more_expensive_than_bptt() {
+        // Abstract: "SnAp with n=1 is no more expensive than backpropagation."
+        for d in [1.0, 0.5, 0.25, 0.1] {
+            let c = CostInputs { d, ..C };
+            assert!(table1_time(Method::Snap(1), c) <= table1_time(Method::Bptt, c) + 1e-9);
+        }
+    }
+
+    #[test]
+    fn snap2_cheaper_than_uoro_when_d_below_two_thirds_root() {
+        // §3.3: SnAp-2 comparable with UORO when d < n^{-2/3}; e.g. 99%
+        // sparsity for a 1000-unit vanilla RNN.
+        let c = CostInputs { t: 128, k: 1000, p: 1_000_000, d: 0.01 };
+        let snap2 = table1_time(Method::Snap(2), c);
+        let uoro = table1_time(Method::Uoro, c);
+        assert!(snap2 < 2.0 * uoro, "snap2={snap2} uoro={uoro}");
+    }
+
+    #[test]
+    fn sparsity_cuts_sparse_rtrl_quadratically() {
+        // §3.2: "we save computation proportional to a factor of the
+        // sparsity squared."
+        let c1 = CostInputs { d: 1.0, ..C };
+        let c2 = CostInputs { d: 0.1, ..C };
+        let ratio = table1_time(Method::SparseRtrl, c1) / table1_time(Method::SparseRtrl, c2);
+        assert!((ratio - 100.0).abs() / 100.0 < 0.05, "ratio={ratio}");
+    }
+
+    #[test]
+    fn memory_ordering_matches_table() {
+        let c = CostInputs { t: 128, k: 256, p: 200_000, d: 0.25 };
+        let bptt = table1_memory(Method::Bptt, c);
+        let uoro = table1_memory(Method::Uoro, c);
+        let rtrl = table1_memory(Method::Rtrl, c);
+        let snap1 = table1_memory(Method::Snap(1), c);
+        let snap2 = table1_memory(Method::Snap(2), c);
+        // at these shapes: SnAp-1 < Sparse BPTT < UORO < SnAp-2 < RTRL
+        assert!(snap1 < bptt && bptt < uoro && uoro < snap2 && snap2 < rtrl);
+    }
+
+    #[test]
+    fn dense_param_counts() {
+        use crate::cells::Arch;
+        assert_eq!(dense_params(Arch::Vanilla, 4, 2), 16 + 8 + 4);
+        assert_eq!(dense_params(Arch::Gru, 4, 2), 3 * 28);
+        assert_eq!(dense_params(Arch::Lstm, 4, 2), 4 * 28);
+    }
+}

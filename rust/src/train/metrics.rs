@@ -1,0 +1,117 @@
+//! Training metrics: running means, EMAs, bits-per-character accounting.
+
+/// Simple running mean.
+#[derive(Clone, Debug, Default)]
+pub struct RunningMean {
+    sum: f64,
+    n: u64,
+}
+
+impl RunningMean {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, v: f64) {
+        self.sum += v;
+        self.n += 1;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn reset(&mut self) {
+        self.sum = 0.0;
+        self.n = 0;
+    }
+}
+
+/// Exponential moving average (debiased).
+#[derive(Clone, Debug)]
+pub struct Ema {
+    alpha: f64,
+    value: f64,
+    weight: f64,
+}
+
+impl Ema {
+    pub fn new(alpha: f64) -> Self {
+        Ema { alpha, value: 0.0, weight: 0.0 }
+    }
+
+    pub fn add(&mut self, v: f64) {
+        self.value = (1.0 - self.alpha) * self.value + self.alpha * v;
+        self.weight = (1.0 - self.alpha) * self.weight + self.alpha;
+    }
+
+    pub fn get(&self) -> f64 {
+        if self.weight == 0.0 {
+            f64::NAN
+        } else {
+            self.value / self.weight
+        }
+    }
+}
+
+/// Convert mean NLL in nats to bits per character.
+pub fn bpc_from_nats(mean_nats: f64) -> f64 {
+    mean_nats / std::f64::consts::LN_2
+}
+
+/// One point of a learning curve.
+#[derive(Clone, Copy, Debug)]
+pub struct CurvePoint {
+    /// x-axis: step index or cumulative tokens (driver-dependent).
+    pub x: u64,
+    pub train_bpc: f64,
+    /// NaN when no eval was run at this point.
+    pub valid_bpc: f64,
+    /// task-specific auxiliary value (curriculum level for Copy).
+    pub aux: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn running_mean_basic() {
+        let mut m = RunningMean::new();
+        assert!(m.mean().is_nan());
+        m.add(1.0);
+        m.add(3.0);
+        assert_eq!(m.mean(), 2.0);
+        m.reset();
+        assert_eq!(m.count(), 0);
+    }
+
+    #[test]
+    fn ema_converges_to_constant() {
+        let mut e = Ema::new(0.1);
+        for _ in 0..200 {
+            e.add(5.0);
+        }
+        assert!((e.get() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ema_debiased_from_start() {
+        let mut e = Ema::new(0.01);
+        e.add(7.0);
+        assert!((e.get() - 7.0).abs() < 1e-9, "debiasing should make first value exact");
+    }
+
+    #[test]
+    fn bpc_conversion() {
+        assert!((bpc_from_nats(std::f64::consts::LN_2) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,192 @@
+//! Progressive magnitude pruning (paper §5.1.2 / Table 2 / Figure 4).
+//!
+//! Follows Zhu & Gupta's cubic schedule: target sparsity
+//! `s(t) = s_f · (1 − (1 − (t−t0)/(t1−t0))³)` for `t ∈ [t0, t1]`, applied
+//! every `every` steps by zeroing the smallest-magnitude weights and keeping
+//! them clamped to zero afterwards. Biases are never pruned (§5.1.2).
+//!
+//! Implementation note (recorded in DESIGN.md): the cells' sparse structure
+//! is fixed at construction, so progressive pruning is realised as *value
+//! clamping* on a dense cell — mathematically identical to removing the
+//! weights (the paper's own Table 2 runs use BPTT, where pruning only
+//! changes values, not algorithmic cost).
+
+use crate::cells::{ParamInfo, Src};
+
+#[derive(Clone, Debug)]
+pub struct Pruner {
+    pub target_sparsity: f64,
+    pub begin_step: u64,
+    pub end_step: u64,
+    pub every: u64,
+    /// false = pruned (clamped to zero)
+    keep: Vec<bool>,
+    /// indices of prunable (non-bias) parameters
+    prunable: Vec<usize>,
+}
+
+impl Pruner {
+    pub fn new(
+        info: &[ParamInfo],
+        target_sparsity: f64,
+        begin_step: u64,
+        end_step: u64,
+        every: u64,
+    ) -> Self {
+        assert!(end_step > begin_step);
+        assert!((0.0..1.0).contains(&target_sparsity));
+        let prunable: Vec<usize> = info
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.src != Src::Bias)
+            .map(|(j, _)| j)
+            .collect();
+        Pruner {
+            target_sparsity,
+            begin_step,
+            end_step,
+            every: every.max(1),
+            keep: vec![true; info.len()],
+            prunable,
+        }
+    }
+
+    /// Zhu–Gupta cubic schedule: current target sparsity at `step`.
+    pub fn target_at(&self, step: u64) -> f64 {
+        if step < self.begin_step {
+            return 0.0;
+        }
+        if step >= self.end_step {
+            return self.target_sparsity;
+        }
+        let frac =
+            (step - self.begin_step) as f64 / (self.end_step - self.begin_step) as f64;
+        self.target_sparsity * (1.0 - (1.0 - frac).powi(3))
+    }
+
+    /// Current realized sparsity over prunable weights.
+    pub fn current_sparsity(&self) -> f64 {
+        let pruned = self.prunable.iter().filter(|&&j| !self.keep[j]).count();
+        pruned as f64 / self.prunable.len().max(1) as f64
+    }
+
+    /// Call after every optimizer step. Re-selects the pruned set on
+    /// schedule boundaries and always re-applies the clamp.
+    pub fn apply(&mut self, step: u64, theta: &mut [f32]) {
+        if step >= self.begin_step && step % self.every == 0 {
+            let target = self.target_at(step);
+            let to_prune = ((self.prunable.len() as f64) * target).round() as usize;
+            // threshold = magnitude of the to_prune-th smallest weight
+            let mut mags: Vec<(f32, usize)> =
+                self.prunable.iter().map(|&j| (theta[j].abs(), j)).collect();
+            mags.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            for &j in &self.prunable {
+                self.keep[j] = true;
+            }
+            for &(_, j) in mags.iter().take(to_prune) {
+                self.keep[j] = false;
+            }
+        }
+        // clamp
+        for &j in &self.prunable {
+            if !self.keep[j] {
+                theta[j] = 0.0;
+            }
+        }
+    }
+
+    /// Zero the gradient of pruned weights so optimizer state stays clean.
+    pub fn mask_grad(&self, grad: &mut [f32]) {
+        for &j in &self.prunable {
+            if !self.keep[j] {
+                grad[j] = 0.0;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::{Arch, Cell};
+    use crate::tensor::rng::Pcg32;
+
+    fn mk_cell() -> (Box<dyn Cell>, Vec<f32>) {
+        let mut rng = Pcg32::seeded(1100);
+        let cell = Arch::Gru.build(8, 4, 1.0, &mut rng);
+        let theta = cell.init_params(&mut rng);
+        (cell, theta)
+    }
+
+    #[test]
+    fn schedule_is_cubic_and_monotone() {
+        let (cell, _) = mk_cell();
+        let p = Pruner::new(cell.param_info(), 0.9, 100, 1100, 100);
+        assert_eq!(p.target_at(0), 0.0);
+        assert_eq!(p.target_at(1100), 0.9);
+        assert_eq!(p.target_at(99), 0.0);
+        let mut last = 0.0;
+        for s in (100..=1100).step_by(100) {
+            let t = p.target_at(s);
+            assert!(t >= last);
+            last = t;
+        }
+        // cubic: half-way point is already past 7/8 of the target
+        assert!(p.target_at(600) > 0.9 * 7.0 / 8.0 - 1e-9);
+    }
+
+    #[test]
+    fn prunes_smallest_magnitudes_and_clamps() {
+        let (cell, mut theta) = mk_cell();
+        let mut p = Pruner::new(cell.param_info(), 0.5, 0, 1, 1);
+        p.apply(1, &mut theta);
+        assert!((p.current_sparsity() - 0.5).abs() < 0.01);
+        // pruned weights are exactly zero; survivors are the larger ones
+        let info = cell.param_info();
+        let kept_mags: Vec<f32> = (0..theta.len())
+            .filter(|&j| info[j].src != Src::Bias && theta[j] != 0.0)
+            .map(|j| theta[j].abs())
+            .collect();
+        let zeroed = (0..theta.len())
+            .filter(|&j| info[j].src != Src::Bias && theta[j] == 0.0)
+            .count();
+        assert!(zeroed > 0);
+        let min_kept = kept_mags.iter().cloned().fold(f32::INFINITY, f32::min);
+        assert!(min_kept > 0.0);
+    }
+
+    #[test]
+    fn biases_never_pruned() {
+        let (cell, mut theta) = mk_cell();
+        let info = cell.param_info();
+        // make biases tiny so naive pruning would remove them first
+        for (j, pi) in info.iter().enumerate() {
+            if pi.src == Src::Bias {
+                theta[j] = 1e-9;
+            }
+        }
+        let mut p = Pruner::new(info, 0.9, 0, 1, 1);
+        p.apply(1, &mut theta);
+        for (j, pi) in info.iter().enumerate() {
+            if pi.src == Src::Bias {
+                assert_eq!(theta[j], 1e-9, "bias {j} was pruned");
+            }
+        }
+    }
+
+    #[test]
+    fn clamp_persists_between_selections() {
+        let (cell, mut theta) = mk_cell();
+        let mut p = Pruner::new(cell.param_info(), 0.5, 0, 1, 5);
+        p.apply(5, &mut theta); // selection step (past end → full target)
+        // simulate optimizer writing into pruned slots
+        for v in theta.iter_mut() {
+            if *v == 0.0 {
+                *v = 0.123;
+            }
+        }
+        p.apply(6, &mut theta); // not a selection step, but must re-clamp
+        let zeroed = theta.iter().filter(|&&v| v == 0.0).count();
+        assert!(zeroed > 0);
+    }
+}

@@ -1,0 +1,168 @@
+//! Cross-algorithm gradient identities, property-tested over random
+//! architectures, sparsities and sequence lengths (the repo's strongest
+//! correctness signal):
+//!
+//! 1. RTRL == BPTT exactly (eq. 1 == eq. 2).
+//! 2. Sparse-optimized RTRL (eq. 4) == dense RTRL.
+//! 3. SnAp-n at pattern saturation == RTRL.
+//! 4. SnAp bias shrinks monotonically with n (cosine distance to RTRL).
+
+use snap_rtrl::cells::Arch;
+use snap_rtrl::grad::{Bptt, GradAlgo, Method, Rtrl, Snap};
+use snap_rtrl::sparse::pattern::saturation_order;
+use snap_rtrl::tensor::rng::Pcg32;
+use snap_rtrl::testing::{check, max_rel_dev};
+
+struct Case {
+    arch: Arch,
+    k: usize,
+    input: usize,
+    density: f64,
+    steps: usize,
+    seed: u64,
+}
+
+impl std::fmt::Debug for Case {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:?} k={} in={} d={:.2} T={} seed={}",
+            self.arch, self.k, self.input, self.density, self.steps, self.seed
+        )
+    }
+}
+
+fn gen_case(rng: &mut Pcg32) -> Case {
+    let arch = [Arch::Vanilla, Arch::Gru, Arch::Lstm][rng.below_usize(3)];
+    Case {
+        arch,
+        k: 3 + rng.below_usize(6),
+        input: 1 + rng.below_usize(4),
+        density: [1.0, 0.6, 0.35][rng.below_usize(3)],
+        steps: 2 + rng.below_usize(7),
+        seed: rng.next_u64(),
+    }
+}
+
+fn run_algo(
+    case: &Case,
+    mut build: impl for<'a> FnMut(&'a dyn snap_rtrl::cells::Cell, &mut Pcg32) -> Box<dyn GradAlgo + 'a>,
+) -> Vec<f32> {
+    // NOTE: lifetime juggling — rebuild everything per call from the seed.
+    let mut rng = Pcg32::seeded(case.seed);
+    let cell = case.arch.build(case.k, case.input, case.density, &mut rng);
+    let theta = cell.init_params(&mut rng);
+    let xs: Vec<Vec<f32>> = (0..case.steps)
+        .map(|_| (0..case.input).map(|_| rng.normal()).collect())
+        .collect();
+    let cs: Vec<Vec<f32>> = (0..case.steps)
+        .map(|_| (0..cell.hidden_size()).map(|_| rng.normal()).collect())
+        .collect();
+    let mut algo_rng = Pcg32::seeded(case.seed ^ 0xfeed);
+    let mut algo = build(cell.as_ref(), &mut algo_rng);
+    let mut g = vec![0.0f32; cell.num_params()];
+    for t in 0..case.steps {
+        algo.step(&theta, &xs[t]);
+        algo.inject_loss(&cs[t], &mut g);
+    }
+    algo.flush(&theta, &mut g);
+    g
+}
+
+#[test]
+fn prop_rtrl_equals_bptt() {
+    check("rtrl==bptt", 0xA11CE, 25, gen_case, |case| {
+        let g_rtrl = run_algo(case, |c, _| Box::new(Rtrl::new(c, false)));
+        let g_bptt = run_algo(case, |c, _| Box::new(Bptt::new(c)));
+        let dev = max_rel_dev(&g_rtrl, &g_bptt);
+        if dev < 2e-4 {
+            Ok(())
+        } else {
+            Err(format!("max rel dev {dev}"))
+        }
+    });
+}
+
+#[test]
+fn prop_sparse_rtrl_is_exact() {
+    check("sparse-rtrl==rtrl", 0xB0B, 25, gen_case, |case| {
+        let g_d = run_algo(case, |c, _| Box::new(Rtrl::new(c, false)));
+        let g_s = run_algo(case, |c, _| Box::new(Rtrl::new(c, true)));
+        let dev = max_rel_dev(&g_s, &g_d);
+        if dev < 1e-4 {
+            Ok(())
+        } else {
+            Err(format!("max rel dev {dev}"))
+        }
+    });
+}
+
+#[test]
+fn prop_snap_saturates_to_rtrl() {
+    check("snap-sat==rtrl", 0xCAFE, 15, gen_case, |case| {
+        let mut rng = Pcg32::seeded(case.seed);
+        let cell = case.arch.build(case.k, case.input, case.density, &mut rng);
+        let sat = saturation_order(
+            &cell.dynamics_pattern(),
+            &cell.immediate_structure().pattern(),
+            4 * case.k + 4,
+        );
+        let g_snap = run_algo(case, |c, _| Box::new(Snap::new(c, sat)));
+        let g_rtrl = run_algo(case, |c, _| Box::new(Rtrl::new(c, false)));
+        let dev = max_rel_dev(&g_snap, &g_rtrl);
+        if dev < 2e-4 {
+            Ok(())
+        } else {
+            Err(format!("saturation={sat}, max rel dev {dev}"))
+        }
+    });
+}
+
+#[test]
+fn prop_snap_bias_monotone_in_n() {
+    check("snap-bias-monotone", 0xD00D, 12, gen_case, |case| {
+        let g_rtrl = run_algo(case, |c, _| Box::new(Rtrl::new(c, false)));
+        let cos_dist = |g: &[f32]| -> f64 {
+            let dot: f64 = g.iter().zip(&g_rtrl).map(|(a, &b)| *a as f64 * b as f64).sum();
+            let na: f64 = g.iter().map(|a| (*a as f64).powi(2)).sum::<f64>().sqrt();
+            let nb: f64 = g_rtrl.iter().map(|b| (*b as f64).powi(2)).sum::<f64>().sqrt();
+            1.0 - dot / (na * nb).max(1e-300)
+        };
+        let d1 = cos_dist(&run_algo(case, |c, _| Box::new(Snap::new(c, 1))));
+        let d2 = cos_dist(&run_algo(case, |c, _| Box::new(Snap::new(c, 2))));
+        let d3 = cos_dist(&run_algo(case, |c, _| Box::new(Snap::new(c, 3))));
+        // allow tiny float jitter in the comparison
+        if d1 >= d2 - 1e-6 && d2 >= d3 - 1e-6 {
+            Ok(())
+        } else {
+            Err(format!("distances not monotone: {d1} {d2} {d3}"))
+        }
+    });
+}
+
+#[test]
+fn methods_build_for_every_arch() {
+    let mut rng = Pcg32::seeded(5);
+    for arch in [Arch::Vanilla, Arch::Gru, Arch::Lstm] {
+        let cell = arch.build(6, 3, 0.5, &mut rng);
+        for m in [
+            Method::Bptt,
+            Method::Rtrl,
+            Method::SparseRtrl,
+            Method::Snap(1),
+            Method::Snap(2),
+            Method::Uoro,
+            Method::Rflo,
+            Method::Frozen,
+        ] {
+            let mut algo = m.build(cell.as_ref(), &mut rng);
+            let theta = cell.init_params(&mut rng);
+            let mut g = vec![0.0f32; cell.num_params()];
+            algo.step(&theta, &[0.1, -0.1, 0.2]);
+            algo.inject_loss(&vec![0.1; cell.hidden_size()], &mut g);
+            algo.flush(&theta, &mut g);
+            algo.reset();
+            assert!(algo.state().iter().all(|&v| v == 0.0), "{arch:?}/{}", m.name());
+        }
+    }
+}

@@ -1,0 +1,192 @@
+//! Property tests on the sparsity substrate: pattern algebra invariants,
+//! CSR/ColJacobian numerics, and the SnAp pattern's structural guarantees.
+
+use snap_rtrl::sparse::coljac::ColJacobian;
+use snap_rtrl::sparse::csr::Csr;
+use snap_rtrl::sparse::immediate::ImmediateJac;
+use snap_rtrl::sparse::pattern::{snap_pattern, Pattern};
+use snap_rtrl::tensor::matrix::Matrix;
+use snap_rtrl::tensor::ops::matmul;
+use snap_rtrl::tensor::rng::Pcg32;
+use snap_rtrl::testing::check;
+
+#[derive(Debug)]
+struct PatCase {
+    rows: usize,
+    cols: usize,
+    density: f64,
+    seed: u64,
+}
+
+fn gen_pat(rng: &mut Pcg32) -> PatCase {
+    PatCase {
+        rows: 2 + rng.below_usize(12),
+        cols: 2 + rng.below_usize(12),
+        density: 0.05 + 0.6 * rng.uniform() as f64,
+        seed: rng.next_u64(),
+    }
+}
+
+#[test]
+fn prop_union_is_idempotent_commutative_monotone() {
+    check("pattern-union", 1, 40, gen_pat, |c| {
+        let mut rng = Pcg32::seeded(c.seed);
+        let a = Pattern::random(c.rows, c.cols, c.density, &mut rng);
+        let b = Pattern::random(c.rows, c.cols, c.density, &mut rng);
+        let u1 = a.union(&b);
+        let u2 = b.union(&a);
+        if u1 != u2 {
+            return Err("union not commutative".into());
+        }
+        if a.union(&a) != a {
+            return Err("union not idempotent".into());
+        }
+        if u1.nnz() < a.nnz().max(b.nnz()) {
+            return Err("union lost entries".into());
+        }
+        if u1.nnz() > a.nnz() + b.nnz() {
+            return Err("union invented entries".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bool_matmul_matches_numeric_support() {
+    check("bool-matmul-support", 2, 30, gen_pat, |c| {
+        let mut rng = Pcg32::seeded(c.seed);
+        let a_pat = Pattern::random(c.rows, c.cols, c.density, &mut rng);
+        let b_pat = Pattern::random(c.cols, c.rows, c.density, &mut rng);
+        // strictly positive values → numeric product support == bool product
+        let mut a = Matrix::zeros(c.rows, c.cols);
+        for (i, j) in a_pat.iter() {
+            a.set(i, j, 1.0 + rng.uniform());
+        }
+        let mut b = Matrix::zeros(c.cols, c.rows);
+        for (i, j) in b_pat.iter() {
+            b.set(i, j, 1.0 + rng.uniform());
+        }
+        let prod = matmul(&a, &b);
+        let bp = a_pat.bool_matmul(&b_pat);
+        for i in 0..c.rows {
+            for j in 0..c.rows {
+                let numeric = prod.get(i, j) > 0.0;
+                if numeric != bp.contains(i, j) {
+                    return Err(format!("support mismatch at ({i},{j})"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_snap_pattern_nested_and_contains_immediate() {
+    check("snap-pattern-nesting", 3, 30, gen_pat, |c| {
+        let mut rng = Pcg32::seeded(c.seed);
+        let k = c.rows.max(2);
+        let p = k * 3;
+        let d_pat = Pattern::random(k, k, c.density, &mut rng).with_diagonal();
+        let i_pat = Pattern::from_coords(
+            k,
+            p,
+            &(0..p).map(|j| (j % k, j)).collect::<Vec<_>>(),
+        );
+        let mut prev = snap_pattern(&d_pat, &i_pat, 1);
+        for n in 2..=5 {
+            let cur = snap_pattern(&d_pat, &i_pat, n);
+            // nested: P_{n-1} ⊆ P_n
+            for (i, j) in prev.iter() {
+                if !cur.contains(i, j) {
+                    return Err(format!("P_{} lost entry ({i},{j}) of P_{}", n, n - 1));
+                }
+            }
+            // always contains pat(I)
+            for (i, j) in i_pat.iter() {
+                if !cur.contains(i, j) {
+                    return Err(format!("P_{n} missing immediate entry ({i},{j})"));
+                }
+            }
+            prev = cur;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_coljac_update_matches_dense_masked() {
+    check("coljac-vs-dense", 4, 25, gen_pat, |c| {
+        let mut rng = Pcg32::seeded(c.seed);
+        let state = 2 + c.rows.min(8);
+        let params = 3 * state;
+        // immediate: one row per column
+        let rows_per_col: Vec<Vec<u32>> =
+            (0..params).map(|j| vec![(j % state) as u32]).collect();
+        let mut ij = ImmediateJac::new(state, params, &rows_per_col);
+        let d_pat = Pattern::random(state, state, c.density.max(0.2), &mut rng).with_diagonal();
+        let mut d = Matrix::zeros(state, state);
+        for (i, j) in d_pat.iter() {
+            d.set(i, j, rng.normal() * 0.5);
+        }
+        let pat = snap_pattern(&d_pat, &ij.pattern(), 2);
+        let mut cj = ColJacobian::from_pattern(&pat);
+        let mut dense = Matrix::zeros(state, params);
+        for _ in 0..4 {
+            for v in ij.vals_mut() {
+                *v = rng.normal();
+            }
+            // dense reference: mask ⊙ (I + D·J)
+            let mut next = matmul(&d, &dense);
+            let i_dense = ij.to_dense();
+            next.axpy(1.0, &i_dense);
+            let mut masked = Matrix::zeros(state, params);
+            for (i, j) in pat.iter() {
+                masked.set(i, j, next.get(i, j));
+            }
+            dense = masked;
+            cj.update(&d, &ij);
+        }
+        let got = cj.to_dense();
+        for (a, b) in got.as_slice().iter().zip(dense.as_slice()) {
+            if (a - b).abs() > 1e-4 {
+                return Err(format!("{a} vs {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_csr_spmm_equals_dense() {
+    check("csr-spmm", 5, 30, gen_pat, |c| {
+        let mut rng = Pcg32::seeded(c.seed);
+        let pat = Pattern::random(c.rows, c.cols, c.density, &mut rng);
+        let mut a = Matrix::zeros(c.rows, c.cols);
+        for (i, j) in pat.iter() {
+            a.set(i, j, rng.normal());
+        }
+        let csr = Csr::from_dense(&a, &pat);
+        let b = Matrix::from_fn(c.cols, 5, |_, _| rng.normal());
+        let c1 = csr.spmm(&b);
+        let c2 = matmul(&a, &b);
+        snap_rtrl::testing::assert_close(c1.as_slice(), c2.as_slice(), 1e-4)
+    });
+}
+
+#[test]
+fn prop_transpose_preserves_nnz_and_membership() {
+    check("pattern-transpose", 6, 40, gen_pat, |c| {
+        let mut rng = Pcg32::seeded(c.seed);
+        let a = Pattern::random(c.rows, c.cols, c.density, &mut rng);
+        let t = a.transpose();
+        if t.nnz() != a.nnz() {
+            return Err("nnz changed".into());
+        }
+        for (i, j) in a.iter() {
+            if !t.contains(j, i) {
+                return Err(format!("lost ({i},{j})"));
+            }
+        }
+        Ok(())
+    });
+}

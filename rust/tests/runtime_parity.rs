@@ -1,0 +1,138 @@
+//! Runtime integration: load the AOT artifacts, check numerical parity of
+//! the fused XLA step against the native Rust implementation, and run a
+//! short fully-online training loop through PJRT verifying the loss drops.
+//!
+//! These tests require `make artifacts`; they skip (with a notice) when the
+//! artifacts are missing so `cargo test` stays green on a fresh checkout.
+
+use snap_rtrl::cells::{Cell, Gru};
+use snap_rtrl::models::{Embedding, Readout};
+use snap_rtrl::opt::{Adam, Optimizer};
+use snap_rtrl::runtime::demo::{parity_check_with_hidden, run_step, StepIo};
+use snap_rtrl::runtime::{ArtifactSet, PjrtRuntime};
+use snap_rtrl::tensor::rng::Pcg32;
+
+fn setup() -> Option<(PjrtRuntime, snap_rtrl::runtime::LoadedModule, StepIo, usize)> {
+    let set = match ArtifactSet::discover() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("SKIP runtime tests: {e}");
+            return None;
+        }
+    };
+    let io = StepIo::from_manifest(&set).expect("manifest");
+    let hidden = set.get_usize("readout_hidden").expect("manifest readout_hidden");
+    let rt = PjrtRuntime::cpu().expect("PJRT cpu client");
+    let module = rt
+        .load_hlo_text(set.online_step().to_str().unwrap())
+        .expect("compile gru_snap1_step");
+    Some((rt, module, io, hidden))
+}
+
+#[test]
+fn artifact_matches_native_rust_step() {
+    let Some((_rt, module, io, hidden)) = setup() else { return };
+    for seed in [42u64, 7, 99] {
+        let dev = parity_check_with_hidden(&module, &io, hidden, seed).expect("parity");
+        assert!(dev < 5e-3, "seed {seed}: max rel dev {dev}");
+    }
+}
+
+#[test]
+fn online_training_through_pjrt_reduces_loss() {
+    let Some((_rt, module, io, hidden)) = setup() else { return };
+    let mut rng = Pcg32::seeded(3);
+    let cell = Gru::new(io.k, io.input_dim, 1.0, &mut rng);
+    let mut theta = cell.init_params(&mut rng);
+    let mut phi = Readout::new(io.k, hidden, io.vocab, &mut rng).params_flat();
+    let embed = Embedding::new(io.vocab, io.input_dim, &mut rng);
+    let corpus = snap_rtrl::data::Corpus::synthetic(20_000, 5);
+    let bytes = corpus.bytes();
+
+    let mut opt_rec = Adam::new(io.p_rec, 3e-3);
+    let mut opt_ro = Adam::new(io.p_ro, 3e-3);
+    let mut h = vec![0.0f32; io.k];
+    let mut j = vec![0.0f32; io.p_rec];
+    let steps = 300usize;
+    let (mut first_avg, mut last_avg) = (0.0f64, 0.0f64);
+    for step in 0..steps {
+        let pos = step % (bytes.len() - 1);
+        let x = embed.lookup(bytes[pos] as usize).to_vec();
+        let (h1, j1, loss, mut g_rec, mut g_ro) =
+            run_step(&module, &io, &theta, &phi, &h, &j, &x, bytes[pos + 1] as usize)
+                .expect("step");
+        h = h1;
+        j = j1;
+        if step < 50 {
+            first_avg += loss as f64 / 50.0;
+        }
+        if step >= steps - 50 {
+            last_avg += loss as f64 / 50.0;
+        }
+        opt_rec.step(&mut theta, &mut g_rec);
+        opt_ro.step(&mut phi, &mut g_ro);
+    }
+    assert!(
+        last_avg < first_avg - 0.3,
+        "loss should drop through the PJRT path: {first_avg:.3} -> {last_avg:.3}"
+    );
+}
+
+#[test]
+fn fwd_artifact_matches_native_forward() {
+    let Some((rt, _module, io, _hidden)) = setup() else { return };
+    let set = ArtifactSet::discover().unwrap();
+    let fwd = rt.load_hlo_text(set.gru_forward().to_str().unwrap()).expect("compile fwd");
+    let mut rng = Pcg32::seeded(11);
+    let cell = Gru::new(io.k, io.input_dim, 1.0, &mut rng);
+    let theta = cell.init_params(&mut rng);
+    let h: Vec<f32> = (0..io.k).map(|_| rng.normal() * 0.3).collect();
+    let x: Vec<f32> = (0..io.input_dim).map(|_| rng.normal()).collect();
+
+    let outs = fwd
+        .run_f32(&[
+            (&theta, &[io.p_rec as i64]),
+            (&h, &[io.k as i64]),
+            (&x, &[io.input_dim as i64]),
+        ])
+        .expect("fwd run");
+    let h_aot = &outs[0];
+
+    let mut cache = cell.make_cache();
+    let mut h_native = vec![0.0f32; io.k];
+    cell.forward(&theta, &h, &x, &mut cache, &mut h_native);
+    let dev = snap_rtrl::testing::max_rel_dev(h_aot, &h_native);
+    assert!(dev < 1e-4, "fwd parity dev {dev}");
+}
+
+#[test]
+fn adam_artifact_matches_native_adam() {
+    let Some((rt, _m, io, _h)) = setup() else { return };
+    let set = ArtifactSet::discover().unwrap();
+    let adam = rt.load_hlo_text(set.adam_update().to_str().unwrap()).expect("compile adam");
+    let lr: f32 = set.meta.get("lr").unwrap().parse().unwrap();
+    let n = io.p_rec;
+    let mut rng = Pcg32::seeded(13);
+    let params: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+    let grad: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+    let m0 = vec![0.0f32; n];
+    let v0 = vec![0.0f32; n];
+
+    let outs = adam
+        .run_f32(&[
+            (&params, &[n as i64]),
+            (&grad, &[n as i64]),
+            (&m0, &[n as i64]),
+            (&v0, &[n as i64]),
+            (&[1.0f32], &[]),
+        ])
+        .expect("adam run");
+    let p_aot = &outs[0];
+
+    let mut p_native = params.clone();
+    let mut g = grad.clone();
+    let mut opt = Adam::new(n, lr);
+    opt.step(&mut p_native, &mut g);
+    let dev = snap_rtrl::testing::max_rel_dev(p_aot, &p_native);
+    assert!(dev < 1e-4, "adam parity dev {dev}");
+}

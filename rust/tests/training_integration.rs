@@ -1,0 +1,156 @@
+//! End-to-end training integration: the paper's qualitative findings on
+//! scaled-down workloads. These are the "shape" assertions of DESIGN.md's
+//! experiment index, run at test-sized budgets.
+
+use snap_rtrl::cells::Arch;
+use snap_rtrl::data::Corpus;
+use snap_rtrl::grad::Method;
+use snap_rtrl::train::{train_charlm, train_copy, TrainConfig};
+
+fn base_copy(method: Method, trunc: usize, steps: usize) -> TrainConfig {
+    TrainConfig {
+        arch: Arch::Gru,
+        k: 24,
+        density: 1.0,
+        method,
+        lr: 3e-3,
+        batch: 4,
+        truncation: trunc,
+        steps,
+        seed: 21,
+        readout_hidden: 48,
+        log_every: steps,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn online_snap1_beats_online_bptt_on_copy() {
+    // Fig. 5's headline: fully-online (T=1) BPTT fails to learn temporal
+    // structure; SnAp-1 learns it.
+    let snap = train_copy(&base_copy(Method::Snap(1), 1, 220));
+    let bptt = train_copy(&base_copy(Method::Bptt, 1, 220));
+    assert!(
+        snap.final_level > bptt.final_level,
+        "snap-1 level {} should exceed online-bptt level {}",
+        snap.final_level,
+        bptt.final_level
+    );
+}
+
+#[test]
+fn snap1_beats_rflo_on_copy() {
+    // §5.2: "SnAp-1 significantly outperforms RFLO in all of our experiments."
+    let snap = train_copy(&base_copy(Method::Snap(1), 1, 200));
+    let rflo = train_copy(&base_copy(Method::Rflo, 1, 200));
+    assert!(
+        snap.final_level >= rflo.final_level,
+        "snap-1 {} vs rflo {}",
+        snap.final_level,
+        rflo.final_level
+    );
+}
+
+#[test]
+fn sparse_snap2_learns_copy_online() {
+    let mut cfg = base_copy(Method::Snap(2), 1, 220);
+    cfg.density = 0.25;
+    let res = train_copy(&cfg);
+    assert!(res.final_level >= 3, "sparse snap-2 should climb the curriculum: {}", res.final_level);
+}
+
+#[test]
+fn charlm_all_methods_run_and_reduce_loss() {
+    let corpus = Corpus::synthetic(30_000, 3);
+    for method in [Method::Snap(1), Method::Rflo, Method::Uoro, Method::Bptt] {
+        let cfg = TrainConfig {
+            arch: Arch::Gru,
+            k: 16,
+            density: 1.0,
+            method,
+            lr: 3e-3,
+            batch: 1,
+            seq_len: 32,
+            truncation: 0,
+            steps: 60,
+            seed: 4,
+            readout_hidden: 32,
+            embed_dim: 8,
+            log_every: 59,
+            ..Default::default()
+        };
+        let res = train_charlm(&cfg, &corpus);
+        let first = res.curve.first().unwrap().valid_bpc;
+        assert!(
+            res.final_valid_bpc < first,
+            "{}: bpc {first:.3} -> {:.3}",
+            method.name(),
+            res.final_valid_bpc
+        );
+    }
+}
+
+#[test]
+fn lstm_and_vanilla_train_on_copy() {
+    for arch in [Arch::Vanilla, Arch::Lstm] {
+        let mut cfg = base_copy(Method::Snap(1), 1, 120);
+        cfg.arch = arch;
+        let res = train_copy(&cfg);
+        assert!(res.final_level >= 1 && res.final_train_bpc.is_finite(), "{arch:?}");
+        assert!(res.tokens_seen > 0);
+    }
+}
+
+#[test]
+fn truncated_bptt_window_matches_full_on_short_sequences() {
+    // With seq_len == truncation window, TBPTT == full BPTT: same curve.
+    let corpus = Corpus::synthetic(20_000, 9);
+    let mk = |trunc| TrainConfig {
+        arch: Arch::Vanilla,
+        k: 12,
+        density: 1.0,
+        method: Method::Bptt,
+        lr: 1e-3,
+        batch: 1,
+        seq_len: 16,
+        truncation: trunc,
+        steps: 30,
+        seed: 8,
+        readout_hidden: 24,
+        embed_dim: 8,
+        log_every: 29,
+        ..Default::default()
+    };
+    let full = train_charlm(&mk(0), &corpus);
+    let windowed = train_charlm(&mk(16), &corpus);
+    assert!(
+        (full.final_train_bpc - windowed.final_train_bpc).abs() < 1e-6,
+        "{} vs {}",
+        full.final_train_bpc,
+        windowed.final_train_bpc
+    );
+}
+
+#[test]
+fn batch_lanes_reduce_gradient_noise() {
+    // Larger batch should not be worse (loose check: both learn).
+    let corpus = Corpus::synthetic(20_000, 10);
+    for batch in [1usize, 4] {
+        let cfg = TrainConfig {
+            arch: Arch::Gru,
+            k: 12,
+            method: Method::Snap(1),
+            batch,
+            seq_len: 32,
+            steps: 40,
+            lr: 3e-3,
+            readout_hidden: 24,
+            embed_dim: 8,
+            seed: 12,
+            log_every: 39,
+            ..Default::default()
+        };
+        let res = train_charlm(&cfg, &corpus);
+        assert!(res.final_valid_bpc < 8.5, "batch={batch}: {}", res.final_valid_bpc);
+    }
+}
