@@ -1,0 +1,76 @@
+//! Lane-parallel training throughput: end-to-end char-LM tokens/sec as a
+//! function of worker count at batch 1/4/8/16 — the acceptance measurement
+//! for the `LaneExecutor`. At batch ≥ 8 with multiple workers the engine
+//! should beat the sequential path (workers=1) by ≥ 2× on a multi-core
+//! host; batch 1 shows the (expected) absence of speedup, since a single
+//! lane cannot be split.
+//!
+//! The validation span is shrunk so the measurement is dominated by the
+//! parallel training region, not the serial evaluator. Results are bitwise
+//! identical across worker counts (see rust/tests/executor_determinism.rs),
+//! so every row trains the same model — only wall-clock changes.
+//!
+//! Run: `cargo bench --bench lane_throughput [-- --k 128 --steps 20]`
+
+use snap_rtrl::cells::Arch;
+use snap_rtrl::data::Corpus;
+use snap_rtrl::grad::Method;
+use snap_rtrl::train::{train_charlm, TrainConfig};
+use std::time::Instant;
+
+fn flag(args: &[String], name: &str) -> Option<usize> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).and_then(|v| v.parse().ok())
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let k = flag(&args, "--k").unwrap_or(128);
+    let steps = flag(&args, "--steps").unwrap_or(16);
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+
+    println!("# lane_throughput — char-LM GRU-{k} snap-1, {steps} sequences of 128, {cores} cores\n");
+    println!(
+        "{:<8} {:>8} {:>14} {:>12} {:>10}",
+        "batch", "workers", "tokens/s", "wall (s)", "speedup"
+    );
+
+    let corpus = Corpus::synthetic(200_000, 1234);
+    for batch in [1usize, 4, 8, 16] {
+        let mut base_tps = f64::NAN;
+        for workers in [1usize, 2, 4, 8] {
+            if workers > cores && workers != 1 {
+                continue; // oversubscription tells us nothing on this host
+            }
+            let cfg = TrainConfig {
+                arch: Arch::Gru,
+                k,
+                density: 1.0,
+                method: Method::Snap(1),
+                lr: 3e-3,
+                batch,
+                seq_len: 128,
+                truncation: 0,
+                steps,
+                seed: 7,
+                readout_hidden: 128,
+                embed_dim: 32,
+                log_every: steps, // eval only at step 0 and the last step
+                eval_span: 64,    // keep the serial evaluator negligible
+                workers,
+                ..Default::default()
+            };
+            let t0 = Instant::now();
+            let res = train_charlm(&cfg, &corpus);
+            let wall = t0.elapsed().as_secs_f64();
+            let tps = res.tokens_seen as f64 / wall;
+            if workers == 1 {
+                base_tps = tps;
+            }
+            println!(
+                "{batch:<8} {workers:>8} {tps:>14.0} {wall:>12.3} {:>9.2}x",
+                tps / base_tps
+            );
+        }
+        println!();
+    }
+}

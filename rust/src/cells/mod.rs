@@ -176,6 +176,10 @@ pub struct ParamInfo {
 }
 
 /// The cell interface used by every gradient algorithm.
+///
+/// `Send + Sync` are supertraits: cells are immutable after construction
+/// (all per-step scratch lives in [`Cache`]), so a single `&dyn Cell` is
+/// shared by every lane of the parallel training executor.
 pub trait Cell: Send + Sync {
     /// Size of the full recurrent state `s` (k for Vanilla/GRU, 2k for LSTM).
     fn state_size(&self) -> usize;

@@ -94,8 +94,12 @@ Experiment commands (one per paper table/figure):
   fig5     Copy-task curriculum curves               [--arch --sparsity --methods --tokens --seeds]
 
 Training commands:
-  train    Char-LM single run    [--method --arch --k --sparsity --steps --lr --trunc --batch --corpus]
-  copy     Copy-task single run  [--method --arch --k --sparsity --steps --lr --trunc --batch]
+  train    Char-LM single run    [--method --arch --k --sparsity --steps --lr --trunc --batch --corpus --workers]
+  copy     Copy-task single run  [--method --arch --k --sparsity --steps --lr --trunc --batch --workers]
+
+--workers N steps the minibatch lanes on N threads (0 = all cores; default 1).
+Char-LM and full-unroll Copy results are bitwise identical for any N; Copy
+with --trunc > 0 and N > 1 switches to the batched-online update schedule.
 
 Runtime commands:
   aot-demo Run the AOT-compiled GRU/SnAp-1 step from the PJRT runtime

@@ -11,7 +11,6 @@ use crate::grad::Method;
 use crate::sparse::pattern::{snap_pattern, Pattern};
 use crate::train::{table1_memory, table1_time, train_charlm, train_copy, CostInputs, TrainConfig, TrainResult};
 use crate::tensor::rng::Pcg32;
-use crossbeam_utils::thread;
 
 // ---------------------------------------------------------------------------
 // Table 1 — asymptotic cost model + measured counters
@@ -106,15 +105,26 @@ pub fn run_fig3(args: &Args) {
         None => Corpus::synthetic(corpus_len, 1234),
     };
 
+    let workers = args.usize_or("workers", 1);
     if side == "dense" || side == "both" {
-        fig3_side(&corpus, false, steps, k, batch, lr, seed);
+        fig3_side(&corpus, false, steps, k, batch, lr, seed, workers);
     }
     if side == "sparse" || side == "both" {
-        fig3_side(&corpus, true, steps, k, batch, lr, seed);
+        fig3_side(&corpus, true, steps, k, batch, lr, seed, workers);
     }
 }
 
-fn fig3_side(corpus: &Corpus, sparse: bool, steps: usize, k: usize, batch: usize, lr: f32, seed: u64) {
+#[allow(clippy::too_many_arguments)]
+fn fig3_side(
+    corpus: &Corpus,
+    sparse: bool,
+    steps: usize,
+    k: usize,
+    batch: usize,
+    lr: f32,
+    seed: u64,
+    workers: usize,
+) {
     let density = if sparse { 0.25 } else { 1.0 };
     let label = if sparse { "sparse75" } else { "dense" };
     let mut methods: Vec<Method> =
@@ -140,6 +150,7 @@ fn fig3_side(corpus: &Corpus, sparse: bool, steps: usize, k: usize, batch: usize
             readout_hidden: 256,
             embed_dim: 64,
             log_every: (steps / 30).max(1),
+            workers,
             ..Default::default()
         };
         (m, train_charlm(&cfg, corpus))
@@ -436,6 +447,14 @@ pub fn run_fig5(args: &Args) {
         .map(|s| s.parse().expect("bad lr"))
         .collect();
     let method_names = args.list_or("methods", &["bptt-online", "bptt-full", "snap-1", "snap-2", "snap-3", "rflo"]);
+    let workers = args.usize_or("workers", 1);
+    if workers != 1 {
+        println!(
+            "WARNING: --workers {workers} changes the *algorithm* for online (truncated) Copy \
+arms, not just throughput: they run the batched-online schedule instead of the paper's \
+per-token updates (see train::looper docs). Use --workers 1 for paper-faithful curves.\n"
+        );
+    }
 
     println!("# Figure 5 — Copy task (k={k}, sparsity={sparsity}, {steps} minibatches of {batch})\n");
 
@@ -474,6 +493,7 @@ pub fn run_fig5(args: &Args) {
                     seed: seed + 100,
                     readout_hidden: 64,
                     log_every: 1,
+                    workers,
                     ..Default::default()
                 };
                 let res = train_copy(&cfg);
@@ -533,6 +553,13 @@ pub fn run_copy_cmd(args: &Args) {
     let cfg = config_from_args(args);
     println!("# copy: {} {} k={} d={} trunc={} steps={}",
         cfg.method.name(), cfg.arch.name(), cfg.k, cfg.density, cfg.truncation, cfg.steps);
+    if cfg.workers != 1 && cfg.truncation > 0 {
+        println!(
+            "WARNING: --workers {} with --trunc {} runs the batched-online update schedule, \
+not the sequential per-token schedule (see train::looper docs).",
+            cfg.workers, cfg.truncation
+        );
+    }
     let res = train_copy(&cfg);
     print_run(&res);
     println!("final curriculum level: {}", res.final_level);
@@ -556,6 +583,8 @@ fn config_from_args(args: &Args) -> TrainConfig {
         prune_to: args.get("prune-to").and_then(|v| v.parse().ok()),
         prune_every: args.u64_or("prune-every", 1000),
         prune_end_step: args.u64_or("prune-end", u64::MAX),
+        workers: args.usize_or("workers", 1),
+        ..Default::default()
     }
 }
 
@@ -572,6 +601,9 @@ fn print_run(res: &TrainResult) {
 }
 
 /// Run `f` over `items` on scoped threads (bounded by available cores).
+/// Uses `std::thread::scope` (stable since 1.63) so the workspace builds
+/// with zero external dependencies; a panicking worker propagates when the
+/// scope joins.
 fn parallel_map<T: Sync, R: Send>(items: &[T], f: impl Fn(&T) -> R + Sync) -> Vec<R> {
     let max_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
     let mut out: Vec<Option<R>> = Vec::new();
@@ -582,15 +614,14 @@ fn parallel_map<T: Sync, R: Send>(items: &[T], f: impl Fn(&T) -> R + Sync) -> Ve
         let chunk_end = (chunk_start + max_threads).min(items.len());
         let slots = &mut out[chunk_start..chunk_end];
         let items_chunk = &items[chunk_start..chunk_end];
-        thread::scope(|s| {
+        std::thread::scope(|s| {
             for (slot, item) in slots.iter_mut().zip(items_chunk) {
                 let fr = &f;
-                s.spawn(move |_| {
+                s.spawn(move || {
                     *slot = Some(fr(item));
                 });
             }
-        })
-        .expect("experiment thread panicked");
+        });
     }
     out.into_iter().map(|r| r.expect("missing result")).collect()
 }

@@ -8,7 +8,7 @@ pub mod report;
 
 pub use cli::{Args, USAGE};
 
-use anyhow::Result;
+use crate::errors::Result;
 
 /// Dispatch a parsed command. Returns Err for unknown commands.
 pub fn dispatch(args: &Args) -> Result<()> {
@@ -24,7 +24,7 @@ pub fn dispatch(args: &Args) -> Result<()> {
         "aot-demo" => crate::runtime::demo::run_aot_demo(args)?,
         "info" => info(),
         "help" | "--help" | "-h" => println!("{USAGE}"),
-        other => anyhow::bail!("unknown command '{other}'\n\n{USAGE}"),
+        other => crate::bail!("unknown command '{other}'\n\n{USAGE}"),
     }
     Ok(())
 }

@@ -108,12 +108,21 @@ impl Corpus {
     }
 
     /// Split into train/valid partitions (fraction of bytes to validation).
+    ///
+    /// On a small corpus a partition may legitimately come out **empty**
+    /// (e.g. `len 10` at `valid_frac 0.05`), so the partitions are built
+    /// directly rather than through [`Corpus::from_bytes`] (whose non-empty
+    /// assert guards user-supplied corpora, not split products). Callers
+    /// that evaluate on a partition must check `len()` first — the char-LM
+    /// driver skips validation when the split is empty. `valid_frac` is
+    /// clamped to `[0, 1]`.
     pub fn split(&self, valid_frac: f64) -> (Corpus, Corpus) {
-        let nv = ((self.data.len() as f64) * valid_frac) as usize;
+        let nv = (((self.data.len() as f64) * valid_frac.clamp(0.0, 1.0)) as usize)
+            .min(self.data.len());
         let nt = self.data.len() - nv;
         (
-            Corpus::from_bytes(self.data[..nt].to_vec()),
-            Corpus::from_bytes(self.data[nt..].to_vec()),
+            Corpus { data: self.data[..nt].to_vec() },
+            Corpus { data: self.data[nt..].to_vec() },
         )
     }
 }
@@ -159,5 +168,47 @@ mod tests {
         let (tr, va) = c.split(0.1);
         assert_eq!(tr.len() + va.len(), 1000);
         assert_eq!(va.len(), 100);
+    }
+
+    #[test]
+    fn split_small_corpus_yields_empty_partition_without_panicking() {
+        // Regression: this used to trip `from_bytes`'s "empty corpus"
+        // assert, which crashed every char-LM run on a tiny corpus.
+        let c = Corpus::from_bytes((1..=10u8).collect());
+        let (tr, va) = c.split(0.05);
+        assert_eq!(tr.len(), 10);
+        assert_eq!(va.len(), 0);
+        assert!(va.is_empty());
+    }
+
+    #[test]
+    fn split_clamps_fraction() {
+        let c = Corpus::from_bytes(vec![1, 2, 3]);
+        let (tr, va) = c.split(2.0);
+        assert_eq!((tr.len(), va.len()), (0, 3));
+        let (tr, va) = c.split(-1.0);
+        assert_eq!((tr.len(), va.len()), (3, 0));
+    }
+
+    #[test]
+    fn crop_at_exact_boundary_length() {
+        // len + 1 == corpus length: the only valid start is 0 and the crop
+        // must cover the whole corpus (regression for the start-range edge).
+        let c = Corpus::from_bytes((0..65u8).collect());
+        let mut rng = Pcg32::seeded(9);
+        for _ in 0..10 {
+            let crop = c.sample_crop(64, &mut rng);
+            assert_eq!(crop.len(), 65);
+            assert_eq!(crop[0], 0);
+            assert_eq!(crop[64], 64);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "corpus shorter than crop length")]
+    fn crop_longer_than_corpus_panics_with_message() {
+        let c = Corpus::from_bytes(vec![1, 2, 3]);
+        let mut rng = Pcg32::seeded(1);
+        let _ = c.sample_crop(3, &mut rng);
     }
 }

@@ -1,0 +1,149 @@
+//! Minimal error plumbing — an offline stand-in for `anyhow`.
+//!
+//! The crate builds with **zero external dependencies** (the image has no
+//! crates.io access), so the handful of fallible paths (CLI dispatch,
+//! artifact discovery, the PJRT facade) share this tiny string-message error
+//! with optional source chaining, a `Context` extension trait for foreign
+//! errors and `Option`, and `bail!`/`ensure!` macros.
+//!
+//! Like `anyhow::Error`, [`Error`] deliberately does **not** implement
+//! `std::error::Error` — that keeps the blanket `From<E: std::error::Error>`
+//! conversion (which powers `?`) coherent.
+
+use std::fmt;
+
+/// String-message error with an optional boxed source.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+}
+
+/// Crate-wide result alias (defaults the error type like `anyhow::Result`).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Error { msg: m.to_string(), source: None }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context(self, c: impl fmt::Display) -> Self {
+        Error { msg: format!("{c}: {}", self.msg), source: self.source }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        let mut src = self.source.as_deref().map(|s| s as &dyn std::error::Error);
+        while let Some(s) = src {
+            write!(f, "\n  caused by: {s}")?;
+            src = s.source();
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error { msg: e.to_string(), source: Some(Box::new(e)) }
+    }
+}
+
+/// `anyhow::Context`-style extension for foreign errors and `Option`.
+pub trait Context<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T>;
+    fn with_context<C: fmt::Display>(self, f: impl FnOnce() -> C) -> Result<T>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| {
+            let m = format!("{msg}: {e}");
+            Error { msg: m, source: Some(Box::new(e)) }
+        })
+    }
+
+    fn with_context<C: fmt::Display>(self, f: impl FnOnce() -> C) -> Result<T> {
+        self.map_err(|e| {
+            let m = format!("{}: {e}", f());
+            Error { msg: m, source: Some(Box::new(e)) }
+        })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg))
+    }
+
+    fn with_context<C: fmt::Display>(self, f: impl FnOnce() -> C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::errors::Error::msg(format!($($arg)*)))
+    };
+}
+
+/// Return early with an error when `cond` is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::errors::Error::msg(format!($($arg)*)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_port(s: &str) -> Result<u16> {
+        let p: u16 = s.parse().context("bad port")?;
+        crate::ensure!(p > 0, "port must be nonzero, got {p}");
+        Ok(p)
+    }
+
+    #[test]
+    fn context_wraps_foreign_errors() {
+        let e = parse_port("nope").unwrap_err();
+        assert!(e.to_string().starts_with("bad port"), "{e}");
+        assert!(format!("{e:?}").contains("caused by"));
+    }
+
+    #[test]
+    fn ensure_and_ok_paths() {
+        assert_eq!(parse_port("8080").unwrap(), 8080);
+        let e = parse_port("0").unwrap_err();
+        assert!(e.to_string().contains("nonzero"));
+    }
+
+    #[test]
+    fn option_context_and_chaining() {
+        let v: Option<u32> = None;
+        let e = v.context("missing value").unwrap_err().context("outer");
+        assert_eq!(e.to_string(), "outer: missing value");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn read() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        assert!(read().is_err());
+    }
+}

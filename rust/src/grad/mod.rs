@@ -42,7 +42,12 @@ use crate::cells::Cell;
 use crate::tensor::rng::Pcg32;
 
 /// Uniform interface over the gradient algorithms.
-pub trait GradAlgo {
+///
+/// `Send` is a supertrait so a `Box<dyn GradAlgo>` can be moved into (or
+/// mutably borrowed across) the lane-parallel executor's worker threads
+/// (`train::executor`). Every implementor is plain owned data plus a
+/// `&dyn Cell` (and `Cell: Sync`), so the bound is automatic.
+pub trait GradAlgo: Send {
     fn name(&self) -> String;
 
     /// Sequence boundary: zero the recurrent state and all influence tracking.
@@ -129,7 +134,9 @@ impl Method {
         }
     }
 
-    /// Instantiate the algorithm for `cell`.
+    /// Instantiate the algorithm for `cell`. The returned box is `Send`
+    /// (via `GradAlgo`'s supertrait), so one instance per minibatch lane can
+    /// be driven from a worker thread while all lanes share `&cell`.
     pub fn build<'c>(&self, cell: &'c dyn Cell, rng: &mut Pcg32) -> Box<dyn GradAlgo + 'c> {
         match *self {
             Method::Bptt | Method::Frozen => Box::new(Bptt::new(cell)),

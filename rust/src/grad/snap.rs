@@ -87,6 +87,7 @@ impl GradAlgo for Snap<'_> {
         self.cell.dynamics(theta, &self.cache, &mut self.d);
         self.cell.immediate(&self.cache, &mut self.i_jac);
         self.j.update(&self.d, &self.i_jac);
+        // O(1): the product term is cached in the ColJacobian (fixed pattern).
         self.last_flops = self.j.update_flops(self.i_jac.nnz());
     }
 

@@ -18,15 +18,22 @@
 //! * [`train`] — online & truncated training loops, pruning, FLOP accounting.
 //! * [`coordinator`] — CLI, experiment registry (one entry per paper
 //!   table/figure), reporting.
-//! * [`runtime`] — XLA/PJRT client that loads the AOT artifacts produced by
-//!   `python/compile/aot.py` and executes them from the Rust hot path.
+//! * [`runtime`] — XLA/PJRT facade for the AOT artifacts produced by
+//!   `python/compile/aot.py` (a graceful stub in offline builds — see
+//!   `runtime::pjrt`).
 //! * [`testing`] — deterministic property-testing mini-framework (offline
 //!   stand-in for proptest).
+//! * [`errors`] — zero-dependency error plumbing (offline stand-in for
+//!   anyhow).
+//!
+//! The crate intentionally has **no external dependencies** so it builds
+//! without crates.io access; all parallelism uses `std::thread::scope`.
 
 pub mod benchutil;
 pub mod cells;
 pub mod coordinator;
 pub mod data;
+pub mod errors;
 pub mod grad;
 pub mod models;
 pub mod opt;

@@ -6,6 +6,15 @@
 //! every step regardless of which RTRL approximation handles the recurrent
 //! core. `backward` returns both the readout parameter gradients and
 //! `∂L/∂h` — the cotangent the recurrent algorithms consume.
+//!
+//! Concurrency contract: the forward/backward pair is split from parameter
+//! mutation. `forward`, `loss_and_backward` and `backward` take `&self` and
+//! write only into caller-owned [`ReadoutCache`]/[`ReadoutGrad`] buffers, so
+//! N training lanes share one `&Readout` across threads (`Readout: Sync`),
+//! each with its own cache and gradient buffer. Parameters change only
+//! through `apply_delta`/`set_params` (`&mut self`), which the executor
+//! calls between parallel sections after an ordered reduction of the
+//! per-lane [`ReadoutGrad`]s.
 
 use crate::tensor::matrix::Matrix;
 use crate::tensor::ops::{axpy_slice, drelu, matvec, matvec_t, softmax_xent};
@@ -34,6 +43,23 @@ pub struct ReadoutCache {
 /// Flat gradient buffer with the same layout as `Readout::num_params`.
 pub struct ReadoutGrad {
     pub flat: Vec<f32>,
+}
+
+impl ReadoutGrad {
+    /// Ordered-reduction helper: `self += other`. The lane executor folds
+    /// per-lane buffers in lane order so the sum is identical for any
+    /// worker count (f32 addition is not associative).
+    pub fn accumulate_from(&mut self, other: &ReadoutGrad) {
+        debug_assert_eq!(self.flat.len(), other.flat.len());
+        for (a, b) in self.flat.iter_mut().zip(&other.flat) {
+            *a += *b;
+        }
+    }
+
+    /// Zero the buffer (after its contribution has been consumed).
+    pub fn clear(&mut self) {
+        self.flat.iter_mut().for_each(|v| *v = 0.0);
+    }
 }
 
 impl Readout {
@@ -228,6 +254,21 @@ mod tests {
             let fd = (l1 - l2) / (2.0 * eps);
             assert!((fd - g.flat[j]).abs() < 2e-3, "param {j}: fd={fd} an={}", g.flat[j]);
         }
+    }
+
+    #[test]
+    fn grad_accumulate_and_clear() {
+        let mut rng = Pcg32::seeded(1003);
+        let ro = Readout::new(3, 4, 2, &mut rng);
+        let mut a = ro.make_grad();
+        let mut b = ro.make_grad();
+        a.flat.iter_mut().enumerate().for_each(|(i, v)| *v = i as f32);
+        b.flat.iter_mut().for_each(|v| *v = 0.5);
+        a.accumulate_from(&b);
+        assert_eq!(a.flat[0], 0.5);
+        assert_eq!(a.flat[2], 2.5);
+        b.clear();
+        assert!(b.flat.iter().all(|&v| v == 0.0));
     }
 
     #[test]

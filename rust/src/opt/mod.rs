@@ -12,6 +12,18 @@ pub trait Optimizer {
     fn set_lr(&mut self, lr: f32);
 }
 
+/// Run one optimizer step expressed as a parameter **delta** rather than an
+/// in-place update: `delta` must be zeroed by the caller; after the call it
+/// holds `params_after - params_before` for a parameter vector at the
+/// origin, i.e. exactly the optimizer's update direction. Used for heads
+/// whose parameters live in structured storage (the readout's matrices) and
+/// are updated via `apply_delta`. Works for any stateful optimizer because
+/// the optimizer only sees the gradient stream.
+pub fn step_as_delta(opt: &mut dyn Optimizer, delta: &mut [f32], grad: &mut [f32]) {
+    debug_assert!(delta.iter().all(|&v| v == 0.0), "delta must start at zero");
+    opt.step(delta, grad);
+}
+
 /// Plain SGD (optionally with momentum).
 pub struct Sgd {
     lr: f32,
@@ -149,6 +161,29 @@ mod tests {
         let mut g = vec![0.5f32, -0.5];
         opt.step(&mut p, &mut g);
         assert_eq!(g, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn step_as_delta_matches_direct_step() {
+        // Applying the delta to params must equal stepping them directly.
+        let mut direct = Adam::new(3, 0.01);
+        let mut via_delta = Adam::new(3, 0.01);
+        let mut params = vec![1.0f32, -2.0, 0.5];
+        let mut params2 = params.clone();
+        for i in 0..5 {
+            let g = vec![0.3f32 * (i as f32 + 1.0), -0.1, 0.7];
+            let mut g1 = g.clone();
+            direct.step(&mut params, &mut g1);
+            let mut g2 = g.clone();
+            let mut delta = vec![0.0f32; 3];
+            step_as_delta(&mut via_delta, &mut delta, &mut g2);
+            for (p, d) in params2.iter_mut().zip(&delta) {
+                *p += d;
+            }
+        }
+        for (a, b) in params.iter().zip(&params2) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! manifest (`manifest.txt`, `key=value` lines) written by `aot.py` so the
 //! Rust side can validate shapes before compiling.
 
-use anyhow::{bail, Context, Result};
+use crate::errors::{Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
@@ -35,7 +35,7 @@ impl ArtifactSet {
         let dir = artifacts_dir();
         let manifest = dir.join("manifest.txt");
         if !manifest.is_file() {
-            bail!(
+            crate::bail!(
                 "no artifact manifest at {} — run `make artifacts` first",
                 manifest.display()
             );

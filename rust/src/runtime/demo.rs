@@ -24,7 +24,7 @@ use crate::opt::{Adam, Optimizer};
 use crate::runtime::{ArtifactSet, PjrtRuntime};
 use crate::tensor::rng::Pcg32;
 use crate::train::metrics::{bpc_from_nats, RunningMean};
-use anyhow::{Context, Result};
+use crate::errors::Result;
 
 pub struct StepIo {
     pub k: usize,
@@ -68,7 +68,7 @@ pub fn run_step(
         (x, &[io.input_dim as i64]),
         (&onehot, &[io.vocab as i64]),
     ])?;
-    anyhow::ensure!(outs.len() == 5, "expected 5 outputs, got {}", outs.len());
+    crate::ensure!(outs.len() == 5, "expected 5 outputs, got {}", outs.len());
     let mut it = outs.into_iter();
     let h_next = it.next().unwrap();
     let j_next = it.next().unwrap();
@@ -89,7 +89,7 @@ pub fn parity_check_with_hidden(
 ) -> Result<f32> {
     let mut rng = Pcg32::seeded(seed);
     let cell = Gru::new(io.k, io.input_dim, 1.0, &mut rng);
-    anyhow::ensure!(
+    crate::ensure!(
         cell.num_params() == io.p_rec,
         "θ layout mismatch: rust {} vs manifest {}",
         cell.num_params(),
@@ -97,7 +97,7 @@ pub fn parity_check_with_hidden(
     );
     let theta = cell.init_params(&mut rng);
     let readout = Readout::new(io.k, readout_hidden, io.vocab, &mut rng);
-    anyhow::ensure!(readout.num_params() == io.p_ro, "φ layout mismatch");
+    crate::ensure!(readout.num_params() == io.p_ro, "φ layout mismatch");
     // φ flat vector mirrors Readout's internal layout; rebuild it by probing:
     // we initialize a fresh Readout from a cloned RNG stream in python? No —
     // for parity we drive *both* sides from explicit flat vectors.
@@ -142,9 +142,9 @@ pub fn parity_check_with_hidden(
 
 /// The `aot-demo` command.
 pub fn run_aot_demo(args: &Args) -> Result<()> {
-    let set = ArtifactSet::discover().context(
-        "artifacts not found — run `make artifacts` (python AOT compile) first",
-    )?;
+    let set = ArtifactSet::discover().map_err(|e| {
+        e.context("artifacts not found — run `make artifacts` (python AOT compile) first")
+    })?;
     let io = StepIo::from_manifest(&set)?;
     let readout_hidden = set.get_usize("readout_hidden")?;
     let rt = PjrtRuntime::cpu()?;
@@ -155,7 +155,7 @@ pub fn run_aot_demo(args: &Args) -> Result<()> {
     // 1. Parity vs native implementation.
     let dev = parity_check_with_hidden(&module, &io, readout_hidden, 42)?;
     println!("parity vs native rust (max rel dev): {dev:.3e}");
-    anyhow::ensure!(dev < 5e-3, "artifact/native mismatch: {dev}");
+    crate::ensure!(dev < 5e-3, "artifact/native mismatch: {dev}");
 
     // 2. Fully-online training through the artifact.
     let steps = args.usize_or("steps", 400);

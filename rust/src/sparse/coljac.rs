@@ -22,6 +22,26 @@ use crate::tensor::matrix::Matrix;
 /// (§Perf: the crossover sits around a few hundred µs of single-core work).
 const PARALLEL_FLOPS_THRESHOLD: u64 = 8_000_000;
 
+thread_local! {
+    /// True when this thread already runs inside an outer parallel region
+    /// (a `LaneExecutor` worker), so `update` must not spawn its own threads.
+    static INTRA_OP_DISABLED: std::cell::Cell<bool> = std::cell::Cell::new(false);
+}
+
+/// Enable/disable `ColJacobian::update`'s internal threading **for the
+/// current thread**. The lane-parallel executor disables it inside worker
+/// threads: with N lanes already running concurrently, letting every lane
+/// also fan its masked product out over all cores would oversubscribe the
+/// machine (N × cores runnable threads, thousands of spawns per second).
+/// Thread-local, so a `workers = 1` run keeps the full intra-op speedup.
+pub fn set_thread_intra_op_parallelism(enabled: bool) {
+    INTRA_OP_DISABLED.with(|c| c.set(!enabled));
+}
+
+fn intra_op_parallelism_enabled() -> bool {
+    INTRA_OP_DISABLED.with(|c| !c.get())
+}
+
 #[derive(Clone, Debug)]
 pub struct ColJacobian {
     state: usize,
@@ -145,7 +165,10 @@ impl ColJacobian {
         }
 
         let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-        if self.product_flops >= PARALLEL_FLOPS_THRESHOLD && threads > 1 {
+        if self.product_flops >= PARALLEL_FLOPS_THRESHOLD
+            && threads > 1
+            && intra_op_parallelism_enabled()
+        {
             self.update_parallel(d, i_jac, threads.min(8));
         } else {
             let mut scratch = RunScratch::new(self.max_col);
@@ -197,16 +220,15 @@ impl ColJacobian {
             consumed = end;
             tail = rest;
         }
-        crossbeam_utils::thread::scope(|s| {
+        std::thread::scope(|s| {
             for (r0, r1, vals) in slices {
-                s.spawn(move |_| {
+                s.spawn(move || {
                     let mut scratch = RunScratch::new(max_col);
                     let base = col_ptr[runs[r0] as usize];
                     update_runs(col_ptr, row_idx, runs, vals, r0, r1, base, d, i_jac, &mut scratch);
                 });
             }
-        })
-        .expect("snap update worker panicked");
+        });
     }
 
     /// Exact FLOPs of the fixed-pattern product (cached at construction).
@@ -258,14 +280,13 @@ impl ColJacobian {
     }
 
     /// Exact FLOP count of one `update` call (mul+add counted separately):
-    /// per column: 2·|R_j|² for the masked product + |I_j| adds.
+    /// per column: 2·|R_j|² for the masked product + |I_j| adds. The pattern
+    /// is fixed for the whole run, so the Σ 2|R_j|² term is the
+    /// `product_flops` cache computed at construction — this is O(1), safe
+    /// to call every timestep (it used to rescan `col_ptr`, an O(params)
+    /// walk on the hot path).
     pub fn update_flops(&self, i_nnz: usize) -> u64 {
-        let mut f = 0u64;
-        for j in 0..self.params {
-            let n = (self.col_ptr[j + 1] - self.col_ptr[j]) as u64;
-            f += 2 * n * n;
-        }
-        f + i_nnz as u64
+        self.product_flops + i_nnz as u64
     }
 
     /// Dense materialization (tests / Figure 6 analysis).
@@ -453,6 +474,18 @@ mod tests {
             let (_, vals) = cj.col(j);
             assert!(vals.iter().all(|&v| (v - 2.0).abs() < 1e-6));
         }
+    }
+
+    #[test]
+    fn intra_op_toggle_is_thread_local() {
+        set_thread_intra_op_parallelism(false);
+        assert!(!intra_op_parallelism_enabled());
+        // Fresh threads start with intra-op parallelism enabled.
+        std::thread::spawn(|| assert!(intra_op_parallelism_enabled()))
+            .join()
+            .unwrap();
+        set_thread_intra_op_parallelism(true);
+        assert!(intra_op_parallelism_enabled());
     }
 
     #[test]

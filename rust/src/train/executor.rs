@@ -1,0 +1,471 @@
+//! Lane-parallel training execution engine.
+//!
+//! A minibatch of B "lanes" (one gradient lane per batch element) is
+//! embarrassingly parallel between weight updates: every lane owns its own
+//! [`GradAlgo`] tracking state, gradient buffers and RNG stream, while θ,
+//! the cell and the readout are shared read-only (`Cell: Sync`,
+//! `Readout`'s forward/backward take `&self`). The [`LaneExecutor`] exploits
+//! exactly that structure:
+//!
+//! * **Per-lane state** ([`LaneSlot`]): the algorithm instance, a recurrent
+//!   gradient buffer, a readout gradient buffer, a readout cache, a
+//!   dedicated `Pcg32` stream split off the driver RNG at construction, and
+//!   loss/FLOP/token accounting.
+//! * **Parallel sections**: [`for_each_lane`](LaneExecutor::for_each_lane)
+//!   fans contiguous lane chunks out over `std::thread::scope` workers
+//!   (lockstep tasks such as char-LM crops);
+//!   [`for_each_lane_stealing`](LaneExecutor::for_each_lane_stealing) hands
+//!   lanes out through an atomic counter so variable-length work items
+//!   (Copy-task sequences) balance across workers.
+//! * **Ordered reduction** ([`reduce_and_update`](LaneExecutor::reduce_and_update)):
+//!   at every update boundary the per-lane gradients are folded into the
+//!   global buffers in **lane order** on the coordinating thread, then the
+//!   optimizers run once. f32 addition is not associative, so a fixed
+//!   reduction order — never "whichever worker finishes first" — is what
+//!   makes training results bitwise identical for any worker count. This is
+//!   the regression guarantee (`rust/tests/executor_determinism.rs`).
+//!
+//! Workers are spawned per parallel section. That keeps the engine free of
+//! long-lived shared mutable state (no channels, no pools, no unsafe) at the
+//! cost of one `thread::scope` per update window — negligible for the
+//! sequence-sized sections the drivers use, and `workers = 1` degrades to a
+//! plain inline loop with zero threading overhead.
+
+use crate::cells::Cell;
+use crate::data::corpus::Corpus;
+use crate::grad::{GradAlgo, Method};
+use crate::models::{Readout, ReadoutCache, ReadoutGrad};
+use crate::opt::{step_as_delta, Optimizer};
+use crate::tensor::rng::Pcg32;
+use crate::train::prune::Pruner;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Everything one gradient lane owns. Workers get disjoint `&mut LaneSlot`s;
+/// all cross-lane aggregation happens on the coordinating thread.
+pub struct LaneSlot<'c> {
+    /// The lane's gradient algorithm (tracking state + recurrent state).
+    pub algo: Box<dyn GradAlgo + 'c>,
+    /// Dedicated deterministic RNG stream (data sampling for this lane).
+    pub rng: Pcg32,
+    /// Recurrent-parameter gradient accumulator (length `num_params`).
+    pub g_rec: Vec<f32>,
+    /// Readout gradient accumulator.
+    pub g_ro: ReadoutGrad,
+    /// Readout forward cache (scratch).
+    pub cache: ReadoutCache,
+    /// Σ loss nats since the last `drain_step_nll` (and sample count).
+    pub nll_sum: f64,
+    pub nll_n: u64,
+    /// Tracking-FLOP accounting over the whole run.
+    pub flops_sum: f64,
+    pub flops_n: u64,
+    /// Tokens processed over the whole run.
+    pub tokens: u64,
+    /// Lane-steps contributed to the gradient since the last update.
+    pub pending: usize,
+}
+
+/// Lane-parallel execution engine. See the module docs for the model.
+pub struct LaneExecutor<'c> {
+    slots: Vec<LaneSlot<'c>>,
+    workers: usize,
+}
+
+impl<'c> LaneExecutor<'c> {
+    /// Build `lanes` lanes for `cell`. Each lane gets its own algorithm
+    /// instance and an independent RNG stream split off `rng` in lane order
+    /// (so the streams — and therefore training — do not depend on the
+    /// worker count). `workers == 0` means "use all available cores".
+    pub fn new(
+        cell: &'c dyn Cell,
+        method: Method,
+        readout: &Readout,
+        lanes: usize,
+        workers: usize,
+        rng: &mut Pcg32,
+    ) -> Self {
+        let p = cell.num_params();
+        let slots: Vec<LaneSlot<'c>> = (0..lanes.max(1))
+            .map(|i| {
+                let mut lane_rng = rng.split(i as u64);
+                let algo = method.build(cell, &mut lane_rng);
+                LaneSlot {
+                    algo,
+                    rng: lane_rng,
+                    g_rec: vec![0.0; p],
+                    g_ro: readout.make_grad(),
+                    cache: ReadoutCache::default(),
+                    nll_sum: 0.0,
+                    nll_n: 0,
+                    flops_sum: 0.0,
+                    flops_n: 0,
+                    tokens: 0,
+                    pending: 0,
+                }
+            })
+            .collect();
+        let workers = if workers == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            workers
+        };
+        LaneExecutor { slots, workers }
+    }
+
+    #[inline]
+    pub fn lanes(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Configured worker count (before capping at the lane count).
+    #[inline]
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    #[inline]
+    pub fn slots(&self) -> &[LaneSlot<'c>] {
+        &self.slots
+    }
+
+    #[inline]
+    pub fn slots_mut(&mut self) -> &mut [LaneSlot<'c>] {
+        &mut self.slots
+    }
+
+    #[inline]
+    pub fn slot_mut(&mut self, i: usize) -> &mut LaneSlot<'c> {
+        &mut self.slots[i]
+    }
+
+    /// Sequence boundary on every lane.
+    pub fn reset_lanes(&mut self) {
+        for slot in self.slots.iter_mut() {
+            slot.algo.reset();
+        }
+    }
+
+    /// Materialize any deferred (BPTT) gradients on every lane into the
+    /// per-lane buffers. Call before [`reduce_and_update`] on paths that did
+    /// not already flush inside the parallel section.
+    pub fn flush_all(&mut self, theta: &[f32]) {
+        for slot in self.slots.iter_mut() {
+            slot.algo.flush(theta, &mut slot.g_rec);
+        }
+    }
+
+    /// One random crop per lane, drawn from each lane's own stream in lane
+    /// order — identical for any worker count.
+    pub fn sample_crops(&mut self, corpus: &Corpus, seq_len: usize) -> Vec<Vec<u8>> {
+        self.slots
+            .iter_mut()
+            .map(|slot| corpus.sample_crop(seq_len, &mut slot.rng).to_vec())
+            .collect()
+    }
+
+    /// Run `f(lane_index, slot)` for every lane, fanning contiguous lane
+    /// chunks out over up to `workers` scoped threads. With one worker (or
+    /// one lane) this is an inline loop.
+    pub fn for_each_lane<F>(&mut self, f: F)
+    where
+        F: Fn(usize, &mut LaneSlot<'c>) + Sync,
+    {
+        let w = self.workers.min(self.slots.len());
+        if w <= 1 {
+            for (i, slot) in self.slots.iter_mut().enumerate() {
+                f(i, slot);
+            }
+            return;
+        }
+        let chunk = self.slots.len().div_ceil(w);
+        std::thread::scope(|s| {
+            for (ci, chunk_slots) in self.slots.chunks_mut(chunk).enumerate() {
+                let f = &f;
+                s.spawn(move || {
+                    // Lanes already saturate the cores; keep the per-lane
+                    // SnAp update from spawning a second layer of threads.
+                    crate::sparse::coljac::set_thread_intra_op_parallelism(false);
+                    for (j, slot) in chunk_slots.iter_mut().enumerate() {
+                        f(ci * chunk + j, slot);
+                    }
+                });
+            }
+        });
+    }
+
+    /// Run `f(lane_index, slot)` for every lane with work stealing: workers
+    /// claim the next unprocessed lane through an atomic counter. Use when
+    /// per-lane work is uneven (variable-length Copy sequences), where
+    /// static chunking would leave workers idle. Each lane is claimed
+    /// exactly once, so per-lane buffers still make the result independent
+    /// of which worker ran which lane.
+    pub fn for_each_lane_stealing<F>(&mut self, f: F)
+    where
+        F: Fn(usize, &mut LaneSlot<'c>) + Sync,
+    {
+        let w = self.workers.min(self.slots.len());
+        if w <= 1 {
+            for (i, slot) in self.slots.iter_mut().enumerate() {
+                f(i, slot);
+            }
+            return;
+        }
+        let next = AtomicUsize::new(0);
+        let items: Vec<Mutex<&mut LaneSlot<'c>>> =
+            self.slots.iter_mut().map(Mutex::new).collect();
+        std::thread::scope(|s| {
+            for _ in 0..w {
+                let next = &next;
+                let items = &items;
+                let f = &f;
+                s.spawn(move || {
+                    crate::sparse::coljac::set_thread_intra_op_parallelism(false);
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= items.len() {
+                            break;
+                        }
+                        // Each index is produced once, so the lock is always
+                        // uncontended; it only exists to hand the &mut across
+                        // the thread boundary safely.
+                        let mut slot = items[i].lock().unwrap();
+                        f(i, &mut **slot);
+                    }
+                });
+            }
+        });
+    }
+
+    /// Total lane-steps contributed to the pending gradient.
+    pub fn total_pending(&self) -> usize {
+        self.slots.iter().map(|s| s.pending).sum()
+    }
+
+    /// Ordered reduction + shared weight update — the serialization point of
+    /// the engine. Per-lane gradients are folded into `g_rec`/`g_ro` in lane
+    /// order, scaled by 1/total-pending, and applied through the optimizers;
+    /// the per-lane buffers and pending counters are cleared. With
+    /// `trains_recurrent == false` (Frozen) the recurrent side is discarded
+    /// and only the readout updates, matching the sequential engine.
+    #[allow(clippy::too_many_arguments)]
+    pub fn reduce_and_update(
+        &mut self,
+        theta: &mut [f32],
+        g_rec: &mut [f32],
+        readout: &mut Readout,
+        g_ro: &mut ReadoutGrad,
+        opt_rec: &mut dyn Optimizer,
+        opt_ro: &mut dyn Optimizer,
+        pruner: &mut Option<Pruner>,
+        opt_steps: &mut u64,
+        trains_recurrent: bool,
+    ) {
+        let pending = self.total_pending();
+        let scale = 1.0 / pending.max(1) as f32;
+        if trains_recurrent {
+            for slot in self.slots.iter_mut() {
+                for (dst, src) in g_rec.iter_mut().zip(slot.g_rec.iter()) {
+                    *dst += *src;
+                }
+                slot.g_rec.iter_mut().for_each(|v| *v = 0.0);
+            }
+            g_rec.iter_mut().for_each(|g| *g *= scale);
+            if let Some(pr) = pruner {
+                pr.mask_grad(g_rec);
+            }
+            opt_rec.step(theta, g_rec);
+            if let Some(pr) = pruner {
+                pr.apply(*opt_steps, theta);
+            }
+        } else {
+            // Frozen: recurrent gradients (e.g. BPTT flushes) are discarded.
+            for slot in self.slots.iter_mut() {
+                slot.g_rec.iter_mut().for_each(|v| *v = 0.0);
+            }
+        }
+        for slot in self.slots.iter_mut() {
+            g_ro.accumulate_from(&slot.g_ro);
+            slot.g_ro.clear();
+        }
+        g_ro.flat.iter_mut().for_each(|g| *g *= scale);
+        // Readout params live inside `Readout`; express the step as a delta.
+        let mut flat = std::mem::take(&mut g_ro.flat);
+        let mut delta = vec![0.0f32; flat.len()];
+        step_as_delta(opt_ro, &mut delta, &mut flat);
+        readout.apply_delta(&delta);
+        g_ro.flat = flat;
+        *opt_steps += 1;
+        for slot in self.slots.iter_mut() {
+            slot.pending = 0;
+        }
+    }
+
+    /// Drain the per-lane loss accumulators (lane order): returns
+    /// `(Σ nats, sample count)` since the previous drain.
+    pub fn drain_step_nll(&mut self) -> (f64, u64) {
+        let mut sum = 0.0f64;
+        let mut n = 0u64;
+        for slot in self.slots.iter_mut() {
+            sum += slot.nll_sum;
+            n += slot.nll_n;
+            slot.nll_sum = 0.0;
+            slot.nll_n = 0;
+        }
+        (sum, n)
+    }
+
+    /// Mean tracking FLOPs per lane-step over the whole run (lane order).
+    pub fn tracking_flops_mean(&self) -> f64 {
+        let (sum, n) = self
+            .slots
+            .iter()
+            .fold((0.0f64, 0u64), |(s, n), sl| (s + sl.flops_sum, n + sl.flops_n));
+        if n == 0 {
+            f64::NAN
+        } else {
+            sum / n as f64
+        }
+    }
+
+    /// Total tokens processed across lanes.
+    pub fn tokens_seen(&self) -> u64 {
+        self.slots.iter().map(|s| s.tokens).sum()
+    }
+
+    /// Peak per-lane tracking memory (the Table 1 measurement is per lane).
+    pub fn tracking_memory_floats(&self) -> usize {
+        self.slots.iter().map(|s| s.algo.tracking_memory_floats()).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells::Arch;
+    use crate::grad::Method;
+
+    fn make_exec<'c>(
+        cell: &'c dyn Cell,
+        readout: &Readout,
+        lanes: usize,
+        workers: usize,
+    ) -> LaneExecutor<'c> {
+        let mut rng = Pcg32::seeded(99);
+        LaneExecutor::new(cell, Method::Snap(1), readout, lanes, workers, &mut rng)
+    }
+
+    #[test]
+    fn each_lane_visited_exactly_once_with_correct_index() {
+        let mut rng = Pcg32::seeded(1);
+        let cell = Arch::Gru.build(6, 3, 1.0, &mut rng);
+        let readout = Readout::new(6, 8, 4, &mut rng);
+        for workers in [1usize, 2, 4, 16] {
+            let mut exec = make_exec(cell.as_ref(), &readout, 7, workers);
+            exec.for_each_lane(|i, slot| {
+                slot.tokens += i as u64 + 1;
+                slot.pending += 1;
+            });
+            for (i, slot) in exec.slots().iter().enumerate() {
+                assert_eq!(slot.tokens, i as u64 + 1, "workers={workers} lane {i}");
+                assert_eq!(slot.pending, 1);
+            }
+        }
+    }
+
+    #[test]
+    fn work_stealing_visits_each_lane_exactly_once() {
+        let mut rng = Pcg32::seeded(2);
+        let cell = Arch::Gru.build(6, 3, 1.0, &mut rng);
+        let readout = Readout::new(6, 8, 4, &mut rng);
+        for workers in [1usize, 3, 8] {
+            let mut exec = make_exec(cell.as_ref(), &readout, 11, workers);
+            exec.for_each_lane_stealing(|i, slot| {
+                slot.tokens += 1;
+                slot.nll_sum += i as f64;
+            });
+            assert_eq!(exec.tokens_seen(), 11, "workers={workers}");
+            let (sum, _) = exec.drain_step_nll();
+            assert_eq!(sum, (0..11).sum::<usize>() as f64);
+        }
+    }
+
+    #[test]
+    fn lane_rng_streams_are_independent_of_worker_count() {
+        let mut rng_a = Pcg32::seeded(5);
+        let mut rng_b = Pcg32::seeded(5);
+        let cell = Arch::Gru.build(4, 2, 1.0, &mut rng_a);
+        let cell_b = Arch::Gru.build(4, 2, 1.0, &mut rng_b);
+        let readout_a = Readout::new(4, 4, 3, &mut rng_a);
+        let readout_b = Readout::new(4, 4, 3, &mut rng_b);
+        let mut a = LaneExecutor::new(cell.as_ref(), Method::Snap(1), &readout_a, 4, 1, &mut rng_a);
+        let mut b =
+            LaneExecutor::new(cell_b.as_ref(), Method::Snap(1), &readout_b, 4, 8, &mut rng_b);
+        for (sa, sb) in a.slots_mut().iter_mut().zip(b.slots_mut().iter_mut()) {
+            assert_eq!(sa.rng.next_u64(), sb.rng.next_u64());
+        }
+    }
+
+    #[test]
+    fn reduction_is_in_lane_order_for_any_worker_count() {
+        // Fill per-lane buffers with lane-dependent values in parallel, then
+        // check the reduced gradient is the lane-ordered sum.
+        let mut rng = Pcg32::seeded(7);
+        let cell = Arch::Gru.build(4, 2, 1.0, &mut rng);
+        let mut readout = Readout::new(4, 4, 3, &mut rng);
+        let p = cell.num_params();
+        let mut reference: Option<Vec<f32>> = None;
+        for workers in [1usize, 2, 8] {
+            let mut exec = make_exec(cell.as_ref(), &readout, 8, workers);
+            exec.for_each_lane(|i, slot| {
+                for (j, g) in slot.g_rec.iter_mut().enumerate() {
+                    *g = ((i + 1) * (j + 1)) as f32 * 1e-3;
+                }
+                slot.pending = 1;
+            });
+            let mut theta = vec![0.0f32; p];
+            let mut g_rec = vec![0.0f32; p];
+            let mut g_ro = readout.make_grad();
+            let mut opt_rec = crate::opt::Sgd::new(p, 0.0, 0.0);
+            let mut opt_ro = crate::opt::Sgd::new(readout.num_params(), 0.0, 0.0);
+            let mut pruner = None;
+            let mut opt_steps = 0u64;
+            exec.reduce_and_update(
+                &mut theta,
+                &mut g_rec,
+                &mut readout,
+                &mut g_ro,
+                &mut opt_rec,
+                &mut opt_ro,
+                &mut pruner,
+                &mut opt_steps,
+                true,
+            );
+            // lr = 0 ⇒ θ untouched; grads zeroed by the optimizer step.
+            assert!(theta.iter().all(|&v| v == 0.0));
+            assert_eq!(opt_steps, 1);
+            assert_eq!(exec.total_pending(), 0);
+            // Re-fill and reduce again without an optimizer to read the sum.
+            exec.for_each_lane(|i, slot| {
+                for (j, g) in slot.g_rec.iter_mut().enumerate() {
+                    *g = ((i + 1) * (j + 1)) as f32 * 1e-3;
+                }
+                slot.pending = 1;
+            });
+            let mut sum = vec![0.0f32; p];
+            for slot in exec.slots() {
+                for (a, b) in sum.iter_mut().zip(&slot.g_rec) {
+                    *a += *b;
+                }
+            }
+            match &reference {
+                None => reference = Some(sum),
+                Some(r) => {
+                    for (a, b) in r.iter().zip(&sum) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "workers={workers}");
+                    }
+                }
+            }
+        }
+    }
+}

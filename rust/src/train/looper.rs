@@ -1,13 +1,32 @@
 //! Training drivers: character-level LM (§5.1) and the Copy task with
 //! curriculum (§5.2), both supporting full-unroll and fully-online (T=1)
 //! update schedules with the stale-Jacobian semantics of §2.2.
+//!
+//! Both drivers route through the lane-parallel [`LaneExecutor`]
+//! (`train::executor`): every minibatch lane owns its gradient algorithm,
+//! gradient buffers and RNG stream; θ and the readout are shared read-only
+//! inside a parallel section and updated after an ordered reduction. Results
+//! are bitwise identical for any `TrainConfig::workers` value on the
+//! char-LM driver and the full-unroll Copy driver (the regression guarantee
+//! tested in `rust/tests/executor_determinism.rs`).
+//!
+//! The one schedule that cannot be parallelized faithfully is Copy with
+//! `truncation > 0` and a single worker: the sequential engine updates θ
+//! every `truncation` lane-tokens *while walking the lanes one after
+//! another*. With `workers <= 1` that legacy schedule is preserved exactly;
+//! with `workers > 1` the driver switches to the batched-online schedule
+//! (all active lanes advance in lockstep and θ updates every `truncation`
+//! *global* timesteps, gradients averaged across the active lanes), which
+//! is deterministic for any worker count but is a different — batch-
+//! synchronous — regime than the single-worker walk.
 
 use crate::cells::{Arch, Cell};
 use crate::data::copy::{CopySeq, Curriculum, COPY_CLASSES, COPY_VOCAB};
 use crate::data::corpus::Corpus;
 use crate::grad::{GradAlgo, Method};
 use crate::models::{Embedding, Readout, ReadoutCache};
-use crate::opt::{Adam, Optimizer};
+use crate::opt::Adam;
+use crate::train::executor::{LaneExecutor, LaneSlot};
 use crate::train::metrics::{bpc_from_nats, CurvePoint, RunningMean};
 use crate::train::prune::Pruner;
 use crate::tensor::rng::Pcg32;
@@ -37,6 +56,13 @@ pub struct TrainConfig {
     pub prune_to: Option<f64>,
     pub prune_every: u64,
     pub prune_end_step: u64,
+    /// worker threads stepping the lanes (0 = all cores, 1 = inline).
+    /// Training results are independent of this value (see module docs for
+    /// the one Copy-online exception).
+    pub workers: usize,
+    /// validation span (bytes) per char-LM evaluation (paper default 4096;
+    /// benches shrink it so measurement is dominated by training).
+    pub eval_span: usize,
 }
 
 impl Default for TrainConfig {
@@ -58,6 +84,8 @@ impl Default for TrainConfig {
             prune_to: None,
             prune_every: 1000,
             prune_end_step: u64::MAX,
+            workers: 1,
+            eval_span: 4096,
         }
     }
 }
@@ -106,6 +134,59 @@ enum Task<'a> {
     Copy,
 }
 
+/// One char-LM lane-token: step the cell, read out, backprop the loss into
+/// the lane's buffers. Runs inside a parallel section — touches only `slot`
+/// plus shared read-only state.
+fn lane_step_charlm(
+    slot: &mut LaneSlot<'_>,
+    theta: &[f32],
+    embed: &Embedding,
+    readout: &Readout,
+    crop: &[u8],
+    t: usize,
+    trains_recurrent: bool,
+) {
+    let x = embed.lookup(crop[t] as usize);
+    slot.algo.step(theta, x);
+    readout.forward(slot.algo.hidden(), &mut slot.cache);
+    let (nll, dh) = readout.loss_and_backward(&slot.cache, crop[t + 1] as usize, &mut slot.g_ro);
+    if trains_recurrent {
+        slot.algo.inject_loss(&dh, &mut slot.g_rec);
+    }
+    slot.nll_sum += nll as f64;
+    slot.nll_n += 1;
+    slot.flops_sum += slot.algo.tracking_flops_per_step() as f64;
+    slot.flops_n += 1;
+    slot.tokens += 1;
+    slot.pending += 1;
+}
+
+/// One Copy-task lane-token (loss only on prediction positions).
+fn lane_step_copy(
+    slot: &mut LaneSlot<'_>,
+    theta: &[f32],
+    embed: &Embedding,
+    readout: &Readout,
+    tok: usize,
+    target: Option<usize>,
+    trains_recurrent: bool,
+) {
+    slot.algo.step(theta, embed.lookup(tok));
+    if let Some(target) = target {
+        readout.forward(slot.algo.hidden(), &mut slot.cache);
+        let (nll, dh) = readout.loss_and_backward(&slot.cache, target, &mut slot.g_ro);
+        if trains_recurrent {
+            slot.algo.inject_loss(&dh, &mut slot.g_rec);
+        }
+        slot.nll_sum += nll as f64;
+        slot.nll_n += 1;
+    }
+    slot.flops_sum += slot.algo.tracking_flops_per_step() as f64;
+    slot.flops_n += 1;
+    slot.tokens += 1;
+    slot.pending += 1;
+}
+
 fn run_driver(
     cfg: &TrainConfig,
     cell: &dyn Cell,
@@ -116,9 +197,8 @@ fn run_driver(
 ) -> TrainResult {
     let p = cell.num_params();
     let mut theta = cell.init_params(rng);
-    let mut lanes: Vec<Box<dyn GradAlgo + '_>> = (0..cfg.batch.max(1))
-        .map(|_| cfg.method.build(cell, rng))
-        .collect();
+    let mut exec =
+        LaneExecutor::new(cell, cfg.method, readout, cfg.batch.max(1), cfg.workers, rng);
     let mut g_rec = vec![0.0f32; p];
     let mut g_ro = readout.make_grad();
     let mut opt_rec = Adam::new(p, cfg.lr);
@@ -126,121 +206,171 @@ fn run_driver(
     let mut pruner = cfg.prune_to.map(|s| {
         Pruner::new(cell.param_info(), s, 0, cfg.prune_end_step.min(cfg.steps as u64), cfg.prune_every)
     });
+    let trains_rec = cfg.method.trains_recurrent();
 
     let mut curve = Vec::new();
-    let mut tokens_seen = 0u64;
-    let mut flops = RunningMean::new();
     let mut curriculum = Curriculum::new();
     let mut opt_steps = 0u64;
-    let mut window = 0usize; // steps since last update (truncation counter)
-    let mut pending = 0usize; // lane-steps contributing to current grad
-    let mut cache = ReadoutCache::default();
     let mut last_train_bpc = f64::NAN;
     let mut last_valid_bpc = f64::NAN;
 
     for step in 0..cfg.steps {
-        let mut batch_nll = RunningMean::new();
         match task {
             Task::CharLm { train, .. } => {
-                // B independent crops, stepped in lockstep.
-                let crops: Vec<Vec<u8>> = (0..lanes.len())
-                    .map(|_| train.sample_crop(cfg.seq_len, rng).to_vec())
-                    .collect();
-                for lane in lanes.iter_mut() {
-                    lane.reset();
-                }
-                for t in 0..cfg.seq_len {
-                    for (lane, crop) in lanes.iter_mut().zip(&crops) {
-                        let x = embed.lookup(crop[t] as usize);
-                        lane.step(&theta, x);
-                        readout.forward(lane.hidden(), &mut cache);
-                        let (nll, dh) =
-                            readout.loss_and_backward(&cache, crop[t + 1] as usize, &mut g_ro);
-                        if cfg.method.trains_recurrent() {
-                            lane.inject_loss(&dh, &mut g_rec);
-                        }
-                        batch_nll.add(nll as f64);
-                        flops.add(lane.tracking_flops_per_step() as f64);
-                        tokens_seen += 1;
-                        pending += 1;
+                // B independent crops, one per lane, advanced in lockstep
+                // segments of `truncation` tokens (whole crop when 0); θ
+                // updates at every segment boundary.
+                exec.reset_lanes();
+                let crops = exec.sample_crops(train, cfg.seq_len);
+                let seg = if cfg.truncation == 0 { cfg.seq_len } else { cfg.truncation };
+                let mut t0 = 0usize;
+                while t0 < cfg.seq_len {
+                    let t1 = (t0 + seg).min(cfg.seq_len);
+                    {
+                        let theta_ref: &[f32] = &theta;
+                        let ro: &Readout = readout;
+                        exec.for_each_lane(|i, slot| {
+                            let crop = &crops[i];
+                            for t in t0..t1 {
+                                lane_step_charlm(slot, theta_ref, embed, ro, crop, t, trains_rec);
+                            }
+                            // Segment end is an update boundary: materialize
+                            // deferred (BPTT) gradients in-lane, in parallel.
+                            slot.algo.flush(theta_ref, &mut slot.g_rec);
+                        });
                     }
-                    window += 1;
-                    if cfg.truncation > 0 && window >= cfg.truncation {
-                        apply_update(
-                            cfg, &mut lanes, &mut theta, &mut g_rec, readout, &mut g_ro,
-                            &mut opt_rec, &mut opt_ro, &mut pruner, &mut opt_steps, pending,
-                        );
-                        window = 0;
-                        pending = 0;
-                    }
-                }
-                if cfg.truncation == 0 || pending > 0 {
-                    apply_update(
-                        cfg, &mut lanes, &mut theta, &mut g_rec, readout, &mut g_ro,
-                        &mut opt_rec, &mut opt_ro, &mut pruner, &mut opt_steps, pending.max(1),
+                    exec.reduce_and_update(
+                        &mut theta, &mut g_rec, readout, &mut g_ro, &mut opt_rec, &mut opt_ro,
+                        &mut pruner, &mut opt_steps, trains_rec,
                     );
-                    window = 0;
-                    pending = 0;
+                    t0 = t1;
                 }
             }
             Task::Copy => {
-                // Minibatch of B sequences; lengths differ, so lanes run
-                // sequentially. Online mode updates at every timestep.
-                for lane_idx in 0..lanes.len() {
-                    lanes[lane_idx].reset();
-                    let len = curriculum.sample_len(rng);
-                    let seq = CopySeq::generate(len, rng);
-                    for (t, &tok) in seq.inputs.iter().enumerate() {
-                        let lane = &mut lanes[lane_idx];
-                        lane.step(&theta, embed.lookup(tok));
-                        if let Some(target) = seq.targets[t] {
-                            readout.forward(lane.hidden(), &mut cache);
-                            let (nll, dh) =
-                                readout.loss_and_backward(&cache, target, &mut g_ro);
-                            if cfg.method.trains_recurrent() {
-                                lane.inject_loss(&dh, &mut g_rec);
+                exec.reset_lanes();
+                // Sample each lane's sequence from its own stream (lane
+                // order; the curriculum level is fixed within a minibatch).
+                let seqs: Vec<CopySeq> = exec
+                    .slots_mut()
+                    .iter_mut()
+                    .map(|slot| {
+                        let len = curriculum.sample_len(&mut slot.rng);
+                        CopySeq::generate(len, &mut slot.rng)
+                    })
+                    .collect();
+                if cfg.truncation == 0 {
+                    // Full unroll: lanes are fully independent work items —
+                    // lengths vary, so hand them out by work stealing; one
+                    // shared update at the minibatch boundary.
+                    {
+                        let theta_ref: &[f32] = &theta;
+                        let ro: &Readout = readout;
+                        exec.for_each_lane_stealing(|i, slot| {
+                            let seq = &seqs[i];
+                            for (t, &tok) in seq.inputs.iter().enumerate() {
+                                lane_step_copy(
+                                    slot, theta_ref, embed, ro, tok, seq.targets[t], trains_rec,
+                                );
                             }
-                            batch_nll.add(nll as f64);
-                        }
-                        flops.add(lane.tracking_flops_per_step() as f64);
-                        tokens_seen += 1;
-                        pending += 1;
-                        window += 1;
-                        if cfg.truncation > 0 && window >= cfg.truncation {
-                            apply_update(
-                                cfg, &mut lanes, &mut theta, &mut g_rec, readout, &mut g_ro,
-                                &mut opt_rec, &mut opt_ro, &mut pruner, &mut opt_steps,
-                                pending,
+                            slot.algo.flush(theta_ref, &mut slot.g_rec);
+                        });
+                    }
+                    exec.reduce_and_update(
+                        &mut theta, &mut g_rec, readout, &mut g_ro, &mut opt_rec, &mut opt_ro,
+                        &mut pruner, &mut opt_steps, trains_rec,
+                    );
+                } else if exec.workers() <= 1 {
+                    // Legacy fully-online schedule (identical to the
+                    // sequential engine): walk the lanes one after another,
+                    // updating θ every `truncation` lane-tokens.
+                    let mut window = 0usize;
+                    for i in 0..exec.lanes() {
+                        let seq = &seqs[i];
+                        for (t, &tok) in seq.inputs.iter().enumerate() {
+                            lane_step_copy(
+                                exec.slot_mut(i), &theta, embed, readout, tok, seq.targets[t],
+                                trains_rec,
                             );
-                            window = 0;
-                            pending = 0;
+                            window += 1;
+                            if window >= cfg.truncation {
+                                exec.flush_all(&theta);
+                                exec.reduce_and_update(
+                                    &mut theta, &mut g_rec, readout, &mut g_ro, &mut opt_rec,
+                                    &mut opt_ro, &mut pruner, &mut opt_steps, trains_rec,
+                                );
+                                window = 0;
+                            }
                         }
                     }
+                    if exec.total_pending() > 0 {
+                        exec.flush_all(&theta);
+                        exec.reduce_and_update(
+                            &mut theta, &mut g_rec, readout, &mut g_ro, &mut opt_rec, &mut opt_ro,
+                            &mut pruner, &mut opt_steps, trains_rec,
+                        );
+                    }
+                } else {
+                    // Batched-online: all still-active lanes advance in
+                    // lockstep; θ updates every `truncation` global
+                    // timesteps with gradients averaged across the lanes
+                    // that contributed. Deterministic for any worker count.
+                    let max_len = seqs.iter().map(|s| s.inputs.len()).max().unwrap_or(0);
+                    let mut t0 = 0usize;
+                    while t0 < max_len {
+                        let t1 = (t0 + cfg.truncation).min(max_len);
+                        {
+                            let theta_ref: &[f32] = &theta;
+                            let ro: &Readout = readout;
+                            exec.for_each_lane(|i, slot| {
+                                let seq = &seqs[i];
+                                let hi = t1.min(seq.inputs.len());
+                                for t in t0..hi {
+                                    lane_step_copy(
+                                        slot, theta_ref, embed, ro, seq.inputs[t],
+                                        seq.targets[t], trains_rec,
+                                    );
+                                }
+                                if t0 < hi {
+                                    slot.algo.flush(theta_ref, &mut slot.g_rec);
+                                }
+                            });
+                        }
+                        exec.reduce_and_update(
+                            &mut theta, &mut g_rec, readout, &mut g_ro, &mut opt_rec, &mut opt_ro,
+                            &mut pruner, &mut opt_steps, trains_rec,
+                        );
+                        t0 = t1;
+                    }
                 }
-                if cfg.truncation == 0 || pending > 0 {
-                    apply_update(
-                        cfg, &mut lanes, &mut theta, &mut g_rec, readout, &mut g_ro,
-                        &mut opt_rec, &mut opt_ro, &mut pruner, &mut opt_steps,
-                        pending.max(1),
-                    );
-                    window = 0;
-                    pending = 0;
-                }
-                let bpc = bpc_from_nats(batch_nll.mean());
-                curriculum.report_minibatch_bpc(bpc as f32);
             }
         }
 
-        last_train_bpc = bpc_from_nats(batch_nll.mean());
+        // Minibatch loss: ordered per-lane drain, so the mean (and the
+        // curriculum decisions it feeds) is worker-count independent.
+        let (nll_sum, nll_n) = exec.drain_step_nll();
+        let step_mean_nats = if nll_n == 0 { f64::NAN } else { nll_sum / nll_n as f64 };
+        last_train_bpc = bpc_from_nats(step_mean_nats);
+        if let Task::Copy = task {
+            curriculum.report_minibatch_bpc(last_train_bpc as f32);
+        }
+
         if step % cfg.log_every.max(1) == 0 || step + 1 == cfg.steps {
             if let Task::CharLm { valid, .. } = &task {
-                last_valid_bpc =
-                    evaluate_charlm(cell, &theta, embed, readout, valid, 4096.min(valid.len() - 1), rng);
+                // Guard the empty-validation-split case: Corpus::split on a
+                // tiny corpus legitimately yields an empty partition.
+                last_valid_bpc = if valid.len() >= 2 {
+                    evaluate_charlm(
+                        cell, &theta, embed, readout, valid,
+                        cfg.eval_span.min(valid.len() - 1), rng,
+                    )
+                } else {
+                    f64::NAN
+                };
             }
             curve.push(CurvePoint {
                 x: match task {
                     Task::CharLm { .. } => step as u64,
-                    Task::Copy => tokens_seen,
+                    Task::Copy => exec.tokens_seen(),
                 },
                 train_bpc: last_train_bpc,
                 valid_bpc: last_valid_bpc,
@@ -253,65 +383,15 @@ fn run_driver(
         curve,
         final_train_bpc: last_train_bpc,
         final_valid_bpc: last_valid_bpc,
-        tracking_flops_per_step: flops.mean(),
-        tracking_memory_floats: lanes.iter().map(|l| l.tracking_memory_floats()).max().unwrap_or(0),
-        tokens_seen,
+        tracking_flops_per_step: exec.tracking_flops_mean(),
+        tracking_memory_floats: exec.tracking_memory_floats(),
+        tokens_seen: exec.tokens_seen(),
         final_level: curriculum.level(),
     }
 }
 
-#[allow(clippy::too_many_arguments)]
-fn apply_update(
-    cfg: &TrainConfig,
-    lanes: &mut [Box<dyn GradAlgo + '_>],
-    theta: &mut [f32],
-    g_rec: &mut [f32],
-    readout: &mut Readout,
-    g_ro: &mut crate::models::ReadoutGrad,
-    opt_rec: &mut Adam,
-    opt_ro: &mut Adam,
-    pruner: &mut Option<Pruner>,
-    opt_steps: &mut u64,
-    pending: usize,
-) {
-    let scale = 1.0 / pending.max(1) as f32;
-    if cfg.method.trains_recurrent() {
-        for lane in lanes.iter_mut() {
-            lane.flush(theta, g_rec); // BPTT materializes here; no-op otherwise
-        }
-        g_rec.iter_mut().for_each(|g| *g *= scale);
-        if let Some(pr) = pruner {
-            pr.mask_grad(g_rec);
-        }
-        opt_rec.step(theta, g_rec);
-        if let Some(pr) = pruner {
-            pr.apply(*opt_steps, theta);
-        }
-    } else {
-        g_rec.iter_mut().for_each(|g| *g = 0.0);
-        for lane in lanes.iter_mut() {
-            let mut sink = vec![0.0f32; g_rec.len()];
-            lane.flush(theta, &mut sink); // keep BPTT windows bounded
-        }
-    }
-    g_ro.flat.iter_mut().for_each(|g| *g *= scale);
-    let mut flat = std::mem::take(&mut g_ro.flat);
-    // readout params are updated via delta application
-    let mut delta = vec![0.0f32; flat.len()];
-    opt_ro_step(opt_ro, &mut delta, &mut flat);
-    readout.apply_delta(&delta);
-    g_ro.flat = flat;
-    *opt_steps += 1;
-}
-
-/// Adam step expressed as a delta (readout params live inside `Readout`).
-fn opt_ro_step(opt: &mut Adam, delta: &mut [f32], grad: &mut [f32]) {
-    // run Adam on a zero "params" vector: the resulting params == -update,
-    // i.e. delta = params_after.
-    opt.step(delta, grad);
-}
-
 /// Evaluate char-LM bpc over a contiguous span of the validation corpus.
+/// Returns NaN when the corpus is too short to score a single transition.
 pub fn evaluate_charlm(
     cell: &dyn Cell,
     theta: &[f32],
@@ -322,7 +402,10 @@ pub fn evaluate_charlm(
     rng: &mut Pcg32,
 ) -> f64 {
     let bytes = valid.bytes();
-    let span = span.min(bytes.len() - 1);
+    if bytes.len() < 2 {
+        return f64::NAN;
+    }
+    let span = span.min(bytes.len() - 1).max(1);
     let start = if bytes.len() - 1 > span { rng.below_usize(bytes.len() - 1 - span) } else { 0 };
     let mut cache = cell.make_cache();
     let mut ro_cache = ReadoutCache::default();
@@ -450,5 +533,47 @@ mod tests {
         };
         let res = train_charlm(&cfg, &corpus);
         assert!(res.final_train_bpc.is_finite());
+    }
+
+    #[test]
+    fn charlm_empty_validation_split_yields_nan_not_panic() {
+        // 19 bytes: split(0.05) produces an empty validation partition; the
+        // driver must skip evaluation instead of underflowing `len - 1`.
+        let corpus = Corpus::from_bytes((0..19u8).map(|i| i % 7 + 97).collect());
+        let cfg = TrainConfig {
+            k: 8,
+            seq_len: 8,
+            steps: 2,
+            batch: 2,
+            readout_hidden: 8,
+            embed_dim: 4,
+            log_every: 1,
+            ..Default::default()
+        };
+        let res = train_charlm(&cfg, &corpus);
+        assert!(res.final_valid_bpc.is_nan());
+        assert!(res.final_train_bpc.is_finite());
+    }
+
+    #[test]
+    fn copy_batched_online_multiworker_still_learns() {
+        // workers > 1 switches Copy-online to the batched lockstep schedule;
+        // it must still advance the curriculum.
+        let cfg = TrainConfig {
+            arch: Arch::Gru,
+            k: 24,
+            method: Method::Snap(1),
+            lr: 3e-3,
+            batch: 4,
+            truncation: 1,
+            steps: 150,
+            seed: 3,
+            readout_hidden: 32,
+            workers: 2,
+            ..Default::default()
+        };
+        let res = train_copy(&cfg);
+        assert!(res.final_level >= 1 && res.final_train_bpc.is_finite());
+        assert!(res.tokens_seen > 0);
     }
 }

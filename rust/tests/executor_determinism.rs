@@ -1,0 +1,125 @@
+//! The lane-parallel executor's regression guarantee: training results are
+//! **bitwise identical** for any worker count. Lanes own their gradient
+//! buffers and RNG streams, and the executor reduces per-lane gradients in
+//! lane order on the coordinating thread — so neither scheduling nor f32
+//! non-associativity can leak into the results.
+
+use snap_rtrl::cells::Arch;
+use snap_rtrl::data::Corpus;
+use snap_rtrl::grad::Method;
+use snap_rtrl::train::{train_charlm, train_copy, TrainConfig, TrainResult};
+
+fn charlm_cfg(method: Method, truncation: usize, workers: usize) -> TrainConfig {
+    TrainConfig {
+        arch: Arch::Gru,
+        k: 16,
+        density: 1.0,
+        method,
+        lr: 3e-3,
+        batch: 8,
+        seq_len: 32,
+        truncation,
+        steps: 10,
+        seed: 33,
+        readout_hidden: 32,
+        embed_dim: 8,
+        log_every: 3,
+        workers,
+        ..Default::default()
+    }
+}
+
+fn assert_curves_bitwise_equal(a: &TrainResult, b: &TrainResult, what: &str) {
+    assert_eq!(a.curve.len(), b.curve.len(), "{what}: curve length");
+    for (pa, pb) in a.curve.iter().zip(&b.curve) {
+        assert_eq!(pa.x, pb.x, "{what}: x");
+        assert_eq!(
+            pa.train_bpc.to_bits(),
+            pb.train_bpc.to_bits(),
+            "{what}: train bpc {} vs {}",
+            pa.train_bpc,
+            pb.train_bpc
+        );
+        assert_eq!(
+            pa.valid_bpc.to_bits(),
+            pb.valid_bpc.to_bits(),
+            "{what}: valid bpc {} vs {}",
+            pa.valid_bpc,
+            pb.valid_bpc
+        );
+        assert_eq!(pa.aux.to_bits(), pb.aux.to_bits(), "{what}: aux");
+    }
+    assert_eq!(a.tokens_seen, b.tokens_seen, "{what}: tokens");
+    assert_eq!(
+        a.final_train_bpc.to_bits(),
+        b.final_train_bpc.to_bits(),
+        "{what}: final train bpc"
+    );
+}
+
+#[test]
+fn charlm_batch8_bitwise_identical_for_1_2_8_workers() {
+    let corpus = Corpus::synthetic(20_000, 17);
+    let base = train_charlm(&charlm_cfg(Method::Snap(1), 0, 1), &corpus);
+    for workers in [2usize, 8] {
+        let res = train_charlm(&charlm_cfg(Method::Snap(1), 0, workers), &corpus);
+        assert_curves_bitwise_equal(&base, &res, &format!("snap-1 workers={workers}"));
+    }
+}
+
+#[test]
+fn charlm_truncated_windows_identical_across_workers() {
+    // truncation > 0 exercises mid-sequence update barriers.
+    let corpus = Corpus::synthetic(20_000, 18);
+    let base = train_charlm(&charlm_cfg(Method::Snap(1), 8, 1), &corpus);
+    let res = train_charlm(&charlm_cfg(Method::Snap(1), 8, 4), &corpus);
+    assert_curves_bitwise_equal(&base, &res, "snap-1 trunc=8");
+}
+
+#[test]
+fn charlm_bptt_flush_path_identical_across_workers() {
+    // BPTT materializes gradients in the per-lane flush at segment
+    // boundaries — the deferred path must be deterministic too.
+    let corpus = Corpus::synthetic(20_000, 19);
+    let mut base_cfg = charlm_cfg(Method::Bptt, 8, 1);
+    base_cfg.steps = 6;
+    let mut par_cfg = charlm_cfg(Method::Bptt, 8, 3);
+    par_cfg.steps = 6;
+    let base = train_charlm(&base_cfg, &corpus);
+    let res = train_charlm(&par_cfg, &corpus);
+    assert_curves_bitwise_equal(&base, &res, "bptt trunc=8");
+}
+
+#[test]
+fn copy_full_unroll_identical_across_workers() {
+    // Variable-length lanes are work-stealing items; with per-lane buffers
+    // and ordered reduction the claim order cannot affect the result.
+    let mk = |workers| TrainConfig {
+        arch: Arch::Gru,
+        k: 16,
+        method: Method::Snap(1),
+        lr: 3e-3,
+        batch: 8,
+        truncation: 0,
+        steps: 25,
+        seed: 44,
+        readout_hidden: 32,
+        log_every: 5,
+        workers,
+        ..Default::default()
+    };
+    let base = train_copy(&mk(1));
+    for workers in [2usize, 8] {
+        let res = train_copy(&mk(workers));
+        assert_curves_bitwise_equal(&base, &res, &format!("copy workers={workers}"));
+        assert_eq!(base.final_level, res.final_level);
+    }
+}
+
+#[test]
+fn worker_count_zero_means_auto_and_stays_deterministic() {
+    let corpus = Corpus::synthetic(20_000, 20);
+    let base = train_charlm(&charlm_cfg(Method::Snap(1), 0, 1), &corpus);
+    let auto = train_charlm(&charlm_cfg(Method::Snap(1), 0, 0), &corpus);
+    assert_curves_bitwise_equal(&base, &auto, "workers=0 (auto)");
+}

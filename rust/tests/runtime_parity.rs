@@ -22,7 +22,14 @@ fn setup() -> Option<(PjrtRuntime, snap_rtrl::runtime::LoadedModule, StepIo, usi
     };
     let io = StepIo::from_manifest(&set).expect("manifest");
     let hidden = set.get_usize("readout_hidden").expect("manifest readout_hidden");
-    let rt = PjrtRuntime::cpu().expect("PJRT cpu client");
+    let rt = match PjrtRuntime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => {
+            // Offline builds ship a PJRT stub (see runtime::pjrt).
+            eprintln!("SKIP runtime tests: {e}");
+            return None;
+        }
+    };
     let module = rt
         .load_hlo_text(set.online_step().to_str().unwrap())
         .expect("compile gru_snap1_step");
