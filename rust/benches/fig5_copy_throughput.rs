@@ -3,8 +3,17 @@
 //! of the data-efficiency comparison, and the end-to-end driver the §Perf
 //! pass profiles.
 //!
-//! Run: `cargo bench --bench fig5_copy_throughput`
+//! Besides the paper-faithful single-worker grid (arch × method), a second
+//! sweep measures GRU/snap-1 throughput per worker count on the persistent
+//! pool (trunc 1 runs the batched-online schedule at workers > 1; trunc 0
+//! is bitwise identical for any worker count).
+//!
+//! `--json PATH` writes the machine-readable rows (the CI `bench-smoke`
+//! job uploads them as `BENCH_fig5.json`).
+//!
+//! Run: `cargo bench --bench fig5_copy_throughput [-- --steps 30 --json out.json]`
 
+use snap_rtrl::benchutil::{flag_str, flag_usize, write_bench_json, JsonObj};
 use snap_rtrl::cells::Arch;
 use snap_rtrl::grad::Method;
 use snap_rtrl::train::{train_copy, TrainConfig};
@@ -12,11 +21,30 @@ use std::time::Instant;
 
 fn main() {
     let args: Vec<String> = std::env::args().collect();
-    let k = flag(&args, "--k").unwrap_or(32);
-    let steps = flag(&args, "--steps").unwrap_or(30);
+    let k = flag_usize(&args, "--k").unwrap_or(32);
+    let steps = flag_usize(&args, "--steps").unwrap_or(30);
+    let json_path = flag_str(&args, "--json");
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut rows: Vec<JsonObj> = Vec::new();
 
     println!("# fig5_copy_throughput — online Copy training (k={k}, {steps} minibatches of 4)\n");
     println!("{:<28} {:>12} {:>14} {:>8}", "config", "tokens/s", "wall", "level");
+
+    let mk = |arch: Arch, m: Method, trunc: usize, workers: usize| TrainConfig {
+        arch,
+        k,
+        density: 0.25,
+        method: m,
+        lr: 3e-3,
+        batch: 4,
+        truncation: trunc,
+        steps,
+        seed: 9,
+        readout_hidden: 64,
+        log_every: steps,
+        workers,
+        ..Default::default()
+    };
 
     for arch in [Arch::Gru, Arch::Lstm] {
         for (m, trunc, label) in [
@@ -27,35 +55,69 @@ fn main() {
             (Method::Snap(3), 1, "snap-3"),
             (Method::Rflo, 1, "rflo"),
         ] {
-            let cfg = TrainConfig {
-                arch,
-                k,
-                density: 0.25,
-                method: m,
-                lr: 3e-3,
-                batch: 4,
-                truncation: trunc,
-                steps,
-                seed: 9,
-                readout_hidden: 64,
-                log_every: steps,
-                ..Default::default()
-            };
+            let cfg = mk(arch, m, trunc, 1);
             let t0 = Instant::now();
             let res = train_copy(&cfg);
             let dt = t0.elapsed();
+            let tps = res.tokens_seen as f64 / dt.as_secs_f64();
             println!(
                 "{:<28} {:>12.0} {:>14?} {:>8}",
                 format!("{}/{}", arch.name(), label),
-                res.tokens_seen as f64 / dt.as_secs_f64(),
+                tps,
                 dt,
                 res.final_level
+            );
+            rows.push(
+                JsonObj::new()
+                    .str("sweep", "methods")
+                    .str("arch", arch.name())
+                    .str("method", label)
+                    .int("trunc", trunc as u64)
+                    .int("workers", 1)
+                    .num("tokens_per_sec", tps)
+                    .num("wall_s", dt.as_secs_f64())
+                    .int("final_level", res.final_level as u64),
             );
         }
         println!();
     }
-}
 
-fn flag(args: &[String], name: &str) -> Option<usize> {
-    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).and_then(|v| v.parse().ok())
+    // ---- Worker sweep: GRU/snap-1 tokens/sec per worker count ----
+    println!("worker sweep — gru/snap-1 on the persistent pool ({cores} cores)");
+    println!("{:<20} {:>8} {:>12} {:>14}", "config", "workers", "tokens/s", "wall");
+    for trunc in [0usize, 1] {
+        for workers in [1usize, 2, 4] {
+            if workers > cores && workers != 1 {
+                continue;
+            }
+            let cfg = mk(Arch::Gru, Method::Snap(1), trunc, workers);
+            let t0 = Instant::now();
+            let res = train_copy(&cfg);
+            let dt = t0.elapsed();
+            let tps = res.tokens_seen as f64 / dt.as_secs_f64();
+            let label = if trunc == 0 { "snap-1/full" } else { "snap-1/online" };
+            println!("{label:<20} {workers:>8} {tps:>12.0} {dt:>14?}");
+            rows.push(
+                JsonObj::new()
+                    .str("sweep", "workers")
+                    .str("arch", "gru")
+                    .str("method", "snap-1")
+                    .int("trunc", trunc as u64)
+                    .int("workers", workers as u64)
+                    .num("tokens_per_sec", tps)
+                    .num("wall_s", dt.as_secs_f64())
+                    .int("final_level", res.final_level as u64),
+            );
+        }
+    }
+
+    if let Some(path) = json_path {
+        let meta = JsonObj::new()
+            .int("k", k as u64)
+            .int("steps", steps as u64)
+            .int("batch", 4)
+            .int("cores", cores as u64);
+        write_bench_json(path, "fig5_copy_throughput", &meta, &rows).expect("writing bench json");
+        println!("\nwrote {path}");
+    }
 }

@@ -1,39 +1,82 @@
-//! Lane-parallel training throughput: end-to-end char-LM tokens/sec as a
-//! function of worker count at batch 1/4/8/16 — the acceptance measurement
-//! for the `LaneExecutor`. At batch ≥ 8 with multiple workers the engine
-//! should beat the sequential path (workers=1) by ≥ 2× on a multi-core
-//! host; batch 1 shows the (expected) absence of speedup, since a single
-//! lane cannot be split.
+//! Lane-parallel training throughput: end-to-end char-LM tokens/sec.
+//!
+//! Two sweeps:
+//!
+//! * **batch** — tokens/sec as a function of worker count at batch
+//!   1/4/8/16 (full-unroll sequences, persistent pool). At batch ≥ 8 with
+//!   multiple workers the engine should beat the sequential path
+//!   (workers=1) by ≥ 2× on a multi-core host; batch 1 shows the
+//!   (expected) absence of speedup, since a single lane cannot be split.
+//! * **small-window** — the persistent pool's acceptance measurement:
+//!   tiny truncation windows (1/4/16 tokens) at batch 8, comparing
+//!   [`SpawnMode::PerSection`] (a `thread::scope` per update window — the
+//!   PR 1 engine) against [`SpawnMode::Persistent`] (one condvar wake per
+//!   window). Per-section spawning pays `workers` thread creations every
+//!   `trunc` tokens, so the pool's win grows as the window shrinks.
 //!
 //! The validation span is shrunk so the measurement is dominated by the
 //! parallel training region, not the serial evaluator. Results are bitwise
-//! identical across worker counts (see rust/tests/executor_determinism.rs),
-//! so every row trains the same model — only wall-clock changes.
+//! identical across worker counts, spawn modes and prefetch settings (see
+//! rust/tests/executor_determinism.rs), so every row trains the same model —
+//! only wall-clock changes.
 //!
-//! Run: `cargo bench --bench lane_throughput [-- --k 128 --steps 20]`
+//! `--json PATH` additionally writes the machine-readable rows (the CI
+//! `bench-smoke` job uploads them as `BENCH_lane_throughput.json`).
+//!
+//! Run: `cargo bench --bench lane_throughput [-- --k 128 --steps 20 --json out.json]`
 
+use snap_rtrl::benchutil::{flag_str, flag_usize, write_bench_json, JsonObj};
 use snap_rtrl::cells::Arch;
 use snap_rtrl::data::Corpus;
 use snap_rtrl::grad::Method;
-use snap_rtrl::train::{train_charlm, TrainConfig};
+use snap_rtrl::train::{train_charlm, SpawnMode, TrainConfig};
 use std::time::Instant;
 
-fn flag(args: &[String], name: &str) -> Option<usize> {
-    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).and_then(|v| v.parse().ok())
+fn cfg_for(k: usize, steps: usize, batch: usize, workers: usize) -> TrainConfig {
+    TrainConfig {
+        arch: Arch::Gru,
+        k,
+        density: 1.0,
+        method: Method::Snap(1),
+        lr: 3e-3,
+        batch,
+        seq_len: 128,
+        truncation: 0,
+        steps,
+        seed: 7,
+        readout_hidden: 128,
+        embed_dim: 32,
+        log_every: steps, // eval only at step 0 and the last step
+        eval_span: 64,    // keep the serial evaluator negligible
+        workers,
+        ..Default::default()
+    }
+}
+
+fn run(corpus: &Corpus, cfg: &TrainConfig) -> (f64, f64) {
+    let t0 = Instant::now();
+    let res = train_charlm(cfg, corpus);
+    let wall = t0.elapsed().as_secs_f64();
+    (res.tokens_seen as f64 / wall, wall)
 }
 
 fn main() {
     let args: Vec<String> = std::env::args().collect();
-    let k = flag(&args, "--k").unwrap_or(128);
-    let steps = flag(&args, "--steps").unwrap_or(16);
+    let k = flag_usize(&args, "--k").unwrap_or(128);
+    let steps = flag_usize(&args, "--steps").unwrap_or(16);
+    let json_path = flag_str(&args, "--json");
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut rows: Vec<JsonObj> = Vec::new();
 
-    println!("# lane_throughput — char-LM GRU-{k} snap-1, {steps} sequences of 128, {cores} cores\n");
+    println!(
+        "# lane_throughput — char-LM GRU-{k} snap-1, {steps} sequences of 128, {cores} cores\n"
+    );
+
+    // ---- Sweep 1: batch × workers (full unroll, persistent pool) ----
     println!(
         "{:<8} {:>8} {:>14} {:>12} {:>10}",
         "batch", "workers", "tokens/s", "wall (s)", "speedup"
     );
-
     let corpus = Corpus::synthetic(200_000, 1234);
     for batch in [1usize, 4, 8, 16] {
         let mut base_tps = f64::NAN;
@@ -41,28 +84,8 @@ fn main() {
             if workers > cores && workers != 1 {
                 continue; // oversubscription tells us nothing on this host
             }
-            let cfg = TrainConfig {
-                arch: Arch::Gru,
-                k,
-                density: 1.0,
-                method: Method::Snap(1),
-                lr: 3e-3,
-                batch,
-                seq_len: 128,
-                truncation: 0,
-                steps,
-                seed: 7,
-                readout_hidden: 128,
-                embed_dim: 32,
-                log_every: steps, // eval only at step 0 and the last step
-                eval_span: 64,    // keep the serial evaluator negligible
-                workers,
-                ..Default::default()
-            };
-            let t0 = Instant::now();
-            let res = train_charlm(&cfg, &corpus);
-            let wall = t0.elapsed().as_secs_f64();
-            let tps = res.tokens_seen as f64 / wall;
+            let cfg = cfg_for(k, steps, batch, workers);
+            let (tps, wall) = run(&corpus, &cfg);
             if workers == 1 {
                 base_tps = tps;
             }
@@ -70,7 +93,66 @@ fn main() {
                 "{batch:<8} {workers:>8} {tps:>14.0} {wall:>12.3} {:>9.2}x",
                 tps / base_tps
             );
+            rows.push(
+                JsonObj::new()
+                    .str("sweep", "batch")
+                    .str("mode", "persistent")
+                    .int("batch", batch as u64)
+                    .int("workers", workers as u64)
+                    .int("trunc", 0)
+                    .num("tokens_per_sec", tps)
+                    .num("wall_s", wall)
+                    .num("speedup_vs_workers1", tps / base_tps),
+            );
         }
         println!();
+    }
+
+    // ---- Sweep 2: small truncation windows, pool vs per-section spawn ----
+    // Many tiny parallel sections per sequence: the regime where per-section
+    // thread spawning dominates and the persistent pool shows its win.
+    let sw_workers = 4usize.min(cores).max(2);
+    let sw_batch = 8usize;
+    println!(
+        "small-window sweep — batch {sw_batch}, workers {sw_workers}, spawn-per-section vs pool"
+    );
+    println!(
+        "{:<8} {:>16} {:>16} {:>12}",
+        "trunc", "spawn tok/s", "pool tok/s", "pool gain"
+    );
+    for trunc in [1usize, 4, 16] {
+        let mut cfg = cfg_for(k, steps, sw_batch, sw_workers);
+        cfg.truncation = trunc;
+        cfg.spawn = SpawnMode::PerSection;
+        let (spawn_tps, spawn_wall) = run(&corpus, &cfg);
+        cfg.spawn = SpawnMode::Persistent;
+        let (pool_tps, pool_wall) = run(&corpus, &cfg);
+        let gain = pool_tps / spawn_tps;
+        println!("{trunc:<8} {spawn_tps:>16.0} {pool_tps:>16.0} {gain:>11.2}x");
+        for (mode, tps, wall) in
+            [("per-section", spawn_tps, spawn_wall), ("persistent", pool_tps, pool_wall)]
+        {
+            rows.push(
+                JsonObj::new()
+                    .str("sweep", "small-window")
+                    .str("mode", mode)
+                    .int("batch", sw_batch as u64)
+                    .int("workers", sw_workers as u64)
+                    .int("trunc", trunc as u64)
+                    .num("tokens_per_sec", tps)
+                    .num("wall_s", wall)
+                    .num("pool_gain", gain),
+            );
+        }
+    }
+
+    if let Some(path) = json_path {
+        let meta = JsonObj::new()
+            .int("k", k as u64)
+            .int("steps", steps as u64)
+            .int("cores", cores as u64)
+            .int("seq_len", 128);
+        write_bench_json(path, "lane_throughput", &meta, &rows).expect("writing bench json");
+        println!("\nwrote {path}");
     }
 }

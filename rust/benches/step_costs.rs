@@ -4,7 +4,7 @@
 //!
 //! Run: `cargo bench --bench step_costs [-- --k 128]`
 
-use snap_rtrl::benchutil::{bench, report};
+use snap_rtrl::benchutil::{bench, flag_usize, report};
 use snap_rtrl::cells::Arch;
 use snap_rtrl::grad::Method;
 use snap_rtrl::tensor::rng::Pcg32;
@@ -12,9 +12,9 @@ use std::time::Duration;
 
 fn main() {
     let args: Vec<String> = std::env::args().collect();
-    let k: usize = flag(&args, "--k").unwrap_or(64);
+    let k: usize = flag_usize(&args, "--k").unwrap_or(64);
     let input = 32usize;
-    let budget = Duration::from_millis(flag(&args, "--ms").unwrap_or(300) as u64);
+    let budget = Duration::from_millis(flag_usize(&args, "--ms").unwrap_or(300) as u64);
 
     println!("# step_costs — per-step tracking cost (k={k}, input={input})\n");
     for arch in [Arch::Vanilla, Arch::Gru, Arch::Lstm] {
@@ -64,6 +64,3 @@ fn main() {
     }
 }
 
-fn flag(args: &[String], name: &str) -> Option<usize> {
-    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).and_then(|v| v.parse().ok())
-}

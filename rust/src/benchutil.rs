@@ -79,6 +79,91 @@ pub fn report(name: &str, t: &Timing, extra: &str) {
     );
 }
 
+// ---------------------------------------------------------------------------
+// argv helpers for the plain-`fn main` bench binaries (`-- --k 64 --json p`).
+// ---------------------------------------------------------------------------
+
+/// Parse `--name <value>` from a bench's argv.
+pub fn flag_usize(args: &[String], name: &str) -> Option<usize> {
+    flag_str(args, name).and_then(|v| v.parse().ok())
+}
+
+/// Raw `--name <value>` lookup from a bench's argv.
+pub fn flag_str<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).map(|s| s.as_str())
+}
+
+// ---------------------------------------------------------------------------
+// Machine-readable bench artifacts (no serde offline): the CI `bench-smoke`
+// job writes one JSON file per bench (BENCH_*.json) and uploads it, so the
+// perf trajectory is tracked per PR.
+// ---------------------------------------------------------------------------
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// One flat JSON object, built field by field. Non-finite numbers render as
+/// `null` (JSON has no NaN/inf).
+#[derive(Clone, Debug, Default)]
+pub struct JsonObj {
+    fields: Vec<String>,
+}
+
+impl JsonObj {
+    pub fn new() -> Self {
+        JsonObj::default()
+    }
+
+    pub fn str(mut self, key: &str, v: &str) -> Self {
+        self.fields.push(format!("\"{}\":\"{}\"", json_escape(key), json_escape(v)));
+        self
+    }
+
+    pub fn int(mut self, key: &str, v: u64) -> Self {
+        self.fields.push(format!("\"{}\":{v}", json_escape(key)));
+        self
+    }
+
+    pub fn num(mut self, key: &str, v: f64) -> Self {
+        let rendered = if v.is_finite() { format!("{v}") } else { "null".to_string() };
+        self.fields.push(format!("\"{}\":{rendered}", json_escape(key)));
+        self
+    }
+
+    pub fn render(&self) -> String {
+        format!("{{{}}}", self.fields.join(","))
+    }
+}
+
+/// Write `{"bench":<name>,"meta":<meta>,"rows":[...]}` to `path`.
+pub fn write_bench_json(
+    path: &str,
+    bench: &str,
+    meta: &JsonObj,
+    rows: &[JsonObj],
+) -> std::io::Result<()> {
+    let rows_rendered: Vec<String> = rows.iter().map(|r| r.render()).collect();
+    let doc = format!(
+        "{{\"bench\":\"{}\",\"meta\":{},\"rows\":[{}]}}\n",
+        json_escape(bench),
+        meta.render(),
+        rows_rendered.join(",")
+    );
+    std::fs::write(path, doc)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -102,5 +187,34 @@ mod tests {
         assert!(fmt_dur(Duration::from_nanos(500)).ends_with("ns"));
         assert!(fmt_dur(Duration::from_micros(50)).ends_with("µs"));
         assert!(fmt_dur(Duration::from_millis(5)).ends_with("ms"));
+    }
+
+    #[test]
+    fn json_obj_renders_flat_objects() {
+        let o = JsonObj::new()
+            .str("mode", "pool \"fast\"")
+            .int("workers", 4)
+            .num("tps", 1234.5)
+            .num("speedup", f64::NAN);
+        assert_eq!(
+            o.render(),
+            "{\"mode\":\"pool \\\"fast\\\"\",\"workers\":4,\"tps\":1234.5,\"speedup\":null}"
+        );
+    }
+
+    #[test]
+    fn write_bench_json_roundtrip_shape() {
+        let dir = std::env::temp_dir().join("snap_rtrl_benchutil_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("out.json");
+        let path = path.to_str().unwrap();
+        let meta = JsonObj::new().int("k", 8);
+        let rows = vec![JsonObj::new().int("w", 1), JsonObj::new().int("w", 2)];
+        write_bench_json(path, "demo", &meta, &rows).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        assert_eq!(
+            text,
+            "{\"bench\":\"demo\",\"meta\":{\"k\":8},\"rows\":[{\"w\":1},{\"w\":2}]}\n"
+        );
     }
 }

@@ -110,8 +110,13 @@ impl Gru {
     /// Pre-activation coefficients (cz, cr, ca) per unit — shared by
     /// `dynamics` and `immediate`.
     fn coefs(&self, cache: &Cache) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
-        let (z, r, a, m, hp) =
-            (&cache.bufs[C_Z], &cache.bufs[C_R], &cache.bufs[C_A], &cache.bufs[C_M], &cache.bufs[C_HPREV]);
+        let (z, r, a, m, hp) = (
+            &cache.bufs[C_Z],
+            &cache.bufs[C_R],
+            &cache.bufs[C_A],
+            &cache.bufs[C_M],
+            &cache.bufs[C_HPREV],
+        );
         let mut cz = vec![0.0f32; self.k];
         let mut cr = vec![0.0f32; self.k];
         let mut ca = vec![0.0f32; self.k];
@@ -173,7 +178,14 @@ impl Cell for Gru {
         Cache::with_slots(&[self.k, self.input, self.k, self.k, self.k, self.k, self.k])
     }
 
-    fn forward(&self, theta: &[f32], s_prev: &[f32], x: &[f32], cache: &mut Cache, s_next: &mut [f32]) {
+    fn forward(
+        &self,
+        theta: &[f32],
+        s_prev: &[f32],
+        x: &[f32],
+        cache: &mut Cache,
+        s_next: &mut [f32],
+    ) {
         let k = self.k;
         let b = |g: usize| &theta[self.bias_offset + g * k..self.bias_offset + (g + 1) * k];
 

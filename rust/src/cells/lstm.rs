@@ -186,7 +186,14 @@ impl Cell for Lstm {
         Cache::with_slots(&[k, k, self.input, k, k, k, k, k])
     }
 
-    fn forward(&self, theta: &[f32], s_prev: &[f32], x: &[f32], cache: &mut Cache, s_next: &mut [f32]) {
+    fn forward(
+        &self,
+        theta: &[f32],
+        s_prev: &[f32],
+        x: &[f32],
+        cache: &mut Cache,
+        s_next: &mut [f32],
+    ) {
         let k = self.k;
         let (h_prev, c_prev) = s_prev.split_at(k);
         let b = |g: usize| &theta[self.bias_offset + g * k..self.bias_offset + (g + 1) * k];

@@ -203,7 +203,14 @@ pub trait Cell: Send + Sync {
 
     /// `s_next = f_θ(s_prev, x)`, filling `cache` with everything the
     /// Jacobians need. `s_prev`/`s_next` have `state_size()` entries.
-    fn forward(&self, theta: &[f32], s_prev: &[f32], x: &[f32], cache: &mut Cache, s_next: &mut [f32]);
+    fn forward(
+        &self,
+        theta: &[f32],
+        s_prev: &[f32],
+        x: &[f32],
+        cache: &mut Cache,
+        s_next: &mut [f32],
+    );
 
     /// Dense dynamics Jacobian `D_t` (state × state) at the cached point.
     fn dynamics(&self, theta: &[f32], cache: &Cache, d: &mut Matrix);

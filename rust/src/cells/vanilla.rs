@@ -97,7 +97,14 @@ impl Cell for Vanilla {
         Cache::with_slots(&[self.k, self.input, self.k])
     }
 
-    fn forward(&self, theta: &[f32], s_prev: &[f32], x: &[f32], cache: &mut Cache, s_next: &mut [f32]) {
+    fn forward(
+        &self,
+        theta: &[f32],
+        s_prev: &[f32],
+        x: &[f32],
+        cache: &mut Cache,
+        s_next: &mut [f32],
+    ) {
         debug_assert_eq!(s_prev.len(), self.k);
         debug_assert_eq!(x.len(), self.input);
         let mut pre = theta[self.bias_offset..self.bias_offset + self.k].to_vec();

@@ -96,7 +96,13 @@ pub fn run_table4(cfg: &Table4Config) -> (Vec<InfluenceStats>, InfluenceDump) {
         readout.apply_delta(&delta);
 
         if cfg.checkpoints.contains(&step) {
-            let j = exact_influence_after_sequence(cell.as_ref(), &theta, &embed, cfg.target_len, &mut rng);
+            let j = exact_influence_after_sequence(
+                cell.as_ref(),
+                &theta,
+                &embed,
+                cfg.target_len,
+                &mut rng,
+            );
             let s = measure(step, &j, &snap1, &snap2);
             stats.push(s);
             if step == max_step {

@@ -73,7 +73,9 @@ impl Args {
     /// Comma-separated list flag.
     pub fn list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
         match self.get(key) {
-            Some(v) => v.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect(),
+            Some(v) => {
+                v.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect()
+            }
             None => default.iter().map(|s| s.to_string()).collect(),
         }
     }
@@ -94,12 +96,20 @@ Experiment commands (one per paper table/figure):
   fig5     Copy-task curriculum curves               [--arch --sparsity --methods --tokens --seeds]
 
 Training commands:
-  train    Char-LM single run    [--method --arch --k --sparsity --steps --lr --trunc --batch --corpus --workers]
-  copy     Copy-task single run  [--method --arch --k --sparsity --steps --lr --trunc --batch --workers]
+  train    Char-LM single run    [--method --arch --k --sparsity --steps --lr --trunc --batch
+                                  --corpus --workers --prefetch]
+  copy     Copy-task single run  [--method --arch --k --sparsity --steps --lr --trunc --batch
+                                  --workers --prefetch]
 
---workers N steps the minibatch lanes on N threads (0 = all cores; default 1).
-Char-LM and full-unroll Copy results are bitwise identical for any N; Copy
-with --trunc > 0 and N > 1 switches to the batched-online update schedule.
+Throughput knobs (training results are bitwise identical for any setting):
+  --workers N     step the minibatch lanes on N threads from a persistent
+                  worker pool (0 = all cores; default 1). The one exception:
+                  Copy with --trunc > 0 and N > 1 switches to the batched-
+                  online update schedule (a different training regime).
+  --prefetch B    async double-buffered data feeding (default true): a
+                  prefetch thread materialises the next minibatch's crops /
+                  Copy sequences while the workers compute the current one.
+                  --prefetch false generates inline at each step boundary.
 
 Runtime commands:
   aot-demo Run the AOT-compiled GRU/SnAp-1 step from the PJRT runtime

@@ -9,7 +9,9 @@ use crate::coordinator::report::{f2, f3, floats_h, mult, pct, write_csv, Table};
 use crate::data::Corpus;
 use crate::grad::Method;
 use crate::sparse::pattern::{snap_pattern, Pattern};
-use crate::train::{table1_memory, table1_time, train_charlm, train_copy, CostInputs, TrainConfig, TrainResult};
+use crate::train::{
+    table1_memory, table1_time, train_charlm, train_copy, CostInputs, TrainConfig, TrainResult,
+};
 use crate::tensor::rng::Pcg32;
 
 // ---------------------------------------------------------------------------
@@ -25,7 +27,9 @@ pub fn run_table1(args: &Args) {
     let input = args.usize_or("input-dim", 64);
     let p = crate::train::flops::dense_params(arch, k, input);
 
-    println!("# Table 1 — costs of gradient methods (k={k}, T={t}, p={p}, sparsity={sparsity})\n");
+    println!(
+        "# Table 1 — costs of gradient methods (k={k}, T={t}, p={p}, sparsity={sparsity})\n"
+    );
     println!("Asymptotic entries evaluate the paper's formulas; measured columns come");
     println!("from the instrumented algorithms on a {} cell at the same shape.\n", arch.name());
 
@@ -39,7 +43,13 @@ pub fn run_table1(args: &Args) {
         (Method::Snap(2), d),
     ];
 
-    let mut tbl = Table::new(&["method", "memory (asymptotic)", "time/step (asymptotic)", "measured mem (floats)", "measured flops/step"]);
+    let mut tbl = Table::new(&[
+        "method",
+        "memory (asymptotic)",
+        "time/step (asymptotic)",
+        "measured mem (floats)",
+        "measured flops/step",
+    ]);
     let mut csv_rows = Vec::new();
 
     for (m, dd) in methods {
@@ -62,10 +72,20 @@ pub fn run_table1(args: &Args) {
             floats_h(meas_mem as f64),
             floats_h(meas_flops),
         ]);
-        csv_rows.push(vec![label, format!("{mem}"), format!("{time}"), format!("{meas_mem}"), format!("{meas_flops}")]);
+        csv_rows.push(vec![
+            label,
+            format!("{mem}"),
+            format!("{time}"),
+            format!("{meas_mem}"),
+            format!("{meas_flops}"),
+        ]);
     }
     tbl.print();
-    let p = write_csv("table1.csv", &["method", "mem_asym", "time_asym", "mem_meas", "flops_meas"], &csv_rows);
+    let p = write_csv(
+        "table1.csv",
+        &["method", "mem_asym", "time_asym", "mem_meas", "flops_meas"],
+        &csv_rows,
+    );
     println!("\nwrote {}", p.display());
 }
 
@@ -133,7 +153,10 @@ fn fig3_side(
         methods.insert(2, Method::Snap(2));
     }
 
-    println!("# Figure 3 ({label}) — GRU-{k} char-LM, methods: {:?}", methods.iter().map(|m| m.name()).collect::<Vec<_>>());
+    println!(
+        "# Figure 3 ({label}) — GRU-{k} char-LM, methods: {:?}",
+        methods.iter().map(|m| m.name()).collect::<Vec<_>>()
+    );
 
     let results: Vec<(Method, TrainResult)> = parallel_map(&methods, |&m| {
         let cfg = TrainConfig {
@@ -170,7 +193,11 @@ fn fig3_side(
         }
     }
     tbl.print();
-    let p = write_csv(&format!("fig3_{label}.csv"), &["method", "step", "train_bpc", "valid_bpc"], &csv);
+    let p = write_csv(
+        &format!("fig3_{label}.csv"),
+        &["method", "step", "train_bpc", "valid_bpc"],
+        &csv,
+    );
     println!("wrote {}\n", p.display());
 }
 
@@ -200,29 +227,30 @@ pub fn run_table2(args: &Args) {
     println!("# Table 2 / Figure 4 — BPC vs sparsity at constant parameter count");
     println!("(base k={base_k}, pruning to target via Zhu-Gupta every --prune-every steps)\n");
 
-    let results: Vec<((usize, f64, String), TrainResult)> = parallel_map(&rows, |&(mult_i, sparsity, tag)| {
-        let k = if tag == "dense2.5x" { base_k * 5 / 2 } else { base_k * mult_i };
-        let cfg = TrainConfig {
-            arch: Arch::Gru,
-            k,
-            density: 1.0, // pruning runs start dense and prune progressively
-            method: Method::Bptt,
-            lr,
-            batch: 1,
-            seq_len: 64,
-            truncation: 0,
-            steps,
-            seed,
-            readout_hidden: 128,
-            embed_dim: 32,
-            log_every: (steps / 10).max(1),
-            prune_to: if sparsity > 0.0 { Some(sparsity) } else { None },
-            prune_every: args.u64_or("prune-every", 20),
-            prune_end_step: (steps as u64) * 7 / 10,
-            ..Default::default()
-        };
-        ((mult_i, sparsity, tag.to_string()), train_charlm(&cfg, &corpus))
-    });
+    let results: Vec<((usize, f64, String), TrainResult)> =
+        parallel_map(&rows, |&(mult_i, sparsity, tag)| {
+            let k = if tag == "dense2.5x" { base_k * 5 / 2 } else { base_k * mult_i };
+            let cfg = TrainConfig {
+                arch: Arch::Gru,
+                k,
+                density: 1.0, // pruning runs start dense and prune progressively
+                method: Method::Bptt,
+                lr,
+                batch: 1,
+                seq_len: 64,
+                truncation: 0,
+                steps,
+                seed,
+                readout_hidden: 128,
+                embed_dim: 32,
+                log_every: (steps / 10).max(1),
+                prune_to: if sparsity > 0.0 { Some(sparsity) } else { None },
+                prune_every: args.u64_or("prune-every", 20),
+                prune_end_step: (steps as u64) * 7 / 10,
+                ..Default::default()
+            };
+            ((mult_i, sparsity, tag.to_string()), train_charlm(&cfg, &corpus))
+        });
 
     let mut tbl = Table::new(&["units", "bpc", "θ sparsity", "|θ| (×base)"]);
     let mut csv = Vec::new();
@@ -235,8 +263,18 @@ pub fn run_table2(args: &Args) {
             format!("{mult_i}x")
         };
         let rel_params = if tag == "dense2.5x" { 6.25 } else { 1.0 };
-        tbl.row(&[units.clone(), f2(res.final_valid_bpc), pct(*sparsity), format!("{rel_params}x")]);
-        csv.push(vec![units, format!("{:.5}", res.final_valid_bpc), format!("{sparsity}"), format!("{rel_params}")]);
+        tbl.row(&[
+            units.clone(),
+            f2(res.final_valid_bpc),
+            pct(*sparsity),
+            format!("{rel_params}x"),
+        ]);
+        csv.push(vec![
+            units,
+            format!("{:.5}", res.final_valid_bpc),
+            format!("{sparsity}"),
+            format!("{rel_params}"),
+        ]);
     }
     tbl.print();
     let p = write_csv("table2_fig4.csv", &["units", "bpc", "sparsity", "rel_params"], &csv);
@@ -286,7 +324,17 @@ pub fn run_table3(args: &Args) {
     tbl.print();
     let p = write_csv(
         "table3.csv",
-        &["arch", "units", "sparsity", "j2_sparsity", "j3_sparsity", "snap1_vs_bptt", "snap2_vs_bptt", "snap3_vs_bptt", "snap2_vs_rtrl"],
+        &[
+            "arch",
+            "units",
+            "sparsity",
+            "j2_sparsity",
+            "j3_sparsity",
+            "snap1_vs_bptt",
+            "snap2_vs_bptt",
+            "snap3_vs_bptt",
+            "snap2_vs_rtrl",
+        ],
         &csv,
     );
     println!("\nwrote {}", p.display());
@@ -398,7 +446,12 @@ pub fn run_table4(args: &Args) {
         cfg.target_len
     );
     let (stats, dump) = analysis_table4(&cfg);
-    let mut tbl = Table::new(&["training step", "SnAp-1 mean|J| (mass%)", "SnAp-2 mean|J| (mass%)", "ignored mean|J|"]);
+    let mut tbl = Table::new(&[
+        "training step",
+        "SnAp-1 mean|J| (mass%)",
+        "SnAp-2 mean|J| (mass%)",
+        "ignored mean|J|",
+    ]);
     let mut csv = Vec::new();
     for s in &stats {
         tbl.row(&[
@@ -417,7 +470,11 @@ pub fn run_table4(args: &Args) {
         ]);
     }
     tbl.print();
-    let p = write_csv("table4.csv", &["step", "snap1_mean", "snap1_mass", "snap2_mean", "snap2_mass", "ignored_mean"], &csv);
+    let p = write_csv(
+        "table4.csv",
+        &["step", "snap1_mean", "snap1_mass", "snap2_mean", "snap2_mass", "ignored_mean"],
+        &csv,
+    );
     let fig6: Vec<Vec<String>> = dump
         .iter()
         .map(|(i, j, v, cat)| vec![i.to_string(), j.to_string(), format!("{v}"), cat.to_string()])
@@ -446,7 +503,10 @@ pub fn run_fig5(args: &Args) {
         .iter()
         .map(|s| s.parse().expect("bad lr"))
         .collect();
-    let method_names = args.list_or("methods", &["bptt-online", "bptt-full", "snap-1", "snap-2", "snap-3", "rflo"]);
+    let method_names = args.list_or(
+        "methods",
+        &["bptt-online", "bptt-full", "snap-1", "snap-2", "snap-3", "rflo"],
+    );
     let workers = args.usize_or("workers", 1);
     if workers != 1 {
         println!(
@@ -456,7 +516,9 @@ per-token updates (see train::looper docs). Use --workers 1 for paper-faithful c
         );
     }
 
-    println!("# Figure 5 — Copy task (k={k}, sparsity={sparsity}, {steps} minibatches of {batch})\n");
+    println!(
+        "# Figure 5 — Copy task (k={k}, sparsity={sparsity}, {steps} minibatches of {batch})\n"
+    );
 
     // (arch, method-name, online?) arms
     let mut arms: Vec<(Arch, String, Method, usize)> = Vec::new();
@@ -474,40 +536,41 @@ per-token updates (see train::looper docs). Use --workers 1 for paper-faithful c
         }
     }
 
-    let results: Vec<((Arch, String), Vec<(u64, f64)>, usize)> = parallel_map(&arms, |(arch, name, m, trunc)| {
-        // lr sweep × seeds; keep the best lr by final level, average seeds.
-        let mut best: Option<(usize, Vec<(u64, f64)>)> = None;
-        for &lr in &lrs {
-            let mut curves: Vec<Vec<(u64, f64)>> = Vec::new();
-            let mut final_levels = 0usize;
-            for &seed in &seeds {
-                let cfg = TrainConfig {
-                    arch: *arch,
-                    k,
-                    density: 1.0 - sparsity,
-                    method: *m,
-                    lr,
-                    batch,
-                    truncation: *trunc,
-                    steps,
-                    seed: seed + 100,
-                    readout_hidden: 64,
-                    log_every: 1,
-                    workers,
-                    ..Default::default()
-                };
-                let res = train_copy(&cfg);
-                final_levels += res.final_level;
-                curves.push(res.curve.iter().map(|p| (p.x, p.aux)).collect());
+    let results: Vec<((Arch, String), Vec<(u64, f64)>, usize)> =
+        parallel_map(&arms, |(arch, name, m, trunc)| {
+            // lr sweep × seeds; keep the best lr by final level, average seeds.
+            let mut best: Option<(usize, Vec<(u64, f64)>)> = None;
+            for &lr in &lrs {
+                let mut curves: Vec<Vec<(u64, f64)>> = Vec::new();
+                let mut final_levels = 0usize;
+                for &seed in &seeds {
+                    let cfg = TrainConfig {
+                        arch: *arch,
+                        k,
+                        density: 1.0 - sparsity,
+                        method: *m,
+                        lr,
+                        batch,
+                        truncation: *trunc,
+                        steps,
+                        seed: seed + 100,
+                        readout_hidden: 64,
+                        log_every: 1,
+                        workers,
+                        ..Default::default()
+                    };
+                    let res = train_copy(&cfg);
+                    final_levels += res.final_level;
+                    curves.push(res.curve.iter().map(|p| (p.x, p.aux)).collect());
+                }
+                let avg = average_curves(&curves);
+                if best.as_ref().map(|(l, _)| final_levels > *l).unwrap_or(true) {
+                    best = Some((final_levels, avg));
+                }
             }
-            let avg = average_curves(&curves);
-            if best.as_ref().map(|(l, _)| final_levels > *l).unwrap_or(true) {
-                best = Some((final_levels, avg));
-            }
-        }
-        let (levels, curve) = best.unwrap();
-        ((*arch, name.clone()), curve, levels / seeds.len().max(1))
-    });
+            let (levels, curve) = best.unwrap();
+            ((*arch, name.clone()), curve, levels / seeds.len().max(1))
+        });
 
     let mut tbl = Table::new(&["arch", "method", "final curriculum level (avg)"]);
     let mut csv = Vec::new();
@@ -584,6 +647,7 @@ fn config_from_args(args: &Args) -> TrainConfig {
         prune_every: args.u64_or("prune-every", 1000),
         prune_end_step: args.u64_or("prune-end", u64::MAX),
         workers: args.usize_or("workers", 1),
+        prefetch: args.bool_or("prefetch", true),
         ..Default::default()
     }
 }

@@ -91,9 +91,7 @@ impl Curriculum {
 
     /// Sample the next sequence length: uniform in `[max(L-5,1), L]`.
     pub fn sample_len(&self, rng: &mut Pcg32) -> usize {
-        let lo = self.level.saturating_sub(5).max(1);
-        let hi = self.level;
-        lo + rng.below_usize(hi - lo + 1)
+        sample_len_at(self.level, rng)
     }
 
     /// Report the average bpc of a finished minibatch; advances the level
@@ -112,6 +110,16 @@ impl Default for Curriculum {
     fn default() -> Self {
         Self::new()
     }
+}
+
+/// Sample a sequence length for curriculum level `level`: uniform in
+/// `[max(level-5,1), level]`. Free-standing so the async data feeder can
+/// draw from a level snapshot with exactly the same RNG stream consumption
+/// as [`Curriculum::sample_len`].
+pub fn sample_len_at(level: usize, rng: &mut Pcg32) -> usize {
+    let level = level.max(1);
+    let lo = level.saturating_sub(5).max(1);
+    lo + rng.below_usize(level - lo + 1)
 }
 
 #[cfg(test)]

@@ -1,0 +1,241 @@
+//! Async double-buffered data feeding.
+//!
+//! The lane-parallel executor (`train::executor`) keeps every core busy
+//! *inside* a compute segment, but between segments the coordinating thread
+//! used to stop and materialise the next minibatch — crops copied out of the
+//! corpus, Copy sequences generated token by token — while all workers sat
+//! idle. The [`Feeder`] moves that materialisation onto a prefetch thread
+//! with two buffers in flight: while the workers compute on batch `t`, the
+//! prefetch thread fills the second buffer with batch `t+1`, and at the next
+//! segment boundary the driver swaps buffers instead of sampling.
+//!
+//! ## Handshake
+//!
+//! The protocol is a strict request/receive pair per batch:
+//!
+//! 1. [`request`](Feeder::request) hands the feeder a *spec* — everything
+//!    batch generation depends on (nothing for char-LM crops; the curriculum
+//!    level for the Copy task).
+//! 2. [`recv`](Feeder::recv) blocks until that batch is materialised (it
+//!    usually already is) and returns it.
+//!
+//! The driver requests batch `t+1` at the earliest point its spec is known:
+//! immediately after receiving batch `t` for char-LM (crops are independent
+//! of training state, so generation overlaps the whole step), and right
+//! after the curriculum update for the Copy task (lengths depend on the
+//! level, so only the logging tail overlaps — correctness over lookahead).
+//!
+//! ## Determinism
+//!
+//! Prefetching must not change training results, so the feeder owns the
+//! per-lane **data streams** (clones of the lane RNGs, advanced only by
+//! sampling) and draws from them in lane order inside the generator closure.
+//! Because [`Feeder::synchronous`] (prefetch off) runs the *same* closure on
+//! the *same* spec sequence — just inline at `recv` time instead of ahead on
+//! the thread — the two modes produce bit-identical batches, which is the
+//! regression guarantee extended in `rust/tests/executor_determinism.rs`.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::Scope;
+
+/// Depth of each channel: one batch ready + one request in flight is
+/// exactly double buffering — the driver never queues further ahead.
+const FEED_DEPTH: usize = 1;
+
+fn payload_msg(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// A double-buffered batch source: either a prefetch thread (async mode)
+/// or an inline generator (synchronous fallback, `--prefetch false`).
+/// `S` is the batch spec, `B` the materialised batch.
+pub enum Feeder<'scope, S: Send + 'scope, B: Send + 'scope> {
+    /// Generate inline at `recv`, preserving the async mode's exact spec
+    /// order (and therefore its RNG draw order).
+    Sync {
+        generate: Box<dyn FnMut(S) -> B + 'scope>,
+        pending: VecDeque<S>,
+    },
+    /// Prefetch thread connected through bounded channels. `panic_note`
+    /// carries the generator's panic message back to the driver: a bad
+    /// config (say, a crop longer than the corpus) must produce the same
+    /// diagnostic whether it panics inline or on the prefetch thread.
+    Async {
+        req_tx: mpsc::SyncSender<S>,
+        batch_rx: mpsc::Receiver<B>,
+        panic_note: Arc<Mutex<Option<String>>>,
+    },
+}
+
+impl<'scope, S: Send + 'scope, B: Send + 'scope> Feeder<'scope, S, B> {
+    /// Synchronous fallback: specs queue up and batches are generated
+    /// inline at [`recv`](Self::recv).
+    pub fn synchronous(generate: impl FnMut(S) -> B + 'scope) -> Self {
+        Feeder::Sync { generate: Box::new(generate), pending: VecDeque::new() }
+    }
+
+    /// Spawn the prefetch thread on `scope`. The thread exits when the
+    /// feeder is dropped (both channel endpoints close), so the scope's
+    /// implicit join never blocks on it. A panicking generator is caught,
+    /// its message stashed for the driver (surfaced at the paired `recv`),
+    /// and the thread exits cleanly.
+    pub fn spawn<'env>(
+        scope: &'scope Scope<'scope, 'env>,
+        mut generate: impl FnMut(S) -> B + Send + 'scope,
+    ) -> Self {
+        let (req_tx, req_rx) = mpsc::sync_channel::<S>(FEED_DEPTH);
+        let (batch_tx, batch_rx) = mpsc::sync_channel::<B>(FEED_DEPTH);
+        let panic_note = Arc::new(Mutex::new(None));
+        let note = Arc::clone(&panic_note);
+        scope.spawn(move || {
+            // The channel endpoints stay owned by this outer closure so a
+            // generator panic stores its note *before* they drop — the
+            // driver can only observe the disconnect after the note exists.
+            let outcome = catch_unwind(AssertUnwindSafe(|| {
+                while let Ok(spec) = req_rx.recv() {
+                    if batch_tx.send(generate(spec)).is_err() {
+                        break;
+                    }
+                }
+            }));
+            if let Err(payload) = outcome {
+                *note.lock().unwrap_or_else(|e| e.into_inner()) =
+                    Some(payload_msg(payload.as_ref()));
+            }
+            drop((req_rx, batch_tx));
+        });
+        Feeder::Async { req_tx, batch_rx, panic_note }
+    }
+
+    /// Ask for the next batch to be materialised from `spec`. Every request
+    /// must be matched by exactly one [`recv`](Self::recv); at most one
+    /// request may be outstanding beyond the batch currently held.
+    pub fn request(&mut self, spec: S) {
+        match self {
+            Feeder::Sync { pending, .. } => pending.push_back(spec),
+            Feeder::Async { req_tx, panic_note, .. } => {
+                if req_tx.send(spec).is_err() {
+                    dead_thread_panic(panic_note);
+                }
+            }
+        }
+    }
+
+    /// Block until the batch for the oldest outstanding request is ready.
+    ///
+    /// Panics if called without a prior [`request`](Self::request) — the
+    /// handshake is strictly paired.
+    pub fn recv(&mut self) -> B {
+        match self {
+            Feeder::Sync { generate, pending } => {
+                let spec = pending.pop_front().expect("recv without a pending request");
+                generate(spec)
+            }
+            Feeder::Async { batch_rx, panic_note, .. } => match batch_rx.recv() {
+                Ok(batch) => batch,
+                Err(_) => dead_thread_panic(panic_note),
+            },
+        }
+    }
+}
+
+/// The prefetch channel disconnected: forward the generator's own panic
+/// message when there is one, so async mode diagnoses a bad config exactly
+/// as loudly as the inline path would.
+fn dead_thread_panic(panic_note: &Arc<Mutex<Option<String>>>) -> ! {
+    let note = panic_note.lock().unwrap_or_else(|e| e.into_inner()).take();
+    match note {
+        Some(msg) => panic!("prefetch thread panicked: {msg}"),
+        None => panic!("prefetch thread disappeared"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::rng::Pcg32;
+
+    /// A deterministic "sampler": batch = next `spec` draws from the stream.
+    fn draws(rng: &mut Pcg32, n: usize) -> Vec<u32> {
+        (0..n).map(|_| rng.next_u32()).collect()
+    }
+
+    #[test]
+    fn sync_and_async_modes_produce_identical_batches() {
+        let specs = [3usize, 1, 4, 1, 5];
+        let mut sync_rng = Pcg32::seeded(11);
+        let mut feeder = Feeder::synchronous(move |n: usize| draws(&mut sync_rng, n));
+        let sync_out: Vec<Vec<u32>> = specs
+            .iter()
+            .map(|&n| {
+                feeder.request(n);
+                feeder.recv()
+            })
+            .collect();
+
+        let async_out = std::thread::scope(|scope| {
+            let mut async_rng = Pcg32::seeded(11);
+            let mut feeder = Feeder::spawn(scope, move |n: usize| draws(&mut async_rng, n));
+            // Pipelined: keep one request ahead, like the drivers do.
+            let mut out = Vec::new();
+            feeder.request(specs[0]);
+            for i in 0..specs.len() {
+                let batch = feeder.recv();
+                if i + 1 < specs.len() {
+                    feeder.request(specs[i + 1]);
+                }
+                out.push(batch);
+            }
+            out
+        });
+        assert_eq!(sync_out, async_out);
+    }
+
+    #[test]
+    fn async_feeder_shuts_down_with_an_unconsumed_batch_in_flight() {
+        // Dropping the feeder with a request outstanding must not deadlock
+        // the scope join.
+        std::thread::scope(|scope| {
+            let mut feeder = Feeder::spawn(scope, |n: usize| vec![0u8; n]);
+            feeder.request(16);
+            let _ = feeder.recv();
+            feeder.request(32); // never received
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "recv without a pending request")]
+    fn sync_recv_without_request_panics() {
+        let mut feeder: Feeder<'_, usize, usize> = Feeder::synchronous(|n| n);
+        let _ = feeder.recv();
+    }
+
+    #[test]
+    fn generator_panic_is_forwarded_with_its_message() {
+        // A bad config must diagnose as loudly in async mode as inline: the
+        // prefetch thread's panic message travels back to the driver's recv.
+        let result = std::panic::catch_unwind(|| {
+            std::thread::scope(|scope| {
+                let mut feeder: Feeder<'_, usize, usize> =
+                    Feeder::spawn(scope, |_n| panic!("corpus shorter than crop length"));
+                feeder.request(1);
+                let _ = feeder.recv();
+            });
+        });
+        let payload = result.expect_err("driver must panic");
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| "non-string payload".into());
+        assert!(msg.contains("prefetch thread panicked"), "{msg}");
+        assert!(msg.contains("corpus shorter than crop length"), "{msg}");
+    }
+}

@@ -1,8 +1,12 @@
-//! Data pipelines: byte corpora for char-LM (§5.1) and the Copy task with
-//! its curriculum controller (§5.2).
+//! Data pipelines: byte corpora for char-LM (§5.1), the Copy task with its
+//! curriculum controller (§5.2), and the async double-buffered feeder that
+//! materialises the next minibatch while the executor computes the current
+//! one.
 
 pub mod copy;
 pub mod corpus;
+pub mod feeder;
 
 pub use copy::{CopySeq, Curriculum, COPY_CLASSES, COPY_VOCAB};
 pub use corpus::Corpus;
+pub use feeder::Feeder;

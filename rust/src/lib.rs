@@ -13,9 +13,11 @@
 //! * [`grad`] — the six gradient algorithms of the paper: BPTT, full RTRL,
 //!   sparsity-optimized RTRL, SnAp-n, UORO, RFLO.
 //! * [`models`] — char-LM and Copy-task heads (readout MLP + softmax).
-//! * [`data`] — byte corpora and the Copy-task curriculum generator.
+//! * [`data`] — byte corpora, the Copy-task curriculum generator, and the
+//!   async double-buffered data feeder.
 //! * [`opt`] — SGD / Adam.
-//! * [`train`] — online & truncated training loops, pruning, FLOP accounting.
+//! * [`train`] — online & truncated training loops, the persistent worker
+//!   pool + lane-parallel executor, pruning, FLOP accounting.
 //! * [`coordinator`] — CLI, experiment registry (one entry per paper
 //!   table/figure), reporting.
 //! * [`runtime`] — XLA/PJRT facade for the AOT artifacts produced by
@@ -27,7 +29,9 @@
 //!   anyhow).
 //!
 //! The crate intentionally has **no external dependencies** so it builds
-//! without crates.io access; all parallelism uses `std::thread::scope`.
+//! without crates.io access; all parallelism is std — a persistent worker
+//! pool (`train::pool`) for the hot training sections, `std::thread::scope`
+//! for coarse experiment fan-out and the data-prefetch thread.
 
 pub mod benchutil;
 pub mod cells;

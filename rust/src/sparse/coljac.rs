@@ -365,7 +365,11 @@ fn update_runs(
             col_vals.iter_mut().for_each(|v| *v = 0.0);
             for (m_slot, &om) in old.iter().enumerate() {
                 if om != 0.0 {
-                    crate::tensor::ops::axpy_slice(col_vals, om, &dsub[m_slot * n..(m_slot + 1) * n]);
+                    crate::tensor::ops::axpy_slice(
+                        col_vals,
+                        om,
+                        &dsub[m_slot * n..(m_slot + 1) * n],
+                    );
                 }
             }
             // Immediate term (≤2 entries; rows of I ⊆ R_j, both sorted).

@@ -12,11 +12,12 @@
 //!   dedicated `Pcg32` stream split off the driver RNG at construction, and
 //!   loss/FLOP/token accounting.
 //! * **Parallel sections**: [`for_each_lane`](LaneExecutor::for_each_lane)
-//!   fans contiguous lane chunks out over `std::thread::scope` workers
-//!   (lockstep tasks such as char-LM crops);
+//!   fans contiguous lane chunks out over the workers (lockstep tasks such
+//!   as char-LM crops);
 //!   [`for_each_lane_stealing`](LaneExecutor::for_each_lane_stealing) hands
 //!   lanes out through an atomic counter so variable-length work items
-//!   (Copy-task sequences) balance across workers.
+//!   (Copy-task sequences) balance across workers. Both sections size
+//!   themselves to `min(workers, lanes)` — extra workers never spin.
 //! * **Ordered reduction** ([`reduce_and_update`](LaneExecutor::reduce_and_update)):
 //!   at every update boundary the per-lane gradients are folded into the
 //!   global buffers in **lane order** on the coordinating thread, then the
@@ -25,28 +26,63 @@
 //!   makes training results bitwise identical for any worker count. This is
 //!   the regression guarantee (`rust/tests/executor_determinism.rs`).
 //!
-//! Workers are spawned per parallel section. That keeps the engine free of
-//! long-lived shared mutable state (no channels, no pools, no unsafe) at the
-//! cost of one `thread::scope` per update window — negligible for the
-//! sequence-sized sections the drivers use, and `workers = 1` degrades to a
-//! plain inline loop with zero threading overhead.
+//! ## Pool lifecycle
+//!
+//! With [`SpawnMode::Persistent`] (the default) the executor owns a
+//! [`WorkerPool`] for its whole life: `min(workers, lanes)` threads are
+//! spawned once in [`with_mode`](LaneExecutor::with_mode), park on a condvar
+//! between sections, and are joined when the executor drops. Each parallel
+//! section is then one generation-stamped wake of the pool — a 16-token
+//! truncation window costs a condvar signal, not 16 thread spawns. A job
+//! that panics poisons the pool; the executor re-raises the pool's error as
+//! a panic on the coordinating thread, matching the old `thread::scope`
+//! behaviour. [`SpawnMode::PerSection`] keeps the legacy spawn-per-section
+//! engine alive as the benchmark baseline (`benches/lane_throughput.rs`
+//! measures the pool's win on small truncation windows against it).
+//!
+//! ## Feeder handshake
+//!
+//! Data never flows through the executor: the drivers (`train::looper`)
+//! pair it with a [`Feeder`](crate::data::feeder::Feeder) that materialises
+//! the *next* minibatch — char-LM crops or Copy sequences, drawn from
+//! per-lane data streams in lane order — while the pool computes the
+//! current one. The handshake is request → compute → recv: the driver
+//! requests batch `t+1` as soon as its sampling inputs are known (before
+//! the compute of batch `t` for char-LM; after the curriculum update for
+//! the Copy task), so the feeder fills its second buffer exactly while the
+//! workers are busy. Worker count, spawn mode and prefetching are all pure
+//! throughput knobs: none of them changes a single bit of the training
+//! results.
 
 use crate::cells::Cell;
-use crate::data::corpus::Corpus;
 use crate::grad::{GradAlgo, Method};
 use crate::models::{Readout, ReadoutCache, ReadoutGrad};
 use crate::opt::{step_as_delta, Optimizer};
 use crate::tensor::rng::Pcg32;
+use crate::train::pool::WorkerPool;
 use crate::train::prune::Pruner;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
+
+/// How parallel sections acquire their worker threads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpawnMode {
+    /// One long-lived [`WorkerPool`] across the executor's life; each
+    /// section is a condvar wake. The default.
+    Persistent,
+    /// Legacy engine: a fresh `std::thread::scope` per section. Kept as the
+    /// measurable baseline for the pool (see `benches/lane_throughput.rs`).
+    PerSection,
+}
 
 /// Everything one gradient lane owns. Workers get disjoint `&mut LaneSlot`s;
 /// all cross-lane aggregation happens on the coordinating thread.
 pub struct LaneSlot<'c> {
     /// The lane's gradient algorithm (tracking state + recurrent state).
     pub algo: Box<dyn GradAlgo + 'c>,
-    /// Dedicated deterministic RNG stream (data sampling for this lane).
+    /// Dedicated deterministic RNG stream, split off the driver RNG in lane
+    /// order. The drivers clone these into the data feeder at startup (the
+    /// feeder advances its clones by sampling; the slot's copy stays put).
     pub rng: Pcg32,
     /// Recurrent-parameter gradient accumulator (length `num_params`).
     pub g_rec: Vec<f32>,
@@ -70,19 +106,35 @@ pub struct LaneSlot<'c> {
 pub struct LaneExecutor<'c> {
     slots: Vec<LaneSlot<'c>>,
     workers: usize,
+    /// `Some` iff `SpawnMode::Persistent` and more than one worker is useful.
+    pool: Option<WorkerPool>,
 }
 
 impl<'c> LaneExecutor<'c> {
-    /// Build `lanes` lanes for `cell`. Each lane gets its own algorithm
-    /// instance and an independent RNG stream split off `rng` in lane order
-    /// (so the streams — and therefore training — do not depend on the
-    /// worker count). `workers == 0` means "use all available cores".
+    /// Build `lanes` lanes for `cell` with the default
+    /// [`SpawnMode::Persistent`]. Each lane gets its own algorithm instance
+    /// and an independent RNG stream split off `rng` in lane order (so the
+    /// streams — and therefore training — do not depend on the worker
+    /// count). `workers == 0` means "use all available cores".
     pub fn new(
         cell: &'c dyn Cell,
         method: Method,
         readout: &Readout,
         lanes: usize,
         workers: usize,
+        rng: &mut Pcg32,
+    ) -> Self {
+        Self::with_mode(cell, method, readout, lanes, workers, SpawnMode::Persistent, rng)
+    }
+
+    /// As [`new`](Self::new), selecting the section spawn mode explicitly.
+    pub fn with_mode(
+        cell: &'c dyn Cell,
+        method: Method,
+        readout: &Readout,
+        lanes: usize,
+        workers: usize,
+        mode: SpawnMode,
         rng: &mut Pcg32,
     ) -> Self {
         let p = cell.num_params();
@@ -110,7 +162,16 @@ impl<'c> LaneExecutor<'c> {
         } else {
             workers
         };
-        LaneExecutor { slots, workers }
+        // Sections never use more than min(workers, lanes) threads, so the
+        // pool is sized to exactly that — 16 configured workers on a single
+        // lane keep the engine on the zero-overhead inline path.
+        let useful = workers.min(slots.len());
+        let pool = if mode == SpawnMode::Persistent && useful > 1 {
+            Some(WorkerPool::new(useful))
+        } else {
+            None
+        };
+        LaneExecutor { slots, workers, pool }
     }
 
     #[inline]
@@ -122,6 +183,13 @@ impl<'c> LaneExecutor<'c> {
     #[inline]
     pub fn workers(&self) -> usize {
         self.workers
+    }
+
+    /// The persistent pool, when running in [`SpawnMode::Persistent`] with
+    /// more than one useful worker.
+    #[inline]
+    pub fn pool(&self) -> Option<&WorkerPool> {
+        self.pool.as_ref()
     }
 
     #[inline]
@@ -155,43 +223,61 @@ impl<'c> LaneExecutor<'c> {
         }
     }
 
-    /// One random crop per lane, drawn from each lane's own stream in lane
-    /// order — identical for any worker count.
-    pub fn sample_crops(&mut self, corpus: &Corpus, seq_len: usize) -> Vec<Vec<u8>> {
-        self.slots
-            .iter_mut()
-            .map(|slot| corpus.sample_crop(seq_len, &mut slot.rng).to_vec())
-            .collect()
-    }
-
     /// Run `f(lane_index, slot)` for every lane, fanning contiguous lane
-    /// chunks out over up to `workers` scoped threads. With one worker (or
-    /// one lane) this is an inline loop.
+    /// chunks out over up to `min(workers, lanes)` pool workers (or scoped
+    /// threads in [`SpawnMode::PerSection`]). With one worker or one lane
+    /// this is an inline loop.
     pub fn for_each_lane<F>(&mut self, f: F)
     where
         F: Fn(usize, &mut LaneSlot<'c>) + Sync,
     {
-        let w = self.workers.min(self.slots.len());
+        let LaneExecutor { slots, workers, pool } = self;
+        let w = (*workers).min(slots.len());
         if w <= 1 {
-            for (i, slot) in self.slots.iter_mut().enumerate() {
+            for (i, slot) in slots.iter_mut().enumerate() {
                 f(i, slot);
             }
             return;
         }
-        let chunk = self.slots.len().div_ceil(w);
-        std::thread::scope(|s| {
-            for (ci, chunk_slots) in self.slots.chunks_mut(chunk).enumerate() {
+        let chunk = slots.len().div_ceil(w);
+        match pool {
+            Some(pool) => {
+                // One chunk per worker index; `chunks.len() <= w <= pool
+                // size` by construction, so every chunk gets a worker.
+                let chunks: Vec<Mutex<(usize, &mut [LaneSlot<'c>])>> = slots
+                    .chunks_mut(chunk)
+                    .enumerate()
+                    .map(|(ci, c)| Mutex::new((ci * chunk, c)))
+                    .collect();
                 let f = &f;
-                s.spawn(move || {
-                    // Lanes already saturate the cores; keep the per-lane
-                    // SnAp update from spawning a second layer of threads.
-                    crate::sparse::coljac::set_thread_intra_op_parallelism(false);
-                    for (j, slot) in chunk_slots.iter_mut().enumerate() {
-                        f(ci * chunk + j, slot);
+                let job = |wi: usize| {
+                    // The lock is uncontended — each index is visited by
+                    // exactly one worker; it only hands the &mut across the
+                    // thread boundary safely.
+                    let mut guard = chunks[wi].lock().unwrap();
+                    let (base, part) = &mut *guard;
+                    for (j, slot) in part.iter_mut().enumerate() {
+                        f(*base + j, slot);
+                    }
+                };
+                if let Err(e) = pool.run(chunks.len(), &job) {
+                    panic!("lane section failed: {e}");
+                }
+            }
+            None => {
+                std::thread::scope(|s| {
+                    for (ci, chunk_slots) in slots.chunks_mut(chunk).enumerate() {
+                        let f = &f;
+                        s.spawn(move || {
+                            crate::sparse::coljac::set_thread_intra_op_parallelism(false);
+                            for (j, slot) in chunk_slots.iter_mut().enumerate() {
+                                f(ci * chunk + j, slot);
+                            }
+                        });
                     }
                 });
             }
-        });
+        }
     }
 
     /// Run `f(lane_index, slot)` for every lane with work stealing: workers
@@ -199,42 +285,53 @@ impl<'c> LaneExecutor<'c> {
     /// per-lane work is uneven (variable-length Copy sequences), where
     /// static chunking would leave workers idle. Each lane is claimed
     /// exactly once, so per-lane buffers still make the result independent
-    /// of which worker ran which lane.
+    /// of which worker ran which lane. The section runs `min(workers,
+    /// lanes)` threads — 16 workers over one lane degrade to the inline
+    /// loop, never 16 idle spawns.
     pub fn for_each_lane_stealing<F>(&mut self, f: F)
     where
         F: Fn(usize, &mut LaneSlot<'c>) + Sync,
     {
-        let w = self.workers.min(self.slots.len());
+        let LaneExecutor { slots, workers, pool } = self;
+        let w = (*workers).min(slots.len());
         if w <= 1 {
-            for (i, slot) in self.slots.iter_mut().enumerate() {
+            for (i, slot) in slots.iter_mut().enumerate() {
                 f(i, slot);
             }
             return;
         }
         let next = AtomicUsize::new(0);
-        let items: Vec<Mutex<&mut LaneSlot<'c>>> =
-            self.slots.iter_mut().map(Mutex::new).collect();
-        std::thread::scope(|s| {
-            for _ in 0..w {
-                let next = &next;
-                let items = &items;
-                let f = &f;
-                s.spawn(move || {
-                    crate::sparse::coljac::set_thread_intra_op_parallelism(false);
-                    loop {
-                        let i = next.fetch_add(1, Ordering::Relaxed);
-                        if i >= items.len() {
-                            break;
-                        }
-                        // Each index is produced once, so the lock is always
-                        // uncontended; it only exists to hand the &mut across
-                        // the thread boundary safely.
-                        let mut slot = items[i].lock().unwrap();
-                        f(i, &mut **slot);
+        let items: Vec<Mutex<&mut LaneSlot<'c>>> = slots.iter_mut().map(Mutex::new).collect();
+        let f = &f;
+        let steal = |_wi: usize| loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= items.len() {
+                break;
+            }
+            // Each index is produced once, so the lock is always
+            // uncontended; it only exists to hand the &mut across the
+            // thread boundary safely.
+            let mut slot = items[i].lock().unwrap();
+            f(i, &mut **slot);
+        };
+        match pool {
+            Some(pool) => {
+                if let Err(e) = pool.run(w, &steal) {
+                    panic!("lane section failed: {e}");
+                }
+            }
+            None => {
+                std::thread::scope(|s| {
+                    for wi in 0..w {
+                        let steal = &steal;
+                        s.spawn(move || {
+                            crate::sparse::coljac::set_thread_intra_op_parallelism(false);
+                            steal(wi);
+                        });
                     }
                 });
             }
-        });
+        }
     }
 
     /// Total lane-steps contributed to the pending gradient.
@@ -350,9 +447,10 @@ mod tests {
         readout: &Readout,
         lanes: usize,
         workers: usize,
+        mode: SpawnMode,
     ) -> LaneExecutor<'c> {
         let mut rng = Pcg32::seeded(99);
-        LaneExecutor::new(cell, Method::Snap(1), readout, lanes, workers, &mut rng)
+        LaneExecutor::with_mode(cell, Method::Snap(1), readout, lanes, workers, mode, &mut rng)
     }
 
     #[test]
@@ -360,15 +458,17 @@ mod tests {
         let mut rng = Pcg32::seeded(1);
         let cell = Arch::Gru.build(6, 3, 1.0, &mut rng);
         let readout = Readout::new(6, 8, 4, &mut rng);
-        for workers in [1usize, 2, 4, 16] {
-            let mut exec = make_exec(cell.as_ref(), &readout, 7, workers);
-            exec.for_each_lane(|i, slot| {
-                slot.tokens += i as u64 + 1;
-                slot.pending += 1;
-            });
-            for (i, slot) in exec.slots().iter().enumerate() {
-                assert_eq!(slot.tokens, i as u64 + 1, "workers={workers} lane {i}");
-                assert_eq!(slot.pending, 1);
+        for mode in [SpawnMode::Persistent, SpawnMode::PerSection] {
+            for workers in [1usize, 2, 4, 16] {
+                let mut exec = make_exec(cell.as_ref(), &readout, 7, workers, mode);
+                exec.for_each_lane(|i, slot| {
+                    slot.tokens += i as u64 + 1;
+                    slot.pending += 1;
+                });
+                for (i, slot) in exec.slots().iter().enumerate() {
+                    assert_eq!(slot.tokens, i as u64 + 1, "{mode:?} workers={workers} lane {i}");
+                    assert_eq!(slot.pending, 1);
+                }
             }
         }
     }
@@ -378,16 +478,52 @@ mod tests {
         let mut rng = Pcg32::seeded(2);
         let cell = Arch::Gru.build(6, 3, 1.0, &mut rng);
         let readout = Readout::new(6, 8, 4, &mut rng);
-        for workers in [1usize, 3, 8] {
-            let mut exec = make_exec(cell.as_ref(), &readout, 11, workers);
-            exec.for_each_lane_stealing(|i, slot| {
-                slot.tokens += 1;
-                slot.nll_sum += i as f64;
-            });
-            assert_eq!(exec.tokens_seen(), 11, "workers={workers}");
-            let (sum, _) = exec.drain_step_nll();
-            assert_eq!(sum, (0..11).sum::<usize>() as f64);
+        for mode in [SpawnMode::Persistent, SpawnMode::PerSection] {
+            for workers in [1usize, 3, 8] {
+                let mut exec = make_exec(cell.as_ref(), &readout, 11, workers, mode);
+                exec.for_each_lane_stealing(|i, slot| {
+                    slot.tokens += 1;
+                    slot.nll_sum += i as f64;
+                });
+                assert_eq!(exec.tokens_seen(), 11, "{mode:?} workers={workers}");
+                let (sum, _) = exec.drain_step_nll();
+                assert_eq!(sum, (0..11).sum::<usize>() as f64);
+            }
         }
+    }
+
+    #[test]
+    fn pool_is_sized_to_useful_workers_and_reused_across_sections() {
+        let mut rng = Pcg32::seeded(3);
+        let cell = Arch::Gru.build(6, 3, 1.0, &mut rng);
+        let readout = Readout::new(6, 8, 4, &mut rng);
+        // 16 workers over 3 lanes: the pool holds 3 threads, not 16.
+        let mut exec = make_exec(cell.as_ref(), &readout, 3, 16, SpawnMode::Persistent);
+        assert_eq!(exec.pool().expect("pool").workers(), 3);
+        for _ in 0..50 {
+            exec.for_each_lane(|_, slot| slot.tokens += 1);
+            exec.for_each_lane_stealing(|_, slot| slot.tokens += 1);
+        }
+        assert_eq!(exec.tokens_seen(), 3 * 100);
+        // Every section bumped the pool generation exactly once.
+        assert_eq!(exec.pool().expect("pool").generation(), 100);
+    }
+
+    #[test]
+    fn single_lane_many_workers_stays_on_the_inline_path() {
+        // Regression for the over-spawn bug: 1 lane with 16 configured
+        // workers must not create a pool (or spawn anything) at all.
+        let mut rng = Pcg32::seeded(4);
+        let cell = Arch::Gru.build(6, 3, 1.0, &mut rng);
+        let readout = Readout::new(6, 8, 4, &mut rng);
+        let mut exec = make_exec(cell.as_ref(), &readout, 1, 16, SpawnMode::Persistent);
+        assert!(exec.pool().is_none());
+        exec.for_each_lane_stealing(|i, slot| {
+            assert_eq!(i, 0);
+            slot.tokens += 1;
+        });
+        exec.for_each_lane(|_, slot| slot.tokens += 1);
+        assert_eq!(exec.tokens_seen(), 2);
     }
 
     #[test]
@@ -416,7 +552,8 @@ mod tests {
         let p = cell.num_params();
         let mut reference: Option<Vec<f32>> = None;
         for workers in [1usize, 2, 8] {
-            let mut exec = make_exec(cell.as_ref(), &readout, 8, workers);
+            let mut exec =
+                make_exec(cell.as_ref(), &readout, 8, workers, SpawnMode::Persistent);
             exec.for_each_lane(|i, slot| {
                 for (j, g) in slot.g_rec.iter_mut().enumerate() {
                     *g = ((i + 1) * (j + 1)) as f32 * 1e-3;

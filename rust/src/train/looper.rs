@@ -5,10 +5,15 @@
 //! Both drivers route through the lane-parallel [`LaneExecutor`]
 //! (`train::executor`): every minibatch lane owns its gradient algorithm,
 //! gradient buffers and RNG stream; θ and the readout are shared read-only
-//! inside a parallel section and updated after an ordered reduction. Results
-//! are bitwise identical for any `TrainConfig::workers` value on the
-//! char-LM driver and the full-unroll Copy driver (the regression guarantee
-//! tested in `rust/tests/executor_determinism.rs`).
+//! inside a parallel section and updated after an ordered reduction.
+//! Sections run on the executor's persistent worker pool by default
+//! ([`SpawnMode::Persistent`]); data for the *next* minibatch is
+//! materialised by an async double-buffered [`Feeder`] while the current
+//! one computes (`TrainConfig::prefetch`). Worker count, spawn mode and
+//! prefetching are throughput knobs only: results are bitwise identical
+//! for any combination on the char-LM driver and the full-unroll Copy
+//! driver (the regression guarantee tested in
+//! `rust/tests/executor_determinism.rs`).
 //!
 //! The one schedule that cannot be parallelized faithfully is Copy with
 //! `truncation > 0` and a single worker: the sequential engine updates θ
@@ -21,15 +26,16 @@
 //! synchronous — regime than the single-worker walk.
 
 use crate::cells::{Arch, Cell};
-use crate::data::copy::{CopySeq, Curriculum, COPY_CLASSES, COPY_VOCAB};
+use crate::data::copy::{sample_len_at, CopySeq, Curriculum, COPY_CLASSES, COPY_VOCAB};
 use crate::data::corpus::Corpus;
+use crate::data::feeder::Feeder;
 use crate::grad::{GradAlgo, Method};
 use crate::models::{Embedding, Readout, ReadoutCache};
 use crate::opt::Adam;
-use crate::train::executor::{LaneExecutor, LaneSlot};
+use crate::tensor::rng::Pcg32;
+use crate::train::executor::{LaneExecutor, LaneSlot, SpawnMode};
 use crate::train::metrics::{bpc_from_nats, CurvePoint, RunningMean};
 use crate::train::prune::Pruner;
-use crate::tensor::rng::Pcg32;
 
 /// Configuration shared by both task drivers.
 #[derive(Clone, Debug)]
@@ -63,6 +69,14 @@ pub struct TrainConfig {
     /// validation span (bytes) per char-LM evaluation (paper default 4096;
     /// benches shrink it so measurement is dominated by training).
     pub eval_span: usize,
+    /// async double-buffered data feeding (`data::feeder`): materialise the
+    /// next minibatch on a prefetch thread while this one computes. Results
+    /// are bitwise identical with it on or off.
+    pub prefetch: bool,
+    /// how parallel sections acquire worker threads: the persistent pool
+    /// (default) or the legacy per-section spawn (benchmark baseline).
+    /// Results are bitwise identical in either mode.
+    pub spawn: SpawnMode,
 }
 
 impl Default for TrainConfig {
@@ -86,6 +100,8 @@ impl Default for TrainConfig {
             prune_end_step: u64::MAX,
             workers: 1,
             eval_span: 4096,
+            prefetch: true,
+            spawn: SpawnMode::Persistent,
         }
     }
 }
@@ -132,6 +148,13 @@ pub fn train_copy(cfg: &TrainConfig) -> TrainResult {
 enum Task<'a> {
     CharLm { train: &'a Corpus, valid: &'a Corpus },
     Copy,
+}
+
+/// The per-task feeder pair: spec = what generation depends on, batch = the
+/// materialised minibatch data (see `data::feeder` for the handshake).
+enum DataFeed<'scope> {
+    CharLm(Feeder<'scope, (), Vec<Vec<u8>>>),
+    Copy(Feeder<'scope, usize, Vec<CopySeq>>),
 }
 
 /// One char-LM lane-token: step the cell, read out, backprop the loss into
@@ -197,142 +220,114 @@ fn run_driver(
 ) -> TrainResult {
     let p = cell.num_params();
     let mut theta = cell.init_params(rng);
-    let mut exec =
-        LaneExecutor::new(cell, cfg.method, readout, cfg.batch.max(1), cfg.workers, rng);
+    let mut exec = LaneExecutor::with_mode(
+        cell, cfg.method, readout, cfg.batch.max(1), cfg.workers, cfg.spawn, rng,
+    );
+    // The feeder owns the *data* streams: clones of the per-lane RNGs taken
+    // right after construction, advanced only by sampling — exactly the
+    // draw sequence the slots produced when they sampled inline, so
+    // prefetching cannot change a single byte of training data.
+    let data_rngs: Vec<Pcg32> = exec.slots().iter().map(|s| s.rng.clone()).collect();
     let mut g_rec = vec![0.0f32; p];
     let mut g_ro = readout.make_grad();
     let mut opt_rec = Adam::new(p, cfg.lr);
     let mut opt_ro = Adam::new(readout.num_params(), cfg.lr);
     let mut pruner = cfg.prune_to.map(|s| {
-        Pruner::new(cell.param_info(), s, 0, cfg.prune_end_step.min(cfg.steps as u64), cfg.prune_every)
+        Pruner::new(
+            cell.param_info(),
+            s,
+            0,
+            cfg.prune_end_step.min(cfg.steps as u64),
+            cfg.prune_every,
+        )
     });
     let trains_rec = cfg.method.trains_recurrent();
 
-    let mut curve = Vec::new();
-    let mut curriculum = Curriculum::new();
-    let mut opt_steps = 0u64;
-    let mut last_train_bpc = f64::NAN;
-    let mut last_valid_bpc = f64::NAN;
-
-    for step in 0..cfg.steps {
-        match task {
+    // The prefetch thread lives on this scope; dropping the feeder at the
+    // end of the closure closes its channels, so the scope join is instant.
+    std::thread::scope(|scope| {
+        let mut feed = match &task {
             Task::CharLm { train, .. } => {
-                // B independent crops, one per lane, advanced in lockstep
-                // segments of `truncation` tokens (whole crop when 0); θ
-                // updates at every segment boundary.
-                exec.reset_lanes();
-                let crops = exec.sample_crops(train, cfg.seq_len);
-                let seg = if cfg.truncation == 0 { cfg.seq_len } else { cfg.truncation };
-                let mut t0 = 0usize;
-                while t0 < cfg.seq_len {
-                    let t1 = (t0 + seg).min(cfg.seq_len);
-                    {
-                        let theta_ref: &[f32] = &theta;
-                        let ro: &Readout = readout;
-                        exec.for_each_lane(|i, slot| {
-                            let crop = &crops[i];
-                            for t in t0..t1 {
-                                lane_step_charlm(slot, theta_ref, embed, ro, crop, t, trains_rec);
-                            }
-                            // Segment end is an update boundary: materialize
-                            // deferred (BPTT) gradients in-lane, in parallel.
-                            slot.algo.flush(theta_ref, &mut slot.g_rec);
-                        });
-                    }
-                    exec.reduce_and_update(
-                        &mut theta, &mut g_rec, readout, &mut g_ro, &mut opt_rec, &mut opt_ro,
-                        &mut pruner, &mut opt_steps, trains_rec,
-                    );
-                    t0 = t1;
-                }
+                let corpus: &Corpus = *train;
+                let seq_len = cfg.seq_len;
+                let mut streams = data_rngs;
+                let generate = move |_spec: ()| -> Vec<Vec<u8>> {
+                    streams
+                        .iter_mut()
+                        .map(|r| corpus.sample_crop(seq_len, r).to_vec())
+                        .collect()
+                };
+                DataFeed::CharLm(if cfg.prefetch {
+                    Feeder::spawn(scope, generate)
+                } else {
+                    Feeder::synchronous(generate)
+                })
             }
             Task::Copy => {
-                exec.reset_lanes();
-                // Sample each lane's sequence from its own stream (lane
-                // order; the curriculum level is fixed within a minibatch).
-                let seqs: Vec<CopySeq> = exec
-                    .slots_mut()
-                    .iter_mut()
-                    .map(|slot| {
-                        let len = curriculum.sample_len(&mut slot.rng);
-                        CopySeq::generate(len, &mut slot.rng)
-                    })
-                    .collect();
-                if cfg.truncation == 0 {
-                    // Full unroll: lanes are fully independent work items —
-                    // lengths vary, so hand them out by work stealing; one
-                    // shared update at the minibatch boundary.
-                    {
-                        let theta_ref: &[f32] = &theta;
-                        let ro: &Readout = readout;
-                        exec.for_each_lane_stealing(|i, slot| {
-                            let seq = &seqs[i];
-                            for (t, &tok) in seq.inputs.iter().enumerate() {
-                                lane_step_copy(
-                                    slot, theta_ref, embed, ro, tok, seq.targets[t], trains_rec,
-                                );
-                            }
-                            slot.algo.flush(theta_ref, &mut slot.g_rec);
-                        });
-                    }
-                    exec.reduce_and_update(
-                        &mut theta, &mut g_rec, readout, &mut g_ro, &mut opt_rec, &mut opt_ro,
-                        &mut pruner, &mut opt_steps, trains_rec,
-                    );
-                } else if exec.workers() <= 1 {
-                    // Legacy fully-online schedule (identical to the
-                    // sequential engine): walk the lanes one after another,
-                    // updating θ every `truncation` lane-tokens.
-                    let mut window = 0usize;
-                    for i in 0..exec.lanes() {
-                        let seq = &seqs[i];
-                        for (t, &tok) in seq.inputs.iter().enumerate() {
-                            lane_step_copy(
-                                exec.slot_mut(i), &theta, embed, readout, tok, seq.targets[t],
-                                trains_rec,
-                            );
-                            window += 1;
-                            if window >= cfg.truncation {
-                                exec.flush_all(&theta);
-                                exec.reduce_and_update(
-                                    &mut theta, &mut g_rec, readout, &mut g_ro, &mut opt_rec,
-                                    &mut opt_ro, &mut pruner, &mut opt_steps, trains_rec,
-                                );
-                                window = 0;
-                            }
-                        }
-                    }
-                    if exec.total_pending() > 0 {
-                        exec.flush_all(&theta);
-                        exec.reduce_and_update(
-                            &mut theta, &mut g_rec, readout, &mut g_ro, &mut opt_rec, &mut opt_ro,
-                            &mut pruner, &mut opt_steps, trains_rec,
-                        );
-                    }
+                let mut streams = data_rngs;
+                // Lane order; the curriculum level is fixed within a
+                // minibatch, so it travels as the batch spec.
+                let generate = move |level: usize| -> Vec<CopySeq> {
+                    streams
+                        .iter_mut()
+                        .map(|r| {
+                            let len = sample_len_at(level, r);
+                            CopySeq::generate(len, r)
+                        })
+                        .collect()
+                };
+                DataFeed::Copy(if cfg.prefetch {
+                    Feeder::spawn(scope, generate)
                 } else {
-                    // Batched-online: all still-active lanes advance in
-                    // lockstep; θ updates every `truncation` global
-                    // timesteps with gradients averaged across the lanes
-                    // that contributed. Deterministic for any worker count.
-                    let max_len = seqs.iter().map(|s| s.inputs.len()).max().unwrap_or(0);
+                    Feeder::synchronous(generate)
+                })
+            }
+        };
+
+        let mut curve = Vec::new();
+        let mut curriculum = Curriculum::new();
+        let mut opt_steps = 0u64;
+        let mut last_train_bpc = f64::NAN;
+        let mut last_valid_bpc = f64::NAN;
+
+        // Prime the first request so step 0 finds its batch ready.
+        match &mut feed {
+            DataFeed::CharLm(feeder) => feeder.request(()),
+            DataFeed::Copy(feeder) => feeder.request(curriculum.level()),
+        }
+
+        for step in 0..cfg.steps {
+            match task {
+                Task::CharLm { .. } => {
+                    // B independent crops, one per lane, advanced in lockstep
+                    // segments of `truncation` tokens (whole crop when 0); θ
+                    // updates at every segment boundary.
+                    exec.reset_lanes();
+                    let DataFeed::CharLm(feeder) = &mut feed else { unreachable!() };
+                    let crops = feeder.recv();
+                    if step + 1 < cfg.steps {
+                        // Crops are independent of training state: overlap
+                        // the next batch's materialisation with this whole
+                        // step (compute + evaluation).
+                        feeder.request(());
+                    }
+                    let seg = if cfg.truncation == 0 { cfg.seq_len } else { cfg.truncation };
                     let mut t0 = 0usize;
-                    while t0 < max_len {
-                        let t1 = (t0 + cfg.truncation).min(max_len);
+                    while t0 < cfg.seq_len {
+                        let t1 = (t0 + seg).min(cfg.seq_len);
                         {
                             let theta_ref: &[f32] = &theta;
                             let ro: &Readout = readout;
                             exec.for_each_lane(|i, slot| {
-                                let seq = &seqs[i];
-                                let hi = t1.min(seq.inputs.len());
-                                for t in t0..hi {
-                                    lane_step_copy(
-                                        slot, theta_ref, embed, ro, seq.inputs[t],
-                                        seq.targets[t], trains_rec,
+                                let crop = &crops[i];
+                                for t in t0..t1 {
+                                    lane_step_charlm(
+                                        slot, theta_ref, embed, ro, crop, t, trains_rec,
                                     );
                                 }
-                                if t0 < hi {
-                                    slot.algo.flush(theta_ref, &mut slot.g_rec);
-                                }
+                                // Segment end is an update boundary: materialize
+                                // deferred (BPTT) gradients in-lane, in parallel.
+                                slot.algo.flush(theta_ref, &mut slot.g_rec);
                             });
                         }
                         exec.reduce_and_update(
@@ -342,52 +337,151 @@ fn run_driver(
                         t0 = t1;
                     }
                 }
+                Task::Copy => {
+                    exec.reset_lanes();
+                    let seqs = {
+                        let DataFeed::Copy(feeder) = &mut feed else { unreachable!() };
+                        feeder.recv()
+                    };
+                    if cfg.truncation == 0 {
+                        // Full unroll: lanes are fully independent work items —
+                        // lengths vary, so hand them out by work stealing; one
+                        // shared update at the minibatch boundary.
+                        {
+                            let theta_ref: &[f32] = &theta;
+                            let ro: &Readout = readout;
+                            exec.for_each_lane_stealing(|i, slot| {
+                                let seq = &seqs[i];
+                                for (t, &tok) in seq.inputs.iter().enumerate() {
+                                    lane_step_copy(
+                                        slot, theta_ref, embed, ro, tok, seq.targets[t],
+                                        trains_rec,
+                                    );
+                                }
+                                slot.algo.flush(theta_ref, &mut slot.g_rec);
+                            });
+                        }
+                        exec.reduce_and_update(
+                            &mut theta, &mut g_rec, readout, &mut g_ro, &mut opt_rec, &mut opt_ro,
+                            &mut pruner, &mut opt_steps, trains_rec,
+                        );
+                    } else if exec.workers() <= 1 {
+                        // Legacy fully-online schedule (identical to the
+                        // sequential engine): walk the lanes one after another,
+                        // updating θ every `truncation` lane-tokens.
+                        let mut window = 0usize;
+                        for i in 0..exec.lanes() {
+                            let seq = &seqs[i];
+                            for (t, &tok) in seq.inputs.iter().enumerate() {
+                                lane_step_copy(
+                                    exec.slot_mut(i), &theta, embed, readout, tok, seq.targets[t],
+                                    trains_rec,
+                                );
+                                window += 1;
+                                if window >= cfg.truncation {
+                                    exec.flush_all(&theta);
+                                    exec.reduce_and_update(
+                                        &mut theta, &mut g_rec, readout, &mut g_ro, &mut opt_rec,
+                                        &mut opt_ro, &mut pruner, &mut opt_steps, trains_rec,
+                                    );
+                                    window = 0;
+                                }
+                            }
+                        }
+                        if exec.total_pending() > 0 {
+                            exec.flush_all(&theta);
+                            exec.reduce_and_update(
+                                &mut theta, &mut g_rec, readout, &mut g_ro, &mut opt_rec,
+                                &mut opt_ro, &mut pruner, &mut opt_steps, trains_rec,
+                            );
+                        }
+                    } else {
+                        // Batched-online: all still-active lanes advance in
+                        // lockstep; θ updates every `truncation` global
+                        // timesteps with gradients averaged across the lanes
+                        // that contributed. Deterministic for any worker count.
+                        let max_len = seqs.iter().map(|s| s.inputs.len()).max().unwrap_or(0);
+                        let mut t0 = 0usize;
+                        while t0 < max_len {
+                            let t1 = (t0 + cfg.truncation).min(max_len);
+                            {
+                                let theta_ref: &[f32] = &theta;
+                                let ro: &Readout = readout;
+                                exec.for_each_lane(|i, slot| {
+                                    let seq = &seqs[i];
+                                    let hi = t1.min(seq.inputs.len());
+                                    for t in t0..hi {
+                                        lane_step_copy(
+                                            slot, theta_ref, embed, ro, seq.inputs[t],
+                                            seq.targets[t], trains_rec,
+                                        );
+                                    }
+                                    if t0 < hi {
+                                        slot.algo.flush(theta_ref, &mut slot.g_rec);
+                                    }
+                                });
+                            }
+                            exec.reduce_and_update(
+                                &mut theta, &mut g_rec, readout, &mut g_ro, &mut opt_rec,
+                                &mut opt_ro, &mut pruner, &mut opt_steps, trains_rec,
+                            );
+                            t0 = t1;
+                        }
+                    }
+                }
+            }
+
+            // Minibatch loss: ordered per-lane drain, so the mean (and the
+            // curriculum decisions it feeds) is worker-count independent.
+            let (nll_sum, nll_n) = exec.drain_step_nll();
+            let step_mean_nats = if nll_n == 0 { f64::NAN } else { nll_sum / nll_n as f64 };
+            last_train_bpc = bpc_from_nats(step_mean_nats);
+            if let Task::Copy = task {
+                curriculum.report_minibatch_bpc(last_train_bpc as f32);
+                // The next minibatch's lengths depend on the level we just
+                // updated, so the request can only go out now — faithfulness
+                // to §5.2 over lookahead.
+                if step + 1 < cfg.steps {
+                    let DataFeed::Copy(feeder) = &mut feed else { unreachable!() };
+                    feeder.request(curriculum.level());
+                }
+            }
+
+            if step % cfg.log_every.max(1) == 0 || step + 1 == cfg.steps {
+                if let Task::CharLm { valid, .. } = &task {
+                    // Guard the empty-validation-split case: Corpus::split on a
+                    // tiny corpus legitimately yields an empty partition.
+                    last_valid_bpc = if valid.len() >= 2 {
+                        evaluate_charlm(
+                            cell, &theta, embed, readout, valid,
+                            cfg.eval_span.min(valid.len() - 1), rng,
+                        )
+                    } else {
+                        f64::NAN
+                    };
+                }
+                curve.push(CurvePoint {
+                    x: match task {
+                        Task::CharLm { .. } => step as u64,
+                        Task::Copy => exec.tokens_seen(),
+                    },
+                    train_bpc: last_train_bpc,
+                    valid_bpc: last_valid_bpc,
+                    aux: curriculum.level() as f64,
+                });
             }
         }
 
-        // Minibatch loss: ordered per-lane drain, so the mean (and the
-        // curriculum decisions it feeds) is worker-count independent.
-        let (nll_sum, nll_n) = exec.drain_step_nll();
-        let step_mean_nats = if nll_n == 0 { f64::NAN } else { nll_sum / nll_n as f64 };
-        last_train_bpc = bpc_from_nats(step_mean_nats);
-        if let Task::Copy = task {
-            curriculum.report_minibatch_bpc(last_train_bpc as f32);
+        TrainResult {
+            curve,
+            final_train_bpc: last_train_bpc,
+            final_valid_bpc: last_valid_bpc,
+            tracking_flops_per_step: exec.tracking_flops_mean(),
+            tracking_memory_floats: exec.tracking_memory_floats(),
+            tokens_seen: exec.tokens_seen(),
+            final_level: curriculum.level(),
         }
-
-        if step % cfg.log_every.max(1) == 0 || step + 1 == cfg.steps {
-            if let Task::CharLm { valid, .. } = &task {
-                // Guard the empty-validation-split case: Corpus::split on a
-                // tiny corpus legitimately yields an empty partition.
-                last_valid_bpc = if valid.len() >= 2 {
-                    evaluate_charlm(
-                        cell, &theta, embed, readout, valid,
-                        cfg.eval_span.min(valid.len() - 1), rng,
-                    )
-                } else {
-                    f64::NAN
-                };
-            }
-            curve.push(CurvePoint {
-                x: match task {
-                    Task::CharLm { .. } => step as u64,
-                    Task::Copy => exec.tokens_seen(),
-                },
-                train_bpc: last_train_bpc,
-                valid_bpc: last_valid_bpc,
-                aux: curriculum.level() as f64,
-            });
-        }
-    }
-
-    TrainResult {
-        curve,
-        final_train_bpc: last_train_bpc,
-        final_valid_bpc: last_valid_bpc,
-        tracking_flops_per_step: exec.tracking_flops_mean(),
-        tracking_memory_floats: exec.tracking_memory_floats(),
-        tokens_seen: exec.tokens_seen(),
-        final_level: curriculum.level(),
-    }
+    })
 }
 
 /// Evaluate char-LM bpc over a contiguous span of the validation corpus.
@@ -575,5 +669,29 @@ mod tests {
         let res = train_copy(&cfg);
         assert!(res.final_level >= 1 && res.final_train_bpc.is_finite());
         assert!(res.tokens_seen > 0);
+    }
+
+    #[test]
+    fn prefetch_off_and_per_section_spawning_still_learn() {
+        // The throughput knobs must not change driver behaviour; the
+        // bitwise guarantee lives in tests/executor_determinism.rs — this
+        // is the cheap in-crate smoke check.
+        let corpus = Corpus::synthetic(10_000, 15);
+        let cfg = TrainConfig {
+            k: 12,
+            seq_len: 16,
+            steps: 6,
+            batch: 4,
+            workers: 2,
+            readout_hidden: 16,
+            embed_dim: 8,
+            log_every: 3,
+            prefetch: false,
+            spawn: SpawnMode::PerSection,
+            ..Default::default()
+        };
+        let res = train_charlm(&cfg, &corpus);
+        assert!(res.final_train_bpc.is_finite());
+        assert_eq!(res.tokens_seen, 6 * 4 * 16);
     }
 }

@@ -1,15 +1,17 @@
 //! Training stack: metric accounting, the analytic cost model (Table 1),
-//! magnitude pruning (Table 2), the lane-parallel execution engine, and the
-//! char-LM / Copy-task drivers.
+//! magnitude pruning (Table 2), the persistent worker pool, the
+//! lane-parallel execution engine, and the char-LM / Copy-task drivers.
 
 pub mod executor;
 pub mod flops;
 pub mod looper;
 pub mod metrics;
+pub mod pool;
 pub mod prune;
 
-pub use executor::{LaneExecutor, LaneSlot};
+pub use executor::{LaneExecutor, LaneSlot, SpawnMode};
 pub use flops::{table1_memory, table1_time, CostInputs};
 pub use looper::{evaluate_charlm, train_charlm, train_copy, TrainConfig, TrainResult};
 pub use metrics::{bpc_from_nats, CurvePoint, Ema, RunningMean};
+pub use pool::WorkerPool;
 pub use prune::Pruner;

@@ -1,0 +1,325 @@
+//! Persistent worker pool for the lane-parallel executor.
+//!
+//! PR 1's engine spawned a fresh `std::thread::scope` per parallel section.
+//! That is fine when sections are sequence-sized, but the regime the paper
+//! cares about — tiny truncation windows, fully-online updates — runs
+//! *thousands* of sections per second, and per-section spawning then costs
+//! more than the gradient math it parallelizes. This module replaces the
+//! spawns with a pool of long-lived workers so a section costs a condvar
+//! wake instead of `workers` thread creations.
+//!
+//! ## Model
+//!
+//! * **Workers** park on a condvar between sections. Each worker disables
+//!   `ColJacobian`'s intra-op threading once at startup (it runs inside an
+//!   outer parallel region for its whole life).
+//! * **Generation-stamped job slot**: [`WorkerPool::run`] publishes one
+//!   type-erased closure together with a monotonically increasing generation
+//!   number. A worker participates in a generation at most once (it stamps
+//!   the last generation it executed), and worker indices `0..participants`
+//!   are handed out through a claim counter — so both static-chunk sections
+//!   (index = chunk id) and work-stealing sections (index unused; lanes are
+//!   claimed through an atomic) layer on the same primitive.
+//! * **Completion barrier**: `run` blocks until every participant has
+//!   finished, which is also what makes the lifetime erasure sound — the
+//!   borrowed closure provably outlives every worker's use of it.
+//! * **Panic propagation**: a panicking job is caught in the worker, turned
+//!   into an [`Error`](crate::errors::Error) returned from `run`, and
+//!   **poisons the pool** — later sections fail fast with a clear message
+//!   instead of computing on half-updated lanes (or hanging).
+//!
+//! Determinism is unaffected by pooling: which OS thread runs which worker
+//! index is as irrelevant as it was under scoped spawning, because lanes own
+//! their buffers and all cross-lane reduction happens in lane order on the
+//! coordinating thread (see `train::executor`).
+
+use crate::errors::{Error, Result};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+
+/// A parallel section body: called once per participating worker with the
+/// worker's section-local index in `0..participants`.
+type SectionFn<'a> = dyn Fn(usize) + Sync + 'a;
+
+/// Type-erased pointer to the caller's section closure.
+///
+/// Validity: the pointer is published under the state lock by [`WorkerPool::run`],
+/// which does not return until `remaining == 0`; a worker only decrements
+/// `remaining` after its call through the pointer has returned. So no worker
+/// ever dereferences it after `run` unwinds the borrow.
+struct JobPtr(*const SectionFn<'static>);
+
+// SAFETY: the pointee is `Sync` (workers share it by reference) and outlives
+// every dereference per the invariant above; the raw pointer itself is just
+// an address.
+unsafe impl Send for JobPtr {}
+
+struct State {
+    /// Monotonic id of the current section; workers stamp the last
+    /// generation they executed so each thread joins a section at most once.
+    generation: u64,
+    job: Option<JobPtr>,
+    /// Workers taking part in the current generation.
+    participants: usize,
+    /// Claim counter handing out worker indices `0..participants`.
+    started: usize,
+    /// Participants that have not yet finished the current generation.
+    remaining: usize,
+    /// First panic message observed in the current generation.
+    panic_msg: Option<String>,
+    /// A previous section panicked: the pool refuses further work.
+    poisoned: bool,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers park here between sections.
+    work: Condvar,
+    /// The coordinator parks here while a section runs.
+    done: Condvar,
+}
+
+/// Long-lived worker threads executing parallel sections on demand.
+/// See the module docs for the model.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+/// Lock that shrugs off std's poisoning: the pool has its own, stricter
+/// poisoning protocol (`State::poisoned`), and workers catch job panics
+/// before touching the lock, so an std-poisoned mutex only means a panic
+/// crossed the lock in an unrelated way — the state itself stays coherent.
+fn lock(m: &Mutex<State>) -> MutexGuard<'_, State> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn payload_msg(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    // This thread spends its whole life inside an outer parallel region:
+    // never let a lane's SnAp update fan out a second layer of threads.
+    crate::sparse::coljac::set_thread_intra_op_parallelism(false);
+    let mut last_gen = 0u64;
+    loop {
+        let (job, index) = {
+            let mut st = lock(&shared.state);
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.job.is_some() && st.generation != last_gen && st.started < st.participants {
+                    break;
+                }
+                st = shared.work.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+            last_gen = st.generation;
+            let index = st.started;
+            st.started += 1;
+            (st.job.as_ref().expect("job present").0, index)
+        };
+        // SAFETY: `run` keeps the closure alive until `remaining` reaches
+        // zero, and this worker only decrements it below, after the call.
+        let outcome = catch_unwind(AssertUnwindSafe(|| unsafe { (&*job)(index) }));
+        let mut st = lock(&shared.state);
+        if let Err(payload) = outcome {
+            if st.panic_msg.is_none() {
+                st.panic_msg = Some(payload_msg(payload.as_ref()));
+            }
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            st.job = None;
+            shared.done.notify_all();
+        }
+    }
+}
+
+impl WorkerPool {
+    /// Spawn `workers` (≥ 1) parked threads.
+    pub fn new(workers: usize) -> Self {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                generation: 0,
+                job: None,
+                participants: 0,
+                started: 0,
+                remaining: 0,
+                panic_msg: None,
+                poisoned: false,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (0..workers.max(1))
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("lane-worker-{i}"))
+                    .spawn(move || worker_loop(shared))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        WorkerPool { shared, handles }
+    }
+
+    /// Number of worker threads in the pool.
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Id of the most recently started section (0 before the first).
+    pub fn generation(&self) -> u64 {
+        lock(&self.shared.state).generation
+    }
+
+    /// Run one parallel section: `f(i)` for every worker index
+    /// `i ∈ 0..participants`, then block until all have finished.
+    ///
+    /// `participants` must not exceed [`workers`](Self::workers) — sections
+    /// size themselves to `min(workers, work items)`, and silently clamping
+    /// here would skip work instead. A panicking `f` poisons the pool and is
+    /// reported as the returned error; sections must not nest (a job calling
+    /// `run` on its own pool would deadlock on the completion barrier).
+    pub fn run(&self, participants: usize, f: &SectionFn<'_>) -> Result<()> {
+        let participants = participants.max(1);
+        crate::ensure!(
+            participants <= self.handles.len(),
+            "section wants {participants} participants but the pool has {} workers",
+            self.handles.len()
+        );
+        // Erase the closure's borrow lifetime; sound because this function
+        // only returns after the completion barrier (see `JobPtr`).
+        let job = JobPtr(unsafe {
+            std::mem::transmute::<*const SectionFn<'_>, *const SectionFn<'static>>(f)
+        });
+        {
+            let mut st = lock(&self.shared.state);
+            if st.poisoned {
+                return Err(Error::msg(
+                    "worker pool is poisoned by an earlier panic; \
+                     create a new executor to continue",
+                ));
+            }
+            // Hard error, not a debug_assert: the single job slot is what
+            // makes the unsafe lifetime erasure sound, so overlapping
+            // sections (two threads sharing the pool) must never publish.
+            if st.job.is_some() || st.remaining > 0 {
+                return Err(Error::msg(
+                    "parallel sections must not overlap: the pool is already \
+                     running a section (nested or concurrent `run` call)",
+                ));
+            }
+            st.generation += 1;
+            st.job = Some(job);
+            st.participants = participants;
+            st.started = 0;
+            st.remaining = participants;
+            st.panic_msg = None;
+        }
+        self.shared.work.notify_all();
+
+        let mut st = lock(&self.shared.state);
+        while st.remaining > 0 {
+            st = self.shared.done.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        if let Some(msg) = st.panic_msg.take() {
+            st.poisoned = true;
+            return Err(Error::msg(format!("worker panicked during parallel section: {msg}")));
+        }
+        Ok(())
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = lock(&self.shared.state);
+            st.shutdown = true;
+        }
+        self.shared.work.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn every_participant_index_is_handed_out_exactly_once() {
+        let pool = WorkerPool::new(4);
+        let hits: Vec<AtomicUsize> = (0..4).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(4, &|i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        })
+        .unwrap();
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "index {i}");
+        }
+    }
+
+    #[test]
+    fn sections_reuse_the_same_threads() {
+        let pool = WorkerPool::new(2);
+        let total = AtomicUsize::new(0);
+        for _ in 0..100 {
+            pool.run(2, &|_| {
+                total.fetch_add(1, Ordering::SeqCst);
+            })
+            .unwrap();
+        }
+        assert_eq!(total.load(Ordering::SeqCst), 200);
+        assert_eq!(pool.generation(), 100);
+    }
+
+    #[test]
+    fn fewer_participants_than_workers() {
+        let pool = WorkerPool::new(8);
+        let count = AtomicUsize::new(0);
+        pool.run(3, &|i| {
+            assert!(i < 3);
+            count.fetch_add(1, Ordering::SeqCst);
+        })
+        .unwrap();
+        assert_eq!(count.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn oversized_section_is_an_error_not_a_silent_clamp() {
+        let pool = WorkerPool::new(2);
+        let e = pool.run(3, &|_| {}).unwrap_err();
+        assert!(e.to_string().contains("3 participants"), "{e}");
+        // The pool is still healthy afterwards.
+        pool.run(2, &|_| {}).unwrap();
+    }
+
+    #[test]
+    fn panic_is_reported_and_poisons_the_pool() {
+        let pool = WorkerPool::new(2);
+        let e = pool
+            .run(2, &|i| {
+                if i == 1 {
+                    panic!("lane 1 exploded");
+                }
+            })
+            .unwrap_err();
+        assert!(e.to_string().contains("lane 1 exploded"), "{e}");
+        let e2 = pool.run(1, &|_| {}).unwrap_err();
+        assert!(e2.to_string().contains("poisoned"), "{e2}");
+    }
+}

@@ -1,13 +1,16 @@
 //! The lane-parallel executor's regression guarantee: training results are
-//! **bitwise identical** for any worker count. Lanes own their gradient
-//! buffers and RNG streams, and the executor reduces per-lane gradients in
-//! lane order on the coordinating thread — so neither scheduling nor f32
-//! non-associativity can leak into the results.
+//! **bitwise identical** for any worker count, spawn mode (persistent pool
+//! vs per-section scoped threads) and prefetch setting (async feeder vs
+//! inline sampling). Lanes own their gradient buffers and RNG streams, the
+//! executor reduces per-lane gradients in lane order on the coordinating
+//! thread, and the feeder draws from cloned data streams in lane order — so
+//! neither scheduling, f32 non-associativity nor prefetch timing can leak
+//! into the results.
 
 use snap_rtrl::cells::Arch;
 use snap_rtrl::data::Corpus;
 use snap_rtrl::grad::Method;
-use snap_rtrl::train::{train_charlm, train_copy, TrainConfig, TrainResult};
+use snap_rtrl::train::{train_charlm, train_copy, SpawnMode, TrainConfig, TrainResult};
 
 fn charlm_cfg(method: Method, truncation: usize, workers: usize) -> TrainConfig {
     TrainConfig {
@@ -122,4 +125,101 @@ fn worker_count_zero_means_auto_and_stays_deterministic() {
     let base = train_charlm(&charlm_cfg(Method::Snap(1), 0, 1), &corpus);
     let auto = train_charlm(&charlm_cfg(Method::Snap(1), 0, 0), &corpus);
     assert_curves_bitwise_equal(&base, &auto, "workers=0 (auto)");
+}
+
+#[test]
+fn charlm_pool_and_feeder_identical_for_workers_1_2_4_16_prefetch_on_off() {
+    // Small truncation windows drive many short pool sections per sequence —
+    // the configuration the persistent pool exists for. Every combination of
+    // worker count and prefetch mode must train the same model bit for bit.
+    let corpus = Corpus::synthetic(20_000, 21);
+    let mut base_cfg = charlm_cfg(Method::Snap(1), 4, 1);
+    base_cfg.prefetch = false;
+    let base = train_charlm(&base_cfg, &corpus);
+    for workers in [1usize, 2, 4, 16] {
+        for prefetch in [false, true] {
+            let mut cfg = charlm_cfg(Method::Snap(1), 4, workers);
+            cfg.prefetch = prefetch;
+            let res = train_charlm(&cfg, &corpus);
+            assert_curves_bitwise_equal(
+                &base,
+                &res,
+                &format!("pool+feeder workers={workers} prefetch={prefetch}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn charlm_per_section_spawning_matches_the_persistent_pool_bitwise() {
+    // The spawn mode is a throughput knob, not a semantics knob: the legacy
+    // per-section engine and the pool must agree exactly.
+    let corpus = Corpus::synthetic(20_000, 22);
+    let base = train_charlm(&charlm_cfg(Method::Snap(1), 8, 1), &corpus);
+    for workers in [2usize, 4] {
+        for spawn in [SpawnMode::Persistent, SpawnMode::PerSection] {
+            let mut cfg = charlm_cfg(Method::Snap(1), 8, workers);
+            cfg.spawn = spawn;
+            let res = train_charlm(&cfg, &corpus);
+            assert_curves_bitwise_equal(&base, &res, &format!("{spawn:?} workers={workers}"));
+        }
+    }
+}
+
+#[test]
+fn copy_full_unroll_pool_and_feeder_identical_for_workers_1_2_4_16_prefetch_on_off() {
+    // Copy sequences flow through the feeder too (level-stamped specs); the
+    // work-stealing pool sections must stay deterministic around it.
+    let mk = |workers: usize, prefetch: bool| TrainConfig {
+        arch: Arch::Gru,
+        k: 16,
+        method: Method::Snap(1),
+        lr: 3e-3,
+        batch: 8,
+        truncation: 0,
+        steps: 25,
+        seed: 45,
+        readout_hidden: 32,
+        log_every: 5,
+        workers,
+        prefetch,
+        ..Default::default()
+    };
+    let base = train_copy(&mk(1, false));
+    for workers in [1usize, 2, 4, 16] {
+        for prefetch in [false, true] {
+            let res = train_copy(&mk(workers, prefetch));
+            assert_curves_bitwise_equal(
+                &base,
+                &res,
+                &format!("copy workers={workers} prefetch={prefetch}"),
+            );
+            assert_eq!(base.final_level, res.final_level);
+        }
+    }
+}
+
+#[test]
+fn copy_sequential_online_schedule_unchanged_by_prefetch() {
+    // workers=1 Copy-online is the paper-faithful sequential walk; routing
+    // its data through the feeder must not move a single update.
+    let mk = |prefetch: bool| TrainConfig {
+        arch: Arch::Gru,
+        k: 16,
+        method: Method::Snap(1),
+        lr: 3e-3,
+        batch: 4,
+        truncation: 1,
+        steps: 40,
+        seed: 46,
+        readout_hidden: 32,
+        log_every: 8,
+        workers: 1,
+        prefetch,
+        ..Default::default()
+    };
+    let base = train_copy(&mk(false));
+    let res = train_copy(&mk(true));
+    assert_curves_bitwise_equal(&base, &res, "copy online prefetch");
+    assert_eq!(base.final_level, res.final_level);
 }

@@ -46,7 +46,10 @@ fn gen_case(rng: &mut Pcg32) -> Case {
 
 fn run_algo(
     case: &Case,
-    mut build: impl for<'a> FnMut(&'a dyn snap_rtrl::cells::Cell, &mut Pcg32) -> Box<dyn GradAlgo + 'a>,
+    mut build: impl for<'a> FnMut(
+        &'a dyn snap_rtrl::cells::Cell,
+        &mut Pcg32,
+    ) -> Box<dyn GradAlgo + 'a>,
 ) -> Vec<f32> {
     // NOTE: lifetime juggling — rebuild everything per call from the seed.
     let mut rng = Pcg32::seeded(case.seed);

@@ -1,0 +1,157 @@
+//! Stress and failure-mode coverage for the persistent worker pool
+//! (`train::pool::WorkerPool`) and its executor integration: thousands of
+//! short sections must hand generations over without deadlock, lane counts
+//! below the worker count must clamp instead of over-spawning, and a
+//! panicking job must poison the pool with a clear error instead of
+//! hanging the coordinator.
+
+use snap_rtrl::cells::{Arch, Cell};
+use snap_rtrl::grad::Method;
+use snap_rtrl::models::Readout;
+use snap_rtrl::tensor::rng::Pcg32;
+use snap_rtrl::train::{LaneExecutor, SpawnMode, WorkerPool};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+#[test]
+fn a_thousand_short_sections_with_varying_participants() {
+    let pool = WorkerPool::new(4);
+    let total = AtomicUsize::new(0);
+    let mut expected = 0usize;
+    for it in 0..1000usize {
+        let participants = 1 + (it % 4);
+        pool.run(participants, &|wi| {
+            assert!(wi < participants, "index {wi} out of section of {participants}");
+            total.fetch_add(1, Ordering::SeqCst);
+        })
+        .unwrap();
+        expected += participants;
+        // Generation handoff: every section is exactly one generation.
+        assert_eq!(pool.generation(), it as u64 + 1);
+    }
+    assert_eq!(total.load(Ordering::SeqCst), expected);
+}
+
+#[test]
+fn single_worker_pool_still_completes_sections() {
+    let pool = WorkerPool::new(1);
+    let hits = AtomicUsize::new(0);
+    for _ in 0..200 {
+        pool.run(1, &|wi| {
+            assert_eq!(wi, 0);
+            hits.fetch_add(1, Ordering::SeqCst);
+        })
+        .unwrap();
+    }
+    assert_eq!(hits.load(Ordering::SeqCst), 200);
+}
+
+#[test]
+fn panicking_job_poisons_the_pool_with_a_clear_error() {
+    let pool = WorkerPool::new(2);
+    let err = pool
+        .run(2, &|wi| {
+            if wi == 0 {
+                panic!("deliberate stress-test panic");
+            }
+        })
+        .unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("worker panicked"), "{msg}");
+    assert!(msg.contains("deliberate stress-test panic"), "{msg}");
+    // The pool refuses further sections instead of hanging or computing on
+    // half-updated lanes.
+    let err2 = pool.run(1, &|_| {}).unwrap_err();
+    assert!(err2.to_string().contains("poisoned"), "{err2}");
+}
+
+fn stress_exec<'c>(cell: &'c dyn Cell, readout: &Readout, lanes: usize) -> LaneExecutor<'c> {
+    let mut rng = Pcg32::seeded(7);
+    LaneExecutor::with_mode(
+        cell,
+        Method::Snap(1),
+        readout,
+        lanes,
+        16,
+        SpawnMode::Persistent,
+        &mut rng,
+    )
+}
+
+#[test]
+fn executor_repeated_short_sections_one_to_four_lanes() {
+    // 1–4 lanes under 16 configured workers, 1000 tiny sections each: the
+    // shape of a fully-online truncation run. Counts must add up exactly
+    // and nothing may deadlock.
+    let mut rng = Pcg32::seeded(3);
+    let cell = Arch::Gru.build(6, 3, 1.0, &mut rng);
+    let readout = Readout::new(6, 8, 4, &mut rng);
+    for lanes in 1usize..=4 {
+        let mut exec = stress_exec(cell.as_ref(), &readout, lanes);
+        for _ in 0..1000 {
+            exec.for_each_lane(|_, slot| slot.tokens += 1);
+        }
+        assert_eq!(exec.tokens_seen(), 1000 * lanes as u64, "lanes={lanes}");
+        if lanes > 1 {
+            let pool = exec.pool().expect("pool for multi-lane executor");
+            assert_eq!(pool.workers(), lanes.min(16));
+            assert_eq!(pool.generation(), 1000);
+        }
+    }
+}
+
+#[test]
+fn one_lane_sixteen_workers_work_stealing_regression() {
+    // Regression for the over-spawn bug: with a single lane the stealing
+    // section must stay on the inline path (no pool, no spawns) and visit
+    // the lane exactly once per call.
+    let mut rng = Pcg32::seeded(4);
+    let cell = Arch::Gru.build(6, 3, 1.0, &mut rng);
+    let readout = Readout::new(6, 8, 4, &mut rng);
+    let mut exec = stress_exec(cell.as_ref(), &readout, 1);
+    assert!(exec.pool().is_none(), "1 lane must not allocate a pool");
+    for _ in 0..1000 {
+        exec.for_each_lane_stealing(|i, slot| {
+            assert_eq!(i, 0);
+            slot.tokens += 1;
+        });
+    }
+    assert_eq!(exec.tokens_seen(), 1000);
+}
+
+#[test]
+fn two_lanes_sixteen_workers_clamps_the_pool() {
+    let mut rng = Pcg32::seeded(5);
+    let cell = Arch::Gru.build(6, 3, 1.0, &mut rng);
+    let readout = Readout::new(6, 8, 4, &mut rng);
+    let mut exec = stress_exec(cell.as_ref(), &readout, 2);
+    assert_eq!(exec.pool().expect("pool").workers(), 2);
+    for _ in 0..500 {
+        exec.for_each_lane_stealing(|_, slot| slot.tokens += 1);
+        exec.for_each_lane(|_, slot| slot.tokens += 1);
+    }
+    assert_eq!(exec.tokens_seen(), 2 * 1000);
+}
+
+#[test]
+fn executor_panics_cleanly_when_a_lane_job_panics() {
+    // The executor re-raises the pool's poisoned-section error as a panic
+    // on the coordinating thread (matching the old thread::scope engine) —
+    // the process must not hang waiting for workers.
+    let result = std::panic::catch_unwind(|| {
+        let mut rng = Pcg32::seeded(6);
+        let cell = Arch::Gru.build(6, 3, 1.0, &mut rng);
+        let readout = Readout::new(6, 8, 4, &mut rng);
+        let mut exec = stress_exec(cell.as_ref(), &readout, 4);
+        exec.for_each_lane(|i, _slot| {
+            if i == 3 {
+                panic!("lane job blew up");
+            }
+        });
+    });
+    let payload = result.expect_err("executor must propagate the panic");
+    let msg = payload
+        .downcast_ref::<String>()
+        .cloned()
+        .unwrap_or_else(|| "non-string payload".to_string());
+    assert!(msg.contains("lane job blew up"), "{msg}");
+}
