@@ -1,0 +1,111 @@
+//! Dataset-ingestion throughput: how fast the streaming sources
+//! (`data::stream`) hand bytes to the training loop.
+//!
+//! Two sweeps over the same corpus materialised in memory and as a temp
+//! file read through [`FileSource`] at several chunk sizes:
+//!
+//! * **sample_crop** — random crops/sec (the char-LM hot path: one offset
+//!   draw + one bounded window read per crop). Small chunks force most
+//!   crops across chunk boundaries and stress the LRU; 1 MiB chunks should
+//!   track the in-memory source closely once the file is cache-resident.
+//! * **scan** — sequential 64 KiB windows over the whole source (the
+//!   evaluation/preprocessing access pattern), reported in MB/s.
+//!
+//! Every source serves bitwise-identical bytes (asserted at startup), so
+//! rows differ only in wall-clock.
+//!
+//! `--json PATH` writes machine-readable rows (uploaded by CI bench-smoke
+//! as `BENCH_ingest.json`).
+//!
+//! Run: `cargo bench --bench ingest_throughput [-- --bytes 4000000 --json out.json]`
+
+use snap_rtrl::benchutil::{bench, flag_str, flag_usize, report, write_bench_json, JsonObj};
+use snap_rtrl::data::{ByteSource, Corpus, FileSource};
+use snap_rtrl::tensor::rng::Pcg32;
+use std::time::Duration;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    // Floor keeps the startup equality probes and the 1024-byte crops valid.
+    let bytes = flag_usize(&args, "--bytes").unwrap_or(4_000_000).max(4096);
+    let json_path = flag_str(&args, "--json");
+    let budget = Duration::from_millis(200);
+    let mut rows: Vec<JsonObj> = Vec::new();
+
+    println!("# ingest_throughput — streaming sources over a {bytes}-byte corpus\n");
+
+    let corpus = Corpus::synthetic(bytes, 1234);
+    let tmp = std::env::temp_dir().join(format!("snap_rtrl_ingest_{}.bin", std::process::id()));
+    std::fs::write(&tmp, corpus.bytes()).expect("writing temp corpus file");
+
+    let mut sources: Vec<(String, Box<dyn ByteSource>)> = vec![(
+        "memory".to_string(),
+        Box::new(Corpus::from_bytes(corpus.bytes().to_vec())),
+    )];
+    for (chunk_len, max_chunks) in [(4 << 10, 8), (64 << 10, 8), (1 << 20, 8)] {
+        let label = format!("file-chunk{}KiB", chunk_len >> 10);
+        let src = FileSource::with_chunking(&tmp, chunk_len, max_chunks)
+            .expect("opening temp corpus file");
+        sources.push((label, Box::new(src)));
+    }
+
+    // Every source must serve the same bytes before we time anything.
+    for (label, src) in &sources {
+        assert_eq!(src.len_bytes() as usize, bytes, "{label}");
+        assert_eq!(src.read_window(17, 96), corpus.bytes()[17..113].to_vec(), "{label}");
+    }
+
+    println!("sample_crop sweep — random crops (crop draws from one shared Pcg32 stream)");
+    for (label, src) in &sources {
+        for crop_len in [128usize, 1024] {
+            let mut rng = Pcg32::seeded(7);
+            let t = bench(3, budget, || src.sample_crop(crop_len, &mut rng));
+            let crops_per_sec = t.per_sec();
+            let mb_per_sec = crops_per_sec * (crop_len + 1) as f64 / 1e6;
+            report(
+                &format!("sample_crop/{label}/len{crop_len}"),
+                &t,
+                &format!("{mb_per_sec:.1} MB/s"),
+            );
+            rows.push(
+                JsonObj::new()
+                    .str("sweep", "sample_crop")
+                    .str("source", label)
+                    .int("crop_len", crop_len as u64)
+                    .num("crops_per_sec", crops_per_sec)
+                    .num("mb_per_sec", mb_per_sec),
+            );
+        }
+    }
+
+    println!("\nscan sweep — sequential 64 KiB windows over the whole source");
+    let window = (64usize << 10).min(bytes);
+    for (label, src) in &sources {
+        let t = bench(1, budget, || {
+            let mut checksum = 0u64;
+            let mut off = 0u64;
+            while off + window as u64 <= src.len_bytes() {
+                let w = src.read_window(off, window);
+                checksum = checksum.wrapping_add(w[0] as u64 + w[window - 1] as u64);
+                off += window as u64;
+            }
+            checksum
+        });
+        let mb_per_sec = t.per_sec() * bytes as f64 / 1e6;
+        report(&format!("scan/{label}"), &t, &format!("{mb_per_sec:.0} MB/s"));
+        rows.push(
+            JsonObj::new()
+                .str("sweep", "scan")
+                .str("source", label)
+                .int("window", window as u64)
+                .num("mb_per_sec", mb_per_sec),
+        );
+    }
+
+    if let Some(path) = json_path {
+        let meta = JsonObj::new().int("bytes", bytes as u64);
+        write_bench_json(path, "ingest_throughput", &meta, &rows).expect("writing bench json");
+        println!("\nwrote {path}");
+    }
+    std::fs::remove_file(&tmp).ok();
+}

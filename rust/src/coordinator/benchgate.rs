@@ -1,0 +1,624 @@
+//! Bench-regression gate: `repro bench-gate` diffs a fresh `BENCH_*.json`
+//! (written by the bench binaries via `benchutil::write_bench_json`) against
+//! a committed baseline under `rust/benches/baselines/` and fails on a
+//! throughput regression beyond the tolerance (CI default: 25% tokens/sec).
+//!
+//! ## Matching
+//!
+//! Rows are matched by their **identity fields** — everything except the
+//! measurement fields (`tokens_per_sec`, `wall_s`, `speedup_vs_workers1`,
+//! `pool_gain`, `final_level`, `crops_per_sec`, `mb_per_sec`). Baseline rows
+//! missing from the current run are skipped with a warning (runner core
+//! counts prune worker sweeps); current rows absent from the baseline are
+//! new coverage and ignored. At least one row must match or the gate fails.
+//!
+//! ## Normalisation
+//!
+//! Absolute tokens/sec are machine-dependent, and CI runners are
+//! heterogeneous. With `--normalize true` every row's metric is divided by
+//! the **median metric of its own file** before comparison, so the gate
+//! fires on *relative* regressions (a mode, worker count or method getting
+//! slower than its peers) and is immune to a uniformly faster/slower
+//! runner. The trade-off — a perfectly uniform slowdown of every row is
+//! invisible — is accepted: absolute trajectories are tracked by the
+//! uploaded artifacts. Run without `--normalize` locally, where baseline
+//! and current come from the same machine.
+//!
+//! ## Arming
+//!
+//! A baseline whose `meta` carries `"provisional": true` (the synthesized
+//! seed baselines committed before any CI run) downgrades failures to
+//! warnings so invented numbers cannot block unrelated PRs. The bench
+//! binaries never emit that flag, so overwriting the baseline with a real
+//! CI artifact **automatically arms the gate**. `--strict true` treats a
+//! provisional baseline as armed anyway. The CI step is skipped entirely
+//! when the PR carries the `perf-override` label (the documented escape
+//! hatch for intentional trade-offs).
+
+use crate::coordinator::cli::Args;
+use crate::coordinator::report::Table;
+use crate::errors::{Context as _, Result};
+
+// ---------------------------------------------------------------------------
+// Minimal JSON (offline: no serde). Covers everything write_bench_json emits
+// plus the standard scalar/array/object grammar.
+// ---------------------------------------------------------------------------
+
+/// A parsed JSON value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while self.i < self.b.len() && self.b[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Result<u8> {
+        self.skip_ws();
+        self.b.get(self.i).copied().context("unexpected end of JSON input")
+    }
+
+    fn eat(&mut self, want: u8) -> Result<()> {
+        let got = self.peek()?;
+        crate::ensure!(
+            got == want,
+            "expected '{}' at byte {}, found '{}'",
+            want as char,
+            self.i,
+            got as char
+        );
+        self.i += 1;
+        Ok(())
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.literal("true", Json::Bool(true)),
+            b'f' => self.literal("false", Json::Bool(false)),
+            b'n' => self.literal("null", Json::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn literal(&mut self, word: &str, out: Json) -> Result<Json> {
+        self.skip_ws();
+        crate::ensure!(
+            self.b[self.i..].starts_with(word.as_bytes()),
+            "bad literal at byte {}",
+            self.i
+        );
+        self.i += word.len();
+        Ok(out)
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        self.skip_ws();
+        let start = self.i;
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')
+        {
+            self.i += 1;
+        }
+        let text = std::str::from_utf8(&self.b[start..self.i])
+            .ok()
+            .context("non-UTF8 number")?;
+        let v: f64 = text
+            .parse()
+            .ok()
+            .with_context(|| format!("bad JSON number '{text}' at byte {start}"))?;
+        Ok(Json::Num(v))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            let c = *self.b.get(self.i).context("unterminated JSON string")?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let e = *self.b.get(self.i).context("truncated escape")?;
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            crate::ensure!(self.i + 4 <= self.b.len(), "truncated \\u escape");
+                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])
+                                .ok()
+                                .context("non-UTF8 \\u escape")?;
+                            let code = u32::from_str_radix(hex, 16)
+                                .ok()
+                                .with_context(|| format!("bad \\u escape '{hex}'"))?;
+                            self.i += 4;
+                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        }
+                        other => crate::bail!("unknown escape '\\{}'", other as char),
+                    }
+                }
+                _ => {
+                    // Copy raw bytes (UTF-8 multibyte sequences pass through).
+                    let start = self.i - 1;
+                    while self.i < self.b.len()
+                        && self.b[self.i] != b'"'
+                        && self.b[self.i] != b'\\'
+                    {
+                        self.i += 1;
+                    }
+                    out.push_str(
+                        std::str::from_utf8(&self.b[start..self.i])
+                            .ok()
+                            .context("non-UTF8 JSON string")?,
+                    );
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.eat(b'[')?;
+        let mut items = Vec::new();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            match self.peek()? {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    return Ok(Json::Arr(items));
+                }
+                other => crate::bail!("expected ',' or ']' in array, found '{}'", other as char),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.eat(b'{')?;
+        let mut fields = Vec::new();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.eat(b':')?;
+            fields.push((key, self.value()?));
+            match self.peek()? {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                other => crate::bail!("expected ',' or '}}' in object, found '{}'", other as char),
+            }
+        }
+    }
+}
+
+/// Parse a JSON document (the subset/superset needed for BENCH files).
+pub fn parse_json(text: &str) -> Result<Json> {
+    let mut p = Parser { b: text.as_bytes(), i: 0 };
+    let v = p.value()?;
+    p.skip_ws();
+    crate::ensure!(p.i == p.b.len(), "trailing bytes after JSON document at {}", p.i);
+    Ok(v)
+}
+
+// ---------------------------------------------------------------------------
+// Gate
+// ---------------------------------------------------------------------------
+
+/// Fields that carry measurements, not identity.
+const MEASUREMENT_KEYS: &[&str] = &[
+    "tokens_per_sec",
+    "wall_s",
+    "speedup_vs_workers1",
+    "pool_gain",
+    "final_level",
+    "crops_per_sec",
+    "mb_per_sec",
+];
+
+/// Metric candidates, in preference order.
+const METRIC_KEYS: &[&str] = &["tokens_per_sec", "crops_per_sec", "mb_per_sec"];
+
+/// One BENCH_*.json file, decoded.
+pub struct BenchFile {
+    pub bench: String,
+    /// `meta.provisional == true`: synthesized seed baseline, warn-only.
+    pub provisional: bool,
+    /// `(identity, metric)` per row that has a metric.
+    pub rows: Vec<(String, f64)>,
+}
+
+impl BenchFile {
+    pub fn load(path: &str) -> Result<BenchFile> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading bench file '{path}'"))?;
+        let doc = parse_json(&text).map_err(|e| e.context(format!("parsing bench file '{path}'")))?;
+        let bench = doc
+            .get("bench")
+            .and_then(Json::as_str)
+            .with_context(|| format!("'{path}' has no \"bench\" field"))?
+            .to_string();
+        let provisional = matches!(
+            doc.get("meta").and_then(|m| m.get("provisional")),
+            Some(Json::Bool(true))
+        );
+        let rows_json = doc
+            .get("rows")
+            .and_then(Json::as_arr)
+            .with_context(|| format!("'{path}' has no \"rows\" array"))?;
+        let mut rows = Vec::new();
+        for row in rows_json {
+            if let (Some(id), Some(metric)) = (row_identity(row), row_metric(row)) {
+                rows.push((id, metric));
+            }
+        }
+        Ok(BenchFile { bench, provisional, rows })
+    }
+}
+
+/// Identity string: every non-measurement field, sorted by key so field
+/// order in the file cannot break matching.
+fn row_identity(row: &Json) -> Option<String> {
+    let Json::Obj(fields) = row else { return None };
+    let mut parts: Vec<String> = fields
+        .iter()
+        .filter(|(k, _)| !MEASUREMENT_KEYS.contains(&k.as_str()))
+        .map(|(k, v)| match v {
+            Json::Str(s) => format!("{k}={s}"),
+            Json::Num(n) => format!("{k}={n}"),
+            other => format!("{k}={other:?}"),
+        })
+        .collect();
+    parts.sort();
+    Some(parts.join(" "))
+}
+
+fn row_metric(row: &Json) -> Option<f64> {
+    METRIC_KEYS
+        .iter()
+        .find_map(|k| row.get(k).and_then(Json::as_f64))
+        .filter(|v| v.is_finite() && *v > 0.0)
+}
+
+/// One compared row.
+pub struct GateRow {
+    pub identity: String,
+    pub baseline: f64,
+    pub current: f64,
+    /// Fractional drop of the (possibly normalised) metric; negative = faster.
+    pub drop: f64,
+    pub failed: bool,
+}
+
+/// The gate's verdict over all matched rows.
+pub struct GateOutcome {
+    pub rows: Vec<GateRow>,
+    pub skipped_missing: usize,
+    pub tolerance: f64,
+    pub normalized: bool,
+}
+
+impl GateOutcome {
+    pub fn failures(&self) -> impl Iterator<Item = &GateRow> {
+        self.rows.iter().filter(|r| r.failed)
+    }
+}
+
+fn median(mut xs: Vec<f64>) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).expect("finite metrics"));
+    xs[xs.len() / 2]
+}
+
+/// Compare `current` against `baseline`: a matched row fails when its
+/// (normalised) metric dropped by more than `tolerance`.
+pub fn gate(
+    baseline: &BenchFile,
+    current: &BenchFile,
+    tolerance: f64,
+    normalize: bool,
+) -> Result<GateOutcome> {
+    crate::ensure!(
+        baseline.bench == current.bench,
+        "bench mismatch: baseline is '{}', current is '{}'",
+        baseline.bench,
+        current.bench
+    );
+    let mut matched: Vec<(String, f64, f64)> = Vec::new();
+    let mut skipped_missing = 0usize;
+    for (id, base_v) in &baseline.rows {
+        match current.rows.iter().find(|(cid, _)| cid == id) {
+            Some((_, cur_v)) => matched.push((id.clone(), *base_v, *cur_v)),
+            None => skipped_missing += 1,
+        }
+    }
+    crate::ensure!(
+        !matched.is_empty(),
+        "no comparable rows between baseline and current '{}' output \
+         (identity fields changed? regenerate the baseline)",
+        current.bench
+    );
+    let (base_ref, cur_ref) = if normalize {
+        (
+            median(matched.iter().map(|(_, b, _)| *b).collect()),
+            median(matched.iter().map(|(_, _, c)| *c).collect()),
+        )
+    } else {
+        (1.0, 1.0)
+    };
+    let rows = matched
+        .into_iter()
+        .map(|(identity, baseline_v, current_v)| {
+            let rel = (current_v / cur_ref) / (baseline_v / base_ref);
+            let drop = 1.0 - rel;
+            GateRow {
+                identity,
+                baseline: baseline_v,
+                current: current_v,
+                drop,
+                failed: drop > tolerance,
+            }
+        })
+        .collect();
+    Ok(GateOutcome { rows, skipped_missing, tolerance, normalized: normalize })
+}
+
+/// Turn an outcome into a CLI exit: provisional baselines warn, armed
+/// baselines fail with the worst rows listed.
+pub fn enforce(outcome: &GateOutcome, provisional: bool, strict: bool) -> Result<()> {
+    let failures: Vec<&GateRow> = outcome.failures().collect();
+    if failures.is_empty() {
+        return Ok(());
+    }
+    if provisional && !strict {
+        println!(
+            "\nWARNING: {} row(s) regressed beyond {:.0}%, but the baseline is marked \
+             provisional (synthesized numbers). Refresh it from a CI bench-smoke artifact \
+             to arm the gate.",
+            failures.len(),
+            outcome.tolerance * 100.0
+        );
+        return Ok(());
+    }
+    let worst: Vec<String> = failures
+        .iter()
+        .map(|r| {
+            format!(
+                "  {:.1}% slower: {} ({:.0} -> {:.0})",
+                r.drop * 100.0,
+                r.identity,
+                r.baseline,
+                r.current
+            )
+        })
+        .collect();
+    crate::bail!(
+        "bench regression gate failed: {} row(s) regressed beyond {:.0}%{}:\n{}\n\
+         If the slowdown is an accepted trade-off, apply the 'perf-override' PR label \
+         (skips this step) or refresh rust/benches/baselines/.",
+        failures.len(),
+        outcome.tolerance * 100.0,
+        if outcome.normalized { " (median-normalized)" } else { "" },
+        worst.join("\n")
+    )
+}
+
+/// CLI entry: `repro bench-gate --baseline B --current C
+/// [--tolerance 0.25] [--normalize B] [--strict B]`.
+pub fn run_bench_gate(args: &Args) -> Result<()> {
+    let baseline_path = args.get("baseline").context("bench-gate needs --baseline <path>")?;
+    let current_path = args.get("current").context("bench-gate needs --current <path>")?;
+    let tolerance = args.f64_or("tolerance", 0.25);
+    let normalize = args.bool_or("normalize", false);
+    let strict = args.bool_or("strict", false);
+
+    let baseline = BenchFile::load(baseline_path)?;
+    let current = BenchFile::load(current_path)?;
+    let outcome = gate(&baseline, &current, tolerance, normalize)?;
+
+    println!(
+        "# bench-gate '{}' — {} rows compared, {} baseline rows unmatched, tolerance {:.0}%{}{}",
+        current.bench,
+        outcome.rows.len(),
+        outcome.skipped_missing,
+        tolerance * 100.0,
+        if normalize { ", median-normalized" } else { "" },
+        if baseline.provisional { ", PROVISIONAL baseline" } else { "" },
+    );
+    let mut tbl = Table::new(&["row", "baseline", "current", "drop", "verdict"]);
+    for r in &outcome.rows {
+        tbl.row(&[
+            r.identity.clone(),
+            format!("{:.0}", r.baseline),
+            format!("{:.0}", r.current),
+            format!("{:+.1}%", r.drop * 100.0),
+            if r.failed { "FAIL".into() } else { "ok".into() },
+        ]);
+    }
+    tbl.print();
+    enforce(&outcome, baseline.provisional, strict)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchutil::{write_bench_json, JsonObj};
+
+    fn file(rows: &[(&str, u64, f64)], provisional: bool) -> BenchFile {
+        let rows = rows
+            .iter()
+            .map(|(mode, workers, tps)| {
+                (format!("sweep=batch mode={mode} workers={workers}"), *tps)
+            })
+            .collect();
+        BenchFile { bench: "lane_throughput".into(), provisional, rows }
+    }
+
+    #[test]
+    fn parses_benchutil_output_roundtrip() {
+        let dir = std::env::temp_dir().join("snap_rtrl_benchgate_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bench.json");
+        let path = path.to_str().unwrap().to_string();
+        let meta = JsonObj::new().int("k", 48).str("note", "quote \" and\nnewline");
+        let rows = vec![
+            JsonObj::new().str("mode", "persistent").int("workers", 2).num("tokens_per_sec", 123.5),
+            JsonObj::new().str("mode", "per-section").int("workers", 2).num("tokens_per_sec", 99.0),
+        ];
+        write_bench_json(&path, "lane_throughput", &meta, &rows).unwrap();
+        let parsed = BenchFile::load(&path).unwrap();
+        assert_eq!(parsed.bench, "lane_throughput");
+        assert!(!parsed.provisional);
+        assert_eq!(parsed.rows.len(), 2);
+        assert_eq!(parsed.rows[0].0, "mode=persistent workers=2");
+        assert_eq!(parsed.rows[0].1, 123.5);
+    }
+
+    #[test]
+    fn parse_json_handles_scalars_arrays_escapes() {
+        assert_eq!(parse_json("null").unwrap(), Json::Null);
+        assert_eq!(parse_json(" [1, 2.5, -3e2] ").unwrap().as_arr().unwrap().len(), 3);
+        let s = parse_json(r#""a\"bA\n""#).unwrap();
+        assert_eq!(s.as_str().unwrap(), "a\"bA\n");
+        assert!(parse_json("{bad}").is_err());
+        assert!(parse_json("[1,]").is_err());
+        assert!(parse_json("{} trailing").is_err());
+    }
+
+    #[test]
+    fn deliberate_slowdown_trips_the_gate() {
+        // The acceptance demonstration: one row 40% slower than baseline
+        // must fail at 25% tolerance, in both absolute and normalized modes.
+        // Several unchanged rows keep the median anchored, as in the real
+        // sweeps (a lone changed row cannot drag the reference with it).
+        let base = file(
+            &[
+                ("persistent", 1, 1000.0),
+                ("persistent", 2, 2000.0),
+                ("persistent", 4, 3000.0),
+                ("persistent", 8, 4000.0),
+                ("persistent", 16, 5000.0),
+            ],
+            false,
+        );
+        let slow = file(
+            &[
+                ("persistent", 1, 1000.0),
+                ("persistent", 2, 2000.0),
+                ("persistent", 4, 3000.0),
+                ("persistent", 8, 4000.0),
+                ("persistent", 16, 3000.0), // 40% down
+            ],
+            false,
+        );
+        for normalize in [false, true] {
+            let outcome = gate(&base, &slow, 0.25, normalize).unwrap();
+            let failures: Vec<_> = outcome.failures().collect();
+            assert_eq!(failures.len(), 1, "normalize={normalize}");
+            assert!(failures[0].identity.contains("workers=16"));
+            let e = enforce(&outcome, false, false).unwrap_err();
+            assert!(e.to_string().contains("perf-override"), "{e}");
+        }
+    }
+
+    #[test]
+    fn small_variance_passes() {
+        let base = file(&[("persistent", 1, 1000.0), ("persistent", 4, 3000.0)], false);
+        let cur = file(&[("persistent", 1, 900.0), ("persistent", 4, 2800.0)], false);
+        let outcome = gate(&base, &cur, 0.25, false).unwrap();
+        assert_eq!(outcome.failures().count(), 0);
+        enforce(&outcome, false, false).unwrap();
+    }
+
+    #[test]
+    fn normalization_is_immune_to_a_uniformly_slower_host() {
+        // Every row exactly 2x slower (a weaker runner): absolute mode
+        // fails, normalized mode passes — the property CI relies on.
+        let base = file(&[("persistent", 1, 1000.0), ("persistent", 4, 3000.0)], false);
+        let halved = file(&[("persistent", 1, 500.0), ("persistent", 4, 1500.0)], false);
+        assert_eq!(gate(&base, &halved, 0.25, false).unwrap().failures().count(), 2);
+        assert_eq!(gate(&base, &halved, 0.25, true).unwrap().failures().count(), 0);
+    }
+
+    #[test]
+    fn provisional_baseline_warns_instead_of_failing() {
+        let base = file(&[("persistent", 1, 1000.0)], true);
+        let slow = file(&[("persistent", 1, 100.0)], true);
+        let outcome = gate(&base, &slow, 0.25, false).unwrap();
+        assert_eq!(outcome.failures().count(), 1);
+        enforce(&outcome, true, false).unwrap(); // provisional: warn only
+        assert!(enforce(&outcome, true, true).is_err()); // --strict arms it
+        assert!(enforce(&outcome, false, false).is_err()); // refreshed: armed
+    }
+
+    #[test]
+    fn missing_rows_are_skipped_but_empty_match_fails() {
+        let base = file(&[("persistent", 1, 1000.0), ("persistent", 8, 5000.0)], false);
+        let cur = file(&[("persistent", 1, 1000.0)], false);
+        let outcome = gate(&base, &cur, 0.25, false).unwrap();
+        assert_eq!(outcome.rows.len(), 1);
+        assert_eq!(outcome.skipped_missing, 1);
+        let none = file(&[("other-mode", 1, 1000.0)], false);
+        assert!(gate(&base, &none, 0.25, false).is_err());
+    }
+}

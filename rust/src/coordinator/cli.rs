@@ -97,9 +97,38 @@ Experiment commands (one per paper table/figure):
 
 Training commands:
   train    Char-LM single run    [--method --arch --k --sparsity --steps --lr --trunc --batch
-                                  --corpus --workers --prefetch]
+                                  --dataset --workers --prefetch]
   copy     Copy-task single run  [--method --arch --k --sparsity --steps --lr --trunc --batch
                                   --workers --prefetch]
+  file-lm  File-corpus preset: end-to-end char-LM over --dataset (required), writing
+           results/file_lm_metrics.json + file_lm_curve.csv — the CI dataset-smoke job
+           [--steps --k --batch --workers --seq-len]
+
+Dataset selection (char-LM commands: train, fig3, file-lm):
+  --dataset SPEC  where SPEC is one of
+                    synthetic[:BYTES[:SEED]]  deterministic Markov corpus (default:
+                                              synthetic:200000:1234)
+                    file:PATH                 stream one text/byte file; --valid-frac
+                                              (default 0.05) splits the tail off for
+                                              validation
+                    wikitext-dir:DIR          stream a WikiText-style directory holding
+                                              wiki.{train,valid,test}.tokens shards.
+                                              Point it at an extracted WikiText-103
+                                              download (wikitext-103-v1.zip, ~516 MB of
+                                              wiki.train.tokens) for the paper's §5.1/§5.3
+                                              workload: repro train --dataset
+                                              wikitext-dir:/data/wikitext-103
+  --lowercase B   byte-level ASCII lowercasing at read time (default false: passthrough)
+  --valid-frac F  validation fraction for single-file datasets (default 0.05)
+  --corpus PATH   legacy alias for --dataset file:PATH
+  File-backed datasets stream in bounded chunks (1 MiB x 8 resident by default) — no
+  whole-file load — and training is bitwise identical to an in-memory corpus of the
+  same bytes for any --workers/--prefetch/spawn combination.
+
+CI commands:
+  bench-gate  Diff a BENCH_*.json against a committed baseline; fails on throughput
+              regression beyond tolerance  [--baseline --current --tolerance 0.25
+              --normalize --strict]  (see rust/benches/baselines/README.md)
 
 Throughput knobs (training results are bitwise identical for any setting):
   --workers N     step the minibatch lanes on N threads from a persistent

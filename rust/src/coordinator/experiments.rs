@@ -2,17 +2,52 @@
 //! evaluation section (see DESIGN.md's experiment index). Every command
 //! prints the paper-shaped table on stdout and writes CSVs under results/.
 
+use crate::benchutil::{write_bench_json, JsonObj};
 use crate::cells::Arch;
 use crate::coordinator::analysis::{run_table4 as analysis_table4, Table4Config};
 use crate::coordinator::cli::Args;
-use crate::coordinator::report::{f2, f3, floats_h, mult, pct, write_csv, Table};
-use crate::data::Corpus;
+use crate::coordinator::report::{f2, f3, floats_h, mult, pct, results_dir, write_csv, Table};
+use crate::data::{Corpus, Dataset, DatasetOptions, DatasetSpec};
+use crate::errors::{Context as _, Result};
 use crate::grad::Method;
 use crate::sparse::pattern::{snap_pattern, Pattern};
 use crate::train::{
-    table1_memory, table1_time, train_charlm, train_copy, CostInputs, TrainConfig, TrainResult,
+    table1_memory, table1_time, train_charlm, train_charlm_streams, train_copy, CostInputs,
+    TrainConfig, TrainResult,
 };
 use crate::tensor::rng::Pcg32;
+
+// ---------------------------------------------------------------------------
+// Dataset resolution (the --dataset registry; see data::stream)
+// ---------------------------------------------------------------------------
+
+fn dataset_options(args: &Args) -> DatasetOptions {
+    DatasetOptions {
+        valid_frac: args.f64_or("valid-frac", 0.05),
+        lowercase: args.bool_or("lowercase", false),
+        ..Default::default()
+    }
+}
+
+/// Resolve `--dataset` (falling back to the legacy `--corpus PATH` alias,
+/// then to the synthetic default) into train/valid sources.
+fn dataset_from_args(args: &Args) -> Result<Dataset> {
+    let synthetic_default = || DatasetSpec::Synthetic {
+        bytes: args.usize_or("corpus-bytes", 200_000),
+        seed: args.u64_or("corpus-seed", 1234),
+    };
+    let spec = match args.get("dataset") {
+        // Bare "synthetic" keeps honoring --corpus-bytes/--corpus-seed;
+        // an explicit synthetic:BYTES[:SEED] spec pins them instead.
+        Some("synthetic") => synthetic_default(),
+        Some(s) => DatasetSpec::parse(s)?,
+        None => match args.get("corpus") {
+            Some(path) => DatasetSpec::File(path.into()),
+            None => synthetic_default(),
+        },
+    };
+    spec.load(&dataset_options(args))
+}
 
 // ---------------------------------------------------------------------------
 // Table 1 — asymptotic cost model + measured counters
@@ -112,31 +147,28 @@ fn measure_cost(arch: Arch, k: usize, input: usize, d: f64, m: Method) -> (usize
 // Figure 3 — char-LM learning curves (dense & 75% sparse)
 // ---------------------------------------------------------------------------
 
-pub fn run_fig3(args: &Args) {
+pub fn run_fig3(args: &Args) -> Result<()> {
     let side = args.str_or("side", "both");
     let steps = args.usize_or("steps", 300);
     let k = args.usize_or("k", 64);
     let batch = args.usize_or("batch", 1);
     let lr = args.f32_or("lr", 3e-3);
-    let corpus_len = args.usize_or("corpus-bytes", 200_000);
     let seed = args.u64_or("seed", 1);
-    let corpus = match args.get("corpus") {
-        Some(path) => Corpus::from_file(path).expect("reading --corpus file"),
-        None => Corpus::synthetic(corpus_len, 1234),
-    };
+    let ds = dataset_from_args(args)?;
 
     let workers = args.usize_or("workers", 1);
     if side == "dense" || side == "both" {
-        fig3_side(&corpus, false, steps, k, batch, lr, seed, workers);
+        fig3_side(&ds, false, steps, k, batch, lr, seed, workers);
     }
     if side == "sparse" || side == "both" {
-        fig3_side(&corpus, true, steps, k, batch, lr, seed, workers);
+        fig3_side(&ds, true, steps, k, batch, lr, seed, workers);
     }
+    Ok(())
 }
 
 #[allow(clippy::too_many_arguments)]
 fn fig3_side(
-    corpus: &Corpus,
+    ds: &Dataset,
     sparse: bool,
     steps: usize,
     k: usize,
@@ -176,7 +208,7 @@ fn fig3_side(
             workers,
             ..Default::default()
         };
-        (m, train_charlm(&cfg, corpus))
+        (m, train_charlm_streams(&cfg, ds.train.as_ref(), ds.valid.as_ref()))
     });
 
     let mut tbl = Table::new(&["method", "final train bpc", "final valid bpc"]);
@@ -600,16 +632,85 @@ fn average_curves(curves: &[Vec<(u64, f64)>]) -> Vec<(u64, f64)> {
 // Single-run commands
 // ---------------------------------------------------------------------------
 
-pub fn run_train(args: &Args) {
+pub fn run_train(args: &Args) -> Result<()> {
     let cfg = config_from_args(args);
-    let corpus = match args.get("corpus") {
-        Some(path) => Corpus::from_file(path).expect("reading --corpus"),
-        None => Corpus::synthetic(args.usize_or("corpus-bytes", 200_000), 1234),
-    };
-    println!("# char-LM: {} {} k={} d={} trunc={} steps={}",
-        cfg.method.name(), cfg.arch.name(), cfg.k, cfg.density, cfg.truncation, cfg.steps);
-    let res = train_charlm(&cfg, &corpus);
+    let ds = dataset_from_args(args)?;
+    println!("# char-LM: {} {} k={} d={} trunc={} steps={} dataset={}",
+        cfg.method.name(), cfg.arch.name(), cfg.k, cfg.density, cfg.truncation, cfg.steps,
+        ds.name);
+    let res = train_charlm_streams(&cfg, ds.train.as_ref(), ds.valid.as_ref());
     print_run(&res);
+    Ok(())
+}
+
+/// File-corpus preset (the CI `dataset-smoke` job): one end-to-end char-LM
+/// run over a file-backed `--dataset`, emitting machine-readable metrics to
+/// `results/file_lm_metrics.json` and the learning curve to
+/// `results/file_lm_curve.csv`.
+pub fn run_file_lm(args: &Args) -> Result<()> {
+    let spec_str = args
+        .get("dataset")
+        .context("file-lm needs --dataset file:PATH or wikitext-dir:DIR")?;
+    let spec = DatasetSpec::parse(spec_str)?;
+    crate::ensure!(
+        !matches!(spec, DatasetSpec::Synthetic { .. }),
+        "file-lm is the file-corpus preset; use 'train' for synthetic data"
+    );
+    let ds = spec.load(&dataset_options(args))?;
+    // Same flag wiring as `train`, at smoke-sized defaults.
+    let cfg = config_from_args_with(args, &TrainConfig {
+        k: 32,
+        lr: 3e-3,
+        batch: 4,
+        seq_len: 64,
+        steps: 40,
+        readout_hidden: 64,
+        embed_dim: 16,
+        ..Default::default()
+    });
+    println!(
+        "# file-lm: {} {} k={} over {} (train {} bytes, valid {} bytes)",
+        cfg.method.name(),
+        cfg.arch.name(),
+        cfg.k,
+        ds.name,
+        ds.train.len_bytes(),
+        ds.valid.len_bytes()
+    );
+    let t0 = std::time::Instant::now();
+    let res = train_charlm_streams(&cfg, ds.train.as_ref(), ds.valid.as_ref());
+    let wall = t0.elapsed().as_secs_f64();
+    print_run(&res);
+
+    let meta = JsonObj::new()
+        .str("dataset", &ds.name)
+        .int("train_bytes", ds.train.len_bytes())
+        .int("valid_bytes", ds.valid.len_bytes())
+        .str("method", &cfg.method.name())
+        .str("arch", cfg.arch.name())
+        .int("k", cfg.k as u64)
+        .int("batch", cfg.batch as u64)
+        .int("seq_len", cfg.seq_len as u64)
+        .int("steps", cfg.steps as u64)
+        .int("workers", cfg.workers as u64);
+    let row = JsonObj::new()
+        .num("final_train_bpc", res.final_train_bpc)
+        .num("final_valid_bpc", res.final_valid_bpc)
+        .int("tokens_seen", res.tokens_seen)
+        .num("wall_s", wall)
+        .num("tokens_per_sec", res.tokens_seen as f64 / wall);
+    let metrics_path = results_dir().join("file_lm_metrics.json");
+    write_bench_json(&metrics_path.to_string_lossy(), "file_lm", &meta, &[row])?;
+    let curve: Vec<Vec<String>> = res
+        .curve
+        .iter()
+        .map(|p| {
+            vec![p.x.to_string(), format!("{:.5}", p.train_bpc), format!("{:.5}", p.valid_bpc)]
+        })
+        .collect();
+    let csv_path = write_csv("file_lm_curve.csv", &["step", "train_bpc", "valid_bpc"], &curve);
+    println!("wrote {} and {}", metrics_path.display(), csv_path.display());
+    Ok(())
 }
 
 pub fn run_copy_cmd(args: &Args) {
@@ -629,26 +730,40 @@ not the sequential per-token schedule (see train::looper docs).",
 }
 
 fn config_from_args(args: &Args) -> TrainConfig {
-    TrainConfig {
-        arch: Arch::parse(&args.str_or("arch", "gru")).expect("bad --arch"),
-        k: args.usize_or("k", 64),
-        density: 1.0 - args.f64_or("sparsity", 0.0),
-        method: Method::parse(&args.str_or("method", "snap-1")).expect("bad --method"),
-        lr: args.f32_or("lr", 3e-3),
-        batch: args.usize_or("batch", 1),
-        seq_len: args.usize_or("seq-len", 128),
-        truncation: args.usize_or("trunc", 0),
-        steps: args.usize_or("steps", 200),
-        seed: args.u64_or("seed", 1),
-        readout_hidden: args.usize_or("readout-hidden", 256),
-        embed_dim: args.usize_or("embed-dim", 64),
-        log_every: args.usize_or("log-every", 10),
-        prune_to: args.get("prune-to").and_then(|v| v.parse().ok()),
-        prune_every: args.u64_or("prune-every", 1000),
-        prune_end_step: args.u64_or("prune-end", u64::MAX),
-        workers: args.usize_or("workers", 1),
-        prefetch: args.bool_or("prefetch", true),
+    config_from_args_with(args, &TrainConfig {
+        k: 64,
+        lr: 3e-3,
+        seq_len: 128,
+        readout_hidden: 256,
+        embed_dim: 64,
         ..Default::default()
+    })
+}
+
+/// Build a [`TrainConfig`] from the CLI flags, with unset flags falling
+/// back to `d` — one wiring shared by `train`, `copy` and `file-lm` so a
+/// new knob cannot drift between presets.
+fn config_from_args_with(args: &Args, d: &TrainConfig) -> TrainConfig {
+    TrainConfig {
+        arch: Arch::parse(&args.str_or("arch", d.arch.name())).expect("bad --arch"),
+        k: args.usize_or("k", d.k),
+        density: 1.0 - args.f64_or("sparsity", 1.0 - d.density),
+        method: Method::parse(&args.str_or("method", &d.method.name())).expect("bad --method"),
+        lr: args.f32_or("lr", d.lr),
+        batch: args.usize_or("batch", d.batch),
+        seq_len: args.usize_or("seq-len", d.seq_len),
+        truncation: args.usize_or("trunc", d.truncation),
+        steps: args.usize_or("steps", d.steps),
+        seed: args.u64_or("seed", d.seed),
+        readout_hidden: args.usize_or("readout-hidden", d.readout_hidden),
+        embed_dim: args.usize_or("embed-dim", d.embed_dim),
+        log_every: args.usize_or("log-every", d.log_every),
+        prune_to: args.get("prune-to").and_then(|v| v.parse().ok()).or(d.prune_to),
+        prune_every: args.u64_or("prune-every", d.prune_every),
+        prune_end_step: args.u64_or("prune-end", d.prune_end_step),
+        workers: args.usize_or("workers", d.workers),
+        prefetch: args.bool_or("prefetch", d.prefetch),
+        ..d.clone()
     }
 }
 

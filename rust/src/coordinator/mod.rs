@@ -1,7 +1,9 @@
 //! L3 coordinator: CLI, experiment registry (one command per paper
-//! table/figure), reporting, and the approximation-quality analysis.
+//! table/figure), reporting, the approximation-quality analysis, and the
+//! CI bench-regression gate.
 
 pub mod analysis;
+pub mod benchgate;
 pub mod cli;
 pub mod experiments;
 pub mod report;
@@ -14,13 +16,15 @@ use crate::errors::Result;
 pub fn dispatch(args: &Args) -> Result<()> {
     match args.command.as_str() {
         "table1" => experiments::run_table1(args),
-        "fig3" => experiments::run_fig3(args),
+        "fig3" => experiments::run_fig3(args)?,
         "table2" | "fig4" => experiments::run_table2(args),
         "table3" => experiments::run_table3(args),
         "table4" | "fig6" => experiments::run_table4(args),
         "fig5" => experiments::run_fig5(args),
-        "train" => experiments::run_train(args),
+        "train" => experiments::run_train(args)?,
         "copy" => experiments::run_copy_cmd(args),
+        "file-lm" => experiments::run_file_lm(args)?,
+        "bench-gate" => benchgate::run_bench_gate(args)?,
         "aot-demo" => crate::runtime::demo::run_aot_demo(args)?,
         "info" => info(),
         "help" | "--help" | "-h" => println!("{USAGE}"),

@@ -7,8 +7,10 @@
 //! what §5.1 exercises — 256-way next-byte prediction with non-trivial
 //! short- and mid-range statistical structure — while remaining fully
 //! reproducible from a seed. `Corpus::from_file` loads real text when the
-//! user has some.
+//! user has some; for corpora that should not be resident in memory
+//! (WikiText-103 scale), see the streaming sources in [`crate::data::stream`].
 
+use crate::errors::{Context as _, Result};
 use crate::tensor::rng::Pcg32;
 use std::collections::HashMap;
 
@@ -47,8 +49,14 @@ impl Corpus {
         Corpus { data }
     }
 
-    pub fn from_file(path: &str) -> std::io::Result<Self> {
-        Ok(Corpus::from_bytes(std::fs::read(path)?))
+    /// Load a whole file into memory. The error names the offending path —
+    /// a bare `io::Error` ("No such file or directory") is useless from the
+    /// CLI, where the path came from a `--corpus`/`--dataset` flag.
+    pub fn from_file(path: &str) -> Result<Self> {
+        let data =
+            std::fs::read(path).with_context(|| format!("reading corpus file '{path}'"))?;
+        crate::ensure!(!data.is_empty(), "corpus file '{path}' is empty");
+        Ok(Corpus::from_bytes(data))
     }
 
     /// Deterministic synthetic corpus of `len` bytes (order-3 Markov chain
@@ -202,6 +210,26 @@ mod tests {
             assert_eq!(crop[0], 0);
             assert_eq!(crop[64], 64);
         }
+    }
+
+    #[test]
+    fn from_file_error_names_the_path() {
+        let e = Corpus::from_file("/definitely/not/a/corpus.txt").unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("/definitely/not/a/corpus.txt"), "{msg}");
+        assert!(format!("{e:?}").contains("caused by"), "io source should be chained");
+    }
+
+    #[test]
+    fn from_file_rejects_empty_files_with_the_path() {
+        // Process-unique name: dev and release test runs may race in /tmp.
+        let name = format!("snap_rtrl_empty_corpus_test_{}.txt", std::process::id());
+        let p = std::env::temp_dir().join(name);
+        std::fs::write(&p, b"").unwrap();
+        let e = Corpus::from_file(p.to_str().unwrap()).unwrap_err();
+        assert!(e.to_string().contains("empty"), "{e}");
+        assert!(e.to_string().contains("snap_rtrl_empty_corpus_test"), "{e}");
+        std::fs::remove_file(&p).ok();
     }
 
     #[test]

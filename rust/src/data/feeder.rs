@@ -34,6 +34,12 @@
 //! the *same* spec sequence — just inline at `recv` time instead of ahead on
 //! the thread — the two modes produce bit-identical batches, which is the
 //! regression guarantee extended in `rust/tests/executor_determinism.rs`.
+//!
+//! The char-LM generator samples crops through `data::stream`'s
+//! [`ByteSource`](crate::data::stream::ByteSource) abstraction, so the same
+//! double-buffering (and the same determinism guarantee) covers in-memory
+//! corpora and chunked file shards alike: a crop is one offset draw from the
+//! lane's stream plus a bounded window read, wherever the bytes live.
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};

@@ -1,12 +1,15 @@
 //! Data pipelines: byte corpora for char-LM (§5.1), the Copy task with its
-//! curriculum controller (§5.2), and the async double-buffered feeder that
-//! materialises the next minibatch while the executor computes the current
-//! one.
+//! curriculum controller (§5.2), the streaming shard-aware sources behind
+//! the `--dataset` registry (synthetic / single file / WikiText-style
+//! directory), and the async double-buffered feeder that materialises the
+//! next minibatch while the executor computes the current one.
 
 pub mod copy;
 pub mod corpus;
 pub mod feeder;
+pub mod stream;
 
 pub use copy::{CopySeq, Curriculum, COPY_CLASSES, COPY_VOCAB};
 pub use corpus::Corpus;
 pub use feeder::Feeder;
+pub use stream::{ByteSource, Dataset, DatasetOptions, DatasetSpec, FileSource, Lowercase, Shard};

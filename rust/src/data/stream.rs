@@ -1,0 +1,595 @@
+//! Streaming, shard-aware byte sources (the WikiText-style data layer).
+//!
+//! The paper's headline language-modelling results (§5.1/§5.3) are on real
+//! text. [`Corpus`] slurps a whole file into one `Vec<u8>`, which is fine
+//! for the synthetic corpus but wrong for WikiText-103-scale streams —
+//! SnAp's whole point is online updates over unbounded input, so the data
+//! layer itself must stream. This module provides:
+//!
+//! * [`ByteSource`] — the one trait every char-LM driver reads through:
+//!   random-access byte windows plus deterministic random-crop sampling
+//!   from a lane's [`Pcg32`] stream. In-memory corpora, shard views and
+//!   chunked file readers all implement it, so the executor/feeder stack is
+//!   oblivious to where bytes live.
+//! * [`FileSource`] — a file-backed source read incrementally in fixed-size
+//!   chunks with a small bounded LRU of resident chunks. Resident memory is
+//!   `chunk_len × max_chunks` regardless of file size; a 500 MB WikiText-103
+//!   shard trains in a few MiB of buffer.
+//! * [`Shard`] — an `[offset, offset+len)` view over a shared source;
+//!   train/valid splits of a single file are two shards over one reader.
+//! * [`Lowercase`] — optional byte-level lowercasing applied at read time
+//!   (WikiText preprocessing knob; the default is byte passthrough).
+//! * [`DatasetSpec`] / [`Dataset`] — the registry behind the CLI's
+//!   `--dataset synthetic|file:<path>|wikitext-dir:<dir>` flag, resolving a
+//!   spec into train/valid(/test) shards.
+//!
+//! ## Determinism
+//!
+//! Sampling draws **only** from the caller's `Pcg32` (one offset per crop,
+//! via [`Pcg32::below_u64`]), and `below_u64` consumes the stream exactly
+//! like the in-memory `below_usize` path for sources under 4 GiB — so a
+//! file-backed run is bitwise identical to an in-memory run over the same
+//! bytes, for any workers × prefetch × spawn combination (guaranteed by
+//! `rust/tests/executor_determinism.rs` and `rust/tests/stream_corpus.rs`).
+//! Chunk caching affects wall-clock only; it cannot change a byte.
+//!
+//! ## I/O failure semantics
+//!
+//! Constructors ([`FileSource::open`], [`DatasetSpec::load`]) are fallible
+//! and name the offending path. Reads themselves are infallible in the
+//! signature and panic (with the path) on mid-run I/O errors: a corpus file
+//! truncated while training is unrecoverable, and a panic propagates
+//! through the prefetch thread with the same diagnostic as the inline path
+//! (see `data::feeder`).
+
+use crate::data::corpus::Corpus;
+use crate::errors::{Context as _, Result};
+use crate::tensor::rng::Pcg32;
+use std::collections::VecDeque;
+use std::fs::File;
+use std::io::{Read as _, Seek as _, SeekFrom};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+/// A randomly addressable byte stream with deterministic crop sampling.
+///
+/// `Send + Sync` is part of the contract: sources are shared read-only
+/// across worker lanes and the prefetch thread.
+pub trait ByteSource: Send + Sync {
+    /// Total number of readable bytes.
+    fn len_bytes(&self) -> u64;
+
+    /// Fill `buf` with the bytes at `[offset, offset + buf.len())`.
+    /// Panics if the range is out of bounds or the underlying read fails.
+    fn read_at(&self, offset: u64, buf: &mut [u8]);
+
+    /// Materialise a window of `len` bytes starting at `offset`.
+    fn read_window(&self, offset: u64, len: usize) -> Vec<u8> {
+        let mut buf = vec![0u8; len];
+        self.read_at(offset, &mut buf);
+        buf
+    }
+
+    /// Random crop of `len + 1` bytes (`inputs[0..len]` + next-byte
+    /// targets), drawing exactly one offset from `rng` — §5.1's "randomly
+    /// cropped sequences sampled uniformly with replacement". Matches
+    /// [`Corpus::sample_crop`]'s draw for sources under 4 GiB.
+    fn sample_crop(&self, len: usize, rng: &mut Pcg32) -> Vec<u8> {
+        let total = self.len_bytes();
+        assert!(total > len as u64, "corpus shorter than crop length");
+        let start = rng.below_u64(total - len as u64);
+        self.read_window(start, len + 1)
+    }
+}
+
+impl ByteSource for Corpus {
+    fn len_bytes(&self) -> u64 {
+        self.len() as u64
+    }
+
+    fn read_at(&self, offset: u64, buf: &mut [u8]) {
+        let o = offset as usize;
+        buf.copy_from_slice(&self.bytes()[o..o + buf.len()]);
+    }
+}
+
+/// Default chunk size for file-backed sources (1 MiB).
+pub const DEFAULT_CHUNK_LEN: usize = 1 << 20;
+/// Default resident-chunk budget (8 chunks ⇒ ≤ 8 MiB resident by default).
+pub const DEFAULT_MAX_CHUNKS: usize = 8;
+
+/// Chunked file reader: bytes are pulled from disk in `chunk_len`-sized
+/// pieces on demand, with at most `max_chunks` chunks resident (LRU). The
+/// file handle and the chunk list live behind one mutex — reads are brief
+/// copies out of cached chunks, and the training hot path touches the
+/// source once per crop, not per token.
+pub struct FileSource {
+    path: PathBuf,
+    len: u64,
+    chunk_len: usize,
+    max_chunks: usize,
+    inner: Mutex<Chunks>,
+}
+
+struct Chunks {
+    file: File,
+    /// `(chunk index, bytes)`, back = most recently used.
+    resident: VecDeque<(u64, Vec<u8>)>,
+}
+
+impl Chunks {
+    /// Return the chunk `ci`, loading (and evicting LRU) if needed.
+    fn chunk(
+        &mut self,
+        ci: u64,
+        chunk_len: usize,
+        file_len: u64,
+        max_chunks: usize,
+        path: &Path,
+    ) -> &[u8] {
+        if let Some(pos) = self.resident.iter().position(|(i, _)| *i == ci) {
+            if pos + 1 != self.resident.len() {
+                let entry = self.resident.remove(pos).expect("position just found");
+                self.resident.push_back(entry);
+            }
+        } else {
+            let start = ci * chunk_len as u64;
+            let n = ((file_len - start) as usize).min(chunk_len);
+            let mut bytes = vec![0u8; n];
+            self.file
+                .seek(SeekFrom::Start(start))
+                .and_then(|_| self.file.read_exact(&mut bytes))
+                .unwrap_or_else(|e| {
+                    panic!("reading corpus file '{}' at offset {start}: {e}", path.display())
+                });
+            while self.resident.len() >= max_chunks.max(1) {
+                self.resident.pop_front();
+            }
+            self.resident.push_back((ci, bytes));
+        }
+        &self.resident.back().expect("chunk resident").1
+    }
+}
+
+impl FileSource {
+    /// Open with the default chunking (1 MiB × 8 resident).
+    pub fn open(path: impl AsRef<Path>) -> Result<Self> {
+        Self::with_chunking(path, DEFAULT_CHUNK_LEN, DEFAULT_MAX_CHUNKS)
+    }
+
+    /// Open with explicit chunking. `chunk_len` bounds each read;
+    /// `max_chunks` bounds residency (clamped to ≥ 1). Tests use tiny
+    /// chunks to force every crop across chunk boundaries.
+    pub fn with_chunking(
+        path: impl AsRef<Path>,
+        chunk_len: usize,
+        max_chunks: usize,
+    ) -> Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        crate::ensure!(chunk_len > 0, "chunk_len must be positive");
+        let file = File::open(&path)
+            .with_context(|| format!("opening corpus file '{}'", path.display()))?;
+        let len = file
+            .metadata()
+            .with_context(|| format!("reading metadata of '{}'", path.display()))?
+            .len();
+        crate::ensure!(len > 0, "corpus file '{}' is empty", path.display());
+        Ok(FileSource {
+            path,
+            len,
+            chunk_len,
+            max_chunks: max_chunks.max(1),
+            inner: Mutex::new(Chunks { file, resident: VecDeque::new() }),
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Bytes currently resident in the chunk cache (bench/test observability).
+    pub fn resident_bytes(&self) -> usize {
+        let inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        inner.resident.iter().map(|(_, b)| b.len()).sum()
+    }
+
+    /// The residency bound: resident_bytes() can never exceed this.
+    pub fn max_resident_bytes(&self) -> usize {
+        self.chunk_len * self.max_chunks
+    }
+}
+
+impl ByteSource for FileSource {
+    fn len_bytes(&self) -> u64 {
+        self.len
+    }
+
+    fn read_at(&self, offset: u64, buf: &mut [u8]) {
+        assert!(
+            offset + buf.len() as u64 <= self.len,
+            "read past end of '{}' ({} + {} > {})",
+            self.path.display(),
+            offset,
+            buf.len(),
+            self.len
+        );
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let mut written = 0usize;
+        while written < buf.len() {
+            let pos = offset + written as u64;
+            let ci = pos / self.chunk_len as u64;
+            let off_in_chunk = (pos % self.chunk_len as u64) as usize;
+            let chunk = inner.chunk(ci, self.chunk_len, self.len, self.max_chunks, &self.path);
+            let take = (chunk.len() - off_in_chunk).min(buf.len() - written);
+            buf[written..written + take].copy_from_slice(&chunk[off_in_chunk..off_in_chunk + take]);
+            written += take;
+        }
+    }
+}
+
+/// An `[offset, offset + len)` view over a shared source — the train/valid
+/// split of one file is two shards over one chunk cache.
+pub struct Shard {
+    inner: Arc<dyn ByteSource>,
+    offset: u64,
+    len: u64,
+}
+
+impl Shard {
+    pub fn new(inner: Arc<dyn ByteSource>, offset: u64, len: u64) -> Self {
+        assert!(
+            offset + len <= inner.len_bytes(),
+            "shard [{offset}, {}) exceeds source length {}",
+            offset + len,
+            inner.len_bytes()
+        );
+        Shard { inner, offset, len }
+    }
+}
+
+impl ByteSource for Shard {
+    fn len_bytes(&self) -> u64 {
+        self.len
+    }
+
+    fn read_at(&self, offset: u64, buf: &mut [u8]) {
+        assert!(
+            offset + buf.len() as u64 <= self.len,
+            "read past end of shard ({} + {} > {})",
+            offset,
+            buf.len(),
+            self.len
+        );
+        self.inner.read_at(self.offset + offset, buf);
+    }
+}
+
+/// Byte-level ASCII lowercasing applied at read time (WikiText-style
+/// preprocessing knob). Length-preserving, so offsets and crop draws are
+/// unchanged — only the bytes handed to the model differ.
+pub struct Lowercase<S>(pub S);
+
+impl<S: ByteSource> ByteSource for Lowercase<S> {
+    fn len_bytes(&self) -> u64 {
+        self.0.len_bytes()
+    }
+
+    fn read_at(&self, offset: u64, buf: &mut [u8]) {
+        self.0.read_at(offset, buf);
+        for b in buf.iter_mut() {
+            *b = b.to_ascii_lowercase();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dataset registry
+// ---------------------------------------------------------------------------
+
+/// A parsed `--dataset` spec.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DatasetSpec {
+    /// `synthetic[:BYTES[:SEED]]` — the deterministic Markov corpus.
+    Synthetic { bytes: usize, seed: u64 },
+    /// `file:PATH` — one text/byte file, streamed; the validation split is
+    /// the tail fraction ([`DatasetOptions::valid_frac`]).
+    File(PathBuf),
+    /// `wikitext-dir:DIR` — a WikiText-style directory holding
+    /// pre-split `wiki.{train,valid,test}.tokens` shards (the layout of an
+    /// extracted WikiText-103 download).
+    WikitextDir(PathBuf),
+}
+
+/// Knobs shared by every dataset kind.
+#[derive(Clone, Debug)]
+pub struct DatasetOptions {
+    /// Fraction of a single-file corpus split off (from the tail) for
+    /// validation; mirrors [`Corpus::split`]. Ignored by `wikitext-dir`,
+    /// which is pre-split.
+    pub valid_frac: f64,
+    /// Byte-level lowercasing at read time (default: passthrough).
+    pub lowercase: bool,
+    /// Chunk size for file-backed sources.
+    pub chunk_len: usize,
+    /// Resident-chunk budget for file-backed sources.
+    pub max_chunks: usize,
+}
+
+impl Default for DatasetOptions {
+    fn default() -> Self {
+        DatasetOptions {
+            valid_frac: 0.05,
+            lowercase: false,
+            chunk_len: DEFAULT_CHUNK_LEN,
+            max_chunks: DEFAULT_MAX_CHUNKS,
+        }
+    }
+}
+
+/// A resolved dataset: train/valid shards (plus test when the layout has
+/// one), each behind [`ByteSource`].
+pub struct Dataset {
+    pub name: String,
+    pub train: Box<dyn ByteSource>,
+    pub valid: Box<dyn ByteSource>,
+    pub test: Option<Box<dyn ByteSource>>,
+}
+
+impl DatasetSpec {
+    /// Parse a `--dataset` flag value.
+    pub fn parse(spec: &str) -> Result<DatasetSpec> {
+        if let Some(rest) = spec.strip_prefix("file:") {
+            crate::ensure!(!rest.is_empty(), "dataset spec 'file:' is missing a path");
+            return Ok(DatasetSpec::File(PathBuf::from(rest)));
+        }
+        if let Some(rest) = spec.strip_prefix("wikitext-dir:") {
+            crate::ensure!(!rest.is_empty(), "dataset spec 'wikitext-dir:' is missing a path");
+            return Ok(DatasetSpec::WikitextDir(PathBuf::from(rest)));
+        }
+        if spec == "synthetic" || spec.starts_with("synthetic:") {
+            let mut parts = spec.splitn(3, ':');
+            parts.next(); // "synthetic"
+            let bytes = match parts.next() {
+                Some(b) => b
+                    .parse::<usize>()
+                    .ok()
+                    .with_context(|| format!("bad byte count in dataset spec '{spec}'"))?,
+                None => 200_000,
+            };
+            let seed = match parts.next() {
+                Some(s) => s
+                    .parse::<u64>()
+                    .ok()
+                    .with_context(|| format!("bad seed in dataset spec '{spec}'"))?,
+                None => 1234,
+            };
+            return Ok(DatasetSpec::Synthetic { bytes, seed });
+        }
+        crate::bail!(
+            "unknown dataset spec '{spec}' \
+             (expected synthetic[:BYTES[:SEED]], file:PATH, or wikitext-dir:DIR)"
+        )
+    }
+
+    /// Resolve the spec into train/valid(/test) sources.
+    pub fn load(&self, opts: &DatasetOptions) -> Result<Dataset> {
+        match self {
+            DatasetSpec::Synthetic { bytes, seed } => {
+                let (train, valid) = Corpus::synthetic(*bytes, *seed).split(opts.valid_frac);
+                Ok(Dataset {
+                    name: format!("synthetic:{bytes}:{seed}"),
+                    train: boxed(train, opts.lowercase),
+                    valid: boxed(valid, opts.lowercase),
+                    test: None,
+                })
+            }
+            DatasetSpec::File(path) => {
+                let src = FileSource::with_chunking(path, opts.chunk_len, opts.max_chunks)?;
+                let total = src.len_bytes();
+                let shared: Arc<dyn ByteSource> = Arc::new(src);
+                // Mirror Corpus::split exactly so file-backed and in-memory
+                // splits cover identical byte ranges.
+                let nv = (((total as f64) * opts.valid_frac.clamp(0.0, 1.0)) as u64).min(total);
+                let nt = total - nv;
+                Ok(Dataset {
+                    name: format!("file:{}", path.display()),
+                    train: boxed(Shard::new(Arc::clone(&shared), 0, nt), opts.lowercase),
+                    valid: boxed(Shard::new(shared, nt, nv), opts.lowercase),
+                    test: None,
+                })
+            }
+            DatasetSpec::WikitextDir(dir) => {
+                let train = open_shard(dir, TRAIN_SHARD_NAMES, "train", opts)?;
+                let valid = open_shard(dir, VALID_SHARD_NAMES, "valid", opts)?;
+                // The test shard is optional, but only *absence* is — an
+                // existing-but-broken file must still surface its error.
+                let test = match find_shard(dir, TEST_SHARD_NAMES) {
+                    Some(_) => Some(open_shard(dir, TEST_SHARD_NAMES, "test", opts)?),
+                    None => None,
+                };
+                Ok(Dataset {
+                    name: format!("wikitext-dir:{}", dir.display()),
+                    train,
+                    valid,
+                    test,
+                })
+            }
+        }
+    }
+}
+
+const TRAIN_SHARD_NAMES: &[&str] =
+    &["wiki.train.tokens", "wiki.train.raw", "train.tokens", "train.txt"];
+const VALID_SHARD_NAMES: &[&str] =
+    &["wiki.valid.tokens", "wiki.valid.raw", "valid.tokens", "valid.txt"];
+const TEST_SHARD_NAMES: &[&str] =
+    &["wiki.test.tokens", "wiki.test.raw", "test.tokens", "test.txt"];
+
+fn find_shard(dir: &Path, names: &[&str]) -> Option<PathBuf> {
+    names.iter().map(|n| dir.join(n)).find(|p| p.is_file())
+}
+
+fn open_shard(
+    dir: &Path,
+    names: &[&str],
+    what: &str,
+    opts: &DatasetOptions,
+) -> Result<Box<dyn ByteSource>> {
+    let path = find_shard(dir, names).with_context(|| {
+        format!("no {what} shard in '{}' (looked for {})", dir.display(), names.join(", "))
+    })?;
+    let src = FileSource::with_chunking(path, opts.chunk_len, opts.max_chunks)?;
+    Ok(boxed(src, opts.lowercase))
+}
+
+fn boxed(src: impl ByteSource + 'static, lowercase: bool) -> Box<dyn ByteSource> {
+    if lowercase {
+        Box::new(Lowercase(src))
+    } else {
+        Box::new(src)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_file(name: &str, data: &[u8]) -> PathBuf {
+        let unique = format!("snap_rtrl_stream_{}_{name}", std::process::id());
+        let p = std::env::temp_dir().join(unique);
+        std::fs::write(&p, data).unwrap();
+        p
+    }
+
+    #[test]
+    fn file_source_reads_across_chunk_boundaries() {
+        let data: Vec<u8> = (0..1000u32).map(|i| (i % 251) as u8).collect();
+        let p = temp_file("chunks.bin", &data);
+        for &(chunk, cache) in &[(1usize, 1usize), (7, 2), (64, 3), (4096, 8)] {
+            let src = FileSource::with_chunking(&p, chunk, cache).unwrap();
+            assert_eq!(src.len_bytes(), 1000);
+            // windows at awkward offsets, all spanning chunk boundaries
+            for &(off, len) in &[(0u64, 1000usize), (5, 13), (63, 130), (990, 10), (999, 1)] {
+                assert_eq!(
+                    src.read_window(off, len),
+                    data[off as usize..off as usize + len].to_vec(),
+                    "chunk={chunk} cache={cache} off={off} len={len}"
+                );
+            }
+            assert!(src.resident_bytes() <= src.max_resident_bytes());
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn file_crops_bitwise_match_in_memory_crops() {
+        let corpus = Corpus::synthetic(5000, 77);
+        let p = temp_file("crops.bin", corpus.bytes());
+        let src = FileSource::with_chunking(&p, 64, 2).unwrap();
+        let mut r_mem = Pcg32::seeded(5);
+        let mut r_file = Pcg32::seeded(5);
+        for _ in 0..50 {
+            let mem = corpus.sample_crop(128, &mut r_mem).to_vec();
+            let file = ByteSource::sample_crop(&src, 128, &mut r_file);
+            assert_eq!(mem, file);
+        }
+        assert_eq!(r_mem.next_u32(), r_file.next_u32(), "rng streams diverged");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn resident_memory_stays_bounded_under_random_access() {
+        let data = vec![42u8; 100_000];
+        let p = temp_file("bounded.bin", &data);
+        let src = FileSource::with_chunking(&p, 512, 3).unwrap();
+        let mut rng = Pcg32::seeded(9);
+        for _ in 0..500 {
+            let _ = ByteSource::sample_crop(&src, 200, &mut rng);
+            assert!(src.resident_bytes() <= src.max_resident_bytes());
+        }
+        assert!(src.resident_bytes() <= 3 * 512);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn shard_views_select_their_ranges() {
+        let data: Vec<u8> = (0..=255u8).collect();
+        let p = temp_file("shard.bin", &data);
+        let shared: Arc<dyn ByteSource> = Arc::new(FileSource::with_chunking(&p, 16, 2).unwrap());
+        let a = Shard::new(Arc::clone(&shared), 0, 200);
+        let b = Shard::new(shared, 200, 56);
+        assert_eq!(a.len_bytes(), 200);
+        assert_eq!(b.len_bytes(), 56);
+        assert_eq!(a.read_window(198, 2), vec![198, 199]);
+        assert_eq!(b.read_window(0, 3), vec![200, 201, 202]);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn lowercase_wrapper_maps_ascii_only() {
+        let p = temp_file("lower.txt", b"Hello WORLD 123 \xc3\x89");
+        let src = Lowercase(FileSource::open(&p).unwrap());
+        let all = src.read_window(0, src.len_bytes() as usize);
+        assert_eq!(&all[..16], b"hello world 123 ");
+        // non-ASCII bytes pass through untouched
+        assert_eq!(&all[16..], b"\xc3\x89");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn dataset_spec_parsing() {
+        assert_eq!(
+            DatasetSpec::parse("synthetic").unwrap(),
+            DatasetSpec::Synthetic { bytes: 200_000, seed: 1234 }
+        );
+        assert_eq!(
+            DatasetSpec::parse("synthetic:5000:9").unwrap(),
+            DatasetSpec::Synthetic { bytes: 5000, seed: 9 }
+        );
+        assert_eq!(
+            DatasetSpec::parse("file:/tmp/x.txt").unwrap(),
+            DatasetSpec::File(PathBuf::from("/tmp/x.txt"))
+        );
+        assert_eq!(
+            DatasetSpec::parse("wikitext-dir:/data/wt103").unwrap(),
+            DatasetSpec::WikitextDir(PathBuf::from("/data/wt103"))
+        );
+        assert!(DatasetSpec::parse("hdfs://nope").is_err());
+        assert!(DatasetSpec::parse("synthetic:abc").is_err());
+        assert!(DatasetSpec::parse("file:").is_err());
+    }
+
+    #[test]
+    fn file_dataset_split_matches_corpus_split() {
+        let corpus = Corpus::synthetic(4000, 3);
+        let p = temp_file("split.bin", corpus.bytes());
+        let ds = DatasetSpec::File(p.clone())
+            .load(&DatasetOptions { valid_frac: 0.1, ..Default::default() })
+            .unwrap();
+        let (tr, va) = corpus.split(0.1);
+        assert_eq!(ds.train.len_bytes(), tr.len() as u64);
+        assert_eq!(ds.valid.len_bytes(), va.len() as u64);
+        assert_eq!(ds.train.read_window(0, tr.len()), tr.bytes().to_vec());
+        assert_eq!(ds.valid.read_window(0, va.len()), va.bytes().to_vec());
+        assert!(ds.test.is_none());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn missing_file_dataset_error_names_the_path() {
+        let e = DatasetSpec::File(PathBuf::from("/no/such/corpus.bin"))
+            .load(&DatasetOptions::default())
+            .unwrap_err();
+        assert!(e.to_string().contains("/no/such/corpus.bin"), "{e}");
+    }
+
+    #[test]
+    fn synthetic_dataset_matches_legacy_split() {
+        let ds = DatasetSpec::Synthetic { bytes: 3000, seed: 11 }
+            .load(&DatasetOptions::default())
+            .unwrap();
+        let (tr, va) = Corpus::synthetic(3000, 11).split(0.05);
+        assert_eq!(ds.train.read_window(0, tr.len()), tr.bytes().to_vec());
+        assert_eq!(ds.valid.read_window(0, va.len()), va.bytes().to_vec());
+    }
+}

@@ -13,8 +13,10 @@
 //! * [`grad`] — the six gradient algorithms of the paper: BPTT, full RTRL,
 //!   sparsity-optimized RTRL, SnAp-n, UORO, RFLO.
 //! * [`models`] — char-LM and Copy-task heads (readout MLP + softmax).
-//! * [`data`] — byte corpora, the Copy-task curriculum generator, and the
-//!   async double-buffered data feeder.
+//! * [`data`] — byte corpora, streaming shard-aware sources (the
+//!   `--dataset` registry: synthetic / single file / WikiText-style
+//!   directories, read in bounded chunks), the Copy-task curriculum
+//!   generator, and the async double-buffered data feeder.
 //! * [`opt`] — SGD / Adam.
 //! * [`train`] — online & truncated training loops, the persistent worker
 //!   pool + lane-parallel executor, pruning, FLOP accounting.

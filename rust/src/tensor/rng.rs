@@ -90,6 +90,32 @@ impl Pcg32 {
         self.below(n as u32) as usize
     }
 
+    /// Uniform u64 in [0, n) — the offset draw for file-backed corpora,
+    /// whose length is addressed in `u64`. For any `n` that fits in `u32`
+    /// this consumes the stream exactly like [`Pcg32::below`], so sampling a
+    /// corpus under 4 GiB draws identically whether it is resident in
+    /// memory (`below_usize`) or streamed from disk.
+    #[inline]
+    pub fn below_u64(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        if n <= u32::MAX as u64 {
+            return self.below(n as u32) as u64;
+        }
+        // 128-bit Lemire, mirroring `below`'s rejection structure.
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
     /// Standard normal via Box-Muller (cached second value).
     pub fn normal(&mut self) -> f32 {
         // Marsaglia polar method — avoids trig, numerically fine in f32.
@@ -200,6 +226,28 @@ mod tests {
             seen[v] = true;
         }
         assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn below_u64_matches_below_for_small_n() {
+        // The streaming corpus path draws offsets with below_u64; it must
+        // consume the stream exactly like the in-memory below_usize path
+        // for every corpus that fits in u32 addressing.
+        let mut a = Pcg32::seeded(13);
+        let mut b = Pcg32::seeded(13);
+        for &n in &[1u64, 2, 10, 1000, u32::MAX as u64] {
+            assert_eq!(a.below_u64(n), b.below(n as u32) as u64);
+        }
+        assert_eq!(a.next_u32(), b.next_u32(), "stream positions diverged");
+    }
+
+    #[test]
+    fn below_u64_large_n_in_range() {
+        let mut r = Pcg32::seeded(29);
+        let n = (u32::MAX as u64) * 1000;
+        for _ in 0..100 {
+            assert!(r.below_u64(n) < n);
+        }
     }
 
     #[test]

@@ -215,7 +215,8 @@ impl<'c> LaneExecutor<'c> {
     }
 
     /// Materialize any deferred (BPTT) gradients on every lane into the
-    /// per-lane buffers. Call before [`reduce_and_update`] on paths that did
+    /// per-lane buffers. Call before [`reduce_and_update`](Self::reduce_and_update)
+    /// on paths that did
     /// not already flush inside the parallel section.
     pub fn flush_all(&mut self, theta: &[f32]) {
         for slot in self.slots.iter_mut() {

@@ -2,6 +2,11 @@
 //! curriculum (§5.2), both supporting full-unroll and fully-online (T=1)
 //! update schedules with the stale-Jacobian semantics of §2.2.
 //!
+//! The char-LM driver reads its bytes through [`ByteSource`]
+//! (`data::stream`), so the same code path trains on the in-memory
+//! synthetic corpus, a streamed single file, or WikiText-style shard
+//! directories with bounded resident memory — see [`train_charlm_streams`].
+//!
 //! Both drivers route through the lane-parallel [`LaneExecutor`]
 //! (`train::executor`): every minibatch lane owns its gradient algorithm,
 //! gradient buffers and RNG stream; θ and the readout are shared read-only
@@ -29,6 +34,7 @@ use crate::cells::{Arch, Cell};
 use crate::data::copy::{sample_len_at, CopySeq, Curriculum, COPY_CLASSES, COPY_VOCAB};
 use crate::data::corpus::Corpus;
 use crate::data::feeder::Feeder;
+use crate::data::stream::ByteSource;
 use crate::grad::{GradAlgo, Method};
 use crate::models::{Embedding, Readout, ReadoutCache};
 use crate::opt::Adam;
@@ -121,18 +127,32 @@ pub struct TrainResult {
     pub final_level: usize,
 }
 
-/// Character-level language modelling (§5.1). One lane per minibatch
-/// element; all lanes share θ and the readout; gradients average over lanes.
+/// Character-level language modelling (§5.1) over an in-memory corpus:
+/// splits off the 5% validation tail, then defers to
+/// [`train_charlm_streams`]. Results are bitwise identical to streaming the
+/// same bytes from disk (see `rust/tests/stream_corpus.rs`).
 pub fn train_charlm(cfg: &TrainConfig, corpus: &Corpus) -> TrainResult {
+    let (train_corpus, valid_corpus) = corpus.split(0.05);
+    train_charlm_streams(cfg, &train_corpus, &valid_corpus)
+}
+
+/// Character-level language modelling over arbitrary [`ByteSource`]s —
+/// in-memory corpora, chunked file shards, or WikiText-style directories
+/// via the `--dataset` registry (`data::stream`). One lane per minibatch
+/// element; all lanes share θ and the readout; gradients average over
+/// lanes. Crops are drawn per lane from the feeder's cloned data streams,
+/// so training is bitwise identical for any source backing, worker count,
+/// spawn mode and prefetch setting.
+pub fn train_charlm_streams(
+    cfg: &TrainConfig,
+    train: &dyn ByteSource,
+    valid: &dyn ByteSource,
+) -> TrainResult {
     let mut rng = Pcg32::seeded(cfg.seed);
     let cell = cfg.arch.build(cfg.k, cfg.embed_dim, cfg.density, &mut rng);
     let embed = Embedding::new(256, cfg.embed_dim, &mut rng);
     let mut readout = Readout::new(cell.hidden_size(), cfg.readout_hidden, 256, &mut rng);
-    let (train_corpus, valid_corpus) = corpus.split(0.05);
-    run_driver(cfg, cell.as_ref(), &embed, &mut readout, &mut rng, Task::CharLm {
-        train: &train_corpus,
-        valid: &valid_corpus,
-    })
+    run_driver(cfg, cell.as_ref(), &embed, &mut readout, &mut rng, Task::CharLm { train, valid })
 }
 
 /// Copy task with curriculum (§5.2).
@@ -146,7 +166,7 @@ pub fn train_copy(cfg: &TrainConfig) -> TrainResult {
 }
 
 enum Task<'a> {
-    CharLm { train: &'a Corpus, valid: &'a Corpus },
+    CharLm { train: &'a dyn ByteSource, valid: &'a dyn ByteSource },
     Copy,
 }
 
@@ -248,13 +268,13 @@ fn run_driver(
     std::thread::scope(|scope| {
         let mut feed = match &task {
             Task::CharLm { train, .. } => {
-                let corpus: &Corpus = *train;
+                let source: &dyn ByteSource = *train;
                 let seq_len = cfg.seq_len;
                 let mut streams = data_rngs;
                 let generate = move |_spec: ()| -> Vec<Vec<u8>> {
                     streams
                         .iter_mut()
-                        .map(|r| corpus.sample_crop(seq_len, r).to_vec())
+                        .map(|r| source.sample_crop(seq_len, r))
                         .collect()
                 };
                 DataFeed::CharLm(if cfg.prefetch {
@@ -451,11 +471,10 @@ fn run_driver(
                 if let Task::CharLm { valid, .. } = &task {
                     // Guard the empty-validation-split case: Corpus::split on a
                     // tiny corpus legitimately yields an empty partition.
-                    last_valid_bpc = if valid.len() >= 2 {
-                        evaluate_charlm(
-                            cell, &theta, embed, readout, valid,
-                            cfg.eval_span.min(valid.len() - 1), rng,
-                        )
+                    let vlen = valid.len_bytes();
+                    last_valid_bpc = if vlen >= 2 {
+                        let span = (cfg.eval_span as u64).min(vlen - 1) as usize;
+                        evaluate_charlm(cell, &theta, embed, readout, *valid, span, rng)
                     } else {
                         f64::NAN
                     };
@@ -484,33 +503,38 @@ fn run_driver(
     })
 }
 
-/// Evaluate char-LM bpc over a contiguous span of the validation corpus.
-/// Returns NaN when the corpus is too short to score a single transition.
+/// Evaluate char-LM bpc over a contiguous span of the validation source.
+/// Only the scored window (`span + 1` bytes) is materialised, so streaming
+/// shards evaluate with bounded memory. Returns NaN when the source is too
+/// short to score a single transition. The single offset draw matches the
+/// old in-memory implementation bit for bit ([`Pcg32::below_u64`]).
 pub fn evaluate_charlm(
     cell: &dyn Cell,
     theta: &[f32],
     embed: &Embedding,
     readout: &Readout,
-    valid: &Corpus,
+    valid: &dyn ByteSource,
     span: usize,
     rng: &mut Pcg32,
 ) -> f64 {
-    let bytes = valid.bytes();
-    if bytes.len() < 2 {
+    let total = valid.len_bytes();
+    if total < 2 {
         return f64::NAN;
     }
-    let span = span.min(bytes.len() - 1).max(1);
-    let start = if bytes.len() - 1 > span { rng.below_usize(bytes.len() - 1 - span) } else { 0 };
+    let span = (span as u64).min(total - 1).max(1);
+    let start = if total - 1 > span { rng.below_u64(total - 1 - span) } else { 0 };
+    let window = valid.read_window(start, span as usize + 1);
     let mut cache = cell.make_cache();
     let mut ro_cache = ReadoutCache::default();
     let mut s = vec![0.0f32; cell.state_size()];
     let mut s2 = vec![0.0f32; cell.state_size()];
     let mut nll = RunningMean::new();
-    for t in start..start + span {
-        cell.forward(theta, &s, embed.lookup(bytes[t] as usize), &mut cache, &mut s2);
+    for t in 0..span as usize {
+        cell.forward(theta, &s, embed.lookup(window[t] as usize), &mut cache, &mut s2);
         std::mem::swap(&mut s, &mut s2);
         readout.forward(&s[..cell.hidden_size()], &mut ro_cache);
-        let (loss, _) = crate::tensor::ops::softmax_xent(&ro_cache.logits, bytes[t + 1] as usize);
+        let (loss, _) =
+            crate::tensor::ops::softmax_xent(&ro_cache.logits, window[t + 1] as usize);
         nll.add(loss as f64);
     }
     bpc_from_nats(nll.mean())

@@ -11,7 +11,9 @@ pub mod prune;
 
 pub use executor::{LaneExecutor, LaneSlot, SpawnMode};
 pub use flops::{table1_memory, table1_time, CostInputs};
-pub use looper::{evaluate_charlm, train_charlm, train_copy, TrainConfig, TrainResult};
+pub use looper::{
+    evaluate_charlm, train_charlm, train_charlm_streams, train_copy, TrainConfig, TrainResult,
+};
 pub use metrics::{bpc_from_nats, CurvePoint, Ema, RunningMean};
 pub use pool::WorkerPool;
 pub use prune::Pruner;

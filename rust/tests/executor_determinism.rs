@@ -8,9 +8,11 @@
 //! into the results.
 
 use snap_rtrl::cells::Arch;
-use snap_rtrl::data::Corpus;
+use snap_rtrl::data::{Corpus, FileSource};
 use snap_rtrl::grad::Method;
-use snap_rtrl::train::{train_charlm, train_copy, SpawnMode, TrainConfig, TrainResult};
+use snap_rtrl::train::{
+    train_charlm, train_charlm_streams, train_copy, SpawnMode, TrainConfig, TrainResult,
+};
 
 fn charlm_cfg(method: Method, truncation: usize, workers: usize) -> TrainConfig {
     TrainConfig {
@@ -195,6 +197,42 @@ fn copy_full_unroll_pool_and_feeder_identical_for_workers_1_2_4_16_prefetch_on_o
                 &format!("copy workers={workers} prefetch={prefetch}"),
             );
             assert_eq!(base.final_level, res.final_level);
+        }
+    }
+}
+
+#[test]
+fn charlm_file_backed_corpus_identical_for_workers_1_2_4_16_prefetch_spawn() {
+    // The streaming data layer (data::stream) extends the bitwise guarantee
+    // to file-backed corpora: chunked reads (chunk < crop here, so every
+    // crop spans chunk boundaries and the LRU evicts mid-epoch) must train
+    // the exact same model as the in-memory corpus of the same bytes, for
+    // every worker count × prefetch × spawn-mode combination.
+    let train_path =
+        concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/wikitext_tiny/wiki.train.tokens");
+    let valid_path =
+        concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/wikitext_tiny/wiki.valid.tokens");
+    let mem_train = Corpus::from_bytes(std::fs::read(train_path).unwrap());
+    let mem_valid = Corpus::from_bytes(std::fs::read(valid_path).unwrap());
+    let mut base_cfg = charlm_cfg(Method::Snap(1), 4, 1);
+    base_cfg.prefetch = false;
+    let base = train_charlm_streams(&base_cfg, &mem_train, &mem_valid);
+
+    for workers in [1usize, 2, 4, 16] {
+        for prefetch in [false, true] {
+            for spawn in [SpawnMode::Persistent, SpawnMode::PerSection] {
+                let f_train = FileSource::with_chunking(train_path, 256, 2).unwrap();
+                let f_valid = FileSource::with_chunking(valid_path, 256, 2).unwrap();
+                let mut cfg = charlm_cfg(Method::Snap(1), 4, workers);
+                cfg.prefetch = prefetch;
+                cfg.spawn = spawn;
+                let res = train_charlm_streams(&cfg, &f_train, &f_valid);
+                assert_curves_bitwise_equal(
+                    &base,
+                    &res,
+                    &format!("file-backed workers={workers} prefetch={prefetch} {spawn:?}"),
+                );
+            }
         }
     }
 }
