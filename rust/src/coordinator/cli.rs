@@ -97,12 +97,37 @@ Experiment commands (one per paper table/figure):
 
 Training commands:
   train    Char-LM single run    [--method --arch --k --sparsity --steps --lr --trunc --batch
-                                  --dataset --workers --prefetch]
+                                  --dataset --workers --prefetch --checkpoint-every --resume]
   copy     Copy-task single run  [--method --arch --k --sparsity --steps --lr --trunc --batch
-                                  --workers --prefetch]
+                                  --workers --prefetch --checkpoint-every --resume]
   file-lm  File-corpus preset: end-to-end char-LM over --dataset (required), writing
            results/file_lm_metrics.json + file_lm_curve.csv — the CI dataset-smoke job
-           [--steps --k --batch --workers --seq-len]
+           [--steps --k --batch --workers --seq-len --checkpoint-every --resume]
+
+Checkpoint / resume (training commands; online runs must survive a kill):
+  --checkpoint-every N  snapshot the FULL training state after every N steps (0 = off,
+                        the default): theta, readout, Adam moments, every lane's
+                        tracking state (SnAp/RFLO influence values + pattern
+                        fingerprint, dense J for RTRL, UORO's rank-1 factors + sign
+                        stream), every RNG stream, the data cursor, curriculum and
+                        learning curve. Requires --checkpoint-dir.
+  --checkpoint-dir P    directory for ckpt-step<N>.bin files. Writes are atomic
+                        (write-then-rename), so a kill mid-write never leaves a torn
+                        checkpoint.
+  --checkpoint-keep K   bounded retention: keep only the newest K snapshots (default 3).
+  --resume PATH         resume from a checkpoint file, or from the highest-step
+                        checkpoint in a directory. The resumed run is BITWISE
+                        identical to one that was never interrupted — same loss
+                        curve, same final theta — for any --workers/--prefetch/spawn
+                        combination (enforced by rust/tests/checkpoint_resume.rs and
+                        the CI resume-smoke job). The config must match the
+                        checkpoint (method, arch, k, seed, ...); mismatches are
+                        refused with the offending field named.
+  On-disk format: versioned, length-prefixed binary with an FNV-1a-64 payload
+  checksum (magic SNAPRTRL; see rust/src/train/checkpoint.rs). Corrupt or
+  truncated files and version bumps fail with named errors, never a panic.
+  BPTT is resumable at flushed update boundaries only (always true where the
+  drivers checkpoint); all forward-mode methods resume at any update boundary.
 
 Dataset selection (char-LM commands: train, fig3, file-lm):
   --dataset SPEC  where SPEC is one of

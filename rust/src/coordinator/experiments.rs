@@ -12,10 +12,11 @@ use crate::errors::{Context as _, Result};
 use crate::grad::Method;
 use crate::sparse::pattern::{snap_pattern, Pattern};
 use crate::train::{
-    table1_memory, table1_time, train_charlm, train_charlm_streams, train_copy, CostInputs,
-    TrainConfig, TrainResult,
+    table1_memory, table1_time, train_charlm, train_charlm_streams, train_copy,
+    try_train_charlm_streams, try_train_copy, CostInputs, TrainConfig, TrainResult,
 };
 use crate::tensor::rng::Pcg32;
+use std::path::PathBuf;
 
 // ---------------------------------------------------------------------------
 // Dataset resolution (the --dataset registry; see data::stream)
@@ -638,9 +639,26 @@ pub fn run_train(args: &Args) -> Result<()> {
     println!("# char-LM: {} {} k={} d={} trunc={} steps={} dataset={}",
         cfg.method.name(), cfg.arch.name(), cfg.k, cfg.density, cfg.truncation, cfg.steps,
         ds.name);
-    let res = train_charlm_streams(&cfg, ds.train.as_ref(), ds.valid.as_ref());
+    print_checkpointing(&cfg);
+    let res = try_train_charlm_streams(&cfg, ds.train.as_ref(), ds.valid.as_ref())?;
     print_run(&res);
     Ok(())
+}
+
+/// One-line echo of the checkpoint/resume knobs so run logs show where the
+/// snapshots go (and what a resumed run restarted from).
+fn print_checkpointing(cfg: &TrainConfig) {
+    if let Some(resume) = &cfg.resume_from {
+        println!("# resuming from {}", resume.display());
+    }
+    if let Some(dir) = cfg.checkpoint_dir.as_ref().filter(|_| cfg.checkpoint_every > 0) {
+        println!(
+            "# checkpointing every {} steps into {} (keep {})",
+            cfg.checkpoint_every,
+            dir.display(),
+            cfg.checkpoint_keep
+        );
+    }
 }
 
 /// File-corpus preset (the CI `dataset-smoke` job): one end-to-end char-LM
@@ -677,8 +695,9 @@ pub fn run_file_lm(args: &Args) -> Result<()> {
         ds.train.len_bytes(),
         ds.valid.len_bytes()
     );
+    print_checkpointing(&cfg);
     let t0 = std::time::Instant::now();
-    let res = train_charlm_streams(&cfg, ds.train.as_ref(), ds.valid.as_ref());
+    let res = try_train_charlm_streams(&cfg, ds.train.as_ref(), ds.valid.as_ref())?;
     let wall = t0.elapsed().as_secs_f64();
     print_run(&res);
 
@@ -713,7 +732,7 @@ pub fn run_file_lm(args: &Args) -> Result<()> {
     Ok(())
 }
 
-pub fn run_copy_cmd(args: &Args) {
+pub fn run_copy_cmd(args: &Args) -> Result<()> {
     let cfg = config_from_args(args);
     println!("# copy: {} {} k={} d={} trunc={} steps={}",
         cfg.method.name(), cfg.arch.name(), cfg.k, cfg.density, cfg.truncation, cfg.steps);
@@ -724,9 +743,11 @@ not the sequential per-token schedule (see train::looper docs).",
             cfg.workers, cfg.truncation
         );
     }
-    let res = train_copy(&cfg);
+    print_checkpointing(&cfg);
+    let res = try_train_copy(&cfg)?;
     print_run(&res);
     println!("final curriculum level: {}", res.final_level);
+    Ok(())
 }
 
 fn config_from_args(args: &Args) -> TrainConfig {
@@ -763,6 +784,13 @@ fn config_from_args_with(args: &Args, d: &TrainConfig) -> TrainConfig {
         prune_end_step: args.u64_or("prune-end", d.prune_end_step),
         workers: args.usize_or("workers", d.workers),
         prefetch: args.bool_or("prefetch", d.prefetch),
+        checkpoint_every: args.usize_or("checkpoint-every", d.checkpoint_every),
+        checkpoint_dir: args
+            .get("checkpoint-dir")
+            .map(PathBuf::from)
+            .or_else(|| d.checkpoint_dir.clone()),
+        checkpoint_keep: args.usize_or("checkpoint-keep", d.checkpoint_keep),
+        resume_from: args.get("resume").map(PathBuf::from).or_else(|| d.resume_from.clone()),
         ..d.clone()
     }
 }

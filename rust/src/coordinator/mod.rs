@@ -22,7 +22,7 @@ pub fn dispatch(args: &Args) -> Result<()> {
         "table4" | "fig6" => experiments::run_table4(args),
         "fig5" => experiments::run_fig5(args),
         "train" => experiments::run_train(args)?,
-        "copy" => experiments::run_copy_cmd(args),
+        "copy" => experiments::run_copy_cmd(args)?,
         "file-lm" => experiments::run_file_lm(args)?,
         "bench-gate" => benchgate::run_bench_gate(args)?,
         "aot-demo" => crate::runtime::demo::run_aot_demo(args)?,

@@ -89,6 +89,12 @@ impl Curriculum {
         self.level
     }
 
+    /// Restore the level directly (checkpoint resume). Clamped to ≥ 1, the
+    /// starting level.
+    pub fn set_level(&mut self, level: usize) {
+        self.level = level.max(1);
+    }
+
     /// Sample the next sequence length: uniform in `[max(L-5,1), L]`.
     pub fn sample_len(&self, rng: &mut Pcg32) -> usize {
         sample_len_at(self.level, rng)

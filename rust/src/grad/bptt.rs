@@ -8,7 +8,9 @@
 //! long-term structure"); with one flush per sequence it is full BPTT.
 
 use crate::cells::{backward_step, Cache, Cell};
-use crate::grad::GradAlgo;
+use crate::errors::Result;
+use crate::grad::{check_state_tag, state_tags, GradAlgo};
+use crate::runtime::serde::{Reader, Writer};
 use crate::sparse::immediate::ImmediateJac;
 use crate::tensor::matrix::Matrix;
 
@@ -120,6 +122,42 @@ impl GradAlgo for Bptt<'_> {
             .map(|c| c.bufs.iter().map(|b| b.len()).sum())
             .unwrap_or(0);
         self.caches.len() * per_cache + self.dl_dh.iter().map(|v| v.len()).sum::<usize>()
+    }
+
+    /// **Window-boundary-only resume policy**: BPTT's deferred window (the
+    /// per-step forward caches and loss cotangents) is deliberately not
+    /// serialized — the training drivers only checkpoint at update
+    /// boundaries, where `flush` has just drained the window, so the window
+    /// length recorded here is always 0 in practice. A checkpoint taken
+    /// mid-window (window length > 0) records that fact and `load_state`
+    /// refuses it with a named error rather than resuming with silently
+    /// truncated credit assignment.
+    fn save_state(&self, w: &mut Writer) {
+        w.put_u8(state_tags::BPTT);
+        w.put_u64(self.caches.len() as u64);
+        w.put_f32s(&self.s);
+    }
+
+    fn load_state(&mut self, r: &mut Reader<'_>) -> Result<()> {
+        check_state_tag(r.get_u8()?, state_tags::BPTT, "bptt")?;
+        let window = r.get_u64()?;
+        crate::ensure!(
+            window == 0,
+            "BPTT checkpoint was taken mid-window ({window} buffered steps); \
+             BPTT is only resumable at flushed update boundaries"
+        );
+        let s = r.get_f32s()?;
+        crate::ensure!(
+            s.len() == self.s.len(),
+            "BPTT state length mismatch: checkpoint {} vs run {}",
+            s.len(),
+            self.s.len()
+        );
+        // Start from an empty window, matching the saved boundary.
+        self.spare_caches.append(&mut self.caches);
+        self.dl_dh.clear();
+        self.s = s;
+        Ok(())
     }
 }
 

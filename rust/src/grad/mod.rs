@@ -39,6 +39,8 @@ pub use uoro::Uoro;
 pub use rflo::Rflo;
 
 use crate::cells::Cell;
+use crate::errors::Result;
+use crate::runtime::serde::{Reader, Writer};
 use crate::tensor::rng::Pcg32;
 
 /// Uniform interface over the gradient algorithms.
@@ -77,7 +79,41 @@ pub trait GradAlgo: Send {
 
     /// f32 slots held by the tracking state — drives Table 1's memory column.
     fn tracking_memory_floats(&self) -> usize;
+
+    /// Serialize the algorithm's complete mutable tracking state (recurrent
+    /// state + influence estimate + any private RNG) into `w` — one blob per
+    /// lane inside a training checkpoint (`train::checkpoint`). Every
+    /// implementation leads with its own tag byte and shape/structure
+    /// witnesses so a restore onto the wrong method, order or pattern fails
+    /// loudly instead of silently corrupting training.
+    ///
+    /// Must be called at an **update boundary**: forward-mode methods
+    /// (RTRL/SnAp/UORO/RFLO) are resumable at any such boundary; BPTT
+    /// additionally requires its window to be flushed (always true at the
+    /// drivers' step boundaries — see the per-method resume-granularity
+    /// table in `train::checkpoint`).
+    fn save_state(&self, w: &mut Writer);
+
+    /// Restore a [`save_state`](GradAlgo::save_state) snapshot. Fails with a
+    /// named error on a method, shape or pattern-fingerprint mismatch; on
+    /// success the next `step` continues bit for bit.
+    fn load_state(&mut self, r: &mut Reader<'_>) -> Result<()>;
 }
+
+/// Serialization tags: the first byte of every [`GradAlgo::save_state`]
+/// blob, so restoring a checkpoint onto the wrong method is a named error
+/// (verified through `runtime::serde`'s shared `check_state_tag`,
+/// re-exported below for the implementations).
+pub mod state_tags {
+    pub const BPTT: u8 = 1;
+    pub const RTRL: u8 = 2;
+    pub const SNAP: u8 = 3;
+    pub const SNAP_TOPK: u8 = 4;
+    pub const UORO: u8 = 5;
+    pub const RFLO: u8 = 6;
+}
+
+pub(crate) use crate::runtime::serde::check_state_tag;
 
 /// Which algorithm to build — the coordinator's config surface.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -158,6 +194,79 @@ impl Method {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cells::Arch;
+
+    #[test]
+    fn save_load_round_trip_is_bitwise_for_every_method() {
+        // Drive each algorithm for a few steps, snapshot at an update
+        // boundary, restore into a freshly built instance, then continue
+        // both side by side: states and gradients must stay bit-identical.
+        let methods = [
+            Method::Bptt,
+            Method::Rtrl,
+            Method::SparseRtrl,
+            Method::Snap(1),
+            Method::Snap(2),
+            Method::SnapTopK(2),
+            Method::Uoro,
+            Method::Rflo,
+        ];
+        for m in methods {
+            let mut rng = Pcg32::seeded(0x5eed);
+            let cell = Arch::Gru.build(6, 3, 0.5, &mut rng);
+            let theta = cell.init_params(&mut rng);
+            let p = cell.num_params();
+            let mut build_rng_a = Pcg32::seeded(77);
+            let mut build_rng_b = Pcg32::seeded(1234); // different UORO stream
+            let mut a = m.build(cell.as_ref(), &mut build_rng_a);
+            let mut b = m.build(cell.as_ref(), &mut build_rng_b);
+            let mut g = vec![0.0f32; p];
+            for t in 0..5 {
+                let x: Vec<f32> = (0..3).map(|i| ((t * 3 + i) as f32).sin()).collect();
+                a.step(&theta, &x);
+                let c: Vec<f32> = (0..cell.hidden_size()).map(|i| (i as f32) - 2.0).collect();
+                a.inject_loss(&c, &mut g);
+                a.flush(&theta, &mut g); // update boundary (BPTT window drains)
+            }
+            let mut w = Writer::new();
+            a.save_state(&mut w);
+            let blob = w.into_bytes();
+            b.load_state(&mut Reader::new(&blob)).unwrap_or_else(|e| {
+                panic!("{}: load_state failed: {e}", m.name());
+            });
+            for t in 0..4 {
+                let x: Vec<f32> = (0..3).map(|i| ((t * 7 + i) as f32).cos()).collect();
+                let c: Vec<f32> = (0..cell.hidden_size()).map(|i| 0.5 - (i as f32)).collect();
+                let mut ga = vec![0.0f32; p];
+                let mut gb = vec![0.0f32; p];
+                a.step(&theta, &x);
+                a.inject_loss(&c, &mut ga);
+                a.flush(&theta, &mut ga);
+                b.step(&theta, &x);
+                b.inject_loss(&c, &mut gb);
+                b.flush(&theta, &mut gb);
+                for (va, vb) in ga.iter().zip(&gb) {
+                    assert_eq!(va.to_bits(), vb.to_bits(), "{} diverged after restore", m.name());
+                }
+                for (va, vb) in a.state().iter().zip(b.state()) {
+                    assert_eq!(va.to_bits(), vb.to_bits(), "{} state diverged", m.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn load_state_rejects_the_wrong_method() {
+        let mut rng = Pcg32::seeded(901);
+        let cell = Arch::Gru.build(5, 2, 1.0, &mut rng);
+        let snap = Method::Snap(1).build(cell.as_ref(), &mut rng);
+        let mut w = Writer::new();
+        snap.save_state(&mut w);
+        let blob = w.into_bytes();
+        let mut uoro = Method::Uoro.build(cell.as_ref(), &mut rng);
+        let e = uoro.load_state(&mut Reader::new(&blob)).unwrap_err();
+        assert!(e.to_string().contains("does not match"), "{e}");
+    }
 
     #[test]
     fn method_parsing() {

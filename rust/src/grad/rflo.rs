@@ -7,7 +7,9 @@
 //! even the diagonal dynamics term that SnAp-1 keeps (eq. 3).
 
 use crate::cells::Cell;
-use crate::grad::GradAlgo;
+use crate::errors::Result;
+use crate::grad::{check_state_tag, state_tags, GradAlgo};
+use crate::runtime::serde::{Reader, Writer};
 use crate::sparse::coljac::ColJacobian;
 use crate::sparse::immediate::ImmediateJac;
 
@@ -89,6 +91,48 @@ impl GradAlgo for Rflo<'_> {
 
     fn tracking_memory_floats(&self) -> usize {
         self.j.nnz()
+    }
+
+    fn save_state(&self, w: &mut Writer) {
+        w.put_u8(state_tags::RFLO);
+        w.put_f32(self.lambda);
+        w.put_u64(self.j.structure_fingerprint());
+        w.put_f32s(&self.s);
+        w.put_f32s(self.j.vals());
+    }
+
+    fn load_state(&mut self, r: &mut Reader<'_>) -> Result<()> {
+        check_state_tag(r.get_u8()?, state_tags::RFLO, &self.name())?;
+        let lambda = r.get_f32()?;
+        crate::ensure!(
+            lambda.to_bits() == self.lambda.to_bits(),
+            "RFLO λ mismatch: checkpoint {lambda} vs run {}",
+            self.lambda
+        );
+        let fp = r.get_u64()?;
+        let here = self.j.structure_fingerprint();
+        crate::ensure!(
+            fp == here,
+            "RFLO influence-pattern fingerprint mismatch \
+             (checkpoint {fp:#018x} vs rebuilt {here:#018x})"
+        );
+        let s = r.get_f32s()?;
+        crate::ensure!(
+            s.len() == self.s.len(),
+            "RFLO state length mismatch: checkpoint {} vs run {}",
+            s.len(),
+            self.s.len()
+        );
+        let vals = r.get_f32s()?;
+        crate::ensure!(
+            vals.len() == self.j.nnz(),
+            "RFLO influence nnz mismatch: checkpoint {} vs run {}",
+            vals.len(),
+            self.j.nnz()
+        );
+        self.s = s;
+        self.j.vals_mut().copy_from_slice(&vals);
+        Ok(())
     }
 }
 

@@ -8,7 +8,9 @@
 //! parameters is already built into the cells' θ layout).
 
 use crate::cells::Cell;
-use crate::grad::GradAlgo;
+use crate::errors::Result;
+use crate::grad::{check_state_tag, state_tags, GradAlgo};
+use crate::runtime::serde::{Reader, Writer};
 use crate::sparse::csr::Csr;
 use crate::sparse::immediate::ImmediateJac;
 use crate::tensor::matrix::Matrix;
@@ -128,6 +130,43 @@ impl GradAlgo for Rtrl<'_> {
 
     fn tracking_memory_floats(&self) -> usize {
         self.j.len() + self.d_csr.as_ref().map(|c| c.nnz()).unwrap_or(0)
+    }
+
+    fn save_state(&self, w: &mut Writer) {
+        w.put_u8(state_tags::RTRL);
+        w.put_bool(self.sparse_dynamics);
+        w.put_f32s(&self.s);
+        // Full dense influence J (state × p). `d_csr` values are refreshed
+        // from D every step, so only the structure-free state travels.
+        w.put_f32s(self.j.as_slice());
+    }
+
+    fn load_state(&mut self, r: &mut Reader<'_>) -> Result<()> {
+        check_state_tag(r.get_u8()?, state_tags::RTRL, &self.name())?;
+        let sparse = r.get_bool()?;
+        crate::ensure!(
+            sparse == self.sparse_dynamics,
+            "RTRL variant mismatch: checkpoint '{}' vs run '{}'",
+            if sparse { "sparse-rtrl" } else { "rtrl" },
+            self.name()
+        );
+        let s = r.get_f32s()?;
+        crate::ensure!(
+            s.len() == self.s.len(),
+            "RTRL state length mismatch: checkpoint {} vs run {}",
+            s.len(),
+            self.s.len()
+        );
+        let j = r.get_f32s()?;
+        crate::ensure!(
+            j.len() == self.j.len(),
+            "RTRL influence size mismatch: checkpoint {} vs run {}",
+            j.len(),
+            self.j.len()
+        );
+        self.s = s;
+        self.j.as_mut_slice().copy_from_slice(&j);
+        Ok(())
     }
 }
 

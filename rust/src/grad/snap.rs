@@ -11,7 +11,9 @@
 //!   expensive as n grows (§3.3); once `P_n` saturates it *is* sparse RTRL.
 
 use crate::cells::Cell;
-use crate::grad::GradAlgo;
+use crate::errors::Result;
+use crate::grad::{check_state_tag, state_tags, GradAlgo};
+use crate::runtime::serde::{Reader, Writer};
 use crate::sparse::coljac::ColJacobian;
 use crate::sparse::immediate::ImmediateJac;
 use crate::sparse::pattern::{snap_pattern, Pattern};
@@ -120,6 +122,51 @@ impl GradAlgo for Snap<'_> {
 
     fn tracking_memory_floats(&self) -> usize {
         self.j.nnz()
+    }
+
+    fn save_state(&self, w: &mut Writer) {
+        w.put_u8(state_tags::SNAP);
+        w.put_u64(self.n as u64);
+        // The pattern is rebuilt from the cell on restore; the fingerprint
+        // proves the rebuilt CSC layout indexes the same (row, col) slots.
+        w.put_u64(self.j.structure_fingerprint());
+        w.put_f32s(&self.s);
+        w.put_f32s(self.j.vals());
+    }
+
+    fn load_state(&mut self, r: &mut Reader<'_>) -> Result<()> {
+        check_state_tag(r.get_u8()?, state_tags::SNAP, &self.name())?;
+        let n = r.get_u64()? as usize;
+        crate::ensure!(
+            n == self.n,
+            "SnAp order mismatch: checkpoint snap-{n} vs run snap-{}",
+            self.n
+        );
+        let fp = r.get_u64()?;
+        let here = self.j.structure_fingerprint();
+        crate::ensure!(
+            fp == here,
+            "SnAp influence-pattern fingerprint mismatch \
+             (checkpoint {fp:#018x} vs rebuilt {here:#018x}): \
+             the cell's sparsity pattern differs from the checkpointed run"
+        );
+        let s = r.get_f32s()?;
+        crate::ensure!(
+            s.len() == self.s.len(),
+            "SnAp state length mismatch: checkpoint {} vs run {}",
+            s.len(),
+            self.s.len()
+        );
+        let vals = r.get_f32s()?;
+        crate::ensure!(
+            vals.len() == self.j.nnz(),
+            "SnAp influence nnz mismatch: checkpoint {} vs run {}",
+            vals.len(),
+            self.j.nnz()
+        );
+        self.s = s;
+        self.j.vals_mut().copy_from_slice(&vals);
+        Ok(())
     }
 }
 

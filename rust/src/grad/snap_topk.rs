@@ -12,7 +12,9 @@
 //! the dense product keeps the full `k²p` term.)
 
 use crate::cells::Cell;
-use crate::grad::GradAlgo;
+use crate::errors::Result;
+use crate::grad::{check_state_tag, state_tags, GradAlgo};
+use crate::runtime::serde::{Reader, Writer};
 use crate::sparse::immediate::ImmediateJac;
 use crate::tensor::matrix::Matrix;
 use crate::tensor::ops::matmul_into;
@@ -144,6 +146,42 @@ impl GradAlgo for SnapTopK<'_> {
     fn tracking_memory_floats(&self) -> usize {
         // storage could be compressed to budget·p; dense here for simplicity
         self.budget * self.cell.num_params()
+    }
+
+    fn save_state(&self, w: &mut Writer) {
+        w.put_u8(state_tags::SNAP_TOPK);
+        w.put_u64(self.budget as u64);
+        w.put_f32s(&self.s);
+        // The kept pattern is adaptive (top-k per column per step), so the
+        // dense J — zeros included — is the canonical representation.
+        w.put_f32s(self.j.as_slice());
+    }
+
+    fn load_state(&mut self, r: &mut Reader<'_>) -> Result<()> {
+        check_state_tag(r.get_u8()?, state_tags::SNAP_TOPK, &self.name())?;
+        let budget = r.get_u64()? as usize;
+        crate::ensure!(
+            budget == self.budget,
+            "SnAp-TopK budget mismatch: checkpoint {budget} vs run {}",
+            self.budget
+        );
+        let s = r.get_f32s()?;
+        crate::ensure!(
+            s.len() == self.s.len(),
+            "SnAp-TopK state length mismatch: checkpoint {} vs run {}",
+            s.len(),
+            self.s.len()
+        );
+        let j = r.get_f32s()?;
+        crate::ensure!(
+            j.len() == self.j.len(),
+            "SnAp-TopK influence size mismatch: checkpoint {} vs run {}",
+            j.len(),
+            self.j.len()
+        );
+        self.s = s;
+        self.j.as_mut_slice().copy_from_slice(&j);
+        Ok(())
     }
 }
 

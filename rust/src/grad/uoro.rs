@@ -15,7 +15,9 @@
 //! noise is what the paper's Fig. 3 exposes.
 
 use crate::cells::Cell;
-use crate::grad::GradAlgo;
+use crate::errors::Result;
+use crate::grad::{check_state_tag, state_tags, GradAlgo};
+use crate::runtime::serde::{Reader, Writer};
 use crate::sparse::immediate::ImmediateJac;
 use crate::tensor::matrix::Matrix;
 use crate::tensor::ops::{dot, matvec};
@@ -123,6 +125,43 @@ impl GradAlgo for Uoro<'_> {
 
     fn tracking_memory_floats(&self) -> usize {
         self.u.len() + self.v.len()
+    }
+
+    fn save_state(&self, w: &mut Writer) {
+        w.put_u8(state_tags::UORO);
+        // The ν sign stream is part of the estimator's state: resuming with
+        // a reseeded stream would be a *different* (still unbiased) run, not
+        // a bitwise continuation.
+        let (state, inc) = self.rng.state_parts();
+        w.put_u64(state);
+        w.put_u64(inc);
+        w.put_f32s(&self.s);
+        w.put_f32s(&self.u);
+        w.put_f32s(&self.v);
+    }
+
+    fn load_state(&mut self, r: &mut Reader<'_>) -> Result<()> {
+        check_state_tag(r.get_u8()?, state_tags::UORO, "uoro")?;
+        let state = r.get_u64()?;
+        let inc = r.get_u64()?;
+        let s = r.get_f32s()?;
+        let u = r.get_f32s()?;
+        let v = r.get_f32s()?;
+        crate::ensure!(
+            s.len() == self.s.len() && u.len() == self.u.len() && v.len() == self.v.len(),
+            "UORO state shape mismatch: checkpoint ({}, {}, {}) vs run ({}, {}, {})",
+            s.len(),
+            u.len(),
+            v.len(),
+            self.s.len(),
+            self.u.len(),
+            self.v.len()
+        );
+        self.rng = Pcg32::from_parts(state, inc);
+        self.s = s;
+        self.u = u;
+        self.v = v;
+        Ok(())
     }
 }
 

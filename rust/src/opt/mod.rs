@@ -2,6 +2,15 @@
 //! instances: one for the recurrent θ (fed by the RTRL-family gradient) and
 //! one for the readout φ (fed by exact backprop). Paper §5.1: Adam with
 //! β1=0.9, β2=0.999, ε=1e-8.
+//!
+//! Optimizer *moments* are part of the training state: a kill/resume that
+//! dropped Adam's `m`/`v` (or its bias-correction step count `t`) would not
+//! be bitwise identical to an uninterrupted run. [`Optimizer::save_state`] /
+//! [`Optimizer::load_state`] serialize everything an instance needs through
+//! the `runtime::serde` mini-format (see `train::checkpoint`).
+
+use crate::errors::Result;
+use crate::runtime::serde::{check_state_tag, Reader, Writer};
 
 /// Uniform optimizer interface: consume a gradient, write the update
 /// in-place into `params`, and zero the gradient buffer.
@@ -10,7 +19,20 @@ pub trait Optimizer {
     fn name(&self) -> &'static str;
     fn lr(&self) -> f32;
     fn set_lr(&mut self, lr: f32);
+
+    /// Serialize the complete mutable state (hyperparameters included, so a
+    /// resumed run steps exactly like the uninterrupted one).
+    fn save_state(&self, w: &mut Writer);
+
+    /// Restore a [`save_state`](Optimizer::save_state) snapshot. Fails with
+    /// a named error on an optimizer-kind or dimension mismatch.
+    fn load_state(&mut self, r: &mut Reader<'_>) -> Result<()>;
 }
+
+/// Serialization tags (first byte of every optimizer state blob; verified
+/// through `runtime::serde`'s shared `check_state_tag`).
+const TAG_SGD: u8 = 1;
+const TAG_ADAM: u8 = 2;
 
 /// Run one optimizer step expressed as a parameter **delta** rather than an
 /// in-place update: `delta` must be zeroed by the caller; after the call it
@@ -66,6 +88,30 @@ impl Optimizer for Sgd {
     fn set_lr(&mut self, lr: f32) {
         self.lr = lr;
     }
+
+    fn save_state(&self, w: &mut Writer) {
+        w.put_u8(TAG_SGD);
+        w.put_f32(self.lr);
+        w.put_f32(self.momentum);
+        w.put_f32s(&self.velocity);
+    }
+
+    fn load_state(&mut self, r: &mut Reader<'_>) -> Result<()> {
+        check_state_tag(r.get_u8()?, TAG_SGD, "sgd optimizer")?;
+        let lr = r.get_f32()?;
+        let momentum = r.get_f32()?;
+        let velocity = r.get_f32s()?;
+        crate::ensure!(
+            velocity.len() == self.velocity.len(),
+            "sgd state dimension mismatch: checkpoint {} vs run {}",
+            velocity.len(),
+            self.velocity.len()
+        );
+        self.lr = lr;
+        self.momentum = momentum;
+        self.velocity = velocity;
+        Ok(())
+    }
 }
 
 /// Adam (Kingma & Ba 2015) with the paper's hyperparameters as defaults.
@@ -116,6 +162,42 @@ impl Optimizer for Adam {
 
     fn set_lr(&mut self, lr: f32) {
         self.lr = lr;
+    }
+
+    fn save_state(&self, w: &mut Writer) {
+        w.put_u8(TAG_ADAM);
+        w.put_f32(self.lr);
+        w.put_f32(self.beta1);
+        w.put_f32(self.beta2);
+        w.put_f32(self.eps);
+        w.put_u64(self.t);
+        w.put_f32s(&self.m);
+        w.put_f32s(&self.v);
+    }
+
+    fn load_state(&mut self, r: &mut Reader<'_>) -> Result<()> {
+        check_state_tag(r.get_u8()?, TAG_ADAM, "adam optimizer")?;
+        let lr = r.get_f32()?;
+        let beta1 = r.get_f32()?;
+        let beta2 = r.get_f32()?;
+        let eps = r.get_f32()?;
+        let t = r.get_u64()?;
+        let m = r.get_f32s()?;
+        let v = r.get_f32s()?;
+        crate::ensure!(
+            m.len() == self.m.len() && v.len() == self.v.len(),
+            "adam state dimension mismatch: checkpoint {} vs run {}",
+            m.len(),
+            self.m.len()
+        );
+        self.lr = lr;
+        self.beta1 = beta1;
+        self.beta2 = beta2;
+        self.eps = eps;
+        self.t = t;
+        self.m = m;
+        self.v = v;
+        Ok(())
     }
 }
 
@@ -184,6 +266,50 @@ mod tests {
         for (a, b) in params.iter().zip(&params2) {
             assert!((a - b).abs() < 1e-6, "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn adam_state_round_trip_is_bitwise() {
+        // Step A for a while, snapshot, keep stepping A while a restored B
+        // steps in parallel: both must produce identical parameters.
+        let mut a = Adam::new(3, 0.01);
+        let mut pa = vec![0.1f32, -0.2, 0.3];
+        for i in 0..7 {
+            let mut g = vec![0.5 - i as f32 * 0.1, 0.2, -0.4];
+            a.step(&mut pa, &mut g);
+        }
+        let mut w = Writer::new();
+        a.save_state(&mut w);
+        let blob = w.into_bytes();
+        let mut b = Adam::new(3, 0.5); // wrong lr on purpose: load restores it
+        b.load_state(&mut Reader::new(&blob)).unwrap();
+        let mut pb = pa.clone();
+        for i in 0..9 {
+            let g = vec![0.3, -0.1 * i as f32, 0.7];
+            let mut ga = g.clone();
+            a.step(&mut pa, &mut ga);
+            let mut gb = g;
+            b.step(&mut pb, &mut gb);
+        }
+        for (x, y) in pa.iter().zip(&pb) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn optimizer_state_mismatches_are_named_errors() {
+        let sgd = Sgd::new(2, 0.1, 0.9);
+        let mut w = Writer::new();
+        sgd.save_state(&mut w);
+        let blob = w.into_bytes();
+        // Kind mismatch: SGD blob into Adam.
+        let mut adam = Adam::new(2, 0.1);
+        let e = adam.load_state(&mut Reader::new(&blob)).unwrap_err();
+        assert!(e.to_string().contains("does not match"), "{e}");
+        // Dimension mismatch: 2-dim blob into 3-dim SGD.
+        let mut sgd3 = Sgd::new(3, 0.1, 0.9);
+        let e = sgd3.load_state(&mut Reader::new(&blob)).unwrap_err();
+        assert!(e.to_string().contains("dimension mismatch"), "{e}");
     }
 
     #[test]

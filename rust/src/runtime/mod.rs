@@ -7,9 +7,15 @@
 //! Offline builds (no crates.io, so no `xla` crate) ship a graceful stub
 //! client — see [`pjrt`]; every caller treats `PjrtRuntime::cpu()` errors as
 //! "skip the PJRT path", so tests and benches stay green.
+//!
+//! This layer also owns the repo's binary persistence substrate: [`serde`]
+//! is the hand-rolled versioned/checksummed container format that the
+//! checkpoint subsystem (`train::checkpoint`) serializes training state
+//! through.
 
 pub mod artifacts;
 pub mod pjrt;
+pub mod serde;
 
 pub use artifacts::{artifacts_dir, ArtifactSet};
 pub use pjrt::{LoadedModule, PjrtRuntime};

@@ -1,0 +1,512 @@
+//! Hand-rolled binary serialization — the on-disk mini-format behind the
+//! checkpoint subsystem (`train::checkpoint`).
+//!
+//! The workspace builds with **zero external dependencies** (no serde, no
+//! bincode), so this module provides the minimum the repo needs to persist
+//! training state safely:
+//!
+//! * [`Writer`] / [`Reader`] — little-endian primitives plus
+//!   length-prefixed slices and strings. Every `Reader` accessor is
+//!   fallible: a short buffer yields a **named error** ("truncated …")
+//!   instead of a panic, so a half-written file diagnoses cleanly.
+//! * [`encode_container`] / [`decode_container`] — the versioned envelope:
+//!
+//!   ```text
+//!   offset  size  field
+//!   0       8     magic  b"SNAPRTRL"
+//!   8       4     format version (u32 LE)
+//!   12      8     payload length in bytes (u64 LE)
+//!   20      n     payload
+//!   20+n    8     FNV-1a-64 checksum of the payload (u64 LE)
+//!   ```
+//!
+//!   Decoding checks, in order: minimum length, magic, version, declared
+//!   length vs actual, checksum — each failure is a distinct named error
+//!   (the corruption matrix in `rust/tests/checkpoint_resume.rs` exercises
+//!   all of them).
+//! * [`Fnv64`] / [`fnv1a64`] — the checksum, also used for structural
+//!   fingerprints (e.g. `ColJacobian::structure_fingerprint` in
+//!   `sparse::coljac`, which guards a restored influence matrix against a
+//!   pattern mismatch).
+//!
+//! All multi-byte values are little-endian; f32/f64 travel as their IEEE-754
+//! bit patterns, so NaN payloads round-trip exactly — a requirement for the
+//! bitwise-identical-resume guarantee (pre-first-eval curve points are NaN).
+
+use crate::errors::{Error, Result};
+
+/// Magic prefix of every container produced by this module.
+pub const MAGIC: [u8; 8] = *b"SNAPRTRL";
+
+/// Container header + trailer overhead in bytes (magic + version + length
+/// prefix + checksum).
+pub const CONTAINER_OVERHEAD: usize = 8 + 4 + 8 + 8;
+
+// ---------------------------------------------------------------------------
+// FNV-1a 64
+// ---------------------------------------------------------------------------
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+/// Incremental FNV-1a-64 hasher (checksums and structural fingerprints).
+#[derive(Clone, Copy, Debug)]
+pub struct Fnv64(u64);
+
+impl Fnv64 {
+    pub fn new() -> Self {
+        Fnv64(FNV_OFFSET)
+    }
+
+    #[inline]
+    pub fn write_u8(&mut self, b: u8) {
+        self.0 = (self.0 ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+
+    pub fn write_bytes(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.write_u8(b);
+        }
+    }
+
+    pub fn write_u64(&mut self, v: u64) {
+        self.write_bytes(&v.to_le_bytes());
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// One-shot FNV-1a-64 over a byte slice.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = Fnv64::new();
+    h.write_bytes(bytes);
+    h.finish()
+}
+
+// ---------------------------------------------------------------------------
+// Writer
+// ---------------------------------------------------------------------------
+
+/// Append-only little-endian byte sink.
+#[derive(Clone, Debug, Default)]
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Self {
+        Writer { buf: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_bool(&mut self, v: bool) {
+        self.buf.push(v as u8);
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// f32 as its IEEE-754 bit pattern (NaN payloads preserved).
+    pub fn put_f32(&mut self, v: f32) {
+        self.put_u32(v.to_bits());
+    }
+
+    /// f64 as its IEEE-754 bit pattern (NaN payloads preserved).
+    pub fn put_f64(&mut self, v: f64) {
+        self.put_u64(v.to_bits());
+    }
+
+    /// Length-prefixed raw bytes.
+    pub fn put_bytes(&mut self, bytes: &[u8]) {
+        self.put_u64(bytes.len() as u64);
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn put_str(&mut self, s: &str) {
+        self.put_bytes(s.as_bytes());
+    }
+
+    /// Length-prefixed f32 slice (count, then bit patterns).
+    pub fn put_f32s(&mut self, xs: &[f32]) {
+        self.put_u64(xs.len() as u64);
+        for &x in xs {
+            self.put_f32(x);
+        }
+    }
+
+    /// Length-prefixed u64 slice.
+    pub fn put_u64s(&mut self, xs: &[u64]) {
+        self.put_u64(xs.len() as u64);
+        for &x in xs {
+            self.put_u64(x);
+        }
+    }
+
+    /// Length-prefixed bool slice (one byte per flag).
+    pub fn put_bools(&mut self, xs: &[bool]) {
+        self.put_u64(xs.len() as u64);
+        for &x in xs {
+            self.put_bool(x);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reader
+// ---------------------------------------------------------------------------
+
+/// Fallible little-endian cursor over a byte slice. Every accessor checks
+/// bounds and returns a "truncated" error rather than panicking.
+#[derive(Clone, Debug)]
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(Error::msg(format!(
+                "truncated data: wanted {n} bytes at offset {}, only {} left",
+                self.pos,
+                self.remaining()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn get_u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn get_bool(&mut self) -> Result<bool> {
+        Ok(self.get_u8()? != 0)
+    }
+
+    pub fn get_u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn get_u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    pub fn get_f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.get_u32()?))
+    }
+
+    pub fn get_f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.get_u64()?))
+    }
+
+    /// Bounded length prefix: rejects counts that cannot fit in the
+    /// remaining buffer, so a corrupt length cannot trigger a huge
+    /// allocation before the shortfall is noticed.
+    fn get_len(&mut self, elem_bytes: usize) -> Result<usize> {
+        let n = self.get_u64()?;
+        let need = (n as u128) * elem_bytes.max(1) as u128;
+        if need > self.remaining() as u128 {
+            return Err(Error::msg(format!(
+                "truncated data: length prefix claims {n} elements \
+                 ({need} bytes) but only {} bytes remain",
+                self.remaining()
+            )));
+        }
+        Ok(n as usize)
+    }
+
+    pub fn get_bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.get_len(1)?;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    pub fn get_str(&mut self) -> Result<String> {
+        let bytes = self.get_bytes()?;
+        String::from_utf8(bytes).map_err(|e| Error::msg(format!("invalid UTF-8 string: {e}")))
+    }
+
+    pub fn get_f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.get_len(4)?;
+        (0..n).map(|_| self.get_f32()).collect()
+    }
+
+    pub fn get_u64s(&mut self) -> Result<Vec<u64>> {
+        let n = self.get_len(8)?;
+        (0..n).map(|_| self.get_u64()).collect()
+    }
+
+    pub fn get_bools(&mut self) -> Result<Vec<bool>> {
+        let n = self.get_len(1)?;
+        (0..n).map(|_| self.get_bool()).collect()
+    }
+
+    /// Fails if any bytes are left — catches encoder/decoder drift early.
+    pub fn expect_end(&self) -> Result<()> {
+        if self.remaining() != 0 {
+            return Err(Error::msg(format!(
+                "{} unexpected trailing bytes after the last field",
+                self.remaining()
+            )));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Versioned container
+// ---------------------------------------------------------------------------
+
+/// Wrap `payload` in the magic/version/length/checksum envelope.
+pub fn encode_container(version: u32, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(CONTAINER_OVERHEAD + payload.len());
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&version.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(payload);
+    out.extend_from_slice(&fnv1a64(payload).to_le_bytes());
+    out
+}
+
+/// Verify a state blob's leading tag byte. Shared by every
+/// `GradAlgo::load_state` / `Optimizer::load_state` implementation so a
+/// checkpoint restored onto the wrong method/optimizer is one consistent
+/// named error.
+pub fn check_state_tag(got: u8, want: u8, expected: &str) -> Result<()> {
+    if got != want {
+        return Err(Error::msg(format!(
+            "state tag {got} does not match this run's '{expected}' (expected tag {want})"
+        )));
+    }
+    Ok(())
+}
+
+/// Validate the envelope and return the payload slice. Checks run in a
+/// fixed order (length → magic → version → declared length → checksum) so
+/// each corruption mode produces its own named error.
+pub fn decode_container(bytes: &[u8], expected_version: u32) -> Result<&[u8]> {
+    if bytes.len() < CONTAINER_OVERHEAD {
+        return Err(Error::msg(format!(
+            "truncated container: {} bytes is shorter than the {}-byte envelope",
+            bytes.len(),
+            CONTAINER_OVERHEAD
+        )));
+    }
+    if bytes[..8] != MAGIC {
+        return Err(Error::msg("bad magic: not a snap-rtrl binary container"));
+    }
+    let version = u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]);
+    if version != expected_version {
+        return Err(Error::msg(format!(
+            "unsupported format version {version} (this build reads version {expected_version})"
+        )));
+    }
+    let payload_len = u64::from_le_bytes([
+        bytes[12], bytes[13], bytes[14], bytes[15], bytes[16], bytes[17], bytes[18], bytes[19],
+    ]);
+    // Widen before adding: a corrupt length near u64::MAX must classify as
+    // truncation, not overflow-panic (debug) or wrap into nonsense (release).
+    let expected_total = CONTAINER_OVERHEAD as u128 + payload_len as u128;
+    if (bytes.len() as u128) < expected_total {
+        return Err(Error::msg(format!(
+            "truncated container: payload declares {payload_len} bytes but the file holds \
+             only {} of the expected {expected_total}",
+            bytes.len()
+        )));
+    }
+    if (bytes.len() as u128) > expected_total {
+        return Err(Error::msg(format!(
+            "corrupt container: {} trailing bytes after the checksum",
+            bytes.len() as u128 - expected_total
+        )));
+    }
+    let expected_total = expected_total as usize;
+    let payload_len = payload_len as usize;
+    let payload = &bytes[20..20 + payload_len];
+    let stored = u64::from_le_bytes([
+        bytes[expected_total - 8],
+        bytes[expected_total - 7],
+        bytes[expected_total - 6],
+        bytes[expected_total - 5],
+        bytes[expected_total - 4],
+        bytes[expected_total - 3],
+        bytes[expected_total - 2],
+        bytes[expected_total - 1],
+    ]);
+    let computed = fnv1a64(payload);
+    if stored != computed {
+        return Err(Error::msg(format!(
+            "checksum mismatch: stored {stored:#018x}, computed {computed:#018x} — file corrupt"
+        )));
+    }
+    Ok(payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primitives_round_trip() {
+        let mut w = Writer::new();
+        w.put_u8(7);
+        w.put_bool(true);
+        w.put_u32(0xdead_beef);
+        w.put_u64(u64::MAX - 3);
+        w.put_f32(-1.5);
+        w.put_f64(f64::NAN);
+        w.put_str("snañ-rtrl");
+        w.put_bytes(&[1, 2, 3]);
+        w.put_f32s(&[0.0, -0.0, 3.25]);
+        w.put_u64s(&[9, 8]);
+        w.put_bools(&[true, false, true]);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert_eq!(r.get_u8().unwrap(), 7);
+        assert!(r.get_bool().unwrap());
+        assert_eq!(r.get_u32().unwrap(), 0xdead_beef);
+        assert_eq!(r.get_u64().unwrap(), u64::MAX - 3);
+        assert_eq!(r.get_f32().unwrap(), -1.5);
+        assert!(r.get_f64().unwrap().is_nan());
+        assert_eq!(r.get_str().unwrap(), "snañ-rtrl");
+        assert_eq!(r.get_bytes().unwrap(), vec![1, 2, 3]);
+        let f = r.get_f32s().unwrap();
+        assert_eq!(f.len(), 3);
+        assert_eq!(f[1].to_bits(), (-0.0f32).to_bits(), "signed zero preserved");
+        assert_eq!(r.get_u64s().unwrap(), vec![9, 8]);
+        assert_eq!(r.get_bools().unwrap(), vec![true, false, true]);
+        r.expect_end().unwrap();
+    }
+
+    #[test]
+    fn short_reads_are_named_truncation_errors() {
+        let mut w = Writer::new();
+        w.put_u64(42);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes[..5]);
+        let e = r.get_u64().unwrap_err();
+        assert!(e.to_string().contains("truncated"), "{e}");
+    }
+
+    #[test]
+    fn absurd_length_prefix_is_rejected_without_allocation() {
+        let mut w = Writer::new();
+        w.put_u64(u64::MAX); // claims ~2^64 f32s
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        let e = r.get_f32s().unwrap_err();
+        assert!(e.to_string().contains("truncated"), "{e}");
+    }
+
+    #[test]
+    fn container_round_trip() {
+        let payload = b"hello checkpoint".to_vec();
+        let c = encode_container(3, &payload);
+        assert_eq!(decode_container(&c, 3).unwrap(), &payload[..]);
+    }
+
+    #[test]
+    fn container_rejects_each_corruption_mode_with_its_own_error() {
+        let c = encode_container(1, b"payload bytes here");
+
+        // bad magic
+        let mut bad = c.clone();
+        bad[0] ^= 0xff;
+        let e = decode_container(&bad, 1).unwrap_err();
+        assert!(e.to_string().contains("magic"), "{e}");
+
+        // version bump
+        let mut bad = c.clone();
+        bad[8] = bad[8].wrapping_add(1);
+        let e = decode_container(&bad, 1).unwrap_err();
+        assert!(e.to_string().contains("version"), "{e}");
+
+        // short read
+        let e = decode_container(&c[..c.len() - 3], 1).unwrap_err();
+        assert!(e.to_string().contains("truncated"), "{e}");
+
+        // flipped checksum byte (last byte is part of the stored checksum)
+        let mut bad = c.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x01;
+        let e = decode_container(&bad, 1).unwrap_err();
+        assert!(e.to_string().contains("checksum"), "{e}");
+
+        // flipped payload byte also lands on the checksum check
+        let mut bad = c.clone();
+        bad[21] ^= 0x40;
+        let e = decode_container(&bad, 1).unwrap_err();
+        assert!(e.to_string().contains("checksum"), "{e}");
+
+        // trailing garbage
+        let mut bad = c.clone();
+        bad.push(0);
+        let e = decode_container(&bad, 1).unwrap_err();
+        assert!(e.to_string().contains("trailing"), "{e}");
+
+        // length field corrupted to ~u64::MAX: must be a named truncation
+        // error, not an arithmetic-overflow panic (debug) or wrap (release)
+        let mut bad = c.clone();
+        for b in &mut bad[12..20] {
+            *b = 0xff;
+        }
+        let e = decode_container(&bad, 1).unwrap_err();
+        assert!(e.to_string().contains("truncated"), "{e}");
+    }
+
+    #[test]
+    fn check_state_tag_names_the_mismatch() {
+        check_state_tag(3, 3, "snap-1").unwrap();
+        let e = check_state_tag(5, 3, "snap-1").unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("does not match") && msg.contains("snap-1"), "{msg}");
+    }
+
+    #[test]
+    fn fnv_matches_known_vectors() {
+        // Standard FNV-1a test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+}

@@ -126,6 +126,39 @@ impl ColJacobian {
         (&self.row_idx[s..e], &self.vals[s..e])
     }
 
+    /// Raw value storage in CSC order of the fixed pattern (checkpointing:
+    /// the values are the whole mutable state — the structure is rebuilt
+    /// deterministically from the cell, then verified against
+    /// [`structure_fingerprint`](Self::structure_fingerprint)).
+    #[inline]
+    pub fn vals(&self) -> &[f32] {
+        &self.vals
+    }
+
+    /// Mutable raw value storage (structure untouched).
+    #[inline]
+    pub fn vals_mut(&mut self) -> &mut [f32] {
+        &mut self.vals
+    }
+
+    /// Order-sensitive FNV-1a-64 over the structural arrays (shape,
+    /// `col_ptr`, `row_idx`). Two `ColJacobian`s share a fingerprint iff
+    /// they index the same value layout, so a checkpoint restored onto a
+    /// rebuilt pattern can prove the `vals` slots still mean the same
+    /// `(row, col)` entries.
+    pub fn structure_fingerprint(&self) -> u64 {
+        let mut h = crate::runtime::serde::Fnv64::new();
+        h.write_u64(self.state as u64);
+        h.write_u64(self.params as u64);
+        for &p in &self.col_ptr {
+            h.write_u64(p as u64);
+        }
+        for &r in &self.row_idx {
+            h.write_u64(r as u64);
+        }
+        h.finish()
+    }
+
     /// Reset the influence to zero (sequence boundary).
     pub fn reset(&mut self) {
         self.vals.iter_mut().for_each(|v| *v = 0.0);
@@ -490,6 +523,33 @@ mod tests {
             .unwrap();
         set_thread_intra_op_parallelism(true);
         assert!(intra_op_parallelism_enabled());
+    }
+
+    #[test]
+    fn structure_fingerprint_detects_pattern_changes() {
+        let (p, _, _) = setup(6, 12, 21);
+        let a = ColJacobian::from_pattern(&p);
+        let b = ColJacobian::from_pattern(&p);
+        assert_eq!(a.structure_fingerprint(), b.structure_fingerprint());
+        // A different pattern (extra diagonal entries) must change it.
+        let q = p.union(&Pattern::from_coords(p.rows(), p.cols(), &[(p.rows() - 1, 0)]));
+        if q.nnz() != p.nnz() {
+            let c = ColJacobian::from_pattern(&q);
+            assert_ne!(a.structure_fingerprint(), c.structure_fingerprint());
+        }
+    }
+
+    #[test]
+    fn vals_round_trip_through_accessors() {
+        let (p, d, ij) = setup(5, 10, 23);
+        let mut a = ColJacobian::from_pattern(&p);
+        a.update(&d, &ij);
+        let saved: Vec<f32> = a.vals().to_vec();
+        let mut b = ColJacobian::from_pattern(&p);
+        b.vals_mut().copy_from_slice(&saved);
+        for (x, y) in a.to_dense().as_slice().iter().zip(b.to_dense().as_slice()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
     }
 
     #[test]

@@ -1,0 +1,764 @@
+//! Checkpoint/resume subsystem — snapshot **everything** a training run
+//! needs to continue bit for bit after a kill.
+//!
+//! The paper's whole premise is *online* training: weights update every
+//! timestep, so a production run is one long unbroken stream and losing the
+//! process means losing the run unless the full training state can be
+//! restored exactly. A [`TrainCheckpoint`] therefore carries:
+//!
+//! * the recurrent parameters θ and the readout parameters,
+//! * both optimizers' complete state (Adam moments + bias-correction step),
+//! * every lane's gradient-algorithm tracking state
+//!   ([`GradAlgo::save_state`](crate::grad::GradAlgo::save_state) blobs:
+//!   SnAp/RFLO `ColJacobian` values guarded by a pattern fingerprint, dense
+//!   `J` for RTRL variants, rank-1 `ũ/ṽ` + private sign stream for UORO),
+//! * every RNG stream: per-lane slot streams, the feeder's per-lane *data*
+//!   streams (the data cursor — crops are pure functions of these streams),
+//!   and the driver's evaluation stream,
+//! * driver progress: next step, optimizer step count, curriculum level,
+//!   the learning curve so far, per-lane token/FLOP accounting, and the
+//!   pruner's keep mask when pruning is active.
+//!
+//! ## Resume granularity (per gradient method)
+//!
+//! | method        | resumable at                                          |
+//! |---------------|-------------------------------------------------------|
+//! | SnAp-n        | any update boundary (influence values + pattern fp)   |
+//! | SnAp-TopK     | any update boundary (dense influence)                 |
+//! | RTRL / sparse | any update boundary (dense influence)                 |
+//! | UORO          | any update boundary (`ũ`, `ṽ`, sign stream)           |
+//! | RFLO          | any update boundary (influence values + pattern fp)   |
+//! | BPTT / Frozen | **flushed** update boundaries only: the window caches |
+//! |               | are not serialized (window-boundary-only policy); the |
+//! |               | drivers only checkpoint at step boundaries, where the |
+//! |               | window has just been flushed, so this is every        |
+//! |               | checkpoint they ever take                             |
+//!
+//! ## On-disk format
+//!
+//! One file per checkpoint, `ckpt-step<NNNNNNNNNN>.bin`, wrapped in the
+//! versioned + checksummed [`runtime::serde`](crate::runtime::serde)
+//! container (magic `SNAPRTRL`, format version [`CHECKPOINT_VERSION`],
+//! length prefix, FNV-1a-64 payload checksum). Corrupt files — flipped
+//! bytes, short reads, version bumps — fail with named `errors.rs` errors
+//! that include the offending path, never a panic (exercised by
+//! `rust/tests/checkpoint_resume.rs`).
+//!
+//! Writes are **atomic and durable**: the file is first written to
+//! `<name>.bin.tmp`, fsynced, then renamed into place — a process kill
+//! mid-write leaves only the `.tmp` (swept at the next startup), and the
+//! fsync closes the OS-crash window where a rename becomes durable before
+//! the data it names. Retention is bounded: after each write the sink
+//! deletes the oldest checkpoints beyond `TrainConfig::checkpoint_keep`,
+//! never the snapshot it just wrote.
+//!
+//! The checkpoint embeds a [`ConfigKey`] of the run that wrote it; resume
+//! refuses a checkpoint whose key disagrees with the resuming run's config
+//! (method, arch, shape, seed, …), naming the first mismatching field.
+//!
+//! This is also the seam for multi-host lane sharding (ROADMAP): a shard
+//! restore is a checkpoint restore with a different lane mapping — the
+//! per-lane blobs are self-describing and independently addressable.
+
+use crate::errors::{Context as _, Error, Result};
+use crate::runtime::serde::{decode_container, encode_container, Reader, Writer};
+use crate::train::metrics::CurvePoint;
+use std::path::{Path, PathBuf};
+
+/// Format version of the checkpoint payload (bumped on layout changes; old
+/// versions are refused with a named error rather than misread).
+pub const CHECKPOINT_VERSION: u32 = 1;
+
+/// File-name prefix/suffix of checkpoint files inside a checkpoint dir.
+const FILE_PREFIX: &str = "ckpt-step";
+const FILE_SUFFIX: &str = ".bin";
+
+// ---------------------------------------------------------------------------
+// Config key
+// ---------------------------------------------------------------------------
+
+/// The configuration facts a checkpoint is only valid under. Everything the
+/// deterministic rebuild (cell masks, embedding, readout shapes, lane
+/// streams) derives from must match, or the restored state would be grafted
+/// onto a different model — and everything the *draw schedule* depends on
+/// (dataset identity by byte length, logging/eval cadence, pruning
+/// schedule) must match too, or the resumed run would silently diverge
+/// from the uninterrupted one. The learning rate is deliberately absent:
+/// the optimizer blobs restore it (moments are only meaningful with the lr
+/// they were accumulated under).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ConfigKey {
+    /// Task discriminator: `"char-lm"` or `"copy"`.
+    pub task: String,
+    pub method: String,
+    pub arch: String,
+    pub k: u64,
+    /// `TrainConfig::density` as f64 bits (exact comparison).
+    pub density_bits: u64,
+    pub batch: u64,
+    pub seq_len: u64,
+    pub truncation: u64,
+    pub seed: u64,
+    pub readout_hidden: u64,
+    pub embed_dim: u64,
+    /// Eval/curve cadence — changes the evaluation-RNG draw schedule.
+    pub log_every: u64,
+    /// Eval span — changes every evaluation's offset draw and window.
+    pub eval_span: u64,
+    /// Pruning schedule rendered as `{target:?}/{every}/{end}` (`None/…`
+    /// when pruning is off).
+    pub prune: String,
+    /// Training-source length in bytes (0 for the generated Copy task) —
+    /// a cheap dataset-identity witness: a resume pointed at different
+    /// bytes is almost always a different length.
+    pub train_bytes: u64,
+    /// Validation-source length in bytes (0 for Copy).
+    pub valid_bytes: u64,
+}
+
+impl ConfigKey {
+    /// Refuse a checkpoint whose writing run disagrees with the resuming
+    /// run on any key field, naming the first mismatch.
+    pub fn ensure_matches(&self, run: &ConfigKey) -> Result<()> {
+        fn diff<T: std::fmt::Display + PartialEq>(field: &str, ck: T, run: T) -> Result<()> {
+            if ck != run {
+                return Err(Error::msg(format!(
+                    "checkpoint config mismatch: {field} is '{ck}' in the checkpoint \
+                     but '{run}' in this run"
+                )));
+            }
+            Ok(())
+        }
+        diff("task", &self.task, &run.task)?;
+        diff("method", &self.method, &run.method)?;
+        diff("arch", &self.arch, &run.arch)?;
+        diff("k", self.k, run.k)?;
+        diff(
+            "density",
+            f64::from_bits(self.density_bits),
+            f64::from_bits(run.density_bits),
+        )?;
+        diff("batch", self.batch, run.batch)?;
+        diff("seq-len", self.seq_len, run.seq_len)?;
+        diff("truncation", self.truncation, run.truncation)?;
+        diff("seed", self.seed, run.seed)?;
+        diff("readout-hidden", self.readout_hidden, run.readout_hidden)?;
+        diff("embed-dim", self.embed_dim, run.embed_dim)?;
+        diff("log-every", self.log_every, run.log_every)?;
+        diff("eval-span", self.eval_span, run.eval_span)?;
+        diff("pruning schedule", &self.prune, &run.prune)?;
+        diff("train source bytes", self.train_bytes, run.train_bytes)?;
+        diff("valid source bytes", self.valid_bytes, run.valid_bytes)?;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint payload
+// ---------------------------------------------------------------------------
+
+/// One lane's share of the snapshot.
+#[derive(Clone, Debug)]
+pub struct LaneCheckpoint {
+    /// The slot's `Pcg32` stream (`state`, `inc`).
+    pub rng: (u64, u64),
+    pub tokens: u64,
+    pub flops_sum: f64,
+    pub flops_n: u64,
+    /// Opaque [`GradAlgo::save_state`](crate::grad::GradAlgo::save_state)
+    /// blob (self-tagged; decoded by the matching algorithm on restore).
+    pub algo: Vec<u8>,
+}
+
+/// The complete training snapshot. See the module docs for the inventory;
+/// field order here is the payload order on disk.
+#[derive(Clone, Debug)]
+pub struct TrainCheckpoint {
+    pub key: ConfigKey,
+    /// First step the resumed run executes (the writing run completed steps
+    /// `0..next_step`).
+    pub next_step: u64,
+    pub opt_steps: u64,
+    pub curriculum_level: u64,
+    pub last_train_bpc: f64,
+    pub last_valid_bpc: f64,
+    /// Recurrent parameters θ.
+    pub theta: Vec<f32>,
+    /// Readout parameters (flat, `Readout::params_flat` layout).
+    pub readout: Vec<f32>,
+    /// `Optimizer::save_state` blob for the recurrent optimizer.
+    pub opt_rec: Vec<u8>,
+    /// `Optimizer::save_state` blob for the readout optimizer.
+    pub opt_ro: Vec<u8>,
+    /// Driver RNG (evaluation offset draws).
+    pub driver_rng: (u64, u64),
+    /// The feeder's per-lane data streams — the data cursor.
+    pub data_rngs: Vec<(u64, u64)>,
+    pub lanes: Vec<LaneCheckpoint>,
+    /// Pruner keep mask when magnitude pruning is active.
+    pub pruner_keep: Option<Vec<bool>>,
+    /// Learning curve accumulated so far, so a resumed run's final curve is
+    /// identical to an uninterrupted run's.
+    pub curve: Vec<CurvePoint>,
+}
+
+impl TrainCheckpoint {
+    /// Serialize into the versioned + checksummed container.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        // key
+        w.put_str(&self.key.task);
+        w.put_str(&self.key.method);
+        w.put_str(&self.key.arch);
+        w.put_u64(self.key.k);
+        w.put_u64(self.key.density_bits);
+        w.put_u64(self.key.batch);
+        w.put_u64(self.key.seq_len);
+        w.put_u64(self.key.truncation);
+        w.put_u64(self.key.seed);
+        w.put_u64(self.key.readout_hidden);
+        w.put_u64(self.key.embed_dim);
+        w.put_u64(self.key.log_every);
+        w.put_u64(self.key.eval_span);
+        w.put_str(&self.key.prune);
+        w.put_u64(self.key.train_bytes);
+        w.put_u64(self.key.valid_bytes);
+        // progress
+        w.put_u64(self.next_step);
+        w.put_u64(self.opt_steps);
+        w.put_u64(self.curriculum_level);
+        w.put_f64(self.last_train_bpc);
+        w.put_f64(self.last_valid_bpc);
+        // parameters + optimizer state
+        w.put_f32s(&self.theta);
+        w.put_f32s(&self.readout);
+        w.put_bytes(&self.opt_rec);
+        w.put_bytes(&self.opt_ro);
+        // RNG streams
+        w.put_u64(self.driver_rng.0);
+        w.put_u64(self.driver_rng.1);
+        w.put_u64(self.data_rngs.len() as u64);
+        for &(s, i) in &self.data_rngs {
+            w.put_u64(s);
+            w.put_u64(i);
+        }
+        // lanes
+        w.put_u64(self.lanes.len() as u64);
+        for lane in &self.lanes {
+            w.put_u64(lane.rng.0);
+            w.put_u64(lane.rng.1);
+            w.put_u64(lane.tokens);
+            w.put_f64(lane.flops_sum);
+            w.put_u64(lane.flops_n);
+            w.put_bytes(&lane.algo);
+        }
+        // pruner
+        w.put_bool(self.pruner_keep.is_some());
+        if let Some(keep) = &self.pruner_keep {
+            w.put_bools(keep);
+        }
+        // curve
+        w.put_u64(self.curve.len() as u64);
+        for p in &self.curve {
+            w.put_u64(p.x);
+            w.put_f64(p.train_bpc);
+            w.put_f64(p.valid_bpc);
+            w.put_f64(p.aux);
+        }
+        encode_container(CHECKPOINT_VERSION, &w.into_bytes())
+    }
+
+    /// Parse a container produced by [`encode`](Self::encode). Every
+    /// corruption mode is a named error (see the module docs); the caller
+    /// adds the offending path as context.
+    pub fn decode(bytes: &[u8]) -> Result<TrainCheckpoint> {
+        let payload = decode_container(bytes, CHECKPOINT_VERSION)?;
+        let mut r = Reader::new(payload);
+        let key = ConfigKey {
+            task: r.get_str()?,
+            method: r.get_str()?,
+            arch: r.get_str()?,
+            k: r.get_u64()?,
+            density_bits: r.get_u64()?,
+            batch: r.get_u64()?,
+            seq_len: r.get_u64()?,
+            truncation: r.get_u64()?,
+            seed: r.get_u64()?,
+            readout_hidden: r.get_u64()?,
+            embed_dim: r.get_u64()?,
+            log_every: r.get_u64()?,
+            eval_span: r.get_u64()?,
+            prune: r.get_str()?,
+            train_bytes: r.get_u64()?,
+            valid_bytes: r.get_u64()?,
+        };
+        let next_step = r.get_u64()?;
+        let opt_steps = r.get_u64()?;
+        let curriculum_level = r.get_u64()?;
+        let last_train_bpc = r.get_f64()?;
+        let last_valid_bpc = r.get_f64()?;
+        let theta = r.get_f32s()?;
+        let readout = r.get_f32s()?;
+        let opt_rec = r.get_bytes()?;
+        let opt_ro = r.get_bytes()?;
+        let driver_rng = (r.get_u64()?, r.get_u64()?);
+        let n_data = r.get_u64()? as usize;
+        let mut data_rngs = Vec::with_capacity(n_data.min(1 << 16));
+        for _ in 0..n_data {
+            data_rngs.push((r.get_u64()?, r.get_u64()?));
+        }
+        let n_lanes = r.get_u64()? as usize;
+        let mut lanes = Vec::with_capacity(n_lanes.min(1 << 16));
+        for _ in 0..n_lanes {
+            lanes.push(LaneCheckpoint {
+                rng: (r.get_u64()?, r.get_u64()?),
+                tokens: r.get_u64()?,
+                flops_sum: r.get_f64()?,
+                flops_n: r.get_u64()?,
+                algo: r.get_bytes()?,
+            });
+        }
+        let pruner_keep = if r.get_bool()? { Some(r.get_bools()?) } else { None };
+        let n_curve = r.get_u64()? as usize;
+        let mut curve = Vec::with_capacity(n_curve.min(1 << 20));
+        for _ in 0..n_curve {
+            curve.push(CurvePoint {
+                x: r.get_u64()?,
+                train_bpc: r.get_f64()?,
+                valid_bpc: r.get_f64()?,
+                aux: r.get_f64()?,
+            });
+        }
+        r.expect_end()?;
+        Ok(TrainCheckpoint {
+            key,
+            next_step,
+            opt_steps,
+            curriculum_level,
+            last_train_bpc,
+            last_valid_bpc,
+            theta,
+            readout,
+            opt_rec,
+            opt_ro,
+            driver_rng,
+            data_rngs,
+            lanes,
+            pruner_keep,
+            curve,
+        })
+    }
+
+    /// Atomic + durable write: serialize to `<path>.tmp` (same filesystem),
+    /// fsync the file data, then rename into place. A process kill mid-write
+    /// leaves only the `.tmp` (swept at the next startup), and the fsync
+    /// keeps an OS crash from making the rename durable before the data —
+    /// the window for a torn `*.bin` after a machine crash. (The checksum
+    /// still catches anything the filesystem lets through; a corrupt latest
+    /// is a *named* failure, and the operator can point `--resume` at an
+    /// older retained checkpoint explicitly.)
+    pub fn write_file(&self, path: &Path) -> Result<()> {
+        use std::io::Write as _;
+        let bytes = self.encode();
+        let tmp = tmp_path(path);
+        let mut file = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating checkpoint temp file '{}'", tmp.display()))?;
+        file.write_all(&bytes)
+            .with_context(|| format!("writing checkpoint temp file '{}'", tmp.display()))?;
+        file.sync_all()
+            .with_context(|| format!("syncing checkpoint temp file '{}'", tmp.display()))?;
+        drop(file);
+        std::fs::rename(&tmp, path).with_context(|| {
+            format!("moving checkpoint '{}' into place at '{}'", tmp.display(), path.display())
+        })?;
+        // Best-effort directory fsync: POSIX gives no ordering between file
+        // data and directory-entry persistence without it, so this is what
+        // makes the *rename* crash-durable. Skipped silently on platforms
+        // where directories cannot be opened/fsynced.
+        if let Some(parent) = path.parent() {
+            if let Ok(d) = std::fs::File::open(parent) {
+                let _ = d.sync_all();
+            }
+        }
+        Ok(())
+    }
+}
+
+fn tmp_path(path: &Path) -> PathBuf {
+    let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+    name.push(".tmp");
+    path.with_file_name(name)
+}
+
+/// Read and parse one checkpoint file; every failure (I/O, bad magic,
+/// version bump, truncation, checksum) names the offending path.
+pub fn read_checkpoint(path: &Path) -> Result<TrainCheckpoint> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading checkpoint '{}'", path.display()))?;
+    TrainCheckpoint::decode(&bytes)
+        .map_err(|e| e.context(format!("reading checkpoint '{}'", path.display())))
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint directory management
+// ---------------------------------------------------------------------------
+
+/// `ckpt-step<NNNNNNNNNN>.bin` for `next_step = step`.
+pub fn file_name(step: u64) -> String {
+    format!("{FILE_PREFIX}{step:010}{FILE_SUFFIX}")
+}
+
+fn parse_step(name: &str) -> Option<u64> {
+    name.strip_prefix(FILE_PREFIX)?.strip_suffix(FILE_SUFFIX)?.parse().ok()
+}
+
+/// All checkpoints in `dir`, sorted ascending by step.
+pub fn list_checkpoints(dir: &Path) -> Result<Vec<(u64, PathBuf)>> {
+    let entries = std::fs::read_dir(dir)
+        .with_context(|| format!("listing checkpoint dir '{}'", dir.display()))?;
+    let mut found = Vec::new();
+    for entry in entries {
+        let entry =
+            entry.with_context(|| format!("listing checkpoint dir '{}'", dir.display()))?;
+        let name = entry.file_name();
+        if let Some(step) = name.to_str().and_then(parse_step) {
+            found.push((step, entry.path()));
+        }
+    }
+    found.sort_by_key(|(step, _)| *step);
+    Ok(found)
+}
+
+/// Resolve a `--resume` argument: a file is used as-is; a directory resolves
+/// to its highest-step checkpoint (named error when it holds none).
+pub fn resolve_resume_path(path: &Path) -> Result<PathBuf> {
+    if path.is_dir() {
+        let found = list_checkpoints(path)?;
+        return found
+            .last()
+            .map(|(_, p)| p.clone())
+            .with_context(|| format!("no checkpoints found in '{}'", path.display()));
+    }
+    Ok(path.to_path_buf())
+}
+
+/// The driver's write-side handle: owns the directory, the cadence and the
+/// retention policy (see `TrainConfig::{checkpoint_every, checkpoint_dir,
+/// checkpoint_keep}`).
+#[derive(Clone, Debug)]
+pub struct CheckpointSink {
+    dir: PathBuf,
+    every: usize,
+    keep: usize,
+}
+
+impl CheckpointSink {
+    /// Build from the training config: `None` when checkpointing is off
+    /// (`checkpoint_every == 0`); an error when it is on without a
+    /// directory. Creates the directory eagerly so a bad path fails at
+    /// startup, not at the first boundary.
+    ///
+    /// Startup hygiene: temp files orphaned by a kill mid-write are always
+    /// swept (partial by construction — the rename never happened). When
+    /// the run starts **fresh** (`resuming == false`) any pre-existing
+    /// checkpoints in the directory are swept too: they snapshot a
+    /// *different* training history, and leaving them would let a later
+    /// `--resume dir` silently pick a stale higher-step checkpoint from a
+    /// previous run over this run's newest one. A resumed run keeps them —
+    /// it is the same history continuing.
+    pub fn from_config(
+        every: usize,
+        dir: Option<&Path>,
+        keep: usize,
+        resuming: bool,
+    ) -> Result<Option<CheckpointSink>> {
+        if every == 0 {
+            return Ok(None);
+        }
+        let dir = dir.with_context(|| {
+            format!("--checkpoint-every {every} requires --checkpoint-dir PATH")
+        })?;
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating checkpoint dir '{}'", dir.display()))?;
+        let entries = std::fs::read_dir(dir)
+            .with_context(|| format!("listing checkpoint dir '{}'", dir.display()))?;
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if name.ends_with(".bin.tmp") {
+                std::fs::remove_file(entry.path()).with_context(|| {
+                    format!("sweeping orphaned temp file '{}'", entry.path().display())
+                })?;
+            } else if !resuming && parse_step(&name).is_some() {
+                eprintln!(
+                    "note: removing checkpoint '{}' from a previous run \
+                     (fresh start; pass --resume to continue it instead)",
+                    entry.path().display()
+                );
+                std::fs::remove_file(entry.path()).with_context(|| {
+                    format!("sweeping stale checkpoint '{}'", entry.path().display())
+                })?;
+            }
+        }
+        Ok(Some(CheckpointSink { dir: dir.to_path_buf(), every, keep: keep.max(1) }))
+    }
+
+    /// True when a checkpoint should be written after `step` completes.
+    pub fn is_due(&self, step: usize) -> bool {
+        (step + 1) % self.every == 0
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Write `ck` atomically and prune retention down to `keep` files,
+    /// oldest-step first — but **never** the snapshot just written (so even
+    /// a directory holding higher-step files from a resumed lineage cannot
+    /// eat the live run's newest snapshot). Pruning is **best-effort**: the
+    /// fresh checkpoint is already safely on disk, so an undeletable old
+    /// file (permissions drift, a network FS holding it open) must not
+    /// abort a long online run over housekeeping — it warns and moves on.
+    /// Returns the written path.
+    pub fn write(&self, ck: &TrainCheckpoint) -> Result<PathBuf> {
+        let path = self.dir.join(file_name(ck.next_step));
+        ck.write_file(&path)?;
+        let found = list_checkpoints(&self.dir)?;
+        if found.len() > self.keep {
+            let mut excess = found.len() - self.keep;
+            for (_, old) in &found {
+                if excess == 0 {
+                    break;
+                }
+                if *old == path {
+                    continue;
+                }
+                if let Err(e) = std::fs::remove_file(old) {
+                    eprintln!(
+                        "warning: could not prune old checkpoint '{}': {e}",
+                        old.display()
+                    );
+                }
+                excess -= 1;
+            }
+        }
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_checkpoint(step: u64) -> TrainCheckpoint {
+        TrainCheckpoint {
+            key: ConfigKey {
+                task: "char-lm".into(),
+                method: "snap-1".into(),
+                arch: "gru".into(),
+                k: 16,
+                density_bits: 1.0f64.to_bits(),
+                batch: 4,
+                seq_len: 32,
+                truncation: 0,
+                seed: 7,
+                readout_hidden: 32,
+                embed_dim: 8,
+                log_every: 10,
+                eval_span: 4096,
+                prune: "none".into(),
+                train_bytes: 1000,
+                valid_bytes: 50,
+            },
+            next_step: step,
+            opt_steps: step * 2,
+            curriculum_level: 3,
+            last_train_bpc: 1.25,
+            last_valid_bpc: f64::NAN,
+            theta: vec![0.5, -0.25, 3.0],
+            readout: vec![1.0, 2.0],
+            opt_rec: vec![2, 0, 1],
+            opt_ro: vec![2, 9],
+            driver_rng: (0xdead, 0xbeef),
+            data_rngs: vec![(1, 3), (5, 7)],
+            lanes: vec![
+                LaneCheckpoint {
+                    rng: (11, 13),
+                    tokens: 640,
+                    flops_sum: 123.5,
+                    flops_n: 640,
+                    algo: vec![3, 1, 4, 1, 5],
+                },
+                LaneCheckpoint {
+                    rng: (17, 19),
+                    tokens: 640,
+                    flops_sum: 124.5,
+                    flops_n: 640,
+                    algo: vec![9, 2, 6],
+                },
+            ],
+            pruner_keep: Some(vec![true, false, true]),
+            curve: vec![
+                CurvePoint { x: 0, train_bpc: 8.0, valid_bpc: f64::NAN, aux: 1.0 },
+                CurvePoint { x: 3, train_bpc: 2.0, valid_bpc: 1.9, aux: 2.0 },
+            ],
+        }
+    }
+
+    fn assert_same(a: &TrainCheckpoint, b: &TrainCheckpoint) {
+        assert_eq!(a.key, b.key);
+        assert_eq!(a.next_step, b.next_step);
+        assert_eq!(a.opt_steps, b.opt_steps);
+        assert_eq!(a.curriculum_level, b.curriculum_level);
+        assert_eq!(a.last_train_bpc.to_bits(), b.last_train_bpc.to_bits());
+        assert_eq!(a.last_valid_bpc.to_bits(), b.last_valid_bpc.to_bits());
+        assert_eq!(a.theta, b.theta);
+        assert_eq!(a.readout, b.readout);
+        assert_eq!(a.opt_rec, b.opt_rec);
+        assert_eq!(a.opt_ro, b.opt_ro);
+        assert_eq!(a.driver_rng, b.driver_rng);
+        assert_eq!(a.data_rngs, b.data_rngs);
+        assert_eq!(a.lanes.len(), b.lanes.len());
+        for (x, y) in a.lanes.iter().zip(&b.lanes) {
+            assert_eq!(x.rng, y.rng);
+            assert_eq!(x.tokens, y.tokens);
+            assert_eq!(x.flops_sum.to_bits(), y.flops_sum.to_bits());
+            assert_eq!(x.flops_n, y.flops_n);
+            assert_eq!(x.algo, y.algo);
+        }
+        assert_eq!(a.pruner_keep, b.pruner_keep);
+        assert_eq!(a.curve.len(), b.curve.len());
+        for (x, y) in a.curve.iter().zip(&b.curve) {
+            assert_eq!(x.x, y.x);
+            assert_eq!(x.train_bpc.to_bits(), y.train_bpc.to_bits());
+            assert_eq!(x.valid_bpc.to_bits(), y.valid_bpc.to_bits());
+            assert_eq!(x.aux.to_bits(), y.aux.to_bits());
+        }
+    }
+
+    #[test]
+    fn encode_decode_round_trip_preserves_every_field_bitwise() {
+        let ck = sample_checkpoint(20);
+        let decoded = TrainCheckpoint::decode(&ck.encode()).unwrap();
+        assert_same(&ck, &decoded);
+    }
+
+    #[test]
+    fn config_key_mismatch_names_the_field() {
+        let ck = sample_checkpoint(1);
+        let mut run = ck.key.clone();
+        run.method = "uoro".into();
+        let e = ck.key.ensure_matches(&run).unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("method") && msg.contains("snap-1") && msg.contains("uoro"), "{msg}");
+        let mut run = ck.key.clone();
+        run.seed = 8;
+        let e = ck.key.ensure_matches(&run).unwrap_err();
+        assert!(e.to_string().contains("seed"), "{e}");
+        ck.key.ensure_matches(&ck.key.clone()).unwrap();
+    }
+
+    #[test]
+    fn sink_writes_atomically_and_prunes_retention() {
+        let dir = std::env::temp_dir()
+            .join(format!("snap_rtrl_ckpt_sink_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let sink =
+            CheckpointSink::from_config(2, Some(dir.as_path()), 3, false).unwrap().unwrap();
+        assert!(!sink.is_due(0) && sink.is_due(1) && !sink.is_due(2) && sink.is_due(3));
+        for step in [2u64, 4, 6, 8, 10] {
+            sink.write(&sample_checkpoint(step)).unwrap();
+        }
+        let found = list_checkpoints(&dir).unwrap();
+        let steps: Vec<u64> = found.iter().map(|(s, _)| *s).collect();
+        assert_eq!(steps, vec![6, 8, 10], "retention keeps the newest 3");
+        // No temp files left behind.
+        for entry in std::fs::read_dir(&dir).unwrap() {
+            let name = entry.unwrap().file_name();
+            assert!(
+                name.to_string_lossy().ends_with(FILE_SUFFIX),
+                "unexpected file {name:?}"
+            );
+        }
+        // Directory resume resolution picks the latest.
+        let latest = resolve_resume_path(&dir).unwrap();
+        assert!(latest.ends_with(file_name(10)));
+        let restored = read_checkpoint(&latest).unwrap();
+        assert_eq!(restored.next_step, 10);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn retention_never_deletes_the_snapshot_just_written() {
+        // Even when the dir holds higher-step checkpoints (a resumed
+        // lineage), retention must never eat the snapshot just written.
+        let dir = std::env::temp_dir()
+            .join(format!("snap_rtrl_ckpt_stale_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        for step in [40u64, 50, 60] {
+            sample_checkpoint(step).write_file(&dir.join(file_name(step))).unwrap();
+        }
+        // resuming = true keeps the existing lineage in place.
+        let sink =
+            CheckpointSink::from_config(5, Some(dir.as_path()), 3, true).unwrap().unwrap();
+        let written = sink.write(&sample_checkpoint(10)).unwrap();
+        assert!(written.is_file(), "fresh snapshot must survive retention");
+        let steps: Vec<u64> =
+            list_checkpoints(&dir).unwrap().iter().map(|(s, _)| *s).collect();
+        assert!(steps.contains(&10), "fresh step 10 retained: {steps:?}");
+        assert_eq!(steps.len(), 3, "retention still bounds the total: {steps:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fresh_start_sweeps_previous_run_checkpoints_resume_keeps_them() {
+        let dir = std::env::temp_dir()
+            .join(format!("snap_rtrl_ckpt_freshstart_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        for step in [90u64, 100] {
+            sample_checkpoint(step).write_file(&dir.join(file_name(step))).unwrap();
+        }
+        // Resuming: the previous lineage stays.
+        let _ = CheckpointSink::from_config(5, Some(dir.as_path()), 3, true).unwrap().unwrap();
+        assert_eq!(list_checkpoints(&dir).unwrap().len(), 2);
+        // Fresh start: a different history begins — stale snapshots go, so
+        // a later `--resume dir` cannot silently pick the old run's state.
+        let _ =
+            CheckpointSink::from_config(5, Some(dir.as_path()), 3, false).unwrap().unwrap();
+        assert_eq!(list_checkpoints(&dir).unwrap().len(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn from_config_sweeps_orphaned_temp_files() {
+        let dir = std::env::temp_dir()
+            .join(format!("snap_rtrl_ckpt_tmpsweep_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let orphan = dir.join("ckpt-step0000000030.bin.tmp");
+        std::fs::write(&orphan, b"torn half-write").unwrap();
+        let _ =
+            CheckpointSink::from_config(5, Some(dir.as_path()), 3, true).unwrap().unwrap();
+        assert!(!orphan.exists(), "orphaned .bin.tmp must be swept at startup");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn checkpointing_off_yields_no_sink_and_on_requires_a_dir() {
+        assert!(CheckpointSink::from_config(0, None, 3, false).unwrap().is_none());
+        let e = CheckpointSink::from_config(5, None, 3, false).unwrap_err();
+        assert!(e.to_string().contains("--checkpoint-dir"), "{e}");
+    }
+
+    #[test]
+    fn read_errors_name_the_path() {
+        let p = std::env::temp_dir().join(format!(
+            "snap_rtrl_ckpt_missing_{}.bin",
+            std::process::id()
+        ));
+        let e = read_checkpoint(&p).unwrap_err();
+        assert!(e.to_string().contains(&*p.to_string_lossy()), "{e}");
+    }
+}

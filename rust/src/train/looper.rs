@@ -29,19 +29,49 @@
 //! *global* timesteps, gradients averaged across the active lanes), which
 //! is deterministic for any worker count but is a different — batch-
 //! synchronous — regime than the single-worker walk.
+//!
+//! ## Checkpoint / resume
+//!
+//! With `TrainConfig::checkpoint_every > 0` both drivers snapshot the
+//! complete training state (`train::checkpoint`) after every N-th step:
+//! θ, readout, both optimizers' moments, every lane's tracking state, every
+//! RNG stream (lane, data, evaluation) and the driver's progress. Restoring
+//! with `TrainConfig::resume_from` continues the run **bitwise identically**
+//! to one that was never interrupted, for any workers × prefetch × spawn ×
+//! source-backing combination (`rust/tests/checkpoint_resume.rs`).
+//!
+//! Two scheduling details keep that guarantee airtight:
+//!
+//! * On checkpoint steps the prefetch request for the *next* batch is
+//!   deferred until after the snapshot, so the data streams are quiescent
+//!   and the snapshot captures them exactly at the step boundary. The
+//!   request order (and therefore every RNG draw) is unchanged — only the
+//!   overlap timing moves.
+//! * The end-of-run courtesy evaluation (the curve point forced at the
+//!   final step when it is not a regular logging step) runs *after* the
+//!   snapshot: it exists only in the truncated run and must not advance the
+//!   evaluation RNG that the resumed run will continue from.
 
 use crate::cells::{Arch, Cell};
 use crate::data::copy::{sample_len_at, CopySeq, Curriculum, COPY_CLASSES, COPY_VOCAB};
 use crate::data::corpus::Corpus;
 use crate::data::feeder::Feeder;
 use crate::data::stream::ByteSource;
+use crate::errors::Result;
 use crate::grad::{GradAlgo, Method};
 use crate::models::{Embedding, Readout, ReadoutCache};
-use crate::opt::Adam;
+use crate::opt::{Adam, Optimizer};
+use crate::runtime::serde::{Reader, Writer};
 use crate::tensor::rng::Pcg32;
+use crate::train::checkpoint::{
+    read_checkpoint, resolve_resume_path, CheckpointSink, ConfigKey, LaneCheckpoint,
+    TrainCheckpoint,
+};
 use crate::train::executor::{LaneExecutor, LaneSlot, SpawnMode};
 use crate::train::metrics::{bpc_from_nats, CurvePoint, RunningMean};
 use crate::train::prune::Pruner;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
 
 /// Configuration shared by both task drivers.
 #[derive(Clone, Debug)]
@@ -83,6 +113,21 @@ pub struct TrainConfig {
     /// (default) or the legacy per-section spawn (benchmark baseline).
     /// Results are bitwise identical in either mode.
     pub spawn: SpawnMode,
+    /// snapshot the full training state every N steps (0 = off). Requires
+    /// [`checkpoint_dir`](Self::checkpoint_dir). Checkpointing never touches
+    /// an RNG stream, so a checkpointed run is bitwise identical to an
+    /// uncheckpointed one.
+    pub checkpoint_every: usize,
+    /// where checkpoint files live (`ckpt-step<N>.bin`, written atomically
+    /// via write-then-rename; see `train::checkpoint` for the format).
+    pub checkpoint_dir: Option<PathBuf>,
+    /// bounded retention: keep only the newest K checkpoints (min 1).
+    pub checkpoint_keep: usize,
+    /// resume from this checkpoint file — or, for a directory, from its
+    /// highest-step checkpoint. The run continues bitwise identically to an
+    /// uninterrupted one; the config must match the checkpoint's
+    /// [`ConfigKey`] (method, arch, shape, seed, …).
+    pub resume_from: Option<PathBuf>,
 }
 
 impl Default for TrainConfig {
@@ -108,6 +153,10 @@ impl Default for TrainConfig {
             eval_span: 4096,
             prefetch: true,
             spawn: SpawnMode::Persistent,
+            checkpoint_every: 0,
+            checkpoint_dir: None,
+            checkpoint_keep: 3,
+            resume_from: None,
         }
     }
 }
@@ -125,15 +174,28 @@ pub struct TrainResult {
     pub tokens_seen: u64,
     /// Copy task: final curriculum level
     pub final_level: usize,
+    /// final recurrent parameters θ — the strongest witness for the
+    /// kill/resume-is-bitwise-identical guarantee
+    /// (`rust/tests/checkpoint_resume.rs` compares these bit for bit)
+    pub final_theta: Vec<f32>,
 }
 
 /// Character-level language modelling (§5.1) over an in-memory corpus:
 /// splits off the 5% validation tail, then defers to
 /// [`train_charlm_streams`]. Results are bitwise identical to streaming the
 /// same bytes from disk (see `rust/tests/stream_corpus.rs`).
+///
+/// Panics on checkpoint configuration/IO errors; use [`try_train_charlm`]
+/// where those should surface as `Result`s (the CLI does).
 pub fn train_charlm(cfg: &TrainConfig, corpus: &Corpus) -> TrainResult {
+    try_train_charlm(cfg, corpus).unwrap_or_else(|e| panic!("char-LM training failed: {e}"))
+}
+
+/// Fallible [`train_charlm`]: checkpoint/resume problems (missing dir,
+/// corrupt file, config-key mismatch) come back as named errors.
+pub fn try_train_charlm(cfg: &TrainConfig, corpus: &Corpus) -> Result<TrainResult> {
     let (train_corpus, valid_corpus) = corpus.split(0.05);
-    train_charlm_streams(cfg, &train_corpus, &valid_corpus)
+    try_train_charlm_streams(cfg, &train_corpus, &valid_corpus)
 }
 
 /// Character-level language modelling over arbitrary [`ByteSource`]s —
@@ -143,11 +205,24 @@ pub fn train_charlm(cfg: &TrainConfig, corpus: &Corpus) -> TrainResult {
 /// lanes. Crops are drawn per lane from the feeder's cloned data streams,
 /// so training is bitwise identical for any source backing, worker count,
 /// spawn mode and prefetch setting.
+///
+/// Panics on checkpoint configuration/IO errors; use
+/// [`try_train_charlm_streams`] where those should surface as `Result`s.
 pub fn train_charlm_streams(
     cfg: &TrainConfig,
     train: &dyn ByteSource,
     valid: &dyn ByteSource,
 ) -> TrainResult {
+    try_train_charlm_streams(cfg, train, valid)
+        .unwrap_or_else(|e| panic!("char-LM training failed: {e}"))
+}
+
+/// Fallible [`train_charlm_streams`] (checkpoint/resume errors as `Result`).
+pub fn try_train_charlm_streams(
+    cfg: &TrainConfig,
+    train: &dyn ByteSource,
+    valid: &dyn ByteSource,
+) -> Result<TrainResult> {
     let mut rng = Pcg32::seeded(cfg.seed);
     let cell = cfg.arch.build(cfg.k, cfg.embed_dim, cfg.density, &mut rng);
     let embed = Embedding::new(256, cfg.embed_dim, &mut rng);
@@ -156,7 +231,15 @@ pub fn train_charlm_streams(
 }
 
 /// Copy task with curriculum (§5.2).
+///
+/// Panics on checkpoint configuration/IO errors; use [`try_train_copy`]
+/// where those should surface as `Result`s.
 pub fn train_copy(cfg: &TrainConfig) -> TrainResult {
+    try_train_copy(cfg).unwrap_or_else(|e| panic!("Copy-task training failed: {e}"))
+}
+
+/// Fallible [`train_copy`] (checkpoint/resume errors as `Result`).
+pub fn try_train_copy(cfg: &TrainConfig) -> Result<TrainResult> {
     let mut rng = Pcg32::seeded(cfg.seed);
     let cell = cfg.arch.build(cfg.k, COPY_VOCAB, cfg.density, &mut rng);
     let embed = Embedding::one_hot(COPY_VOCAB);
@@ -237,17 +320,20 @@ fn run_driver(
     readout: &mut Readout,
     rng: &mut Pcg32,
     task: Task<'_>,
-) -> TrainResult {
+) -> Result<TrainResult> {
     let p = cell.num_params();
     let mut theta = cell.init_params(rng);
     let mut exec = LaneExecutor::with_mode(
         cell, cfg.method, readout, cfg.batch.max(1), cfg.workers, cfg.spawn, rng,
     );
-    // The feeder owns the *data* streams: clones of the per-lane RNGs taken
+    // The feeder reads the *data* streams: clones of the per-lane RNGs taken
     // right after construction, advanced only by sampling — exactly the
     // draw sequence the slots produced when they sampled inline, so
-    // prefetching cannot change a single byte of training data.
-    let data_rngs: Vec<Pcg32> = exec.slots().iter().map(|s| s.rng.clone()).collect();
+    // prefetching cannot change a single byte of training data. They live
+    // behind a mutex so checkpoints can snapshot them at (quiescent) step
+    // boundaries; the lock is taken once per batch, never per token.
+    let data_streams: Arc<Mutex<Vec<Pcg32>>> =
+        Arc::new(Mutex::new(exec.slots().iter().map(|s| s.rng.clone()).collect()));
     let mut g_rec = vec![0.0f32; p];
     let mut g_ro = readout.make_grad();
     let mut opt_rec = Adam::new(p, cfg.lr);
@@ -263,15 +349,102 @@ fn run_driver(
     });
     let trains_rec = cfg.method.trains_recurrent();
 
+    let (train_bytes, valid_bytes) = match &task {
+        Task::CharLm { train, valid } => (train.len_bytes(), valid.len_bytes()),
+        Task::Copy => (0, 0),
+    };
+    let key = ConfigKey {
+        task: match &task {
+            Task::CharLm { .. } => "char-lm".into(),
+            Task::Copy => "copy".into(),
+        },
+        method: cfg.method.name(),
+        arch: cfg.arch.name().into(),
+        k: cfg.k as u64,
+        density_bits: cfg.density.to_bits(),
+        batch: cfg.batch.max(1) as u64,
+        seq_len: cfg.seq_len as u64,
+        truncation: cfg.truncation as u64,
+        seed: cfg.seed,
+        readout_hidden: cfg.readout_hidden as u64,
+        embed_dim: cfg.embed_dim as u64,
+        // As the driver behaves: log_every 0 and 1 are the same cadence.
+        log_every: cfg.log_every.max(1) as u64,
+        eval_span: cfg.eval_span as u64,
+        // The Pruner's end step is clamped to the run length, so two runs
+        // with different --steps have genuinely different pruning schedules
+        // — the key captures the *effective* schedule and refuses a resume
+        // that could not be bitwise-faithful. Off ⇒ steps-independent.
+        prune: match cfg.prune_to {
+            Some(t) => format!(
+                "{t}/{}/{}",
+                cfg.prune_every,
+                cfg.prune_end_step.min(cfg.steps as u64)
+            ),
+            None => "none".into(),
+        },
+        train_bytes,
+        valid_bytes,
+    };
+    let sink = CheckpointSink::from_config(
+        cfg.checkpoint_every,
+        cfg.checkpoint_dir.as_deref(),
+        cfg.checkpoint_keep,
+        cfg.resume_from.is_some(),
+    )?;
+
+    let mut start_step = 0usize;
+    let mut curve: Vec<CurvePoint> = Vec::new();
+    let mut curriculum = Curriculum::new();
+    let mut opt_steps = 0u64;
+    let mut last_train_bpc = f64::NAN;
+    let mut last_valid_bpc = f64::NAN;
+
+    if let Some(resume) = &cfg.resume_from {
+        let path = resolve_resume_path(resume)?;
+        let ck = read_checkpoint(&path)?;
+        let point = apply_resume(
+            ck,
+            &key,
+            &mut theta,
+            readout,
+            &mut opt_rec,
+            &mut opt_ro,
+            rng,
+            &data_streams,
+            &mut exec,
+            &mut pruner,
+            &mut curriculum,
+        )
+        .map_err(|e| e.context(format!("resuming from checkpoint '{}'", path.display())))?;
+        // A checkpoint at (or past) the requested step count has nothing to
+        // resume: skipping the loop would return the pre-courtesy-eval
+        // snapshot state as if it were a finished run. Refuse loudly.
+        crate::ensure!(
+            point.start_step < cfg.steps,
+            "checkpoint '{}' was taken after step {} but this run asks for only {} steps; \
+             resuming requires --steps greater than the checkpoint's step",
+            path.display(),
+            point.start_step,
+            cfg.steps
+        );
+        start_step = point.start_step;
+        opt_steps = point.opt_steps;
+        last_train_bpc = point.last_train_bpc;
+        last_valid_bpc = point.last_valid_bpc;
+        curve = point.curve;
+    }
+
     // The prefetch thread lives on this scope; dropping the feeder at the
     // end of the closure closes its channels, so the scope join is instant.
-    std::thread::scope(|scope| {
+    std::thread::scope(|scope| -> Result<TrainResult> {
         let mut feed = match &task {
             Task::CharLm { train, .. } => {
                 let source: &dyn ByteSource = *train;
                 let seq_len = cfg.seq_len;
-                let mut streams = data_rngs;
+                let streams = Arc::clone(&data_streams);
                 let generate = move |_spec: ()| -> Vec<Vec<u8>> {
+                    let mut streams = streams.lock().unwrap_or_else(|e| e.into_inner());
                     streams
                         .iter_mut()
                         .map(|r| source.sample_crop(seq_len, r))
@@ -284,10 +457,11 @@ fn run_driver(
                 })
             }
             Task::Copy => {
-                let mut streams = data_rngs;
+                let streams = Arc::clone(&data_streams);
                 // Lane order; the curriculum level is fixed within a
                 // minibatch, so it travels as the batch spec.
                 let generate = move |level: usize| -> Vec<CopySeq> {
+                    let mut streams = streams.lock().unwrap_or_else(|e| e.into_inner());
                     streams
                         .iter_mut()
                         .map(|r| {
@@ -304,19 +478,19 @@ fn run_driver(
             }
         };
 
-        let mut curve = Vec::new();
-        let mut curriculum = Curriculum::new();
-        let mut opt_steps = 0u64;
-        let mut last_train_bpc = f64::NAN;
-        let mut last_valid_bpc = f64::NAN;
-
-        // Prime the first request so step 0 finds its batch ready.
-        match &mut feed {
-            DataFeed::CharLm(feeder) => feeder.request(()),
-            DataFeed::Copy(feeder) => feeder.request(curriculum.level()),
+        // Prime the first request so the first step finds its batch ready.
+        if start_step < cfg.steps {
+            match &mut feed {
+                DataFeed::CharLm(feeder) => feeder.request(()),
+                DataFeed::Copy(feeder) => feeder.request(curriculum.level()),
+            }
         }
 
-        for step in 0..cfg.steps {
+        for step in start_step..cfg.steps {
+            // On checkpoint steps the next batch's prefetch request is
+            // deferred to after the snapshot (see module docs) — same
+            // request order, so the same draws; only overlap timing moves.
+            let ckpt_now = sink.as_ref().is_some_and(|s| s.is_due(step));
             match task {
                 Task::CharLm { .. } => {
                     // B independent crops, one per lane, advanced in lockstep
@@ -325,7 +499,7 @@ fn run_driver(
                     exec.reset_lanes();
                     let DataFeed::CharLm(feeder) = &mut feed else { unreachable!() };
                     let crops = feeder.recv();
-                    if step + 1 < cfg.steps {
+                    if !ckpt_now && step + 1 < cfg.steps {
                         // Crops are independent of training state: overlap
                         // the next batch's materialisation with this whole
                         // step (compute + evaluation).
@@ -461,37 +635,65 @@ fn run_driver(
                 // The next minibatch's lengths depend on the level we just
                 // updated, so the request can only go out now — faithfulness
                 // to §5.2 over lookahead.
-                if step + 1 < cfg.steps {
+                if !ckpt_now && step + 1 < cfg.steps {
                     let DataFeed::Copy(feeder) = &mut feed else { unreachable!() };
                     feeder.request(curriculum.level());
                 }
             }
 
-            if step % cfg.log_every.max(1) == 0 || step + 1 == cfg.steps {
-                if let Task::CharLm { valid, .. } = &task {
-                    // Guard the empty-validation-split case: Corpus::split on a
-                    // tiny corpus legitimately yields an empty partition.
-                    let vlen = valid.len_bytes();
-                    last_valid_bpc = if vlen >= 2 {
-                        let span = (cfg.eval_span as u64).min(vlen - 1) as usize;
-                        evaluate_charlm(cell, &theta, embed, readout, *valid, span, rng)
-                    } else {
-                        f64::NAN
-                    };
+            // Regular logging (shared by truncated and full-length runs)
+            // comes BEFORE the snapshot: its evaluation advances the driver
+            // RNG in both. The end-of-run courtesy point comes AFTER: it
+            // only exists in the run whose cfg.steps ends here, so its RNG
+            // draw must not leak into the checkpointed state.
+            let log_now = step % cfg.log_every.max(1) == 0;
+            if log_now {
+                eval_and_push(
+                    &task, cell, &theta, embed, readout, rng, cfg.eval_span, step,
+                    exec.tokens_seen(), curriculum.level(), last_train_bpc,
+                    &mut last_valid_bpc, &mut curve,
+                );
+            }
+
+            if ckpt_now {
+                let sink = sink.as_ref().expect("ckpt_now implies a sink");
+                let ck = snapshot_checkpoint(
+                    &key,
+                    (step + 1) as u64,
+                    opt_steps,
+                    curriculum.level() as u64,
+                    last_train_bpc,
+                    last_valid_bpc,
+                    &theta,
+                    readout,
+                    &opt_rec,
+                    &opt_ro,
+                    rng,
+                    &data_streams,
+                    &exec,
+                    &pruner,
+                    &curve,
+                );
+                sink.write(&ck)?;
+                // Release the deferred prefetch request for the next step.
+                if step + 1 < cfg.steps {
+                    match &mut feed {
+                        DataFeed::CharLm(feeder) => feeder.request(()),
+                        DataFeed::Copy(feeder) => feeder.request(curriculum.level()),
+                    }
                 }
-                curve.push(CurvePoint {
-                    x: match task {
-                        Task::CharLm { .. } => step as u64,
-                        Task::Copy => exec.tokens_seen(),
-                    },
-                    train_bpc: last_train_bpc,
-                    valid_bpc: last_valid_bpc,
-                    aux: curriculum.level() as f64,
-                });
+            }
+
+            if step + 1 == cfg.steps && !log_now {
+                eval_and_push(
+                    &task, cell, &theta, embed, readout, rng, cfg.eval_span, step,
+                    exec.tokens_seen(), curriculum.level(), last_train_bpc,
+                    &mut last_valid_bpc, &mut curve,
+                );
             }
         }
 
-        TrainResult {
+        Ok(TrainResult {
             curve,
             final_train_bpc: last_train_bpc,
             final_valid_bpc: last_valid_bpc,
@@ -499,7 +701,216 @@ fn run_driver(
             tracking_memory_floats: exec.tracking_memory_floats(),
             tokens_seen: exec.tokens_seen(),
             final_level: curriculum.level(),
+            final_theta: theta.clone(),
+        })
+    })
+}
+
+/// Shared logging tail: (char-LM) evaluate validation bpc, then push one
+/// curve point. Free-standing so the regular log point and the end-of-run
+/// courtesy point stay literally the same code — their only difference is
+/// where they sit relative to a checkpoint snapshot (see module docs).
+#[allow(clippy::too_many_arguments)]
+fn eval_and_push(
+    task: &Task<'_>,
+    cell: &dyn Cell,
+    theta: &[f32],
+    embed: &Embedding,
+    readout: &Readout,
+    rng: &mut Pcg32,
+    eval_span: usize,
+    step: usize,
+    tokens_seen: u64,
+    level: usize,
+    last_train_bpc: f64,
+    last_valid_bpc: &mut f64,
+    curve: &mut Vec<CurvePoint>,
+) {
+    if let Task::CharLm { valid, .. } = task {
+        // Guard the empty-validation-split case: Corpus::split on a
+        // tiny corpus legitimately yields an empty partition.
+        let vlen = valid.len_bytes();
+        *last_valid_bpc = if vlen >= 2 {
+            let span = (eval_span as u64).min(vlen - 1) as usize;
+            evaluate_charlm(cell, theta, embed, readout, *valid, span, rng)
+        } else {
+            f64::NAN
+        };
+    }
+    curve.push(CurvePoint {
+        x: match task {
+            Task::CharLm { .. } => step as u64,
+            Task::Copy => tokens_seen,
+        },
+        train_bpc: last_train_bpc,
+        valid_bpc: *last_valid_bpc,
+        aux: level as f64,
+    });
+}
+
+/// Assemble a [`TrainCheckpoint`] from the driver's live state. Read-only:
+/// snapshotting draws from no RNG and mutates nothing, so a checkpointed
+/// run is bitwise identical to an uncheckpointed one.
+#[allow(clippy::too_many_arguments)]
+fn snapshot_checkpoint(
+    key: &ConfigKey,
+    next_step: u64,
+    opt_steps: u64,
+    curriculum_level: u64,
+    last_train_bpc: f64,
+    last_valid_bpc: f64,
+    theta: &[f32],
+    readout: &Readout,
+    opt_rec: &dyn Optimizer,
+    opt_ro: &dyn Optimizer,
+    rng: &Pcg32,
+    data_streams: &Mutex<Vec<Pcg32>>,
+    exec: &LaneExecutor<'_>,
+    pruner: &Option<Pruner>,
+    curve: &[CurvePoint],
+) -> TrainCheckpoint {
+    let mut w = Writer::new();
+    opt_rec.save_state(&mut w);
+    let opt_rec_blob = w.into_bytes();
+    let mut w = Writer::new();
+    opt_ro.save_state(&mut w);
+    let opt_ro_blob = w.into_bytes();
+    // The data streams are quiescent here: the driver deferred the next
+    // prefetch request, so the lock is uncontended and the states are
+    // exactly "after the batch this step consumed".
+    let data_rngs: Vec<(u64, u64)> = data_streams
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .iter()
+        .map(|r| r.state_parts())
+        .collect();
+    let lanes: Vec<LaneCheckpoint> = exec
+        .slots()
+        .iter()
+        .map(|s| {
+            let mut w = Writer::new();
+            s.algo.save_state(&mut w);
+            LaneCheckpoint {
+                rng: s.rng.state_parts(),
+                tokens: s.tokens,
+                flops_sum: s.flops_sum,
+                flops_n: s.flops_n,
+                algo: w.into_bytes(),
+            }
+        })
+        .collect();
+    TrainCheckpoint {
+        key: key.clone(),
+        next_step,
+        opt_steps,
+        curriculum_level,
+        last_train_bpc,
+        last_valid_bpc,
+        theta: theta.to_vec(),
+        readout: readout.params_flat(),
+        opt_rec: opt_rec_blob,
+        opt_ro: opt_ro_blob,
+        driver_rng: rng.state_parts(),
+        data_rngs,
+        lanes,
+        pruner_keep: pruner.as_ref().map(|p| p.keep_mask().to_vec()),
+        curve: curve.to_vec(),
+    }
+}
+
+/// Where a resumed run picks the training loop back up.
+struct ResumePoint {
+    start_step: usize,
+    opt_steps: u64,
+    last_train_bpc: f64,
+    last_valid_bpc: f64,
+    curve: Vec<CurvePoint>,
+}
+
+/// Graft a [`TrainCheckpoint`] onto freshly (re)built training state. The
+/// rebuild itself is deterministic from the config (cell masks, embedding,
+/// shapes), the key check proves the config matches, and every restored
+/// piece is length/structure-verified — after this the next step continues
+/// bit for bit.
+#[allow(clippy::too_many_arguments)]
+fn apply_resume(
+    ck: TrainCheckpoint,
+    key: &ConfigKey,
+    theta: &mut [f32],
+    readout: &mut Readout,
+    opt_rec: &mut dyn Optimizer,
+    opt_ro: &mut dyn Optimizer,
+    rng: &mut Pcg32,
+    data_streams: &Mutex<Vec<Pcg32>>,
+    exec: &mut LaneExecutor<'_>,
+    pruner: &mut Option<Pruner>,
+    curriculum: &mut Curriculum,
+) -> Result<ResumePoint> {
+    ck.key.ensure_matches(key)?;
+    crate::ensure!(
+        ck.theta.len() == theta.len(),
+        "θ length mismatch: checkpoint {} vs run {}",
+        ck.theta.len(),
+        theta.len()
+    );
+    theta.copy_from_slice(&ck.theta);
+    crate::ensure!(
+        ck.readout.len() == readout.num_params(),
+        "readout length mismatch: checkpoint {} vs run {}",
+        ck.readout.len(),
+        readout.num_params()
+    );
+    readout.set_params(&ck.readout);
+    opt_rec
+        .load_state(&mut Reader::new(&ck.opt_rec))
+        .map_err(|e| e.context("restoring the recurrent optimizer"))?;
+    opt_ro
+        .load_state(&mut Reader::new(&ck.opt_ro))
+        .map_err(|e| e.context("restoring the readout optimizer"))?;
+    *rng = Pcg32::from_parts(ck.driver_rng.0, ck.driver_rng.1);
+    {
+        let mut streams = data_streams.lock().unwrap_or_else(|e| e.into_inner());
+        crate::ensure!(
+            ck.data_rngs.len() == streams.len(),
+            "data-stream count mismatch: checkpoint {} vs run {} lanes",
+            ck.data_rngs.len(),
+            streams.len()
+        );
+        for (s, &(state, inc)) in streams.iter_mut().zip(&ck.data_rngs) {
+            *s = Pcg32::from_parts(state, inc);
         }
+    }
+    crate::ensure!(
+        ck.lanes.len() == exec.lanes(),
+        "lane count mismatch: checkpoint {} vs run {}",
+        ck.lanes.len(),
+        exec.lanes()
+    );
+    for (i, (slot, lane)) in exec.slots_mut().iter_mut().zip(&ck.lanes).enumerate() {
+        slot.rng = Pcg32::from_parts(lane.rng.0, lane.rng.1);
+        slot.tokens = lane.tokens;
+        slot.flops_sum = lane.flops_sum;
+        slot.flops_n = lane.flops_n;
+        slot.algo
+            .load_state(&mut Reader::new(&lane.algo))
+            .map_err(|e| e.context(format!("restoring lane {i} tracking state")))?;
+    }
+    match (pruner.as_mut(), &ck.pruner_keep) {
+        (Some(p), Some(keep)) => p.set_keep_mask(keep)?,
+        (None, None) => {}
+        (have, _) => crate::bail!(
+            "pruning configuration mismatch: checkpoint {} a pruner mask, this run {}",
+            if ck.pruner_keep.is_some() { "has" } else { "lacks" },
+            if have.is_some() { "prunes" } else { "does not prune" }
+        ),
+    }
+    curriculum.set_level(ck.curriculum_level as usize);
+    Ok(ResumePoint {
+        start_step: ck.next_step as usize,
+        opt_steps: ck.opt_steps,
+        last_train_bpc: ck.last_train_bpc,
+        last_valid_bpc: ck.last_valid_bpc,
+        curve: ck.curve,
     })
 }
 
@@ -693,6 +1104,64 @@ mod tests {
         let res = train_copy(&cfg);
         assert!(res.final_level >= 1 && res.final_train_bpc.is_finite());
         assert!(res.tokens_seen > 0);
+    }
+
+    #[test]
+    fn checkpoint_every_without_dir_is_a_named_error() {
+        let corpus = Corpus::synthetic(2_000, 9);
+        let cfg = TrainConfig {
+            k: 8,
+            seq_len: 8,
+            steps: 2,
+            readout_hidden: 8,
+            embed_dim: 4,
+            checkpoint_every: 5,
+            ..Default::default()
+        };
+        let e = try_train_charlm(&cfg, &corpus).unwrap_err();
+        assert!(e.to_string().contains("--checkpoint-dir"), "{e}");
+    }
+
+    #[test]
+    fn charlm_checkpoint_resume_smoke_is_bitwise() {
+        // The full matrix (tasks × methods × workers × prefetch) lives in
+        // rust/tests/checkpoint_resume.rs; this is the fast in-crate canary.
+        let corpus = Corpus::synthetic(6_000, 31);
+        let base = TrainConfig {
+            k: 8,
+            seq_len: 12,
+            steps: 6,
+            batch: 2,
+            readout_hidden: 8,
+            embed_dim: 4,
+            log_every: 2,
+            ..Default::default()
+        };
+        let full = train_charlm(&base, &corpus);
+        let dir = std::env::temp_dir()
+            .join(format!("snap_rtrl_looper_resume_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let part1 = TrainConfig {
+            steps: 3,
+            checkpoint_every: 3,
+            checkpoint_dir: Some(dir.clone()),
+            ..base.clone()
+        };
+        let _ = train_charlm(&part1, &corpus);
+        let resumed_cfg = TrainConfig { resume_from: Some(dir.clone()), ..base.clone() };
+        let resumed = train_charlm(&resumed_cfg, &corpus);
+        assert_eq!(full.curve.len(), resumed.curve.len());
+        for (a, b) in full.curve.iter().zip(&resumed.curve) {
+            assert_eq!(a.x, b.x);
+            assert_eq!(a.train_bpc.to_bits(), b.train_bpc.to_bits());
+            assert_eq!(a.valid_bpc.to_bits(), b.valid_bpc.to_bits());
+        }
+        assert_eq!(full.tokens_seen, resumed.tokens_seen);
+        assert_eq!(full.final_theta.len(), resumed.final_theta.len());
+        for (a, b) in full.final_theta.iter().zip(&resumed.final_theta) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

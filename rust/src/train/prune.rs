@@ -64,6 +64,26 @@ impl Pruner {
         self.target_sparsity * (1.0 - (1.0 - frac).powi(3))
     }
 
+    /// The keep mask (false = pruned/clamped), for checkpointing: between
+    /// selection boundaries the mask is state that cannot be recomputed
+    /// from θ alone (selection happens only every `every` steps).
+    pub fn keep_mask(&self) -> &[bool] {
+        &self.keep
+    }
+
+    /// Restore a [`keep_mask`](Self::keep_mask) snapshot (checkpoint
+    /// resume). Fails on a parameter-count mismatch.
+    pub fn set_keep_mask(&mut self, keep: &[bool]) -> crate::errors::Result<()> {
+        crate::ensure!(
+            keep.len() == self.keep.len(),
+            "pruner mask length mismatch: checkpoint {} vs run {}",
+            keep.len(),
+            self.keep.len()
+        );
+        self.keep.copy_from_slice(keep);
+        Ok(())
+    }
+
     /// Current realized sparsity over prunable weights.
     pub fn current_sparsity(&self) -> f64 {
         let pruned = self.prunable.iter().filter(|&&j| !self.keep[j]).count();

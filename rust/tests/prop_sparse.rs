@@ -174,6 +174,152 @@ fn prop_csr_spmm_equals_dense() {
 }
 
 #[test]
+fn prop_csr_matvec_t_matches_dense() {
+    // Csr::matvec_t carries UORO's Iᵀν contraction and is exercised by the
+    // checkpoint payload paths; check it against the dense transpose
+    // product over random patterns and densities.
+    check("csr-matvec-t", 7, 40, gen_pat, |c| {
+        let mut rng = Pcg32::seeded(c.seed);
+        let pat = Pattern::random(c.rows, c.cols, c.density, &mut rng);
+        let mut a = Matrix::zeros(c.rows, c.cols);
+        for (i, j) in pat.iter() {
+            a.set(i, j, rng.normal());
+        }
+        let csr = Csr::from_dense(&a, &pat);
+        let x: Vec<f32> = (0..c.rows).map(|_| rng.normal()).collect();
+        let got = csr.matvec_t(&x);
+        let want = snap_rtrl::tensor::ops::matvec_t(&a, &x);
+        snap_rtrl::testing::assert_close(&got, &want, 1e-4)
+    });
+}
+
+#[test]
+fn prop_csr_refresh_from_dense_round_trips() {
+    // refresh_from_dense must extract exactly the pattern's entries (the
+    // sparse-RTRL per-step D refresh): after a refresh, to_dense equals the
+    // dense source masked to the pattern, bit for bit, and the structure
+    // (nnz, row layout) is untouched.
+    check("csr-refresh", 8, 40, gen_pat, |c| {
+        let mut rng = Pcg32::seeded(c.seed);
+        let pat = Pattern::random(c.rows, c.cols, c.density, &mut rng);
+        let mut csr = Csr::from_pattern(&pat);
+        let nnz_before = csr.nnz();
+        for round in 0..3 {
+            // Fresh dense values each round; entries OUTSIDE the pattern
+            // are nonzero too and must be ignored by the refresh.
+            let dense = Matrix::from_fn(c.rows, c.cols, |_, _| rng.normal());
+            csr.refresh_from_dense(&dense);
+            assert_eq!(csr.nnz(), nnz_before);
+            let back = csr.to_dense();
+            for i in 0..c.rows {
+                for j in 0..c.cols {
+                    let want = if pat.contains(i, j) { dense.get(i, j) } else { 0.0 };
+                    if back.get(i, j).to_bits() != want.to_bits() {
+                        return Err(format!(
+                            "round {round} entry ({i},{j}): {} vs {want}",
+                            back.get(i, j)
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_csr_spmm_into_accumulate_adds_onto_existing_values() {
+    // spmm_into's accumulate=true leg (C += A·B) has no other direct
+    // coverage; compare against dense pre + A·B.
+    check("csr-spmm-accumulate", 9, 30, gen_pat, |c| {
+        let mut rng = Pcg32::seeded(c.seed);
+        let pat = Pattern::random(c.rows, c.cols, c.density, &mut rng);
+        let mut a = Matrix::zeros(c.rows, c.cols);
+        for (i, j) in pat.iter() {
+            a.set(i, j, rng.normal());
+        }
+        let csr = Csr::from_dense(&a, &pat);
+        let b = Matrix::from_fn(c.cols, 4, |_, _| rng.normal());
+        let pre = Matrix::from_fn(c.rows, 4, |_, _| rng.normal());
+        let mut got = pre.clone();
+        csr.spmm_into(&b, &mut got, true);
+        let mut want = matmul(&a, &b);
+        want.axpy(1.0, &pre);
+        snap_rtrl::testing::assert_close(got.as_slice(), want.as_slice(), 1e-4)
+    });
+}
+
+#[test]
+fn prop_coljac_to_dense_round_trips_through_vals() {
+    // The checkpoint payload for SnAp/RFLO is exactly `ColJacobian::vals`:
+    // dense(J) restricted to the pattern must reproduce vals bit for bit,
+    // and copying vals into a freshly built ColJacobian over the same
+    // pattern must reproduce dense(J) bit for bit — over random patterns,
+    // densities and SnAp orders (n=1 hits the diagonal fast path).
+    check("coljac-roundtrip", 10, 30, gen_pat, |c| {
+        let mut rng = Pcg32::seeded(c.seed);
+        let state = 2 + c.rows.min(8);
+        let params = 3 * state;
+        let rows_per_col: Vec<Vec<u32>> =
+            (0..params).map(|j| vec![(j % state) as u32]).collect();
+        let mut ij = ImmediateJac::new(state, params, &rows_per_col);
+        let d_pat = Pattern::random(state, state, c.density.max(0.2), &mut rng).with_diagonal();
+        let mut d = Matrix::zeros(state, state);
+        for (i, j) in d_pat.iter() {
+            d.set(i, j, rng.normal() * 0.5);
+        }
+        let n = 1 + (c.seed % 3) as usize; // SnAp order 1..=3
+        let pat = snap_pattern(&d_pat, &ij.pattern(), n);
+        let mut cj = ColJacobian::from_pattern(&pat);
+        for _ in 0..3 {
+            for v in ij.vals_mut() {
+                *v = rng.normal();
+            }
+            cj.update(&d, &ij);
+        }
+        // dense ↔ vals consistency
+        let dense = cj.to_dense();
+        let mut nnz_dense = 0usize;
+        for i in 0..state {
+            for j in 0..params {
+                if dense.get(i, j) != 0.0 && !pat.contains(i, j) {
+                    return Err(format!("dense has entry ({i},{j}) outside the pattern"));
+                }
+                if dense.get(i, j) != 0.0 {
+                    nnz_dense += 1;
+                }
+            }
+        }
+        if nnz_dense > cj.nnz() {
+            return Err(format!("dense nnz {nnz_dense} exceeds pattern nnz {}", cj.nnz()));
+        }
+        // restore path: same pattern + saved vals ⇒ identical matrix + grads
+        let saved: Vec<f32> = cj.vals().to_vec();
+        let mut restored = ColJacobian::from_pattern(&pat);
+        restored.vals_mut().copy_from_slice(&saved);
+        if restored.structure_fingerprint() != cj.structure_fingerprint() {
+            return Err("fingerprint differs across identical patterns".into());
+        }
+        for (a, b) in restored.to_dense().as_slice().iter().zip(dense.as_slice()) {
+            if a.to_bits() != b.to_bits() {
+                return Err(format!("restored dense mismatch: {a} vs {b}"));
+            }
+        }
+        let dlds: Vec<f32> = (0..state).map(|_| rng.normal()).collect();
+        let mut g1 = vec![0.0f32; params];
+        let mut g2 = vec![0.0f32; params];
+        cj.accumulate_grad(&dlds, &mut g1);
+        restored.accumulate_grad(&dlds, &mut g2);
+        for (a, b) in g1.iter().zip(&g2) {
+            if a.to_bits() != b.to_bits() {
+                return Err(format!("restored gradient mismatch: {a} vs {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_transpose_preserves_nnz_and_membership() {
     check("pattern-transpose", 6, 40, gen_pat, |c| {
         let mut rng = Pcg32::seeded(c.seed);

@@ -8,6 +8,7 @@
 use snap_rtrl::cells::Arch;
 use snap_rtrl::data::{ByteSource, Corpus, DatasetOptions, DatasetSpec, FileSource};
 use snap_rtrl::grad::Method;
+use snap_rtrl::tensor::rng::Pcg32;
 use snap_rtrl::train::{train_charlm_streams, TrainConfig, TrainResult};
 
 const FIXTURE_DIR: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/wikitext_tiny");
@@ -111,6 +112,76 @@ fn feeder_over_file_shards_deterministic_mid_epoch() {
             );
         }
     }
+}
+
+#[test]
+fn chunk_len_larger_than_the_file_reads_as_one_partial_chunk() {
+    // chunk_len >> file size: the only chunk is partial (n = file len, not
+    // chunk_len); reads and crops must behave exactly like the in-memory
+    // corpus and residency stays at the file size.
+    let data = std::fs::read(fixture("wiki.valid.tokens")).unwrap();
+    let src = FileSource::with_chunking(fixture("wiki.valid.tokens"), 1 << 26, 4).unwrap();
+    assert_eq!(src.len_bytes(), data.len() as u64);
+    assert_eq!(src.read_window(0, data.len()), data);
+    let tail = src.read_window(data.len() as u64 - 7, 7);
+    assert_eq!(tail, data[data.len() - 7..].to_vec());
+    let mem = Corpus::from_bytes(data.clone());
+    let mut r_mem = Pcg32::seeded(83);
+    let mut r_file = Pcg32::seeded(83);
+    for _ in 0..30 {
+        assert_eq!(
+            mem.sample_crop(100, &mut r_mem).to_vec(),
+            ByteSource::sample_crop(&src, 100, &mut r_file)
+        );
+    }
+    assert!(src.resident_bytes() <= data.len());
+}
+
+#[test]
+fn crops_spanning_the_final_partial_chunk_match_the_source_bytes() {
+    // Pick a chunk size that does NOT divide the file, so the last chunk is
+    // partial; windows crossing into (and ending inside) that partial chunk
+    // must be exact, including the very last byte.
+    let data = std::fs::read(fixture("wiki.valid.tokens")).unwrap();
+    let total = data.len();
+    // Pick a prime chunk length that leaves a partial final chunk.
+    let chunk = [257usize, 251, 241]
+        .into_iter()
+        .find(|c| total % c != 0)
+        .expect("some prime leaves a remainder");
+    let src = FileSource::with_chunking(fixture("wiki.valid.tokens"), chunk, 2).unwrap();
+    let last_chunk_start = (total / chunk) * chunk;
+    // A window straddling the boundary into the partial chunk, to EOF...
+    let off = last_chunk_start - 13;
+    let span = total - off;
+    assert_eq!(src.read_window(off as u64, span), data[off..off + span].to_vec());
+    // ...and the exact tail of the file.
+    assert_eq!(src.read_window(total as u64 - 1, 1), vec![data[total - 1]]);
+    // Crops forced to overlap the tail region (start near the end).
+    let crop_len = 50;
+    let window = src.read_window((total - crop_len - 1) as u64, crop_len + 1);
+    assert_eq!(window, data[total - crop_len - 1..].to_vec());
+}
+
+#[test]
+fn data_cursor_save_restore_resumes_identical_crops_mid_epoch() {
+    // The checkpoint subsystem persists the data cursor as the lane data
+    // streams' raw Pcg32 state: draw crops, snapshot the stream mid-epoch,
+    // keep drawing, then restore and redraw — the continuation must be
+    // byte-identical crops AND leave the stream at the same position.
+    let src = FileSource::with_chunking(fixture("wiki.train.tokens"), 128, 2).unwrap();
+    let mut rng = Pcg32::seeded(907);
+    for _ in 0..25 {
+        let _ = ByteSource::sample_crop(&src, 64, &mut rng);
+    }
+    let (state, inc) = rng.state_parts(); // the checkpointed cursor
+    let after: Vec<Vec<u8>> =
+        (0..25).map(|_| ByteSource::sample_crop(&src, 64, &mut rng)).collect();
+    let mut restored = Pcg32::from_parts(state, inc);
+    let replay: Vec<Vec<u8>> =
+        (0..25).map(|_| ByteSource::sample_crop(&src, 64, &mut restored)).collect();
+    assert_eq!(after, replay, "restored cursor must reproduce the same crops");
+    assert_eq!(rng.state_parts(), restored.state_parts(), "streams must land in lockstep");
 }
 
 #[test]
