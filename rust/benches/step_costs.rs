@@ -1,10 +1,16 @@
 //! Per-step wall-clock of every gradient algorithm across architectures and
 //! sparsity levels — the microbenchmark behind Table 1's "time per step"
-//! column and the §Perf hot-path tracking.
+//! column and the §Perf hot-path tracking. This is the bench that guards the
+//! sparse dynamics-Jacobian pipeline: at high sparsity, SnAp-2 / RTRL /
+//! BPTT per-step times must track nnz(D), not k².
 //!
-//! Run: `cargo bench --bench step_costs [-- --k 128]`
+//! Run: `cargo bench --bench step_costs [-- --k 128 --ms 300 --json PATH]`
+//!
+//! With `--json PATH` a machine-readable `BENCH_step_costs.json` is written
+//! (rows keyed by arch × method × density × k) for the CI `bench-smoke`
+//! regression gate (`repro bench-gate` vs `rust/benches/baselines/`).
 
-use snap_rtrl::benchutil::{bench, flag_usize, report};
+use snap_rtrl::benchutil::{bench, flag_str, flag_usize, report, write_bench_json, JsonObj};
 use snap_rtrl::cells::Arch;
 use snap_rtrl::grad::Method;
 use snap_rtrl::tensor::rng::Pcg32;
@@ -14,7 +20,10 @@ fn main() {
     let args: Vec<String> = std::env::args().collect();
     let k: usize = flag_usize(&args, "--k").unwrap_or(64);
     let input = 32usize;
-    let budget = Duration::from_millis(flag_usize(&args, "--ms").unwrap_or(300) as u64);
+    let ms = flag_usize(&args, "--ms").unwrap_or(300);
+    let budget = Duration::from_millis(ms as u64);
+    let json_path = flag_str(&args, "--json");
+    let mut rows: Vec<JsonObj> = Vec::new();
 
     println!("# step_costs — per-step tracking cost (k={k}, input={input})\n");
     for arch in [Arch::Vanilla, Arch::Gru, Arch::Lstm] {
@@ -58,9 +67,28 @@ fn main() {
                         algo.tracking_memory_floats()
                     ),
                 );
+                rows.push(
+                    JsonObj::new()
+                        .str("arch", arch.name())
+                        .str("method", &m.name())
+                        .num("density", density)
+                        .int("k", k as u64)
+                        .num("steps_per_sec", t.per_sec())
+                        .num("ns_per_step", t.mean_ns())
+                        .int("tracking_flops", algo.tracking_flops_per_step())
+                        .int("tracking_floats", algo.tracking_memory_floats() as u64),
+                );
             }
             println!();
         }
     }
-}
 
+    if let Some(path) = json_path {
+        let meta = JsonObj::new()
+            .int("k", k as u64)
+            .int("input", input as u64)
+            .int("ms", ms as u64);
+        write_bench_json(path, "step_costs", &meta, &rows).expect("write bench json");
+        println!("wrote {path} ({} rows)", rows.len());
+    }
+}

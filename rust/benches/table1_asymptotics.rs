@@ -2,6 +2,11 @@
 //! paper's asymptotic formulas, swept over k — verifying the *scaling shape*
 //! (RTRL quartic blow-up, SnAp-1 ≈ BPTT, sparse RTRL's d² saving).
 //!
+//! With the sparse dynamics-Jacobian pipeline, the measured FLOPs column is
+//! nnz-exact: every method's D-term scales with nnz(D) ≈ d·k² rather than
+//! k², so the sparse rows should land on the paper's `d·(…)` asymptotics
+//! (printed alongside as `t_asym`).
+//!
 //! Run: `cargo bench --bench table1_asymptotics`
 
 use snap_rtrl::benchutil::{bench, fmt_dur};
@@ -32,8 +37,10 @@ fn main() {
     let arch = Arch::Gru;
     let input = 32;
     println!("# table1_asymptotics — measured vs asymptotic costs (GRU, input={input})");
-    println!("{:<10} {:>4} {:>7} | {:>12} {:>12} | {:>12} {:>14} | {:>10}",
-        "method", "k", "dens", "t_meas", "t_prev_x", "mem_meas", "mem_asym", "flops");
+    println!(
+        "{:<10} {:>4} {:>7} | {:>12} {:>12} {:>12} | {:>12} {:>14} | {:>10}",
+        "method", "k", "dens", "t_meas", "t_prev_x", "t_asym", "mem_meas", "mem_asym", "flops"
+    );
 
     for (m, d) in [
         (Method::Bptt, 1.0f64),
@@ -53,16 +60,22 @@ fn main() {
             let c = CostInputs { t: 128, k, p, d };
             let growth = prev.map(|p0| format!("{:.2}x", t_ns / p0)).unwrap_or_else(|| "-".into());
             println!(
-                "{:<10} {:>4} {:>7.3} | {:>12} {:>12} | {:>12} {:>14.0} | {:>10}",
-                m.name(), k, d,
-                fmt_dur(Duration::from_nanos(t_ns as u64)), growth,
-                mem, table1_memory(m, c), fl
+                "{:<10} {:>4} {:>7.3} | {:>12} {:>12} {:>12.0} | {:>12} {:>14.0} | {:>10}",
+                m.name(),
+                k,
+                d,
+                fmt_dur(Duration::from_nanos(t_ns as u64)),
+                growth,
+                table1_time(m, c),
+                mem,
+                table1_memory(m, c),
+                fl
             );
-            let _ = table1_time(m, c);
             prev = Some(t_ns);
         }
         println!();
     }
     println!("expected shapes: BPTT/SnAp-1/UORO grow ~4x per k-doubling (k·p term),");
-    println!("RTRL grows ~16x (k²·p); SparseRTRL ≈ d² × RTRL; SnAp-2(d=.25) between.");
+    println!("RTRL grows ~16x (k²·p); SparseRTRL ≈ d² × RTRL; SnAp-2(d=.25) between;");
+    println!("measured flops for sparse rows carry the d·k² (nnz-of-D) term, not k².");
 }

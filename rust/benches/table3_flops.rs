@@ -2,6 +2,10 @@
 //! for SnAp-1/2/3 vs BPTT and vs sparse RTRL, per architecture × size —
 //! plus measured per-step wall-clock for the same configurations.
 //!
+//! The BPTT denominator charges the sparse-D cost (2·nnz(D) + 2·nnz(I) +
+//! forward), matching the paper's Sparse-BPTT `d(k² + p)` line — under the
+//! sparse dynamics-Jacobian pipeline that is what the implementation pays.
+//!
 //! Run: `cargo bench --bench table3_flops [-- --full]` (--full uses the
 //! paper's exact sizes 128/256/512; default halves them to finish quickly)
 

@@ -21,6 +21,11 @@
 //! ca_i = z_i·φ'(a_i)                 — gate a (its W_ha rows carry r_i·h_l)
 //! D[i,l] = (1−z_i)·δ_il + cz_i·W_hz[i,l] + cr_i·W_hr[i,l] + ca_i·r_i·W_ha[i,l]
 //! ```
+//!
+//! The coefficients are computed once in `forward` (into [`Cache`] slots)
+//! and shared by `dynamics`/`immediate`; the sparse-D refresh scatters each
+//! kept `W_h*` entry through a slot map precomputed at construction, so the
+//! per-step Jacobian cost is O(nnz(W_h)) — never O(k²).
 
 use super::*;
 use crate::tensor::ops::{dsigmoid_from_y, dtanh_from_y, sigmoid};
@@ -40,9 +45,17 @@ pub struct Gru {
     bias_offset: usize,
     num_params: usize,
     info: Vec<ParamInfo>,
+    /// Fixed structural pattern of D_t (∪ of the W_h masks + diagonal).
+    d_pat: Pattern,
+    /// Per-gate wh entry t → flat slot in the canonical DynJacobian layout.
+    wh_dslots: [Vec<u32>; 3],
+    /// Slot of (i, i) per row (the diagonal is always structural here).
+    diag_dslots: Vec<u32>,
 }
 
-/// Cache slots.
+/// Cache slots. C_Z/C_R/C_A double as the gate pre-activation scratch during
+/// `forward` (overwritten in place by the nonlinearity); C_CZ..C_CAH hold
+/// the per-unit Jacobian coefficients shared by `dynamics`/`immediate`.
 const C_HPREV: usize = 0;
 const C_X: usize = 1;
 const C_Z: usize = 2;
@@ -50,6 +63,10 @@ const C_R: usize = 3;
 const C_A: usize = 4;
 const C_M: usize = 5; // W_ha · h_prev
 const C_HNEXT: usize = 6;
+const C_CZ: usize = 7;
+const C_CR: usize = 8;
+const C_CA: usize = 9;
+const C_CAH: usize = 10; // ca ⊙ r — the W_ha dynamics coefficient
 
 impl Gru {
     pub fn new(k: usize, input: usize, density: f64, rng: &mut Pcg32) -> Self {
@@ -104,29 +121,29 @@ impl Gru {
             }
         }
 
-        Gru { k, input, density, wh, wx, bias_offset, num_params, info }
-    }
+        let d_pat = wh_pats[0].union(&wh_pats[1]).union(&wh_pats[2]).with_diagonal();
+        let dj = DynJacobian::from_pattern(&d_pat);
+        let wh_dslots = [
+            block_slots(&dj, &wh[0], 0, 0),
+            block_slots(&dj, &wh[1], 0, 0),
+            block_slots(&dj, &wh[2], 0, 0),
+        ];
+        let diag_dslots: Vec<u32> =
+            (0..k).map(|i| dj.slot_of(i, i).expect("diagonal always structural") as u32).collect();
 
-    /// Pre-activation coefficients (cz, cr, ca) per unit — shared by
-    /// `dynamics` and `immediate`.
-    fn coefs(&self, cache: &Cache) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
-        let (z, r, a, m, hp) = (
-            &cache.bufs[C_Z],
-            &cache.bufs[C_R],
-            &cache.bufs[C_A],
-            &cache.bufs[C_M],
-            &cache.bufs[C_HPREV],
-        );
-        let mut cz = vec![0.0f32; self.k];
-        let mut cr = vec![0.0f32; self.k];
-        let mut ca = vec![0.0f32; self.k];
-        for i in 0..self.k {
-            let dphi = dtanh_from_y(a[i]);
-            cz[i] = (a[i] - hp[i]) * dsigmoid_from_y(z[i]);
-            cr[i] = z[i] * dphi * m[i] * dsigmoid_from_y(r[i]);
-            ca[i] = z[i] * dphi;
+        Gru {
+            k,
+            input,
+            density,
+            wh,
+            wx,
+            bias_offset,
+            num_params,
+            info,
+            d_pat,
+            wh_dslots,
+            diag_dslots,
         }
-        (cz, cr, ca)
     }
 }
 
@@ -175,7 +192,8 @@ impl Cell for Gru {
     }
 
     fn make_cache(&self) -> Cache {
-        Cache::with_slots(&[self.k, self.input, self.k, self.k, self.k, self.k, self.k])
+        let k = self.k;
+        Cache::with_slots(&[k, self.input, k, k, k, k, k, k, k, k, k])
     }
 
     fn forward(
@@ -189,72 +207,74 @@ impl Cell for Gru {
         let k = self.k;
         let b = |g: usize| &theta[self.bias_offset + g * k..self.bias_offset + (g + 1) * k];
 
-        let mut zpre = b(0).to_vec();
-        self.wh[0].matvec_acc(theta, s_prev, &mut zpre);
-        self.wx[0].matvec_acc(theta, x, &mut zpre);
+        // Gate pre-activations straight into their cache slots (no allocs).
+        cache.bufs[C_Z].copy_from_slice(b(0));
+        self.wh[0].matvec_acc(theta, s_prev, &mut cache.bufs[C_Z]);
+        self.wx[0].matvec_acc(theta, x, &mut cache.bufs[C_Z]);
 
-        let mut rpre = b(1).to_vec();
-        self.wh[1].matvec_acc(theta, s_prev, &mut rpre);
-        self.wx[1].matvec_acc(theta, x, &mut rpre);
+        cache.bufs[C_R].copy_from_slice(b(1));
+        self.wh[1].matvec_acc(theta, s_prev, &mut cache.bufs[C_R]);
+        self.wx[1].matvec_acc(theta, x, &mut cache.bufs[C_R]);
 
         // m = W_ha · h_prev (reset applied after the matmul — Engel variant)
-        let mut m = vec![0.0f32; k];
-        self.wh[2].matvec_acc(theta, s_prev, &mut m);
+        cache.bufs[C_M].iter_mut().for_each(|v| *v = 0.0);
+        self.wh[2].matvec_acc(theta, s_prev, &mut cache.bufs[C_M]);
 
-        let mut apre = b(2).to_vec();
-        self.wx[2].matvec_acc(theta, x, &mut apre);
+        cache.bufs[C_A].copy_from_slice(b(2));
+        self.wx[2].matvec_acc(theta, x, &mut cache.bufs[C_A]);
 
-        for i in 0..k {
-            cache.bufs[C_Z][i] = sigmoid(zpre[i]);
-            cache.bufs[C_R][i] = sigmoid(rpre[i]);
+        for v in cache.bufs[C_Z].iter_mut() {
+            *v = sigmoid(*v);
+        }
+        for v in cache.bufs[C_R].iter_mut() {
+            *v = sigmoid(*v);
         }
         for i in 0..k {
-            let a = (apre[i] + cache.bufs[C_R][i] * m[i]).tanh();
+            let z = cache.bufs[C_Z][i];
+            let r = cache.bufs[C_R][i];
+            let m = cache.bufs[C_M][i];
+            let apre = cache.bufs[C_A][i];
+            let a = (apre + r * m).tanh();
             cache.bufs[C_A][i] = a;
-            s_next[i] = (1.0 - cache.bufs[C_Z][i]) * s_prev[i] + cache.bufs[C_Z][i] * a;
+            s_next[i] = (1.0 - z) * s_prev[i] + z * a;
+            // Jacobian coefficients, shared by dynamics/immediate.
+            let dphi = dtanh_from_y(a);
+            let ca = z * dphi;
+            cache.bufs[C_CZ][i] = (a - s_prev[i]) * dsigmoid_from_y(z);
+            cache.bufs[C_CR][i] = ca * m * dsigmoid_from_y(r);
+            cache.bufs[C_CA][i] = ca;
+            cache.bufs[C_CAH][i] = ca * r;
         }
         cache.bufs[C_HPREV].copy_from_slice(s_prev);
         cache.bufs[C_X].copy_from_slice(x);
-        cache.bufs[C_M].copy_from_slice(&m);
         cache.bufs[C_HNEXT].copy_from_slice(s_next);
     }
 
-    fn dynamics(&self, theta: &[f32], cache: &Cache, d: &mut Matrix) {
-        d.fill(0.0);
-        let (cz, cr, ca) = self.coefs(cache);
-        let (z, r) = (&cache.bufs[C_Z], &cache.bufs[C_R]);
+    fn dynamics(&self, theta: &[f32], cache: &Cache, d: &mut DynJacobian) {
+        d.zero();
         let k = self.k;
+        let dv = d.vals_mut();
         for i in 0..k {
-            let drow = d.row_mut(i);
-            drow[i] += 1.0 - z[i];
-            // gate z
-            let lin = &self.wh[0];
+            dv[self.diag_dslots[i] as usize] = 1.0 - cache.bufs[C_Z][i];
+        }
+        // Gate blocks scatter through the precomputed slot maps — O(nnz).
+        for (g, cslot) in [(0usize, C_CZ), (1, C_CR), (2, C_CAH)] {
+            let lin = &self.wh[g];
+            let slots = &self.wh_dslots[g];
+            let coefs = &cache.bufs[cslot];
             let vals = &theta[lin.val_offset..lin.val_offset + lin.nnz()];
-            for t in lin.row_ptr[i]..lin.row_ptr[i + 1] {
-                drow[lin.col_idx[t] as usize] += cz[i] * vals[t];
-            }
-            // gate r
-            let lin = &self.wh[1];
-            let vals = &theta[lin.val_offset..lin.val_offset + lin.nnz()];
-            for t in lin.row_ptr[i]..lin.row_ptr[i + 1] {
-                drow[lin.col_idx[t] as usize] += cr[i] * vals[t];
-            }
-            // gate a: h' ← z φ'(a) r_i W_ha[i,l]
-            let lin = &self.wh[2];
-            let vals = &theta[lin.val_offset..lin.val_offset + lin.nnz()];
-            let coef = ca[i] * r[i];
-            for t in lin.row_ptr[i]..lin.row_ptr[i + 1] {
-                drow[lin.col_idx[t] as usize] += coef * vals[t];
+            for i in 0..k {
+                let c = coefs[i];
+                let (s, e) = (lin.row_ptr[i], lin.row_ptr[i + 1]);
+                for t in s..e {
+                    dv[slots[t] as usize] += c * vals[t];
+                }
             }
         }
     }
 
     fn dynamics_pattern(&self) -> Pattern {
-        self.wh[0]
-            .pattern()
-            .union(&self.wh[1].pattern())
-            .union(&self.wh[2].pattern())
-            .with_diagonal()
+        self.d_pat.clone()
     }
 
     fn immediate_structure(&self) -> ImmediateJac {
@@ -264,15 +284,11 @@ impl Cell for Gru {
 
     fn immediate(&self, cache: &Cache, i_jac: &mut ImmediateJac) {
         // §Perf: block-wise fill (branch-free inner loops over each weight
-        // block's CSR entries) — ~2× faster than the per-param match for
-        // dense GRUs, where this is SnAp-1's second-hottest loop.
-        let (cz, cr, mut ca_x) = self.coefs(cache);
+        // block's CSR entries), reading the coefficients computed in
+        // `forward` — no per-step allocation.
         let hp = &cache.bufs[C_HPREV];
         let x = &cache.bufs[C_X];
-        let r = &cache.bufs[C_R];
         let vals = i_jac.vals_mut();
-        // W_ha's PrevH multiplicand carries the extra r_i (Engel variant).
-        let ca_h: Vec<f32> = ca_x.iter().zip(r).map(|(c, ri)| c * ri).collect();
 
         let mut fill = |lin: &MaskedLinear, coef: &[f32], src: &[f32]| {
             for i in 0..lin.rows {
@@ -283,18 +299,18 @@ impl Cell for Gru {
                 }
             }
         };
-        fill(&self.wh[0], &cz, hp);
-        fill(&self.wh[1], &cr, hp);
-        fill(&self.wh[2], &ca_h, hp);
-        fill(&self.wx[0], &cz, x);
-        fill(&self.wx[1], &cr, x);
-        fill(&self.wx[2], &ca_x, x);
+        // W_ha's PrevH multiplicand carries the extra r_i (Engel variant).
+        fill(&self.wh[0], &cache.bufs[C_CZ], hp);
+        fill(&self.wh[1], &cache.bufs[C_CR], hp);
+        fill(&self.wh[2], &cache.bufs[C_CAH], hp);
+        fill(&self.wx[0], &cache.bufs[C_CZ], x);
+        fill(&self.wx[1], &cache.bufs[C_CR], x);
+        fill(&self.wx[2], &cache.bufs[C_CA], x);
         // biases: coef · 1
         let b0 = self.bias_offset;
-        vals[b0..b0 + self.k].copy_from_slice(&cz);
-        vals[b0 + self.k..b0 + 2 * self.k].copy_from_slice(&cr);
-        ca_x.truncate(self.k);
-        vals[b0 + 2 * self.k..b0 + 3 * self.k].copy_from_slice(&ca_x);
+        vals[b0..b0 + self.k].copy_from_slice(&cache.bufs[C_CZ]);
+        vals[b0 + self.k..b0 + 2 * self.k].copy_from_slice(&cache.bufs[C_CR]);
+        vals[b0 + 2 * self.k..b0 + 3 * self.k].copy_from_slice(&cache.bufs[C_CA]);
     }
 
     fn forward_flops(&self) -> u64 {
@@ -387,7 +403,7 @@ mod tests {
         let s_prev: Vec<f32> = (0..6).map(|_| rng.normal() * 0.3).collect();
         let x: Vec<f32> = (0..2).map(|_| rng.normal()).collect();
         cell.forward(&theta, &s_prev, &x, &mut cache, &mut s_next);
-        let mut d = Matrix::zeros(6, 6);
+        let mut d = cell.make_dyn_jacobian();
         cell.dynamics(&theta, &cache, &mut d);
         for i in 0..6 {
             assert!(d.get(i, i).abs() > 1e-4, "diagonal D[{i},{i}] vanished");

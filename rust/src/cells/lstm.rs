@@ -18,6 +18,13 @@
 //!   with ci = g·σ'(i), cf = c_prev·σ'(f), cg = i·φ'(g), co = φ(c')·σ'(o)
 //! ```
 //!
+//! So `pat(D_t)` is the union of the four `W_h*` masks on the h'/c' row
+//! bands plus the two diagonal c-bands: nnz tracks weight density, and the
+//! sparse-D refresh scatters each kept weight into at most two slots through
+//! maps precomputed at construction — O(nnz) per step, never O((2k)²). The
+//! per-unit coefficients are computed once in `forward` (into [`Cache`]
+//! slots) and shared by `dynamics`/`immediate`.
+//!
 //! `I_t`: gate-o parameters touch only row `i`; gate-i/f/g parameters touch
 //! rows `i` **and** `k+i` — two nonzeros per column (§3.1/§3.3).
 
@@ -40,9 +47,22 @@ pub struct Lstm {
     bias_offset: usize,
     num_params: usize,
     info: Vec<ParamInfo>,
+    /// Fixed structural pattern of D_t.
+    d_pat: Pattern,
+    /// Per-gate wh entry t → slot of its h'-row position (u, l).
+    wh_h_dslots: [Vec<u32>; 4],
+    /// Per-gate wh entry t → slot of its c'-row position (k+u, l); empty for
+    /// the o gate, which does not feed c'.
+    wh_c_dslots: [Vec<u32>; 4],
+    /// Slot of (k+u, k+u) — the ∂c'/∂c diagonal.
+    diag_cc: Vec<u32>,
+    /// Slot of (u, k+u) — the ∂h'/∂c diagonal.
+    diag_hc: Vec<u32>,
 }
 
-/// Cache slots.
+/// Cache slots. C_I..C_G double as the gate pre-activation scratch during
+/// `forward` (overwritten in place by the nonlinearity); C_CI..C_CHAIN hold
+/// the per-unit Jacobian coefficients shared by `dynamics`/`immediate`.
 const C_HPREV: usize = 0;
 const C_CPREV: usize = 1;
 const C_X: usize = 2;
@@ -51,6 +71,11 @@ const C_F: usize = 4;
 const C_O: usize = 5;
 const C_G: usize = 6;
 const C_PHIC: usize = 7; // φ(c')
+const C_CI: usize = 8;
+const C_CF: usize = 9;
+const C_CG: usize = 10;
+const C_CO: usize = 11;
+const C_CHAIN: usize = 12; // o·φ'(c') — the c'→h' chain factor
 
 impl Lstm {
     pub fn new(k: usize, input: usize, density: f64, rng: &mut Pcg32) -> Self {
@@ -105,31 +130,59 @@ impl Lstm {
             }
         }
 
-        Lstm { k, input, density, wh, wx, bias_offset, num_params, info }
+        let d_pat = Self::build_dynamics_pattern(k, &wh_pats);
+        let dj = DynJacobian::from_pattern(&d_pat);
+        let wh_h_dslots = [
+            block_slots(&dj, &wh[0], 0, 0),
+            block_slots(&dj, &wh[1], 0, 0),
+            block_slots(&dj, &wh[2], 0, 0),
+            block_slots(&dj, &wh[3], 0, 0),
+        ];
+        let wh_c_dslots = [
+            block_slots(&dj, &wh[0], k, 0),
+            block_slots(&dj, &wh[1], k, 0),
+            Vec::new(), // gate o feeds h' only
+            block_slots(&dj, &wh[3], k, 0),
+        ];
+        let diag_cc: Vec<u32> = (0..k)
+            .map(|u| dj.slot_of(k + u, k + u).expect("c'←c diagonal structural") as u32)
+            .collect();
+        let diag_hc: Vec<u32> = (0..k)
+            .map(|u| dj.slot_of(u, k + u).expect("h'←c diagonal structural") as u32)
+            .collect();
+
+        Lstm {
+            k,
+            input,
+            density,
+            wh,
+            wx,
+            bias_offset,
+            num_params,
+            info,
+            d_pat,
+            wh_h_dslots,
+            wh_c_dslots,
+            diag_cc,
+            diag_hc,
+        }
     }
 
-    /// Per-unit pre-activation coefficients for c' rows: (ci, cf, cg) and the
-    /// o-gate h'-row coefficient co, plus the c'→h' chain factor o·φ'(c').
-    #[allow(clippy::type_complexity)]
-    fn coefs(&self, cache: &Cache) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
-        let (ig, fg, og, gg) =
-            (&cache.bufs[C_I], &cache.bufs[C_F], &cache.bufs[C_O], &cache.bufs[C_G]);
-        let cprev = &cache.bufs[C_CPREV];
-        let phic = &cache.bufs[C_PHIC];
-        let k = self.k;
-        let mut ci = vec![0.0f32; k];
-        let mut cf = vec![0.0f32; k];
-        let mut cg = vec![0.0f32; k];
-        let mut co = vec![0.0f32; k];
-        let mut chain = vec![0.0f32; k];
-        for u in 0..k {
-            ci[u] = gg[u] * dsigmoid_from_y(ig[u]);
-            cf[u] = cprev[u] * dsigmoid_from_y(fg[u]);
-            cg[u] = ig[u] * dtanh_from_y(gg[u]);
-            co[u] = phic[u] * dsigmoid_from_y(og[u]);
-            chain[u] = og[u] * dtanh_from_y(phic[u]);
+    fn build_dynamics_pattern(k: usize, wh_pats: &[Pattern; 4]) -> Pattern {
+        let hdep = wh_pats[0].union(&wh_pats[1]).union(&wh_pats[3]);
+        let hdep_with_o = hdep.union(&wh_pats[2]);
+        let mut coords: Vec<(usize, usize)> = Vec::new();
+        for (u, l) in hdep_with_o.iter() {
+            coords.push((u, l)); // h' ← h
         }
-        (ci, cf, cg, co, chain)
+        for (u, l) in hdep.iter() {
+            coords.push((k + u, l)); // c' ← h
+        }
+        for u in 0..k {
+            coords.push((k + u, k + u)); // c' ← c
+            coords.push((u, k + u)); // h' ← c
+        }
+        Pattern::from_coords(2 * k, 2 * k, &coords)
     }
 }
 
@@ -183,7 +236,7 @@ impl Cell for Lstm {
 
     fn make_cache(&self) -> Cache {
         let k = self.k;
-        Cache::with_slots(&[k, k, self.input, k, k, k, k, k])
+        Cache::with_slots(&[k, k, self.input, k, k, k, k, k, k, k, k, k, k])
     }
 
     fn forward(
@@ -198,82 +251,96 @@ impl Cell for Lstm {
         let (h_prev, c_prev) = s_prev.split_at(k);
         let b = |g: usize| &theta[self.bias_offset + g * k..self.bias_offset + (g + 1) * k];
 
-        let mut pre: [Vec<f32>; 4] =
-            [b(0).to_vec(), b(1).to_vec(), b(2).to_vec(), b(3).to_vec()];
+        // Gate pre-activations straight into their cache slots (no allocs).
         for g in 0..4 {
-            self.wh[g].matvec_acc(theta, h_prev, &mut pre[g]);
-            self.wx[g].matvec_acc(theta, x, &mut pre[g]);
+            let slot = [C_I, C_F, C_O, C_G][g];
+            cache.bufs[slot].copy_from_slice(b(g));
+            self.wh[g].matvec_acc(theta, h_prev, &mut cache.bufs[slot]);
+            self.wx[g].matvec_acc(theta, x, &mut cache.bufs[slot]);
         }
-
-        for u in 0..k {
-            cache.bufs[C_I][u] = sigmoid(pre[0][u]);
-            cache.bufs[C_F][u] = sigmoid(pre[1][u]);
-            cache.bufs[C_O][u] = sigmoid(pre[2][u]);
-            cache.bufs[C_G][u] = pre[3][u].tanh();
+        for v in cache.bufs[C_I].iter_mut() {
+            *v = sigmoid(*v);
+        }
+        for v in cache.bufs[C_F].iter_mut() {
+            *v = sigmoid(*v);
+        }
+        for v in cache.bufs[C_O].iter_mut() {
+            *v = sigmoid(*v);
+        }
+        for v in cache.bufs[C_G].iter_mut() {
+            *v = v.tanh();
         }
         let (hn, cn) = s_next.split_at_mut(k);
         for u in 0..k {
-            let c = cache.bufs[C_F][u] * c_prev[u] + cache.bufs[C_I][u] * cache.bufs[C_G][u];
+            let ig = cache.bufs[C_I][u];
+            let fg = cache.bufs[C_F][u];
+            let og = cache.bufs[C_O][u];
+            let gg = cache.bufs[C_G][u];
+            let cp = c_prev[u];
+            let c = fg * cp + ig * gg;
             cn[u] = c;
             let phic = c.tanh();
             cache.bufs[C_PHIC][u] = phic;
-            hn[u] = cache.bufs[C_O][u] * phic;
+            hn[u] = og * phic;
+            // Jacobian coefficients, shared by dynamics/immediate.
+            cache.bufs[C_CI][u] = gg * dsigmoid_from_y(ig);
+            cache.bufs[C_CF][u] = cp * dsigmoid_from_y(fg);
+            cache.bufs[C_CG][u] = ig * dtanh_from_y(gg);
+            cache.bufs[C_CO][u] = phic * dsigmoid_from_y(og);
+            cache.bufs[C_CHAIN][u] = og * dtanh_from_y(phic);
         }
         cache.bufs[C_HPREV].copy_from_slice(h_prev);
         cache.bufs[C_CPREV].copy_from_slice(c_prev);
         cache.bufs[C_X].copy_from_slice(x);
     }
 
-    fn dynamics(&self, theta: &[f32], cache: &Cache, d: &mut Matrix) {
-        d.fill(0.0);
+    fn dynamics(&self, theta: &[f32], cache: &Cache, d: &mut DynJacobian) {
+        d.zero();
         let k = self.k;
-        let (ci, cf, cg, co, chain) = self.coefs(cache);
-        let fg = &cache.bufs[C_F];
-        // Row blocks: h' rows = 0..k, c' rows = k..2k.
+        let dv = d.vals_mut();
+        // ∂c'/∂c and ∂h'/∂c diagonal bands (disjoint from the weight slots).
         for u in 0..k {
-            // ∂c'/∂c and ∂h'/∂c diagonals
-            d.set(k + u, k + u, fg[u]);
-            d.set(u, k + u, chain[u] * fg[u]);
-            // h-dependence through the three c'-feeding gates
-            for (gate, coef) in [(0usize, ci[u]), (1, cf[u]), (3, cg[u])] {
-                let lin = &self.wh[gate];
-                let vals = &theta[lin.val_offset..lin.val_offset + lin.nnz()];
-                for t in lin.row_ptr[u]..lin.row_ptr[u + 1] {
-                    let l = lin.col_idx[t] as usize;
-                    let w = coef * vals[t];
-                    d.add_at(k + u, l, w); // c' row
-                    d.add_at(u, l, chain[u] * w); // h' row through φ(c')
+            let fg = cache.bufs[C_F][u];
+            let chain = cache.bufs[C_CHAIN][u];
+            dv[self.diag_cc[u] as usize] = fg;
+            dv[self.diag_hc[u] as usize] = chain * fg;
+        }
+        // h-dependence through the three c'-feeding gates: each kept weight
+        // scatters into its c'-row slot and (chained) h'-row slot.
+        for (g, cslot) in [(0usize, C_CI), (1, C_CF), (3, C_CG)] {
+            let lin = &self.wh[g];
+            let c_slots = &self.wh_c_dslots[g];
+            let h_slots = &self.wh_h_dslots[g];
+            let coefs = &cache.bufs[cslot];
+            let chain = &cache.bufs[C_CHAIN];
+            let vals = &theta[lin.val_offset..lin.val_offset + lin.nnz()];
+            for u in 0..k {
+                let c = coefs[u];
+                let ch = chain[u];
+                let (s, e) = (lin.row_ptr[u], lin.row_ptr[u + 1]);
+                for t in s..e {
+                    let w = c * vals[t];
+                    dv[c_slots[t] as usize] += w;
+                    dv[h_slots[t] as usize] += ch * w;
                 }
             }
-            // o-gate affects h' only
-            let lin = &self.wh[2];
-            let vals = &theta[lin.val_offset..lin.val_offset + lin.nnz()];
-            for t in lin.row_ptr[u]..lin.row_ptr[u + 1] {
-                let l = lin.col_idx[t] as usize;
-                d.add_at(u, l, co[u] * vals[t]);
+        }
+        // o-gate affects h' only.
+        let lin = &self.wh[2];
+        let h_slots = &self.wh_h_dslots[2];
+        let co = &cache.bufs[C_CO];
+        let vals = &theta[lin.val_offset..lin.val_offset + lin.nnz()];
+        for u in 0..k {
+            let c = co[u];
+            let (s, e) = (lin.row_ptr[u], lin.row_ptr[u + 1]);
+            for t in s..e {
+                dv[h_slots[t] as usize] += c * vals[t];
             }
         }
     }
 
     fn dynamics_pattern(&self) -> Pattern {
-        let k = self.k;
-        let hdep = self.wh[0]
-            .pattern()
-            .union(&self.wh[1].pattern())
-            .union(&self.wh[3].pattern());
-        let hdep_with_o = hdep.union(&self.wh[2].pattern());
-        let mut coords: Vec<(usize, usize)> = Vec::new();
-        for (u, l) in hdep_with_o.iter() {
-            coords.push((u, l)); // h' ← h
-        }
-        for (u, l) in hdep.iter() {
-            coords.push((k + u, l)); // c' ← h
-        }
-        for u in 0..k {
-            coords.push((k + u, k + u)); // c' ← c
-            coords.push((u, k + u)); // h' ← c
-        }
-        Pattern::from_coords(2 * k, 2 * k, &coords)
+        self.d_pat.clone()
     }
 
     fn immediate_structure(&self) -> ImmediateJac {
@@ -293,7 +360,6 @@ impl Cell for Lstm {
     }
 
     fn immediate(&self, cache: &Cache, i_jac: &mut ImmediateJac) {
-        let (ci, cf, cg, co, chain) = self.coefs(cache);
         let hp = &cache.bufs[C_HPREV];
         let x = &cache.bufs[C_X];
         for (j, p) in self.info.iter().enumerate() {
@@ -306,16 +372,16 @@ impl Cell for Lstm {
             let vals = i_jac.col_vals_mut(j);
             match p.gate {
                 GATE_O => {
-                    vals[0] = co[u] * srcval; // h' row only
+                    vals[0] = cache.bufs[C_CO][u] * srcval; // h' row only
                 }
                 g => {
                     let coef = match g {
-                        GATE_I => ci[u],
-                        GATE_F => cf[u],
-                        _ => cg[u],
+                        GATE_I => cache.bufs[C_CI][u],
+                        GATE_F => cache.bufs[C_CF][u],
+                        _ => cache.bufs[C_CG][u],
                     };
                     let dc = coef * srcval;
-                    vals[0] = chain[u] * dc; // h' row (index u)
+                    vals[0] = cache.bufs[C_CHAIN][u] * dc; // h' row (index u)
                     vals[1] = dc; // c' row (index k+u)
                 }
             }

@@ -1,17 +1,31 @@
 //! Recurrent cells with analytic Jacobians.
 //!
 //! Every cell exposes, besides its forward step, the two Jacobians that the
-//! RTRL family is built from (paper §2.1):
+//! RTRL family is built from (paper §2.1) — **both sparse**:
 //!
-//! * `D_t = ∂s_t/∂s_{t-1}` — the *dynamics* Jacobian (state × state), and
-//! * `I_t = ∂s_t/∂θ_t`   — the *immediate* Jacobian (state × params), stored
+//! * `D_t = ∂s_t/∂s_{t-1}` — the *dynamics* Jacobian (state × state), stored
+//!   as a CSR [`DynJacobian`] on the fixed structural pattern
+//!   ([`Cell::dynamics_pattern`]: the union of the recurrent weight masks
+//!   plus the cell's diagonal/gate bands). Cells refresh only the structural
+//!   nonzeros — O(nnz(W_h)) per step, never O(k²) — through slot maps
+//!   precomputed at construction ([`block_slots`]).
+//! * `I_t = ∂s_t/∂θ_t` — the *immediate* Jacobian (state × params), stored
 //!   compressed ([`ImmediateJac`]) because it has ≤2 nonzero rows per column
 //!   (paper §3.1).
 //!
 //! BPTT's backward step is also expressed through these:
-//! `∂L/∂s_{t-1} = D_tᵀ·∂L/∂s_t` and `∂L/∂θ += I_tᵀ·∂L/∂s_t`, which guarantees
-//! BPTT and RTRL gradients agree to machine precision (verified in
-//! `rust/tests/grad_equivalence.rs`).
+//! `∂L/∂s_{t-1} = D_tᵀ·∂L/∂s_t` (a sparse [`DynJacobian::matvec_t_into`])
+//! and `∂L/∂θ += I_tᵀ·∂L/∂s_t`, which guarantees BPTT and RTRL gradients
+//! agree to machine precision (verified in `rust/tests/grad_equivalence.rs`,
+//! including against a dense-D reference oracle).
+//!
+//! **Sparse-D contract**: the `DynJacobian` handed to [`Cell::dynamics`]
+//! must have been built from this cell's `dynamics_pattern()` (use
+//! [`Cell::make_dyn_jacobian`]) — the cells' slot maps assume that canonical
+//! CSR layout. Forward passes and Jacobian refreshes are allocation-free:
+//! all per-step scratch lives in the caller-owned [`Cache`] (including the
+//! per-unit Jacobian coefficients, computed once in `forward` and shared by
+//! `dynamics`/`immediate`).
 //!
 //! Weight sparsity: each weight block carries a fixed [`Pattern`] mask; the
 //! tracked parameter vector θ contains **only kept entries** (the paper's
@@ -27,9 +41,9 @@ pub use gru::Gru;
 pub use lstm::Lstm;
 pub use vanilla::Vanilla;
 
+use crate::sparse::dynjac::DynJacobian;
 use crate::sparse::immediate::ImmediateJac;
 use crate::sparse::pattern::Pattern;
-use crate::tensor::matrix::Matrix;
 use crate::tensor::rng::Pcg32;
 
 /// Architecture tag (used by configs, reports and the pattern constructors).
@@ -212,11 +226,21 @@ pub trait Cell: Send + Sync {
         s_next: &mut [f32],
     );
 
-    /// Dense dynamics Jacobian `D_t` (state × state) at the cached point.
-    fn dynamics(&self, theta: &[f32], cache: &Cache, d: &mut Matrix);
+    /// Refresh the sparse dynamics Jacobian `D_t` (state × state) at the
+    /// cached point, touching only structural nonzeros — O(nnz). `d` must
+    /// have been built from this cell's `dynamics_pattern()`
+    /// ([`Cell::make_dyn_jacobian`]): the cell's precomputed slot maps
+    /// assume that canonical layout.
+    fn dynamics(&self, theta: &[f32], cache: &Cache, d: &mut DynJacobian);
 
     /// Structural pattern of `D_t` (fixed over time).
     fn dynamics_pattern(&self) -> Pattern;
+
+    /// Zero-valued [`DynJacobian`] with this cell's dynamics structure —
+    /// the only valid `d` argument for [`Cell::dynamics`].
+    fn make_dyn_jacobian(&self) -> DynJacobian {
+        DynJacobian::from_pattern(&self.dynamics_pattern())
+    }
 
     /// Zero-valued immediate Jacobian with the right structure.
     fn immediate_structure(&self) -> ImmediateJac;
@@ -228,19 +252,42 @@ pub trait Cell: Send + Sync {
     fn forward_flops(&self) -> u64;
 }
 
-/// Generic BPTT-style backward step expressed through the Jacobians:
-/// `ds_prev = Dᵀ·ds`, `gθ += Iᵀ·ds`. `d` and `i_jac` must already be
-/// evaluated at this step's cache.
+/// Generic BPTT-style backward step expressed through the sparse Jacobians:
+/// `ds_prev = Dᵀ·ds` (sparse `matvec_t`, O(nnz(D))), `gθ += Iᵀ·ds`. `d` and
+/// `i_jac` must already be evaluated at this step's cache. Allocation-free:
+/// `ds_prev` is a caller-owned scratch buffer, overwritten.
 pub fn backward_step(
-    d: &Matrix,
+    d: &DynJacobian,
     i_jac: &ImmediateJac,
     ds: &[f32],
     ds_prev: &mut [f32],
     g_theta: &mut [f32],
 ) {
-    let out = crate::tensor::ops::matvec_t(d, ds);
-    ds_prev.copy_from_slice(&out);
+    d.matvec_t_into(ds, ds_prev);
     i_jac.matvec_t_acc(ds, g_theta);
+}
+
+/// Map every CSR entry of the weight block `lin` — offset into the state
+/// coordinate frame by `(row_off, col_off)` — to its flat value slot in a
+/// [`DynJacobian`] built from the cell's `dynamics_pattern()`. The maps are
+/// computed once at cell construction so the per-step `dynamics` refresh is
+/// a branch-free O(nnz) scatter. Panics if a weight entry is missing from
+/// the pattern (the pattern must cover every analytically-nonzero D entry —
+/// checked by `fdcheck::check_dynamics_pattern_covers`).
+pub fn block_slots(
+    dj: &DynJacobian,
+    lin: &MaskedLinear,
+    row_off: usize,
+    col_off: usize,
+) -> Vec<u32> {
+    let mut slots = Vec::with_capacity(lin.nnz());
+    for (_, i, l) in lin.entries() {
+        let t = dj
+            .slot_of(i + row_off, l + col_off)
+            .expect("weight entry missing from the dynamics pattern");
+        slots.push(t as u32);
+    }
+    slots
 }
 
 /// Helper shared by the cells: draw a random mask of the requested density
@@ -283,8 +330,9 @@ pub(crate) mod fdcheck {
         let mut cache = cell.make_cache();
         let mut s_next = vec![0.0; ss];
         cell.forward(&theta, &s_prev, &x, &mut cache, &mut s_next);
-        let mut d = Matrix::zeros(ss, ss);
-        cell.dynamics(&theta, &cache, &mut d);
+        let mut dj = cell.make_dyn_jacobian();
+        cell.dynamics(&theta, &cache, &mut dj);
+        let d = dj.to_dense();
 
         let eps = 1e-3f32;
         let mut max_err = 0.0f32;
@@ -349,8 +397,9 @@ pub(crate) mod fdcheck {
         let mut cache = cell.make_cache();
         let mut s_next = vec![0.0; ss];
         cell.forward(&theta, &s_prev, &x, &mut cache, &mut s_next);
-        let mut d = Matrix::zeros(ss, ss);
-        cell.dynamics(&theta, &cache, &mut d);
+        let mut dj = cell.make_dyn_jacobian();
+        cell.dynamics(&theta, &cache, &mut dj);
+        let d = dj.to_dense();
         let pat = cell.dynamics_pattern();
         for i in 0..ss {
             for l in 0..ss {
@@ -359,5 +408,8 @@ pub(crate) mod fdcheck {
                 }
             }
         }
+        // The sparse D must agree with a central finite difference at every
+        // structural position too (fill correctness, not just coverage).
+        assert!(check_dynamics(cell, seed) < 2e-3);
     }
 }

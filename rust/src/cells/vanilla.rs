@@ -1,7 +1,8 @@
 //! Vanilla (Elman) RNN: `h_t = tanh(W_h h_{t-1} + W_x x_t + b)`.
 //!
 //! The simplest dynamics of the paper: `D_t[i,l] = tanh'(h_i)·W_h[i,l]`, so
-//! the sparsity of `D_t` equals the sparsity of `W_h` exactly (§3.2), and
+//! the sparsity of `D_t` equals the sparsity of `W_h` exactly (§3.2) — the
+//! sparse-D refresh writes each `W_h` entry's slot once, O(nnz(W_h)) — and
 //! `I_t` has exactly one nonzero row per parameter column (§3.1).
 
 use super::*;
@@ -16,6 +17,10 @@ pub struct Vanilla {
     bias_offset: usize,
     num_params: usize,
     info: Vec<ParamInfo>,
+    /// Fixed structural pattern of D_t (== pat(W_h)).
+    d_pat: Pattern,
+    /// wh entry t → flat slot in the canonical DynJacobian layout.
+    wh_dslots: Vec<u32>,
 }
 
 /// Cache slots.
@@ -43,7 +48,11 @@ impl Vanilla {
             info.push(ParamInfo { gate: 0, unit: i as u32, src: Src::Bias });
         }
 
-        Vanilla { k, input, density, wh, wx, bias_offset, num_params, info }
+        let d_pat = wh.pattern();
+        let dj = DynJacobian::from_pattern(&d_pat);
+        let wh_dslots = block_slots(&dj, &wh, 0, 0);
+
+        Vanilla { k, input, density, wh, wx, bias_offset, num_params, info, d_pat, wh_dslots }
     }
 
     /// The recurrent weight mask (needed by pruning / pattern analyses).
@@ -107,33 +116,37 @@ impl Cell for Vanilla {
     ) {
         debug_assert_eq!(s_prev.len(), self.k);
         debug_assert_eq!(x.len(), self.input);
-        let mut pre = theta[self.bias_offset..self.bias_offset + self.k].to_vec();
-        self.wh.matvec_acc(theta, s_prev, &mut pre);
-        self.wx.matvec_acc(theta, x, &mut pre);
-        for i in 0..self.k {
-            s_next[i] = pre[i].tanh();
+        // §Perf: s_next doubles as the pre-activation buffer — no per-token
+        // allocation anywhere in the forward pass.
+        s_next.copy_from_slice(&theta[self.bias_offset..self.bias_offset + self.k]);
+        self.wh.matvec_acc(theta, s_prev, s_next);
+        self.wx.matvec_acc(theta, x, s_next);
+        for v in s_next.iter_mut() {
+            *v = v.tanh();
         }
         cache.bufs[C_HPREV].copy_from_slice(s_prev);
         cache.bufs[C_X].copy_from_slice(x);
         cache.bufs[C_HNEXT].copy_from_slice(s_next);
     }
 
-    fn dynamics(&self, theta: &[f32], cache: &Cache, d: &mut Matrix) {
-        d.fill(0.0);
+    fn dynamics(&self, theta: &[f32], cache: &Cache, d: &mut DynJacobian) {
+        debug_assert_eq!(d.nnz(), self.wh_dslots.len());
         let h = &cache.bufs[C_HNEXT];
         let vals = &theta[self.wh.val_offset..self.wh.val_offset + self.wh.nnz()];
+        let dv = d.vals_mut();
+        // Every structural slot is written exactly once (pat(D) == pat(W_h)),
+        // so no zeroing pass is needed.
         for i in 0..self.k {
             let coef = dtanh_from_y(h[i]);
             let (s, e) = (self.wh.row_ptr[i], self.wh.row_ptr[i + 1]);
-            let drow = d.row_mut(i);
             for t in s..e {
-                drow[self.wh.col_idx[t] as usize] = coef * vals[t];
+                dv[self.wh_dslots[t] as usize] = coef * vals[t];
             }
         }
     }
 
     fn dynamics_pattern(&self) -> Pattern {
-        self.wh.pattern()
+        self.d_pat.clone()
     }
 
     fn immediate_structure(&self) -> ImmediateJac {
@@ -196,6 +209,15 @@ mod tests {
         let mut rng = Pcg32::seeded(4);
         let cell = Vanilla::new(9, 2, 0.4, &mut rng);
         fdcheck::check_dynamics_pattern_covers(&cell, 13);
+    }
+
+    #[test]
+    fn dynamics_nnz_tracks_weight_density() {
+        // The whole point of the sparse-D contract: nnz(D) == nnz(W_h).
+        let mut rng = Pcg32::seeded(44);
+        let cell = Vanilla::new(16, 4, 0.25, &mut rng);
+        let dj = cell.make_dyn_jacobian();
+        assert_eq!(dj.nnz(), (16 * 16) / 4);
     }
 
     #[test]

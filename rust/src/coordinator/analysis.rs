@@ -85,8 +85,8 @@ pub fn run_table4(cfg: &Table4Config) -> (Vec<InfluenceStats>, InfluenceDump) {
             bptt.step(&theta, embed.lookup(tok));
             if let Some(target) = seq.targets[t] {
                 readout.forward(bptt.hidden(), &mut cache);
-                let (_, dh) = readout.loss_and_backward(&cache, target, &mut g_ro);
-                bptt.inject_loss(&dh, &mut g_rec);
+                let (_, dh) = readout.loss_and_backward(&mut cache, target, &mut g_ro);
+                bptt.inject_loss(dh, &mut g_rec);
             }
         }
         bptt.flush(&theta, &mut g_rec);

@@ -275,10 +275,14 @@ const MEASUREMENT_KEYS: &[&str] = &[
     "final_level",
     "crops_per_sec",
     "mb_per_sec",
+    "steps_per_sec",
+    "ns_per_step",
+    "tracking_flops",
+    "tracking_floats",
 ];
 
-/// Metric candidates, in preference order.
-const METRIC_KEYS: &[&str] = &["tokens_per_sec", "crops_per_sec", "mb_per_sec"];
+/// Metric candidates, in preference order (all higher-is-better).
+const METRIC_KEYS: &[&str] = &["tokens_per_sec", "crops_per_sec", "mb_per_sec", "steps_per_sec"];
 
 /// One BENCH_*.json file, decoded.
 pub struct BenchFile {

@@ -428,7 +428,6 @@ pub fn table3_row_opts(
     let p3 = snap_pattern(&d_pat, &i_pat, 3);
 
     let p = cell.num_params();
-    let ss = cell.state_size();
 
     // per-step FLOPs
     let snap_flops = |pat: &crate::sparse::pattern::Pattern| -> f64 {
@@ -441,7 +440,9 @@ pub fn table3_row_opts(
             .sum();
         (update + 2 * pat.nnz() as u64) as f64 + cell.forward_flops() as f64
     };
-    let bptt = (2 * ss * ss + 2 * i_pat.nnz()) as f64 + cell.forward_flops() as f64;
+    // Sparse-D contract: BPTT's backward step is a sparse Dᵀδ — 2·nnz(D),
+    // the paper's Sparse-BPTT `d·k²` term — not the dense 2·(state)².
+    let bptt = (2 * d_pat.nnz() + 2 * i_pat.nnz()) as f64 + cell.forward_flops() as f64;
     let sparse_rtrl = (2 * d_pat.nnz() * p) as f64 + cell.forward_flops() as f64;
 
     Table3Row {

@@ -2,7 +2,11 @@
 //!
 //! Stores one forward cache + one loss cotangent per step of the current
 //! window; `flush` runs the reverse sweep
-//! `ds_{t-1} = D_tᵀ·ds_t`, `gθ += I_tᵀ·ds_t` and clears the window.
+//! `ds_{t-1} = D_tᵀ·ds_t`, `gθ += I_tᵀ·ds_t` and clears the window. Under
+//! the sparse-D contract the `D_tᵀ·ds_t` step is a sparse `matvec_t` over a
+//! [`DynJacobian`] — O(nnz(D)) per step, so sparse-network BPTT pays the
+//! paper's `d·(k² + p)` line, not `k² + p`. All sweep buffers are owned by
+//! the instance: no per-step or per-flush allocation.
 //! With `flush` called every step this is truncated BPTT with T=1 (the
 //! fully-online regime of §5.2 where BPTT "completely fails to learn
 //! long-term structure"); with one flush per sequence it is full BPTT.
@@ -11,8 +15,8 @@ use crate::cells::{backward_step, Cache, Cell};
 use crate::errors::Result;
 use crate::grad::{check_state_tag, state_tags, GradAlgo};
 use crate::runtime::serde::{Reader, Writer};
+use crate::sparse::dynjac::DynJacobian;
 use crate::sparse::immediate::ImmediateJac;
-use crate::tensor::matrix::Matrix;
 
 pub struct Bptt<'c> {
     cell: &'c dyn Cell,
@@ -21,10 +25,16 @@ pub struct Bptt<'c> {
     /// per-step: state *before* the step (needed to re-enter the window)
     caches: Vec<Cache>,
     dl_dh: Vec<Vec<f32>>,
-    /// scratch
-    d: Matrix,
+    /// scratch (never serialized): sparse D, forward next-state, and the
+    /// two backward-sweep cotangent buffers
+    d: DynJacobian,
     i_jac: ImmediateJac,
     spare_caches: Vec<Cache>,
+    /// recycled per-step cotangent buffers (like `spare_caches`)
+    spare_dl: Vec<Vec<f32>>,
+    s_next: Vec<f32>,
+    ds: Vec<f32>,
+    ds_prev: Vec<f32>,
     last_flops: u64,
 }
 
@@ -36,9 +46,13 @@ impl<'c> Bptt<'c> {
             s: vec![0.0; ss],
             caches: Vec::new(),
             dl_dh: Vec::new(),
-            d: Matrix::zeros(ss, ss),
+            d: cell.make_dyn_jacobian(),
             i_jac: cell.immediate_structure(),
             spare_caches: Vec::new(),
+            spare_dl: Vec::new(),
+            s_next: vec![0.0; ss],
+            ds: vec![0.0; ss],
+            ds_prev: vec![0.0; ss],
             last_flops: 0,
         }
     }
@@ -57,16 +71,20 @@ impl GradAlgo for Bptt<'_> {
     fn reset(&mut self) {
         self.s.iter_mut().for_each(|v| *v = 0.0);
         self.spare_caches.append(&mut self.caches);
-        self.dl_dh.clear();
+        self.spare_dl.append(&mut self.dl_dh);
     }
 
     fn step(&mut self, theta: &[f32], x: &[f32]) {
         let mut cache = self.spare_caches.pop().unwrap_or_else(|| self.cell.make_cache());
-        let mut s_next = vec![0.0; self.s.len()];
-        self.cell.forward(theta, &self.s, x, &mut cache, &mut s_next);
-        self.s = s_next;
+        self.cell.forward(theta, &self.s, x, &mut cache, &mut self.s_next);
+        std::mem::swap(&mut self.s, &mut self.s_next);
         self.caches.push(cache);
-        self.dl_dh.push(vec![0.0; self.cell.hidden_size()]);
+        let mut dl = self
+            .spare_dl
+            .pop()
+            .unwrap_or_else(|| vec![0.0; self.cell.hidden_size()]);
+        dl.iter_mut().for_each(|v| *v = 0.0);
+        self.dl_dh.push(dl);
         self.last_flops = 0;
     }
 
@@ -86,32 +104,30 @@ impl GradAlgo for Bptt<'_> {
     }
 
     fn flush(&mut self, theta: &[f32], g: &mut [f32]) {
-        let ss = self.cell.state_size();
         let hs = self.cell.hidden_size();
-        let mut ds = vec![0.0f32; ss];
-        let mut ds_prev = vec![0.0f32; ss];
+        self.ds.iter_mut().for_each(|v| *v = 0.0);
         let mut flops = 0u64;
         for t in (0..self.caches.len()).rev() {
             // add this step's direct loss cotangent (hidden part of the state)
             for (i, &v) in self.dl_dh[t].iter().enumerate() {
-                ds[i] += v;
+                self.ds[i] += v;
             }
             self.cell.dynamics(theta, &self.caches[t], &mut self.d);
             self.cell.immediate(&self.caches[t], &mut self.i_jac);
-            backward_step(&self.d, &self.i_jac, &ds, &mut ds_prev, g);
-            std::mem::swap(&mut ds, &mut ds_prev);
-            ds_prev.iter_mut().for_each(|v| *v = 0.0);
-            flops += 2 * (ss * ss) as u64 + 2 * self.i_jac.nnz() as u64 + hs as u64;
+            // ds_prev = Dᵀ·ds (sparse, overwrites the scratch), gθ += Iᵀ·ds.
+            backward_step(&self.d, &self.i_jac, &self.ds, &mut self.ds_prev, g);
+            std::mem::swap(&mut self.ds, &mut self.ds_prev);
+            flops += 2 * self.d.nnz() as u64 + 2 * self.i_jac.nnz() as u64 + hs as u64;
         }
         self.last_flops = flops;
         self.spare_caches.append(&mut self.caches);
-        self.dl_dh.clear();
+        self.spare_dl.append(&mut self.dl_dh);
     }
 
     fn tracking_flops_per_step(&self) -> u64 {
-        // amortized: backward cost of one step (k² for Dᵀds + p for Iᵀds).
-        let ss = self.cell.state_size() as u64;
-        2 * ss * ss + 2 * self.i_jac.nnz() as u64
+        // amortized: backward cost of one step — sparse Dᵀds (2·nnz(D), the
+        // Sparse-BPTT `d·k²` term of Table 1) + Iᵀds (p).
+        2 * self.d.nnz() as u64 + 2 * self.i_jac.nnz() as u64
     }
 
     fn tracking_memory_floats(&self) -> usize {
@@ -155,7 +171,7 @@ impl GradAlgo for Bptt<'_> {
         );
         // Start from an empty window, matching the saved boundary.
         self.spare_caches.append(&mut self.caches);
-        self.dl_dh.clear();
+        self.spare_dl.append(&mut self.dl_dh);
         self.s = s;
         Ok(())
     }

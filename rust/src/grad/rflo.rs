@@ -20,6 +20,9 @@ pub struct Rflo<'c> {
     i_jac: ImmediateJac,
     cache: crate::cells::Cache,
     lambda: f32,
+    /// persistent scratch (never serialized): next-state and padded-dlds
+    s_next: Vec<f32>,
+    dlds: Vec<f32>,
     last_flops: u64,
 }
 
@@ -27,13 +30,16 @@ impl<'c> Rflo<'c> {
     pub fn new(cell: &'c dyn Cell, lambda: f32) -> Self {
         let i_jac = cell.immediate_structure();
         let pattern = i_jac.pattern();
+        let ss = cell.state_size();
         Rflo {
             cell,
-            s: vec![0.0; cell.state_size()],
+            s: vec![0.0; ss],
             j: ColJacobian::from_pattern(&pattern),
             i_jac,
             cache: cell.make_cache(),
             lambda,
+            s_next: vec![0.0; ss],
+            dlds: vec![0.0; ss],
             last_flops: 0,
         }
     }
@@ -54,10 +60,9 @@ impl GradAlgo for Rflo<'_> {
     }
 
     fn step(&mut self, theta: &[f32], x: &[f32]) {
-        let ss = self.cell.state_size();
-        let mut s_next = vec![0.0; ss];
-        self.cell.forward(theta, &self.s, x, &mut self.cache, &mut s_next);
-        self.s = s_next;
+        // Allocation-free: forward into the owned scratch, then swap.
+        self.cell.forward(theta, &self.s, x, &mut self.cache, &mut self.s_next);
+        std::mem::swap(&mut self.s, &mut self.s_next);
         self.cell.immediate(&self.cache, &mut self.i_jac);
         self.j.update_rflo(self.lambda, &self.i_jac);
         self.last_flops = 2 * self.i_jac.nnz() as u64;
@@ -76,9 +81,9 @@ impl GradAlgo for Rflo<'_> {
         if dl_dh.len() == ss {
             self.j.accumulate_grad(dl_dh, g);
         } else {
-            let mut dlds = vec![0.0f32; ss];
-            dlds[..dl_dh.len()].copy_from_slice(dl_dh);
-            self.j.accumulate_grad(&dlds, g);
+            // LSTM: pad [dl_dh ; 0] in the owned scratch (tail stays zero).
+            self.dlds[..dl_dh.len()].copy_from_slice(dl_dh);
+            self.j.accumulate_grad(&self.dlds, g);
         }
         self.last_flops += 2 * self.j.nnz() as u64;
     }

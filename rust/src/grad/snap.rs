@@ -15,19 +15,22 @@ use crate::errors::Result;
 use crate::grad::{check_state_tag, state_tags, GradAlgo};
 use crate::runtime::serde::{Reader, Writer};
 use crate::sparse::coljac::ColJacobian;
+use crate::sparse::dynjac::DynJacobian;
 use crate::sparse::immediate::ImmediateJac;
 use crate::sparse::pattern::{snap_pattern, Pattern};
-use crate::tensor::matrix::Matrix;
 
 pub struct Snap<'c> {
     cell: &'c dyn Cell,
     n: usize,
     s: Vec<f32>,
     j: ColJacobian,
-    d: Matrix,
+    d: DynJacobian,
     i_jac: ImmediateJac,
     cache: crate::cells::Cache,
     pattern_nnz: usize,
+    /// persistent scratch (never serialized): next-state and padded-dlds
+    s_next: Vec<f32>,
+    dlds: Vec<f32>,
     last_flops: u64,
 }
 
@@ -48,10 +51,12 @@ impl<'c> Snap<'c> {
             n,
             s: vec![0.0; ss],
             j: ColJacobian::from_pattern(pattern),
-            d: Matrix::zeros(ss, ss),
+            d: cell.make_dyn_jacobian(),
             i_jac: cell.immediate_structure(),
             cache: cell.make_cache(),
             pattern_nnz: pattern.nnz(),
+            s_next: vec![0.0; ss],
+            dlds: vec![0.0; ss],
             last_flops: 0,
         }
     }
@@ -82,10 +87,9 @@ impl GradAlgo for Snap<'_> {
     }
 
     fn step(&mut self, theta: &[f32], x: &[f32]) {
-        let ss = self.cell.state_size();
-        let mut s_next = vec![0.0; ss];
-        self.cell.forward(theta, &self.s, x, &mut self.cache, &mut s_next);
-        self.s = s_next;
+        // Allocation-free: forward into the owned scratch, then swap.
+        self.cell.forward(theta, &self.s, x, &mut self.cache, &mut self.s_next);
+        std::mem::swap(&mut self.s, &mut self.s_next);
         self.cell.dynamics(theta, &self.cache, &mut self.d);
         self.cell.immediate(&self.cache, &mut self.i_jac);
         self.j.update(&self.d, &self.i_jac);
@@ -107,9 +111,9 @@ impl GradAlgo for Snap<'_> {
         if dl_dh.len() == ss {
             self.j.accumulate_grad(dl_dh, g);
         } else {
-            let mut dlds = vec![0.0f32; ss];
-            dlds[..dl_dh.len()].copy_from_slice(dl_dh);
-            self.j.accumulate_grad(&dlds, g);
+            // LSTM: pad [dl_dh ; 0] in the owned scratch (tail stays zero).
+            self.dlds[..dl_dh.len()].copy_from_slice(dl_dh);
+            self.j.accumulate_grad(&self.dlds, g);
         }
         self.last_flops += 2 * self.pattern_nnz as u64;
     }

@@ -4,33 +4,37 @@
 //! but increase its cost."
 //!
 //! Implemented as an ablation baseline: the influence matrix is tracked
-//! densely (full `D·J` product, RTRL cost) and after every update each
-//! column is re-sparsified to its `budget` largest-magnitude entries. With
-//! `budget` equal to SnAp-n's per-column pattern size, this isolates the
-//! value of *adaptive* patterns over SnAp's fixed n-step pattern at matched
-//! storage. (`repro`'s bench `step_costs` shows why the paper rejected it:
-//! the dense product keeps the full `k²p` term.)
+//! densely (full `D·J` product at sparse-RTRL cost — D is a CSR
+//! [`DynJacobian`], J stays dense) and after every update each column is
+//! re-sparsified to its `budget` largest-magnitude entries. With `budget`
+//! equal to SnAp-n's per-column pattern size, this isolates the value of
+//! *adaptive* patterns over SnAp's fixed n-step pattern at matched storage.
+//! (`repro`'s bench `step_costs` shows why the paper rejected it: the dense
+//! J keeps the full `d·k²p` product plus a `k·p` selection pass, vs SnAp's
+//! pattern-restricted `Σ|R_j|²`.)
 
 use crate::cells::Cell;
 use crate::errors::Result;
 use crate::grad::{check_state_tag, state_tags, GradAlgo};
 use crate::runtime::serde::{Reader, Writer};
+use crate::sparse::dynjac::DynJacobian;
 use crate::sparse::immediate::ImmediateJac;
 use crate::tensor::matrix::Matrix;
-use crate::tensor::ops::matmul_into;
 
 pub struct SnapTopK<'c> {
     cell: &'c dyn Cell,
     s: Vec<f32>,
     j: Matrix,
     j_next: Matrix,
-    d: Matrix,
+    d: DynJacobian,
     i_jac: ImmediateJac,
     cache: crate::cells::Cache,
     /// kept entries per column
     budget: usize,
     /// scratch for per-column selection
     col_scratch: Vec<(f32, u32)>,
+    /// persistent next-state scratch (never serialized)
+    s_next: Vec<f32>,
     last_flops: u64,
 }
 
@@ -44,11 +48,12 @@ impl<'c> SnapTopK<'c> {
             s: vec![0.0; ss],
             j: Matrix::zeros(ss, p),
             j_next: Matrix::zeros(ss, p),
-            d: Matrix::zeros(ss, ss),
+            d: cell.make_dyn_jacobian(),
             i_jac: cell.immediate_structure(),
             cache: cell.make_cache(),
             budget: budget.min(ss),
             col_scratch: Vec::with_capacity(ss),
+            s_next: vec![0.0; ss],
             last_flops: 0,
         }
     }
@@ -83,14 +88,15 @@ impl GradAlgo for SnapTopK<'_> {
     fn step(&mut self, theta: &[f32], x: &[f32]) {
         let ss = self.cell.state_size();
         let p = self.cell.num_params();
-        let mut s_next = vec![0.0; ss];
-        self.cell.forward(theta, &self.s, x, &mut self.cache, &mut s_next);
-        self.s = s_next;
+        // Allocation-free: forward into the owned scratch, then swap.
+        self.cell.forward(theta, &self.s, x, &mut self.cache, &mut self.s_next);
+        std::mem::swap(&mut self.s, &mut self.s_next);
         self.cell.dynamics(theta, &self.cache, &mut self.d);
         self.cell.immediate(&self.cache, &mut self.i_jac);
 
-        // full product (this is the cost the fixed pattern avoids)
-        matmul_into(&self.d, &self.j, &mut self.j_next, false);
+        // full product over D's structural nonzeros (the J side stays dense
+        // — that is the cost the fixed pattern avoids)
+        self.d.spmm_into(&self.j, &mut self.j_next, false);
         for jcol in 0..p {
             let (rows, vals) = self.i_jac.col(jcol);
             for (&i, &v) in rows.iter().zip(vals) {
@@ -118,7 +124,7 @@ impl GradAlgo for SnapTopK<'_> {
             }
         }
         std::mem::swap(&mut self.j, &mut self.j_next);
-        self.last_flops = 2 * (ss * ss * p) as u64 + (ss * p) as u64;
+        self.last_flops = 2 * self.d.nnz() as u64 * p as u64 + (ss * p) as u64;
     }
 
     fn hidden(&self) -> &[f32] {

@@ -18,9 +18,9 @@ use crate::cells::Cell;
 use crate::errors::Result;
 use crate::grad::{check_state_tag, state_tags, GradAlgo};
 use crate::runtime::serde::{Reader, Writer};
+use crate::sparse::dynjac::DynJacobian;
 use crate::sparse::immediate::ImmediateJac;
-use crate::tensor::matrix::Matrix;
-use crate::tensor::ops::{dot, matvec};
+use crate::tensor::ops::dot;
 use crate::tensor::rng::Pcg32;
 
 pub struct Uoro<'c> {
@@ -28,11 +28,17 @@ pub struct Uoro<'c> {
     s: Vec<f32>,
     u: Vec<f32>,
     v: Vec<f32>,
-    d: Matrix,
+    d: DynJacobian,
     i_jac: ImmediateJac,
     cache: crate::cells::Cache,
     rng: Pcg32,
     eps: f32,
+    /// persistent scratch (never serialized): next-state, the ν sign draw,
+    /// D·ũ, and Iᵀν
+    s_next: Vec<f32>,
+    nu: Vec<f32>,
+    du: Vec<f32>,
+    itnu: Vec<f32>,
     last_flops: u64,
 }
 
@@ -45,11 +51,15 @@ impl<'c> Uoro<'c> {
             s: vec![0.0; ss],
             u: vec![0.0; ss],
             v: vec![0.0; p],
-            d: Matrix::zeros(ss, ss),
+            d: cell.make_dyn_jacobian(),
             i_jac: cell.immediate_structure(),
             cache: cell.make_cache(),
             rng,
             eps: 1e-7,
+            s_next: vec![0.0; ss],
+            nu: vec![0.0; ss],
+            du: vec![0.0; ss],
+            itnu: vec![0.0; p],
             last_flops: 0,
         }
     }
@@ -78,28 +88,32 @@ impl GradAlgo for Uoro<'_> {
     fn step(&mut self, theta: &[f32], x: &[f32]) {
         let ss = self.cell.state_size();
         let p = self.cell.num_params();
-        let mut s_next = vec![0.0; ss];
-        self.cell.forward(theta, &self.s, x, &mut self.cache, &mut s_next);
-        self.s = s_next;
+        // Allocation-free: forward into the owned scratch, then swap.
+        self.cell.forward(theta, &self.s, x, &mut self.cache, &mut self.s_next);
+        std::mem::swap(&mut self.s, &mut self.s_next);
         self.cell.dynamics(theta, &self.cache, &mut self.d);
         self.cell.immediate(&self.cache, &mut self.i_jac);
 
         // ν ∈ {±1}^state
-        let nu: Vec<f32> = (0..ss).map(|_| self.rng.sign()).collect();
-        let du = matvec(&self.d, &self.u);
-        let mut itnu = vec![0.0f32; p];
-        self.i_jac.matvec_t_acc(&nu, &mut itnu);
+        for v in self.nu.iter_mut() {
+            *v = self.rng.sign();
+        }
+        // D·ũ through the sparse dynamics Jacobian — O(nnz(D)).
+        self.d.matvec_into(&self.u, &mut self.du);
+        self.itnu.iter_mut().for_each(|v| *v = 0.0);
+        self.i_jac.matvec_t_acc(&self.nu, &mut self.itnu);
 
-        let rho0 = ((norm(&self.v) + self.eps) / (norm(&du) + self.eps)).sqrt();
-        let rho1 = ((norm(&itnu) + self.eps) / (norm(&nu) + self.eps)).sqrt();
+        let rho0 = ((norm(&self.v) + self.eps) / (norm(&self.du) + self.eps)).sqrt();
+        let rho1 = ((norm(&self.itnu) + self.eps) / (norm(&self.nu) + self.eps)).sqrt();
 
         for i in 0..ss {
-            self.u[i] = rho0 * du[i] + rho1 * nu[i];
+            self.u[i] = rho0 * self.du[i] + rho1 * self.nu[i];
         }
         for j in 0..p {
-            self.v[j] = self.v[j] / rho0 + itnu[j] / rho1;
+            self.v[j] = self.v[j] / rho0 + self.itnu[j] / rho1;
         }
-        self.last_flops = 2 * (ss * ss) as u64 + 2 * self.i_jac.nnz() as u64 + 4 * (ss + p) as u64;
+        self.last_flops =
+            2 * self.d.nnz() as u64 + 2 * self.i_jac.nnz() as u64 + 4 * (ss + p) as u64;
     }
 
     fn hidden(&self) -> &[f32] {

@@ -15,9 +15,15 @@
 //! through `apply_delta`/`set_params` (`&mut self`), which the executor
 //! calls between parallel sections after an ordered reduction of the
 //! per-lane [`ReadoutGrad`]s.
+//!
+//! Perf contract: the per-token path is **allocation-free** after the first
+//! call — every intermediate (activations, softmax gradient, backward
+//! cotangents including the returned `∂L/∂h`) lives in the lane's
+//! [`ReadoutCache`], sized on first use and reused thereafter; the dense
+//! products go through `matvec_into`/`matvec_t_into`.
 
 use crate::tensor::matrix::Matrix;
-use crate::tensor::ops::{axpy_slice, drelu, matvec, matvec_t, softmax_xent};
+use crate::tensor::ops::{axpy_slice, drelu, log_softmax, matvec_into, matvec_t_into};
 use crate::tensor::rng::Pcg32;
 
 pub struct Readout {
@@ -31,13 +37,21 @@ pub struct Readout {
     b2: Vec<f32>,
 }
 
-/// Forward cache for one step.
+/// Forward cache + backward scratch for one lane. All buffers are sized on
+/// first use and reused — one `ReadoutCache` per lane makes the whole
+/// per-token readout path allocation-free.
 #[derive(Clone, Default)]
 pub struct ReadoutCache {
     h_in: Vec<f32>,
     pre1: Vec<f32>,
     act1: Vec<f32>,
     pub logits: Vec<f32>,
+    /// softmax / arbitrary logit cotangent (backward scratch)
+    dlogits: Vec<f32>,
+    /// relu-gated hidden cotangent (backward scratch)
+    dact1: Vec<f32>,
+    /// `∂L/∂h` — the value `backward` returns a borrow of
+    dh: Vec<f32>,
 }
 
 /// Flat gradient buffer with the same layout as `Readout::num_params`.
@@ -85,41 +99,67 @@ impl Readout {
         ReadoutGrad { flat: vec![0.0; self.num_params()] }
     }
 
-    /// Logits for hidden state `h`.
+    /// Logits for hidden state `h` (allocation-free after the first call).
     pub fn forward(&self, h: &[f32], cache: &mut ReadoutCache) {
         debug_assert_eq!(h.len(), self.in_dim);
-        cache.h_in = h.to_vec();
-        let mut pre1 = matvec(&self.w1, h);
-        for (p, b) in pre1.iter_mut().zip(&self.b1) {
+        cache.h_in.resize(self.in_dim, 0.0);
+        cache.h_in.copy_from_slice(h);
+        cache.pre1.resize(self.hidden, 0.0);
+        matvec_into(&self.w1, h, &mut cache.pre1);
+        for (p, b) in cache.pre1.iter_mut().zip(&self.b1) {
             *p += b;
         }
-        cache.act1 = pre1.iter().map(|&x| x.max(0.0)).collect();
-        cache.pre1 = pre1;
-        let mut logits = matvec(&self.w2, &cache.act1);
-        for (l, b) in logits.iter_mut().zip(&self.b2) {
+        cache.act1.resize(self.hidden, 0.0);
+        for (a, &p) in cache.act1.iter_mut().zip(&cache.pre1) {
+            *a = p.max(0.0);
+        }
+        cache.logits.resize(self.out_dim, 0.0);
+        matvec_into(&self.w2, &cache.act1, &mut cache.logits);
+        for (l, b) in cache.logits.iter_mut().zip(&self.b2) {
             *l += b;
         }
-        cache.logits = logits;
     }
 
     /// Cross-entropy loss vs `target`; accumulates readout grads into `g`
-    /// and returns `(loss_nats, dL/dh)`.
-    pub fn loss_and_backward(
+    /// and returns `(loss_nats, dL/dh)` — the cotangent borrows the cache's
+    /// scratch, so the per-token hot loop allocates nothing.
+    pub fn loss_and_backward<'a>(
         &self,
-        cache: &ReadoutCache,
+        cache: &'a mut ReadoutCache,
         target: usize,
         g: &mut ReadoutGrad,
-    ) -> (f32, Vec<f32>) {
-        let (loss, dlogits) = softmax_xent(&cache.logits, target);
-        let dh = self.backward(cache, &dlogits, g);
+    ) -> (f32, &'a [f32]) {
+        // softmax gradient in the cache scratch: grad = softmax(logits) − e_t
+        cache.dlogits.resize(self.out_dim, 0.0);
+        cache.dlogits.copy_from_slice(&cache.logits);
+        log_softmax(&mut cache.dlogits);
+        let loss = -cache.dlogits[target];
+        for v in cache.dlogits.iter_mut() {
+            *v = v.exp();
+        }
+        cache.dlogits[target] -= 1.0;
+        let dh = self.backward_scratch(cache, g);
         (loss, dh)
     }
 
-    /// Backprop an arbitrary logit cotangent.
-    pub fn backward(&self, cache: &ReadoutCache, dlogits: &[f32], g: &mut ReadoutGrad) -> Vec<f32> {
+    /// Backprop an arbitrary logit cotangent (copied into the cache's
+    /// scratch; the returned `∂L/∂h` borrows the cache).
+    pub fn backward<'a>(
+        &self,
+        cache: &'a mut ReadoutCache,
+        dlogits: &[f32],
+        g: &mut ReadoutGrad,
+    ) -> &'a [f32] {
+        cache.dlogits.resize(self.out_dim, 0.0);
+        cache.dlogits.copy_from_slice(dlogits);
+        self.backward_scratch(cache, g)
+    }
+
+    /// Shared backward sweep reading the cotangent from `cache.dlogits`.
+    fn backward_scratch<'a>(&self, cache: &'a mut ReadoutCache, g: &mut ReadoutGrad) -> &'a [f32] {
         let (o_w1, o_b1, o_w2, o_b2) = self.offsets();
         // dW2 = dlogits ⊗ act1 ; db2 = dlogits
-        for (i, &dl) in dlogits.iter().enumerate() {
+        for (i, &dl) in cache.dlogits.iter().enumerate() {
             if dl != 0.0 {
                 axpy_slice(
                     &mut g.flat[o_w2 + i * self.hidden..o_w2 + (i + 1) * self.hidden],
@@ -130,12 +170,13 @@ impl Readout {
             g.flat[o_b2 + i] += dl;
         }
         // dact1 = W2ᵀ dlogits, gated by relu'
-        let mut dact1 = matvec_t(&self.w2, dlogits);
-        for (da, &pre) in dact1.iter_mut().zip(&cache.pre1) {
+        cache.dact1.resize(self.hidden, 0.0);
+        matvec_t_into(&self.w2, &cache.dlogits, &mut cache.dact1);
+        for (da, &pre) in cache.dact1.iter_mut().zip(&cache.pre1) {
             *da *= drelu(pre);
         }
         // dW1 = dact1 ⊗ h ; db1 = dact1
-        for (i, &da) in dact1.iter().enumerate() {
+        for (i, &da) in cache.dact1.iter().enumerate() {
             if da != 0.0 {
                 axpy_slice(
                     &mut g.flat[o_w1 + i * self.in_dim..o_w1 + (i + 1) * self.in_dim],
@@ -146,7 +187,9 @@ impl Readout {
             g.flat[o_b1 + i] += da;
         }
         // dL/dh = W1ᵀ dact1
-        matvec_t(&self.w1, &dact1)
+        cache.dh.resize(self.in_dim, 0.0);
+        matvec_t_into(&self.w1, &cache.dact1, &mut cache.dh);
+        &cache.dh
     }
 
     fn offsets(&self) -> (usize, usize, usize, usize) {
@@ -207,6 +250,7 @@ impl Readout {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::ops::softmax_xent;
 
     #[test]
     fn forward_backward_finite_diff() {
@@ -217,7 +261,8 @@ mod tests {
         let mut cache = ReadoutCache::default();
         ro.forward(&h, &mut cache);
         let mut g = ro.make_grad();
-        let (_, dh) = ro.loss_and_backward(&cache, target, &mut g);
+        let (_, dh) = ro.loss_and_backward(&mut cache, target, &mut g);
+        let dh = dh.to_vec();
 
         // FD over h.
         let eps = 1e-3f32;
@@ -290,7 +335,7 @@ mod tests {
         for _ in 0..50 {
             let mut g = ro.make_grad();
             ro.forward(&h, &mut cache);
-            ro.loss_and_backward(&cache, target, &mut g);
+            ro.loss_and_backward(&mut cache, target, &mut g);
             let delta: Vec<f32> = g.flat.iter().map(|&x| -0.1 * x).collect();
             ro.apply_delta(&delta);
         }

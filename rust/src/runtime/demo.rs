@@ -122,8 +122,8 @@ pub fn parity_check_with_hidden(
     let mut cache = ReadoutCache::default();
     native_ro.forward(snap.hidden(), &mut cache);
     let mut g_ro = native_ro.make_grad();
-    let (loss_native, dh) = native_ro.loss_and_backward(&cache, target, &mut g_ro);
-    snap.inject_loss(&dh, &mut g_rec);
+    let (loss_native, dh) = native_ro.loss_and_backward(&mut cache, target, &mut g_ro);
+    snap.inject_loss(dh, &mut g_rec);
 
     let h1_native = snap.hidden().to_vec();
     let j1_native: Vec<f32> = {

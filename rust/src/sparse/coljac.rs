@@ -11,9 +11,19 @@
 //! restricts the product `D_t·J_{t-1}` to the kept entries, which is exactly
 //! the `d·(d²k²p)` cost line of Table 1. The restriction of the sum to
 //! `m ∈ R_j` is sound because `J[m,j] = 0` for `m ∉ R_j` by construction.
+//! `D_t` arrives as a sparse [`DynJacobian`] (never a dense matrix): the
+//! run-gather pulls `D[R, R]` submatrices out of its CSR rows, so the gather
+//! cost tracks nnz(D), and the SnAp-1 fast path reads its cached diagonal.
+//!
+//! The update is allocation-free and syscall-free per step: the run-GEMM
+//! scratch (`RunScratch`) is owned by the `ColJacobian`, and the
+//! `available_parallelism()` lookup plus the thread-partition plan over runs
+//! are resolved **once at construction** (they are pattern-static), not per
+//! timestep as before.
 //!
 //! This is the library's hottest native kernel; see EXPERIMENTS.md §Perf.
 
+use crate::sparse::dynjac::DynJacobian;
 use crate::sparse::immediate::ImmediateJac;
 use crate::sparse::pattern::Pattern;
 use crate::tensor::matrix::Matrix;
@@ -60,6 +70,16 @@ pub struct ColJacobian {
     /// the masked product becomes a small dense GEMM with a once-per-run
     /// gathered D-submatrix).
     runs: Vec<u32>,
+    /// Persistent run-GEMM scratch for the single-threaded path (never
+    /// serialized — rebuilt with the structure on checkpoint restore).
+    scratch: RunScratch,
+    /// Thread-partition plan over `runs`, balanced by FLOPs — computed once
+    /// at construction (`available_parallelism()` is a syscall; it used to
+    /// be consulted every timestep). Length 2 (one chunk) ⇒ parallel path
+    /// disabled.
+    par_bounds: Vec<usize>,
+    /// One persistent scratch per parallel chunk.
+    par_scratch: Vec<RunScratch>,
 }
 
 impl ColJacobian {
@@ -88,6 +108,35 @@ impl ColJacobian {
             }
         }
         runs.push(pattern.cols() as u32);
+
+        // Pattern-static thread plan: chunk the runs into roughly equal-FLOP
+        // ranges for the intra-op parallel path. Only built when the update
+        // is big enough to ever take that path.
+        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8);
+        let mut par_bounds = vec![0usize];
+        if threads > 1 && product_flops >= PARALLEL_FLOPS_THRESHOLD {
+            let per = product_flops / threads as u64 + 1;
+            let mut acc = 0u64;
+            for ri in 0..runs.len() - 1 {
+                let j0 = runs[ri] as usize;
+                let j1 = runs[ri + 1] as usize;
+                let n = (col_ptr[j0 + 1] - col_ptr[j0]) as u64;
+                acc += 2 * n * n * (j1 - j0) as u64;
+                if acc >= per && par_bounds.len() < threads {
+                    par_bounds.push(ri + 1);
+                    acc = 0;
+                }
+            }
+        }
+        par_bounds.push(runs.len() - 1);
+        // Only a real multi-chunk plan gets per-chunk scratch; a 2-entry
+        // plan means update() always takes the sequential path.
+        let par_scratch: Vec<RunScratch> = if par_bounds.len() > 2 {
+            (0..par_bounds.len() - 1).map(|_| RunScratch::new(max_col)).collect()
+        } else {
+            Vec::new()
+        };
+
         ColJacobian {
             state: pattern.rows(),
             params: pattern.cols(),
@@ -98,6 +147,9 @@ impl ColJacobian {
             diag: vec![0.0; pattern.rows()],
             product_flops,
             runs,
+            scratch: RunScratch::new(max_col),
+            par_bounds,
+            par_scratch,
         }
     }
 
@@ -127,9 +179,9 @@ impl ColJacobian {
     }
 
     /// Raw value storage in CSC order of the fixed pattern (checkpointing:
-    /// the values are the whole mutable state — the structure is rebuilt
-    /// deterministically from the cell, then verified against
-    /// [`structure_fingerprint`](Self::structure_fingerprint)).
+    /// the values are the whole mutable state — the structure and scratch
+    /// buffers are rebuilt deterministically from the cell, then verified
+    /// against [`structure_fingerprint`](Self::structure_fingerprint)).
     #[inline]
     pub fn vals(&self) -> &[f32] {
         &self.vals
@@ -165,27 +217,25 @@ impl ColJacobian {
     }
 
     /// One SnAp step: `J ← P ⊙ (I + D·J)` with P this Jacobian's pattern.
-    /// `d` is the dense dynamics Jacobian (state × state); `i_jac` must share
-    /// a compatible (subset) structure: every I entry must be inside P —
-    /// guaranteed when P = snap_pattern(..) because P ⊇ pat(I).
+    /// `d` is the sparse dynamics Jacobian (state × state); `i_jac` must
+    /// share a compatible (subset) structure: every I entry must be inside
+    /// P — guaranteed when P = snap_pattern(..) because P ⊇ pat(I).
     ///
     /// §Perf: three regimes —
     /// * SnAp-1 (every column has one row): fused `v = diag·v + I`, no
-    ///   per-column scratch, D's diagonal gathered once per step;
-    /// * small general patterns: single-threaded masked product with an
-    ///   unrolled unchecked gather;
+    ///   per-column scratch, D's diagonal gathered once per step from its
+    ///   cached diagonal slots;
+    /// * small general patterns: single-threaded masked product with a
+    ///   sparse `D[R, R]` run-gather into the owned scratch;
     /// * large patterns (SnAp-2/3 at scale): the same kernel fanned out over
-    ///   scoped threads on disjoint column ranges.
-    pub fn update(&mut self, d: &Matrix, i_jac: &ImmediateJac) {
-        debug_assert_eq!(d.rows(), self.state);
-        debug_assert_eq!(d.cols(), self.state);
+    ///   scoped threads on the construction-time run partition.
+    pub fn update(&mut self, d: &DynJacobian, i_jac: &ImmediateJac) {
+        debug_assert_eq!(d.n(), self.state);
         debug_assert_eq!(i_jac.num_params(), self.params);
 
         if self.max_col <= 1 && i_jac.nnz() == self.vals.len() {
             // --- SnAp-1 fast path: J and I are both "one row per column".
-            for i in 0..self.state {
-                self.diag[i] = d.get(i, i);
-            }
+            d.diagonal_into(&mut self.diag);
             let diag = &self.diag;
             let rows = &self.row_idx;
             let ivals = i_jac.vals();
@@ -197,14 +247,9 @@ impl ColJacobian {
             return;
         }
 
-        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-        if self.product_flops >= PARALLEL_FLOPS_THRESHOLD
-            && threads > 1
-            && intra_op_parallelism_enabled()
-        {
-            self.update_parallel(d, i_jac, threads.min(8));
+        if self.par_bounds.len() > 2 && intra_op_parallelism_enabled() {
+            self.update_parallel(d, i_jac);
         } else {
-            let mut scratch = RunScratch::new(self.max_col);
             update_runs(
                 &self.col_ptr,
                 &self.row_idx,
@@ -215,50 +260,32 @@ impl ColJacobian {
                 0,
                 d,
                 i_jac,
-                &mut scratch,
+                &mut self.scratch,
             );
         }
     }
 
-    /// Threaded masked product over disjoint run chunks.
-    fn update_parallel(&mut self, d: &Matrix, i_jac: &ImmediateJac, threads: usize) {
-        // Partition runs so each chunk has roughly equal FLOPs.
-        let per = self.product_flops / threads as u64 + 1;
-        let mut bounds = vec![0usize]; // indices into runs
-        let mut acc = 0u64;
-        for ri in 0..self.runs.len() - 1 {
-            let j0 = self.runs[ri] as usize;
-            let j1 = self.runs[ri + 1] as usize;
-            let n = (self.col_ptr[j0 + 1] - self.col_ptr[j0]) as u64;
-            acc += 2 * n * n * (j1 - j0) as u64;
-            if acc >= per && bounds.len() < threads {
-                bounds.push(ri + 1);
-                acc = 0;
-            }
-        }
-        bounds.push(self.runs.len() - 1);
-
+    /// Threaded masked product over the disjoint run chunks planned at
+    /// construction, each with its own persistent scratch.
+    fn update_parallel(&mut self, d: &DynJacobian, i_jac: &ImmediateJac) {
         let col_ptr = &self.col_ptr;
         let row_idx = &self.row_idx;
         let runs = &self.runs;
-        let max_col = self.max_col;
-        // Split vals into per-chunk disjoint slices at run boundaries.
-        let mut tail: &mut [f32] = &mut self.vals;
-        let mut slices = Vec::with_capacity(bounds.len() - 1);
-        let mut consumed = 0usize;
-        for w in bounds.windows(2) {
-            let end = col_ptr[runs[w[1]] as usize];
-            let (head, rest) = tail.split_at_mut(end - consumed);
-            slices.push((w[0], w[1], head));
-            consumed = end;
-            tail = rest;
-        }
-        std::thread::scope(|s| {
-            for (r0, r1, vals) in slices {
+        let bounds = &self.par_bounds;
+        let par_scratch = &mut self.par_scratch;
+        let vals: &mut [f32] = &mut self.vals;
+        std::thread::scope(move |s| {
+            let mut tail = vals;
+            let mut consumed = 0usize;
+            for (w, scratch) in bounds.windows(2).zip(par_scratch.iter_mut()) {
+                let (r0, r1) = (w[0], w[1]);
+                let end = col_ptr[runs[r1] as usize];
+                let (head, rest) = tail.split_at_mut(end - consumed);
+                let base = consumed;
+                consumed = end;
+                tail = rest;
                 s.spawn(move || {
-                    let mut scratch = RunScratch::new(max_col);
-                    let base = col_ptr[runs[r0] as usize];
-                    update_runs(col_ptr, row_idx, runs, vals, r0, r1, base, d, i_jac, &mut scratch);
+                    update_runs(col_ptr, row_idx, runs, head, r0, r1, base, d, i_jac, scratch);
                 });
             }
         });
@@ -335,7 +362,10 @@ impl ColJacobian {
     }
 }
 
-/// Per-thread scratch for the run-GEMM update.
+/// Per-thread scratch for the run-GEMM update. Owned by the `ColJacobian`
+/// (one for the sequential path, one per parallel chunk) so the hot loop
+/// never allocates; reconstructible, never serialized.
+#[derive(Clone, Debug)]
 struct RunScratch {
     /// gathered D submatrix, column-major (n × n)
     dsub: Vec<f32>,
@@ -354,11 +384,12 @@ impl RunScratch {
 /// global offset of `vals[0]`.
 ///
 /// §Perf: per run, the D entries needed (`D[R, R]`) are gathered ONCE into a
-/// column-major submatrix, then every column in the run is updated with
-/// contiguous AXPYs — a small dense GEMM (`out = Dsub · Old`). Parameters
-/// wired into the same unit share their row set, so runs are long (≈ the
-/// block width) and the gather amortizes to nothing; the product runs at
-/// SIMD speed instead of gather speed (~3–4× on SnAp-2/3 shapes).
+/// column-major submatrix — straight off D's CSR rows, so the gather cost is
+/// the nnz of the touched rows, not |R|² — then every column in the run is
+/// updated with contiguous AXPYs — a small dense GEMM (`out = Dsub · Old`).
+/// Parameters wired into the same unit share their row set, so runs are long
+/// (≈ the block width) and the gather amortizes to nothing; the product runs
+/// at SIMD speed instead of gather speed (~3–4× on SnAp-2/3 shapes).
 #[allow(clippy::too_many_arguments)]
 fn update_runs(
     col_ptr: &[usize],
@@ -368,7 +399,7 @@ fn update_runs(
     r0: usize,
     r1: usize,
     base: usize,
-    d: &Matrix,
+    d: &DynJacobian,
     i_jac: &ImmediateJac,
     scratch: &mut RunScratch,
 ) {
@@ -383,12 +414,7 @@ fn update_runs(
         let rows = &row_idx[s0..e0];
         // Gather Dsub column-major: dsub[m_slot*n + r_slot] = D[rows[r_slot], rows[m_slot]].
         let dsub = &mut scratch.dsub[..n * n];
-        for (m_slot, &m) in rows.iter().enumerate() {
-            let col = &mut dsub[m_slot * n..(m_slot + 1) * n];
-            for (r_slot, &r) in rows.iter().enumerate() {
-                col[r_slot] = d.get(r as usize, m as usize);
-            }
-        }
+        d.gather_block(rows, dsub);
         // Every column in the run: out = Dsub · old  (contiguous AXPYs).
         for j in j_start..j_end {
             let (s, e) = (col_ptr[j], col_ptr[j + 1]);
@@ -437,7 +463,7 @@ mod tests {
         masked
     }
 
-    fn setup(state: usize, params: usize, seed: u64) -> (Pattern, Matrix, ImmediateJac) {
+    fn setup(state: usize, params: usize, seed: u64) -> (Pattern, DynJacobian, ImmediateJac) {
         let mut rng = Pcg32::seeded(seed);
         // immediate: one row per column
         let rows_per_col: Vec<Vec<u32>> =
@@ -447,10 +473,12 @@ mod tests {
             *v = rng.normal();
         }
         let d_pat = Pattern::random(state, state, 0.4, &mut rng).with_diagonal();
-        let mut d = Matrix::zeros(state, state);
+        let mut dense = Matrix::zeros(state, state);
         for (i, j) in d_pat.iter() {
-            d.set(i, j, rng.normal() * 0.5);
+            dense.set(i, j, rng.normal() * 0.5);
         }
+        let mut d = DynJacobian::from_pattern(&d_pat);
+        d.refresh_from_dense(&dense);
         let p = snap_pattern(&d_pat, &ij.pattern(), 2);
         (p, d, ij)
     }
@@ -461,13 +489,14 @@ mod tests {
         let mut cj = ColJacobian::from_pattern(&p);
         let mut rng = Pcg32::seeded(7);
         let mut j_dense = Matrix::zeros(6, 12);
+        let d_dense = d.to_dense();
         // run 5 steps with fresh immediate values each step
         for _ in 0..5 {
             for v in ij.vals_mut() {
                 *v = rng.normal();
             }
             let i_dense = ij.to_dense();
-            j_dense = dense_masked_update(&p, &d, &i_dense, &j_dense);
+            j_dense = dense_masked_update(&p, &d_dense, &i_dense, &j_dense);
             cj.update(&d, &ij);
         }
         let got = cj.to_dense();
@@ -575,5 +604,27 @@ mod tests {
             .sum::<u64>()
             + ij.nnz() as u64;
         assert_eq!(f, manual);
+    }
+
+    #[test]
+    fn repeated_updates_reuse_owned_scratch() {
+        // The owned scratch must not leak state between steps: 3 updates of
+        // the same inputs through a fresh ColJacobian each time agree with 3
+        // updates through one instance, bit for bit.
+        let (p, d, ij) = setup(7, 21, 31);
+        let mut a = ColJacobian::from_pattern(&p);
+        for _ in 0..3 {
+            a.update(&d, &ij);
+        }
+        let mut b = ColJacobian::from_pattern(&p);
+        for _ in 0..3 {
+            let mut fresh = ColJacobian::from_pattern(&p);
+            fresh.vals_mut().copy_from_slice(b.vals());
+            fresh.update(&d, &ij);
+            b.vals_mut().copy_from_slice(fresh.vals());
+        }
+        for (x, y) in a.vals().iter().zip(b.vals()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
     }
 }

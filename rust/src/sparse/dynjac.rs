@@ -1,0 +1,356 @@
+//! The dynamics Jacobian `D_t = ∂s_t/∂s_{t-1}` in CSR form — the sparse-D
+//! contract at the heart of the tracking hot path.
+//!
+//! The *structure* of `D_t` is fixed for the whole run: it is the union of
+//! the recurrent weight masks (plus the diagonal / gate bands the cell
+//! equations add — see each cell's `dynamics_pattern`), so its nnz tracks
+//! weight density: ~O(nnz(W_h)) for Vanilla/GRU, the h/c bands on top for
+//! LSTM. Materializing `D_t` densely therefore costs O(k²) per step *no
+//! matter how sparse the network is*, which is exactly the term the paper's
+//! sparse cost lines (Table 1, §3.2) eliminate. This type stores only the
+//! structural nonzeros; cells refresh `vals` in O(nnz) each step through
+//! precomputed slot maps ([`crate::cells::block_slots`]).
+//!
+//! Kernels (all allocation-free, writing into caller buffers):
+//! * [`matvec_t_into`](DynJacobian::matvec_t_into) — BPTT's `Dᵀ·δ` backward
+//!   step,
+//! * [`spmm_into`](DynJacobian::spmm_into) — RTRL / SnAp-TopK's `D·J`
+//!   (CSR × dense),
+//! * [`gather_block`](DynJacobian::gather_block) — SnAp's run-GEMM gather of
+//!   `D[R, R]` submatrices,
+//! * [`diagonal_into`](DynJacobian::diagonal_into) — SnAp-1's diagonal fast
+//!   path (slots cached at construction).
+//!
+//! The layout is canonical for a given [`Pattern`] (rows in order, columns
+//! sorted ascending within each row), so a cell and every consumer built
+//! from the same `dynamics_pattern()` agree on slot indices.
+
+use crate::sparse::pattern::Pattern;
+use crate::tensor::matrix::Matrix;
+use crate::tensor::ops::axpy_slice;
+
+/// Sentinel in `diag_slots` for rows whose diagonal entry is not in the
+/// pattern (possible for Vanilla, whose D-pattern is exactly the W_h mask).
+const NO_DIAG: u32 = u32::MAX;
+
+/// CSR dynamics Jacobian (square, state × state) with a fixed structure.
+#[derive(Clone, Debug)]
+pub struct DynJacobian {
+    n: usize,
+    row_ptr: Vec<usize>,
+    col_idx: Vec<u32>,
+    vals: Vec<f32>,
+    /// flat slot of entry (i, i) per row, `NO_DIAG` when absent.
+    diag_slots: Vec<u32>,
+}
+
+impl DynJacobian {
+    /// Zero-valued Jacobian with the canonical layout of `pattern`.
+    pub fn from_pattern(pattern: &Pattern) -> Self {
+        assert_eq!(pattern.rows(), pattern.cols(), "dynamics Jacobian must be square");
+        let n = pattern.rows();
+        let mut row_ptr = Vec::with_capacity(n + 1);
+        let mut col_idx = Vec::with_capacity(pattern.nnz());
+        row_ptr.push(0);
+        for i in 0..n {
+            col_idx.extend_from_slice(pattern.row(i));
+            row_ptr.push(col_idx.len());
+        }
+        let nnz = col_idx.len();
+        let mut dj =
+            DynJacobian { n, row_ptr, col_idx, vals: vec![0.0; nnz], diag_slots: vec![NO_DIAG; n] };
+        for i in 0..n {
+            if let Some(t) = dj.slot_of(i, i) {
+                dj.diag_slots[i] = t as u32;
+            }
+        }
+        dj
+    }
+
+    /// State size (the matrix is `n × n`).
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.n * self.n).max(1) as f64
+    }
+
+    /// Column ids + values of row `i` (columns sorted ascending).
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f32]) {
+        let (s, e) = (self.row_ptr[i], self.row_ptr[i + 1]);
+        (&self.col_idx[s..e], &self.vals[s..e])
+    }
+
+    #[inline]
+    pub fn vals(&self) -> &[f32] {
+        &self.vals
+    }
+
+    /// Mutable flat value storage (structure untouched) — the surface the
+    /// cells' slot maps write through.
+    #[inline]
+    pub fn vals_mut(&mut self) -> &mut [f32] {
+        &mut self.vals
+    }
+
+    /// Zero all values (cells that accumulate overlapping blocks call this
+    /// first; O(nnz)).
+    pub fn zero(&mut self) {
+        self.vals.iter_mut().for_each(|v| *v = 0.0);
+    }
+
+    /// Flat slot of entry `(i, j)`, if it is structural.
+    #[inline]
+    pub fn slot_of(&self, i: usize, j: usize) -> Option<usize> {
+        let (s, e) = (self.row_ptr[i], self.row_ptr[i + 1]);
+        self.col_idx[s..e].binary_search(&(j as u32)).ok().map(|t| s + t)
+    }
+
+    /// Entry `(i, j)` (0 outside the pattern) — tests / analyses only.
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.slot_of(i, j).map(|t| self.vals[t]).unwrap_or(0.0)
+    }
+
+    /// `out[i] = D[i, i]` (0 where the diagonal is not structural). Slot
+    /// positions are cached at construction, so this is a flat gather.
+    pub fn diagonal_into(&self, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.n);
+        for (o, &t) in out.iter_mut().zip(&self.diag_slots) {
+            *o = if t == NO_DIAG { 0.0 } else { self.vals[t as usize] };
+        }
+    }
+
+    /// `y = D · x` (overwrites `y`).
+    pub fn matvec_into(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.n);
+        assert_eq!(y.len(), self.n);
+        for i in 0..self.n {
+            let (cols, vals) = self.row(i);
+            let mut acc = 0.0f32;
+            for (&j, &v) in cols.iter().zip(vals) {
+                acc += v * x[j as usize];
+            }
+            y[i] = acc;
+        }
+    }
+
+    /// `y = Dᵀ · x` without materializing the transpose (overwrites `y`) —
+    /// the BPTT/RFLO backward step `∂L/∂s_{t-1} = D_tᵀ·∂L/∂s_t` in O(nnz).
+    pub fn matvec_t_into(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.n);
+        assert_eq!(y.len(), self.n);
+        y.iter_mut().for_each(|v| *v = 0.0);
+        for (i, &xi) in x.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            let (cols, vals) = self.row(i);
+            for (&j, &v) in cols.iter().zip(vals) {
+                y[j as usize] += v * xi;
+            }
+        }
+    }
+
+    /// `C (+)= D · B` where B, C are dense row-major — RTRL / SnAp-TopK's
+    /// `D·J` as CSR × dense with a contiguous AXPY inner loop (the
+    /// `d·(d·k²p)` cost line of Table 1).
+    pub fn spmm_into(&self, b: &Matrix, c: &mut Matrix, accumulate: bool) {
+        assert_eq!(self.n, b.rows(), "spmm: inner dim");
+        assert_eq!((c.rows(), c.cols()), (self.n, b.cols()), "spmm: out shape");
+        if !accumulate {
+            c.fill(0.0);
+        }
+        for i in 0..self.n {
+            let (cols, vals) = self.row(i);
+            let crow = c.row_mut(i);
+            for (&m, &v) in cols.iter().zip(vals) {
+                if v != 0.0 {
+                    axpy_slice(crow, v, b.row(m as usize));
+                }
+            }
+        }
+    }
+
+    /// Gather the submatrix `D[rows, rows]` into `out` **column-major**
+    /// (`out[m_slot·n + r_slot] = D[rows[r_slot], rows[m_slot]]`, with
+    /// `n = rows.len()`); entries outside the pattern come out 0. `rows`
+    /// must be sorted ascending. This is SnAp's per-run gather: cost is the
+    /// structural nonzeros of the touched D rows, not |rows|².
+    pub fn gather_block(&self, rows: &[u32], out: &mut [f32]) {
+        let n = rows.len();
+        debug_assert!(out.len() >= n * n);
+        out[..n * n].iter_mut().for_each(|v| *v = 0.0);
+        for (r_slot, &r) in rows.iter().enumerate() {
+            let (cols, vals) = self.row(r as usize);
+            let mut m_slot = 0usize;
+            for (&j, &v) in cols.iter().zip(vals) {
+                while m_slot < n && rows[m_slot] < j {
+                    m_slot += 1;
+                }
+                if m_slot == n {
+                    break;
+                }
+                if rows[m_slot] == j {
+                    out[m_slot * n + r_slot] = v;
+                    m_slot += 1;
+                }
+            }
+        }
+    }
+
+    /// Refresh values from a dense matrix at the structural positions
+    /// (tests / dense-reference oracles).
+    pub fn refresh_from_dense(&mut self, dense: &Matrix) {
+        assert_eq!((dense.rows(), dense.cols()), (self.n, self.n));
+        for i in 0..self.n {
+            let (s, e) = (self.row_ptr[i], self.row_ptr[i + 1]);
+            for t in s..e {
+                self.vals[t] = dense.get(i, self.col_idx[t] as usize);
+            }
+        }
+    }
+
+    /// Dense materialization (tests / oracles only).
+    pub fn to_dense(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.n, self.n);
+        for i in 0..self.n {
+            let (cols, vals) = self.row(i);
+            for (&j, &v) in cols.iter().zip(vals) {
+                m.set(i, j as usize, v);
+            }
+        }
+        m
+    }
+
+    /// Structural pattern.
+    pub fn pattern(&self) -> Pattern {
+        let lists: Vec<Vec<u32>> = (0..self.n)
+            .map(|i| self.col_idx[self.row_ptr[i]..self.row_ptr[i + 1]].to_vec())
+            .collect();
+        Pattern::from_rows(self.n, self.n, &lists)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::{matmul, matvec, matvec_t};
+    use crate::tensor::rng::Pcg32;
+
+    fn random_dj(n: usize, density: f64, seed: u64) -> (DynJacobian, Matrix) {
+        let mut rng = Pcg32::seeded(seed);
+        let pat = Pattern::random(n, n, density, &mut rng).with_diagonal();
+        let mut dense = Matrix::zeros(n, n);
+        for (i, j) in pat.iter() {
+            dense.set(i, j, rng.normal());
+        }
+        let mut dj = DynJacobian::from_pattern(&pat);
+        dj.refresh_from_dense(&dense);
+        (dj, dense)
+    }
+
+    #[test]
+    fn dense_roundtrip_and_get() {
+        let (dj, dense) = random_dj(7, 0.3, 1);
+        assert_eq!(dj.to_dense(), dense);
+        for i in 0..7 {
+            for j in 0..7 {
+                assert_eq!(dj.get(i, j), dense.get(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn diagonal_into_matches_dense() {
+        let (dj, dense) = random_dj(9, 0.25, 2);
+        let mut diag = vec![7.0f32; 9];
+        dj.diagonal_into(&mut diag);
+        for i in 0..9 {
+            assert_eq!(diag[i], dense.get(i, i));
+        }
+        // A pattern *without* the diagonal reports zeros there.
+        let mut rng = Pcg32::seeded(3);
+        let pat = Pattern::from_coords(4, 4, &[(0, 1), (2, 3)]);
+        let mut dj = DynJacobian::from_pattern(&pat);
+        for v in dj.vals_mut() {
+            *v = rng.normal();
+        }
+        let mut diag = vec![1.0f32; 4];
+        dj.diagonal_into(&mut diag);
+        assert!(diag.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn matvecs_match_dense() {
+        let (dj, dense) = random_dj(8, 0.4, 4);
+        let mut rng = Pcg32::seeded(5);
+        let x: Vec<f32> = (0..8).map(|_| rng.normal()).collect();
+        let mut y = vec![0.0f32; 8];
+        dj.matvec_into(&x, &mut y);
+        for (a, b) in y.iter().zip(matvec(&dense, &x)) {
+            assert!((a - b).abs() < 1e-5);
+        }
+        dj.matvec_t_into(&x, &mut y);
+        for (a, b) in y.iter().zip(matvec_t(&dense, &x)) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn spmm_matches_dense_matmul() {
+        let (dj, dense) = random_dj(6, 0.5, 6);
+        let mut rng = Pcg32::seeded(7);
+        let b = Matrix::from_fn(6, 11, |_, _| rng.normal());
+        let mut c = Matrix::zeros(6, 11);
+        dj.spmm_into(&b, &mut c, false);
+        let want = matmul(&dense, &b);
+        for (x, y) in c.as_slice().iter().zip(want.as_slice()) {
+            assert!((x - y).abs() < 1e-4);
+        }
+        // accumulate leg
+        let mut c2 = Matrix::filled(6, 11, 1.0);
+        dj.spmm_into(&b, &mut c2, true);
+        for (x, y) in c2.as_slice().iter().zip(want.as_slice()) {
+            assert!((x - (y + 1.0)).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn gather_block_matches_dense_submatrix() {
+        let (dj, dense) = random_dj(10, 0.35, 8);
+        let rows: Vec<u32> = vec![1, 3, 4, 8];
+        let n = rows.len();
+        let mut out = vec![9.0f32; n * n];
+        dj.gather_block(&rows, &mut out);
+        for (m_slot, &m) in rows.iter().enumerate() {
+            for (r_slot, &r) in rows.iter().enumerate() {
+                assert_eq!(
+                    out[m_slot * n + r_slot],
+                    dense.get(r as usize, m as usize),
+                    "({r_slot},{m_slot})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn slot_maps_are_canonical_across_instances() {
+        let mut rng = Pcg32::seeded(9);
+        let pat = Pattern::random(12, 12, 0.3, &mut rng).with_diagonal();
+        let a = DynJacobian::from_pattern(&pat);
+        let b = DynJacobian::from_pattern(&pat);
+        for (i, j) in pat.iter() {
+            assert_eq!(a.slot_of(i, j), b.slot_of(i, j));
+            assert!(a.slot_of(i, j).is_some());
+        }
+        assert_eq!(a.pattern(), pat);
+    }
+}

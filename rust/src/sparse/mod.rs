@@ -1,13 +1,33 @@
 //! Sparsity substrate: boolean patterns (and the SnAp n-step pattern
-//! constructor), numeric CSR, the compressed immediate Jacobian `I_t`, and
-//! the column-compressed influence matrix `J̃_t` used by SnAp.
+//! constructor), numeric CSR, the CSR dynamics Jacobian `D_t` behind the
+//! sparse-D contract, the compressed immediate Jacobian `I_t`, and the
+//! column-compressed influence matrix `J̃_t` used by SnAp.
+//!
+//! ## The sparse-D contract
+//!
+//! Since the sparse dynamics-Jacobian refactor, `D_t = ∂s_t/∂s_{t-1}` is
+//! never materialized densely on the hot path. [`DynJacobian`] holds only
+//! the structural nonzeros (the union of the recurrent weight masks plus the
+//! cell's diagonal/gate bands, fixed over time), cells refresh its values in
+//! O(nnz) per step, and every gradient method consumes it sparsely:
+//!
+//! * SnAp ([`ColJacobian::update`]) gathers `D[R, R]` run-submatrices with
+//!   [`DynJacobian::gather_block`] (SnAp-1 reads just the cached diagonal);
+//! * BPTT/RFLO's backward step is [`DynJacobian::matvec_t_into`];
+//! * RTRL / SnAp-TopK's `D·J` is [`DynJacobian::spmm_into`] (CSR × dense).
+//!
+//! The per-step tracking cost is therefore O(nnz)-dominated, matching the
+//! paper's sparse asymptotics (Table 1); only the readout and the dense
+//! influence rows of RTRL/SnAp-TopK remain dense (§5.1.2).
 
 pub mod coljac;
 pub mod csr;
+pub mod dynjac;
 pub mod immediate;
 pub mod pattern;
 
 pub use coljac::ColJacobian;
 pub use csr::Csr;
+pub use dynjac::DynJacobian;
 pub use immediate::ImmediateJac;
 pub use pattern::{snap_pattern, saturation_order, Pattern};

@@ -84,21 +84,40 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     s
 }
 
-/// `y = A · x` (matrix-vector).
-pub fn matvec(a: &Matrix, x: &[f32]) -> Vec<f32> {
+/// `y = A · x` into a caller-owned buffer (overwrites `y`; no allocation —
+/// the readout and cell forward hot loops route through this).
+pub fn matvec_into(a: &Matrix, x: &[f32], y: &mut [f32]) {
     assert_eq!(a.cols(), x.len());
-    (0..a.rows()).map(|i| dot(a.row(i), x)).collect()
+    assert_eq!(a.rows(), y.len());
+    for (i, out) in y.iter_mut().enumerate() {
+        *out = dot(a.row(i), x);
+    }
 }
 
-/// `y = Aᵀ · x` without materializing the transpose.
-pub fn matvec_t(a: &Matrix, x: &[f32]) -> Vec<f32> {
+/// `y = A · x` (matrix-vector; thin allocating wrapper over [`matvec_into`]).
+pub fn matvec(a: &Matrix, x: &[f32]) -> Vec<f32> {
+    let mut y = vec![0.0f32; a.rows()];
+    matvec_into(a, x, &mut y);
+    y
+}
+
+/// `y = Aᵀ · x` into a caller-owned buffer, without materializing the
+/// transpose (overwrites `y`; no allocation).
+pub fn matvec_t_into(a: &Matrix, x: &[f32], y: &mut [f32]) {
     assert_eq!(a.rows(), x.len());
-    let mut y = vec![0.0f32; a.cols()];
+    assert_eq!(a.cols(), y.len());
+    y.iter_mut().for_each(|v| *v = 0.0);
     for (i, &xi) in x.iter().enumerate() {
         if xi != 0.0 {
-            axpy_slice(&mut y, xi, a.row(i));
+            axpy_slice(y, xi, a.row(i));
         }
     }
+}
+
+/// `y = Aᵀ · x` (thin allocating wrapper over [`matvec_t_into`]).
+pub fn matvec_t(a: &Matrix, x: &[f32]) -> Vec<f32> {
+    let mut y = vec![0.0f32; a.cols()];
+    matvec_t_into(a, x, &mut y);
     y
 }
 
@@ -248,6 +267,24 @@ mod tests {
         let y2 = matvec(&a.transpose(), &x);
         for (u, v) in y1.iter().zip(y2.iter()) {
             assert!((u - v).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn into_variants_overwrite_stale_buffers() {
+        let mut rng = Pcg32::seeded(9);
+        let a = Matrix::from_fn(5, 7, |_, _| rng.normal());
+        let x7: Vec<f32> = (0..7).map(|_| rng.normal()).collect();
+        let x5: Vec<f32> = (0..5).map(|_| rng.normal()).collect();
+        let mut y = vec![123.0f32; 5];
+        matvec_into(&a, &x7, &mut y);
+        for (u, v) in y.iter().zip(matvec(&a, &x7)) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
+        let mut yt = vec![-7.0f32; 7];
+        matvec_t_into(&a, &x5, &mut yt);
+        for (u, v) in yt.iter().zip(matvec_t(&a, &x5)) {
+            assert_eq!(u.to_bits(), v.to_bits());
         }
     }
 

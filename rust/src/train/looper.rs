@@ -275,9 +275,10 @@ fn lane_step_charlm(
     let x = embed.lookup(crop[t] as usize);
     slot.algo.step(theta, x);
     readout.forward(slot.algo.hidden(), &mut slot.cache);
-    let (nll, dh) = readout.loss_and_backward(&slot.cache, crop[t + 1] as usize, &mut slot.g_ro);
+    let (nll, dh) =
+        readout.loss_and_backward(&mut slot.cache, crop[t + 1] as usize, &mut slot.g_ro);
     if trains_recurrent {
-        slot.algo.inject_loss(&dh, &mut slot.g_rec);
+        slot.algo.inject_loss(dh, &mut slot.g_rec);
     }
     slot.nll_sum += nll as f64;
     slot.nll_n += 1;
@@ -300,9 +301,9 @@ fn lane_step_copy(
     slot.algo.step(theta, embed.lookup(tok));
     if let Some(target) = target {
         readout.forward(slot.algo.hidden(), &mut slot.cache);
-        let (nll, dh) = readout.loss_and_backward(&slot.cache, target, &mut slot.g_ro);
+        let (nll, dh) = readout.loss_and_backward(&mut slot.cache, target, &mut slot.g_ro);
         if trains_recurrent {
-            slot.algo.inject_loss(&dh, &mut slot.g_rec);
+            slot.algo.inject_loss(dh, &mut slot.g_rec);
         }
         slot.nll_sum += nll as f64;
         slot.nll_n += 1;

@@ -3,6 +3,7 @@
 
 use snap_rtrl::sparse::coljac::ColJacobian;
 use snap_rtrl::sparse::csr::Csr;
+use snap_rtrl::sparse::dynjac::DynJacobian;
 use snap_rtrl::sparse::immediate::ImmediateJac;
 use snap_rtrl::sparse::pattern::{snap_pattern, Pattern};
 use snap_rtrl::tensor::matrix::Matrix;
@@ -128,6 +129,8 @@ fn prop_coljac_update_matches_dense_masked() {
         for (i, j) in d_pat.iter() {
             d.set(i, j, rng.normal() * 0.5);
         }
+        let mut dj = DynJacobian::from_pattern(&d_pat);
+        dj.refresh_from_dense(&d);
         let pat = snap_pattern(&d_pat, &ij.pattern(), 2);
         let mut cj = ColJacobian::from_pattern(&pat);
         let mut dense = Matrix::zeros(state, params);
@@ -144,12 +147,111 @@ fn prop_coljac_update_matches_dense_masked() {
                 masked.set(i, j, next.get(i, j));
             }
             dense = masked;
-            cj.update(&d, &ij);
+            cj.update(&dj, &ij);
         }
         let got = cj.to_dense();
         for (a, b) in got.as_slice().iter().zip(dense.as_slice()) {
             if (a - b).abs() > 1e-4 {
                 return Err(format!("{a} vs {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dynjac_fill_matches_dense_mask() {
+    // refresh_from_dense must extract exactly the pattern's entries, bit for
+    // bit, and get/slot_of/diagonal_into must agree with the dense view.
+    check("dynjac-fill", 11, 40, gen_pat, |c| {
+        let mut rng = Pcg32::seeded(c.seed);
+        let n = 2 + c.rows.min(10);
+        let pat = Pattern::random(n, n, c.density, &mut rng).with_diagonal();
+        let mut dj = DynJacobian::from_pattern(&pat);
+        let dense = Matrix::from_fn(n, n, |_, _| rng.normal());
+        dj.refresh_from_dense(&dense);
+        let masked = dj.to_dense();
+        for i in 0..n {
+            for j in 0..n {
+                let want = if pat.contains(i, j) { dense.get(i, j) } else { 0.0 };
+                if masked.get(i, j).to_bits() != want.to_bits() {
+                    return Err(format!("({i},{j}): {} vs {want}", masked.get(i, j)));
+                }
+                if dj.get(i, j).to_bits() != want.to_bits() {
+                    return Err(format!("get({i},{j}) disagrees with dense"));
+                }
+                if dj.slot_of(i, j).is_some() != pat.contains(i, j) {
+                    return Err(format!("slot_of({i},{j}) disagrees with pattern"));
+                }
+            }
+        }
+        let mut diag = vec![99.0f32; n];
+        dj.diagonal_into(&mut diag);
+        for (i, &v) in diag.iter().enumerate() {
+            if v.to_bits() != masked.get(i, i).to_bits() {
+                return Err(format!("diagonal_into[{i}] = {v}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dynjac_kernels_match_dense() {
+    // matvec / matvec_t / spmm over the sparse structure must agree with the
+    // dense operators on the masked matrix.
+    check("dynjac-kernels", 12, 40, gen_pat, |c| {
+        let mut rng = Pcg32::seeded(c.seed);
+        let n = 2 + c.rows.min(10);
+        let pat = Pattern::random(n, n, c.density, &mut rng).with_diagonal();
+        let mut dj = DynJacobian::from_pattern(&pat);
+        let mut dense = Matrix::zeros(n, n);
+        for (i, j) in pat.iter() {
+            dense.set(i, j, rng.normal());
+        }
+        dj.refresh_from_dense(&dense);
+
+        let x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let mut y = vec![5.0f32; n];
+        dj.matvec_into(&x, &mut y);
+        snap_rtrl::testing::assert_close(&y, &snap_rtrl::tensor::ops::matvec(&dense, &x), 1e-4)?;
+        dj.matvec_t_into(&x, &mut y);
+        snap_rtrl::testing::assert_close(&y, &snap_rtrl::tensor::ops::matvec_t(&dense, &x), 1e-4)?;
+
+        let b = Matrix::from_fn(n, 5, |_, _| rng.normal());
+        let mut got = Matrix::filled(n, 5, 3.0);
+        dj.spmm_into(&b, &mut got, false);
+        let want = matmul(&dense, &b);
+        snap_rtrl::testing::assert_close(got.as_slice(), want.as_slice(), 1e-4)
+    });
+}
+
+#[test]
+fn prop_dynjac_gather_block_matches_dense_submatrix() {
+    // SnAp's run gather: D[rows, rows] column-major, zeros outside the
+    // pattern, for random sorted row subsets.
+    check("dynjac-gather", 13, 40, gen_pat, |c| {
+        let mut rng = Pcg32::seeded(c.seed);
+        let n = 2 + c.rows.min(10);
+        let pat = Pattern::random(n, n, c.density, &mut rng).with_diagonal();
+        let mut dj = DynJacobian::from_pattern(&pat);
+        let mut dense = Matrix::zeros(n, n);
+        for (i, j) in pat.iter() {
+            dense.set(i, j, rng.normal());
+        }
+        dj.refresh_from_dense(&dense);
+
+        let m = 1 + rng.below_usize(n);
+        let rows: Vec<u32> = rng.choose_indices(n, m).into_iter().map(|r| r as u32).collect();
+        let mut out = vec![42.0f32; m * m];
+        dj.gather_block(&rows, &mut out);
+        for (m_slot, &mc) in rows.iter().enumerate() {
+            for (r_slot, &rr) in rows.iter().enumerate() {
+                let want = dense.get(rr as usize, mc as usize);
+                let got = out[m_slot * m + r_slot];
+                if got.to_bits() != want.to_bits() {
+                    return Err(format!("D[{rr},{mc}]: {got} vs {want}"));
+                }
             }
         }
         Ok(())
