@@ -1,0 +1,235 @@
+//! `repro audit` — zero-dependency static analysis of this repo's own
+//! source, enforcing the invariants PRs 1–5 bought dynamically:
+//!
+//! * the tracking step is **allocation-free** (`alloc` + `coverage` rules
+//!   over `// audit: hot-path` regions),
+//! * `unsafe` stays rare, allowlisted and documented (`unsafe` rule),
+//! * nothing order-nondeterministic feeds gradients or reports
+//!   (`determinism` rule),
+//! * the checkpoint blob layout cannot change silently (`serde-format`
+//!   rule: a structural fingerprint of the serde field write-order, pinned
+//!   in `rust/audit/serde_format.pin`, must move together with
+//!   `CHECKPOINT_VERSION`).
+//!
+//! SnAp's premise (paper §3) is that Jacobian *structure* is static and
+//! known ahead of time; this module applies the same bet to the codebase —
+//! what is statically known (where hot loops are, where unsafe lives, what
+//! the blob layout is) is statically checked, on every CI run, instead of
+//! waiting for a bench gate or a corrupt checkpoint to notice.
+//!
+//! Layout: [`scanner`] turns each file into a stripped token-searchable
+//! view (comments/strings blanked so they can't trip rules), [`rules`]
+//! implements the rule set over it, [`report`] renders `file:line` findings
+//! as text or JSON, [`selftest`] seeds one violation per rule in a
+//! temp-dir fixture tree and asserts the audit catches it
+//! (`repro audit --self-test`, run by the CI lint job).
+//!
+//! See the `audit` entry in `repro help` for the CLI surface and
+//! `rust/audit/` for the allowlists and the serde pin.
+
+pub mod report;
+pub mod rules;
+pub mod scanner;
+pub mod selftest;
+
+use crate::coordinator::Args;
+use crate::errors::{Context, Error, Result};
+use report::Finding;
+use scanner::SourceFile;
+use std::path::{Path, PathBuf};
+
+/// One allowlist entry: a repo-relative path suffix plus the written reason
+/// it is exempt (the reason is for humans; the audit only checks presence).
+#[derive(Clone, Debug)]
+pub struct AllowEntry {
+    pub suffix: String,
+    pub reason: String,
+}
+
+/// Everything an audit run is parameterized on. [`AuditConfig::for_repo`]
+/// builds the shipped-tree configuration; the self-tests build fixture
+/// configurations pointing at temp dirs.
+#[derive(Clone, Debug)]
+pub struct AuditConfig {
+    /// Repo root; all paths below are relative to it.
+    pub root: PathBuf,
+    /// Directories scanned for `.rs` files (recursive, sorted).
+    pub src_dirs: Vec<String>,
+    /// Files that must contain at least one `// audit: hot-path` region —
+    /// deleting the annotations is itself a finding.
+    pub required_hot: Vec<String>,
+    pub unsafe_allow: Vec<AllowEntry>,
+    pub determinism_allow: Vec<AllowEntry>,
+    /// Files whose serde token stream is fingerprinted, in fixed order.
+    pub serde_files: Vec<String>,
+    /// Committed (version, fingerprint) pin; `None` disables the check.
+    pub pin_path: Option<PathBuf>,
+}
+
+/// Files that must keep their hot-path annotations: the tracking step in
+/// every gradient algorithm, the sparse kernels under it, each cell's
+/// forward/Jacobian refresh, and the readout backward.
+const REQUIRED_HOT: &[&str] = &[
+    "rust/src/cells/gru.rs",
+    "rust/src/cells/lstm.rs",
+    "rust/src/cells/vanilla.rs",
+    "rust/src/grad/bptt.rs",
+    "rust/src/grad/rflo.rs",
+    "rust/src/grad/rtrl.rs",
+    "rust/src/grad/snap.rs",
+    "rust/src/grad/snap_topk.rs",
+    "rust/src/grad/uoro.rs",
+    "rust/src/models/readout.rs",
+    "rust/src/sparse/coljac.rs",
+    "rust/src/sparse/dynjac.rs",
+    "rust/src/tensor/ops.rs",
+];
+
+impl AuditConfig {
+    /// The shipped-tree configuration, anchored at the repo root.
+    pub fn for_repo(root: &Path) -> AuditConfig {
+        AuditConfig {
+            root: root.to_path_buf(),
+            src_dirs: vec!["rust/src".to_string()],
+            required_hot: REQUIRED_HOT.iter().map(|s| s.to_string()).collect(),
+            unsafe_allow: load_allowlist(&root.join("rust/audit/unsafe.allow")),
+            determinism_allow: load_allowlist(&root.join("rust/audit/determinism.allow")),
+            serde_files: vec![
+                "rust/src/runtime/serde.rs".to_string(),
+                "rust/src/train/checkpoint.rs".to_string(),
+            ],
+            pin_path: Some(root.join("rust/audit/serde_format.pin")),
+        }
+    }
+}
+
+/// Allowlist file format: `#` comments, blank lines, else
+/// `<repo-relative-path> <reason…>`. A missing file is an empty list.
+fn load_allowlist(path: &Path) -> Vec<AllowEntry> {
+    let Ok(text) = std::fs::read_to_string(path) else {
+        return Vec::new();
+    };
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        let (suffix, reason) = match t.split_once(char::is_whitespace) {
+            Some((s, r)) => (s.to_string(), r.trim().to_string()),
+            None => (t.to_string(), String::new()),
+        };
+        out.push(AllowEntry { suffix, reason });
+    }
+    out
+}
+
+fn walk_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)
+        .with_context(|| format!("audit: reading {}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk_rs(&p, out)?;
+        } else if p.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Scan every configured source dir into stripped [`SourceFile`]s, in a
+/// deterministic (sorted) order with repo-relative forward-slash paths.
+pub fn scan(config: &AuditConfig) -> Result<Vec<SourceFile>> {
+    let mut files = Vec::new();
+    for dir in &config.src_dirs {
+        let d = config.root.join(dir);
+        crate::ensure!(d.is_dir(), "audit: source dir {} not found", d.display());
+        let mut paths = Vec::new();
+        walk_rs(&d, &mut paths)?;
+        for p in paths {
+            let raw = std::fs::read_to_string(&p)
+                .with_context(|| format!("audit: reading {}", p.display()))?;
+            let rel = p.strip_prefix(&config.root).unwrap_or(&p);
+            let rel = rel.to_string_lossy().replace('\\', "/");
+            files.push(SourceFile::parse(&rel, &raw));
+        }
+    }
+    Ok(files)
+}
+
+/// Scan + all rules; findings come back sorted by (path, line, rule).
+pub fn run_audit(config: &AuditConfig) -> Result<Vec<Finding>> {
+    let files = scan(config)?;
+    Ok(rules::run_all(&files, config))
+}
+
+/// Recompute the serde fingerprint from the tree and (re)write the pin.
+pub fn repin_serde(config: &AuditConfig) -> Result<rules::SerdePin> {
+    let files = scan(config)?;
+    let snap = rules::serde_snapshot(&files, config)
+        .map_err(|f| Error::msg(format!("{}:{}: {}", f.path, f.line, f.message)))?;
+    let pin = rules::SerdePin { version: snap.version, fingerprint: snap.fingerprint };
+    let path = config
+        .pin_path
+        .as_ref()
+        .context("audit: no serde pin path configured")?;
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)
+            .with_context(|| format!("audit: creating {}", parent.display()))?;
+    }
+    std::fs::write(path, rules::render_pin(&pin))
+        .with_context(|| format!("audit: writing {}", path.display()))?;
+    Ok(pin)
+}
+
+/// Walk up from the current directory to the first ancestor containing
+/// `rust/src/lib.rs` (the repo root).
+fn discover_root() -> Result<PathBuf> {
+    let mut dir = std::env::current_dir().context("audit: getting current dir")?;
+    loop {
+        if dir.join("rust/src/lib.rs").is_file() {
+            return Ok(dir);
+        }
+        if !dir.pop() {
+            crate::bail!(
+                "audit: could not find the repo root (rust/src/lib.rs) above \
+                 the current directory; pass --root"
+            );
+        }
+    }
+}
+
+/// `repro audit [--root PATH] [--json] [--self-test] [--repin-serde]` —
+/// exits nonzero (via `Err`) when any finding survives.
+pub fn run_audit_cli(args: &Args) -> Result<()> {
+    if args.bool_or("self-test", false) {
+        return selftest::run_selftests();
+    }
+    let root = match args.get("root") {
+        Some(r) => PathBuf::from(r),
+        None => discover_root()?,
+    };
+    let config = AuditConfig::for_repo(&root);
+    if args.bool_or("repin-serde", false) {
+        let pin = repin_serde(&config)?;
+        println!(
+            "audit: pinned serde format: version {} fingerprint 0x{:016x}",
+            pin.version, pin.fingerprint
+        );
+        return Ok(());
+    }
+    let files = scan(&config)?;
+    let findings = rules::run_all(&files, &config);
+    if args.bool_or("json", false) {
+        println!("{}", report::render_json(&findings));
+    } else if findings.is_empty() {
+        println!("audit: clean ({} files scanned)", files.len());
+    } else {
+        print!("{}", report::render_text(&findings));
+    }
+    crate::ensure!(findings.is_empty(), "repro audit: {} finding(s)", findings.len());
+    Ok(())
+}

@@ -1,0 +1,123 @@
+//! Findings: the audit's output type and its text / JSON renderings.
+//!
+//! Text findings print as `path:line: [rule] message` — the shape compilers
+//! and editors already know how to jump on. The JSON rendering is
+//! hand-serialized (zero-dependency crate) and shape-stable:
+//!
+//! ```json
+//! {"count":1,"findings":[{"path":"…","line":12,"rule":"alloc","message":"…"}]}
+//! ```
+
+/// One audit finding, anchored to a source span.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Finding {
+    /// Repo-relative path (forward slashes).
+    pub path: String,
+    /// 1-based line (0 for whole-file findings, e.g. a missing file).
+    pub line: usize,
+    /// Stable rule id: `alloc`, `coverage`, `unsafe`, `determinism`,
+    /// `serde-format`, `directive`.
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl Finding {
+    pub fn new(path: &str, line: usize, rule: &'static str, message: String) -> Finding {
+        Finding { path: path.to_string(), line, rule, message }
+    }
+}
+
+/// Deterministic report order: by path, then line, then rule.
+pub fn sort_findings(findings: &mut [Finding]) {
+    findings.sort_by(|a, b| {
+        (a.path.as_str(), a.line, a.rule).cmp(&(b.path.as_str(), b.line, b.rule))
+    });
+}
+
+/// `path:line: [rule] message`, one finding per line.
+pub fn render_text(findings: &[Finding]) -> String {
+    let mut out = String::new();
+    for f in findings {
+        out.push_str(&format!("{}:{}: [{}] {}\n", f.path, f.line, f.rule, f.message));
+    }
+    out
+}
+
+/// Machine-readable report (single line).
+pub fn render_json(findings: &[Finding]) -> String {
+    let mut out = String::from("{\"count\":");
+    out.push_str(&findings.len().to_string());
+    out.push_str(",\"findings\":[");
+    for (i, f) in findings.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str("{\"path\":\"");
+        out.push_str(&json_escape(&f.path));
+        out.push_str("\",\"line\":");
+        out.push_str(&f.line.to_string());
+        out.push_str(",\"rule\":\"");
+        out.push_str(&json_escape(f.rule));
+        out.push_str("\",\"message\":\"");
+        out.push_str(&json_escape(&f.message));
+        out.push_str("\"}");
+    }
+    out.push_str("]}");
+    out
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sort_is_by_path_then_line_then_rule() {
+        let mut fs = vec![
+            Finding::new("b.rs", 1, "alloc", "x".into()),
+            Finding::new("a.rs", 9, "alloc", "x".into()),
+            Finding::new("a.rs", 2, "determinism", "x".into()),
+            Finding::new("a.rs", 2, "alloc", "x".into()),
+        ];
+        sort_findings(&mut fs);
+        let order: Vec<(&str, usize, &str)> =
+            fs.iter().map(|f| (f.path.as_str(), f.line, f.rule)).collect();
+        assert_eq!(
+            order,
+            vec![("a.rs", 2, "alloc"), ("a.rs", 2, "determinism"), ("a.rs", 9, "alloc"), ("b.rs", 1, "alloc")]
+        );
+    }
+
+    #[test]
+    fn text_rendering_is_compiler_shaped() {
+        let fs = vec![Finding::new("src/x.rs", 12, "alloc", "`vec!` in a hot region".into())];
+        assert_eq!(render_text(&fs), "src/x.rs:12: [alloc] `vec!` in a hot region\n");
+    }
+
+    #[test]
+    fn json_rendering_escapes_and_counts() {
+        let fs = vec![Finding::new("a\"b.rs", 3, "unsafe", "tab\there".into())];
+        let j = render_json(&fs);
+        assert_eq!(
+            j,
+            "{\"count\":1,\"findings\":[{\"path\":\"a\\\"b.rs\",\"line\":3,\
+             \"rule\":\"unsafe\",\"message\":\"tab\\there\"}]}"
+        );
+        assert_eq!(render_json(&[]), "{\"count\":0,\"findings\":[]}");
+    }
+}

@@ -1,0 +1,658 @@
+//! The audit rules. Every rule has (a) a machine-checkable definition over
+//! the stripped source view, (b) an escape hatch that requires a written
+//! reason, and (c) a seeded-violation self-test in [`super::selftest`].
+//!
+//! | id            | checks                                                    |
+//! |---------------|-----------------------------------------------------------|
+//! | `alloc`       | no allocating/densifying calls inside hot-path regions    |
+//! | `coverage`    | required files carry at least one hot-path region         |
+//! | `unsafe`      | unsafe stays in allowlisted modules, with SAFETY comments |
+//! | `determinism` | no HashMap/HashSet outside allowlisted sites              |
+//! | `serde-format`| checkpoint blob layout changes require a version bump     |
+//! | `directive`   | `// audit:` comments themselves parse                     |
+
+use super::report::Finding;
+use super::scanner::{Directive, SourceFile};
+use super::{AllowEntry, AuditConfig};
+use crate::runtime::serde::Fnv64;
+
+/// Tokens banned inside `// audit: hot-path` regions: everything that
+/// allocates, frees, densifies a sparse structure, or makes a syscall. The
+/// tracking step's allocation-freedom (PR 5) is a contract, not a bench
+/// artifact.
+pub const BANNED_HOT: &[&str] = &[
+    "Vec::new",
+    "vec!",
+    "to_vec",
+    "clone()",
+    "to_dense",
+    "collect()",
+    "format!",
+    "Box::new",
+    "available_parallelism",
+];
+
+/// Rules that `// audit: allow(rule) reason` may silence.
+pub const ALLOW_RULES: &[&str] = &["alloc", "unsafe", "determinism"];
+
+/// Run every rule over the scanned files; returns sorted findings.
+pub fn run_all(files: &[SourceFile], config: &AuditConfig) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for sf in files {
+        alloc_rule(sf, &mut findings);
+        unsafe_rule(sf, config, &mut findings);
+        determinism_rule(sf, config, &mut findings);
+        directive_rule(sf, &mut findings);
+    }
+    coverage_rule(files, config, &mut findings);
+    serde_rule(files, config, &mut findings);
+    super::report::sort_findings(&mut findings);
+    findings
+}
+
+/// An `allow(rule)` directive on the finding's line or the line above it.
+fn allowed(sf: &SourceFile, rule: &str, line: usize) -> bool {
+    sf.directives.iter().any(|d| match d {
+        Directive::Allow { line: al, rule: r, .. } => r == rule && (*al == line || *al + 1 == line),
+        _ => false,
+    })
+}
+
+/// Suffix match against an allowlist (entries are repo-relative paths).
+fn allowlisted(path: &str, entries: &[AllowEntry]) -> bool {
+    entries.iter().any(|e| {
+        path == e.suffix || path.ends_with(&format!("/{}", e.suffix))
+    })
+}
+
+fn alloc_rule(sf: &SourceFile, findings: &mut Vec<Finding>) {
+    if sf.hot_regions.is_empty() {
+        return;
+    }
+    for token in BANNED_HOT {
+        for off in sf.find_token(token) {
+            let Some(region) =
+                sf.hot_regions.iter().find(|r| off >= r.start && off < r.end)
+            else {
+                continue;
+            };
+            let line = sf.line_of(off);
+            if allowed(sf, "alloc", line) {
+                continue;
+            }
+            findings.push(Finding::new(
+                &sf.path,
+                line,
+                "alloc",
+                format!(
+                    "`{token}` inside the hot-path region opened at line {}; \
+                     the tracking step must stay allocation-free \
+                     (amortized one-time growth may use \
+                     `// audit: allow(alloc) <reason>`)",
+                    region.directive_line
+                ),
+            ));
+        }
+    }
+}
+
+fn coverage_rule(files: &[SourceFile], config: &AuditConfig, findings: &mut Vec<Finding>) {
+    for req in &config.required_hot {
+        match files.iter().find(|f| &f.path == req) {
+            None => findings.push(Finding::new(
+                req,
+                0,
+                "coverage",
+                "required hot-path file was not scanned (missing or renamed?)".to_string(),
+            )),
+            Some(sf) if sf.hot_regions.is_empty() && sf.unclosed_hot.is_empty() => {
+                findings.push(Finding::new(
+                    req,
+                    0,
+                    "coverage",
+                    "no `// audit: hot-path` region found; the allocation lint \
+                     has nothing to check in a file that is required to have \
+                     annotated hot paths"
+                        .to_string(),
+                ))
+            }
+            Some(_) => {}
+        }
+    }
+}
+
+/// A SAFETY comment covers its own line and, walking upward through
+/// contiguous comment-only lines, every line below it. A contiguous run of
+/// unsafe-bearing lines shares one header (the runs in `coljac.rs` read a
+/// row index and immediately use it on the next line).
+fn safety_covered(sf: &SourceFile, line: usize, token_lines: &[usize]) -> bool {
+    if sf.safety_lines.contains(&line) {
+        return true;
+    }
+    let mut l = line;
+    while l > 1 {
+        l -= 1;
+        if sf.is_comment_only(l) {
+            if sf.safety_lines.contains(&l) {
+                return true;
+            }
+        } else if !token_lines.contains(&l) {
+            return false;
+        }
+    }
+    false
+}
+
+fn unsafe_rule(sf: &SourceFile, config: &AuditConfig, findings: &mut Vec<Finding>) {
+    let mut lines: Vec<usize> = sf.find_token("unsafe").iter().map(|&o| sf.line_of(o)).collect();
+    lines.dedup();
+    if lines.is_empty() {
+        return;
+    }
+    let in_allowlist = allowlisted(&sf.path, &config.unsafe_allow);
+    for &line in &lines {
+        if allowed(sf, "unsafe", line) {
+            continue;
+        }
+        if !in_allowlist {
+            findings.push(Finding::new(
+                &sf.path,
+                line,
+                "unsafe",
+                "`unsafe` outside the allowlisted module set \
+                 (rust/audit/unsafe.allow); prefer a safe formulation, or \
+                 allowlist the file with a written reason"
+                    .to_string(),
+            ));
+        } else if !safety_covered(sf, line, &lines) {
+            findings.push(Finding::new(
+                &sf.path,
+                line,
+                "unsafe",
+                "missing `// SAFETY:` comment naming the aliasing/lifetime \
+                 invariant this unsafe relies on"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+fn determinism_rule(sf: &SourceFile, config: &AuditConfig, findings: &mut Vec<Finding>) {
+    if allowlisted(&sf.path, &config.determinism_allow) {
+        return;
+    }
+    for token in ["HashMap", "HashSet"] {
+        for off in sf.find_token(token) {
+            let line = sf.line_of(off);
+            if allowed(sf, "determinism", line) {
+                continue;
+            }
+            findings.push(Finding::new(
+                &sf.path,
+                line,
+                "determinism",
+                format!(
+                    "`{token}` has nondeterministic iteration order (randomized \
+                     hasher); anything feeding gradient accumulation or reports \
+                     must use a Vec/BTreeMap, or the file must be allowlisted in \
+                     rust/audit/determinism.allow with a reason"
+                ),
+            ));
+        }
+    }
+}
+
+fn directive_rule(sf: &SourceFile, findings: &mut Vec<Finding>) {
+    for d in &sf.directives {
+        match d {
+            Directive::Malformed { line, text } => findings.push(Finding::new(
+                &sf.path,
+                *line,
+                "directive",
+                format!(
+                    "malformed `// audit:` directive `{text}` \
+                     (expected `hot-path` or `allow(rule) reason`)"
+                ),
+            )),
+            Directive::Allow { line, rule, .. } if !ALLOW_RULES.contains(&rule.as_str()) => {
+                findings.push(Finding::new(
+                    &sf.path,
+                    *line,
+                    "directive",
+                    format!("unknown rule `{rule}` in allow(...); known: {ALLOW_RULES:?}"),
+                ))
+            }
+            _ => {}
+        }
+    }
+    for &line in &sf.unclosed_hot {
+        findings.push(Finding::new(
+            &sf.path,
+            line,
+            "directive",
+            "`// audit: hot-path` is not followed by a brace-matched block".to_string(),
+        ));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// serde-format: structural fingerprint of the checkpoint blob layout
+// ---------------------------------------------------------------------------
+
+/// Committed pin: the blessed (version, fingerprint) pair.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SerdePin {
+    pub version: u32,
+    pub fingerprint: u64,
+}
+
+/// What the tree actually encodes right now.
+#[derive(Clone, Debug)]
+pub struct SerdeSnapshot {
+    pub fingerprint: u64,
+    pub version: u32,
+    /// Where findings anchor: the `CHECKPOINT_VERSION` definition.
+    pub anchor_path: String,
+    pub anchor_line: usize,
+}
+
+fn is_ident(b: u8) -> bool {
+    b == b'_' || b.is_ascii_alphanumeric()
+}
+
+/// Maximal identifier runs in stripped code (runs starting with a digit —
+/// numeric literals — are skipped).
+fn ident_tokens(code: &str) -> Vec<&str> {
+    let b = code.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < b.len() {
+        if is_ident(b[i]) {
+            let start = i;
+            while i < b.len() && is_ident(b[i]) {
+                i += 1;
+            }
+            if !b[start].is_ascii_digit() {
+                out.push(&code[start..i]);
+            }
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+fn is_serde_token(tok: &str) -> bool {
+    tok.starts_with("put_")
+        || tok.starts_with("get_")
+        || tok == "encode_container"
+        || tok == "decode_container"
+        || tok == "expect_end"
+}
+
+/// Cut the stripped code at `#[cfg(test)] mod …` so tests don't perturb the
+/// fingerprint.
+fn truncate_at_test_mod(code: &str) -> &str {
+    let needle = "#[cfg(test)]";
+    let mut from = 0usize;
+    while let Some(rel) = code[from..].find(needle) {
+        let pos = from + rel;
+        if code[pos + needle.len()..].trim_start().starts_with("mod ") {
+            return &code[..pos];
+        }
+        from = pos + needle.len();
+    }
+    code
+}
+
+fn find_checkpoint_version(code: &str) -> Option<(u32, usize)> {
+    let pos = code.find("const CHECKPOINT_VERSION")?;
+    let rest = &code[pos..];
+    let eq = rest.find('=')?;
+    let tail = rest[eq + 1..].trim_start();
+    let digits: String =
+        tail.chars().take_while(|c| c.is_ascii_digit() || *c == '_').collect();
+    let v: u32 = digits.replace('_', "").parse().ok()?;
+    Some((v, pos))
+}
+
+/// Fingerprint the serde surface: the ordered stream of `put_*`/`get_*`/
+/// container identifiers in `config.serde_files` (tests excluded), FNV-1a
+/// hashed with `0xFF` separators and the file path + `0xFE` as a prefix per
+/// file. Field reorderings, insertions and deletions all move the hash;
+/// renames of unrelated locals do not.
+pub fn serde_snapshot(
+    files: &[SourceFile],
+    config: &AuditConfig,
+) -> Result<SerdeSnapshot, Finding> {
+    let mut hasher = Fnv64::new();
+    let mut version: Option<(u32, String, usize)> = None;
+    for path in &config.serde_files {
+        let sf = files.iter().find(|f| &f.path == path).ok_or_else(|| {
+            Finding::new(
+                path,
+                0,
+                "serde-format",
+                "fingerprinted file was not scanned (missing or renamed?)".to_string(),
+            )
+        })?;
+        let code = truncate_at_test_mod(&sf.code);
+        hasher.write_bytes(sf.path.as_bytes());
+        hasher.write_u8(0xFE);
+        for tok in ident_tokens(code) {
+            if is_serde_token(tok) {
+                hasher.write_bytes(tok.as_bytes());
+                hasher.write_u8(0xFF);
+            }
+        }
+        if version.is_none() {
+            if let Some((v, off)) = find_checkpoint_version(code) {
+                version = Some((v, sf.path.clone(), sf.line_of(off)));
+            }
+        }
+    }
+    let anchor = config.serde_files.first().cloned().unwrap_or_default();
+    let (version, anchor_path, anchor_line) = version.ok_or_else(|| {
+        Finding::new(
+            &anchor,
+            0,
+            "serde-format",
+            "no `const CHECKPOINT_VERSION` definition found in the \
+             fingerprinted files"
+                .to_string(),
+        )
+    })?;
+    Ok(SerdeSnapshot { fingerprint: hasher.finish(), version, anchor_path, anchor_line })
+}
+
+pub fn parse_pin(text: &str) -> Result<SerdePin, String> {
+    let mut version: Option<u32> = None;
+    let mut fingerprint: Option<u64> = None;
+    for line in text.lines() {
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        if let Some(v) = t.strip_prefix("version ") {
+            version =
+                Some(v.trim().parse().map_err(|_| format!("bad version `{}`", v.trim()))?);
+        } else if let Some(v) = t.strip_prefix("fingerprint ") {
+            let h = v.trim().strip_prefix("0x").unwrap_or(v.trim());
+            fingerprint = Some(
+                u64::from_str_radix(h, 16).map_err(|_| format!("bad fingerprint `{h}`"))?,
+            );
+        } else {
+            return Err(format!("unrecognized pin line `{t}`"));
+        }
+    }
+    match (version, fingerprint) {
+        (Some(version), Some(fingerprint)) => Ok(SerdePin { version, fingerprint }),
+        _ => Err("pin must define both `version` and `fingerprint`".to_string()),
+    }
+}
+
+pub fn render_pin(pin: &SerdePin) -> String {
+    format!(
+        "# Structural pin of the checkpoint blob layout (see rust/src/analysis/).\n\
+         # If `repro audit` fails here, the serde field order changed: bump\n\
+         # CHECKPOINT_VERSION in rust/src/train/checkpoint.rs, then refresh this\n\
+         # file with `repro audit --repin-serde`.\n\
+         version {}\n\
+         fingerprint 0x{:016x}\n",
+        pin.version, pin.fingerprint
+    )
+}
+
+fn serde_rule(files: &[SourceFile], config: &AuditConfig, findings: &mut Vec<Finding>) {
+    if config.serde_files.is_empty() {
+        return;
+    }
+    let snap = match serde_snapshot(files, config) {
+        Ok(s) => s,
+        Err(f) => {
+            findings.push(f);
+            return;
+        }
+    };
+    let Some(pin_path) = &config.pin_path else {
+        return;
+    };
+    let text = match std::fs::read_to_string(pin_path) {
+        Ok(t) => t,
+        Err(_) => {
+            findings.push(Finding::new(
+                &snap.anchor_path,
+                snap.anchor_line,
+                "serde-format",
+                format!(
+                    "serde-format pin missing at {}; seed it with `repro audit \
+                     --repin-serde` (computed fingerprint 0x{:016x})",
+                    pin_path.display(),
+                    snap.fingerprint
+                ),
+            ));
+            return;
+        }
+    };
+    let pin = match parse_pin(&text) {
+        Ok(p) => p,
+        Err(e) => {
+            findings.push(Finding::new(
+                &snap.anchor_path,
+                snap.anchor_line,
+                "serde-format",
+                format!("corrupt serde-format pin at {}: {e}", pin_path.display()),
+            ));
+            return;
+        }
+    };
+    match (pin.fingerprint == snap.fingerprint, pin.version == snap.version) {
+        (true, true) => {}
+        (false, true) => findings.push(Finding::new(
+            &snap.anchor_path,
+            snap.anchor_line,
+            "serde-format",
+            format!(
+                "checkpoint blob layout changed without a version bump: \
+                 computed fingerprint 0x{:016x} != pinned 0x{:016x} while \
+                 CHECKPOINT_VERSION is still {}; bump it, then run \
+                 `repro audit --repin-serde`",
+                snap.fingerprint, pin.fingerprint, snap.version
+            ),
+        )),
+        (false, false) => findings.push(Finding::new(
+            &snap.anchor_path,
+            snap.anchor_line,
+            "serde-format",
+            format!(
+                "CHECKPOINT_VERSION is {} (pin has {}) and the layout \
+                 fingerprint moved to 0x{:016x}; refresh the pin with \
+                 `repro audit --repin-serde`",
+                snap.version, pin.version, snap.fingerprint
+            ),
+        )),
+        (true, false) => findings.push(Finding::new(
+            &snap.anchor_path,
+            snap.anchor_line,
+            "serde-format",
+            format!(
+                "CHECKPOINT_VERSION is {} but the pin says {} although the \
+                 layout fingerprint is unchanged; refresh the pin with \
+                 `repro audit --repin-serde`",
+                snap.version, pin.version
+            ),
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn cfg() -> AuditConfig {
+        AuditConfig {
+            root: PathBuf::new(),
+            src_dirs: Vec::new(),
+            required_hot: Vec::new(),
+            unsafe_allow: Vec::new(),
+            determinism_allow: Vec::new(),
+            serde_files: Vec::new(),
+            pin_path: None,
+        }
+    }
+
+    fn entry(suffix: &str) -> AllowEntry {
+        AllowEntry { suffix: suffix.to_string(), reason: "test".to_string() }
+    }
+
+    #[test]
+    fn alloc_rule_fires_inside_hot_regions_only() {
+        let raw = "\
+fn cold() {
+    let v = vec![0.0f32; 8];
+    drop(v);
+}
+// audit: hot-path
+fn hot(n: usize) -> usize {
+    let v = vec![0.0f32; n];
+    v.len()
+}
+";
+        let sf = SourceFile::parse("src/x.rs", raw);
+        let f = run_all(std::slice::from_ref(&sf), &cfg());
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!((f[0].rule, f[0].line), ("alloc", 7));
+    }
+
+    #[test]
+    fn allow_directive_silences_alloc_on_next_line() {
+        let raw = "\
+// audit: hot-path
+fn hot(n: usize) -> usize {
+    // audit: allow(alloc) amortized spare-pool refill
+    let v = vec![0.0f32; n];
+    v.len()
+}
+";
+        let sf = SourceFile::parse("src/x.rs", raw);
+        assert!(run_all(std::slice::from_ref(&sf), &cfg()).is_empty());
+    }
+
+    #[test]
+    fn safety_header_covers_a_contiguous_unsafe_run() {
+        let raw = "\
+fn f(xs: &[u32], d: &[f32]) -> f32 {
+    // SAFETY: indices come from the in-bounds row table.
+    let i = unsafe { *xs.get_unchecked(0) } as usize;
+    let v = unsafe { *d.get_unchecked(i) };
+    v
+}
+";
+        let sf = SourceFile::parse("src/sparse/coljac.rs", raw);
+        let mut config = cfg();
+        config.unsafe_allow.push(entry("src/sparse/coljac.rs"));
+        assert!(run_all(std::slice::from_ref(&sf), &config).is_empty());
+    }
+
+    #[test]
+    fn unsafe_without_safety_or_outside_allowlist_is_flagged() {
+        let raw = "fn f(p: *const u32) -> u32 { unsafe { *p } }\n";
+        let sf = SourceFile::parse("src/other.rs", raw);
+        let f = run_all(std::slice::from_ref(&sf), &cfg());
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "unsafe");
+        assert!(f[0].message.contains("allowlisted"), "{}", f[0].message);
+
+        let mut config = cfg();
+        config.unsafe_allow.push(entry("src/other.rs"));
+        let f = run_all(std::slice::from_ref(&sf), &config);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].message.contains("SAFETY"), "{}", f[0].message);
+    }
+
+    #[test]
+    fn determinism_rule_and_its_allowlist() {
+        let raw = "use std::collections::HashMap;\nfn f() -> HashMap<u8, u8> { HashMap::new() }\n";
+        let sf = SourceFile::parse("src/h.rs", raw);
+        let f = run_all(std::slice::from_ref(&sf), &cfg());
+        assert_eq!(f.len(), 3, "{f:?}");
+        assert!(f.iter().all(|x| x.rule == "determinism"));
+
+        let mut config = cfg();
+        config.determinism_allow.push(entry("src/h.rs"));
+        assert!(run_all(std::slice::from_ref(&sf), &config).is_empty());
+    }
+
+    #[test]
+    fn pin_round_trips_and_rejects_garbage() {
+        let pin = SerdePin { version: 3, fingerprint: 0x0123_4567_89ab_cdef };
+        let parsed = parse_pin(&render_pin(&pin)).unwrap();
+        assert_eq!(parsed, pin);
+        assert!(parse_pin("version 1\n").is_err());
+        assert!(parse_pin("nonsense\n").is_err());
+        assert!(parse_pin("version x\nfingerprint 0x0\n").is_err());
+    }
+
+    #[test]
+    fn serde_snapshot_tracks_write_order_not_unrelated_code() {
+        let serde_a = "\
+pub const CHECKPOINT_VERSION: u32 = 1;
+fn encode(w: &mut W) {
+    w.put_u32(CHECKPOINT_VERSION);
+    w.put_str(arch);
+    w.put_f32s(theta);
+}
+#[cfg(test)]
+mod tests {
+    fn t() { w.put_u64(9); }
+}
+";
+        // Same stream, different local names / formatting / test body.
+        let serde_b = "\
+pub const CHECKPOINT_VERSION: u32 = 1;
+fn encode(out: &mut W) {
+    out.put_u32(CHECKPOINT_VERSION);
+    out.put_str(architecture);
+    out.put_f32s(parameters);
+}
+#[cfg(test)]
+mod tests {
+    fn t() { w.put_bools(&[true]); }
+}
+";
+        // Reordered fields: must move the fingerprint.
+        let serde_c = serde_a.replace("put_str(arch);\n    w.put_f32s(theta);", "put_f32s(theta);\n    w.put_str(arch);");
+        let mut config = cfg();
+        config.serde_files.push("src/serde.rs".to_string());
+        let snap = |raw: &str| {
+            let sf = SourceFile::parse("src/serde.rs", raw);
+            serde_snapshot(std::slice::from_ref(&sf), &config).unwrap()
+        };
+        let (a, b, c) = (snap(serde_a), snap(serde_b), snap(&serde_c));
+        assert_eq!(a.fingerprint, b.fingerprint);
+        assert_ne!(a.fingerprint, c.fingerprint);
+        assert_eq!(a.version, 1);
+        assert_eq!(a.anchor_line, 1);
+    }
+
+    #[test]
+    fn unknown_allow_rule_and_malformed_directives_are_findings() {
+        let raw = "// audit: allow(speed) because\n// audit: nonsense\nfn f() {}\n";
+        let sf = SourceFile::parse("src/d.rs", raw);
+        let f = run_all(std::slice::from_ref(&sf), &cfg());
+        assert_eq!(f.len(), 2, "{f:?}");
+        assert!(f.iter().all(|x| x.rule == "directive"));
+    }
+
+    #[test]
+    fn coverage_rule_requires_a_region() {
+        let sf = SourceFile::parse("src/grad/bptt.rs", "fn step() { let x = 1; }\n");
+        let mut config = cfg();
+        config.required_hot.push("src/grad/bptt.rs".to_string());
+        config.required_hot.push("src/grad/ghost.rs".to_string());
+        let f = run_all(std::slice::from_ref(&sf), &config);
+        assert_eq!(f.len(), 2, "{f:?}");
+        assert!(f.iter().all(|x| x.rule == "coverage"));
+    }
+}

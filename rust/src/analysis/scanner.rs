@@ -1,0 +1,498 @@
+//! Lexer-light Rust source scanner: the substrate every audit rule runs on.
+//!
+//! A full Rust parser is overkill (and unavailable — the crate registry is
+//! offline), but raw substring matching is unsound: `unsafe` in a doc
+//! comment or `vec!` in an error-message string must not trip a rule. The
+//! middle ground implemented here is a character-level state machine that
+//! produces a *stripped* view of the source — comments and string/char
+//! literal contents replaced by spaces, byte-for-byte, newlines preserved —
+//! so that:
+//!
+//! * byte offsets and line numbers in the stripped view equal those in the
+//!   raw file (findings report real `file:line` spans), and
+//! * token searches over the stripped view only ever match real code.
+//!
+//! The scanner understands line comments, nested block comments, string
+//! literals (with escapes), byte strings, raw (byte) strings with any hash
+//! depth, and char literals vs. lifetimes (`'a'` is blanked, `'a` is kept).
+//!
+//! While stripping, it also collects the comment stream and parses the
+//! `// audit:` directive grammar out of it (see [`Directive`]), resolves
+//! `hot-path` directives to brace-matched byte ranges ([`HotRegion`]), and
+//! records which lines carry a `SAFETY:` comment — everything the rules in
+//! [`super::rules`] consume.
+
+/// A parsed `// audit:` directive.
+///
+/// Grammar (line comments only; doc comments are ignored):
+///
+/// ```text
+/// // audit: hot-path              — the next `{…}` block is a hot region
+/// // audit: allow(RULE) REASON    — silence RULE findings on this line and
+///                                   the next; REASON is mandatory
+/// ```
+///
+/// Anything else after `// audit:` is [`Directive::Malformed`] — itself
+/// reported as a finding, so a typo can never silently disable a rule.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Directive {
+    /// `// audit: hot-path`
+    HotPath { line: usize },
+    /// `// audit: allow(rule) reason`
+    Allow { line: usize, rule: String, reason: String },
+    /// Unparseable `// audit:` comment, reported as a finding.
+    Malformed { line: usize, text: String },
+}
+
+impl Directive {
+    pub fn line(&self) -> usize {
+        match self {
+            Directive::HotPath { line } => *line,
+            Directive::Allow { line, .. } => *line,
+            Directive::Malformed { line, .. } => *line,
+        }
+    }
+}
+
+/// A `// audit: hot-path` region: the first brace-delimited block that
+/// opens after the directive line, matched on the stripped view.
+#[derive(Clone, Copy, Debug)]
+pub struct HotRegion {
+    pub directive_line: usize,
+    /// Byte offset of the opening `{` in [`SourceFile::code`].
+    pub start: usize,
+    /// Byte offset one past the matching `}`.
+    pub end: usize,
+}
+
+/// One scanned source file.
+#[derive(Clone, Debug)]
+pub struct SourceFile {
+    /// Repo-relative path with forward slashes (stable across platforms).
+    pub path: String,
+    /// Stripped view: same length and line structure as the raw file, with
+    /// comments and literal contents blanked.
+    pub code: String,
+    pub directives: Vec<Directive>,
+    pub hot_regions: Vec<HotRegion>,
+    /// `hot-path` directives with no following brace-matched block.
+    pub unclosed_hot: Vec<usize>,
+    /// Lines (1-based) whose comment text contains `SAFETY:`.
+    pub safety_lines: Vec<usize>,
+    /// Per line (index 0 = line 1): the line holds a comment but no code.
+    comment_only: Vec<bool>,
+    /// Byte offset of each line start in `code`.
+    line_starts: Vec<usize>,
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b == b'_' || b.is_ascii_alphanumeric()
+}
+
+fn prev_is_ident(bytes: &[u8], i: usize) -> bool {
+    i > 0 && is_ident_byte(bytes[i - 1])
+}
+
+/// If `bytes[i..]` starts a raw (byte) string introducer — `r`, `br`, any
+/// number of `#`, then `"` — return (offset of the opening quote, hashes).
+fn raw_string_at(bytes: &[u8], i: usize) -> Option<(usize, usize)> {
+    let mut j = i;
+    if bytes.get(j) == Some(&b'b') {
+        j += 1;
+    }
+    if bytes.get(j) != Some(&b'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0usize;
+    while bytes.get(j) == Some(&b'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if bytes.get(j) == Some(&b'"') {
+        Some((j, hashes))
+    } else {
+        None
+    }
+}
+
+impl SourceFile {
+    /// Scan one file. `path` is stored verbatim in every finding.
+    pub fn parse(path: &str, raw: &str) -> SourceFile {
+        let bytes = raw.as_bytes();
+        let n = bytes.len();
+        let mut code = bytes.to_vec();
+        // (byte offset, raw text) of every comment, in file order.
+        let mut comments: Vec<(usize, String)> = Vec::new();
+
+        let mut i = 0usize;
+        while i < n {
+            let b = bytes[i];
+            if b == b'/' && i + 1 < n && bytes[i + 1] == b'/' {
+                let start = i;
+                while i < n && bytes[i] != b'\n' {
+                    code[i] = b' ';
+                    i += 1;
+                }
+                comments.push((start, raw[start..i].to_string()));
+            } else if b == b'/' && i + 1 < n && bytes[i + 1] == b'*' {
+                let start = i;
+                let mut depth = 1usize;
+                code[i] = b' ';
+                code[i + 1] = b' ';
+                i += 2;
+                while i < n && depth > 0 {
+                    if bytes[i] == b'/' && i + 1 < n && bytes[i + 1] == b'*' {
+                        depth += 1;
+                        code[i] = b' ';
+                        code[i + 1] = b' ';
+                        i += 2;
+                    } else if bytes[i] == b'*' && i + 1 < n && bytes[i + 1] == b'/' {
+                        depth -= 1;
+                        code[i] = b' ';
+                        code[i + 1] = b' ';
+                        i += 2;
+                    } else {
+                        if bytes[i] != b'\n' {
+                            code[i] = b' ';
+                        }
+                        i += 1;
+                    }
+                }
+                comments.push((start, raw[start..i].to_string()));
+            } else if (b == b'r' || b == b'b') && !prev_is_ident(bytes, i) {
+                if let Some((q, hashes)) = raw_string_at(bytes, i) {
+                    // Raw (byte) string: blank everything between the quotes.
+                    let mut j = q + 1;
+                    while j < n {
+                        if bytes[j] == b'"' {
+                            let mut k = 0usize;
+                            while k < hashes && bytes.get(j + 1 + k) == Some(&b'#') {
+                                k += 1;
+                            }
+                            if k == hashes {
+                                j += 1 + hashes;
+                                break;
+                            }
+                        }
+                        if bytes[j] != b'\n' {
+                            code[j] = b' ';
+                        }
+                        j += 1;
+                    }
+                    i = j;
+                } else if b == b'b' && i + 1 < n && bytes[i + 1] == b'"' {
+                    i += 1; // byte string: let the `"` arm below handle it
+                } else {
+                    i += 1;
+                }
+            } else if b == b'"' {
+                i += 1;
+                while i < n {
+                    if bytes[i] == b'\\' && i + 1 < n {
+                        code[i] = b' ';
+                        if bytes[i + 1] != b'\n' {
+                            code[i + 1] = b' ';
+                        }
+                        i += 2;
+                    } else if bytes[i] == b'"' {
+                        i += 1;
+                        break;
+                    } else {
+                        if bytes[i] != b'\n' {
+                            code[i] = b' ';
+                        }
+                        i += 1;
+                    }
+                }
+            } else if b == b'\'' {
+                if i + 1 < n && bytes[i + 1] == b'\\' {
+                    // Escaped char literal: blank to the closing quote.
+                    i += 1;
+                    while i < n && bytes[i] != b'\'' {
+                        if bytes[i] == b'\\' && i + 1 < n {
+                            code[i] = b' ';
+                            if bytes[i + 1] != b'\n' {
+                                code[i + 1] = b' ';
+                            }
+                            i += 2;
+                        } else {
+                            if bytes[i] != b'\n' {
+                                code[i] = b' ';
+                            }
+                            i += 1;
+                        }
+                    }
+                    if i < n {
+                        i += 1; // closing quote
+                    }
+                } else if i + 2 < n && bytes[i + 2] == b'\'' && bytes[i + 1] != b'\'' {
+                    // Simple one-byte char literal 'x' (covers '{', '"', …).
+                    code[i + 1] = b' ';
+                    i += 3;
+                } else {
+                    i += 1; // lifetime
+                }
+            } else {
+                i += 1;
+            }
+        }
+
+        let code = String::from_utf8(code).expect("stripping preserves UTF-8");
+
+        let mut line_starts = vec![0usize];
+        for (off, b) in code.bytes().enumerate() {
+            if b == b'\n' {
+                line_starts.push(off + 1);
+            }
+        }
+
+        let comment_only: Vec<bool> = code
+            .lines()
+            .zip(raw.lines())
+            .map(|(c, r)| c.trim().is_empty() && !r.trim().is_empty())
+            .collect();
+
+        let mut sf = SourceFile {
+            path: path.to_string(),
+            code,
+            directives: Vec::new(),
+            hot_regions: Vec::new(),
+            unclosed_hot: Vec::new(),
+            safety_lines: Vec::new(),
+            comment_only,
+            line_starts,
+        };
+
+        for (off, text) in &comments {
+            let line = sf.line_of(*off);
+            for (k, seg) in text.split('\n').enumerate() {
+                if seg.contains("SAFETY:") {
+                    sf.safety_lines.push(line + k);
+                }
+            }
+            if let Some(d) = parse_directive(line, text) {
+                sf.directives.push(d);
+            }
+        }
+
+        // Resolve hot-path directives to brace-matched regions.
+        let dirs = sf.directives.clone();
+        for d in &dirs {
+            if let Directive::HotPath { line } = d {
+                match sf.match_block_after_line(*line) {
+                    Some((start, end)) => {
+                        sf.hot_regions.push(HotRegion { directive_line: *line, start, end })
+                    }
+                    None => sf.unclosed_hot.push(*line),
+                }
+            }
+        }
+        sf
+    }
+
+    /// 1-based line number of a byte offset.
+    pub fn line_of(&self, offset: usize) -> usize {
+        match self.line_starts.binary_search(&offset) {
+            Ok(idx) => idx + 1,
+            Err(idx) => idx, // idx >= 1 since line_starts[0] == 0
+        }
+    }
+
+    pub fn line_count(&self) -> usize {
+        self.comment_only.len()
+    }
+
+    /// The line holds a comment but no code.
+    pub fn is_comment_only(&self, line: usize) -> bool {
+        line >= 1 && self.comment_only.get(line - 1).copied().unwrap_or(false)
+    }
+
+    /// Find the first `{…}` block opening at or after the start of
+    /// `line + 1`, brace-matched on the stripped view.
+    fn match_block_after_line(&self, line: usize) -> Option<(usize, usize)> {
+        let from = *self.line_starts.get(line)?; // start of the next line
+        let bytes = self.code.as_bytes();
+        let open = (from..bytes.len()).find(|&j| bytes[j] == b'{')?;
+        let mut depth = 0usize;
+        for j in open..bytes.len() {
+            match bytes[j] {
+                b'{' => depth += 1,
+                b'}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return Some((open, j + 1));
+                    }
+                }
+                _ => {}
+            }
+        }
+        None
+    }
+
+    /// Byte offsets of identifier-boundary-respecting occurrences of
+    /// `token` in the stripped view.
+    pub fn find_token(&self, token: &str) -> Vec<usize> {
+        let mut out = Vec::new();
+        let bytes = self.code.as_bytes();
+        let tlen = token.len();
+        if tlen == 0 {
+            return out;
+        }
+        let first_ident = is_ident_byte(token.as_bytes()[0]);
+        let last_ident = is_ident_byte(token.as_bytes()[tlen - 1]);
+        let mut from = 0usize;
+        while let Some(rel) = self.code[from..].find(token) {
+            let pos = from + rel;
+            let pre_ok = !first_ident || !prev_is_ident(bytes, pos);
+            let post_ok = !last_ident
+                || pos + tlen >= bytes.len()
+                || !is_ident_byte(bytes[pos + tlen]);
+            if pre_ok && post_ok {
+                out.push(pos);
+            }
+            from = pos + 1;
+        }
+        out
+    }
+}
+
+fn parse_directive(line: usize, text: &str) -> Option<Directive> {
+    // Only plain line comments carry directives (`///` and `//!` do not).
+    let body = text.strip_prefix("//")?;
+    if body.starts_with('/') || body.starts_with('!') {
+        return None;
+    }
+    let body = body.trim_start();
+    let rest = body.strip_prefix("audit:")?.trim();
+    if rest == "hot-path" {
+        return Some(Directive::HotPath { line });
+    }
+    if let Some(inner) = rest.strip_prefix("allow(") {
+        if let Some(close) = inner.find(')') {
+            let rule = inner[..close].trim().to_string();
+            let reason = inner[close + 1..].trim().to_string();
+            if !rule.is_empty() && !reason.is_empty() {
+                return Some(Directive::Allow { line, rule, reason });
+            }
+        }
+    }
+    Some(Directive::Malformed { line, text: rest.to_string() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stripping_blanks_comments_and_literals_but_keeps_structure() {
+        let raw = "let a = \"vec![x]\"; // vec! in comment\nlet b = vec![0; 3];\n";
+        let sf = SourceFile::parse("t.rs", raw);
+        assert_eq!(sf.code.len(), raw.len());
+        assert_eq!(sf.find_token("vec!").len(), 1);
+        assert_eq!(sf.line_of(sf.find_token("vec!")[0]), 2);
+    }
+
+    #[test]
+    fn char_literals_are_blanked_lifetimes_are_kept() {
+        let raw = "fn f<'a>(x: &'a str) -> char { if x.is_empty() { '{' } else { '\\n' } }\n";
+        let sf = SourceFile::parse("t.rs", raw);
+        // The '{' char literal must not unbalance brace matching.
+        assert!(sf.code.contains("'a str"));
+        assert!(!sf.code.contains("'{'"));
+    }
+
+    #[test]
+    fn raw_strings_are_blanked() {
+        let raw = "let s = r#\"HashMap \"quoted\" inside\"#; let t = 1;\n";
+        let sf = SourceFile::parse("t.rs", raw);
+        assert!(sf.find_token("HashMap").is_empty());
+        assert!(sf.code.contains("let t = 1;"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let raw = "/* outer /* inner */ still comment vec! */ let x = 1;\n";
+        let sf = SourceFile::parse("t.rs", raw);
+        assert!(sf.find_token("vec!").is_empty());
+        assert!(sf.code.contains("let x = 1;"));
+    }
+
+    #[test]
+    fn hot_path_directive_marks_the_next_block() {
+        let raw = "\
+// audit: hot-path
+fn step(x: usize) -> usize {
+    let y = x + 1;
+    y
+}
+fn other() { let v = 2; }
+";
+        let sf = SourceFile::parse("t.rs", raw);
+        assert_eq!(sf.hot_regions.len(), 1);
+        let r = sf.hot_regions[0];
+        assert_eq!(r.directive_line, 1);
+        assert_eq!(sf.line_of(r.start), 2);
+        assert_eq!(sf.line_of(r.end - 1), 5);
+    }
+
+    #[test]
+    fn unclosed_hot_path_is_recorded() {
+        let raw = "// audit: hot-path\nlet x = 1;\n";
+        let sf = SourceFile::parse("t.rs", raw);
+        assert!(sf.hot_regions.is_empty());
+        assert_eq!(sf.unclosed_hot, vec![1]);
+    }
+
+    #[test]
+    fn allow_directive_parses_rule_and_reason() {
+        let raw = "// audit: allow(alloc) amortized spare-pool refill\nlet v = 1;\n";
+        let sf = SourceFile::parse("t.rs", raw);
+        assert_eq!(
+            sf.directives,
+            vec![Directive::Allow {
+                line: 1,
+                rule: "alloc".into(),
+                reason: "amortized spare-pool refill".into(),
+            }]
+        );
+    }
+
+    #[test]
+    fn malformed_directives_are_flagged_not_ignored() {
+        for bad in ["// audit: hotpath", "// audit: allow(alloc)", "// audit: allow() x"] {
+            let sf = SourceFile::parse("t.rs", &format!("{bad}\n"));
+            assert!(
+                matches!(sf.directives[0], Directive::Malformed { .. }),
+                "{bad} should be malformed"
+            );
+        }
+        // Doc comments never carry directives.
+        let sf = SourceFile::parse("t.rs", "/// audit: hot-path\nfn f() {}\n");
+        assert!(sf.directives.is_empty());
+    }
+
+    #[test]
+    fn safety_lines_cover_line_and_block_comments() {
+        let raw = "\
+// SAFETY: slot t is in bounds.
+let a = 1;
+/* spans
+   SAFETY: second line of a block */
+let b = 2; // SAFETY: trailing
+";
+        let sf = SourceFile::parse("t.rs", raw);
+        assert_eq!(sf.safety_lines, vec![1, 4, 5]);
+        assert!(sf.is_comment_only(1));
+        assert!(!sf.is_comment_only(2));
+        assert!(sf.is_comment_only(3));
+    }
+
+    #[test]
+    fn find_token_respects_identifier_boundaries() {
+        let raw = "deny(unsafe_op_in_unsafe_fn); to_vec_scratch(); x.to_vec();\n";
+        let sf = SourceFile::parse("t.rs", raw);
+        assert!(sf.find_token("unsafe").is_empty());
+        assert_eq!(sf.find_token("to_vec").len(), 1);
+    }
+}

@@ -1,0 +1,237 @@
+//! Seeded-violation self-tests: every audit rule must demonstrably *catch*
+//! its violation, not just pass on a clean tree. Each case builds a tiny
+//! fixture repo in a temp dir, plants one violation, runs the full audit
+//! pipeline (scan → rules → sort), and asserts the exact findings; the
+//! escape hatches (allow directives, allowlists, repin) are exercised too.
+//!
+//! Run via `repro audit --self-test` (the CI lint job does) or through the
+//! unit-test wrapper below. A rule whose self-test fails is a rule that
+//! cannot be trusted to block a regression.
+
+use super::report::Finding;
+use super::AuditConfig;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+static COUNTER: AtomicUsize = AtomicUsize::new(0);
+
+/// Temp-dir fixture repo; removed on drop (best effort).
+struct Fixture {
+    root: PathBuf,
+}
+
+impl Fixture {
+    fn new(name: &str) -> Result<Fixture, String> {
+        let root = std::env::temp_dir().join(format!(
+            "snap-audit-selftest-{}-{}-{}",
+            std::process::id(),
+            COUNTER.fetch_add(1, Ordering::Relaxed),
+            name
+        ));
+        std::fs::create_dir_all(root.join("src")).map_err(|e| format!("mkdir fixture: {e}"))?;
+        Ok(Fixture { root })
+    }
+
+    fn write(&self, rel: &str, content: &str) -> Result<(), String> {
+        let p = self.root.join(rel);
+        if let Some(parent) = p.parent() {
+            std::fs::create_dir_all(parent)
+                .map_err(|e| format!("mkdir {}: {e}", parent.display()))?;
+        }
+        std::fs::write(&p, content).map_err(|e| format!("write {}: {e}", p.display()))
+    }
+
+    /// Minimal config over this fixture: scan `src/`, everything else off.
+    fn config(&self) -> AuditConfig {
+        AuditConfig {
+            root: self.root.clone(),
+            src_dirs: vec!["src".to_string()],
+            required_hot: Vec::new(),
+            unsafe_allow: Vec::new(),
+            determinism_allow: Vec::new(),
+            serde_files: Vec::new(),
+            pin_path: None,
+        }
+    }
+
+    fn audit(&self, config: &AuditConfig) -> Result<Vec<Finding>, String> {
+        super::run_audit(config).map_err(|e| format!("audit failed to run: {e}"))
+    }
+}
+
+impl Drop for Fixture {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.root);
+    }
+}
+
+fn allow(suffix: &str) -> super::AllowEntry {
+    super::AllowEntry { suffix: suffix.to_string(), reason: "selftest".to_string() }
+}
+
+/// Findings must equal `want` as (rule, line) pairs, in order.
+fn expect(findings: &[Finding], want: &[(&str, usize)]) -> Result<(), String> {
+    let got: Vec<(&str, usize)> = findings.iter().map(|f| (f.rule, f.line)).collect();
+    if got == want {
+        Ok(())
+    } else {
+        Err(format!("findings mismatch:\n  got  {got:?}\n  want {want:?}\n  full {findings:?}"))
+    }
+}
+
+fn expect_one_containing(findings: &[Finding], needle: &str) -> Result<(), String> {
+    if findings.len() == 1 && findings[0].message.contains(needle) {
+        Ok(())
+    } else {
+        Err(format!("wanted one finding containing {needle:?}, got {findings:?}"))
+    }
+}
+
+fn case_alloc_detected() -> Result<(), String> {
+    let fx = Fixture::new("alloc")?;
+    fx.write(
+        "src/hot.rs",
+        "// audit: hot-path\npub fn hot(n: usize) -> usize {\n    let v = vec![0.0f32; n];\n    v.len()\n}\n",
+    )?;
+    expect(&fx.audit(&fx.config())?, &[("alloc", 3)])
+}
+
+fn case_alloc_allow_silences() -> Result<(), String> {
+    let fx = Fixture::new("alloc-allow")?;
+    fx.write(
+        "src/hot.rs",
+        "// audit: hot-path\npub fn hot(n: usize) -> usize {\n    // audit: allow(alloc) amortized one-time growth\n    let v = vec![0.0f32; n];\n    v.len()\n}\n",
+    )?;
+    expect(&fx.audit(&fx.config())?, &[])
+}
+
+fn case_coverage_requires_regions() -> Result<(), String> {
+    let fx = Fixture::new("coverage")?;
+    fx.write("src/cold.rs", "pub fn cold() -> usize {\n    7\n}\n")?;
+    let mut config = fx.config();
+    config.required_hot.push("src/cold.rs".to_string());
+    config.required_hot.push("src/ghost.rs".to_string());
+    expect(&fx.audit(&config)?, &[("coverage", 0), ("coverage", 0)])
+}
+
+fn case_unsafe_outside_allowlist() -> Result<(), String> {
+    let fx = Fixture::new("unsafe-module")?;
+    fx.write(
+        "src/newmod.rs",
+        "pub fn first(p: *const u32) -> u32 {\n    unsafe { *p }\n}\n",
+    )?;
+    let findings = fx.audit(&fx.config())?;
+    expect(&findings, &[("unsafe", 2)])?;
+    expect_one_containing(&findings, "allowlisted")
+}
+
+fn case_unsafe_requires_safety_comment() -> Result<(), String> {
+    let fx = Fixture::new("unsafe-safety")?;
+    fx.write(
+        "src/newmod.rs",
+        "pub fn first(p: *const u32) -> u32 {\n    unsafe { *p }\n}\n",
+    )?;
+    let mut config = fx.config();
+    config.unsafe_allow.push(allow("src/newmod.rs"));
+    let findings = fx.audit(&config)?;
+    expect(&findings, &[("unsafe", 2)])?;
+    expect_one_containing(&findings, "SAFETY")?;
+    // Adding the SAFETY comment heals it.
+    fx.write(
+        "src/newmod.rs",
+        "pub fn first(p: *const u32) -> u32 {\n    // SAFETY: caller guarantees p is valid for reads.\n    unsafe { *p }\n}\n",
+    )?;
+    expect(&fx.audit(&config)?, &[])
+}
+
+fn case_determinism() -> Result<(), String> {
+    let fx = Fixture::new("determinism")?;
+    fx.write(
+        "src/table.rs",
+        "use std::collections::HashMap;\npub fn t() -> usize {\n    HashMap::<u8, u8>::new().len()\n}\n",
+    )?;
+    expect(&fx.audit(&fx.config())?, &[("determinism", 1), ("determinism", 3)])?;
+    let mut config = fx.config();
+    config.determinism_allow.push(allow("src/table.rs"));
+    expect(&fx.audit(&config)?, &[])
+}
+
+fn case_serde_format_guard() -> Result<(), String> {
+    let fx = Fixture::new("serde")?;
+    let serde = "pub struct W;\nimpl W {\n    pub fn put_u32(&mut self, _v: u32) {}\n    pub fn put_str(&mut self, _s: &str) {}\n    pub fn put_f32s(&mut self, _xs: &[f32]) {}\n}\n";
+    let layout_v1 = "pub const CHECKPOINT_VERSION: u32 = 1;\npub fn encode(w: &mut crate::serde::W) {\n    w.put_u32(CHECKPOINT_VERSION);\n    w.put_str(\"arch\");\n    w.put_f32s(&[1.0]);\n}\n";
+    // Same version, put_str/put_f32s swapped: a silent layout change.
+    let layout_v1_swapped = "pub const CHECKPOINT_VERSION: u32 = 1;\npub fn encode(w: &mut crate::serde::W) {\n    w.put_u32(CHECKPOINT_VERSION);\n    w.put_f32s(&[1.0]);\n    w.put_str(\"arch\");\n}\n";
+    let layout_v2_swapped = layout_v1_swapped.replace("u32 = 1;", "u32 = 2;");
+    fx.write("src/serde.rs", serde)?;
+    fx.write("src/checkpoint.rs", layout_v1)?;
+    let mut config = fx.config();
+    config.serde_files.push("src/serde.rs".to_string());
+    config.serde_files.push("src/checkpoint.rs".to_string());
+    config.pin_path = Some(fx.root.join("audit/serde_format.pin"));
+
+    // No pin yet: the audit demands one.
+    expect_one_containing(&fx.audit(&config)?, "--repin-serde")?;
+    super::repin_serde(&config).map_err(|e| format!("repin: {e}"))?;
+    expect(&fx.audit(&config)?, &[])?;
+
+    // Layout change without a version bump: the core violation.
+    fx.write("src/checkpoint.rs", layout_v1_swapped)?;
+    let findings = fx.audit(&config)?;
+    expect(&findings, &[("serde-format", 1)])?;
+    expect_one_containing(&findings, "without a version bump")?;
+
+    // Bumping the version makes the fix explicit: refresh the pin.
+    fx.write("src/checkpoint.rs", &layout_v2_swapped)?;
+    expect_one_containing(&fx.audit(&config)?, "--repin-serde")?;
+    super::repin_serde(&config).map_err(|e| format!("repin: {e}"))?;
+    expect(&fx.audit(&config)?, &[])
+}
+
+fn case_malformed_directives() -> Result<(), String> {
+    let fx = Fixture::new("directive")?;
+    fx.write(
+        "src/bad.rs",
+        "// audit: hotpath\npub const X: usize = 1;\n// audit: hot-path\npub const Y: usize = 2;\n",
+    )?;
+    expect(&fx.audit(&fx.config())?, &[("directive", 1), ("directive", 3)])
+}
+
+type Case = (&'static str, fn() -> Result<(), String>);
+
+const CASES: &[Case] = &[
+    ("alloc-detects-seeded-violation", case_alloc_detected),
+    ("alloc-allow-directive-silences", case_alloc_allow_silences),
+    ("coverage-requires-hot-regions", case_coverage_requires_regions),
+    ("unsafe-outside-allowlist", case_unsafe_outside_allowlist),
+    ("unsafe-requires-safety-comment", case_unsafe_requires_safety_comment),
+    ("determinism-hashmap", case_determinism),
+    ("serde-format-guard", case_serde_format_guard),
+    ("malformed-directives", case_malformed_directives),
+];
+
+/// Run every self-test case; `Err` (nonzero exit) if any rule failed to
+/// catch its seeded violation.
+pub fn run_selftests() -> crate::errors::Result<()> {
+    let mut failed = 0usize;
+    for (name, case) in CASES {
+        match case() {
+            Ok(()) => println!("audit self-test {name}: ok"),
+            Err(e) => {
+                failed += 1;
+                println!("audit self-test {name}: FAILED\n  {e}");
+            }
+        }
+    }
+    crate::ensure!(failed == 0, "audit self-test: {failed} of {} case(s) failed", CASES.len());
+    println!("audit self-test: all {} case(s) passed", CASES.len());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn every_seeded_violation_is_caught() {
+        super::run_selftests().unwrap();
+    }
+}

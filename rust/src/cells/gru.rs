@@ -196,6 +196,7 @@ impl Cell for Gru {
         Cache::with_slots(&[k, self.input, k, k, k, k, k, k, k, k, k])
     }
 
+    // audit: hot-path
     fn forward(
         &self,
         theta: &[f32],
@@ -250,6 +251,7 @@ impl Cell for Gru {
         cache.bufs[C_HNEXT].copy_from_slice(s_next);
     }
 
+    // audit: hot-path
     fn dynamics(&self, theta: &[f32], cache: &Cache, d: &mut DynJacobian) {
         d.zero();
         let k = self.k;
@@ -282,6 +284,7 @@ impl Cell for Gru {
         ImmediateJac::new(self.k, self.num_params, &rows)
     }
 
+    // audit: hot-path
     fn immediate(&self, cache: &Cache, i_jac: &mut ImmediateJac) {
         // §Perf: block-wise fill (branch-free inner loops over each weight
         // block's CSR entries), reading the coefficients computed in

@@ -239,6 +239,7 @@ impl Cell for Lstm {
         Cache::with_slots(&[k, k, self.input, k, k, k, k, k, k, k, k, k, k])
     }
 
+    // audit: hot-path
     fn forward(
         &self,
         theta: &[f32],
@@ -294,6 +295,7 @@ impl Cell for Lstm {
         cache.bufs[C_X].copy_from_slice(x);
     }
 
+    // audit: hot-path
     fn dynamics(&self, theta: &[f32], cache: &Cache, d: &mut DynJacobian) {
         d.zero();
         let k = self.k;
@@ -359,6 +361,7 @@ impl Cell for Lstm {
         ImmediateJac::new(2 * self.k, self.num_params, &rows)
     }
 
+    // audit: hot-path
     fn immediate(&self, cache: &Cache, i_jac: &mut ImmediateJac) {
         let hp = &cache.bufs[C_HPREV];
         let x = &cache.bufs[C_X];

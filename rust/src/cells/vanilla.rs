@@ -106,6 +106,7 @@ impl Cell for Vanilla {
         Cache::with_slots(&[self.k, self.input, self.k])
     }
 
+    // audit: hot-path
     fn forward(
         &self,
         theta: &[f32],
@@ -129,6 +130,7 @@ impl Cell for Vanilla {
         cache.bufs[C_HNEXT].copy_from_slice(s_next);
     }
 
+    // audit: hot-path
     fn dynamics(&self, theta: &[f32], cache: &Cache, d: &mut DynJacobian) {
         debug_assert_eq!(d.nnz(), self.wh_dslots.len());
         let h = &cache.bufs[C_HNEXT];
@@ -154,6 +156,7 @@ impl Cell for Vanilla {
         ImmediateJac::new(self.k, self.num_params, &rows)
     }
 
+    // audit: hot-path
     fn immediate(&self, cache: &Cache, i_jac: &mut ImmediateJac) {
         let h = &cache.bufs[C_HNEXT];
         let hp = &cache.bufs[C_HPREV];

@@ -154,6 +154,16 @@ CI commands:
   bench-gate  Diff a BENCH_*.json against a committed baseline; fails on throughput
               regression beyond tolerance  [--baseline --current --tolerance 0.25
               --normalize --strict]  (see rust/benches/baselines/README.md)
+  audit       Static analysis of this repo's own source: hot-path allocation lint,
+              unsafe audit, determinism lint, serde-format guard. Exits nonzero on
+              any finding (path:line: [rule] message)  [--root --json --self-test
+              --repin-serde]
+              Annotation grammar (line comments only):
+                // audit: hot-path            the next {...} block is allocation-free
+                // audit: allow(RULE) REASON  silence RULE on this line + the next
+              Allowlists live in rust/audit/*.allow; the serde-format pin in
+              rust/audit/serde_format.pin (refresh with --repin-serde AFTER bumping
+              CHECKPOINT_VERSION). See rust/src/analysis/ for the rule definitions.
 
 Throughput knobs (training results are bitwise identical for any setting):
   --workers N     step the minibatch lanes on N threads from a persistent

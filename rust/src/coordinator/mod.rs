@@ -25,6 +25,7 @@ pub fn dispatch(args: &Args) -> Result<()> {
         "copy" => experiments::run_copy_cmd(args)?,
         "file-lm" => experiments::run_file_lm(args)?,
         "bench-gate" => benchgate::run_bench_gate(args)?,
+        "audit" => crate::analysis::run_audit_cli(args)?,
         "aot-demo" => crate::runtime::demo::run_aot_demo(args)?,
         "info" => info(),
         "help" | "--help" | "-h" => println!("{USAGE}"),

@@ -74,6 +74,7 @@ impl GradAlgo for Bptt<'_> {
         self.spare_dl.append(&mut self.dl_dh);
     }
 
+    // audit: hot-path
     fn step(&mut self, theta: &[f32], x: &[f32]) {
         let mut cache = self.spare_caches.pop().unwrap_or_else(|| self.cell.make_cache());
         self.cell.forward(theta, &self.s, x, &mut cache, &mut self.s_next);
@@ -82,6 +83,7 @@ impl GradAlgo for Bptt<'_> {
         let mut dl = self
             .spare_dl
             .pop()
+            // audit: allow(alloc) cold spare-pool refill, amortized to zero
             .unwrap_or_else(|| vec![0.0; self.cell.hidden_size()]);
         dl.iter_mut().for_each(|v| *v = 0.0);
         self.dl_dh.push(dl);
@@ -103,6 +105,7 @@ impl GradAlgo for Bptt<'_> {
         }
     }
 
+    // audit: hot-path
     fn flush(&mut self, theta: &[f32], g: &mut [f32]) {
         let hs = self.cell.hidden_size();
         self.ds.iter_mut().for_each(|v| *v = 0.0);

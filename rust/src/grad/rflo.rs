@@ -59,6 +59,7 @@ impl GradAlgo for Rflo<'_> {
         self.j.reset();
     }
 
+    // audit: hot-path
     fn step(&mut self, theta: &[f32], x: &[f32]) {
         // Allocation-free: forward into the owned scratch, then swap.
         self.cell.forward(theta, &self.s, x, &mut self.cache, &mut self.s_next);
@@ -76,6 +77,7 @@ impl GradAlgo for Rflo<'_> {
         &self.s
     }
 
+    // audit: hot-path
     fn inject_loss(&mut self, dl_dh: &[f32], g: &mut [f32]) {
         let ss = self.cell.state_size();
         if dl_dh.len() == ss {

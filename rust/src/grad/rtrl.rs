@@ -73,6 +73,7 @@ impl GradAlgo for Rtrl<'_> {
         self.j.fill(0.0);
     }
 
+    // audit: hot-path
     fn step(&mut self, theta: &[f32], x: &[f32]) {
         let p = self.cell.num_params();
         // Allocation-free: forward into the owned scratch, then swap.
@@ -103,6 +104,7 @@ impl GradAlgo for Rtrl<'_> {
         &self.s
     }
 
+    // audit: hot-path
     fn inject_loss(&mut self, dl_dh: &[f32], g: &mut [f32]) {
         // g += (∂L/∂s)·J, with ∂L/∂s = [dl_dh ; 0] (loss reads h only).
         debug_assert_eq!(dl_dh.len(), self.cell.hidden_size());

@@ -86,6 +86,7 @@ impl GradAlgo for Snap<'_> {
         self.j.reset();
     }
 
+    // audit: hot-path
     fn step(&mut self, theta: &[f32], x: &[f32]) {
         // Allocation-free: forward into the owned scratch, then swap.
         self.cell.forward(theta, &self.s, x, &mut self.cache, &mut self.s_next);
@@ -105,6 +106,7 @@ impl GradAlgo for Snap<'_> {
         &self.s
     }
 
+    // audit: hot-path
     fn inject_loss(&mut self, dl_dh: &[f32], g: &mut [f32]) {
         debug_assert_eq!(dl_dh.len(), self.cell.hidden_size());
         let ss = self.cell.state_size();

@@ -85,6 +85,7 @@ impl GradAlgo for SnapTopK<'_> {
         self.j.fill(0.0);
     }
 
+    // audit: hot-path
     fn step(&mut self, theta: &[f32], x: &[f32]) {
         let ss = self.cell.state_size();
         let p = self.cell.num_params();
@@ -135,6 +136,7 @@ impl GradAlgo for SnapTopK<'_> {
         &self.s
     }
 
+    // audit: hot-path
     fn inject_loss(&mut self, dl_dh: &[f32], g: &mut [f32]) {
         for (i, &di) in dl_dh.iter().enumerate() {
             if di != 0.0 {

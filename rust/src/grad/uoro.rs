@@ -85,6 +85,7 @@ impl GradAlgo for Uoro<'_> {
         self.v.iter_mut().for_each(|v| *v = 0.0);
     }
 
+    // audit: hot-path
     fn step(&mut self, theta: &[f32], x: &[f32]) {
         let ss = self.cell.state_size();
         let p = self.cell.num_params();
@@ -124,6 +125,7 @@ impl GradAlgo for Uoro<'_> {
         &self.s
     }
 
+    // audit: hot-path
     fn inject_loss(&mut self, dl_dh: &[f32], g: &mut [f32]) {
         // g += (dl_ds·ũ)·ṽ
         let coef = dl_dh.iter().zip(self.u.iter()).map(|(a, b)| a * b).sum::<f32>();

@@ -29,12 +29,18 @@
 //!   stand-in for proptest).
 //! * [`errors`] — zero-dependency error plumbing (offline stand-in for
 //!   anyhow).
+//! * [`analysis`] — `repro audit`: static analysis of this repo's own
+//!   source (hot-path allocation lint, unsafe audit, determinism lint,
+//!   serde-format guard) with seeded-violation self-tests.
 //!
 //! The crate intentionally has **no external dependencies** so it builds
 //! without crates.io access; all parallelism is std — a persistent worker
 //! pool (`train::pool`) for the hot training sections, `std::thread::scope`
 //! for coarse experiment fan-out and the data-prefetch thread.
 
+#![deny(unsafe_op_in_unsafe_fn)]
+
+pub mod analysis;
 pub mod benchutil;
 pub mod cells;
 pub mod coordinator;

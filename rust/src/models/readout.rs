@@ -100,6 +100,7 @@ impl Readout {
     }
 
     /// Logits for hidden state `h` (allocation-free after the first call).
+    // audit: hot-path
     pub fn forward(&self, h: &[f32], cache: &mut ReadoutCache) {
         debug_assert_eq!(h.len(), self.in_dim);
         cache.h_in.resize(self.in_dim, 0.0);
@@ -123,6 +124,7 @@ impl Readout {
     /// Cross-entropy loss vs `target`; accumulates readout grads into `g`
     /// and returns `(loss_nats, dL/dh)` — the cotangent borrows the cache's
     /// scratch, so the per-token hot loop allocates nothing.
+    // audit: hot-path
     pub fn loss_and_backward<'a>(
         &self,
         cache: &'a mut ReadoutCache,
@@ -144,6 +146,7 @@ impl Readout {
 
     /// Backprop an arbitrary logit cotangent (copied into the cache's
     /// scratch; the returned `∂L/∂h` borrows the cache).
+    // audit: hot-path
     pub fn backward<'a>(
         &self,
         cache: &'a mut ReadoutCache,
@@ -156,6 +159,7 @@ impl Readout {
     }
 
     /// Shared backward sweep reading the cotangent from `cache.dlogits`.
+    // audit: hot-path
     fn backward_scratch<'a>(&self, cache: &'a mut ReadoutCache, g: &mut ReadoutGrad) -> &'a [f32] {
         let (o_w1, o_b1, o_w2, o_b2) = self.offsets();
         // dW2 = dlogits ⊗ act1 ; db2 = dlogits

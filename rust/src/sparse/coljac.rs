@@ -229,6 +229,7 @@ impl ColJacobian {
     ///   sparse `D[R, R]` run-gather into the owned scratch;
     /// * large patterns (SnAp-2/3 at scale): the same kernel fanned out over
     ///   scoped threads on the construction-time run partition.
+    // audit: hot-path
     pub fn update(&mut self, d: &DynJacobian, i_jac: &ImmediateJac) {
         debug_assert_eq!(d.n(), self.state);
         debug_assert_eq!(i_jac.num_params(), self.params);
@@ -240,7 +241,9 @@ impl ColJacobian {
             let rows = &self.row_idx;
             let ivals = i_jac.vals();
             for (t, v) in self.vals.iter_mut().enumerate() {
-                // structure equality ⇒ slot t belongs to column t's row.
+                // SAFETY: structure equality ⇒ slot t belongs to column t's
+                // row, and every row index was validated `< state` (which is
+                // `diag.len()`) when the pattern was built.
                 let i = unsafe { *rows.get_unchecked(t) } as usize;
                 *v = unsafe { diag.get_unchecked(i) } * *v + ivals[t];
             }
@@ -267,6 +270,7 @@ impl ColJacobian {
 
     /// Threaded masked product over the disjoint run chunks planned at
     /// construction, each with its own persistent scratch.
+    // audit: hot-path
     fn update_parallel(&mut self, d: &DynJacobian, i_jac: &ImmediateJac) {
         let col_ptr = &self.col_ptr;
         let row_idx = &self.row_idx;
@@ -297,6 +301,7 @@ impl ColJacobian {
     }
 
     /// RFLO-style update: `J ← λ·J + I` (drops `D·J` entirely — paper §4).
+    // audit: hot-path
     pub fn update_rflo(&mut self, lambda: f32, i_jac: &ImmediateJac) {
         if lambda != 1.0 {
             self.vals.iter_mut().for_each(|v| *v *= lambda);
@@ -318,12 +323,16 @@ impl ColJacobian {
 
     /// Accumulate the parameter gradient: `g[j] += Σ_i dlds[i]·J[i,j]`
     /// (eq. 2's `(∂L_t/∂h_t)·J_t` contraction).
+    // audit: hot-path
     pub fn accumulate_grad(&self, dlds: &[f32], g: &mut [f32]) {
         assert_eq!(dlds.len(), self.state);
         assert_eq!(g.len(), self.params);
         if self.max_col <= 1 && self.vals.len() == self.params {
             // §Perf: SnAp-1 fast path — slot t IS column t; one flat pass.
             for (t, (gv, v)) in g.iter_mut().zip(&self.vals).enumerate() {
+                // SAFETY: slot t is column t under the structure check above,
+                // and row indices are `< state`, which the asserts above pin
+                // to `dlds.len()`.
                 let i = unsafe { *self.row_idx.get_unchecked(t) } as usize;
                 *gv += unsafe { dlds.get_unchecked(i) } * v;
             }
@@ -390,6 +399,7 @@ impl RunScratch {
 /// Parameters wired into the same unit share their row set, so runs are long
 /// (≈ the block width) and the gather amortizes to nothing; the product runs
 /// at SIMD speed instead of gather speed (~3–4× on SnAp-2/3 shapes).
+// audit: hot-path
 #[allow(clippy::too_many_arguments)]
 fn update_runs(
     col_ptr: &[usize],

@@ -121,6 +121,7 @@ impl DynJacobian {
 
     /// `out[i] = D[i, i]` (0 where the diagonal is not structural). Slot
     /// positions are cached at construction, so this is a flat gather.
+    // audit: hot-path
     pub fn diagonal_into(&self, out: &mut [f32]) {
         debug_assert_eq!(out.len(), self.n);
         for (o, &t) in out.iter_mut().zip(&self.diag_slots) {
@@ -129,6 +130,7 @@ impl DynJacobian {
     }
 
     /// `y = D · x` (overwrites `y`).
+    // audit: hot-path
     pub fn matvec_into(&self, x: &[f32], y: &mut [f32]) {
         assert_eq!(x.len(), self.n);
         assert_eq!(y.len(), self.n);
@@ -144,6 +146,7 @@ impl DynJacobian {
 
     /// `y = Dᵀ · x` without materializing the transpose (overwrites `y`) —
     /// the BPTT/RFLO backward step `∂L/∂s_{t-1} = D_tᵀ·∂L/∂s_t` in O(nnz).
+    // audit: hot-path
     pub fn matvec_t_into(&self, x: &[f32], y: &mut [f32]) {
         assert_eq!(x.len(), self.n);
         assert_eq!(y.len(), self.n);
@@ -162,6 +165,7 @@ impl DynJacobian {
     /// `C (+)= D · B` where B, C are dense row-major — RTRL / SnAp-TopK's
     /// `D·J` as CSR × dense with a contiguous AXPY inner loop (the
     /// `d·(d·k²p)` cost line of Table 1).
+    // audit: hot-path
     pub fn spmm_into(&self, b: &Matrix, c: &mut Matrix, accumulate: bool) {
         assert_eq!(self.n, b.rows(), "spmm: inner dim");
         assert_eq!((c.rows(), c.cols()), (self.n, b.cols()), "spmm: out shape");
@@ -184,6 +188,7 @@ impl DynJacobian {
     /// `n = rows.len()`); entries outside the pattern come out 0. `rows`
     /// must be sorted ascending. This is SnAp's per-run gather: cost is the
     /// structural nonzeros of the touched D rows, not |rows|².
+    // audit: hot-path
     pub fn gather_block(&self, rows: &[u32], out: &mut [f32]) {
         let n = rows.len();
         debug_assert!(out.len() >= n * n);

@@ -18,6 +18,7 @@ pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
 /// i-k-j loop order: the inner j loop is a contiguous AXPY over C's row and
 /// B's row, which LLVM autovectorizes to FMA lanes. This is the single
 /// hottest dense kernel (RTRL's `D·J` is (k×k)·(k×p)).
+// audit: hot-path
 pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix, accumulate: bool) {
     let (m, ka) = a.shape();
     let (kb, n) = b.shape();
@@ -41,6 +42,7 @@ pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix, accumulate: bool) {
 }
 
 /// `y (+)= alpha * x` over slices — unrolled by 8 for reliable vectorization.
+// audit: hot-path
 #[inline]
 pub fn axpy_slice(y: &mut [f32], alpha: f32, x: &[f32]) {
     debug_assert_eq!(y.len(), x.len());
@@ -65,6 +67,7 @@ pub fn axpy_slice(y: &mut [f32], alpha: f32, x: &[f32]) {
 }
 
 /// Dot product, unrolled.
+// audit: hot-path
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
@@ -86,6 +89,7 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
 
 /// `y = A · x` into a caller-owned buffer (overwrites `y`; no allocation —
 /// the readout and cell forward hot loops route through this).
+// audit: hot-path
 pub fn matvec_into(a: &Matrix, x: &[f32], y: &mut [f32]) {
     assert_eq!(a.cols(), x.len());
     assert_eq!(a.rows(), y.len());
@@ -103,6 +107,7 @@ pub fn matvec(a: &Matrix, x: &[f32]) -> Vec<f32> {
 
 /// `y = Aᵀ · x` into a caller-owned buffer, without materializing the
 /// transpose (overwrites `y`; no allocation).
+// audit: hot-path
 pub fn matvec_t_into(a: &Matrix, x: &[f32], y: &mut [f32]) {
     assert_eq!(a.rows(), x.len());
     assert_eq!(a.cols(), y.len());
@@ -122,6 +127,7 @@ pub fn matvec_t(a: &Matrix, x: &[f32]) -> Vec<f32> {
 }
 
 /// Rank-1 update `A += alpha * u vᵀ`.
+// audit: hot-path
 pub fn ger(a: &mut Matrix, alpha: f32, u: &[f32], v: &[f32]) {
     assert_eq!(a.rows(), u.len());
     assert_eq!(a.cols(), v.len());
@@ -185,6 +191,7 @@ pub fn drelu(x: f32) -> f32 {
 // ---------------------------------------------------------------------------
 
 /// Numerically-stable log-softmax in place.
+// audit: hot-path
 pub fn log_softmax(logits: &mut [f32]) {
     let maxv = logits.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
     let mut sum = 0.0f32;

@@ -199,8 +199,10 @@ impl WorkerPool {
             "section wants {participants} participants but the pool has {} workers",
             self.handles.len()
         );
-        // Erase the closure's borrow lifetime; sound because this function
-        // only returns after the completion barrier (see `JobPtr`).
+        // SAFETY: the transmute only erases the closure's borrow lifetime;
+        // sound because this function does not return until the completion
+        // barrier (`remaining == 0`) proves no worker can still dereference
+        // the pointer (see `JobPtr`).
         let job = JobPtr(unsafe {
             std::mem::transmute::<*const SectionFn<'_>, *const SectionFn<'static>>(f)
         });

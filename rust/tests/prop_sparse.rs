@@ -1,6 +1,7 @@
 //! Property tests on the sparsity substrate: pattern algebra invariants,
 //! CSR/ColJacobian numerics, and the SnAp pattern's structural guarantees.
 
+use snap_rtrl::cells::Arch;
 use snap_rtrl::sparse::coljac::ColJacobian;
 use snap_rtrl::sparse::csr::Csr;
 use snap_rtrl::sparse::dynjac::DynJacobian;
@@ -415,6 +416,76 @@ fn prop_coljac_to_dense_round_trips_through_vals() {
         for (a, b) in g1.iter().zip(&g2) {
             if a.to_bits() != b.to_bits() {
                 return Err(format!("restored gradient mismatch: {a} vs {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[derive(Debug)]
+struct CellCase {
+    arch: Arch,
+    k: usize,
+    input: usize,
+    density: f64,
+    seed: u64,
+}
+
+fn gen_cell(rng: &mut Pcg32) -> CellCase {
+    let arch = match rng.below_usize(3) {
+        0 => Arch::Vanilla,
+        1 => Arch::Gru,
+        _ => Arch::Lstm,
+    };
+    CellCase {
+        arch,
+        k: 3 + rng.below_usize(6),
+        input: 1 + rng.below_usize(4),
+        density: 0.2 + 0.8 * rng.uniform() as f64,
+        seed: rng.next_u64(),
+    }
+}
+
+#[test]
+fn prop_dynamics_pattern_is_sound_for_every_cell() {
+    // The SnAp premise (paper §3): `dynamics_pattern()` must cover the true
+    // support of ∂s_next/∂s_prev — a D entry outside the declared pattern
+    // would be silently dropped by every sparse tracker, biasing SnAp/RTRL
+    // without any test failing numerically on dense shapes. Probe the
+    // Jacobian column-by-column with central finite differences over s_prev
+    // at random θ and check that every numerically significant entry is
+    // structural. (The converse — pattern entries that happen to be zero at
+    // this θ — is fine: the pattern is an upper bound on the support.)
+    check("dynamics-pattern-soundness", 14, 25, gen_cell, |c| {
+        let mut rng = Pcg32::seeded(c.seed);
+        let cell = c.arch.build(c.k, c.input, c.density, &mut rng);
+        let theta = cell.init_params(&mut rng);
+        let ss = cell.state_size();
+        let pat = cell.dynamics_pattern();
+        let s_prev: Vec<f32> = (0..ss).map(|_| 0.5 * rng.normal()).collect();
+        let x: Vec<f32> = (0..c.input).map(|_| rng.normal()).collect();
+        let mut cache = cell.make_cache();
+        let eps = 1e-3f32;
+        let mut plus = vec![0.0f32; ss];
+        let mut minus = vec![0.0f32; ss];
+        let mut probe = s_prev.clone();
+        for j in 0..ss {
+            probe[j] = s_prev[j] + eps;
+            cell.forward(&theta, &probe, &x, &mut cache, &mut plus);
+            probe[j] = s_prev[j] - eps;
+            cell.forward(&theta, &probe, &x, &mut cache, &mut minus);
+            probe[j] = s_prev[j];
+            for i in 0..ss {
+                // f32 rounding through the forward pass is ≲1e-7 per value,
+                // so FD noise is ≲5e-5 at eps=1e-3; 1e-3 is a safe margin.
+                let dij = (plus[i] - minus[i]) / (2.0 * eps);
+                if dij.abs() > 1e-3 && !pat.contains(i, j) {
+                    return Err(format!(
+                        "{:?} k={} density={:.2}: ∂s'[{i}]/∂s[{j}] ≈ {dij} \
+                         outside dynamics_pattern()",
+                        c.arch, c.k, c.density
+                    ));
+                }
             }
         }
         Ok(())
