@@ -1,0 +1,133 @@
+//! Serve-path latency bench: per-tick batched-step latency percentiles and
+//! session-step throughput for the session-multiplexed server, across
+//! population sizes that force LRU spill churn.
+//!
+//! Each row drives the same deterministic synthetic schedule as
+//! `repro serve`: submit one lane-width of session ids, tick, record the
+//! batched-step wall time. `resident` is held at a quarter of the
+//! population so every row pays realistic evict/restore traffic.
+//!
+//! `--json PATH` writes the machine-readable rows (the CI `bench-smoke`
+//! job uploads them as `BENCH_serve.json` and `bench-gate` checks
+//! `steps_per_sec` against `rust/benches/baselines/BENCH_serve.json`).
+//!
+//! Run: `cargo bench --bench serve_latency [-- --ticks 50 --json out.json]`
+
+use snap_rtrl::benchutil::{flag_str, flag_usize, write_bench_json, JsonObj};
+use snap_rtrl::cells::Cell;
+use snap_rtrl::grad::Method;
+use snap_rtrl::models::{Embedding, Readout};
+use snap_rtrl::serve::traffic::tick_session_ids;
+use snap_rtrl::serve::{Server, ServeMeta, Session, SessionStore};
+use snap_rtrl::tensor::rng::Pcg32;
+use snap_rtrl::train::{Stepper, TrainConfig};
+use std::time::{Duration, Instant};
+
+fn pct(sorted: &[Duration], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let i = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[i].as_secs_f64() * 1e6
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let k = flag_usize(&args, "--k").unwrap_or(32);
+    let lanes = flag_usize(&args, "--lanes").unwrap_or(8);
+    let ticks = flag_usize(&args, "--ticks").unwrap_or(50) as u64;
+    let json_path = flag_str(&args, "--json");
+    let mut rows: Vec<JsonObj> = Vec::new();
+
+    println!("# serve_latency — session-multiplexed online adaptation (k={k}, {lanes} lanes, {ticks} ticks)\n");
+    println!(
+        "{:<22} {:>10} {:>10} {:>12}",
+        "sessions(resident)", "p50", "p99", "steps/s"
+    );
+
+    let cfg = TrainConfig {
+        method: Method::Snap(1),
+        k,
+        embed_dim: 16,
+        readout_hidden: 32,
+        batch: lanes,
+        workers: 1,
+        seed: 17,
+        ..Default::default()
+    };
+
+    for sessions in [64u64, 256] {
+        let resident = (sessions as usize / 4).max(1);
+        let spill = std::env::temp_dir()
+            .join(format!("snap_serve_bench_{}_{sessions}", std::process::id()));
+        std::fs::remove_dir_all(&spill).ok();
+
+        let mut rng = Pcg32::seeded(cfg.seed);
+        let cell: Box<dyn Cell> = cfg.arch.build(cfg.k, cfg.embed_dim, cfg.density, &mut rng);
+        let embed = Embedding::new(256, cfg.embed_dim, &mut rng);
+        let readout = Readout::new(cell.hidden_size(), cfg.readout_hidden, 256, &mut rng);
+        let stepper = Stepper::new(&cfg, cell.as_ref(), embed, readout, &mut rng);
+        let store = SessionStore::new(cfg.method, cell.as_ref(), &spill, resident).unwrap();
+        let meta = ServeMeta {
+            seed: cfg.seed,
+            k: cfg.k as u64,
+            lanes: lanes as u64,
+            method: cfg.method.name(),
+            arch: cfg.arch.name().into(),
+        };
+        let mut server = Server::new(stepper, store, lanes * 4, meta);
+        for id in 0..sessions {
+            server
+                .admit(
+                    Session::new(cfg.seed, id),
+                    Session::build_algo(cfg.seed, id, cfg.method, cell.as_ref()),
+                )
+                .unwrap();
+        }
+
+        let mut latencies: Vec<Duration> = Vec::with_capacity(ticks as usize);
+        let mut stepped = 0u64;
+        let wall0 = Instant::now();
+        for t in 0..ticks {
+            for id in tick_session_ids(t, lanes, sessions) {
+                server.submit(id).unwrap();
+            }
+            let rep = server.tick().unwrap();
+            stepped += rep.stepped as u64;
+            latencies.push(rep.elapsed);
+        }
+        let wall = wall0.elapsed();
+        latencies.sort_unstable();
+        let p50_us = pct(&latencies, 0.50);
+        let p99_us = pct(&latencies, 0.99);
+        let steps_per_sec = stepped as f64 / wall.as_secs_f64();
+        println!(
+            "{:<22} {:>8.1}µs {:>8.1}µs {:>12.0}",
+            format!("{sessions}({resident})"),
+            p50_us,
+            p99_us,
+            steps_per_sec
+        );
+        rows.push(
+            JsonObj::new()
+                .int("sessions", sessions)
+                .int("lanes", lanes as u64)
+                .int("resident", resident as u64)
+                .num("p50_us", p50_us)
+                .num("p99_us", p99_us)
+                .num("steps_per_sec", steps_per_sec),
+        );
+        std::fs::remove_dir_all(&spill).ok();
+    }
+
+    if let Some(path) = json_path {
+        let meta = JsonObj::new()
+            .str("method", "snap-1")
+            .str("arch", "gru")
+            .int("k", k as u64)
+            .int("lanes", lanes as u64)
+            .int("ticks", ticks);
+        write_bench_json(&path, "serve", &meta, &rows).expect("write bench json");
+        println!("\nwrote {path}");
+    }
+}

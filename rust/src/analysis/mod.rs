@@ -68,7 +68,8 @@ pub struct AuditConfig {
 
 /// Files that must keep their hot-path annotations: the tracking step in
 /// every gradient algorithm, the sparse kernels under it, each cell's
-/// forward/Jacobian refresh, and the readout backward.
+/// forward/Jacobian refresh, the readout backward, and the per-lane session
+/// step the serve runtime drives every tick.
 const REQUIRED_HOT: &[&str] = &[
     "rust/src/cells/gru.rs",
     "rust/src/cells/lstm.rs",
@@ -83,6 +84,7 @@ const REQUIRED_HOT: &[&str] = &[
     "rust/src/sparse/coljac.rs",
     "rust/src/sparse/dynjac.rs",
     "rust/src/tensor/ops.rs",
+    "rust/src/train/stepper.rs",
 ];
 
 impl AuditConfig {

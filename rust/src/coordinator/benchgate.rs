@@ -279,6 +279,8 @@ const MEASUREMENT_KEYS: &[&str] = &[
     "ns_per_step",
     "tracking_flops",
     "tracking_floats",
+    "p50_us",
+    "p99_us",
 ];
 
 /// Metric candidates, in preference order (all higher-is-better).

@@ -175,6 +175,29 @@ Throughput knobs (training results are bitwise identical for any setting):
                   Copy sequences while the workers compute the current one.
                   --prefetch false generates inline at each step boundary.
 
+Serving (session-multiplexed online adaptation):
+  serve    Run the online-adaptation server under a deterministic synthetic
+           traffic driver: thousands of independent stateful sessions stepped
+           in cross-session batches through the shared training stepper, with
+           LRU residency spilling cold sessions to disk and restoring them
+           bitwise.  [--sessions 1000 --resident 128 --lanes 32 --workers 1
+           --ticks 64 --seed 1 --arch gru --method snap-1 --k 32 --lr 1e-3
+           --embed-dim 16 --readout-hidden 32 --queue-cap 4*lanes
+           --spill-dir results/serve_spill --curves-dir DIR
+           --checkpoint PATH --resume PATH --kill-after T --bench-json PATH]
+           Session lifecycle: admit (derived from (seed, id)) -> submit
+           (bounded queue; full => request shed with a named error) -> tick
+           (check out <= --lanes sessions, one shared online weight update) ->
+           LRU evict <-> bitwise restore -> checkpoint/resume.
+           Spill layout: <spill-dir>/session-<id>.bin, one versioned blob per
+           cold session, written atomically. --checkpoint snapshots the whole
+           server (tick counter + shared weights/optimizers + queue + every
+           session blob); --resume rebuilds it and continues bitwise —
+           --kill-after T exercises exactly that mid-traffic (CI serve-smoke).
+           --curves-dir writes one per-session loss-curve CSV per session;
+           --bench-json writes p50/p99 batched-step latency + session-steps/s
+           (BENCH_serve.json, gated by bench-gate).
+
 Runtime commands:
   aot-demo Run the AOT-compiled GRU/SnAp-1 step from the PJRT runtime
   info     Print build/config information

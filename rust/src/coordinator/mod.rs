@@ -26,6 +26,7 @@ pub fn dispatch(args: &Args) -> Result<()> {
         "file-lm" => experiments::run_file_lm(args)?,
         "bench-gate" => benchgate::run_bench_gate(args)?,
         "audit" => crate::analysis::run_audit_cli(args)?,
+        "serve" => crate::serve::run_serve_cli(args)?,
         "aot-demo" => crate::runtime::demo::run_aot_demo(args)?,
         "info" => info(),
         "help" | "--help" | "-h" => println!("{USAGE}"),

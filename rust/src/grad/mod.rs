@@ -115,6 +115,76 @@ pub mod state_tags {
 
 pub(crate) use crate::runtime::serde::check_state_tag;
 
+/// Everything a [`Method`] needs *besides* the cell to instantiate its
+/// algorithm: the per-lane sparsity/stochasticity decisions, captured as
+/// plain data so every construction site (training lanes, the serve
+/// runtime's sessions, cost probes) flows through one factory instead of
+/// duplicating the method→constructor match.
+///
+/// The plan is deliberately tiny: SnAp's premise is that the *pattern* is a
+/// property of the cell (`Cell::dynamics_pattern`), so the only per-instance
+/// degrees of freedom are UORO's private sign-vector RNG stream and RFLO's
+/// leak rate.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SparsityPlan {
+    /// RFLO's leak rate α (the drivers always use 1.0 — pure immediate
+    /// Jacobian — matching the paper's RFLO baseline).
+    pub rflo_leak: f32,
+    /// UORO's private RNG stream as `(state, inc)` parts
+    /// ([`Pcg32::state_parts`]). Ignored by every other method; a restored
+    /// instance overwrites it from the checkpoint blob, so `(0, 1)` is a
+    /// fine placeholder when a `load_state` follows.
+    pub uoro_stream: (u64, u64),
+}
+
+impl Default for SparsityPlan {
+    fn default() -> Self {
+        SparsityPlan { rflo_leak: 1.0, uoro_stream: (0, 1) }
+    }
+}
+
+impl SparsityPlan {
+    /// The drivers' plan for one lane: draw UORO's stream off the lane RNG
+    /// (tag `0x714c`, the historical constant — so plans built here keep
+    /// every existing run bitwise identical), touch the RNG for no other
+    /// method.
+    pub fn for_lane(method: Method, rng: &mut Pcg32) -> SparsityPlan {
+        let uoro_stream = match method {
+            Method::Uoro => rng.split(0x714c).state_parts(),
+            _ => (0, 1),
+        };
+        SparsityPlan { rflo_leak: 1.0, uoro_stream }
+    }
+}
+
+impl dyn GradAlgo {
+    /// The single factory behind all six constructors: instantiate `method`
+    /// for `cell` according to `plan`. Every construction site — the lane
+    /// executor, the serve runtime's sessions, restore-from-blob paths —
+    /// calls this (as `<dyn GradAlgo>::build(..)`) so the method→constructor
+    /// match exists exactly once. The returned box is `Send` (supertrait),
+    /// so one instance per lane/session can be driven from worker threads
+    /// while all of them share `&cell`.
+    pub fn build<'c>(
+        method: Method,
+        cell: &'c dyn Cell,
+        plan: &SparsityPlan,
+    ) -> Box<dyn GradAlgo + 'c> {
+        match method {
+            Method::Bptt | Method::Frozen => Box::new(Bptt::new(cell)),
+            Method::Rtrl => Box::new(Rtrl::new(cell, false)),
+            Method::SparseRtrl => Box::new(Rtrl::new(cell, true)),
+            Method::Snap(n) => Box::new(Snap::new(cell, n)),
+            Method::SnapTopK(b) => Box::new(SnapTopK::new(cell, b)),
+            Method::Uoro => Box::new(Uoro::new(
+                cell,
+                Pcg32::from_parts(plan.uoro_stream.0, plan.uoro_stream.1),
+            )),
+            Method::Rflo => Box::new(Rflo::new(cell, plan.rflo_leak)),
+        }
+    }
+}
+
 /// Which algorithm to build — the coordinator's config surface.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Method {
@@ -170,19 +240,14 @@ impl Method {
         }
     }
 
-    /// Instantiate the algorithm for `cell`. The returned box is `Send`
-    /// (via `GradAlgo`'s supertrait), so one instance per minibatch lane can
-    /// be driven from a worker thread while all lanes share `&cell`.
+    /// Instantiate the algorithm for `cell`: the lane-RNG convenience
+    /// wrapper over the unified factory. Draws a [`SparsityPlan`] off `rng`
+    /// ([`SparsityPlan::for_lane`] — only UORO consumes a draw) and defers
+    /// to [`<dyn GradAlgo>::build`](GradAlgo#method.build), so this is
+    /// bitwise identical to the historical per-method constructors.
     pub fn build<'c>(&self, cell: &'c dyn Cell, rng: &mut Pcg32) -> Box<dyn GradAlgo + 'c> {
-        match *self {
-            Method::Bptt | Method::Frozen => Box::new(Bptt::new(cell)),
-            Method::Rtrl => Box::new(Rtrl::new(cell, false)),
-            Method::SparseRtrl => Box::new(Rtrl::new(cell, true)),
-            Method::Snap(n) => Box::new(Snap::new(cell, n)),
-            Method::SnapTopK(b) => Box::new(SnapTopK::new(cell, b)),
-            Method::Uoro => Box::new(Uoro::new(cell, rng.split(0x714c))),
-            Method::Rflo => Box::new(Rflo::new(cell, 1.0)),
-        }
+        let plan = SparsityPlan::for_lane(*self, rng);
+        <dyn GradAlgo>::build(*self, cell, &plan)
     }
 
     /// Frozen trains the readout only.
@@ -266,6 +331,51 @@ mod tests {
         let mut uoro = Method::Uoro.build(cell.as_ref(), &mut rng);
         let e = uoro.load_state(&mut Reader::new(&blob)).unwrap_err();
         assert!(e.to_string().contains("does not match"), "{e}");
+    }
+
+    #[test]
+    fn factory_and_lane_wrapper_agree_bitwise_for_every_method() {
+        // `Method::build` must be a pure delegation through the unified
+        // `<dyn GradAlgo>::build` factory: same plan ⇒ same instance, same
+        // RNG consumption (one split for UORO, none otherwise).
+        let methods = [
+            Method::Bptt,
+            Method::Frozen,
+            Method::Rtrl,
+            Method::SparseRtrl,
+            Method::Snap(2),
+            Method::SnapTopK(2),
+            Method::Uoro,
+            Method::Rflo,
+        ];
+        for m in methods {
+            let mut rng = Pcg32::seeded(0xfac);
+            let cell = Arch::Gru.build(5, 3, 0.75, &mut rng);
+            let theta = cell.init_params(&mut rng);
+            let p = cell.num_params();
+            let mut rng_a = Pcg32::seeded(42);
+            let mut rng_b = Pcg32::seeded(42);
+            let mut a = m.build(cell.as_ref(), &mut rng_a);
+            let plan = SparsityPlan::for_lane(m, &mut rng_b);
+            let mut b = <dyn GradAlgo>::build(m, cell.as_ref(), &plan);
+            // The wrapper consumed exactly what the plan did.
+            assert_eq!(rng_a.state_parts(), rng_b.state_parts(), "{}", m.name());
+            let mut ga = vec![0.0f32; p];
+            let mut gb = vec![0.0f32; p];
+            for t in 0..3 {
+                let x: Vec<f32> = (0..3).map(|i| ((t * 5 + i) as f32).sin()).collect();
+                let c: Vec<f32> = (0..cell.hidden_size()).map(|i| (i as f32) - 1.5).collect();
+                a.step(&theta, &x);
+                a.inject_loss(&c, &mut ga);
+                a.flush(&theta, &mut ga);
+                b.step(&theta, &x);
+                b.inject_loss(&c, &mut gb);
+                b.flush(&theta, &mut gb);
+            }
+            for (va, vb) in ga.iter().zip(&gb) {
+                assert_eq!(va.to_bits(), vb.to_bits(), "{} diverged", m.name());
+            }
+        }
     }
 
     #[test]

@@ -25,6 +25,9 @@
 //! * [`runtime`] — XLA/PJRT facade for the AOT artifacts produced by
 //!   `python/compile/aot.py` (a graceful stub in offline builds — see
 //!   `runtime::pjrt`).
+//! * [`serve`] — session-multiplexed online-adaptation server (`repro
+//!   serve`): thousands of independent stateful sessions stepped in
+//!   cross-session batches, LRU-spilled to disk, kill/resume bitwise.
 //! * [`testing`] — deterministic property-testing mini-framework (offline
 //!   stand-in for proptest).
 //! * [`errors`] — zero-dependency error plumbing (offline stand-in for
@@ -50,6 +53,7 @@ pub mod grad;
 pub mod models;
 pub mod opt;
 pub mod runtime;
+pub mod serve;
 pub mod sparse;
 pub mod tensor;
 pub mod testing;

@@ -1,0 +1,243 @@
+//! Session-multiplexed online-adaptation runtime (`repro serve`).
+//!
+//! The paper's core claim is that SnAp makes *online* weight updates
+//! practical — updating after every timestep instead of waiting for a BPTT
+//! window. The production shape of that claim is a server adapting many
+//! concurrent user streams at once. This module is that server, built
+//! entirely on the redesigned step-level training API:
+//!
+//! * [`session`] — one stream's state ([`Session`]) and its versioned spill
+//!   blob (a per-session checkpoint; evict/restore is bitwise).
+//! * [`store`] — [`SessionStore`]: thousands of sessions, at most
+//!   `resident_cap` in memory, LRU-spilled to `<spill_dir>/session-<id>.bin`
+//!   and restored on demand. Residency is purely a memory knob.
+//! * [`server`] — [`Server`]: bounded admission queue (full ⇒ the request is
+//!   *shed* with a named error, never blocked), cross-session batches
+//!   stepped through one shared [`Stepper`](crate::train::stepper::Stepper)
+//!   (train and serve share one step implementation), and whole-server
+//!   checkpoints for kill/resume.
+//! * [`traffic`] — the deterministic synthetic workload driver.
+//!
+//! ## Session lifecycle
+//!
+//! admit (fresh, derived from `(seed, id)`) → submit (queue) → tick
+//! (checkout → swap tracking state into a lane → one shared online update →
+//! checkin) → … → LRU evict to spill blob ↔ restore bitwise → server
+//! checkpoint / resume.
+//!
+//! ## Spill directory layout
+//!
+//! `<spill_dir>/session-<id 08>.bin` — one [`SESSION_BLOB_VERSION`]
+//! container per cold session, written atomically (write-then-rename).
+//! Server checkpoints (`--checkpoint`) are a single separate file embedding
+//! every session blob plus the shared training state, so a resumed server
+//! does not need the old spill directory.
+
+pub mod server;
+pub mod session;
+pub mod store;
+pub mod traffic;
+
+pub use server::{Server, ServeMeta, TickReport, SERVER_CHECKPOINT_VERSION};
+pub use session::{decode_session, encode_session, Session, SESSION_BLOB_VERSION};
+pub use store::SessionStore;
+
+use crate::benchutil::{write_bench_json, JsonObj};
+use crate::cells::Arch;
+use crate::coordinator::Args;
+use crate::errors::{Error, Result};
+use crate::grad::Method;
+use crate::models::{Embedding, Readout};
+use crate::tensor::rng::Pcg32;
+use crate::train::config::TrainConfig;
+use crate::train::stepper::Stepper;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+/// `repro serve`: the synthetic-traffic driver. Builds the model and the
+/// session population (or resumes both from `--resume`), then drives
+/// `--ticks` rounds of submit → tick, optionally killing itself mid-traffic
+/// (`--kill-after` + `--checkpoint`) to exercise the chaos path.
+pub fn run_serve_cli(args: &Args) -> Result<()> {
+    let sessions = args.u64_or("sessions", 1000).max(1);
+    let resident = args.usize_or("resident", 128);
+    let lanes = args.usize_or("lanes", 32).max(1);
+    let workers = args.usize_or("workers", 1);
+    let ticks = args.u64_or("ticks", 64);
+    let seed = args.u64_or("seed", 1);
+    let arch_s = args.str_or("arch", "gru");
+    let arch =
+        Arch::parse(&arch_s).ok_or_else(|| Error::msg(format!("unknown --arch '{arch_s}'")))?;
+    let method_s = args.str_or("method", "snap-1");
+    let method = Method::parse(&method_s)
+        .ok_or_else(|| Error::msg(format!("unknown --method '{method_s}'")))?;
+    let k = args.usize_or("k", 32);
+    let lr = args.f32_or("lr", 1e-3);
+    let embed_dim = args.usize_or("embed-dim", 16);
+    let readout_hidden = args.usize_or("readout-hidden", 32);
+    let queue_cap = args.usize_or("queue-cap", lanes.saturating_mul(4));
+    let kill_after = args.u64_or("kill-after", 0);
+    let checkpoint = args.get("checkpoint").map(PathBuf::from);
+    let resume = args.get("resume").map(PathBuf::from);
+    let spill_dir = args
+        .get("spill-dir")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| crate::coordinator::report::results_dir().join("serve_spill"));
+    let curves_dir = args.get("curves-dir").map(PathBuf::from);
+    let bench_json = args.get("bench-json").map(|s| s.to_string());
+    crate::ensure!(
+        kill_after == 0 || checkpoint.is_some(),
+        "--kill-after requires --checkpoint PATH (nowhere to save the killed server)"
+    );
+
+    // The server dogfoods the validating TrainConfig builder: lanes ↦
+    // batch, everything else straight through.
+    let cfg = TrainConfig::builder()
+        .arch(arch)
+        .k(k)
+        .method(method)
+        .lr(lr)
+        .batch(lanes)
+        .workers(workers)
+        .embed_dim(embed_dim)
+        .readout_hidden(readout_hidden)
+        .seed(seed)
+        .build()?;
+
+    let mut rng = Pcg32::seeded(cfg.seed);
+    let cell = cfg.arch.build(cfg.k, cfg.embed_dim, cfg.density, &mut rng);
+    let embed = Embedding::new(256, cfg.embed_dim, &mut rng);
+    let readout = Readout::new(cell.hidden_size(), cfg.readout_hidden, 256, &mut rng);
+    let stepper = Stepper::new(&cfg, cell.as_ref(), embed, readout, &mut rng);
+    let store = SessionStore::new(method, cell.as_ref(), &spill_dir, resident)?;
+    let meta = ServeMeta {
+        seed,
+        k: k as u64,
+        lanes: lanes as u64,
+        method: method.name(),
+        arch: arch.name().into(),
+    };
+
+    let mut server = match &resume {
+        Some(path) => Server::from_checkpoint(stepper, store, queue_cap, meta, path)?,
+        None => {
+            let mut server = Server::new(stepper, store, queue_cap, meta);
+            for id in 0..sessions {
+                server.admit(
+                    Session::new(seed, id),
+                    Session::build_algo(seed, id, method, cell.as_ref()),
+                )?;
+            }
+            server
+        }
+    };
+    // On resume the population comes from the checkpoint; --sessions only
+    // sizes a fresh server.
+    let population = server.store().len() as u64;
+    let start_tick = server.tick_count();
+    crate::ensure!(
+        start_tick < ticks,
+        "checkpoint was taken after tick {start_tick} but this run asks for only {ticks} \
+         ticks; resuming requires --ticks greater than the checkpoint's tick"
+    );
+    println!(
+        "serve: {population} sessions (resident cap {resident}), {lanes} lanes, \
+         method {method_s}, arch {arch_s}, k {k}, queue cap {queue_cap}"
+    );
+
+    let mut latencies: Vec<Duration> = Vec::new();
+    let mut stepped_total = 0u64;
+    let wall0 = Instant::now();
+    for t in start_tick..ticks {
+        for id in traffic::tick_session_ids(t, lanes, population) {
+            server.submit(id)?;
+        }
+        let rep = server.tick()?;
+        stepped_total += rep.stepped as u64;
+        if rep.stepped > 0 {
+            latencies.push(rep.elapsed);
+        }
+        if kill_after > 0 && server.tick_count() >= kill_after {
+            let path = checkpoint.as_ref().expect("--kill-after requires --checkpoint");
+            server.save_checkpoint(path)?;
+            println!(
+                "serve: simulated kill after tick {} — full server state checkpointed to {}",
+                server.tick_count(),
+                path.display()
+            );
+            return Ok(());
+        }
+    }
+    let wall = wall0.elapsed();
+
+    if let Some(path) = &checkpoint {
+        server.save_checkpoint(path)?;
+        println!("serve: end-of-run checkpoint written to {}", path.display());
+    }
+
+    latencies.sort_unstable();
+    let pct = |p: f64| -> f64 {
+        if latencies.is_empty() {
+            return f64::NAN;
+        }
+        let i = ((latencies.len() - 1) as f64 * p).round() as usize;
+        latencies[i].as_secs_f64() * 1e6
+    };
+    let p50_us = pct(0.50);
+    let p99_us = pct(0.99);
+    let steps_per_sec = if wall.as_secs_f64() > 0.0 {
+        stepped_total as f64 / wall.as_secs_f64()
+    } else {
+        f64::NAN
+    };
+    println!(
+        "serve: {} ticks, {stepped_total} session-steps; batched-step latency p50 \
+         {p50_us:.1}µs p99 {p99_us:.1}µs; {steps_per_sec:.0} session-steps/s",
+        ticks - start_tick
+    );
+    println!(
+        "serve: resident {} / {} sessions; spill dir {}",
+        server.store().resident_count(),
+        server.store().len(),
+        spill_dir.display()
+    );
+
+    if let Some(dir) = &curves_dir {
+        std::fs::create_dir_all(dir).map_err(|e| {
+            Error::msg(format!("creating curves directory '{}': {e}", dir.display()))
+        })?;
+        let ids = server.store().ids();
+        for id in ids {
+            let curve = server.session_curve(id)?;
+            let mut out = String::with_capacity(curve.len() * 24 + 16);
+            out.push_str("step,nll_nats\n");
+            for (i, v) in curve.iter().enumerate() {
+                out.push_str(&format!("{i},{v}\n"));
+            }
+            let path = dir.join(format!("session-{id:06}.csv"));
+            std::fs::write(&path, out).map_err(|e| {
+                Error::msg(format!("writing session curve '{}': {e}", path.display()))
+            })?;
+        }
+        println!("serve: per-session loss curves in {}", dir.display());
+    }
+
+    if let Some(path) = &bench_json {
+        let meta_obj = JsonObj::new()
+            .str("method", &method_s)
+            .str("arch", &arch_s)
+            .int("k", k as u64)
+            .int("resident", resident as u64)
+            .int("ticks", ticks);
+        let row = JsonObj::new()
+            .int("sessions", population)
+            .int("lanes", lanes as u64)
+            .num("p50_us", p50_us)
+            .num("p99_us", p99_us)
+            .num("steps_per_sec", steps_per_sec);
+        write_bench_json(path, "serve", &meta_obj, &[row])
+            .map_err(|e| Error::msg(format!("writing bench JSON '{path}': {e}")))?;
+        println!("serve: bench JSON at {path}");
+    }
+    Ok(())
+}

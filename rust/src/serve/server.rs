@@ -1,0 +1,275 @@
+//! The session server: admission queue → cross-session batches → one
+//! shared online weight update per tick.
+//!
+//! [`Server::submit`] enqueues a session id onto a **bounded** admission
+//! queue; when the queue is full the request is *shed* with a named error
+//! (`"admission queue full"`) instead of blocking — backpressure is the
+//! caller's signal to slow down. [`Server::tick`] drains up to one lane-width
+//! of ids, checks those sessions out of the [`SessionStore`], swaps each
+//! session's tracking state into its lane, generates each session's next
+//! byte from its private traffic RNG, and runs one
+//! [`Stepper::step_online`] — a single θ update averaged over the sessions
+//! that stepped. Idle lanes contribute nothing.
+//!
+//! ## Determinism and the chaos guarantee
+//!
+//! Everything that affects θ or a session's curve is a deterministic
+//! function of (config, seed, submit order): group composition follows the
+//! queue, lane order follows the group, traffic bytes come from per-session
+//! RNGs, and the lane-ordered gradient reduction is worker-count
+//! independent. Residency (the LRU spill) never touches any of it.
+//! [`Server::save_checkpoint`] therefore captures the complete server —
+//! tick counter, shared training state, pending queue, and every session
+//! blob — and a server rebuilt by [`Server::from_checkpoint`] continues
+//! **bitwise identically** to one that was never killed (the chaos test in
+//! `rust/tests/serve_sessions.rs` and the CI `serve-smoke` job).
+
+use crate::errors::Result;
+use crate::grad::GradAlgo;
+use crate::runtime::serde::{decode_container, encode_container, Reader, Writer};
+use crate::serve::session::Session;
+use crate::serve::store::{write_atomic, SessionStore};
+use crate::serve::traffic;
+use crate::train::stepper::Stepper;
+use std::collections::VecDeque;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+/// Version of the whole-server checkpoint (tick + shared state + queue +
+/// session blobs). Independent of the training-checkpoint format.
+pub const SERVER_CHECKPOINT_VERSION: u32 = 1;
+
+/// Identity of a server run; embedded in checkpoints so a resume with
+/// mismatched flags is refused by name instead of silently diverging.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeMeta {
+    pub seed: u64,
+    pub k: u64,
+    pub lanes: u64,
+    pub method: String,
+    pub arch: String,
+}
+
+/// What one [`Server::tick`] did.
+#[derive(Clone, Copy, Debug)]
+pub struct TickReport {
+    /// Sessions stepped this tick (0 when the queue was empty).
+    pub stepped: usize,
+    /// Wall time of the batched step (the latency the bench percentiles
+    /// summarise).
+    pub elapsed: Duration,
+}
+
+/// See the module docs.
+pub struct Server<'c> {
+    stepper: Stepper<'c>,
+    store: SessionStore<'c>,
+    queue: VecDeque<u64>,
+    queue_cap: usize,
+    ticks: u64,
+    meta: ServeMeta,
+}
+
+impl<'c> Server<'c> {
+    /// `queue_cap` is clamped to ≥ 1.
+    pub fn new(
+        stepper: Stepper<'c>,
+        store: SessionStore<'c>,
+        queue_cap: usize,
+        meta: ServeMeta,
+    ) -> Server<'c> {
+        Server {
+            stepper,
+            store,
+            queue: VecDeque::new(),
+            queue_cap: queue_cap.max(1),
+            ticks: 0,
+            meta,
+        }
+    }
+
+    pub fn stepper(&self) -> &Stepper<'c> {
+        &self.stepper
+    }
+
+    pub fn store(&self) -> &SessionStore<'c> {
+        &self.store
+    }
+
+    pub fn store_mut(&mut self) -> &mut SessionStore<'c> {
+        &mut self.store
+    }
+
+    pub fn tick_count(&self) -> u64 {
+        self.ticks
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Admit a fresh session into the store (see [`SessionStore::admit`]).
+    pub fn admit(&mut self, session: Session, algo: Box<dyn GradAlgo + 'c>) -> Result<()> {
+        self.store.admit(session, algo)
+    }
+
+    /// Enqueue one step request for `id`. Backpressure: when the bounded
+    /// queue is full the request is shed with a named error instead of
+    /// blocking.
+    pub fn submit(&mut self, id: u64) -> Result<()> {
+        crate::ensure!(
+            self.queue.len() < self.queue_cap,
+            "admission queue full: {} requests pending (cap {}); session {} shed — drain \
+             with tick() or raise --queue-cap",
+            self.queue.len(),
+            self.queue_cap,
+            id
+        );
+        self.queue.push_back(id);
+        Ok(())
+    }
+
+    /// Drain up to one lane-width of requests and step them as one
+    /// cross-session batch (one shared θ update). Ticks with an empty queue
+    /// are counted but step nothing.
+    pub fn tick(&mut self) -> Result<TickReport> {
+        let lanes = self.stepper.lanes();
+        let mut group: Vec<(Session, Box<dyn GradAlgo + 'c>)> = Vec::with_capacity(lanes);
+        while group.len() < lanes {
+            let Some(id) = self.queue.pop_front() else { break };
+            group.push(self.store.take(id)?);
+        }
+        if group.is_empty() {
+            self.ticks += 1;
+            return Ok(TickReport { stepped: 0, elapsed: Duration::ZERO });
+        }
+        let mut tokens: Vec<Option<(u8, u8)>> = vec![None; lanes];
+        for (i, (session, algo)) in group.iter_mut().enumerate() {
+            let x = session.prev;
+            let y = traffic::next_byte(session);
+            tokens[i] = Some((x, y));
+            self.stepper.swap_lane_algo(i, algo);
+        }
+        let mut nll = vec![0.0f64; lanes];
+        let t0 = Instant::now();
+        self.stepper.step_online(&tokens, &mut nll);
+        let elapsed = t0.elapsed();
+        let stepped = group.len();
+        for (i, (mut session, mut algo)) in group.into_iter().enumerate() {
+            self.stepper.swap_lane_algo(i, &mut algo);
+            let (_, y) = tokens[i].expect("active lane has a token");
+            session.prev = y;
+            session.steps += 1;
+            session.curve.push(nll[i]);
+            self.store.put_back(session, algo)?;
+        }
+        self.ticks += 1;
+        Ok(TickReport { stepped, elapsed })
+    }
+
+    /// A session's full loss curve (nats per step). Checks the session out
+    /// and back in, so it works for resident and spilled sessions alike.
+    pub fn session_curve(&mut self, id: u64) -> Result<Vec<f64>> {
+        let (session, algo) = self.store.take(id)?;
+        let curve = session.curve.clone();
+        self.store.put_back(session, algo)?;
+        Ok(curve)
+    }
+
+    /// Snapshot the complete server — tick counter, shared training state,
+    /// pending queue, every session blob — atomically to `path`. Read-only
+    /// (no RNG draws, no state changes), so checkpointing never perturbs
+    /// the run.
+    pub fn save_checkpoint(&self, path: &Path) -> Result<()> {
+        let mut w = Writer::new();
+        w.put_u64(self.ticks);
+        w.put_u64(self.meta.seed);
+        w.put_u64(self.meta.k);
+        w.put_u64(self.meta.lanes);
+        w.put_str(&self.meta.method);
+        w.put_str(&self.meta.arch);
+        self.stepper.save_shared(&mut w);
+        w.put_u64(self.queue.len() as u64);
+        for &id in &self.queue {
+            w.put_u64(id);
+        }
+        let ids = self.store.ids();
+        w.put_u64(ids.len() as u64);
+        for id in ids {
+            w.put_u64(id);
+            w.put_bytes(&self.store.session_blob(id)?);
+        }
+        let bytes = encode_container(SERVER_CHECKPOINT_VERSION, &w.into_bytes());
+        write_atomic(path, &bytes)
+            .map_err(|e| e.context(format!("writing server checkpoint '{}'", path.display())))
+    }
+
+    /// Rebuild a server from a [`save_checkpoint`](Self::save_checkpoint)
+    /// file. `stepper` and `store` must be freshly built from the same
+    /// config (the embedded [`ServeMeta`] is verified field by field);
+    /// every session is re-admitted spilled — residency rebuilds lazily and
+    /// never affects results.
+    pub fn from_checkpoint(
+        mut stepper: Stepper<'c>,
+        mut store: SessionStore<'c>,
+        queue_cap: usize,
+        meta: ServeMeta,
+        path: &Path,
+    ) -> Result<Server<'c>> {
+        crate::ensure!(
+            store.is_empty(),
+            "from_checkpoint needs an empty session store (got {} sessions)",
+            store.len()
+        );
+        let bytes = std::fs::read(path).map_err(|e| {
+            crate::errors::Error::msg(format!(
+                "reading server checkpoint '{}': {e}",
+                path.display()
+            ))
+        })?;
+        let payload = decode_container(&bytes, SERVER_CHECKPOINT_VERSION)
+            .map_err(|e| e.context(format!("decoding server checkpoint '{}'", path.display())))?;
+        let mut r = Reader::new(payload);
+        let ticks = r.get_u64()?;
+        let saved = ServeMeta {
+            seed: r.get_u64()?,
+            k: r.get_u64()?,
+            lanes: r.get_u64()?,
+            method: r.get_str()?,
+            arch: r.get_str()?,
+        };
+        crate::ensure!(
+            saved == meta,
+            "serve checkpoint '{}' was written by a different configuration \
+             (checkpoint: seed={} k={} lanes={} method={} arch={}; \
+             this run: seed={} k={} lanes={} method={} arch={})",
+            path.display(),
+            saved.seed,
+            saved.k,
+            saved.lanes,
+            saved.method,
+            saved.arch,
+            meta.seed,
+            meta.k,
+            meta.lanes,
+            meta.method,
+            meta.arch
+        );
+        stepper
+            .load_shared(&mut r)
+            .map_err(|e| e.context(format!("restoring server checkpoint '{}'", path.display())))?;
+        let qn = r.get_u64()? as usize;
+        let mut queue = VecDeque::with_capacity(qn);
+        for _ in 0..qn {
+            queue.push_back(r.get_u64()?);
+        }
+        let n = r.get_u64()? as usize;
+        for _ in 0..n {
+            let id = r.get_u64()?;
+            let blob = r.get_bytes()?;
+            store.admit_blob(id, &blob)?;
+        }
+        r.expect_end()?;
+        Ok(Server { stepper, store, queue, queue_cap: queue_cap.max(1), ticks, meta })
+    }
+}

@@ -1,0 +1,179 @@
+//! One online-adaptation session and its on-disk blob format.
+//!
+//! A session is everything one user stream owns: its identity, its private
+//! traffic RNG, the last byte it saw, its step count and per-step loss
+//! curve, plus (held next to it by the [`SessionStore`](super::store)) the
+//! gradient algorithm carrying the stream's hidden state and tracking
+//! state. Evicting a session serialises all of that into one small
+//! versioned blob — a per-session checkpoint reusing the `runtime::serde`
+//! container (magic + version + length + checksum) — and restoring it is
+//! **bitwise**: the restored session continues exactly the stream it would
+//! have produced resident (proven per method in
+//! `rust/tests/serve_sessions.rs`).
+
+use crate::cells::Cell;
+use crate::errors::Result;
+use crate::grad::{GradAlgo, Method, SparsityPlan};
+use crate::runtime::serde::{decode_container, encode_container, Reader, Writer};
+use crate::tensor::rng::Pcg32;
+
+/// Version of the per-session spill blob. Independent of
+/// [`CHECKPOINT_VERSION`](crate::train::checkpoint::CHECKPOINT_VERSION):
+/// session blobs are a serve-runtime artifact, not a training checkpoint.
+pub const SESSION_BLOB_VERSION: u32 = 1;
+
+/// The driver-visible state of one stream (the tracking state lives in the
+/// companion [`GradAlgo`] box; see the module docs).
+#[derive(Clone, Debug)]
+pub struct Session {
+    pub id: u64,
+    /// Private traffic stream: the next byte of this session's synthetic
+    /// workload is drawn here *at step time*, so replays and restores see
+    /// identical traffic regardless of admission or eviction order.
+    pub rng: Pcg32,
+    /// Last input byte this session consumed (the next step's input).
+    pub prev: u8,
+    /// Online steps taken so far.
+    pub steps: u64,
+    /// Per-step loss (nats), appended every stepped tick — the serve
+    /// counterpart of the training loss curve.
+    pub curve: Vec<f64>,
+}
+
+impl Session {
+    /// Deterministic fresh session: every per-session stream is derived
+    /// from `(seed, id)` alone — independent of admission order, thread
+    /// timing, or any other session — so a server rebuilt from the same
+    /// seed recreates identical streams.
+    pub fn new(seed: u64, id: u64) -> Session {
+        Session {
+            id,
+            rng: Pcg32::new(seed ^ 0x5e55_104e, id),
+            prev: b'a' + (id % 26) as u8,
+            steps: 0,
+            curve: Vec::new(),
+        }
+    }
+
+    /// Deterministic fresh tracking state for this session (same
+    /// `(seed, id)`-only derivation; the UORO perturbation stream gets its
+    /// own split so methods never share draws).
+    pub fn build_algo<'c>(
+        seed: u64,
+        id: u64,
+        method: Method,
+        cell: &'c dyn Cell,
+    ) -> Box<dyn GradAlgo + 'c> {
+        let mut rng = Pcg32::new(seed ^ 0xa160_5eed, id);
+        let plan = SparsityPlan::for_lane(method, &mut rng);
+        <dyn GradAlgo>::build(method, cell, &plan)
+    }
+}
+
+/// Serialise a session + its tracking state into one self-contained blob.
+pub fn encode_session(session: &Session, algo: &dyn GradAlgo) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.put_u64(session.id);
+    let (state, inc) = session.rng.state_parts();
+    w.put_u64(state);
+    w.put_u64(inc);
+    w.put_u8(session.prev);
+    w.put_u64(session.steps);
+    w.put_u64(session.curve.len() as u64);
+    for &v in &session.curve {
+        w.put_f64(v);
+    }
+    let mut aw = Writer::new();
+    algo.save_state(&mut aw);
+    w.put_bytes(&aw.into_bytes());
+    encode_container(SESSION_BLOB_VERSION, &w.into_bytes())
+}
+
+/// Decode a blob back into a live session. The tracking state is grafted
+/// onto a freshly built algorithm (the blob is self-tagged and carries every
+/// mutable float, including UORO's private RNG), so the restore is bitwise
+/// for all six methods.
+pub fn decode_session<'c>(
+    bytes: &[u8],
+    method: Method,
+    cell: &'c dyn Cell,
+) -> Result<(Session, Box<dyn GradAlgo + 'c>)> {
+    let payload = decode_container(bytes, SESSION_BLOB_VERSION)?;
+    let mut r = Reader::new(payload);
+    let id = r.get_u64()?;
+    let state = r.get_u64()?;
+    let inc = r.get_u64()?;
+    let prev = r.get_u8()?;
+    let steps = r.get_u64()?;
+    let n = r.get_u64()? as usize;
+    let mut curve = Vec::with_capacity(n);
+    for _ in 0..n {
+        curve.push(r.get_f64()?);
+    }
+    let algo_blob = r.get_bytes()?;
+    r.expect_end()?;
+    // The plan only seeds construction-time streams; load_state overwrites
+    // every mutable float, so the default plan restores bitwise.
+    let mut algo = <dyn GradAlgo>::build(method, cell, &SparsityPlan::default());
+    algo.load_state(&mut Reader::new(&algo_blob))
+        .map_err(|e| e.context(format!("restoring session {id} tracking state")))?;
+    Ok((Session { id, rng: Pcg32::from_parts(state, inc), prev, steps, curve }, algo))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_sessions_are_admission_order_independent() {
+        let a = Session::new(7, 42);
+        let b = Session::new(7, 42);
+        assert_eq!(a.rng.state_parts(), b.rng.state_parts());
+        assert_eq!(a.prev, b.prev);
+        let other = Session::new(7, 43);
+        assert_ne!(a.rng.state_parts(), other.rng.state_parts());
+    }
+
+    #[test]
+    fn session_blob_round_trips_bitwise() {
+        let mut rng = Pcg32::seeded(3);
+        let cell = crate::cells::Arch::Gru.build(8, 4, 1.0, &mut rng);
+        for method in [Method::Snap(1), Method::Uoro, Method::Bptt] {
+            let mut session = Session::new(9, 5);
+            let mut algo = Session::build_algo(9, 5, method, cell.as_ref());
+            // Advance so the blob carries non-initial state.
+            let x = vec![0.1f32; 4];
+            let theta = cell.init_params(&mut Pcg32::seeded(4));
+            for _ in 0..3 {
+                algo.step(&theta, &x);
+            }
+            session.steps = 3;
+            session.prev = b'q';
+            session.curve = vec![1.25, 0.5, 0.75];
+            session.rng.next_u32();
+
+            let blob = encode_session(&session, algo.as_ref());
+            let (restored, restored_algo) =
+                decode_session(&blob, method, cell.as_ref()).unwrap();
+            assert_eq!(restored.id, session.id);
+            assert_eq!(restored.rng.state_parts(), session.rng.state_parts());
+            assert_eq!(restored.prev, session.prev);
+            assert_eq!(restored.steps, session.steps);
+            assert_eq!(restored.curve.len(), session.curve.len());
+            let again = encode_session(&restored, restored_algo.as_ref());
+            assert_eq!(blob, again, "{method:?} blob must round-trip byte for byte");
+        }
+    }
+
+    #[test]
+    fn version_bump_is_refused() {
+        let mut rng = Pcg32::seeded(3);
+        let cell = crate::cells::Arch::Gru.build(8, 4, 1.0, &mut rng);
+        let session = Session::new(1, 1);
+        let algo = Session::build_algo(1, 1, Method::Snap(1), cell.as_ref());
+        let mut blob = encode_session(&session, algo.as_ref());
+        blob[8] = blob[8].wrapping_add(1);
+        let e = decode_session(&blob, Method::Snap(1), cell.as_ref()).unwrap_err();
+        assert!(e.to_string().contains("version"), "{e}");
+    }
+}

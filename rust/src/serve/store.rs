@@ -1,0 +1,297 @@
+//! [`SessionStore`]: residency management for thousands of sessions.
+//!
+//! The store tracks every admitted session in one flat table. At most
+//! `resident_cap` sessions are *resident* (live [`Session`] + tracking-state
+//! box in memory); the rest are *spilled* — serialised to
+//! `<spill_dir>/session-<id>.bin` as [`encode_session`] blobs and dropped
+//! from memory. Eviction is least-recently-used on a logical clock bumped
+//! by every checkout/checkin; restoring a spilled session decodes the blob
+//! bitwise, so **residency is purely a memory knob**: θ evolution, loss
+//! curves and traffic are identical for any `resident_cap` (proven in
+//! `rust/tests/serve_sessions.rs`).
+//!
+//! Spill files are written atomically (write-then-rename), so a kill mid-
+//! eviction never leaves a torn blob behind.
+
+use crate::cells::Cell;
+use crate::errors::Result;
+use crate::grad::{GradAlgo, Method};
+use crate::serve::session::{decode_session, encode_session, Session};
+use std::path::{Path, PathBuf};
+
+enum Residency<'c> {
+    Resident(Session, Box<dyn GradAlgo + 'c>),
+    /// Serialised to the spill file; nothing in memory but the table row.
+    Spilled,
+    /// Checked out via [`SessionStore::take`]; must come back through
+    /// [`SessionStore::put_back`] before it can be touched again.
+    CheckedOut,
+}
+
+struct Entry<'c> {
+    id: u64,
+    state: Residency<'c>,
+    last_used: u64,
+}
+
+/// See the module docs.
+pub struct SessionStore<'c> {
+    method: Method,
+    cell: &'c dyn Cell,
+    spill_dir: PathBuf,
+    resident_cap: usize,
+    entries: Vec<Entry<'c>>,
+    clock: u64,
+}
+
+impl<'c> SessionStore<'c> {
+    /// `resident_cap` is clamped to ≥ 1 (the store must be able to hold the
+    /// session currently being stepped).
+    pub fn new(
+        method: Method,
+        cell: &'c dyn Cell,
+        spill_dir: &Path,
+        resident_cap: usize,
+    ) -> Result<SessionStore<'c>> {
+        std::fs::create_dir_all(spill_dir).map_err(|e| {
+            crate::errors::Error::msg(format!(
+                "creating spill directory '{}': {e}",
+                spill_dir.display()
+            ))
+        })?;
+        Ok(SessionStore {
+            method,
+            cell,
+            spill_dir: spill_dir.to_path_buf(),
+            resident_cap: resident_cap.max(1),
+            entries: Vec::new(),
+            clock: 0,
+        })
+    }
+
+    pub fn spill_path(&self, id: u64) -> PathBuf {
+        self.spill_dir.join(format!("session-{id:08}.bin"))
+    }
+
+    /// Total sessions the store knows about (resident + spilled).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Sessions currently held in memory.
+    pub fn resident_count(&self) -> usize {
+        self.entries
+            .iter()
+            .filter(|e| matches!(e.state, Residency::Resident(..) | Residency::CheckedOut))
+            .count()
+    }
+
+    pub fn resident_cap(&self) -> usize {
+        self.resident_cap
+    }
+
+    /// Admitted session ids, in admission order (the deterministic
+    /// iteration order for checkpoints and end-of-run reporting).
+    pub fn ids(&self) -> Vec<u64> {
+        self.entries.iter().map(|e| e.id).collect()
+    }
+
+    fn index_of(&self, id: u64) -> Result<usize> {
+        self.entries
+            .iter()
+            .position(|e| e.id == id)
+            .ok_or_else(|| crate::errors::Error::msg(format!("unknown session id {id}")))
+    }
+
+    /// Admit a new live session. Fails on a duplicate id. May spill the
+    /// least-recently-used resident session to honour the cap.
+    pub fn admit(&mut self, session: Session, algo: Box<dyn GradAlgo + 'c>) -> Result<()> {
+        crate::ensure!(
+            self.index_of(session.id).is_err(),
+            "session id {} is already admitted",
+            session.id
+        );
+        self.clock += 1;
+        self.entries.push(Entry {
+            id: session.id,
+            state: Residency::Resident(session, algo),
+            last_used: self.clock,
+        });
+        self.enforce_cap()
+    }
+
+    /// Admit a session directly from its serialised blob, leaving it
+    /// spilled (no decode): how a server checkpoint repopulates the store.
+    pub fn admit_blob(&mut self, id: u64, blob: &[u8]) -> Result<()> {
+        crate::ensure!(self.index_of(id).is_err(), "session id {id} is already admitted");
+        write_atomic(&self.spill_path(id), blob)?;
+        self.clock += 1;
+        self.entries.push(Entry { id, state: Residency::Spilled, last_used: self.clock });
+        Ok(())
+    }
+
+    /// Check a session out for stepping, restoring it from the spill file
+    /// if it is cold. The entry stays counted against the resident cap
+    /// until [`put_back`](Self::put_back).
+    pub fn take(&mut self, id: u64) -> Result<(Session, Box<dyn GradAlgo + 'c>)> {
+        let i = self.index_of(id)?;
+        self.clock += 1;
+        self.entries[i].last_used = self.clock;
+        match std::mem::replace(&mut self.entries[i].state, Residency::CheckedOut) {
+            Residency::Resident(session, algo) => Ok((session, algo)),
+            Residency::Spilled => {
+                let path = self.spill_path(id);
+                let bytes = std::fs::read(&path).map_err(|e| {
+                    crate::errors::Error::msg(format!(
+                        "reading spilled session '{}': {e}",
+                        path.display()
+                    ))
+                })?;
+                let (session, algo) = decode_session(&bytes, self.method, self.cell)
+                    .map_err(|e| {
+                        e.context(format!("restoring spilled session '{}'", path.display()))
+                    })?;
+                crate::ensure!(
+                    session.id == id,
+                    "spill file '{}' holds session {} (expected {id})",
+                    path.display(),
+                    session.id
+                );
+                Ok((session, algo))
+            }
+            Residency::CheckedOut => {
+                crate::bail!("session {id} is already checked out")
+            }
+        }
+    }
+
+    /// Return a checked-out session; may spill an LRU victim to honour the
+    /// cap.
+    pub fn put_back(&mut self, session: Session, algo: Box<dyn GradAlgo + 'c>) -> Result<()> {
+        let i = self.index_of(session.id)?;
+        crate::ensure!(
+            matches!(self.entries[i].state, Residency::CheckedOut),
+            "session {} was not checked out",
+            session.id
+        );
+        self.clock += 1;
+        self.entries[i].last_used = self.clock;
+        self.entries[i].state = Residency::Resident(session, algo);
+        self.enforce_cap()
+    }
+
+    /// The session's current blob, without changing its residency:
+    /// encode in place when resident, read the spill file when cold.
+    /// Checked-out sessions cannot be snapshotted — put them back first.
+    pub fn session_blob(&self, id: u64) -> Result<Vec<u8>> {
+        let i = self.index_of(id)?;
+        match &self.entries[i].state {
+            Residency::Resident(session, algo) => Ok(encode_session(session, algo.as_ref())),
+            Residency::Spilled => {
+                let path = self.spill_path(id);
+                std::fs::read(&path).map_err(|e| {
+                    crate::errors::Error::msg(format!(
+                        "reading spilled session '{}': {e}",
+                        path.display()
+                    ))
+                })
+            }
+            Residency::CheckedOut => {
+                crate::bail!("session {id} is checked out; cannot snapshot it")
+            }
+        }
+    }
+
+    /// Spill LRU residents until the cap holds. Checked-out sessions are
+    /// pinned (they are in the middle of a step).
+    fn enforce_cap(&mut self) -> Result<()> {
+        while self.resident_count() > self.resident_cap {
+            let victim = self
+                .entries
+                .iter()
+                .enumerate()
+                .filter(|(_, e)| matches!(e.state, Residency::Resident(..)))
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(i, _)| i);
+            let Some(i) = victim else {
+                // Everything over the cap is checked out; nothing evictable.
+                return Ok(());
+            };
+            let Residency::Resident(session, algo) =
+                std::mem::replace(&mut self.entries[i].state, Residency::Spilled)
+            else {
+                unreachable!("victim filter selects residents only");
+            };
+            let blob = encode_session(&session, algo.as_ref());
+            write_atomic(&self.spill_path(session.id), &blob)?;
+        }
+        Ok(())
+    }
+}
+
+/// Write-then-rename, same discipline as `train::checkpoint`.
+pub(crate) fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, bytes)
+        .and_then(|()| std::fs::rename(&tmp, path))
+        .map_err(|e| {
+            crate::errors::Error::msg(format!("writing spill file '{}': {e}", path.display()))
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::rng::Pcg32;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("snap_rtrl_store_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        d
+    }
+
+    #[test]
+    fn lru_spill_keeps_the_cap_and_restores_the_cold_session() {
+        let mut rng = Pcg32::seeded(2);
+        let cell = crate::cells::Arch::Gru.build(8, 4, 1.0, &mut rng);
+        let dir = tmp("lru");
+        let mut store = SessionStore::new(Method::Snap(1), cell.as_ref(), &dir, 2).unwrap();
+        for id in 0..5u64 {
+            let s = Session::new(1, id);
+            let a = Session::build_algo(1, id, Method::Snap(1), cell.as_ref());
+            store.admit(s, a).unwrap();
+        }
+        assert_eq!(store.len(), 5);
+        assert_eq!(store.resident_count(), 2);
+        // Session 0 was evicted first; its spill file exists and restores.
+        assert!(store.spill_path(0).is_file());
+        let (s0, a0) = store.take(0).unwrap();
+        assert_eq!(s0.id, 0);
+        assert_eq!(s0.rng.state_parts(), Session::new(1, 0).rng.state_parts());
+        store.put_back(s0, a0).unwrap();
+        assert_eq!(store.resident_count(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn duplicate_and_unknown_ids_are_named_errors() {
+        let mut rng = Pcg32::seeded(2);
+        let cell = crate::cells::Arch::Gru.build(8, 4, 1.0, &mut rng);
+        let dir = tmp("dups");
+        let mut store = SessionStore::new(Method::Snap(1), cell.as_ref(), &dir, 4).unwrap();
+        let s = Session::new(1, 7);
+        let a = Session::build_algo(1, 7, Method::Snap(1), cell.as_ref());
+        store.admit(s, a).unwrap();
+        let s = Session::new(1, 7);
+        let a = Session::build_algo(1, 7, Method::Snap(1), cell.as_ref());
+        let e = store.admit(s, a).unwrap_err();
+        assert!(e.to_string().contains("already admitted"), "{e}");
+        let e = store.take(99).unwrap_err();
+        assert!(e.to_string().contains("unknown session"), "{e}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,322 @@
+//! Training configuration: the [`TrainConfig`] knob surface shared by the
+//! char-LM and Copy drivers (and, through [`Stepper`](super::stepper),
+//! the serve runtime), plus its validating [`builder`](TrainConfig::builder).
+//!
+//! The struct stays a plain `Clone + Default` value — existing call sites
+//! construct it with struct-update syntax and that keeps working — but the
+//! builder is the recommended front door: it validates knob *combinations*
+//! at construction time (`build()` returns a named `errors` error instead of
+//! letting a contradictory config surface as a mid-run panic or a silently
+//! ignored flag). The fallible drivers run the same validation, so direct
+//! struct construction gets the same named errors at `try_train_*` time.
+
+use crate::cells::Arch;
+use crate::errors::Result;
+use crate::grad::Method;
+use crate::train::executor::SpawnMode;
+use std::path::PathBuf;
+
+/// Configuration shared by both task drivers.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub arch: Arch,
+    pub k: usize,
+    /// weight density d = 1 - sparsity
+    pub density: f64,
+    pub method: Method,
+    pub lr: f32,
+    /// parallel gradient lanes (minibatch size)
+    pub batch: usize,
+    /// char-LM crop length (paper: 128)
+    pub seq_len: usize,
+    /// 0 = update at sequence end (full unroll); 1 = fully online; n = TBPTT window
+    pub truncation: usize,
+    /// number of training sequences (char-LM) / minibatches (Copy)
+    pub steps: usize,
+    pub seed: u64,
+    pub readout_hidden: usize,
+    pub embed_dim: usize,
+    pub log_every: usize,
+    /// optional magnitude-pruning schedule (Table 2)
+    pub prune_to: Option<f64>,
+    pub prune_every: u64,
+    pub prune_end_step: u64,
+    /// worker threads stepping the lanes (0 = all cores, 1 = inline).
+    /// Training results are independent of this value (see the looper module
+    /// docs for the one Copy-online exception).
+    pub workers: usize,
+    /// validation span (bytes) per char-LM evaluation (paper default 4096;
+    /// benches shrink it so measurement is dominated by training).
+    pub eval_span: usize,
+    /// async double-buffered data feeding (`data::feeder`): materialise the
+    /// next minibatch on a prefetch thread while this one computes. Results
+    /// are bitwise identical with it on or off.
+    pub prefetch: bool,
+    /// how parallel sections acquire worker threads: the persistent pool
+    /// (default) or the legacy per-section spawn (benchmark baseline).
+    /// Results are bitwise identical in either mode.
+    pub spawn: SpawnMode,
+    /// snapshot the full training state every N steps (0 = off). Requires
+    /// [`checkpoint_dir`](Self::checkpoint_dir). Checkpointing never touches
+    /// an RNG stream, so a checkpointed run is bitwise identical to an
+    /// uncheckpointed one.
+    pub checkpoint_every: usize,
+    /// where checkpoint files live (`ckpt-step<N>.bin`, written atomically
+    /// via write-then-rename; see `train::checkpoint` for the format).
+    pub checkpoint_dir: Option<PathBuf>,
+    /// bounded retention: keep only the newest K checkpoints (min 1).
+    pub checkpoint_keep: usize,
+    /// resume from this checkpoint file — or, for a directory, from its
+    /// highest-step checkpoint. The run continues bitwise identically to an
+    /// uninterrupted one; the config must match the checkpoint's
+    /// [`ConfigKey`](crate::train::checkpoint::ConfigKey) (method, arch,
+    /// shape, seed, …).
+    pub resume_from: Option<PathBuf>,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            arch: Arch::Gru,
+            k: 32,
+            density: 1.0,
+            method: Method::Snap(1),
+            lr: 1e-3,
+            batch: 1,
+            seq_len: 64,
+            truncation: 0,
+            steps: 200,
+            seed: 1,
+            readout_hidden: 128,
+            embed_dim: 32,
+            log_every: 10,
+            prune_to: None,
+            prune_every: 1000,
+            prune_end_step: u64::MAX,
+            workers: 1,
+            eval_span: 4096,
+            prefetch: true,
+            spawn: SpawnMode::Persistent,
+            checkpoint_every: 0,
+            checkpoint_dir: None,
+            checkpoint_keep: 3,
+            resume_from: None,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Start a builder from the [`Default`] configuration.
+    pub fn builder() -> TrainConfigBuilder {
+        TrainConfigBuilder { cfg: TrainConfig::default() }
+    }
+
+    /// Validate knob combinations. Called by [`TrainConfigBuilder::build`]
+    /// and by the fallible drivers (`try_train_*`), so a contradictory
+    /// config is a named error on every path, not a mid-run surprise.
+    pub fn validate(&self) -> Result<()> {
+        crate::ensure!(self.steps >= 1, "--steps must be >= 1 (a run needs at least one step)");
+        crate::ensure!(self.k >= 1, "--k must be >= 1 (the cell needs at least one unit)");
+        crate::ensure!(self.batch >= 1, "--batch must be >= 1 (one gradient lane minimum)");
+        crate::ensure!(
+            self.seq_len >= 2,
+            "--seq-len must be >= 2 (a char-LM crop needs one byte transition to score)"
+        );
+        crate::ensure!(
+            self.lr.is_finite() && self.lr > 0.0,
+            "--lr must be a positive finite number (got {})",
+            self.lr
+        );
+        crate::ensure!(
+            self.density > 0.0 && self.density <= 1.0,
+            "weight density must be in (0, 1] (got {}); check --sparsity",
+            self.density
+        );
+        if let Some(t) = self.prune_to {
+            crate::ensure!(
+                (0.0..1.0).contains(&t),
+                "--prune-to must be a target sparsity in [0, 1) (got {t})"
+            );
+            crate::ensure!(self.prune_every >= 1, "--prune-every must be >= 1");
+        }
+        crate::ensure!(
+            self.checkpoint_keep >= 1,
+            "--checkpoint-keep must be >= 1 (retention keeps at least the newest snapshot)"
+        );
+        if self.checkpoint_every > 0 {
+            crate::ensure!(
+                self.checkpoint_dir.is_some(),
+                "--checkpoint-every {} requires --checkpoint-dir PATH (no directory to \
+                 write snapshots into)",
+                self.checkpoint_every
+            );
+        } else {
+            crate::ensure!(
+                self.checkpoint_dir.is_none(),
+                "--checkpoint-dir is set but --checkpoint-every is 0; periodic snapshots \
+                 are off, so the directory would silently never be written — set \
+                 --checkpoint-every N or drop the directory"
+            );
+        }
+        if let (Some(resume), Some(dir)) = (&self.resume_from, &self.checkpoint_dir) {
+            // Resuming while writing fresh snapshots is fine as long as one
+            // directory owns the lineage: the resume source must be the
+            // checkpoint dir itself or a file inside it.
+            let inside = resume == dir || resume.parent() == Some(dir.as_path());
+            crate::ensure!(
+                inside,
+                "conflicting checkpoint lineage: resuming from '{}' while writing fresh \
+                 checkpoints to '{}'; point --checkpoint-dir at the resume location (or \
+                 drop one of the flags) so a single directory owns the run's lineage",
+                resume.display(),
+                dir.display()
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Fluent, validating constructor for [`TrainConfig`]: one setter per knob,
+/// starting from [`TrainConfig::default`], with the cross-knob checks run at
+/// [`build`](Self::build) time.
+///
+/// ```
+/// use snap_rtrl::train::TrainConfig;
+/// let cfg = TrainConfig::builder().workers(4).batch(8).steps(50).build().unwrap();
+/// assert_eq!(cfg.workers, 4);
+/// ```
+#[derive(Clone, Debug)]
+pub struct TrainConfigBuilder {
+    cfg: TrainConfig,
+}
+
+macro_rules! setter {
+    ($(#[$doc:meta])* $name:ident: $ty:ty) => {
+        $(#[$doc])*
+        pub fn $name(mut self, v: $ty) -> Self {
+            self.cfg.$name = v;
+            self
+        }
+    };
+}
+
+impl TrainConfigBuilder {
+    setter!(arch: Arch);
+    setter!(k: usize);
+    setter!(density: f64);
+    setter!(method: Method);
+    setter!(lr: f32);
+    setter!(batch: usize);
+    setter!(seq_len: usize);
+    setter!(truncation: usize);
+    setter!(steps: usize);
+    setter!(seed: u64);
+    setter!(readout_hidden: usize);
+    setter!(embed_dim: usize);
+    setter!(log_every: usize);
+    setter!(prune_to: Option<f64>);
+    setter!(prune_every: u64);
+    setter!(prune_end_step: u64);
+    setter!(workers: usize);
+    setter!(eval_span: usize);
+    setter!(prefetch: bool);
+    setter!(spawn: SpawnMode);
+    setter!(checkpoint_every: usize);
+    setter!(checkpoint_dir: Option<PathBuf>);
+    setter!(checkpoint_keep: usize);
+    setter!(resume_from: Option<PathBuf>);
+
+    /// Validate the assembled configuration and hand it over. Contradictory
+    /// knob combinations come back as named errors (see
+    /// [`TrainConfig::validate`]).
+    pub fn build(self) -> Result<TrainConfig> {
+        self.cfg.validate()?;
+        Ok(self.cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_default_matches_default_and_validates() {
+        let built = TrainConfig::builder().build().unwrap();
+        let plain = TrainConfig::default();
+        assert_eq!(built.k, plain.k);
+        assert_eq!(built.steps, plain.steps);
+        assert_eq!(built.batch, plain.batch);
+        assert_eq!(built.method, plain.method);
+        assert_eq!(built.workers, plain.workers);
+    }
+
+    #[test]
+    fn builder_setters_reach_their_fields() {
+        let cfg = TrainConfig::builder()
+            .workers(4)
+            .batch(8)
+            .method(Method::Uoro)
+            .truncation(1)
+            .seed(99)
+            .build()
+            .unwrap();
+        assert_eq!(cfg.workers, 4);
+        assert_eq!(cfg.batch, 8);
+        assert_eq!(cfg.method, Method::Uoro);
+        assert_eq!(cfg.truncation, 1);
+        assert_eq!(cfg.seed, 99);
+    }
+
+    #[test]
+    fn checkpoint_every_without_dir_is_named() {
+        let e = TrainConfig::builder().checkpoint_every(5).build().unwrap_err();
+        assert!(e.to_string().contains("--checkpoint-dir"), "{e}");
+    }
+
+    #[test]
+    fn checkpoint_dir_without_every_is_named() {
+        let e = TrainConfig::builder()
+            .checkpoint_dir(Some(PathBuf::from("ckpts")))
+            .build()
+            .unwrap_err();
+        assert!(e.to_string().contains("--checkpoint-every"), "{e}");
+    }
+
+    #[test]
+    fn resume_into_a_foreign_checkpoint_dir_is_a_lineage_conflict() {
+        let e = TrainConfig::builder()
+            .resume_from(Some(PathBuf::from("old-ckpts")))
+            .checkpoint_every(5)
+            .checkpoint_dir(Some(PathBuf::from("new-ckpts")))
+            .build()
+            .unwrap_err();
+        assert!(e.to_string().contains("lineage"), "{e}");
+        // Same directory (or a file inside it) is legitimate.
+        TrainConfig::builder()
+            .resume_from(Some(PathBuf::from("ckpts")))
+            .checkpoint_every(5)
+            .checkpoint_dir(Some(PathBuf::from("ckpts")))
+            .build()
+            .unwrap();
+        TrainConfig::builder()
+            .resume_from(Some(PathBuf::from("ckpts/ckpt-step0000000010.bin")))
+            .checkpoint_every(5)
+            .checkpoint_dir(Some(PathBuf::from("ckpts")))
+            .build()
+            .unwrap();
+    }
+
+    #[test]
+    fn degenerate_scalars_are_rejected() {
+        assert!(TrainConfig::builder().steps(0).build().is_err());
+        assert!(TrainConfig::builder().batch(0).build().is_err());
+        assert!(TrainConfig::builder().k(0).build().is_err());
+        assert!(TrainConfig::builder().seq_len(1).build().is_err());
+        assert!(TrainConfig::builder().lr(0.0).build().is_err());
+        assert!(TrainConfig::builder().lr(f32::NAN).build().is_err());
+        assert!(TrainConfig::builder().density(0.0).build().is_err());
+        assert!(TrainConfig::builder().density(1.5).build().is_err());
+        assert!(TrainConfig::builder().prune_to(Some(1.0)).build().is_err());
+        assert!(TrainConfig::builder().checkpoint_keep(0).build().is_err());
+    }
+}

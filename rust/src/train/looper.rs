@@ -2,23 +2,33 @@
 //! curriculum (§5.2), both supporting full-unroll and fully-online (T=1)
 //! update schedules with the stale-Jacobian semantics of §2.2.
 //!
+//! The drivers are thin orchestration loops over the step-level engine in
+//! [`train::stepper`](crate::train::stepper): a [`Stepper`] owns θ, the
+//! readout, both optimizers, the lane executor and every lane's tracking
+//! state, and exposes `step(input) -> StepResult` plus snapshot/restore.
+//! This module owns everything *around* the step: data feeding, the
+//! curriculum, evaluation, the loss curve, and checkpoint scheduling. The
+//! session server (`crate::serve`) drives the same `Stepper`, so train and
+//! serve share one step implementation.
+//!
 //! The char-LM driver reads its bytes through [`ByteSource`]
 //! (`data::stream`), so the same code path trains on the in-memory
 //! synthetic corpus, a streamed single file, or WikiText-style shard
 //! directories with bounded resident memory — see [`train_charlm_streams`].
 //!
-//! Both drivers route through the lane-parallel [`LaneExecutor`]
+//! Both drivers route through the lane-parallel
+//! [`LaneExecutor`](crate::train::executor::LaneExecutor)
 //! (`train::executor`): every minibatch lane owns its gradient algorithm,
 //! gradient buffers and RNG stream; θ and the readout are shared read-only
 //! inside a parallel section and updated after an ordered reduction.
 //! Sections run on the executor's persistent worker pool by default
-//! ([`SpawnMode::Persistent`]); data for the *next* minibatch is
-//! materialised by an async double-buffered [`Feeder`] while the current
-//! one computes (`TrainConfig::prefetch`). Worker count, spawn mode and
-//! prefetching are throughput knobs only: results are bitwise identical
-//! for any combination on the char-LM driver and the full-unroll Copy
-//! driver (the regression guarantee tested in
-//! `rust/tests/executor_determinism.rs`).
+//! ([`SpawnMode::Persistent`](crate::train::executor::SpawnMode::Persistent));
+//! data for the *next* minibatch is materialised by an async
+//! double-buffered [`Feeder`] while the current one computes
+//! (`TrainConfig::prefetch`). Worker count, spawn mode and prefetching are
+//! throughput knobs only: results are bitwise identical for any
+//! combination on the char-LM driver and the full-unroll Copy driver (the
+//! regression guarantee tested in `rust/tests/executor_determinism.rs`).
 //!
 //! The one schedule that cannot be parallelized faithfully is Copy with
 //! `truncation > 0` and a single worker: the sequential engine updates θ
@@ -52,114 +62,21 @@
 //!   snapshot: it exists only in the truncated run and must not advance the
 //!   evaluation RNG that the resumed run will continue from.
 
-use crate::cells::{Arch, Cell};
+use crate::cells::Cell;
 use crate::data::copy::{sample_len_at, CopySeq, Curriculum, COPY_CLASSES, COPY_VOCAB};
 use crate::data::corpus::Corpus;
 use crate::data::feeder::Feeder;
 use crate::data::stream::ByteSource;
 use crate::errors::Result;
-use crate::grad::{GradAlgo, Method};
 use crate::models::{Embedding, Readout, ReadoutCache};
-use crate::opt::{Adam, Optimizer};
-use crate::runtime::serde::{Reader, Writer};
 use crate::tensor::rng::Pcg32;
 use crate::train::checkpoint::{
-    read_checkpoint, resolve_resume_path, CheckpointSink, ConfigKey, LaneCheckpoint,
-    TrainCheckpoint,
+    read_checkpoint, resolve_resume_path, CheckpointSink, ConfigKey,
 };
-use crate::train::executor::{LaneExecutor, LaneSlot, SpawnMode};
+use crate::train::config::TrainConfig;
 use crate::train::metrics::{bpc_from_nats, CurvePoint, RunningMean};
-use crate::train::prune::Pruner;
-use std::path::PathBuf;
-use std::sync::{Arc, Mutex};
-
-/// Configuration shared by both task drivers.
-#[derive(Clone, Debug)]
-pub struct TrainConfig {
-    pub arch: Arch,
-    pub k: usize,
-    /// weight density d = 1 - sparsity
-    pub density: f64,
-    pub method: Method,
-    pub lr: f32,
-    /// parallel gradient lanes (minibatch size)
-    pub batch: usize,
-    /// char-LM crop length (paper: 128)
-    pub seq_len: usize,
-    /// 0 = update at sequence end (full unroll); 1 = fully online; n = TBPTT window
-    pub truncation: usize,
-    /// number of training sequences (char-LM) / minibatches (Copy)
-    pub steps: usize,
-    pub seed: u64,
-    pub readout_hidden: usize,
-    pub embed_dim: usize,
-    pub log_every: usize,
-    /// optional magnitude-pruning schedule (Table 2)
-    pub prune_to: Option<f64>,
-    pub prune_every: u64,
-    pub prune_end_step: u64,
-    /// worker threads stepping the lanes (0 = all cores, 1 = inline).
-    /// Training results are independent of this value (see module docs for
-    /// the one Copy-online exception).
-    pub workers: usize,
-    /// validation span (bytes) per char-LM evaluation (paper default 4096;
-    /// benches shrink it so measurement is dominated by training).
-    pub eval_span: usize,
-    /// async double-buffered data feeding (`data::feeder`): materialise the
-    /// next minibatch on a prefetch thread while this one computes. Results
-    /// are bitwise identical with it on or off.
-    pub prefetch: bool,
-    /// how parallel sections acquire worker threads: the persistent pool
-    /// (default) or the legacy per-section spawn (benchmark baseline).
-    /// Results are bitwise identical in either mode.
-    pub spawn: SpawnMode,
-    /// snapshot the full training state every N steps (0 = off). Requires
-    /// [`checkpoint_dir`](Self::checkpoint_dir). Checkpointing never touches
-    /// an RNG stream, so a checkpointed run is bitwise identical to an
-    /// uncheckpointed one.
-    pub checkpoint_every: usize,
-    /// where checkpoint files live (`ckpt-step<N>.bin`, written atomically
-    /// via write-then-rename; see `train::checkpoint` for the format).
-    pub checkpoint_dir: Option<PathBuf>,
-    /// bounded retention: keep only the newest K checkpoints (min 1).
-    pub checkpoint_keep: usize,
-    /// resume from this checkpoint file — or, for a directory, from its
-    /// highest-step checkpoint. The run continues bitwise identically to an
-    /// uninterrupted one; the config must match the checkpoint's
-    /// [`ConfigKey`] (method, arch, shape, seed, …).
-    pub resume_from: Option<PathBuf>,
-}
-
-impl Default for TrainConfig {
-    fn default() -> Self {
-        TrainConfig {
-            arch: Arch::Gru,
-            k: 32,
-            density: 1.0,
-            method: Method::Snap(1),
-            lr: 1e-3,
-            batch: 1,
-            seq_len: 64,
-            truncation: 0,
-            steps: 200,
-            seed: 1,
-            readout_hidden: 128,
-            embed_dim: 32,
-            log_every: 10,
-            prune_to: None,
-            prune_every: 1000,
-            prune_end_step: u64::MAX,
-            workers: 1,
-            eval_span: 4096,
-            prefetch: true,
-            spawn: SpawnMode::Persistent,
-            checkpoint_every: 0,
-            checkpoint_dir: None,
-            checkpoint_keep: 3,
-            resume_from: None,
-        }
-    }
-}
+use crate::train::stepper::{StepInput, Stepper};
+use std::sync::Arc;
 
 /// Result of one training run.
 pub struct TrainResult {
@@ -226,8 +143,8 @@ pub fn try_train_charlm_streams(
     let mut rng = Pcg32::seeded(cfg.seed);
     let cell = cfg.arch.build(cfg.k, cfg.embed_dim, cfg.density, &mut rng);
     let embed = Embedding::new(256, cfg.embed_dim, &mut rng);
-    let mut readout = Readout::new(cell.hidden_size(), cfg.readout_hidden, 256, &mut rng);
-    run_driver(cfg, cell.as_ref(), &embed, &mut readout, &mut rng, Task::CharLm { train, valid })
+    let readout = Readout::new(cell.hidden_size(), cfg.readout_hidden, 256, &mut rng);
+    run_driver(cfg, cell.as_ref(), embed, readout, &mut rng, Task::CharLm { train, valid })
 }
 
 /// Copy task with curriculum (§5.2).
@@ -243,9 +160,8 @@ pub fn try_train_copy(cfg: &TrainConfig) -> Result<TrainResult> {
     let mut rng = Pcg32::seeded(cfg.seed);
     let cell = cfg.arch.build(cfg.k, COPY_VOCAB, cfg.density, &mut rng);
     let embed = Embedding::one_hot(COPY_VOCAB);
-    let mut readout =
-        Readout::new(cell.hidden_size(), cfg.readout_hidden, COPY_CLASSES, &mut rng);
-    run_driver(cfg, cell.as_ref(), &embed, &mut readout, &mut rng, Task::Copy)
+    let readout = Readout::new(cell.hidden_size(), cfg.readout_hidden, COPY_CLASSES, &mut rng);
+    run_driver(cfg, cell.as_ref(), embed, readout, &mut rng, Task::Copy)
 }
 
 enum Task<'a> {
@@ -260,95 +176,16 @@ enum DataFeed<'scope> {
     Copy(Feeder<'scope, usize, Vec<CopySeq>>),
 }
 
-/// One char-LM lane-token: step the cell, read out, backprop the loss into
-/// the lane's buffers. Runs inside a parallel section — touches only `slot`
-/// plus shared read-only state.
-fn lane_step_charlm(
-    slot: &mut LaneSlot<'_>,
-    theta: &[f32],
-    embed: &Embedding,
-    readout: &Readout,
-    crop: &[u8],
-    t: usize,
-    trains_recurrent: bool,
-) {
-    let x = embed.lookup(crop[t] as usize);
-    slot.algo.step(theta, x);
-    readout.forward(slot.algo.hidden(), &mut slot.cache);
-    let (nll, dh) =
-        readout.loss_and_backward(&mut slot.cache, crop[t + 1] as usize, &mut slot.g_ro);
-    if trains_recurrent {
-        slot.algo.inject_loss(dh, &mut slot.g_rec);
-    }
-    slot.nll_sum += nll as f64;
-    slot.nll_n += 1;
-    slot.flops_sum += slot.algo.tracking_flops_per_step() as f64;
-    slot.flops_n += 1;
-    slot.tokens += 1;
-    slot.pending += 1;
-}
-
-/// One Copy-task lane-token (loss only on prediction positions).
-fn lane_step_copy(
-    slot: &mut LaneSlot<'_>,
-    theta: &[f32],
-    embed: &Embedding,
-    readout: &Readout,
-    tok: usize,
-    target: Option<usize>,
-    trains_recurrent: bool,
-) {
-    slot.algo.step(theta, embed.lookup(tok));
-    if let Some(target) = target {
-        readout.forward(slot.algo.hidden(), &mut slot.cache);
-        let (nll, dh) = readout.loss_and_backward(&mut slot.cache, target, &mut slot.g_ro);
-        if trains_recurrent {
-            slot.algo.inject_loss(dh, &mut slot.g_rec);
-        }
-        slot.nll_sum += nll as f64;
-        slot.nll_n += 1;
-    }
-    slot.flops_sum += slot.algo.tracking_flops_per_step() as f64;
-    slot.flops_n += 1;
-    slot.tokens += 1;
-    slot.pending += 1;
-}
-
 fn run_driver(
     cfg: &TrainConfig,
     cell: &dyn Cell,
-    embed: &Embedding,
-    readout: &mut Readout,
+    embed: Embedding,
+    readout: Readout,
     rng: &mut Pcg32,
     task: Task<'_>,
 ) -> Result<TrainResult> {
-    let p = cell.num_params();
-    let mut theta = cell.init_params(rng);
-    let mut exec = LaneExecutor::with_mode(
-        cell, cfg.method, readout, cfg.batch.max(1), cfg.workers, cfg.spawn, rng,
-    );
-    // The feeder reads the *data* streams: clones of the per-lane RNGs taken
-    // right after construction, advanced only by sampling — exactly the
-    // draw sequence the slots produced when they sampled inline, so
-    // prefetching cannot change a single byte of training data. They live
-    // behind a mutex so checkpoints can snapshot them at (quiescent) step
-    // boundaries; the lock is taken once per batch, never per token.
-    let data_streams: Arc<Mutex<Vec<Pcg32>>> =
-        Arc::new(Mutex::new(exec.slots().iter().map(|s| s.rng.clone()).collect()));
-    let mut g_rec = vec![0.0f32; p];
-    let mut g_ro = readout.make_grad();
-    let mut opt_rec = Adam::new(p, cfg.lr);
-    let mut opt_ro = Adam::new(readout.num_params(), cfg.lr);
-    let mut pruner = cfg.prune_to.map(|s| {
-        Pruner::new(
-            cell.param_info(),
-            s,
-            0,
-            cfg.prune_end_step.min(cfg.steps as u64),
-            cfg.prune_every,
-        )
-    });
-    let trains_rec = cfg.method.trains_recurrent();
+    cfg.validate()?;
+    let mut stepper = Stepper::new(cfg, cell, embed, readout, rng);
 
     let (train_bytes, valid_bytes) = match &task {
         Task::CharLm { train, valid } => (train.len_bytes(), valid.len_bytes()),
@@ -397,27 +234,15 @@ fn run_driver(
     let mut start_step = 0usize;
     let mut curve: Vec<CurvePoint> = Vec::new();
     let mut curriculum = Curriculum::new();
-    let mut opt_steps = 0u64;
     let mut last_train_bpc = f64::NAN;
     let mut last_valid_bpc = f64::NAN;
 
     if let Some(resume) = &cfg.resume_from {
         let path = resolve_resume_path(resume)?;
         let ck = read_checkpoint(&path)?;
-        let point = apply_resume(
-            ck,
-            &key,
-            &mut theta,
-            readout,
-            &mut opt_rec,
-            &mut opt_ro,
-            rng,
-            &data_streams,
-            &mut exec,
-            &mut pruner,
-            &mut curriculum,
-        )
-        .map_err(|e| e.context(format!("resuming from checkpoint '{}'", path.display())))?;
+        let point = stepper
+            .load_state(ck, &key, rng, &mut curriculum)
+            .map_err(|e| e.context(format!("resuming from checkpoint '{}'", path.display())))?;
         // A checkpoint at (or past) the requested step count has nothing to
         // resume: skipping the loop would return the pre-courtesy-eval
         // snapshot state as if it were a finished run. Refuse loudly.
@@ -430,7 +255,6 @@ fn run_driver(
             cfg.steps
         );
         start_step = point.start_step;
-        opt_steps = point.opt_steps;
         last_train_bpc = point.last_train_bpc;
         last_valid_bpc = point.last_valid_bpc;
         curve = point.curve;
@@ -443,7 +267,7 @@ fn run_driver(
             Task::CharLm { train, .. } => {
                 let source: &dyn ByteSource = *train;
                 let seq_len = cfg.seq_len;
-                let streams = Arc::clone(&data_streams);
+                let streams = Arc::clone(stepper.data_streams());
                 let generate = move |_spec: ()| -> Vec<Vec<u8>> {
                     let mut streams = streams.lock().unwrap_or_else(|e| e.into_inner());
                     streams
@@ -458,7 +282,7 @@ fn run_driver(
                 })
             }
             Task::Copy => {
-                let streams = Arc::clone(&data_streams);
+                let streams = Arc::clone(stepper.data_streams());
                 // Lane order; the curriculum level is fixed within a
                 // minibatch, so it travels as the batch spec.
                 let generate = move |level: usize| -> Vec<CopySeq> {
@@ -492,12 +316,8 @@ fn run_driver(
             // deferred to after the snapshot (see module docs) — same
             // request order, so the same draws; only overlap timing moves.
             let ckpt_now = sink.as_ref().is_some_and(|s| s.is_due(step));
-            match task {
+            let result = match &task {
                 Task::CharLm { .. } => {
-                    // B independent crops, one per lane, advanced in lockstep
-                    // segments of `truncation` tokens (whole crop when 0); θ
-                    // updates at every segment boundary.
-                    exec.reset_lanes();
                     let DataFeed::CharLm(feeder) = &mut feed else { unreachable!() };
                     let crops = feeder.recv();
                     if !ckpt_now && step + 1 < cfg.steps {
@@ -506,131 +326,20 @@ fn run_driver(
                         // step (compute + evaluation).
                         feeder.request(());
                     }
-                    let seg = if cfg.truncation == 0 { cfg.seq_len } else { cfg.truncation };
-                    let mut t0 = 0usize;
-                    while t0 < cfg.seq_len {
-                        let t1 = (t0 + seg).min(cfg.seq_len);
-                        {
-                            let theta_ref: &[f32] = &theta;
-                            let ro: &Readout = readout;
-                            exec.for_each_lane(|i, slot| {
-                                let crop = &crops[i];
-                                for t in t0..t1 {
-                                    lane_step_charlm(
-                                        slot, theta_ref, embed, ro, crop, t, trains_rec,
-                                    );
-                                }
-                                // Segment end is an update boundary: materialize
-                                // deferred (BPTT) gradients in-lane, in parallel.
-                                slot.algo.flush(theta_ref, &mut slot.g_rec);
-                            });
-                        }
-                        exec.reduce_and_update(
-                            &mut theta, &mut g_rec, readout, &mut g_ro, &mut opt_rec, &mut opt_ro,
-                            &mut pruner, &mut opt_steps, trains_rec,
-                        );
-                        t0 = t1;
-                    }
+                    stepper.step(StepInput::CharLm { crops: &crops })
                 }
                 Task::Copy => {
-                    exec.reset_lanes();
                     let seqs = {
                         let DataFeed::Copy(feeder) = &mut feed else { unreachable!() };
                         feeder.recv()
                     };
-                    if cfg.truncation == 0 {
-                        // Full unroll: lanes are fully independent work items —
-                        // lengths vary, so hand them out by work stealing; one
-                        // shared update at the minibatch boundary.
-                        {
-                            let theta_ref: &[f32] = &theta;
-                            let ro: &Readout = readout;
-                            exec.for_each_lane_stealing(|i, slot| {
-                                let seq = &seqs[i];
-                                for (t, &tok) in seq.inputs.iter().enumerate() {
-                                    lane_step_copy(
-                                        slot, theta_ref, embed, ro, tok, seq.targets[t],
-                                        trains_rec,
-                                    );
-                                }
-                                slot.algo.flush(theta_ref, &mut slot.g_rec);
-                            });
-                        }
-                        exec.reduce_and_update(
-                            &mut theta, &mut g_rec, readout, &mut g_ro, &mut opt_rec, &mut opt_ro,
-                            &mut pruner, &mut opt_steps, trains_rec,
-                        );
-                    } else if exec.workers() <= 1 {
-                        // Legacy fully-online schedule (identical to the
-                        // sequential engine): walk the lanes one after another,
-                        // updating θ every `truncation` lane-tokens.
-                        let mut window = 0usize;
-                        for i in 0..exec.lanes() {
-                            let seq = &seqs[i];
-                            for (t, &tok) in seq.inputs.iter().enumerate() {
-                                lane_step_copy(
-                                    exec.slot_mut(i), &theta, embed, readout, tok, seq.targets[t],
-                                    trains_rec,
-                                );
-                                window += 1;
-                                if window >= cfg.truncation {
-                                    exec.flush_all(&theta);
-                                    exec.reduce_and_update(
-                                        &mut theta, &mut g_rec, readout, &mut g_ro, &mut opt_rec,
-                                        &mut opt_ro, &mut pruner, &mut opt_steps, trains_rec,
-                                    );
-                                    window = 0;
-                                }
-                            }
-                        }
-                        if exec.total_pending() > 0 {
-                            exec.flush_all(&theta);
-                            exec.reduce_and_update(
-                                &mut theta, &mut g_rec, readout, &mut g_ro, &mut opt_rec,
-                                &mut opt_ro, &mut pruner, &mut opt_steps, trains_rec,
-                            );
-                        }
-                    } else {
-                        // Batched-online: all still-active lanes advance in
-                        // lockstep; θ updates every `truncation` global
-                        // timesteps with gradients averaged across the lanes
-                        // that contributed. Deterministic for any worker count.
-                        let max_len = seqs.iter().map(|s| s.inputs.len()).max().unwrap_or(0);
-                        let mut t0 = 0usize;
-                        while t0 < max_len {
-                            let t1 = (t0 + cfg.truncation).min(max_len);
-                            {
-                                let theta_ref: &[f32] = &theta;
-                                let ro: &Readout = readout;
-                                exec.for_each_lane(|i, slot| {
-                                    let seq = &seqs[i];
-                                    let hi = t1.min(seq.inputs.len());
-                                    for t in t0..hi {
-                                        lane_step_copy(
-                                            slot, theta_ref, embed, ro, seq.inputs[t],
-                                            seq.targets[t], trains_rec,
-                                        );
-                                    }
-                                    if t0 < hi {
-                                        slot.algo.flush(theta_ref, &mut slot.g_rec);
-                                    }
-                                });
-                            }
-                            exec.reduce_and_update(
-                                &mut theta, &mut g_rec, readout, &mut g_ro, &mut opt_rec,
-                                &mut opt_ro, &mut pruner, &mut opt_steps, trains_rec,
-                            );
-                            t0 = t1;
-                        }
-                    }
+                    stepper.step(StepInput::Copy { seqs: &seqs })
                 }
-            }
-
-            // Minibatch loss: ordered per-lane drain, so the mean (and the
-            // curriculum decisions it feeds) is worker-count independent.
-            let (nll_sum, nll_n) = exec.drain_step_nll();
-            let step_mean_nats = if nll_n == 0 { f64::NAN } else { nll_sum / nll_n as f64 };
-            last_train_bpc = bpc_from_nats(step_mean_nats);
+            };
+            // Minibatch loss: ordered per-lane drain inside the stepper, so
+            // the mean (and the curriculum decisions it feeds) is
+            // worker-count independent.
+            last_train_bpc = result.train_bpc;
             if let Task::Copy = task {
                 curriculum.report_minibatch_bpc(last_train_bpc as f32);
                 // The next minibatch's lengths depend on the level we just
@@ -650,29 +359,21 @@ fn run_driver(
             let log_now = step % cfg.log_every.max(1) == 0;
             if log_now {
                 eval_and_push(
-                    &task, cell, &theta, embed, readout, rng, cfg.eval_span, step,
-                    exec.tokens_seen(), curriculum.level(), last_train_bpc,
-                    &mut last_valid_bpc, &mut curve,
+                    &task, cell, stepper.theta(), stepper.embed(), stepper.readout(), rng,
+                    cfg.eval_span, step, stepper.tokens_seen(), curriculum.level(),
+                    last_train_bpc, &mut last_valid_bpc, &mut curve,
                 );
             }
 
             if ckpt_now {
                 let sink = sink.as_ref().expect("ckpt_now implies a sink");
-                let ck = snapshot_checkpoint(
+                let ck = stepper.save_state(
                     &key,
                     (step + 1) as u64,
-                    opt_steps,
                     curriculum.level() as u64,
                     last_train_bpc,
                     last_valid_bpc,
-                    &theta,
-                    readout,
-                    &opt_rec,
-                    &opt_ro,
                     rng,
-                    &data_streams,
-                    &exec,
-                    &pruner,
                     &curve,
                 );
                 sink.write(&ck)?;
@@ -687,9 +388,9 @@ fn run_driver(
 
             if step + 1 == cfg.steps && !log_now {
                 eval_and_push(
-                    &task, cell, &theta, embed, readout, rng, cfg.eval_span, step,
-                    exec.tokens_seen(), curriculum.level(), last_train_bpc,
-                    &mut last_valid_bpc, &mut curve,
+                    &task, cell, stepper.theta(), stepper.embed(), stepper.readout(), rng,
+                    cfg.eval_span, step, stepper.tokens_seen(), curriculum.level(),
+                    last_train_bpc, &mut last_valid_bpc, &mut curve,
                 );
             }
         }
@@ -698,11 +399,11 @@ fn run_driver(
             curve,
             final_train_bpc: last_train_bpc,
             final_valid_bpc: last_valid_bpc,
-            tracking_flops_per_step: exec.tracking_flops_mean(),
-            tracking_memory_floats: exec.tracking_memory_floats(),
-            tokens_seen: exec.tokens_seen(),
+            tracking_flops_per_step: stepper.tracking_flops_mean(),
+            tracking_memory_floats: stepper.tracking_memory_floats(),
+            tokens_seen: stepper.tokens_seen(),
             final_level: curriculum.level(),
-            final_theta: theta.clone(),
+            final_theta: stepper.theta().to_vec(),
         })
     })
 }
@@ -749,172 +450,6 @@ fn eval_and_push(
     });
 }
 
-/// Assemble a [`TrainCheckpoint`] from the driver's live state. Read-only:
-/// snapshotting draws from no RNG and mutates nothing, so a checkpointed
-/// run is bitwise identical to an uncheckpointed one.
-#[allow(clippy::too_many_arguments)]
-fn snapshot_checkpoint(
-    key: &ConfigKey,
-    next_step: u64,
-    opt_steps: u64,
-    curriculum_level: u64,
-    last_train_bpc: f64,
-    last_valid_bpc: f64,
-    theta: &[f32],
-    readout: &Readout,
-    opt_rec: &dyn Optimizer,
-    opt_ro: &dyn Optimizer,
-    rng: &Pcg32,
-    data_streams: &Mutex<Vec<Pcg32>>,
-    exec: &LaneExecutor<'_>,
-    pruner: &Option<Pruner>,
-    curve: &[CurvePoint],
-) -> TrainCheckpoint {
-    let mut w = Writer::new();
-    opt_rec.save_state(&mut w);
-    let opt_rec_blob = w.into_bytes();
-    let mut w = Writer::new();
-    opt_ro.save_state(&mut w);
-    let opt_ro_blob = w.into_bytes();
-    // The data streams are quiescent here: the driver deferred the next
-    // prefetch request, so the lock is uncontended and the states are
-    // exactly "after the batch this step consumed".
-    let data_rngs: Vec<(u64, u64)> = data_streams
-        .lock()
-        .unwrap_or_else(|e| e.into_inner())
-        .iter()
-        .map(|r| r.state_parts())
-        .collect();
-    let lanes: Vec<LaneCheckpoint> = exec
-        .slots()
-        .iter()
-        .map(|s| {
-            let mut w = Writer::new();
-            s.algo.save_state(&mut w);
-            LaneCheckpoint {
-                rng: s.rng.state_parts(),
-                tokens: s.tokens,
-                flops_sum: s.flops_sum,
-                flops_n: s.flops_n,
-                algo: w.into_bytes(),
-            }
-        })
-        .collect();
-    TrainCheckpoint {
-        key: key.clone(),
-        next_step,
-        opt_steps,
-        curriculum_level,
-        last_train_bpc,
-        last_valid_bpc,
-        theta: theta.to_vec(),
-        readout: readout.params_flat(),
-        opt_rec: opt_rec_blob,
-        opt_ro: opt_ro_blob,
-        driver_rng: rng.state_parts(),
-        data_rngs,
-        lanes,
-        pruner_keep: pruner.as_ref().map(|p| p.keep_mask().to_vec()),
-        curve: curve.to_vec(),
-    }
-}
-
-/// Where a resumed run picks the training loop back up.
-struct ResumePoint {
-    start_step: usize,
-    opt_steps: u64,
-    last_train_bpc: f64,
-    last_valid_bpc: f64,
-    curve: Vec<CurvePoint>,
-}
-
-/// Graft a [`TrainCheckpoint`] onto freshly (re)built training state. The
-/// rebuild itself is deterministic from the config (cell masks, embedding,
-/// shapes), the key check proves the config matches, and every restored
-/// piece is length/structure-verified — after this the next step continues
-/// bit for bit.
-#[allow(clippy::too_many_arguments)]
-fn apply_resume(
-    ck: TrainCheckpoint,
-    key: &ConfigKey,
-    theta: &mut [f32],
-    readout: &mut Readout,
-    opt_rec: &mut dyn Optimizer,
-    opt_ro: &mut dyn Optimizer,
-    rng: &mut Pcg32,
-    data_streams: &Mutex<Vec<Pcg32>>,
-    exec: &mut LaneExecutor<'_>,
-    pruner: &mut Option<Pruner>,
-    curriculum: &mut Curriculum,
-) -> Result<ResumePoint> {
-    ck.key.ensure_matches(key)?;
-    crate::ensure!(
-        ck.theta.len() == theta.len(),
-        "θ length mismatch: checkpoint {} vs run {}",
-        ck.theta.len(),
-        theta.len()
-    );
-    theta.copy_from_slice(&ck.theta);
-    crate::ensure!(
-        ck.readout.len() == readout.num_params(),
-        "readout length mismatch: checkpoint {} vs run {}",
-        ck.readout.len(),
-        readout.num_params()
-    );
-    readout.set_params(&ck.readout);
-    opt_rec
-        .load_state(&mut Reader::new(&ck.opt_rec))
-        .map_err(|e| e.context("restoring the recurrent optimizer"))?;
-    opt_ro
-        .load_state(&mut Reader::new(&ck.opt_ro))
-        .map_err(|e| e.context("restoring the readout optimizer"))?;
-    *rng = Pcg32::from_parts(ck.driver_rng.0, ck.driver_rng.1);
-    {
-        let mut streams = data_streams.lock().unwrap_or_else(|e| e.into_inner());
-        crate::ensure!(
-            ck.data_rngs.len() == streams.len(),
-            "data-stream count mismatch: checkpoint {} vs run {} lanes",
-            ck.data_rngs.len(),
-            streams.len()
-        );
-        for (s, &(state, inc)) in streams.iter_mut().zip(&ck.data_rngs) {
-            *s = Pcg32::from_parts(state, inc);
-        }
-    }
-    crate::ensure!(
-        ck.lanes.len() == exec.lanes(),
-        "lane count mismatch: checkpoint {} vs run {}",
-        ck.lanes.len(),
-        exec.lanes()
-    );
-    for (i, (slot, lane)) in exec.slots_mut().iter_mut().zip(&ck.lanes).enumerate() {
-        slot.rng = Pcg32::from_parts(lane.rng.0, lane.rng.1);
-        slot.tokens = lane.tokens;
-        slot.flops_sum = lane.flops_sum;
-        slot.flops_n = lane.flops_n;
-        slot.algo
-            .load_state(&mut Reader::new(&lane.algo))
-            .map_err(|e| e.context(format!("restoring lane {i} tracking state")))?;
-    }
-    match (pruner.as_mut(), &ck.pruner_keep) {
-        (Some(p), Some(keep)) => p.set_keep_mask(keep)?,
-        (None, None) => {}
-        (have, _) => crate::bail!(
-            "pruning configuration mismatch: checkpoint {} a pruner mask, this run {}",
-            if ck.pruner_keep.is_some() { "has" } else { "lacks" },
-            if have.is_some() { "prunes" } else { "does not prune" }
-        ),
-    }
-    curriculum.set_level(ck.curriculum_level as usize);
-    Ok(ResumePoint {
-        start_step: ck.next_step as usize,
-        opt_steps: ck.opt_steps,
-        last_train_bpc: ck.last_train_bpc,
-        last_valid_bpc: ck.last_valid_bpc,
-        curve: ck.curve,
-    })
-}
-
 /// Evaluate char-LM bpc over a contiguous span of the validation source.
 /// Only the scored window (`span + 1` bytes) is materialised, so streaming
 /// shards evaluate with bounded memory. Returns NaN when the source is too
@@ -955,6 +490,9 @@ pub fn evaluate_charlm(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cells::Arch;
+    use crate::grad::Method;
+    use crate::train::executor::SpawnMode;
 
     #[test]
     fn charlm_snap1_learns_something() {

@@ -1,26 +1,31 @@
 //! Training stack: metric accounting, the analytic cost model (Table 1),
 //! magnitude pruning (Table 2), the persistent worker pool, the
-//! lane-parallel execution engine, the checkpoint/resume subsystem, and the
-//! char-LM / Copy-task drivers.
+//! lane-parallel execution engine, the checkpoint/resume subsystem, the
+//! step-level [`Stepper`] engine, and the char-LM / Copy-task drivers built
+//! on top of it.
 
 pub mod checkpoint;
+pub mod config;
 pub mod executor;
 pub mod flops;
 pub mod looper;
 pub mod metrics;
 pub mod pool;
 pub mod prune;
+pub mod stepper;
 
 pub use checkpoint::{
     read_checkpoint, resolve_resume_path, CheckpointSink, ConfigKey, LaneCheckpoint,
     TrainCheckpoint, CHECKPOINT_VERSION,
 };
+pub use config::{TrainConfig, TrainConfigBuilder};
 pub use executor::{LaneExecutor, LaneSlot, SpawnMode};
 pub use flops::{table1_memory, table1_time, CostInputs};
 pub use looper::{
     evaluate_charlm, train_charlm, train_charlm_streams, train_copy, try_train_charlm,
-    try_train_charlm_streams, try_train_copy, TrainConfig, TrainResult,
+    try_train_charlm_streams, try_train_copy, TrainResult,
 };
 pub use metrics::{bpc_from_nats, CurvePoint, Ema, RunningMean};
 pub use pool::WorkerPool;
 pub use prune::Pruner;
+pub use stepper::{ResumePoint, StepInput, StepResult, Stepper};

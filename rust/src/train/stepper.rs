@@ -1,0 +1,756 @@
+//! The step-level training engine: one [`Stepper`] drives everything that
+//! happens *between* data and curve — lane-parallel token stepping, the
+//! ordered gradient reduction, the optimizer updates, pruning, and the
+//! snapshot/restore of the complete mutable training state.
+//!
+//! ## Contract
+//!
+//! Construct → [`step`](Stepper::step) (or
+//! [`step_online`](Stepper::step_online)) → [`save_state`](Stepper::save_state)
+//! / [`load_state`](Stepper::load_state):
+//!
+//! * **Construction** replays the historical driver order exactly — θ is
+//!   initialised from the driver RNG first, then the [`LaneExecutor`] splits
+//!   one lane stream per minibatch lane — so a `Stepper` built from a given
+//!   `(config, rng)` is bitwise identical to the pre-split `looper` driver.
+//! * **`step`** consumes one minibatch ([`StepInput`]) and performs every θ
+//!   update the schedule calls for: char-LM truncation segments, Copy
+//!   full-unroll, the single-worker legacy online walk, or the batched-online
+//!   lockstep schedule. Returns the minibatch loss ([`StepResult`]).
+//! * **`step_online`** is the serve runtime's entry: one token on each
+//!   *active* lane, one shared θ update averaged over the lanes that
+//!   stepped, per-lane losses reported back. Idle lanes contribute nothing
+//!   (their gradient buffers are zero), so cross-**session** batches of any
+//!   occupancy share one code path with training.
+//! * **`save_state`/`load_state`** bridge to [`TrainCheckpoint`]: every lane's
+//!   tracking blob, both optimizers, the data streams and all counters.
+//!   Restores are length/structure-verified and continue bit for bit.
+//!
+//! The training loops (`train::looper`) and the session server
+//! (`crate::serve`) are both thin orchestration over this type: feeders,
+//! curves and checkpoints sit outside; the update semantics live here, once.
+
+use crate::cells::Cell;
+use crate::data::copy::CopySeq;
+use crate::errors::Result;
+use crate::grad::GradAlgo;
+use crate::models::{Embedding, Readout, ReadoutGrad};
+use crate::opt::{Adam, Optimizer};
+use crate::runtime::serde::{Reader, Writer};
+use crate::tensor::rng::Pcg32;
+use crate::train::checkpoint::{ConfigKey, LaneCheckpoint, TrainCheckpoint};
+use crate::train::config::TrainConfig;
+use crate::train::executor::{LaneExecutor, LaneSlot};
+use crate::train::metrics::{bpc_from_nats, CurvePoint};
+use crate::train::prune::Pruner;
+use std::sync::{Arc, Mutex};
+
+/// One minibatch of task data, borrowed from the caller's feeder.
+pub enum StepInput<'a> {
+    /// Char-LM: one crop per lane, each `seq_len` bytes.
+    CharLm { crops: &'a [Vec<u8>] },
+    /// Copy task: one curriculum-sampled sequence per lane.
+    Copy { seqs: &'a [CopySeq] },
+}
+
+/// What one [`Stepper::step`] reports back to the orchestration loop.
+#[derive(Clone, Copy, Debug)]
+pub struct StepResult {
+    /// Mean minibatch loss in bits/char (NaN when no position was scored).
+    pub train_bpc: f64,
+    /// Σ loss nats over the minibatch (ordered per-lane drain).
+    pub nll_sum: f64,
+    /// Scored positions behind `nll_sum`.
+    pub nll_n: u64,
+}
+
+/// Where a [`Stepper::load_state`] restore picks the training loop back up.
+pub struct ResumePoint {
+    pub start_step: usize,
+    pub last_train_bpc: f64,
+    pub last_valid_bpc: f64,
+    pub curve: Vec<CurvePoint>,
+}
+
+/// The step-level training engine. See the module docs for the contract.
+pub struct Stepper<'c> {
+    cell: &'c dyn Cell,
+    embed: Embedding,
+    readout: Readout,
+    theta: Vec<f32>,
+    exec: LaneExecutor<'c>,
+    /// Clones of the per-lane RNGs taken right after construction, advanced
+    /// only by data sampling (the feeder draws from them in lane order).
+    /// Behind a mutex so checkpoints can snapshot them at quiescent step
+    /// boundaries; the lock is taken once per batch, never per token.
+    data_streams: Arc<Mutex<Vec<Pcg32>>>,
+    g_rec: Vec<f32>,
+    g_ro: ReadoutGrad,
+    opt_rec: Adam,
+    opt_ro: Adam,
+    pruner: Option<Pruner>,
+    opt_steps: u64,
+    trains_rec: bool,
+    seq_len: usize,
+    truncation: usize,
+}
+
+impl<'c> Stepper<'c> {
+    /// Build the engine for `cfg`. RNG protocol (bitwise-stability
+    /// contract): θ initialises from `rng` first, then the executor splits
+    /// one lane stream per lane — exactly the historical driver order, so
+    /// every existing seed reproduces its old run.
+    pub fn new(
+        cfg: &TrainConfig,
+        cell: &'c dyn Cell,
+        embed: Embedding,
+        readout: Readout,
+        rng: &mut Pcg32,
+    ) -> Stepper<'c> {
+        let p = cell.num_params();
+        let theta = cell.init_params(rng);
+        let exec = LaneExecutor::with_mode(
+            cell, cfg.method, &readout, cfg.batch.max(1), cfg.workers, cfg.spawn, rng,
+        );
+        let data_streams: Arc<Mutex<Vec<Pcg32>>> =
+            Arc::new(Mutex::new(exec.slots().iter().map(|s| s.rng.clone()).collect()));
+        let g_ro = readout.make_grad();
+        let opt_ro = Adam::new(readout.num_params(), cfg.lr);
+        let pruner = cfg.prune_to.map(|s| {
+            Pruner::new(
+                cell.param_info(),
+                s,
+                0,
+                cfg.prune_end_step.min(cfg.steps as u64),
+                cfg.prune_every,
+            )
+        });
+        Stepper {
+            cell,
+            embed,
+            readout,
+            theta,
+            exec,
+            data_streams,
+            g_rec: vec![0.0f32; p],
+            g_ro,
+            opt_rec: Adam::new(p, cfg.lr),
+            opt_ro,
+            pruner,
+            opt_steps: 0,
+            trains_rec: cfg.method.trains_recurrent(),
+            seq_len: cfg.seq_len,
+            truncation: cfg.truncation,
+        }
+    }
+
+    // --- accessors -------------------------------------------------------
+
+    /// The shared cell (borrowed for `'c`, so the reference outlives `self`).
+    pub fn cell(&self) -> &'c dyn Cell {
+        self.cell
+    }
+
+    pub fn theta(&self) -> &[f32] {
+        &self.theta
+    }
+
+    pub fn embed(&self) -> &Embedding {
+        &self.embed
+    }
+
+    pub fn readout(&self) -> &Readout {
+        &self.readout
+    }
+
+    /// The data streams the feeder samples from (see field docs).
+    pub fn data_streams(&self) -> &Arc<Mutex<Vec<Pcg32>>> {
+        &self.data_streams
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.exec.lanes()
+    }
+
+    pub fn opt_steps(&self) -> u64 {
+        self.opt_steps
+    }
+
+    pub fn tokens_seen(&self) -> u64 {
+        self.exec.tokens_seen()
+    }
+
+    pub fn tracking_flops_mean(&self) -> f64 {
+        self.exec.tracking_flops_mean()
+    }
+
+    pub fn tracking_memory_floats(&self) -> usize {
+        self.exec.tracking_memory_floats()
+    }
+
+    /// Swap a caller-owned algorithm box into lane `lane` (and the lane's
+    /// previous occupant out into `algo`). This is the serve runtime's
+    /// session↔lane seam: a resident session's tracking state steps through
+    /// the executor without a copy, and two swaps return it.
+    pub fn swap_lane_algo(&mut self, lane: usize, algo: &mut Box<dyn GradAlgo + 'c>) {
+        std::mem::swap(&mut self.exec.slot_mut(lane).algo, algo);
+    }
+
+    // --- training steps --------------------------------------------------
+
+    /// One full minibatch step: every token of `input` is consumed and every
+    /// θ update the schedule calls for is applied. Returns the minibatch
+    /// loss (ordered per-lane drain, so the mean — and anything fed from it,
+    /// like the Copy curriculum — is worker-count independent).
+    pub fn step(&mut self, input: StepInput<'_>) -> StepResult {
+        match input {
+            StepInput::CharLm { crops } => self.step_charlm(crops),
+            StepInput::Copy { seqs } => self.step_copy(seqs),
+        }
+        let (nll_sum, nll_n) = self.exec.drain_step_nll();
+        let mean = if nll_n == 0 { f64::NAN } else { nll_sum / nll_n as f64 };
+        StepResult { train_bpc: bpc_from_nats(mean), nll_sum, nll_n }
+    }
+
+    /// B independent crops, one per lane, advanced in lockstep segments of
+    /// `truncation` tokens (whole crop when 0); θ updates at every segment
+    /// boundary.
+    fn step_charlm(&mut self, crops: &[Vec<u8>]) {
+        self.exec.reset_lanes();
+        let seg = if self.truncation == 0 { self.seq_len } else { self.truncation };
+        let mut t0 = 0usize;
+        while t0 < self.seq_len {
+            let t1 = (t0 + seg).min(self.seq_len);
+            {
+                let theta_ref: &[f32] = &self.theta;
+                let embed = &self.embed;
+                let ro: &Readout = &self.readout;
+                let trains_rec = self.trains_rec;
+                self.exec.for_each_lane(|i, slot| {
+                    let crop = &crops[i];
+                    for t in t0..t1 {
+                        lane_step_charlm(slot, theta_ref, embed, ro, crop, t, trains_rec);
+                    }
+                    // Segment end is an update boundary: materialize
+                    // deferred (BPTT) gradients in-lane, in parallel.
+                    slot.algo.flush(theta_ref, &mut slot.g_rec);
+                });
+            }
+            self.reduce();
+            t0 = t1;
+        }
+    }
+
+    /// The Copy task's three schedules (full unroll / legacy single-worker
+    /// online walk / batched-online lockstep) — see the looper module docs
+    /// for why the single-worker walk is preserved verbatim.
+    fn step_copy(&mut self, seqs: &[CopySeq]) {
+        self.exec.reset_lanes();
+        if self.truncation == 0 {
+            // Full unroll: lanes are fully independent work items — lengths
+            // vary, so hand them out by work stealing; one shared update at
+            // the minibatch boundary.
+            {
+                let theta_ref: &[f32] = &self.theta;
+                let embed = &self.embed;
+                let ro: &Readout = &self.readout;
+                let trains_rec = self.trains_rec;
+                self.exec.for_each_lane_stealing(|i, slot| {
+                    let seq = &seqs[i];
+                    for (t, &tok) in seq.inputs.iter().enumerate() {
+                        lane_step_copy(
+                            slot, theta_ref, embed, ro, tok, seq.targets[t], trains_rec,
+                        );
+                    }
+                    slot.algo.flush(theta_ref, &mut slot.g_rec);
+                });
+            }
+            self.reduce();
+        } else if self.exec.workers() <= 1 {
+            // Legacy fully-online schedule (identical to the sequential
+            // engine): walk the lanes one after another, updating θ every
+            // `truncation` lane-tokens.
+            let mut window = 0usize;
+            for i in 0..self.exec.lanes() {
+                let seq = &seqs[i];
+                for (t, &tok) in seq.inputs.iter().enumerate() {
+                    lane_step_copy(
+                        self.exec.slot_mut(i),
+                        &self.theta,
+                        &self.embed,
+                        &self.readout,
+                        tok,
+                        seq.targets[t],
+                        self.trains_rec,
+                    );
+                    window += 1;
+                    if window >= self.truncation {
+                        self.exec.flush_all(&self.theta);
+                        self.reduce();
+                        window = 0;
+                    }
+                }
+            }
+            if self.exec.total_pending() > 0 {
+                self.exec.flush_all(&self.theta);
+                self.reduce();
+            }
+        } else {
+            // Batched-online: all still-active lanes advance in lockstep; θ
+            // updates every `truncation` global timesteps with gradients
+            // averaged across the lanes that contributed. Deterministic for
+            // any worker count.
+            let max_len = seqs.iter().map(|s| s.inputs.len()).max().unwrap_or(0);
+            let mut t0 = 0usize;
+            while t0 < max_len {
+                let t1 = (t0 + self.truncation).min(max_len);
+                {
+                    let theta_ref: &[f32] = &self.theta;
+                    let embed = &self.embed;
+                    let ro: &Readout = &self.readout;
+                    let trains_rec = self.trains_rec;
+                    self.exec.for_each_lane(|i, slot| {
+                        let seq = &seqs[i];
+                        let hi = t1.min(seq.inputs.len());
+                        for t in t0..hi {
+                            lane_step_copy(
+                                slot, theta_ref, embed, ro, seq.inputs[t], seq.targets[t],
+                                trains_rec,
+                            );
+                        }
+                        if t0 < hi {
+                            slot.algo.flush(theta_ref, &mut slot.g_rec);
+                        }
+                    });
+                }
+                self.reduce();
+                t0 = t1;
+            }
+        }
+    }
+
+    /// One fully-online cross-session tick: each lane with `Some((input,
+    /// target))` steps one byte transition and flushes; idle lanes are
+    /// untouched. Then one shared θ update, averaged over the lanes that
+    /// stepped (zero-pending lanes contribute zero gradient). Per-lane
+    /// losses (nats) are drained into `nll_out` in lane order. No
+    /// `reset_lanes`: sessions are endless streams, their recurrent state
+    /// carries across ticks.
+    ///
+    /// With *no* active lane the update is skipped entirely — Adam's moment
+    /// decay must not drift θ while every session is idle.
+    pub fn step_online(&mut self, tokens: &[Option<(u8, u8)>], nll_out: &mut [f64]) {
+        debug_assert_eq!(tokens.len(), self.exec.lanes());
+        debug_assert_eq!(nll_out.len(), self.exec.lanes());
+        {
+            let theta_ref: &[f32] = &self.theta;
+            let embed = &self.embed;
+            let ro: &Readout = &self.readout;
+            let trains_rec = self.trains_rec;
+            self.exec.for_each_lane(|i, slot| {
+                let Some((x, y)) = tokens[i] else { return };
+                // audit: hot-path
+                {
+                    lane_step_pair(slot, theta_ref, embed, ro, x, y, trains_rec);
+                    slot.algo.flush(theta_ref, &mut slot.g_rec);
+                }
+            });
+        }
+        if self.exec.total_pending() > 0 {
+            self.reduce();
+        }
+        for (out, slot) in nll_out.iter_mut().zip(self.exec.slots_mut().iter_mut()) {
+            *out = slot.nll_sum;
+            slot.nll_sum = 0.0;
+            slot.nll_n = 0;
+        }
+    }
+
+    /// Ordered reduction + shared weight update (see
+    /// [`LaneExecutor::reduce_and_update`]).
+    fn reduce(&mut self) {
+        self.exec.reduce_and_update(
+            &mut self.theta,
+            &mut self.g_rec,
+            &mut self.readout,
+            &mut self.g_ro,
+            &mut self.opt_rec,
+            &mut self.opt_ro,
+            &mut self.pruner,
+            &mut self.opt_steps,
+            self.trains_rec,
+        );
+    }
+
+    // --- snapshot / restore ----------------------------------------------
+
+    /// Assemble a [`TrainCheckpoint`] from the live state. Read-only:
+    /// snapshotting draws from no RNG and mutates nothing, so a checkpointed
+    /// run is bitwise identical to an uncheckpointed one. Must be called at
+    /// a step boundary with the data streams quiescent (the looper defers
+    /// the next prefetch request for exactly this reason).
+    #[allow(clippy::too_many_arguments)]
+    pub fn save_state(
+        &self,
+        key: &ConfigKey,
+        next_step: u64,
+        curriculum_level: u64,
+        last_train_bpc: f64,
+        last_valid_bpc: f64,
+        driver_rng: &Pcg32,
+        curve: &[CurvePoint],
+    ) -> TrainCheckpoint {
+        let mut w = Writer::new();
+        self.opt_rec.save_state(&mut w);
+        let opt_rec_blob = w.into_bytes();
+        let mut w = Writer::new();
+        self.opt_ro.save_state(&mut w);
+        let opt_ro_blob = w.into_bytes();
+        let data_rngs: Vec<(u64, u64)> = self
+            .data_streams
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .iter()
+            .map(|r| r.state_parts())
+            .collect();
+        let lanes: Vec<LaneCheckpoint> = self
+            .exec
+            .slots()
+            .iter()
+            .map(|s| {
+                let mut w = Writer::new();
+                s.algo.save_state(&mut w);
+                LaneCheckpoint {
+                    rng: s.rng.state_parts(),
+                    tokens: s.tokens,
+                    flops_sum: s.flops_sum,
+                    flops_n: s.flops_n,
+                    algo: w.into_bytes(),
+                }
+            })
+            .collect();
+        TrainCheckpoint {
+            key: key.clone(),
+            next_step,
+            opt_steps: self.opt_steps,
+            curriculum_level,
+            last_train_bpc,
+            last_valid_bpc,
+            theta: self.theta.clone(),
+            readout: self.readout.params_flat(),
+            opt_rec: opt_rec_blob,
+            opt_ro: opt_ro_blob,
+            driver_rng: driver_rng.state_parts(),
+            data_rngs,
+            lanes,
+            pruner_keep: self.pruner.as_ref().map(|p| p.keep_mask().to_vec()),
+            curve: curve.to_vec(),
+        }
+    }
+
+    /// Graft a [`TrainCheckpoint`] onto the freshly (re)built engine. The
+    /// rebuild itself is deterministic from the config (cell masks,
+    /// embedding, shapes), the key check proves the config matches, and
+    /// every restored piece is length/structure-verified — after this the
+    /// next step continues bit for bit. `driver_rng` and `curriculum` are
+    /// the two pieces of loop state living outside the engine.
+    pub fn load_state(
+        &mut self,
+        ck: TrainCheckpoint,
+        key: &ConfigKey,
+        driver_rng: &mut Pcg32,
+        curriculum: &mut crate::data::copy::Curriculum,
+    ) -> Result<ResumePoint> {
+        ck.key.ensure_matches(key)?;
+        crate::ensure!(
+            ck.theta.len() == self.theta.len(),
+            "θ length mismatch: checkpoint {} vs run {}",
+            ck.theta.len(),
+            self.theta.len()
+        );
+        self.theta.copy_from_slice(&ck.theta);
+        crate::ensure!(
+            ck.readout.len() == self.readout.num_params(),
+            "readout length mismatch: checkpoint {} vs run {}",
+            ck.readout.len(),
+            self.readout.num_params()
+        );
+        self.readout.set_params(&ck.readout);
+        self.opt_rec
+            .load_state(&mut Reader::new(&ck.opt_rec))
+            .map_err(|e| e.context("restoring the recurrent optimizer"))?;
+        self.opt_ro
+            .load_state(&mut Reader::new(&ck.opt_ro))
+            .map_err(|e| e.context("restoring the readout optimizer"))?;
+        *driver_rng = Pcg32::from_parts(ck.driver_rng.0, ck.driver_rng.1);
+        {
+            let mut streams = self.data_streams.lock().unwrap_or_else(|e| e.into_inner());
+            crate::ensure!(
+                ck.data_rngs.len() == streams.len(),
+                "data-stream count mismatch: checkpoint {} vs run {} lanes",
+                ck.data_rngs.len(),
+                streams.len()
+            );
+            for (s, &(state, inc)) in streams.iter_mut().zip(&ck.data_rngs) {
+                *s = Pcg32::from_parts(state, inc);
+            }
+        }
+        crate::ensure!(
+            ck.lanes.len() == self.exec.lanes(),
+            "lane count mismatch: checkpoint {} vs run {}",
+            ck.lanes.len(),
+            self.exec.lanes()
+        );
+        for (i, (slot, lane)) in self.exec.slots_mut().iter_mut().zip(&ck.lanes).enumerate() {
+            slot.rng = Pcg32::from_parts(lane.rng.0, lane.rng.1);
+            slot.tokens = lane.tokens;
+            slot.flops_sum = lane.flops_sum;
+            slot.flops_n = lane.flops_n;
+            slot.algo
+                .load_state(&mut Reader::new(&lane.algo))
+                .map_err(|e| e.context(format!("restoring lane {i} tracking state")))?;
+        }
+        match (self.pruner.as_mut(), &ck.pruner_keep) {
+            (Some(p), Some(keep)) => p.set_keep_mask(keep)?,
+            (None, None) => {}
+            (have, _) => crate::bail!(
+                "pruning configuration mismatch: checkpoint {} a pruner mask, this run {}",
+                if ck.pruner_keep.is_some() { "has" } else { "lacks" },
+                if have.is_some() { "prunes" } else { "does not prune" }
+            ),
+        }
+        curriculum.set_level(ck.curriculum_level as usize);
+        self.opt_steps = ck.opt_steps;
+        Ok(ResumePoint {
+            start_step: ck.next_step as usize,
+            last_train_bpc: ck.last_train_bpc,
+            last_valid_bpc: ck.last_valid_bpc,
+            curve: ck.curve,
+        })
+    }
+
+    /// Serialize the *shared* training state — θ, readout, both optimizers,
+    /// the optimizer step count — into `w`. The serve runtime embeds this in
+    /// its server checkpoint next to the per-session blobs (sessions own the
+    /// per-lane tracking state there, so [`save_state`](Self::save_state)'s
+    /// lane section does not apply).
+    pub fn save_shared(&self, w: &mut Writer) {
+        w.put_f32s(&self.theta);
+        w.put_f32s(&self.readout.params_flat());
+        let mut ow = Writer::new();
+        self.opt_rec.save_state(&mut ow);
+        w.put_bytes(&ow.into_bytes());
+        let mut ow = Writer::new();
+        self.opt_ro.save_state(&mut ow);
+        w.put_bytes(&ow.into_bytes());
+        w.put_u64(self.opt_steps);
+    }
+
+    /// Restore a [`save_shared`](Self::save_shared) snapshot; the inverse
+    /// length/structure checks of [`load_state`](Self::load_state) apply.
+    pub fn load_shared(&mut self, r: &mut Reader<'_>) -> Result<()> {
+        let theta = r.get_f32s()?;
+        crate::ensure!(
+            theta.len() == self.theta.len(),
+            "θ length mismatch: snapshot {} vs run {}",
+            theta.len(),
+            self.theta.len()
+        );
+        self.theta.copy_from_slice(&theta);
+        let ro = r.get_f32s()?;
+        crate::ensure!(
+            ro.len() == self.readout.num_params(),
+            "readout length mismatch: snapshot {} vs run {}",
+            ro.len(),
+            self.readout.num_params()
+        );
+        self.readout.set_params(&ro);
+        let blob = r.get_bytes()?;
+        self.opt_rec
+            .load_state(&mut Reader::new(&blob))
+            .map_err(|e| e.context("restoring the recurrent optimizer"))?;
+        let blob = r.get_bytes()?;
+        self.opt_ro
+            .load_state(&mut Reader::new(&blob))
+            .map_err(|e| e.context("restoring the readout optimizer"))?;
+        self.opt_steps = r.get_u64()?;
+        Ok(())
+    }
+}
+
+/// One char-LM lane-token: step the cell, read out, backprop the loss into
+/// the lane's buffers. Runs inside a parallel section — touches only `slot`
+/// plus shared read-only state.
+pub(crate) fn lane_step_charlm(
+    slot: &mut LaneSlot<'_>,
+    theta: &[f32],
+    embed: &Embedding,
+    readout: &Readout,
+    crop: &[u8],
+    t: usize,
+    trains_recurrent: bool,
+) {
+    let x = embed.lookup(crop[t] as usize);
+    slot.algo.step(theta, x);
+    readout.forward(slot.algo.hidden(), &mut slot.cache);
+    let (nll, dh) =
+        readout.loss_and_backward(&mut slot.cache, crop[t + 1] as usize, &mut slot.g_ro);
+    if trains_recurrent {
+        slot.algo.inject_loss(dh, &mut slot.g_rec);
+    }
+    slot.nll_sum += nll as f64;
+    slot.nll_n += 1;
+    slot.flops_sum += slot.algo.tracking_flops_per_step() as f64;
+    slot.flops_n += 1;
+    slot.tokens += 1;
+    slot.pending += 1;
+}
+
+/// One Copy-task lane-token (loss only on prediction positions).
+pub(crate) fn lane_step_copy(
+    slot: &mut LaneSlot<'_>,
+    theta: &[f32],
+    embed: &Embedding,
+    readout: &Readout,
+    tok: usize,
+    target: Option<usize>,
+    trains_recurrent: bool,
+) {
+    slot.algo.step(theta, embed.lookup(tok));
+    if let Some(target) = target {
+        readout.forward(slot.algo.hidden(), &mut slot.cache);
+        let (nll, dh) = readout.loss_and_backward(&mut slot.cache, target, &mut slot.g_ro);
+        if trains_recurrent {
+            slot.algo.inject_loss(dh, &mut slot.g_rec);
+        }
+        slot.nll_sum += nll as f64;
+        slot.nll_n += 1;
+    }
+    slot.flops_sum += slot.algo.tracking_flops_per_step() as f64;
+    slot.flops_n += 1;
+    slot.tokens += 1;
+    slot.pending += 1;
+}
+
+/// One serve-session byte transition: the char-LM lane step specialised to a
+/// single `(input, target)` pair.
+fn lane_step_pair(
+    slot: &mut LaneSlot<'_>,
+    theta: &[f32],
+    embed: &Embedding,
+    readout: &Readout,
+    x: u8,
+    target: u8,
+    trains_recurrent: bool,
+) {
+    let xe = embed.lookup(x as usize);
+    slot.algo.step(theta, xe);
+    readout.forward(slot.algo.hidden(), &mut slot.cache);
+    let (nll, dh) =
+        readout.loss_and_backward(&mut slot.cache, target as usize, &mut slot.g_ro);
+    if trains_recurrent {
+        slot.algo.inject_loss(dh, &mut slot.g_rec);
+    }
+    slot.nll_sum += nll as f64;
+    slot.nll_n += 1;
+    slot.flops_sum += slot.algo.tracking_flops_per_step() as f64;
+    slot.flops_n += 1;
+    slot.tokens += 1;
+    slot.pending += 1;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grad::Method;
+
+    fn make_stepper(cfg: &TrainConfig) -> (Box<dyn crate::cells::Cell>, Pcg32) {
+        let mut rng = Pcg32::seeded(cfg.seed);
+        let cell = cfg.arch.build(cfg.k, cfg.embed_dim, cfg.density, &mut rng);
+        (cell, rng)
+    }
+
+    #[test]
+    fn step_online_idle_tick_leaves_theta_untouched() {
+        let cfg = TrainConfig {
+            k: 8,
+            batch: 2,
+            embed_dim: 4,
+            readout_hidden: 8,
+            method: Method::Snap(1),
+            ..Default::default()
+        };
+        let (cell, mut rng) = make_stepper(&cfg);
+        let embed = Embedding::new(256, cfg.embed_dim, &mut rng);
+        let readout = Readout::new(cell.hidden_size(), cfg.readout_hidden, 256, &mut rng);
+        let mut st = Stepper::new(&cfg, cell.as_ref(), embed, readout, &mut rng);
+        let mut nll = vec![0.0f64; st.lanes()];
+        // One real tick so the optimizer moments are nonzero.
+        st.step_online(&[Some((b'a', b'b')), Some((b'c', b'd'))], &mut nll);
+        let before = st.theta().to_vec();
+        let steps_before = st.opt_steps();
+        st.step_online(&[None, None], &mut nll);
+        assert_eq!(st.opt_steps(), steps_before, "idle tick must not run the optimizer");
+        for (a, b) in before.iter().zip(st.theta()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn step_online_partial_batch_only_charges_active_lanes() {
+        let cfg = TrainConfig {
+            k: 8,
+            batch: 3,
+            embed_dim: 4,
+            readout_hidden: 8,
+            ..Default::default()
+        };
+        let (cell, mut rng) = make_stepper(&cfg);
+        let embed = Embedding::new(256, cfg.embed_dim, &mut rng);
+        let readout = Readout::new(cell.hidden_size(), cfg.readout_hidden, 256, &mut rng);
+        let mut st = Stepper::new(&cfg, cell.as_ref(), embed, readout, &mut rng);
+        let mut nll = vec![0.0f64; st.lanes()];
+        st.step_online(&[Some((b'x', b'y')), None, Some((b'y', b'z'))], &mut nll);
+        assert!(nll[0] > 0.0);
+        assert_eq!(nll[1], 0.0, "idle lane must report zero loss");
+        assert!(nll[2] > 0.0);
+        assert_eq!(st.tokens_seen(), 2);
+        assert_eq!(st.opt_steps(), 1);
+    }
+
+    #[test]
+    fn shared_state_round_trips_bitwise() {
+        let cfg = TrainConfig {
+            k: 8,
+            batch: 2,
+            embed_dim: 4,
+            readout_hidden: 8,
+            ..Default::default()
+        };
+        let (cell, mut rng) = make_stepper(&cfg);
+        let embed = Embedding::new(256, cfg.embed_dim, &mut rng);
+        let readout = Readout::new(cell.hidden_size(), cfg.readout_hidden, 256, &mut rng);
+        let mut st = Stepper::new(&cfg, cell.as_ref(), embed, readout, &mut rng);
+        let mut nll = vec![0.0f64; st.lanes()];
+        for t in 0..5u8 {
+            st.step_online(&[Some((t, t + 1)), Some((t + 2, t + 3))], &mut nll);
+        }
+        let mut w = Writer::new();
+        st.save_shared(&mut w);
+        let blob = w.into_bytes();
+
+        // A freshly built engine restores to the same shared state.
+        let (cell2, mut rng2) = make_stepper(&cfg);
+        let embed2 = Embedding::new(256, cfg.embed_dim, &mut rng2);
+        let readout2 = Readout::new(cell2.hidden_size(), cfg.readout_hidden, 256, &mut rng2);
+        let mut st2 = Stepper::new(&cfg, cell2.as_ref(), embed2, readout2, &mut rng2);
+        st2.load_shared(&mut Reader::new(&blob)).unwrap();
+        assert_eq!(st2.opt_steps(), st.opt_steps());
+        for (a, b) in st.theta().iter().zip(st2.theta()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let mut w2 = Writer::new();
+        st2.save_shared(&mut w2);
+        assert_eq!(blob, w2.into_bytes(), "shared snapshot must round-trip bitwise");
+    }
+}

@@ -1,0 +1,288 @@
+//! The serve runtime's falsifiable core claims:
+//!
+//! 1. **Residency is purely a memory knob** — a server churning sessions
+//!    through a tiny LRU cache (evict → spill blob → restore) produces
+//!    bitwise-identical θ and per-session loss curves to a server holding
+//!    every session resident, for all six gradient methods of the paper.
+//! 2. **The LRU bound holds under churn** — resident count never exceeds
+//!    the cap while the full population stays addressable.
+//! 3. **Backpressure sheds by name** — a full admission queue refuses
+//!    `submit` with a named error instead of blocking or dropping silently.
+//! 4. **Kill/resume is bitwise** — a server killed mid-traffic and rebuilt
+//!    from its checkpoint continues exactly the run an uninterrupted server
+//!    would have produced (θ and every session curve, bit for bit).
+
+use snap_rtrl::cells::Cell;
+use snap_rtrl::grad::Method;
+use snap_rtrl::models::{Embedding, Readout};
+use snap_rtrl::serve::traffic::tick_session_ids;
+use snap_rtrl::serve::{Server, ServeMeta, Session, SessionStore};
+use snap_rtrl::tensor::rng::Pcg32;
+use snap_rtrl::train::{Stepper, TrainConfig};
+use std::path::{Path, PathBuf};
+
+/// The six gradient methods of the paper's comparison.
+const SIX_METHODS: [Method; 6] = [
+    Method::Bptt,
+    Method::Rtrl,
+    Method::SparseRtrl,
+    Method::Snap(1),
+    Method::Uoro,
+    Method::Rflo,
+];
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("snap_serve_{}_{name}", std::process::id()));
+    std::fs::remove_dir_all(&p).ok();
+    std::fs::create_dir_all(&p).unwrap();
+    p
+}
+
+fn serve_cfg(method: Method, lanes: usize) -> TrainConfig {
+    TrainConfig::builder()
+        .method(method)
+        .k(8)
+        .embed_dim(4)
+        .readout_hidden(8)
+        .batch(lanes)
+        .workers(1)
+        .seed(11)
+        .build()
+        .unwrap()
+}
+
+fn meta_for(cfg: &TrainConfig) -> ServeMeta {
+    ServeMeta {
+        seed: cfg.seed,
+        k: cfg.k as u64,
+        lanes: cfg.batch as u64,
+        method: cfg.method.name(),
+        arch: cfg.arch.name().into(),
+    }
+}
+
+/// Mirror of the `repro serve` construction path: everything derived from
+/// `cfg.seed`, so two calls build bitwise-identical servers.
+fn build_cell(cfg: &TrainConfig) -> (Box<dyn Cell>, Pcg32) {
+    let mut rng = Pcg32::seeded(cfg.seed);
+    let cell = cfg.arch.build(cfg.k, cfg.embed_dim, cfg.density, &mut rng);
+    (cell, rng)
+}
+
+fn build_server<'c>(
+    cfg: &TrainConfig,
+    cell: &'c dyn Cell,
+    rng: &mut Pcg32,
+    spill: &Path,
+    resident: usize,
+    sessions: u64,
+) -> Server<'c> {
+    let embed = Embedding::new(256, cfg.embed_dim, rng);
+    let readout = Readout::new(cell.hidden_size(), cfg.readout_hidden, 256, rng);
+    let stepper = Stepper::new(cfg, cell, embed, readout, rng);
+    let store = SessionStore::new(cfg.method, cell, spill, resident).unwrap();
+    let mut server = Server::new(stepper, store, cfg.batch * 4, meta_for(cfg));
+    for id in 0..sessions {
+        server
+            .admit(
+                Session::new(cfg.seed, id),
+                Session::build_algo(cfg.seed, id, cfg.method, cell),
+            )
+            .unwrap();
+    }
+    server
+}
+
+/// Drive the deterministic synthetic schedule for ticks `[from, to)`.
+fn run_ticks(server: &mut Server<'_>, from: u64, to: u64, sessions: u64, lanes: usize) {
+    for t in from..to {
+        for id in tick_session_ids(t, lanes, sessions) {
+            server.submit(id).unwrap();
+        }
+        let rep = server.tick().unwrap();
+        assert!(rep.stepped > 0, "schedule always fills at least one lane");
+    }
+}
+
+fn theta_bits(server: &Server<'_>) -> Vec<u32> {
+    server.stepper().theta().iter().map(|v| v.to_bits()).collect()
+}
+
+fn all_curves_bits(server: &mut Server<'_>, sessions: u64) -> Vec<Vec<u64>> {
+    (0..sessions)
+        .map(|id| {
+            server
+                .session_curve(id)
+                .unwrap()
+                .iter()
+                .map(|v| v.to_bits())
+                .collect()
+        })
+        .collect()
+}
+
+#[test]
+fn evict_restore_is_bitwise_for_all_six_methods() {
+    const SESSIONS: u64 = 10;
+    const LANES: usize = 4;
+    const TICKS: u64 = 12;
+    for method in SIX_METHODS {
+        let cfg = serve_cfg(method, LANES);
+        let tag = method.name();
+
+        // Churny server: only 2 sessions resident, everything else spilled.
+        let dir_a = tmp_dir(&format!("churn_{tag}"));
+        let (cell_a, mut rng_a) = build_cell(&cfg);
+        let mut a = build_server(&cfg, cell_a.as_ref(), &mut rng_a, &dir_a, 2, SESSIONS);
+
+        // Roomy server: the whole population stays resident.
+        let dir_b = tmp_dir(&format!("roomy_{tag}"));
+        let (cell_b, mut rng_b) = build_cell(&cfg);
+        let mut b =
+            build_server(&cfg, cell_b.as_ref(), &mut rng_b, &dir_b, SESSIONS as usize, SESSIONS);
+
+        run_ticks(&mut a, 0, TICKS, SESSIONS, LANES);
+        run_ticks(&mut b, 0, TICKS, SESSIONS, LANES);
+
+        assert!(a.store().resident_count() <= 2, "{tag}: cap violated");
+        assert_eq!(b.store().resident_count(), SESSIONS as usize);
+        assert_eq!(theta_bits(&a), theta_bits(&b), "{tag}: θ must not depend on residency");
+        let curves_a = all_curves_bits(&mut a, SESSIONS);
+        let curves_b = all_curves_bits(&mut b, SESSIONS);
+        for id in 0..SESSIONS as usize {
+            assert_eq!(
+                curves_a[id], curves_b[id],
+                "{tag}: session {id} curve must not depend on residency"
+            );
+            assert!(!curves_a[id].is_empty(), "{tag}: session {id} never stepped");
+        }
+        std::fs::remove_dir_all(&dir_a).ok();
+        std::fs::remove_dir_all(&dir_b).ok();
+    }
+}
+
+#[test]
+fn lru_keeps_the_cap_under_churn_and_the_population_addressable() {
+    const SESSIONS: u64 = 50;
+    const LANES: usize = 4;
+    const CAP: usize = 8;
+    let cfg = serve_cfg(Method::Snap(1), LANES);
+    let dir = tmp_dir("lru_bound");
+    let (cell, mut rng) = build_cell(&cfg);
+    let mut server = build_server(&cfg, cell.as_ref(), &mut rng, &dir, CAP, SESSIONS);
+    for t in 0..30u64 {
+        for id in tick_session_ids(t, LANES, SESSIONS) {
+            server.submit(id).unwrap();
+        }
+        server.tick().unwrap();
+        assert!(
+            server.store().resident_count() <= CAP,
+            "tick {t}: resident {} > cap {CAP}",
+            server.store().resident_count()
+        );
+    }
+    assert_eq!(server.store().len(), SESSIONS as usize);
+    let spilled = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .filter(|e| e.path().extension().is_some_and(|x| x == "bin"))
+        .count();
+    assert!(
+        spilled >= SESSIONS as usize - CAP,
+        "expected ≥ {} spill blobs, found {spilled}",
+        SESSIONS as usize - CAP
+    );
+    // Every session — resident or cold — is still addressable.
+    for id in 0..SESSIONS {
+        server.session_curve(id).unwrap();
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn full_admission_queue_sheds_with_a_named_error() {
+    const SESSIONS: u64 = 16;
+    const LANES: usize = 2;
+    let cfg = serve_cfg(Method::Snap(1), LANES);
+    let dir = tmp_dir("shed");
+    let (cell, mut rng) = build_cell(&cfg);
+    // build_server sets queue_cap = lanes * 4 = 8.
+    let mut server = build_server(&cfg, cell.as_ref(), &mut rng, &dir, 4, SESSIONS);
+    for id in 0..8u64 {
+        server.submit(id).unwrap();
+    }
+    let err = server.submit(8).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("admission queue full"), "unexpected shed message: {msg}");
+    assert!(msg.contains("session 8"), "shed error must name the session: {msg}");
+    // Draining the queue makes room again.
+    server.tick().unwrap();
+    server.submit(8).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn kill_and_resume_mid_traffic_is_bitwise_identical() {
+    const SESSIONS: u64 = 12;
+    const LANES: usize = 4;
+    const TICKS: u64 = 20;
+    const KILL_AT: u64 = 10;
+    let cfg = serve_cfg(Method::Snap(1), LANES);
+
+    // Ground truth: uninterrupted run.
+    let dir_full = tmp_dir("chaos_full");
+    let (cell_full, mut rng_full) = build_cell(&cfg);
+    let mut full = build_server(&cfg, cell_full.as_ref(), &mut rng_full, &dir_full, 3, SESSIONS);
+    run_ticks(&mut full, 0, TICKS, SESSIONS, LANES);
+
+    // Killed run: stop after KILL_AT ticks, checkpoint, drop the server.
+    let dir_part = tmp_dir("chaos_part");
+    let ckpt = dir_part.join("server.ck");
+    {
+        let (cell, mut rng) = build_cell(&cfg);
+        let mut part = build_server(&cfg, cell.as_ref(), &mut rng, &dir_part, 3, SESSIONS);
+        run_ticks(&mut part, 0, KILL_AT, SESSIONS, LANES);
+        part.save_checkpoint(&ckpt).unwrap();
+    }
+
+    // Resume into a fresh process-equivalent server (fresh RNGs, fresh cell,
+    // fresh empty store in a brand-new spill dir) and finish the run.
+    let dir_resume = tmp_dir("chaos_resume");
+    let (cell_r, mut rng_r) = build_cell(&cfg);
+    let embed = Embedding::new(256, cfg.embed_dim, &mut rng_r);
+    let readout = Readout::new(cell_r.hidden_size(), cfg.readout_hidden, 256, &mut rng_r);
+    let stepper = Stepper::new(&cfg, cell_r.as_ref(), embed, readout, &mut rng_r);
+    let store = SessionStore::new(cfg.method, cell_r.as_ref(), &dir_resume, 3).unwrap();
+    let mut resumed =
+        Server::from_checkpoint(stepper, store, cfg.batch * 4, meta_for(&cfg), &ckpt).unwrap();
+    assert_eq!(resumed.tick_count(), KILL_AT);
+    run_ticks(&mut resumed, KILL_AT, TICKS, SESSIONS, LANES);
+
+    assert_eq!(theta_bits(&full), theta_bits(&resumed), "θ diverged across kill/resume");
+    let curves_full = all_curves_bits(&mut full, SESSIONS);
+    let curves_resumed = all_curves_bits(&mut resumed, SESSIONS);
+    for id in 0..SESSIONS as usize {
+        assert_eq!(
+            curves_full[id], curves_resumed[id],
+            "session {id} curve diverged across kill/resume"
+        );
+    }
+
+    // A checkpoint from a different configuration is refused by name.
+    let other = serve_cfg(Method::Rflo, LANES);
+    let (cell_o, mut rng_o) = build_cell(&other);
+    let embed = Embedding::new(256, other.embed_dim, &mut rng_o);
+    let readout = Readout::new(cell_o.hidden_size(), other.readout_hidden, 256, &mut rng_o);
+    let stepper = Stepper::new(&other, cell_o.as_ref(), embed, readout, &mut rng_o);
+    let dir_bad = tmp_dir("chaos_badmeta");
+    let store = SessionStore::new(other.method, cell_o.as_ref(), &dir_bad, 3).unwrap();
+    let err = Server::from_checkpoint(stepper, store, 8, meta_for(&other), &ckpt).unwrap_err();
+    assert!(
+        err.to_string().contains("different configuration"),
+        "config mismatch must be a named error: {err}"
+    );
+
+    for d in [&dir_full, &dir_part, &dir_resume, &dir_bad] {
+        std::fs::remove_dir_all(d).ok();
+    }
+}
