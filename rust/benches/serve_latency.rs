@@ -67,7 +67,14 @@ fn main() {
         let embed = Embedding::new(256, cfg.embed_dim, &mut rng);
         let readout = Readout::new(cell.hidden_size(), cfg.readout_hidden, 256, &mut rng);
         let stepper = Stepper::new(&cfg, cell.as_ref(), embed, readout, &mut rng);
-        let store = SessionStore::new(cfg.method, cell.as_ref(), &spill, resident).unwrap();
+        let store = SessionStore::new(
+            cfg.method,
+            cell.as_ref(),
+            cfg.kernel.resolve(),
+            &spill,
+            resident,
+        )
+        .unwrap();
         let meta = ServeMeta {
             seed: cfg.seed,
             k: cfg.k as u64,
@@ -80,7 +87,13 @@ fn main() {
             server
                 .admit(
                     Session::new(cfg.seed, id),
-                    Session::build_algo(cfg.seed, id, cfg.method, cell.as_ref()),
+                    Session::build_algo(
+                        cfg.seed,
+                        id,
+                        cfg.method,
+                        cell.as_ref(),
+                        cfg.kernel.resolve(),
+                    ),
                 )
                 .unwrap();
         }

@@ -4,15 +4,22 @@
 //! sparse dynamics-Jacobian pipeline: at high sparsity, SnAp-2 / RTRL /
 //! BPTT per-step times must track nnz(D), not k².
 //!
+//! Every configuration runs under **both sparse kernels** (`scalar` and
+//! `simd`) so the JSON carries an A/B pair per row — the CI artifact that
+//! proves the SIMD layer's speedup on real step shapes. On machines without
+//! AVX2 the `simd` rows run the scalar fallback and the pair collapses to
+//! parity; the `kernel` field still distinguishes the rows.
+//!
 //! Run: `cargo bench --bench step_costs [-- --k 128 --ms 300 --json PATH]`
 //!
 //! With `--json PATH` a machine-readable `BENCH_step_costs.json` is written
-//! (rows keyed by arch × method × density × k) for the CI `bench-smoke`
-//! regression gate (`repro bench-gate` vs `rust/benches/baselines/`).
+//! (rows keyed by arch × method × density × k × kernel) for the CI
+//! `bench-smoke` regression gate (`repro bench-gate` vs `rust/benches/baselines/`).
 
 use snap_rtrl::benchutil::{bench, flag_str, flag_usize, report, write_bench_json, JsonObj};
 use snap_rtrl::cells::Arch;
 use snap_rtrl::grad::Method;
+use snap_rtrl::sparse::{KernelChoice, KernelKind};
 use snap_rtrl::tensor::rng::Pcg32;
 use std::time::Duration;
 
@@ -23,6 +30,12 @@ fn main() {
     let ms = flag_usize(&args, "--ms").unwrap_or(300);
     let budget = Duration::from_millis(ms as u64);
     let json_path = flag_str(&args, "--json");
+    // `--kernel scalar|simd|auto` restricts the sweep to one kernel (auto
+    // resolves to the machine's best); default is to run both for the A/B.
+    let kernels: Vec<KernelKind> = match flag_str(&args, "--kernel") {
+        Some(s) => vec![KernelChoice::parse(&s).expect("bad --kernel").resolve()],
+        None => vec![KernelKind::Scalar, KernelKind::Simd],
+    };
     let mut rows: Vec<JsonObj> = Vec::new();
 
     println!("# step_costs — per-step tracking cost (k={k}, input={input})\n");
@@ -45,39 +58,43 @@ fn main() {
                 if m == Method::Snap(2) && density > 0.5 {
                     continue; // dense SnAp-2 == RTRL (§3.1); skip duplicate
                 }
-                let mut rng = Pcg32::seeded(1);
-                let cell = arch.build(k, input, density, &mut rng);
-                let theta = cell.init_params(&mut rng);
-                let mut algo = m.build(cell.as_ref(), &mut rng);
-                let x: Vec<f32> = (0..input).map(|_| rng.normal()).collect();
-                let dl: Vec<f32> = (0..cell.hidden_size()).map(|_| 0.1).collect();
-                let mut g = vec![0.0f32; cell.num_params()];
-                let t = bench(3, budget, || {
-                    algo.step(&theta, &x);
-                    algo.inject_loss(&dl, &mut g);
-                    algo.flush(&theta, &mut g);
-                    g[0]
-                });
-                report(
-                    &format!("{}/{}/d={:.4}", arch.name(), m.name(), density),
-                    &t,
-                    &format!(
-                        "[{} flops, {} floats]",
-                        algo.tracking_flops_per_step(),
-                        algo.tracking_memory_floats()
-                    ),
-                );
-                rows.push(
-                    JsonObj::new()
-                        .str("arch", arch.name())
-                        .str("method", &m.name())
-                        .num("density", density)
-                        .int("k", k as u64)
-                        .num("steps_per_sec", t.per_sec())
-                        .num("ns_per_step", t.mean_ns())
-                        .int("tracking_flops", algo.tracking_flops_per_step())
-                        .int("tracking_floats", algo.tracking_memory_floats() as u64),
-                );
+                for &kernel in &kernels {
+                    let mut rng = Pcg32::seeded(1);
+                    let cell = arch.build(k, input, density, &mut rng);
+                    let theta = cell.init_params(&mut rng);
+                    let mut algo = m.build_with_kernel(cell.as_ref(), &mut rng, kernel);
+                    let x: Vec<f32> = (0..input).map(|_| rng.normal()).collect();
+                    let dl: Vec<f32> = (0..cell.hidden_size()).map(|_| 0.1).collect();
+                    let mut g = vec![0.0f32; cell.num_params()];
+                    let t = bench(3, budget, || {
+                        algo.step(&theta, &x);
+                        algo.inject_loss(&dl, &mut g);
+                        algo.flush(&theta, &mut g);
+                        g[0]
+                    });
+                    let kname = snap_rtrl::sparse::SparseKernel::name(&kernel);
+                    report(
+                        &format!("{}/{}/d={:.4}/{kname}", arch.name(), m.name(), density),
+                        &t,
+                        &format!(
+                            "[{} flops, {} floats]",
+                            algo.tracking_flops_per_step(),
+                            algo.tracking_memory_floats()
+                        ),
+                    );
+                    rows.push(
+                        JsonObj::new()
+                            .str("arch", arch.name())
+                            .str("method", &m.name())
+                            .num("density", density)
+                            .int("k", k as u64)
+                            .str("kernel", kname)
+                            .num("steps_per_sec", t.per_sec())
+                            .num("ns_per_step", t.mean_ns())
+                            .int("tracking_flops", algo.tracking_flops_per_step())
+                            .int("tracking_floats", algo.tracking_memory_floats() as u64),
+                    );
+                }
             }
             println!();
         }

@@ -6,6 +6,9 @@
 //! * `unsafe` stays rare, allowlisted and documented (`unsafe` rule),
 //! * nothing order-nondeterministic feeds gradients or reports
 //!   (`determinism` rule),
+//! * SIMD intrinsics and `#[target_feature]` stay confined to the
+//!   `SparseKernel` dispatch module, behind runtime feature detection with
+//!   a scalar fallback (`simd` rule),
 //! * the checkpoint blob layout cannot change silently (`serde-format`
 //!   rule: a structural fingerprint of the serde field write-order, pinned
 //!   in `rust/audit/serde_format.pin`, must move together with
@@ -83,6 +86,7 @@ const REQUIRED_HOT: &[&str] = &[
     "rust/src/models/readout.rs",
     "rust/src/sparse/coljac.rs",
     "rust/src/sparse/dynjac.rs",
+    "rust/src/sparse/simd.rs",
     "rust/src/tensor/ops.rs",
     "rust/src/train/stepper.rs",
 ];

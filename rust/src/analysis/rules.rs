@@ -9,6 +9,7 @@
 //! | `unsafe`      | unsafe stays in allowlisted modules, with SAFETY comments |
 //! | `determinism` | no HashMap/HashSet outside allowlisted sites              |
 //! | `serde-format`| checkpoint blob layout changes require a version bump     |
+//! | `simd`        | SIMD intrinsics stay in the kernel module, behind a guard |
 //! | `directive`   | `// audit:` comments themselves parse                     |
 
 use super::report::Finding;
@@ -33,7 +34,13 @@ pub const BANNED_HOT: &[&str] = &[
 ];
 
 /// Rules that `// audit: allow(rule) reason` may silence.
-pub const ALLOW_RULES: &[&str] = &["alloc", "unsafe", "determinism"];
+pub const ALLOW_RULES: &[&str] = &["alloc", "unsafe", "determinism", "simd"];
+
+/// The only modules allowed to contain SIMD vector code (`std::arch` /
+/// `core::arch` intrinsics, `#[target_feature]`): the `SparseKernel`
+/// dispatch layer. Everything else reaches vector units through it, so
+/// scalar fallbacks and feature detection live in exactly one place.
+pub const SIMD_MODULES: &[&str] = &["rust/src/sparse/simd.rs"];
 
 /// Run every rule over the scanned files; returns sorted findings.
 pub fn run_all(files: &[SourceFile], config: &AuditConfig) -> Vec<Finding> {
@@ -42,6 +49,7 @@ pub fn run_all(files: &[SourceFile], config: &AuditConfig) -> Vec<Finding> {
         alloc_rule(sf, &mut findings);
         unsafe_rule(sf, config, &mut findings);
         determinism_rule(sf, config, &mut findings);
+        simd_rule(sf, &mut findings);
         directive_rule(sf, &mut findings);
     }
     coverage_rule(files, config, &mut findings);
@@ -197,6 +205,68 @@ fn determinism_rule(sf: &SourceFile, config: &AuditConfig, findings: &mut Vec<Fi
                      must use a Vec/BTreeMap, or the file must be allowlisted in \
                      rust/audit/determinism.allow with a reason"
                 ),
+            ));
+        }
+    }
+}
+
+/// SIMD containment: `std::arch` / `core::arch` intrinsic paths and
+/// `#[target_feature]` may appear only in [`SIMD_MODULES`], and a module
+/// using `#[target_feature]` must also contain a runtime
+/// `is_x86_feature_detected!` guard — the static witness that every
+/// feature-gated entry point sits behind detection with a scalar fallback,
+/// never called bare. (A bare `arch` identifier is ubiquitous — `Arch`,
+/// `arch_s` — so the rule matches the unambiguous path/attribute spellings
+/// on the stripped code, not the token.)
+fn simd_rule(sf: &SourceFile, findings: &mut Vec<Finding>) {
+    let mut hits: Vec<(usize, &str)> = Vec::new();
+    for needle in ["std::arch", "core::arch"] {
+        let mut from = 0usize;
+        while let Some(rel) = sf.code[from..].find(needle) {
+            let off = from + rel;
+            hits.push((off, needle));
+            from = off + needle.len();
+        }
+    }
+    for off in sf.find_token("target_feature") {
+        hits.push((off, "target_feature"));
+    }
+    if hits.is_empty() {
+        return;
+    }
+    hits.sort();
+    let in_simd_module = SIMD_MODULES
+        .iter()
+        .any(|m| &sf.path == m || sf.path.ends_with(&format!("/{m}")));
+    let has_detection = !sf.find_token("is_x86_feature_detected").is_empty();
+    let mut flagged_lines: Vec<usize> = Vec::new();
+    for (off, what) in hits {
+        let line = sf.line_of(off);
+        if flagged_lines.contains(&line) || allowed(sf, "simd", line) {
+            continue;
+        }
+        if !in_simd_module {
+            flagged_lines.push(line);
+            findings.push(Finding::new(
+                &sf.path,
+                line,
+                "simd",
+                format!(
+                    "`{what}` outside the SIMD kernel module set ({SIMD_MODULES:?}); \
+                     route vector code through the `SparseKernel` dispatch layer \
+                     instead of open-coding intrinsics"
+                ),
+            ));
+        } else if what == "target_feature" && !has_detection {
+            flagged_lines.push(line);
+            findings.push(Finding::new(
+                &sf.path,
+                line,
+                "simd",
+                "`#[target_feature]` without any `is_x86_feature_detected!` guard \
+                 in the module; feature-gated kernels must sit behind runtime \
+                 detection with a scalar fallback"
+                    .to_string(),
             ));
         }
     }
@@ -634,6 +704,56 @@ mod tests {
         assert_ne!(a.fingerprint, c.fingerprint);
         assert_eq!(a.version, 1);
         assert_eq!(a.anchor_line, 1);
+    }
+
+    #[test]
+    fn simd_rule_confines_intrinsics_to_the_kernel_module() {
+        // Intrinsics outside the kernel module: flagged.
+        let raw = "use std::arch::x86_64::_mm256_setzero_ps;\nfn f() {}\n";
+        let sf = SourceFile::parse("rust/src/grad/rtrl.rs", raw);
+        let f = run_all(std::slice::from_ref(&sf), &cfg());
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "simd");
+        assert!(f[0].message.contains("SparseKernel"), "{}", f[0].message);
+
+        // Same code inside the kernel module with a detection guard: clean.
+        let guarded = "\
+use std::arch::x86_64::_mm256_setzero_ps;
+fn have() -> bool { is_x86_feature_detected!(\"avx2\") }
+#[target_feature(enable = \"avx2\")]
+unsafe fn k() {}
+";
+        let sf = SourceFile::parse("rust/src/sparse/simd.rs", guarded);
+        let f: Vec<_> = run_all(std::slice::from_ref(&sf), &cfg())
+            .into_iter()
+            .filter(|x| x.rule == "simd")
+            .collect();
+        assert!(f.is_empty(), "{f:?}");
+
+        // target_feature without any runtime detection: flagged even inside
+        // the module (no scalar-fallback witness).
+        let unguarded = "#[target_feature(enable = \"avx2\")]\nunsafe fn k() {}\n";
+        let sf = SourceFile::parse("rust/src/sparse/simd.rs", unguarded);
+        let f: Vec<_> = run_all(std::slice::from_ref(&sf), &cfg())
+            .into_iter()
+            .filter(|x| x.rule == "simd")
+            .collect();
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].message.contains("is_x86_feature_detected"), "{}", f[0].message);
+
+        // A mention in a comment or string must not trip the rule.
+        let commented = "// std::arch is discussed here; \"target_feature\" too\nfn f() {}\n";
+        let sf = SourceFile::parse("rust/src/grad/rtrl.rs", commented);
+        assert!(run_all(std::slice::from_ref(&sf), &cfg()).is_empty());
+
+        // The allow directive silences it with a written reason.
+        let allowed = "\
+// audit: allow(simd) one-off cpuid probe for the bench header
+use std::arch::x86_64::__cpuid;
+fn f() {}
+";
+        let sf = SourceFile::parse("rust/src/benchutil.rs", allowed);
+        assert!(run_all(std::slice::from_ref(&sf), &cfg()).is_empty());
     }
 
     #[test]

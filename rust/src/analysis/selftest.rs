@@ -188,6 +188,46 @@ fn case_serde_format_guard() -> Result<(), String> {
     expect(&fx.audit(&config)?, &[])
 }
 
+fn case_simd_containment() -> Result<(), String> {
+    let fx = Fixture::new("simd")?;
+    // Intrinsics planted outside the kernel module: must be caught.
+    fx.write(
+        "src/grad/fast.rs",
+        "use std::arch::x86_64::_mm256_setzero_ps;\npub fn f() {}\n",
+    )?;
+    let findings = fx.audit(&fx.config())?;
+    expect(&findings, &[("simd", 1)])?;
+    expect_one_containing(&findings, "SparseKernel")?;
+    // Moving them into the kernel module without a detection guard is still
+    // a violation (no scalar-fallback witness)…
+    fx.write("src/grad/fast.rs", "pub fn f() {}\n")?;
+    fx.write(
+        "rust/src/sparse/simd.rs",
+        "#[target_feature(enable = \"avx2\")]\npub unsafe fn k() {}\n",
+    )?;
+    let mut config = fx.config();
+    config.src_dirs.push("rust/src".to_string());
+    config.unsafe_allow.push(allow("rust/src/sparse/simd.rs"));
+    let findings: Vec<Finding> = fx
+        .audit(&config)?
+        .into_iter()
+        .filter(|f| f.rule == "simd")
+        .collect();
+    expect(&findings, &[("simd", 1)])?;
+    expect_one_containing(&findings, "is_x86_feature_detected")?;
+    // …and adding the runtime guard heals it.
+    fx.write(
+        "rust/src/sparse/simd.rs",
+        "pub fn have() -> bool {\n    is_x86_feature_detected!(\"avx2\")\n}\n#[target_feature(enable = \"avx2\")]\npub unsafe fn k() {}\n",
+    )?;
+    let findings: Vec<Finding> = fx
+        .audit(&config)?
+        .into_iter()
+        .filter(|f| f.rule == "simd")
+        .collect();
+    expect(&findings, &[])
+}
+
 fn case_malformed_directives() -> Result<(), String> {
     let fx = Fixture::new("directive")?;
     fx.write(
@@ -207,6 +247,7 @@ const CASES: &[Case] = &[
     ("unsafe-requires-safety-comment", case_unsafe_requires_safety_comment),
     ("determinism-hashmap", case_determinism),
     ("serde-format-guard", case_serde_format_guard),
+    ("simd-containment", case_simd_containment),
     ("malformed-directives", case_malformed_directives),
 ];
 

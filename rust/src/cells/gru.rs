@@ -28,6 +28,7 @@
 //! per-step Jacobian cost is O(nnz(W_h)) — never O(k²).
 
 use super::*;
+use crate::sparse::dynjac::GateFold;
 use crate::tensor::ops::{dsigmoid_from_y, dtanh_from_y, sigmoid};
 
 pub const GATE_Z: u8 = 0;
@@ -47,8 +48,10 @@ pub struct Gru {
     info: Vec<ParamInfo>,
     /// Fixed structural pattern of D_t (∪ of the W_h masks + diagonal).
     d_pat: Pattern,
-    /// Per-gate wh entry t → flat slot in the canonical DynJacobian layout.
-    wh_dslots: [Vec<u32>; 3],
+    /// Gate-blocked band over all k rows of D: the three W_h* gate
+    /// contributions fold into the canonical DynJacobian layout in one
+    /// vectorizable pass per step.
+    fold: GateFold,
     /// Slot of (i, i) per row (the diagonal is always structural here).
     diag_dslots: Vec<u32>,
 }
@@ -123,27 +126,16 @@ impl Gru {
 
         let d_pat = wh_pats[0].union(&wh_pats[1]).union(&wh_pats[2]).with_diagonal();
         let dj = DynJacobian::from_pattern(&d_pat);
-        let wh_dslots = [
-            block_slots(&dj, &wh[0], 0, 0),
-            block_slots(&dj, &wh[1], 0, 0),
-            block_slots(&dj, &wh[2], 0, 0),
-        ];
+        let mut fold = GateFold::new(&dj, 0, k, 3);
+        for (g, lin) in wh.iter().enumerate() {
+            for (p, i, l) in lin.entries() {
+                fold.wire(&dj, g, p, i, l);
+            }
+        }
         let diag_dslots: Vec<u32> =
             (0..k).map(|i| dj.slot_of(i, i).expect("diagonal always structural") as u32).collect();
 
-        Gru {
-            k,
-            input,
-            density,
-            wh,
-            wx,
-            bias_offset,
-            num_params,
-            info,
-            d_pat,
-            wh_dslots,
-            diag_dslots,
-        }
+        Gru { k, input, density, wh, wx, bias_offset, num_params, info, d_pat, fold, diag_dslots }
     }
 }
 
@@ -253,25 +245,15 @@ impl Cell for Gru {
 
     // audit: hot-path
     fn dynamics(&self, theta: &[f32], cache: &Cache, d: &mut DynJacobian) {
-        d.zero();
-        let k = self.k;
+        // One gate-blocked band fold overwrites every structural slot with
+        // the summed W_hz/W_hr/W_ha contributions (vectorized over the
+        // shared column pattern) — O(nnz), no per-gate scatter passes —
+        // then the (1-z)⊙h feed-through lands on the diagonal.
+        let coefs: [&[f32]; 3] = [&cache.bufs[C_CZ], &cache.bufs[C_CR], &cache.bufs[C_CAH]];
+        self.fold.fold_into(d, &coefs, theta);
         let dv = d.vals_mut();
-        for i in 0..k {
-            dv[self.diag_dslots[i] as usize] = 1.0 - cache.bufs[C_Z][i];
-        }
-        // Gate blocks scatter through the precomputed slot maps — O(nnz).
-        for (g, cslot) in [(0usize, C_CZ), (1, C_CR), (2, C_CAH)] {
-            let lin = &self.wh[g];
-            let slots = &self.wh_dslots[g];
-            let coefs = &cache.bufs[cslot];
-            let vals = &theta[lin.val_offset..lin.val_offset + lin.nnz()];
-            for i in 0..k {
-                let c = coefs[i];
-                let (s, e) = (lin.row_ptr[i], lin.row_ptr[i + 1]);
-                for t in s..e {
-                    dv[slots[t] as usize] += c * vals[t];
-                }
-            }
+        for i in 0..self.k {
+            dv[self.diag_dslots[i] as usize] += 1.0 - cache.bufs[C_Z][i];
         }
     }
 

@@ -29,6 +29,7 @@
 //! rows `i` **and** `k+i` — two nonzeros per column (§3.1/§3.3).
 
 use super::*;
+use crate::sparse::dynjac::GateFold;
 use crate::tensor::ops::{dsigmoid_from_y, dtanh_from_y, sigmoid};
 
 pub const GATE_I: u8 = 0;
@@ -49,11 +50,13 @@ pub struct Lstm {
     info: Vec<ParamInfo>,
     /// Fixed structural pattern of D_t.
     d_pat: Pattern,
-    /// Per-gate wh entry t → slot of its h'-row position (u, l).
-    wh_h_dslots: [Vec<u32>; 4],
-    /// Per-gate wh entry t → slot of its c'-row position (k+u, l); empty for
-    /// the o gate, which does not feed c'.
-    wh_c_dslots: [Vec<u32>; 4],
+    /// Gate-blocked band over the h' rows (0..k): all four gates fold in
+    /// one pass, gate order [i, f, o, g] with the i/f/g coefficients
+    /// pre-chained through c' (`chain·c*`, cached in forward).
+    fold_h: GateFold,
+    /// Gate-blocked band over the c' rows (k..2k): the three c'-feeding
+    /// gates, order [i, f, g].
+    fold_c: GateFold,
     /// Slot of (k+u, k+u) — the ∂c'/∂c diagonal.
     diag_cc: Vec<u32>,
     /// Slot of (u, k+u) — the ∂h'/∂c diagonal.
@@ -76,6 +79,9 @@ const C_CF: usize = 9;
 const C_CG: usize = 10;
 const C_CO: usize = 11;
 const C_CHAIN: usize = 12; // o·φ'(c') — the c'→h' chain factor
+const C_HCI: usize = 13; // chain·ci — the i gate's h'-row fold coefficient
+const C_HCF: usize = 14; // chain·cf — f gate, h' row
+const C_HCG: usize = 15; // chain·cg — g gate, h' row
 
 impl Lstm {
     pub fn new(k: usize, input: usize, density: f64, rng: &mut Pcg32) -> Self {
@@ -132,18 +138,18 @@ impl Lstm {
 
         let d_pat = Self::build_dynamics_pattern(k, &wh_pats);
         let dj = DynJacobian::from_pattern(&d_pat);
-        let wh_h_dslots = [
-            block_slots(&dj, &wh[0], 0, 0),
-            block_slots(&dj, &wh[1], 0, 0),
-            block_slots(&dj, &wh[2], 0, 0),
-            block_slots(&dj, &wh[3], 0, 0),
-        ];
-        let wh_c_dslots = [
-            block_slots(&dj, &wh[0], k, 0),
-            block_slots(&dj, &wh[1], k, 0),
-            Vec::new(), // gate o feeds h' only
-            block_slots(&dj, &wh[3], k, 0),
-        ];
+        let mut fold_h = GateFold::new(&dj, 0, k, 4);
+        for (g, lin) in wh.iter().enumerate() {
+            for (p, u, l) in lin.entries() {
+                fold_h.wire(&dj, g, p, u, l);
+            }
+        }
+        let mut fold_c = GateFold::new(&dj, k, k, 3);
+        for (g, lin) in [(0usize, &wh[0]), (1, &wh[1]), (2, &wh[3])] {
+            for (p, u, l) in lin.entries() {
+                fold_c.wire(&dj, g, p, k + u, l);
+            }
+        }
         let diag_cc: Vec<u32> = (0..k)
             .map(|u| dj.slot_of(k + u, k + u).expect("c'←c diagonal structural") as u32)
             .collect();
@@ -161,8 +167,8 @@ impl Lstm {
             num_params,
             info,
             d_pat,
-            wh_h_dslots,
-            wh_c_dslots,
+            fold_h,
+            fold_c,
             diag_cc,
             diag_hc,
         }
@@ -236,7 +242,7 @@ impl Cell for Lstm {
 
     fn make_cache(&self) -> Cache {
         let k = self.k;
-        Cache::with_slots(&[k, k, self.input, k, k, k, k, k, k, k, k, k, k])
+        Cache::with_slots(&[k, k, self.input, k, k, k, k, k, k, k, k, k, k, k, k, k])
     }
 
     // audit: hot-path
@@ -283,12 +289,20 @@ impl Cell for Lstm {
             let phic = c.tanh();
             cache.bufs[C_PHIC][u] = phic;
             hn[u] = og * phic;
-            // Jacobian coefficients, shared by dynamics/immediate.
-            cache.bufs[C_CI][u] = gg * dsigmoid_from_y(ig);
-            cache.bufs[C_CF][u] = cp * dsigmoid_from_y(fg);
-            cache.bufs[C_CG][u] = ig * dtanh_from_y(gg);
+            // Jacobian coefficients, shared by dynamics/immediate (the
+            // chain-scaled copies feed the h'-row gate fold).
+            let ci = gg * dsigmoid_from_y(ig);
+            let cf = cp * dsigmoid_from_y(fg);
+            let cg = ig * dtanh_from_y(gg);
+            let chain = og * dtanh_from_y(phic);
+            cache.bufs[C_CI][u] = ci;
+            cache.bufs[C_CF][u] = cf;
+            cache.bufs[C_CG][u] = cg;
             cache.bufs[C_CO][u] = phic * dsigmoid_from_y(og);
-            cache.bufs[C_CHAIN][u] = og * dtanh_from_y(phic);
+            cache.bufs[C_CHAIN][u] = chain;
+            cache.bufs[C_HCI][u] = chain * ci;
+            cache.bufs[C_HCF][u] = chain * cf;
+            cache.bufs[C_HCG][u] = chain * cg;
         }
         cache.bufs[C_HPREV].copy_from_slice(h_prev);
         cache.bufs[C_CPREV].copy_from_slice(c_prev);
@@ -297,47 +311,21 @@ impl Cell for Lstm {
 
     // audit: hot-path
     fn dynamics(&self, theta: &[f32], cache: &Cache, d: &mut DynJacobian) {
-        d.zero();
-        let k = self.k;
+        // Two gate-blocked band folds overwrite every structural slot —
+        // the h' rows fold all four gates in one vectorizable pass (i/f/g
+        // pre-chained through c', o direct), the c' rows fold i/f/g — then
+        // the two diagonal c-bands accumulate on top (their slots are never
+        // wired into a gate, so the folds leave exact zeros there).
+        let hcoefs: [&[f32]; 4] =
+            [&cache.bufs[C_HCI], &cache.bufs[C_HCF], &cache.bufs[C_CO], &cache.bufs[C_HCG]];
+        self.fold_h.fold_into(d, &hcoefs, theta);
+        let ccoefs: [&[f32]; 3] = [&cache.bufs[C_CI], &cache.bufs[C_CF], &cache.bufs[C_CG]];
+        self.fold_c.fold_into(d, &ccoefs, theta);
         let dv = d.vals_mut();
-        // ∂c'/∂c and ∂h'/∂c diagonal bands (disjoint from the weight slots).
-        for u in 0..k {
+        for u in 0..self.k {
             let fg = cache.bufs[C_F][u];
-            let chain = cache.bufs[C_CHAIN][u];
-            dv[self.diag_cc[u] as usize] = fg;
-            dv[self.diag_hc[u] as usize] = chain * fg;
-        }
-        // h-dependence through the three c'-feeding gates: each kept weight
-        // scatters into its c'-row slot and (chained) h'-row slot.
-        for (g, cslot) in [(0usize, C_CI), (1, C_CF), (3, C_CG)] {
-            let lin = &self.wh[g];
-            let c_slots = &self.wh_c_dslots[g];
-            let h_slots = &self.wh_h_dslots[g];
-            let coefs = &cache.bufs[cslot];
-            let chain = &cache.bufs[C_CHAIN];
-            let vals = &theta[lin.val_offset..lin.val_offset + lin.nnz()];
-            for u in 0..k {
-                let c = coefs[u];
-                let ch = chain[u];
-                let (s, e) = (lin.row_ptr[u], lin.row_ptr[u + 1]);
-                for t in s..e {
-                    let w = c * vals[t];
-                    dv[c_slots[t] as usize] += w;
-                    dv[h_slots[t] as usize] += ch * w;
-                }
-            }
-        }
-        // o-gate affects h' only.
-        let lin = &self.wh[2];
-        let h_slots = &self.wh_h_dslots[2];
-        let co = &cache.bufs[C_CO];
-        let vals = &theta[lin.val_offset..lin.val_offset + lin.nnz()];
-        for u in 0..k {
-            let c = co[u];
-            let (s, e) = (lin.row_ptr[u], lin.row_ptr[u + 1]);
-            for t in s..e {
-                dv[h_slots[t] as usize] += c * vals[t];
-            }
+            dv[self.diag_cc[u] as usize] += fg;
+            dv[self.diag_hc[u] as usize] += cache.bufs[C_CHAIN][u] * fg;
         }
     }
 

@@ -7,8 +7,10 @@
 //!   as a CSR [`DynJacobian`] on the fixed structural pattern
 //!   ([`Cell::dynamics_pattern`]: the union of the recurrent weight masks
 //!   plus the cell's diagonal/gate bands). Cells refresh only the structural
-//!   nonzeros — O(nnz(W_h)) per step, never O(k²) — through slot maps
-//!   precomputed at construction ([`block_slots`]).
+//!   nonzeros — O(nnz(W_h)) per step, never O(k²) — through gate-blocked
+//!   band folds wired at construction
+//!   ([`crate::sparse::dynjac::GateFold`]; [`block_slots`] is the
+//!   per-entry slot-map variant kept for custom cells).
 //! * `I_t = ∂s_t/∂θ_t` — the *immediate* Jacobian (state × params), stored
 //!   compressed ([`ImmediateJac`]) because it has ≤2 nonzero rows per column
 //!   (paper §3.1).

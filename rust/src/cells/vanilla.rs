@@ -6,6 +6,7 @@
 //! `I_t` has exactly one nonzero row per parameter column (§3.1).
 
 use super::*;
+use crate::sparse::dynjac::GateFold;
 use crate::tensor::ops::dtanh_from_y;
 
 pub struct Vanilla {
@@ -19,14 +20,16 @@ pub struct Vanilla {
     info: Vec<ParamInfo>,
     /// Fixed structural pattern of D_t (== pat(W_h)).
     d_pat: Pattern,
-    /// wh entry t → flat slot in the canonical DynJacobian layout.
-    wh_dslots: Vec<u32>,
+    /// Single-gate band over all k rows: the per-step D refresh is one
+    /// vectorizable fold of `φ'(h_i) · W_h[i,l]`.
+    fold: GateFold,
 }
 
 /// Cache slots.
 const C_HPREV: usize = 0;
 const C_X: usize = 1;
 const C_HNEXT: usize = 2;
+const C_DPHI: usize = 3; // tanh'(h_next) — the dynamics/immediate coefficient
 
 impl Vanilla {
     pub fn new(k: usize, input: usize, density: f64, rng: &mut Pcg32) -> Self {
@@ -50,9 +53,12 @@ impl Vanilla {
 
         let d_pat = wh.pattern();
         let dj = DynJacobian::from_pattern(&d_pat);
-        let wh_dslots = block_slots(&dj, &wh, 0, 0);
+        let mut fold = GateFold::new(&dj, 0, k, 1);
+        for (p, i, l) in wh.entries() {
+            fold.wire(&dj, 0, p, i, l);
+        }
 
-        Vanilla { k, input, density, wh, wx, bias_offset, num_params, info, d_pat, wh_dslots }
+        Vanilla { k, input, density, wh, wx, bias_offset, num_params, info, d_pat, fold }
     }
 
     /// The recurrent weight mask (needed by pruning / pattern analyses).
@@ -103,7 +109,7 @@ impl Cell for Vanilla {
     }
 
     fn make_cache(&self) -> Cache {
-        Cache::with_slots(&[self.k, self.input, self.k])
+        Cache::with_slots(&[self.k, self.input, self.k, self.k])
     }
 
     // audit: hot-path
@@ -122,8 +128,10 @@ impl Cell for Vanilla {
         s_next.copy_from_slice(&theta[self.bias_offset..self.bias_offset + self.k]);
         self.wh.matvec_acc(theta, s_prev, s_next);
         self.wx.matvec_acc(theta, x, s_next);
-        for v in s_next.iter_mut() {
+        for (v, dp) in s_next.iter_mut().zip(cache.bufs[C_DPHI].iter_mut()) {
             *v = v.tanh();
+            // Jacobian coefficient, shared by dynamics/immediate.
+            *dp = dtanh_from_y(*v);
         }
         cache.bufs[C_HPREV].copy_from_slice(s_prev);
         cache.bufs[C_X].copy_from_slice(x);
@@ -132,19 +140,11 @@ impl Cell for Vanilla {
 
     // audit: hot-path
     fn dynamics(&self, theta: &[f32], cache: &Cache, d: &mut DynJacobian) {
-        debug_assert_eq!(d.nnz(), self.wh_dslots.len());
-        let h = &cache.bufs[C_HNEXT];
-        let vals = &theta[self.wh.val_offset..self.wh.val_offset + self.wh.nnz()];
-        let dv = d.vals_mut();
-        // Every structural slot is written exactly once (pat(D) == pat(W_h)),
-        // so no zeroing pass is needed.
-        for i in 0..self.k {
-            let coef = dtanh_from_y(h[i]);
-            let (s, e) = (self.wh.row_ptr[i], self.wh.row_ptr[i + 1]);
-            for t in s..e {
-                dv[self.wh_dslots[t] as usize] = coef * vals[t];
-            }
-        }
+        debug_assert_eq!(d.nnz(), self.wh.nnz());
+        // pat(D) == pat(W_h): a single-gate band fold overwrites every
+        // structural slot with `φ'(h_i)·W_h[i,l]` in one vectorizable pass.
+        let coefs: [&[f32]; 1] = [&cache.bufs[C_DPHI]];
+        self.fold.fold_into(d, &coefs, theta);
     }
 
     fn dynamics_pattern(&self) -> Pattern {
@@ -158,12 +158,12 @@ impl Cell for Vanilla {
 
     // audit: hot-path
     fn immediate(&self, cache: &Cache, i_jac: &mut ImmediateJac) {
-        let h = &cache.bufs[C_HNEXT];
+        let dphi = &cache.bufs[C_DPHI];
         let hp = &cache.bufs[C_HPREV];
         let x = &cache.bufs[C_X];
         let vals = i_jac.vals_mut();
         for (j, p) in self.info.iter().enumerate() {
-            let coef = dtanh_from_y(h[p.unit as usize]);
+            let coef = dphi[p.unit as usize];
             vals[j] = coef
                 * match p.src {
                     Src::PrevH(l) => hp[l as usize],

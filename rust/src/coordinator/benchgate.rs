@@ -325,6 +325,14 @@ impl BenchFile {
 
 /// Identity string: every non-measurement field, sorted by key so field
 /// order in the file cannot break matching.
+///
+/// `kernel` is part of identity: a scalar row must never be compared
+/// against a SIMD row of the same configuration (that silent cross-compare
+/// would read the SIMD speedup as a scalar "regression", or vice versa).
+/// Rows written before the kernel sweep existed carry no `kernel` field;
+/// they measured the scalar code paths, so the implicit `kernel=scalar` is
+/// injected here to keep pre-sweep baselines matchable against the scalar
+/// half of a post-sweep run.
 fn row_identity(row: &Json) -> Option<String> {
     let Json::Obj(fields) = row else { return None };
     let mut parts: Vec<String> = fields
@@ -336,6 +344,9 @@ fn row_identity(row: &Json) -> Option<String> {
             other => format!("{k}={other:?}"),
         })
         .collect();
+    if !fields.iter().any(|(k, _)| k == "kernel") {
+        parts.push("kernel=scalar".to_string());
+    }
     parts.sort();
     Some(parts.join(" "))
 }
@@ -536,8 +547,32 @@ mod tests {
         assert_eq!(parsed.bench, "lane_throughput");
         assert!(!parsed.provisional);
         assert_eq!(parsed.rows.len(), 2);
-        assert_eq!(parsed.rows[0].0, "mode=persistent workers=2");
+        // No "kernel" field in the row: the implicit scalar tag is injected.
+        assert_eq!(parsed.rows[0].0, "kernel=scalar mode=persistent workers=2");
         assert_eq!(parsed.rows[0].1, 123.5);
+    }
+
+    #[test]
+    fn kernel_field_is_identity_and_defaults_to_scalar() {
+        let row = |kernel: Option<&str>| {
+            let mut fields = vec![
+                ("method".to_string(), Json::Str("snap-2".into())),
+                ("steps_per_sec".to_string(), Json::Num(100.0)),
+            ];
+            if let Some(k) = kernel {
+                fields.push(("kernel".to_string(), Json::Str(k.into())));
+            }
+            Json::Obj(fields)
+        };
+        // Pre-sweep rows (no field) match the scalar half of a new run...
+        assert_eq!(row_identity(&row(None)).unwrap(), row_identity(&row(Some("scalar"))).unwrap());
+        // ...and never the SIMD half: scalar-vs-SIMD A/B rows are distinct
+        // identities, so the gate cannot silently cross-compare them.
+        assert_ne!(
+            row_identity(&row(Some("scalar"))).unwrap(),
+            row_identity(&row(Some("simd"))).unwrap()
+        );
+        assert_eq!(row_identity(&row(Some("simd"))).unwrap(), "kernel=simd method=snap-2");
     }
 
     #[test]

@@ -97,12 +97,13 @@ Experiment commands (one per paper table/figure):
 
 Training commands:
   train    Char-LM single run    [--method --arch --k --sparsity --steps --lr --trunc --batch
-                                  --dataset --workers --prefetch --checkpoint-every --resume]
+                                  --dataset --workers --prefetch --kernel --checkpoint-every
+                                  --resume]
   copy     Copy-task single run  [--method --arch --k --sparsity --steps --lr --trunc --batch
-                                  --workers --prefetch --checkpoint-every --resume]
+                                  --workers --prefetch --kernel --checkpoint-every --resume]
   file-lm  File-corpus preset: end-to-end char-LM over --dataset (required), writing
            results/file_lm_metrics.json + file_lm_curve.csv — the CI dataset-smoke job
-           [--steps --k --batch --workers --seq-len --checkpoint-every --resume]
+           [--steps --k --batch --workers --seq-len --kernel --checkpoint-every --resume]
 
 Checkpoint / resume (training commands; online runs must survive a kill):
   --checkpoint-every N  snapshot the FULL training state after every N steps (0 = off,
@@ -155,9 +156,11 @@ CI commands:
               regression beyond tolerance  [--baseline --current --tolerance 0.25
               --normalize --strict]  (see rust/benches/baselines/README.md)
   audit       Static analysis of this repo's own source: hot-path allocation lint,
-              unsafe audit, determinism lint, serde-format guard. Exits nonzero on
-              any finding (path:line: [rule] message)  [--root --json --self-test
-              --repin-serde]
+              unsafe audit, determinism lint, serde-format guard, SIMD containment
+              (std::arch / #[target_feature] only in rust/src/sparse/simd.rs, and
+              only behind runtime feature detection with a scalar fallback). Exits
+              nonzero on any finding (path:line: [rule] message)  [--root --json
+              --self-test --repin-serde]
               Annotation grammar (line comments only):
                 // audit: hot-path            the next {...} block is allocation-free
                 // audit: allow(RULE) REASON  silence RULE on this line + the next
@@ -166,6 +169,18 @@ CI commands:
               CHECKPOINT_VERSION). See rust/src/analysis/ for the rule definitions.
 
 Throughput knobs (training results are bitwise identical for any setting):
+  --kernel K      sparse-kernel implementation every DynJacobian product and
+                  gate-blocked refresh dispatches through, resolved ONCE at
+                  startup (train, copy, file-lm, serve, step_costs bench):
+                    auto    (default) simd when the CPU has AVX2+FMA, else scalar
+                    scalar  portable reference kernels
+                    simd    gate-blocked AVX2/FMA kernels (scalar fallback if
+                            the CPU lacks them)
+                  Checkpoints do not record the kernel (blobs are kernel-
+                  agnostic); scalar and simd agree to ~1e-6 per step, so keep
+                  the flag consistent across a checkpoint lineage when bitwise
+                  reproducibility matters. Unsafe/intrinsics stay confined to
+                  rust/src/sparse/simd.rs (enforced by the audit `simd` rule).
   --workers N     step the minibatch lanes on N threads from a persistent
                   worker pool (0 = all cores; default 1). The one exception:
                   Copy with --trunc > 0 and N > 1 switches to the batched-
@@ -182,7 +197,7 @@ Serving (session-multiplexed online adaptation):
            LRU residency spilling cold sessions to disk and restoring them
            bitwise.  [--sessions 1000 --resident 128 --lanes 32 --workers 1
            --ticks 64 --seed 1 --arch gru --method snap-1 --k 32 --lr 1e-3
-           --embed-dim 16 --readout-hidden 32 --queue-cap 4*lanes
+           --embed-dim 16 --readout-hidden 32 --kernel auto --queue-cap 4*lanes
            --spill-dir results/serve_spill --curves-dir DIR
            --checkpoint PATH --resume PATH --kill-after T --bench-json PATH]
            Session lifecycle: admit (derived from (seed, id)) -> submit

@@ -792,6 +792,8 @@ fn config_from_args_with(args: &Args, d: &TrainConfig) -> TrainConfig {
             .or_else(|| d.checkpoint_dir.clone()),
         checkpoint_keep: args.usize_or("checkpoint-keep", d.checkpoint_keep),
         resume_from: args.get("resume").map(PathBuf::from).or_else(|| d.resume_from.clone()),
+        kernel: crate::sparse::KernelChoice::parse(&args.str_or("kernel", d.kernel.name()))
+            .expect("bad --kernel (auto|scalar|simd)"),
         ..d.clone()
     }
 }

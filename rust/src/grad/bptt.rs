@@ -61,6 +61,12 @@ impl<'c> Bptt<'c> {
     pub fn window_len(&self) -> usize {
         self.caches.len()
     }
+
+    /// Tag the dynamics Jacobian's [`SparseKernel`](crate::sparse::SparseKernel)
+    /// implementation (construction-time choice — see `SparsityPlan::kernel`).
+    pub fn set_kernel(&mut self, kernel: crate::sparse::simd::KernelKind) {
+        self.d.set_kernel(kernel);
+    }
 }
 
 impl GradAlgo for Bptt<'_> {

@@ -41,6 +41,7 @@ pub use rflo::Rflo;
 use crate::cells::Cell;
 use crate::errors::Result;
 use crate::runtime::serde::{Reader, Writer};
+use crate::sparse::simd::KernelKind;
 use crate::tensor::rng::Pcg32;
 
 /// Uniform interface over the gradient algorithms.
@@ -135,11 +136,16 @@ pub struct SparsityPlan {
     /// instance overwrites it from the checkpoint blob, so `(0, 1)` is a
     /// fine placeholder when a `load_state` follows.
     pub uoro_stream: (u64, u64),
+    /// Which [`SparseKernel`](crate::sparse::SparseKernel) implementation the
+    /// algorithm's dynamics Jacobian dispatches to. Defaults to
+    /// [`KernelKind::Scalar`] (bit-for-bit the historical loops); the drivers
+    /// resolve the user's `--kernel` choice once and thread it through here.
+    pub kernel: KernelKind,
 }
 
 impl Default for SparsityPlan {
     fn default() -> Self {
-        SparsityPlan { rflo_leak: 1.0, uoro_stream: (0, 1) }
+        SparsityPlan { rflo_leak: 1.0, uoro_stream: (0, 1), kernel: KernelKind::Scalar }
     }
 }
 
@@ -153,7 +159,14 @@ impl SparsityPlan {
             Method::Uoro => rng.split(0x714c).state_parts(),
             _ => (0, 1),
         };
-        SparsityPlan { rflo_leak: 1.0, uoro_stream }
+        SparsityPlan { rflo_leak: 1.0, uoro_stream, kernel: KernelKind::Scalar }
+    }
+
+    /// Same plan, different kernel — combinator form so construction sites
+    /// can write `SparsityPlan::for_lane(m, rng).with_kernel(k)`.
+    pub fn with_kernel(mut self, kernel: KernelKind) -> Self {
+        self.kernel = kernel;
+        self
     }
 }
 
@@ -171,15 +184,39 @@ impl dyn GradAlgo {
         plan: &SparsityPlan,
     ) -> Box<dyn GradAlgo + 'c> {
         match method {
-            Method::Bptt | Method::Frozen => Box::new(Bptt::new(cell)),
-            Method::Rtrl => Box::new(Rtrl::new(cell, false)),
-            Method::SparseRtrl => Box::new(Rtrl::new(cell, true)),
-            Method::Snap(n) => Box::new(Snap::new(cell, n)),
-            Method::SnapTopK(b) => Box::new(SnapTopK::new(cell, b)),
-            Method::Uoro => Box::new(Uoro::new(
-                cell,
-                Pcg32::from_parts(plan.uoro_stream.0, plan.uoro_stream.1),
-            )),
+            Method::Bptt | Method::Frozen => {
+                let mut a = Bptt::new(cell);
+                a.set_kernel(plan.kernel);
+                Box::new(a)
+            }
+            Method::Rtrl => {
+                let mut a = Rtrl::new(cell, false);
+                a.set_kernel(plan.kernel);
+                Box::new(a)
+            }
+            Method::SparseRtrl => {
+                let mut a = Rtrl::new(cell, true);
+                a.set_kernel(plan.kernel);
+                Box::new(a)
+            }
+            Method::Snap(n) => {
+                let mut a = Snap::new(cell, n);
+                a.set_kernel(plan.kernel);
+                Box::new(a)
+            }
+            Method::SnapTopK(b) => {
+                let mut a = SnapTopK::new(cell, b);
+                a.set_kernel(plan.kernel);
+                Box::new(a)
+            }
+            Method::Uoro => {
+                let mut a =
+                    Uoro::new(cell, Pcg32::from_parts(plan.uoro_stream.0, plan.uoro_stream.1));
+                a.set_kernel(plan.kernel);
+                Box::new(a)
+            }
+            // RFLO tracks on the immediate-Jacobian pattern only — it never
+            // touches a DynJacobian, so there is nothing to tag.
             Method::Rflo => Box::new(Rflo::new(cell, plan.rflo_leak)),
         }
     }
@@ -246,7 +283,20 @@ impl Method {
     /// to [`<dyn GradAlgo>::build`](GradAlgo#method.build), so this is
     /// bitwise identical to the historical per-method constructors.
     pub fn build<'c>(&self, cell: &'c dyn Cell, rng: &mut Pcg32) -> Box<dyn GradAlgo + 'c> {
-        let plan = SparsityPlan::for_lane(*self, rng);
+        self.build_with_kernel(cell, rng, KernelKind::Scalar)
+    }
+
+    /// [`Method::build`] with an explicit sparse-kernel choice: the lane
+    /// executor and serve runtime resolve `--kernel` once at startup and
+    /// construct every lane/session through here, so the hot loops carry a
+    /// statically-matched [`KernelKind`] tag instead of per-step dispatch.
+    pub fn build_with_kernel<'c>(
+        &self,
+        cell: &'c dyn Cell,
+        rng: &mut Pcg32,
+        kernel: KernelKind,
+    ) -> Box<dyn GradAlgo + 'c> {
+        let plan = SparsityPlan::for_lane(*self, rng).with_kernel(kernel);
         <dyn GradAlgo>::build(*self, cell, &plan)
     }
 

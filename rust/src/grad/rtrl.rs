@@ -57,6 +57,12 @@ impl<'c> Rtrl<'c> {
     pub fn influence(&self) -> &Matrix {
         &self.j
     }
+
+    /// Tag the dynamics Jacobian's [`SparseKernel`](crate::sparse::SparseKernel)
+    /// implementation (construction-time choice — see `SparsityPlan::kernel`).
+    pub fn set_kernel(&mut self, kernel: crate::sparse::simd::KernelKind) {
+        self.d.set_kernel(kernel);
+    }
 }
 
 impl GradAlgo for Rtrl<'_> {

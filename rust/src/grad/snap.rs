@@ -74,6 +74,14 @@ impl<'c> Snap<'c> {
     pub fn influence(&self) -> &ColJacobian {
         &self.j
     }
+
+    /// Tag the dynamics Jacobian's [`SparseKernel`](crate::sparse::SparseKernel)
+    /// implementation (construction-time choice — see `SparsityPlan::kernel`).
+    /// The [`ColJacobian`] update reads the tag off `d`, so one call covers
+    /// both the refresh and the pattern-restricted product.
+    pub fn set_kernel(&mut self, kernel: crate::sparse::simd::KernelKind) {
+        self.d.set_kernel(kernel);
+    }
 }
 
 impl GradAlgo for Snap<'_> {

@@ -73,6 +73,12 @@ impl<'c> SnapTopK<'c> {
     pub fn influence_nnz(&self) -> usize {
         self.j.nnz(0.0)
     }
+
+    /// Tag the dynamics Jacobian's [`SparseKernel`](crate::sparse::SparseKernel)
+    /// implementation (construction-time choice — see `SparsityPlan::kernel`).
+    pub fn set_kernel(&mut self, kernel: crate::sparse::simd::KernelKind) {
+        self.d.set_kernel(kernel);
+    }
 }
 
 impl GradAlgo for SnapTopK<'_> {

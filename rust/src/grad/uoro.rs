@@ -68,6 +68,12 @@ impl<'c> Uoro<'c> {
     pub fn factors(&self) -> (&[f32], &[f32]) {
         (&self.u, &self.v)
     }
+
+    /// Tag the dynamics Jacobian's [`SparseKernel`](crate::sparse::SparseKernel)
+    /// implementation (construction-time choice — see `SparsityPlan::kernel`).
+    pub fn set_kernel(&mut self, kernel: crate::sparse::simd::KernelKind) {
+        self.d.set_kernel(kernel);
+    }
 }
 
 fn norm(xs: &[f32]) -> f32 {

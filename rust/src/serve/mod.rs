@@ -48,6 +48,7 @@ use crate::coordinator::Args;
 use crate::errors::{Error, Result};
 use crate::grad::Method;
 use crate::models::{Embedding, Readout};
+use crate::sparse::simd::KernelChoice;
 use crate::tensor::rng::Pcg32;
 use crate::train::config::TrainConfig;
 use crate::train::stepper::Stepper;
@@ -75,6 +76,9 @@ pub fn run_serve_cli(args: &Args) -> Result<()> {
     let lr = args.f32_or("lr", 1e-3);
     let embed_dim = args.usize_or("embed-dim", 16);
     let readout_hidden = args.usize_or("readout-hidden", 32);
+    let kernel_s = args.str_or("kernel", "auto");
+    let kernel = KernelChoice::parse(&kernel_s)
+        .ok_or_else(|| Error::msg(format!("unknown --kernel '{kernel_s}' (auto|scalar|simd)")))?;
     let queue_cap = args.usize_or("queue-cap", lanes.saturating_mul(4));
     let kill_after = args.u64_or("kill-after", 0);
     let checkpoint = args.get("checkpoint").map(PathBuf::from);
@@ -102,14 +106,16 @@ pub fn run_serve_cli(args: &Args) -> Result<()> {
         .embed_dim(embed_dim)
         .readout_hidden(readout_hidden)
         .seed(seed)
+        .kernel(kernel)
         .build()?;
+    let kernel_kind = cfg.kernel.resolve();
 
     let mut rng = Pcg32::seeded(cfg.seed);
     let cell = cfg.arch.build(cfg.k, cfg.embed_dim, cfg.density, &mut rng);
     let embed = Embedding::new(256, cfg.embed_dim, &mut rng);
     let readout = Readout::new(cell.hidden_size(), cfg.readout_hidden, 256, &mut rng);
     let stepper = Stepper::new(&cfg, cell.as_ref(), embed, readout, &mut rng);
-    let store = SessionStore::new(method, cell.as_ref(), &spill_dir, resident)?;
+    let store = SessionStore::new(method, cell.as_ref(), kernel_kind, &spill_dir, resident)?;
     let meta = ServeMeta {
         seed,
         k: k as u64,
@@ -125,7 +131,7 @@ pub fn run_serve_cli(args: &Args) -> Result<()> {
             for id in 0..sessions {
                 server.admit(
                     Session::new(seed, id),
-                    Session::build_algo(seed, id, method, cell.as_ref()),
+                    Session::build_algo(seed, id, method, cell.as_ref(), kernel_kind),
                 )?;
             }
             server
@@ -142,7 +148,8 @@ pub fn run_serve_cli(args: &Args) -> Result<()> {
     );
     println!(
         "serve: {population} sessions (resident cap {resident}), {lanes} lanes, \
-         method {method_s}, arch {arch_s}, k {k}, queue cap {queue_cap}"
+         method {method_s}, arch {arch_s}, k {k}, queue cap {queue_cap}, kernel {}",
+        crate::sparse::SparseKernel::name(&kernel_kind)
     );
 
     let mut latencies: Vec<Duration> = Vec::new();

@@ -15,6 +15,7 @@ use crate::cells::Cell;
 use crate::errors::Result;
 use crate::grad::{GradAlgo, Method, SparsityPlan};
 use crate::runtime::serde::{decode_container, encode_container, Reader, Writer};
+use crate::sparse::simd::KernelKind;
 use crate::tensor::rng::Pcg32;
 
 /// Version of the per-session spill blob. Independent of
@@ -57,15 +58,18 @@ impl Session {
 
     /// Deterministic fresh tracking state for this session (same
     /// `(seed, id)`-only derivation; the UORO perturbation stream gets its
-    /// own split so methods never share draws).
+    /// own split so methods never share draws). `kernel` is the server's
+    /// resolved sparse-kernel choice — identity-only: it never changes the
+    /// stream, only how fast the tracking math runs.
     pub fn build_algo<'c>(
         seed: u64,
         id: u64,
         method: Method,
         cell: &'c dyn Cell,
+        kernel: KernelKind,
     ) -> Box<dyn GradAlgo + 'c> {
         let mut rng = Pcg32::new(seed ^ 0xa160_5eed, id);
-        let plan = SparsityPlan::for_lane(method, &mut rng);
+        let plan = SparsityPlan::for_lane(method, &mut rng).with_kernel(kernel);
         <dyn GradAlgo>::build(method, cell, &plan)
     }
 }
@@ -97,6 +101,7 @@ pub fn decode_session<'c>(
     bytes: &[u8],
     method: Method,
     cell: &'c dyn Cell,
+    kernel: KernelKind,
 ) -> Result<(Session, Box<dyn GradAlgo + 'c>)> {
     let payload = decode_container(bytes, SESSION_BLOB_VERSION)?;
     let mut r = Reader::new(payload);
@@ -113,8 +118,9 @@ pub fn decode_session<'c>(
     let algo_blob = r.get_bytes()?;
     r.expect_end()?;
     // The plan only seeds construction-time streams; load_state overwrites
-    // every mutable float, so the default plan restores bitwise.
-    let mut algo = <dyn GradAlgo>::build(method, cell, &SparsityPlan::default());
+    // every mutable float, so the default plan (plus the server's kernel
+    // tag) restores bitwise.
+    let mut algo = <dyn GradAlgo>::build(method, cell, &SparsityPlan::default().with_kernel(kernel));
     algo.load_state(&mut Reader::new(&algo_blob))
         .map_err(|e| e.context(format!("restoring session {id} tracking state")))?;
     Ok((Session { id, rng: Pcg32::from_parts(state, inc), prev, steps, curve }, algo))
@@ -140,7 +146,8 @@ mod tests {
         let cell = crate::cells::Arch::Gru.build(8, 4, 1.0, &mut rng);
         for method in [Method::Snap(1), Method::Uoro, Method::Bptt] {
             let mut session = Session::new(9, 5);
-            let mut algo = Session::build_algo(9, 5, method, cell.as_ref());
+            let mut algo =
+                Session::build_algo(9, 5, method, cell.as_ref(), KernelKind::Scalar);
             // Advance so the blob carries non-initial state.
             let x = vec![0.1f32; 4];
             let theta = cell.init_params(&mut Pcg32::seeded(4));
@@ -154,7 +161,7 @@ mod tests {
 
             let blob = encode_session(&session, algo.as_ref());
             let (restored, restored_algo) =
-                decode_session(&blob, method, cell.as_ref()).unwrap();
+                decode_session(&blob, method, cell.as_ref(), KernelKind::Scalar).unwrap();
             assert_eq!(restored.id, session.id);
             assert_eq!(restored.rng.state_parts(), session.rng.state_parts());
             assert_eq!(restored.prev, session.prev);
@@ -170,10 +177,11 @@ mod tests {
         let mut rng = Pcg32::seeded(3);
         let cell = crate::cells::Arch::Gru.build(8, 4, 1.0, &mut rng);
         let session = Session::new(1, 1);
-        let algo = Session::build_algo(1, 1, Method::Snap(1), cell.as_ref());
+        let algo = Session::build_algo(1, 1, Method::Snap(1), cell.as_ref(), KernelKind::Scalar);
         let mut blob = encode_session(&session, algo.as_ref());
         blob[8] = blob[8].wrapping_add(1);
-        let e = decode_session(&blob, Method::Snap(1), cell.as_ref()).unwrap_err();
+        let e =
+            decode_session(&blob, Method::Snap(1), cell.as_ref(), KernelKind::Scalar).unwrap_err();
         assert!(e.to_string().contains("version"), "{e}");
     }
 }

@@ -17,6 +17,7 @@ use crate::cells::Cell;
 use crate::errors::Result;
 use crate::grad::{GradAlgo, Method};
 use crate::serve::session::{decode_session, encode_session, Session};
+use crate::sparse::simd::KernelKind;
 use std::path::{Path, PathBuf};
 
 enum Residency<'c> {
@@ -38,6 +39,9 @@ struct Entry<'c> {
 pub struct SessionStore<'c> {
     method: Method,
     cell: &'c dyn Cell,
+    /// Resolved sparse-kernel choice, tagged onto every restored session's
+    /// tracking state (identity-only; the blob format is kernel-agnostic).
+    kernel: KernelKind,
     spill_dir: PathBuf,
     resident_cap: usize,
     entries: Vec<Entry<'c>>,
@@ -50,6 +54,7 @@ impl<'c> SessionStore<'c> {
     pub fn new(
         method: Method,
         cell: &'c dyn Cell,
+        kernel: KernelKind,
         spill_dir: &Path,
         resident_cap: usize,
     ) -> Result<SessionStore<'c>> {
@@ -62,6 +67,7 @@ impl<'c> SessionStore<'c> {
         Ok(SessionStore {
             method,
             cell,
+            kernel,
             spill_dir: spill_dir.to_path_buf(),
             resident_cap: resident_cap.max(1),
             entries: Vec::new(),
@@ -151,7 +157,7 @@ impl<'c> SessionStore<'c> {
                         path.display()
                     ))
                 })?;
-                let (session, algo) = decode_session(&bytes, self.method, self.cell)
+                let (session, algo) = decode_session(&bytes, self.method, self.cell, self.kernel)
                     .map_err(|e| {
                         e.context(format!("restoring spilled session '{}'", path.display()))
                     })?;
@@ -259,10 +265,12 @@ mod tests {
         let mut rng = Pcg32::seeded(2);
         let cell = crate::cells::Arch::Gru.build(8, 4, 1.0, &mut rng);
         let dir = tmp("lru");
-        let mut store = SessionStore::new(Method::Snap(1), cell.as_ref(), &dir, 2).unwrap();
+        let mut store =
+            SessionStore::new(Method::Snap(1), cell.as_ref(), KernelKind::Scalar, &dir, 2)
+                .unwrap();
         for id in 0..5u64 {
             let s = Session::new(1, id);
-            let a = Session::build_algo(1, id, Method::Snap(1), cell.as_ref());
+            let a = Session::build_algo(1, id, Method::Snap(1), cell.as_ref(), KernelKind::Scalar);
             store.admit(s, a).unwrap();
         }
         assert_eq!(store.len(), 5);
@@ -282,12 +290,14 @@ mod tests {
         let mut rng = Pcg32::seeded(2);
         let cell = crate::cells::Arch::Gru.build(8, 4, 1.0, &mut rng);
         let dir = tmp("dups");
-        let mut store = SessionStore::new(Method::Snap(1), cell.as_ref(), &dir, 4).unwrap();
+        let mut store =
+            SessionStore::new(Method::Snap(1), cell.as_ref(), KernelKind::Scalar, &dir, 4)
+                .unwrap();
         let s = Session::new(1, 7);
-        let a = Session::build_algo(1, 7, Method::Snap(1), cell.as_ref());
+        let a = Session::build_algo(1, 7, Method::Snap(1), cell.as_ref(), KernelKind::Scalar);
         store.admit(s, a).unwrap();
         let s = Session::new(1, 7);
-        let a = Session::build_algo(1, 7, Method::Snap(1), cell.as_ref());
+        let a = Session::build_algo(1, 7, Method::Snap(1), cell.as_ref(), KernelKind::Scalar);
         let e = store.admit(s, a).unwrap_err();
         assert!(e.to_string().contains("already admitted"), "{e}");
         let e = store.take(99).unwrap_err();

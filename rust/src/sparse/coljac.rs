@@ -26,6 +26,7 @@
 use crate::sparse::dynjac::DynJacobian;
 use crate::sparse::immediate::ImmediateJac;
 use crate::sparse::pattern::Pattern;
+use crate::sparse::simd::SparseKernel;
 use crate::tensor::matrix::Matrix;
 
 /// Above this many update FLOPs the masked product fans out across threads
@@ -425,22 +426,16 @@ fn update_runs(
         // Gather Dsub column-major: dsub[m_slot*n + r_slot] = D[rows[r_slot], rows[m_slot]].
         let dsub = &mut scratch.dsub[..n * n];
         d.gather_block(rows, dsub);
-        // Every column in the run: out = Dsub · old  (contiguous AXPYs).
+        // Every column in the run: out = Dsub · old — the small dense GEMV
+        // dispatched through D's kernel tag (the SIMD path runs 8 rows of
+        // Dsub per FMA; the scalar path is the historical AXPY loop).
+        let kernel = d.kernel();
         for j in j_start..j_end {
             let (s, e) = (col_ptr[j], col_ptr[j + 1]);
             let col_vals = &mut vals[s - base..e - base];
             let old = &mut scratch.old[..n];
             old.copy_from_slice(col_vals);
-            col_vals.iter_mut().for_each(|v| *v = 0.0);
-            for (m_slot, &om) in old.iter().enumerate() {
-                if om != 0.0 {
-                    crate::tensor::ops::axpy_slice(
-                        col_vals,
-                        om,
-                        &dsub[m_slot * n..(m_slot + 1) * n],
-                    );
-                }
-            }
+            kernel.gemv_cm(dsub, n, old, col_vals);
             // Immediate term (≤2 entries; rows of I ⊆ R_j, both sorted).
             let (irows, ivals) = i_jac.col(j);
             let mut cursor = 0usize;

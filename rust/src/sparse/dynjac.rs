@@ -9,9 +9,12 @@
 //! matter how sparse the network is*, which is exactly the term the paper's
 //! sparse cost lines (Table 1, §3.2) eliminate. This type stores only the
 //! structural nonzeros; cells refresh `vals` in O(nnz) each step through
-//! precomputed slot maps ([`crate::cells::block_slots`]).
+//! gate-blocked bands wired at construction ([`GateFold`]; the per-entry
+//! slot-map variant remains as [`crate::cells::block_slots`]).
 //!
-//! Kernels (all allocation-free, writing into caller buffers):
+//! Kernels (all allocation-free, writing into caller buffers, dispatched
+//! through the [`SparseKernel`] tag stamped at construction — see
+//! [`crate::sparse::simd`]):
 //! * [`matvec_t_into`](DynJacobian::matvec_t_into) — BPTT's `Dᵀ·δ` backward
 //!   step,
 //! * [`spmm_into`](DynJacobian::spmm_into) — RTRL / SnAp-TopK's `D·J`
@@ -19,15 +22,18 @@
 //! * [`gather_block`](DynJacobian::gather_block) — SnAp's run-GEMM gather of
 //!   `D[R, R]` submatrices,
 //! * [`diagonal_into`](DynJacobian::diagonal_into) — SnAp-1's diagonal fast
-//!   path (slots cached at construction).
+//!   path (slots cached at construction),
+//! * [`GateFold::fold_into`] — the cells' gate-blocked value refresh: one
+//!   shared column pattern per GRU/LSTM row block, all 3–4 gate
+//!   contributions folded in one vectorizable band pass.
 //!
 //! The layout is canonical for a given [`Pattern`] (rows in order, columns
 //! sorted ascending within each row), so a cell and every consumer built
 //! from the same `dynamics_pattern()` agree on slot indices.
 
 use crate::sparse::pattern::Pattern;
+use crate::sparse::simd::{BandView, KernelKind, SparseKernel};
 use crate::tensor::matrix::Matrix;
-use crate::tensor::ops::axpy_slice;
 
 /// Sentinel in `diag_slots` for rows whose diagonal entry is not in the
 /// pattern (possible for Vanilla, whose D-pattern is exactly the W_h mask).
@@ -42,10 +48,16 @@ pub struct DynJacobian {
     vals: Vec<f32>,
     /// flat slot of entry (i, i) per row, `NO_DIAG` when absent.
     diag_slots: Vec<u32>,
+    /// Kernel tag every product dispatches through, resolved once at
+    /// construction ([`KernelKind::Scalar`] unless overridden).
+    kernel: KernelKind,
 }
 
 impl DynJacobian {
-    /// Zero-valued Jacobian with the canonical layout of `pattern`.
+    /// Zero-valued Jacobian with the canonical layout of `pattern`,
+    /// dispatching through the scalar reference kernels (override with
+    /// [`with_kernel`](DynJacobian::with_kernel) /
+    /// [`set_kernel`](DynJacobian::set_kernel)).
     pub fn from_pattern(pattern: &Pattern) -> Self {
         assert_eq!(pattern.rows(), pattern.cols(), "dynamics Jacobian must be square");
         let n = pattern.rows();
@@ -57,14 +69,37 @@ impl DynJacobian {
             row_ptr.push(col_idx.len());
         }
         let nnz = col_idx.len();
-        let mut dj =
-            DynJacobian { n, row_ptr, col_idx, vals: vec![0.0; nnz], diag_slots: vec![NO_DIAG; n] };
+        let mut dj = DynJacobian {
+            n,
+            row_ptr,
+            col_idx,
+            vals: vec![0.0; nnz],
+            diag_slots: vec![NO_DIAG; n],
+            kernel: KernelKind::Scalar,
+        };
         for i in 0..n {
             if let Some(t) = dj.slot_of(i, i) {
                 dj.diag_slots[i] = t as u32;
             }
         }
         dj
+    }
+
+    /// Builder-style kernel selection.
+    pub fn with_kernel(mut self, kernel: KernelKind) -> Self {
+        self.kernel = kernel;
+        self
+    }
+
+    /// Re-tag the dispatch kernel (values and structure untouched).
+    pub fn set_kernel(&mut self, kernel: KernelKind) {
+        self.kernel = kernel;
+    }
+
+    /// The kernel this Jacobian's products dispatch through.
+    #[inline]
+    pub fn kernel(&self) -> KernelKind {
+        self.kernel
     }
 
     /// State size (the matrix is `n × n`).
@@ -134,14 +169,7 @@ impl DynJacobian {
     pub fn matvec_into(&self, x: &[f32], y: &mut [f32]) {
         assert_eq!(x.len(), self.n);
         assert_eq!(y.len(), self.n);
-        for i in 0..self.n {
-            let (cols, vals) = self.row(i);
-            let mut acc = 0.0f32;
-            for (&j, &v) in cols.iter().zip(vals) {
-                acc += v * x[j as usize];
-            }
-            y[i] = acc;
-        }
+        self.kernel.matvec(&self.row_ptr, &self.col_idx, &self.vals, x, y);
     }
 
     /// `y = Dᵀ · x` without materializing the transpose (overwrites `y`) —
@@ -150,37 +178,18 @@ impl DynJacobian {
     pub fn matvec_t_into(&self, x: &[f32], y: &mut [f32]) {
         assert_eq!(x.len(), self.n);
         assert_eq!(y.len(), self.n);
-        y.iter_mut().for_each(|v| *v = 0.0);
-        for (i, &xi) in x.iter().enumerate() {
-            if xi == 0.0 {
-                continue;
-            }
-            let (cols, vals) = self.row(i);
-            for (&j, &v) in cols.iter().zip(vals) {
-                y[j as usize] += v * xi;
-            }
-        }
+        self.kernel.matvec_t(&self.row_ptr, &self.col_idx, &self.vals, x, y);
     }
 
     /// `C (+)= D · B` where B, C are dense row-major — RTRL / SnAp-TopK's
-    /// `D·J` as CSR × dense with a contiguous AXPY inner loop (the
-    /// `d·(d·k²p)` cost line of Table 1).
+    /// `D·J` as CSR × dense (the `d·(d·k²p)` cost line of Table 1). The
+    /// scalar kernel is a contiguous AXPY per nonzero; the SIMD kernel
+    /// register-tiles 32 output columns per pass.
     // audit: hot-path
     pub fn spmm_into(&self, b: &Matrix, c: &mut Matrix, accumulate: bool) {
         assert_eq!(self.n, b.rows(), "spmm: inner dim");
         assert_eq!((c.rows(), c.cols()), (self.n, b.cols()), "spmm: out shape");
-        if !accumulate {
-            c.fill(0.0);
-        }
-        for i in 0..self.n {
-            let (cols, vals) = self.row(i);
-            let crow = c.row_mut(i);
-            for (&m, &v) in cols.iter().zip(vals) {
-                if v != 0.0 {
-                    axpy_slice(crow, v, b.row(m as usize));
-                }
-            }
-        }
+        self.kernel.spmm(&self.row_ptr, &self.col_idx, &self.vals, b, c, accumulate);
     }
 
     /// Gather the submatrix `D[rows, rows]` into `out` **column-major**
@@ -190,25 +199,8 @@ impl DynJacobian {
     /// structural nonzeros of the touched D rows, not |rows|².
     // audit: hot-path
     pub fn gather_block(&self, rows: &[u32], out: &mut [f32]) {
-        let n = rows.len();
-        debug_assert!(out.len() >= n * n);
-        out[..n * n].iter_mut().for_each(|v| *v = 0.0);
-        for (r_slot, &r) in rows.iter().enumerate() {
-            let (cols, vals) = self.row(r as usize);
-            let mut m_slot = 0usize;
-            for (&j, &v) in cols.iter().zip(vals) {
-                while m_slot < n && rows[m_slot] < j {
-                    m_slot += 1;
-                }
-                if m_slot == n {
-                    break;
-                }
-                if rows[m_slot] == j {
-                    out[m_slot * n + r_slot] = v;
-                    m_slot += 1;
-                }
-            }
-        }
+        debug_assert!(out.len() >= rows.len() * rows.len());
+        self.kernel.gather_block(&self.row_ptr, &self.col_idx, &self.vals, rows, out);
     }
 
     /// Refresh values from a dense matrix at the structural positions
@@ -241,6 +233,93 @@ impl DynJacobian {
             .map(|i| self.col_idx[self.row_ptr[i]..self.row_ptr[i + 1]].to_vec())
             .collect();
         Pattern::from_rows(self.n, self.n, &lists)
+    }
+}
+
+/// Gate-blocked value refresh for a contiguous row block of a
+/// [`DynJacobian`]: GRU/LSTM rows share one column pattern across their
+/// 3–4 gate matrices, so instead of one scatter pass per gate, the cell
+/// wires each gate weight's θ index into a gate-major band once at
+/// construction ([`wire`](GateFold::wire)) and then refreshes all of the
+/// block's values per step with a single [`fold_into`](GateFold::fold_into)
+/// — `dv[t] = Σ_g coef_g[row(t)] · θ[widx_g[t]] · mask_g[t]` — which the
+/// SIMD kernel runs 8 slots at a time. Slots in the block not covered by
+/// any gate (e.g. a structural diagonal) come out exactly `0.0`; cells add
+/// diagonal terms *after* the fold.
+#[derive(Clone, Debug)]
+pub struct GateFold {
+    rows: usize,
+    gates: usize,
+    /// First flat value slot of the block (slot of `(row0, first col)`).
+    slot0: usize,
+    /// Number of value slots in the block.
+    len: usize,
+    /// Row boundaries relative to `slot0` (`rows + 1` entries).
+    band_ptr: Vec<u32>,
+    /// Gate-major θ indices (`gates × len`; unwired entries 0).
+    widx: Vec<u32>,
+    /// Gate-major 0/1 membership (`gates × len`; unwired entries 0.0).
+    wmask: Vec<f32>,
+    /// 1 + the largest wired θ index (fold-time bounds guard).
+    theta_len: usize,
+}
+
+impl GateFold {
+    /// Empty band over `d`'s rows `row0 .. row0 + rows` with `gates` gate
+    /// slots per structural entry. Wire gate weights with
+    /// [`wire`](GateFold::wire) before folding.
+    pub fn new(d: &DynJacobian, row0: usize, rows: usize, gates: usize) -> GateFold {
+        assert!(row0 + rows <= d.n, "gate band outside the Jacobian");
+        assert!(gates > 0);
+        let slot0 = d.row_ptr[row0];
+        let len = d.row_ptr[row0 + rows] - slot0;
+        let band_ptr: Vec<u32> =
+            (0..=rows).map(|r| (d.row_ptr[row0 + r] - slot0) as u32).collect();
+        GateFold {
+            rows,
+            gates,
+            slot0,
+            len,
+            band_ptr,
+            widx: vec![0; gates * len],
+            wmask: vec![0.0; gates * len],
+            theta_len: 0,
+        }
+    }
+
+    /// Declare that gate `gate`'s weight at flat θ index `theta_idx`
+    /// multiplies into structural entry `(row, col)` of the Jacobian.
+    /// Panics if `(row, col)` is not structural or outside the band.
+    pub fn wire(&mut self, d: &DynJacobian, gate: usize, theta_idx: usize, row: usize, col: usize) {
+        assert!(gate < self.gates);
+        let t = d.slot_of(row, col).expect("gate weight outside the dynamics pattern");
+        assert!(
+            t >= self.slot0 && t < self.slot0 + self.len,
+            "gate weight outside the band's row block"
+        );
+        let o = gate * self.len + (t - self.slot0);
+        self.widx[o] = theta_idx as u32;
+        self.wmask[o] = 1.0;
+        self.theta_len = self.theta_len.max(theta_idx + 1);
+    }
+
+    /// Refresh the block's values in `d` from per-gate row coefficients
+    /// (`coefs[g][r]` for band row `r`, i.e. Jacobian row `row0 + r`) and
+    /// the parameter vector `theta`, dispatching through `d`'s kernel.
+    /// Overwrites every slot of the block.
+    // audit: hot-path
+    pub fn fold_into(&self, d: &mut DynJacobian, coefs: &[&[f32]], theta: &[f32]) {
+        assert_eq!(coefs.len(), self.gates);
+        assert!(theta.len() >= self.theta_len, "theta shorter than the wired indices");
+        let kernel = d.kernel;
+        let band = BandView {
+            rows: self.rows,
+            band_ptr: &self.band_ptr,
+            gates: self.gates,
+            widx: &self.widx,
+            wmask: &self.wmask,
+        };
+        kernel.fold_band(band, coefs, theta, &mut d.vals[self.slot0..self.slot0 + self.len]);
     }
 }
 
@@ -357,5 +436,76 @@ mod tests {
             assert!(a.slot_of(i, j).is_some());
         }
         assert_eq!(a.pattern(), pat);
+    }
+
+    #[test]
+    fn kernel_tag_dispatch_agrees_with_scalar() {
+        use crate::sparse::simd::KernelKind;
+        let (dj, _) = random_dj(33, 0.4, 10);
+        let simd = dj.clone().with_kernel(KernelKind::Simd);
+        assert_eq!(dj.kernel(), KernelKind::Scalar);
+        assert_eq!(simd.kernel(), KernelKind::Simd);
+        let mut rng = Pcg32::seeded(11);
+        let x: Vec<f32> = (0..33).map(|_| rng.normal()).collect();
+        let (mut ys, mut yv) = (vec![0.0f32; 33], vec![0.0f32; 33]);
+        dj.matvec_into(&x, &mut ys);
+        simd.matvec_into(&x, &mut yv);
+        for (a, b) in ys.iter().zip(&yv) {
+            assert!((a - b).abs() <= 1e-5 * (1.0 + a.abs()));
+        }
+        dj.matvec_t_into(&x, &mut ys);
+        simd.matvec_t_into(&x, &mut yv);
+        assert_eq!(ys, yv); // matvec_t is scalar under both tags
+        let b = Matrix::from_fn(33, 17, |_, _| rng.normal());
+        let mut cs = Matrix::zeros(33, 17);
+        let mut cv = Matrix::zeros(33, 17);
+        dj.spmm_into(&b, &mut cs, false);
+        simd.spmm_into(&b, &mut cv, false);
+        for (a, b) in cs.as_slice().iter().zip(cv.as_slice()) {
+            assert!((a - b).abs() <= 1e-4 * (1.0 + a.abs()));
+        }
+    }
+
+    #[test]
+    fn gate_fold_matches_manual_scatter() {
+        use crate::sparse::simd::KernelKind;
+        // 3 "gates" sharing one 6-row pattern, like a GRU row block.
+        let mut rng = Pcg32::seeded(12);
+        let pat = Pattern::random(6, 6, 0.5, &mut rng).with_diagonal();
+        let mut d = DynJacobian::from_pattern(&pat);
+        let (gates, theta_len) = (3usize, 40usize);
+        let theta: Vec<f32> = (0..theta_len).map(|_| rng.normal()).collect();
+        let mut fold = GateFold::new(&d, 0, 6, gates);
+        let mut wired: Vec<(usize, usize, usize, usize)> = Vec::new();
+        for (e, (i, j)) in pat.iter().enumerate() {
+            for g in 0..gates {
+                if (e + g) % 2 == 0 {
+                    let ti = (e * gates + g) % theta_len;
+                    fold.wire(&d, g, ti, i, j);
+                    wired.push((g, ti, i, j));
+                }
+            }
+        }
+        let coef_store: Vec<Vec<f32>> =
+            (0..gates).map(|_| (0..6).map(|_| rng.normal()).collect()).collect();
+        let coefs: Vec<&[f32]> = coef_store.iter().map(|c| c.as_slice()).collect();
+        let mut want = vec![0.0f32; d.nnz()];
+        for &(g, ti, i, j) in &wired {
+            want[d.slot_of(i, j).unwrap()] += coef_store[g][i] * theta[ti];
+        }
+        // Poison values first: the fold must overwrite every slot,
+        // including ones no gate covers (they become exactly 0).
+        d.vals_mut().iter_mut().for_each(|v| *v = f32::NAN);
+        fold.fold_into(&mut d, &coefs, &theta);
+        for (t, &w) in want.iter().enumerate() {
+            assert!((d.vals()[t] - w).abs() <= 1e-5 * (1.0 + w.abs()), "slot {t}");
+        }
+        // Same fold through the SIMD tag agrees.
+        let mut ds = d.clone().with_kernel(KernelKind::Simd);
+        ds.vals_mut().iter_mut().for_each(|v| *v = f32::NAN);
+        fold.fold_into(&mut ds, &coefs, &theta);
+        for (a, b) in d.vals().iter().zip(ds.vals()) {
+            assert!((a - b).abs() <= 1e-5 * (1.0 + a.abs()));
+        }
     }
 }

@@ -19,15 +19,28 @@
 //! The per-step tracking cost is therefore O(nnz)-dominated, matching the
 //! paper's sparse asymptotics (Table 1); only the readout and the dense
 //! influence rows of RTRL/SnAp-TopK remain dense (§5.1.2).
+//!
+//! ## The kernel layer
+//!
+//! Every one of those products dispatches through [`simd::SparseKernel`]:
+//! a [`simd::KernelKind`] tag (scalar reference kernels, or AVX2+FMA SIMD
+//! with scalar fallback) is resolved once at construction from
+//! `--kernel auto|scalar|simd` and stamped into each [`DynJacobian`], so
+//! the hot path has no per-step dynamic dispatch. Cells refresh gated
+//! values through [`dynjac::GateFold`] — a gate-blocked band layout that
+//! stores each shared GRU/LSTM column pattern once and folds all 3–4 gate
+//! contributions in one vectorizable pass.
 
 pub mod coljac;
 pub mod csr;
 pub mod dynjac;
 pub mod immediate;
 pub mod pattern;
+pub mod simd;
 
 pub use coljac::ColJacobian;
 pub use csr::Csr;
-pub use dynjac::DynJacobian;
+pub use dynjac::{DynJacobian, GateFold};
 pub use immediate::ImmediateJac;
 pub use pattern::{snap_pattern, saturation_order, Pattern};
+pub use simd::{BandView, KernelChoice, KernelKind, SparseKernel};

@@ -1,0 +1,861 @@
+//! Unified sparse-kernel dispatch: every hot product of the tracking step —
+//! `D·x`, `Dᵀ·x`, `D·J` (CSR × dense), SnAp's run-submatrix gather, the
+//! run-GEMM `y = A_cm·x`, and the gate-blocked band fold that refreshes
+//! `D_t`'s values — goes through one [`SparseKernel`] trait with two
+//! implementations:
+//!
+//! * [`Scalar`] — the portable reference kernels, line-for-line the loops
+//!   the sparse-D pipeline shipped with (bitwise-identical results);
+//! * [`Simd`] — AVX2+FMA (`std::arch`) kernels behind a runtime
+//!   `is_x86_feature_detected!` guard, falling back to [`Scalar`] on every
+//!   other machine. Gather-heavy products (`matvec`, `spmm`, `gemv_cm`,
+//!   `fold_band`) vectorize 8/32-wide; scatter-bound ones (`matvec_t`,
+//!   `gather_block`) stay scalar — they are merge-limited, not FLOP-limited.
+//!
+//! The kernel is chosen **once at construction** ([`KernelChoice::resolve`],
+//! driven by `TrainConfig { kernel }` / `--kernel auto|scalar|simd`) and
+//! stamped into each [`crate::sparse::DynJacobian`] as a [`KernelKind`] tag.
+//! `KernelKind` dispatches by `match` on a two-variant `Copy` enum — no
+//! vtable, no per-step dynamic dispatch in the audit hot-path regions.
+//!
+//! This module is the **only** place SIMD intrinsics and their `unsafe` are
+//! allowed (`repro audit` rule `simd`, allowlisted in
+//! `rust/audit/unsafe.allow`); every `#[target_feature]` function here is
+//! reachable only through a runtime feature check with a scalar fallback.
+
+use crate::tensor::matrix::Matrix;
+use crate::tensor::ops::axpy_slice;
+
+/// Gate-blocked band descriptor for [`SparseKernel::fold_band`]: a
+/// contiguous range of `D_t` value slots whose rows share one column
+/// pattern across `gates` gate matrices. `band_ptr` (len `rows + 1`,
+/// ascending, `band_ptr[rows] == dv.len()`) delimits each row's slots so a
+/// per-row coefficient broadcasts across them; `widx`/`wmask` are
+/// **gate-major** (`gates × dv.len()`): slot `t` of gate `g` lives at
+/// `g·len + t`, holding the θ index of that gate's weight and a 0/1 mask
+/// (absent entries are sanitized to `widx = 0, wmask = 0.0`, contributing an
+/// exact `0.0`). The fold computes, overwriting `dv`:
+///
+/// ```text
+/// dv[t] = Σ_g coefs[g][row(t)] · θ[widx[g·len + t]] · wmask[g·len + t]
+/// ```
+#[derive(Clone, Copy)]
+pub struct BandView<'a> {
+    pub rows: usize,
+    pub band_ptr: &'a [u32],
+    pub gates: usize,
+    pub widx: &'a [u32],
+    pub wmask: &'a [f32],
+}
+
+/// The sparse/dense kernel surface of the tracking step. CSR arguments are
+/// the raw `(row_ptr, col_idx, vals)` slices of a square matrix (rows =
+/// `row_ptr.len() - 1`, columns sorted ascending within a row) — see
+/// [`crate::sparse::DynJacobian`] for the semantics of each product.
+pub trait SparseKernel {
+    /// Human-readable kernel name (bench row / log tag).
+    fn name(&self) -> &'static str;
+
+    /// `y = A · x` (overwrites `y`).
+    fn matvec(&self, row_ptr: &[usize], col_idx: &[u32], vals: &[f32], x: &[f32], y: &mut [f32]);
+
+    /// `y = Aᵀ · x` without materializing the transpose (overwrites `y`).
+    fn matvec_t(&self, row_ptr: &[usize], col_idx: &[u32], vals: &[f32], x: &[f32], y: &mut [f32]);
+
+    /// `C (+)= A · B` where B, C are dense row-major.
+    fn spmm(
+        &self,
+        row_ptr: &[usize],
+        col_idx: &[u32],
+        vals: &[f32],
+        b: &Matrix,
+        c: &mut Matrix,
+        accumulate: bool,
+    );
+
+    /// Gather `A[rows, rows]` into `out` column-major
+    /// (`out[m_slot·n + r_slot] = A[rows[r_slot], rows[m_slot]]`,
+    /// `n = rows.len()`); `rows` sorted ascending, absent entries 0.
+    fn gather_block(
+        &self,
+        row_ptr: &[usize],
+        col_idx: &[u32],
+        vals: &[f32],
+        rows: &[u32],
+        out: &mut [f32],
+    );
+
+    /// `y[i] = Σ_m x[m] · a_cm[m·n + i]` for an `n × n` **column-major**
+    /// dense block (overwrites `y`) — SnAp's per-run GEMV, skipping zero
+    /// `x[m]` columns.
+    fn gemv_cm(&self, a_cm: &[f32], n: usize, x: &[f32], y: &mut [f32]);
+
+    /// Gate-blocked band fold (see [`BandView`]): refresh a contiguous
+    /// range of `D_t` values from per-gate coefficients × recurrent
+    /// weights, vectorizing over the gate dimension's shared pattern.
+    /// `widx` entries must index into `theta`.
+    fn fold_band(&self, band: BandView<'_>, coefs: &[&[f32]], theta: &[f32], dv: &mut [f32]);
+}
+
+/// Portable reference kernels — the exact scalar loops the sparse-D
+/// pipeline shipped with. Every other kernel must agree with these.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Scalar;
+
+impl SparseKernel for Scalar {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    // audit: hot-path
+    fn matvec(&self, row_ptr: &[usize], col_idx: &[u32], vals: &[f32], x: &[f32], y: &mut [f32]) {
+        for (i, yi) in y.iter_mut().enumerate() {
+            let (s, e) = (row_ptr[i], row_ptr[i + 1]);
+            let mut acc = 0.0f32;
+            for (&j, &v) in col_idx[s..e].iter().zip(&vals[s..e]) {
+                acc += v * x[j as usize];
+            }
+            *yi = acc;
+        }
+    }
+
+    // audit: hot-path
+    fn matvec_t(&self, row_ptr: &[usize], col_idx: &[u32], vals: &[f32], x: &[f32], y: &mut [f32]) {
+        y.iter_mut().for_each(|v| *v = 0.0);
+        for (i, &xi) in x.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            let (s, e) = (row_ptr[i], row_ptr[i + 1]);
+            for (&j, &v) in col_idx[s..e].iter().zip(&vals[s..e]) {
+                y[j as usize] += v * xi;
+            }
+        }
+    }
+
+    // audit: hot-path
+    fn spmm(
+        &self,
+        row_ptr: &[usize],
+        col_idx: &[u32],
+        vals: &[f32],
+        b: &Matrix,
+        c: &mut Matrix,
+        accumulate: bool,
+    ) {
+        if !accumulate {
+            c.fill(0.0);
+        }
+        for i in 0..c.rows() {
+            let (s, e) = (row_ptr[i], row_ptr[i + 1]);
+            let crow = c.row_mut(i);
+            for (&m, &v) in col_idx[s..e].iter().zip(&vals[s..e]) {
+                if v != 0.0 {
+                    axpy_slice(crow, v, b.row(m as usize));
+                }
+            }
+        }
+    }
+
+    // audit: hot-path
+    fn gather_block(
+        &self,
+        row_ptr: &[usize],
+        col_idx: &[u32],
+        vals: &[f32],
+        rows: &[u32],
+        out: &mut [f32],
+    ) {
+        let n = rows.len();
+        debug_assert!(out.len() >= n * n);
+        out[..n * n].iter_mut().for_each(|v| *v = 0.0);
+        for (r_slot, &r) in rows.iter().enumerate() {
+            let (s, e) = (row_ptr[r as usize], row_ptr[r as usize + 1]);
+            let mut m_slot = 0usize;
+            for (&j, &v) in col_idx[s..e].iter().zip(&vals[s..e]) {
+                while m_slot < n && rows[m_slot] < j {
+                    m_slot += 1;
+                }
+                if m_slot == n {
+                    break;
+                }
+                if rows[m_slot] == j {
+                    out[m_slot * n + r_slot] = v;
+                    m_slot += 1;
+                }
+            }
+        }
+    }
+
+    // audit: hot-path
+    fn gemv_cm(&self, a_cm: &[f32], n: usize, x: &[f32], y: &mut [f32]) {
+        y[..n].iter_mut().for_each(|v| *v = 0.0);
+        for (m, &xm) in x[..n].iter().enumerate() {
+            if xm != 0.0 {
+                axpy_slice(&mut y[..n], xm, &a_cm[m * n..m * n + n]);
+            }
+        }
+    }
+
+    // audit: hot-path
+    fn fold_band(&self, band: BandView<'_>, coefs: &[&[f32]], theta: &[f32], dv: &mut [f32]) {
+        let len = dv.len();
+        debug_assert_eq!(band.band_ptr.len(), band.rows + 1);
+        debug_assert_eq!(band.widx.len(), band.gates * len);
+        debug_assert_eq!(band.wmask.len(), band.gates * len);
+        for r in 0..band.rows {
+            let (s, e) = (band.band_ptr[r] as usize, band.band_ptr[r + 1] as usize);
+            for t in s..e {
+                let mut acc = 0.0f32;
+                for g in 0..band.gates {
+                    let o = g * len + t;
+                    acc += coefs[g][r] * theta[band.widx[o] as usize] * band.wmask[o];
+                }
+                dv[t] = acc;
+            }
+        }
+    }
+}
+
+/// AVX2+FMA kernels. Each method runtime-checks the CPU and falls back to
+/// [`Scalar`] when the features are absent (or off-x86), so `Simd` is safe
+/// to select anywhere; [`KernelChoice::Auto`] additionally resolves to
+/// [`KernelKind::Scalar`] up front on such machines so the hot loop never
+/// re-checks.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Simd;
+
+impl SparseKernel for Simd {
+    fn name(&self) -> &'static str {
+        "simd"
+    }
+
+    // audit: hot-path
+    fn matvec(&self, row_ptr: &[usize], col_idx: &[u32], vals: &[f32], x: &[f32], y: &mut [f32]) {
+        #[cfg(target_arch = "x86_64")]
+        if have_avx2() {
+            // SAFETY: have_avx2() verified AVX2+FMA on this CPU.
+            unsafe { x86::matvec_avx2(row_ptr, col_idx, vals, x, y) };
+            return;
+        }
+        Scalar.matvec(row_ptr, col_idx, vals, x, y)
+    }
+
+    // audit: hot-path
+    fn matvec_t(&self, row_ptr: &[usize], col_idx: &[u32], vals: &[f32], x: &[f32], y: &mut [f32]) {
+        // Scatter-bound (indexed += into y): no profitable SIMD formulation
+        // without a column-major mirror, so the scalar loop is the kernel.
+        Scalar.matvec_t(row_ptr, col_idx, vals, x, y)
+    }
+
+    // audit: hot-path
+    fn spmm(
+        &self,
+        row_ptr: &[usize],
+        col_idx: &[u32],
+        vals: &[f32],
+        b: &Matrix,
+        c: &mut Matrix,
+        accumulate: bool,
+    ) {
+        #[cfg(target_arch = "x86_64")]
+        if have_avx2() {
+            // SAFETY: have_avx2() verified AVX2+FMA on this CPU.
+            unsafe { x86::spmm_avx2(row_ptr, col_idx, vals, b, c, accumulate) };
+            return;
+        }
+        Scalar.spmm(row_ptr, col_idx, vals, b, c, accumulate)
+    }
+
+    // audit: hot-path
+    fn gather_block(
+        &self,
+        row_ptr: &[usize],
+        col_idx: &[u32],
+        vals: &[f32],
+        rows: &[u32],
+        out: &mut [f32],
+    ) {
+        // Merge-limited sorted-intersection walk; stays scalar.
+        Scalar.gather_block(row_ptr, col_idx, vals, rows, out)
+    }
+
+    // audit: hot-path
+    fn gemv_cm(&self, a_cm: &[f32], n: usize, x: &[f32], y: &mut [f32]) {
+        #[cfg(target_arch = "x86_64")]
+        if have_avx2() {
+            // SAFETY: have_avx2() verified AVX2+FMA on this CPU.
+            unsafe { x86::gemv_cm_avx2(a_cm, n, x, y) };
+            return;
+        }
+        Scalar.gemv_cm(a_cm, n, x, y)
+    }
+
+    // audit: hot-path
+    fn fold_band(&self, band: BandView<'_>, coefs: &[&[f32]], theta: &[f32], dv: &mut [f32]) {
+        #[cfg(target_arch = "x86_64")]
+        if have_avx2() {
+            // SAFETY: have_avx2() verified AVX2+FMA on this CPU; BandView
+            // invariants (widx < theta.len()) are debug-asserted below.
+            unsafe { x86::fold_band_avx2(band, coefs, theta, dv) };
+            return;
+        }
+        Scalar.fold_band(band, coefs, theta, dv)
+    }
+}
+
+/// The resolved kernel tag stamped into every `DynJacobian` at
+/// construction. Two-variant `Copy` enum ⇒ `match` dispatch inlines to a
+/// direct call — no vtable on the hot path.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KernelKind {
+    #[default]
+    Scalar,
+    Simd,
+}
+
+impl SparseKernel for KernelKind {
+    #[inline]
+    fn name(&self) -> &'static str {
+        match self {
+            KernelKind::Scalar => Scalar.name(),
+            KernelKind::Simd => Simd.name(),
+        }
+    }
+
+    // audit: hot-path
+    #[inline]
+    fn matvec(&self, row_ptr: &[usize], col_idx: &[u32], vals: &[f32], x: &[f32], y: &mut [f32]) {
+        match self {
+            KernelKind::Scalar => Scalar.matvec(row_ptr, col_idx, vals, x, y),
+            KernelKind::Simd => Simd.matvec(row_ptr, col_idx, vals, x, y),
+        }
+    }
+
+    // audit: hot-path
+    #[inline]
+    fn matvec_t(&self, row_ptr: &[usize], col_idx: &[u32], vals: &[f32], x: &[f32], y: &mut [f32]) {
+        match self {
+            KernelKind::Scalar => Scalar.matvec_t(row_ptr, col_idx, vals, x, y),
+            KernelKind::Simd => Simd.matvec_t(row_ptr, col_idx, vals, x, y),
+        }
+    }
+
+    // audit: hot-path
+    #[inline]
+    fn spmm(
+        &self,
+        row_ptr: &[usize],
+        col_idx: &[u32],
+        vals: &[f32],
+        b: &Matrix,
+        c: &mut Matrix,
+        accumulate: bool,
+    ) {
+        match self {
+            KernelKind::Scalar => Scalar.spmm(row_ptr, col_idx, vals, b, c, accumulate),
+            KernelKind::Simd => Simd.spmm(row_ptr, col_idx, vals, b, c, accumulate),
+        }
+    }
+
+    // audit: hot-path
+    #[inline]
+    fn gather_block(
+        &self,
+        row_ptr: &[usize],
+        col_idx: &[u32],
+        vals: &[f32],
+        rows: &[u32],
+        out: &mut [f32],
+    ) {
+        match self {
+            KernelKind::Scalar => Scalar.gather_block(row_ptr, col_idx, vals, rows, out),
+            KernelKind::Simd => Simd.gather_block(row_ptr, col_idx, vals, rows, out),
+        }
+    }
+
+    // audit: hot-path
+    #[inline]
+    fn gemv_cm(&self, a_cm: &[f32], n: usize, x: &[f32], y: &mut [f32]) {
+        match self {
+            KernelKind::Scalar => Scalar.gemv_cm(a_cm, n, x, y),
+            KernelKind::Simd => Simd.gemv_cm(a_cm, n, x, y),
+        }
+    }
+
+    // audit: hot-path
+    #[inline]
+    fn fold_band(&self, band: BandView<'_>, coefs: &[&[f32]], theta: &[f32], dv: &mut [f32]) {
+        match self {
+            KernelKind::Scalar => Scalar.fold_band(band, coefs, theta, dv),
+            KernelKind::Simd => Simd.fold_band(band, coefs, theta, dv),
+        }
+    }
+}
+
+/// User-facing kernel selection (`--kernel auto|scalar|simd`), resolved to
+/// a [`KernelKind`] once per run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KernelChoice {
+    /// SIMD when the CPU has AVX2+FMA, scalar otherwise (the default).
+    #[default]
+    Auto,
+    Scalar,
+    Simd,
+}
+
+impl KernelChoice {
+    pub fn parse(s: &str) -> Result<KernelChoice, String> {
+        match s {
+            "auto" => Ok(KernelChoice::Auto),
+            "scalar" => Ok(KernelChoice::Scalar),
+            "simd" => Ok(KernelChoice::Simd),
+            other => Err(format!("unknown kernel '{other}' (expected auto|scalar|simd)")),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelChoice::Auto => "auto",
+            KernelChoice::Scalar => "scalar",
+            KernelChoice::Simd => "simd",
+        }
+    }
+
+    /// Resolve to a concrete kernel for this machine.
+    pub fn resolve(self) -> KernelKind {
+        match self {
+            KernelChoice::Scalar => KernelKind::Scalar,
+            KernelChoice::Simd => KernelKind::Simd,
+            KernelChoice::Auto => {
+                if have_avx2() {
+                    KernelKind::Simd
+                } else {
+                    KernelKind::Scalar
+                }
+            }
+        }
+    }
+}
+
+/// Runtime check for the feature set the [`Simd`] kernels need. Cached by
+/// the `is_x86_feature_detected!` machinery (one atomic load after the
+/// first call).
+#[inline]
+pub fn have_avx2() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// The AVX2+FMA kernel bodies. Everything here is `unsafe` twice over —
+/// `#[target_feature]` entry points plus bounds-check-free inner loops —
+/// and is reachable only through the `have_avx2()` guards above, each with
+/// a scalar fallback (enforced by the `simd` audit rule).
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::BandView;
+    use crate::tensor::matrix::Matrix;
+    use std::arch::x86_64::{
+        __m256, __m256i, _mm256_add_ps, _mm256_castps256_ps128, _mm256_extractf128_ps,
+        _mm256_fmadd_ps, _mm256_i32gather_ps, _mm256_loadu_ps, _mm256_loadu_si256,
+        _mm256_mul_ps, _mm256_set1_ps, _mm256_setzero_ps, _mm256_storeu_ps, _mm_add_ps,
+        _mm_add_ss, _mm_cvtss_f32, _mm_movehdup_ps, _mm_movehl_ps,
+    };
+
+    /// Horizontal sum of the 8 lanes of `v`.
+    #[target_feature(enable = "avx2")]
+    #[inline]
+    unsafe fn hsum(v: __m256) -> f32 {
+        // SAFETY: pure register arithmetic; caller guarantees AVX2.
+        unsafe {
+            let lo = _mm256_castps256_ps128(v);
+            let hi = _mm256_extractf128_ps::<1>(v);
+            let q = _mm_add_ps(lo, hi);
+            let d = _mm_add_ps(q, _mm_movehl_ps(q, q));
+            let s = _mm_add_ss(d, _mm_movehdup_ps(d));
+            _mm_cvtss_f32(s)
+        }
+    }
+
+    /// `y = A·x` with an 8-wide gather + FMA inner product per row.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn matvec_avx2(
+        row_ptr: &[usize],
+        col_idx: &[u32],
+        vals: &[f32],
+        x: &[f32],
+        y: &mut [f32],
+    ) {
+        // SAFETY: caller guarantees AVX2+FMA; 8-wide loads stay inside
+        // `col_idx`/`vals` (bounded by `e - 8`), and every gathered index is
+        // a structural column id `< x.len()` (< 2^31, so the i32 gather
+        // index reinterpretation of u32 ids is value-preserving).
+        unsafe {
+            for (i, yi) in y.iter_mut().enumerate() {
+                let (s, e) = (*row_ptr.get_unchecked(i), *row_ptr.get_unchecked(i + 1));
+                let mut acc = _mm256_setzero_ps();
+                let mut t = s;
+                while t + 8 <= e {
+                    let idx = _mm256_loadu_si256(col_idx.as_ptr().add(t) as *const __m256i);
+                    let xv = _mm256_i32gather_ps::<4>(x.as_ptr(), idx);
+                    let vv = _mm256_loadu_ps(vals.as_ptr().add(t));
+                    acc = _mm256_fmadd_ps(vv, xv, acc);
+                    t += 8;
+                }
+                let mut sum = hsum(acc);
+                while t < e {
+                    sum += *vals.get_unchecked(t)
+                        * *x.get_unchecked(*col_idx.get_unchecked(t) as usize);
+                    t += 1;
+                }
+                *yi = sum;
+            }
+        }
+    }
+
+    /// `C (+)= A·B`, register-tiled: per C row, 32-wide column tiles held in
+    /// four YMM accumulators while the row's nonzeros stream through one
+    /// broadcast-FMA each — a GEMM-shaped loop with no intermediate stores.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn spmm_avx2(
+        row_ptr: &[usize],
+        col_idx: &[u32],
+        vals: &[f32],
+        b: &Matrix,
+        c: &mut Matrix,
+        accumulate: bool,
+    ) {
+        // SAFETY: caller guarantees AVX2+FMA and spmm shape invariants
+        // (b.rows() == A-cols, c is A-rows × b.cols()); tile loads/stores
+        // are bounded by `ncols - 32` / `ncols - 8`, and column ids index
+        // valid rows of `b`.
+        unsafe {
+            let ncols = b.cols();
+            for i in 0..c.rows() {
+                let (s, e) = (*row_ptr.get_unchecked(i), *row_ptr.get_unchecked(i + 1));
+                let crow = c.row_mut(i);
+                let cp = crow.as_mut_ptr();
+                let mut j = 0usize;
+                while j + 32 <= ncols {
+                    let (mut a0, mut a1, mut a2, mut a3) = if accumulate {
+                        (
+                            _mm256_loadu_ps(cp.add(j)),
+                            _mm256_loadu_ps(cp.add(j + 8)),
+                            _mm256_loadu_ps(cp.add(j + 16)),
+                            _mm256_loadu_ps(cp.add(j + 24)),
+                        )
+                    } else {
+                        (
+                            _mm256_setzero_ps(),
+                            _mm256_setzero_ps(),
+                            _mm256_setzero_ps(),
+                            _mm256_setzero_ps(),
+                        )
+                    };
+                    for t in s..e {
+                        let v = *vals.get_unchecked(t);
+                        if v == 0.0 {
+                            continue;
+                        }
+                        let bp = b.row(*col_idx.get_unchecked(t) as usize).as_ptr();
+                        let vv = _mm256_set1_ps(v);
+                        a0 = _mm256_fmadd_ps(vv, _mm256_loadu_ps(bp.add(j)), a0);
+                        a1 = _mm256_fmadd_ps(vv, _mm256_loadu_ps(bp.add(j + 8)), a1);
+                        a2 = _mm256_fmadd_ps(vv, _mm256_loadu_ps(bp.add(j + 16)), a2);
+                        a3 = _mm256_fmadd_ps(vv, _mm256_loadu_ps(bp.add(j + 24)), a3);
+                    }
+                    _mm256_storeu_ps(cp.add(j), a0);
+                    _mm256_storeu_ps(cp.add(j + 8), a1);
+                    _mm256_storeu_ps(cp.add(j + 16), a2);
+                    _mm256_storeu_ps(cp.add(j + 24), a3);
+                    j += 32;
+                }
+                while j + 8 <= ncols {
+                    let mut a0 = if accumulate {
+                        _mm256_loadu_ps(cp.add(j))
+                    } else {
+                        _mm256_setzero_ps()
+                    };
+                    for t in s..e {
+                        let v = *vals.get_unchecked(t);
+                        if v == 0.0 {
+                            continue;
+                        }
+                        let bp = b.row(*col_idx.get_unchecked(t) as usize).as_ptr();
+                        a0 = _mm256_fmadd_ps(_mm256_set1_ps(v), _mm256_loadu_ps(bp.add(j)), a0);
+                    }
+                    _mm256_storeu_ps(cp.add(j), a0);
+                    j += 8;
+                }
+                while j < ncols {
+                    let mut acc = if accumulate { *crow.get_unchecked(j) } else { 0.0 };
+                    for t in s..e {
+                        let v = *vals.get_unchecked(t);
+                        if v == 0.0 {
+                            continue;
+                        }
+                        acc += v * *b.row(*col_idx.get_unchecked(t) as usize).get_unchecked(j);
+                    }
+                    *crow.get_unchecked_mut(j) = acc;
+                    j += 1;
+                }
+            }
+        }
+    }
+
+    /// Column-major GEMV `y[i] = Σ_m x[m]·a_cm[m·n + i]`, 8 rows per pass
+    /// so each `x[m]` broadcast feeds one contiguous load + FMA.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn gemv_cm_avx2(a_cm: &[f32], n: usize, x: &[f32], y: &mut [f32]) {
+        // SAFETY: caller guarantees AVX2+FMA, `a_cm.len() >= n·n`,
+        // `x.len() >= n`, `y.len() >= n`; 8-wide accesses are bounded by
+        // `n - 8` within each n-long column.
+        unsafe {
+            let mut i = 0usize;
+            while i + 8 <= n {
+                let mut acc = _mm256_setzero_ps();
+                for m in 0..n {
+                    let xm = *x.get_unchecked(m);
+                    if xm == 0.0 {
+                        continue;
+                    }
+                    let col = a_cm.as_ptr().add(m * n + i);
+                    acc = _mm256_fmadd_ps(_mm256_set1_ps(xm), _mm256_loadu_ps(col), acc);
+                }
+                _mm256_storeu_ps(y.as_mut_ptr().add(i), acc);
+                i += 8;
+            }
+            while i < n {
+                let mut acc = 0.0f32;
+                for m in 0..n {
+                    let xm = *x.get_unchecked(m);
+                    if xm != 0.0 {
+                        acc += xm * *a_cm.get_unchecked(m * n + i);
+                    }
+                }
+                *y.get_unchecked_mut(i) = acc;
+                i += 1;
+            }
+        }
+    }
+
+    /// Gate-blocked band fold: per row, 8 slots at a time, the gate loop
+    /// broadcasts one coefficient, gathers 8 θ weights, masks, and FMAs.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn fold_band_avx2(
+        band: BandView<'_>,
+        coefs: &[&[f32]],
+        theta: &[f32],
+        dv: &mut [f32],
+    ) {
+        // SAFETY: caller guarantees AVX2+FMA and the BandView invariants:
+        // band_ptr is ascending with band_ptr[rows] == dv.len(), widx/wmask
+        // are gate-major of length gates·dv.len(), every widx entry indexes
+        // `theta` (sanitized entries are widx = 0, wmask = 0.0, and
+        // u32 ids < 2^31 survive the i32 gather reinterpretation), and
+        // coefs[g].len() >= rows.
+        unsafe {
+            let len = dv.len();
+            debug_assert_eq!(band.band_ptr.len(), band.rows + 1);
+            debug_assert_eq!(band.widx.len(), band.gates * len);
+            debug_assert_eq!(band.wmask.len(), band.gates * len);
+            for r in 0..band.rows {
+                let s = *band.band_ptr.get_unchecked(r) as usize;
+                let e = *band.band_ptr.get_unchecked(r + 1) as usize;
+                let mut t = s;
+                while t + 8 <= e {
+                    let mut acc = _mm256_setzero_ps();
+                    for g in 0..band.gates {
+                        let o = g * len + t;
+                        let cv = _mm256_set1_ps(*coefs.get_unchecked(g).get_unchecked(r));
+                        let idx =
+                            _mm256_loadu_si256(band.widx.as_ptr().add(o) as *const __m256i);
+                        let th = _mm256_i32gather_ps::<4>(theta.as_ptr(), idx);
+                        let mk = _mm256_loadu_ps(band.wmask.as_ptr().add(o));
+                        acc = _mm256_fmadd_ps(_mm256_mul_ps(cv, th), mk, acc);
+                    }
+                    _mm256_storeu_ps(dv.as_mut_ptr().add(t), acc);
+                    t += 8;
+                }
+                while t < e {
+                    let mut acc = 0.0f32;
+                    for g in 0..band.gates {
+                        let o = g * len + t;
+                        acc += *coefs.get_unchecked(g).get_unchecked(r)
+                            * *theta.get_unchecked(*band.widx.get_unchecked(o) as usize)
+                            * *band.wmask.get_unchecked(o);
+                    }
+                    *dv.get_unchecked_mut(t) = acc;
+                    t += 1;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::pattern::Pattern;
+    use crate::tensor::rng::Pcg32;
+
+    fn random_csr(
+        n: usize,
+        density: f64,
+        seed: u64,
+    ) -> (Vec<usize>, Vec<u32>, Vec<f32>, Matrix) {
+        let mut rng = Pcg32::seeded(seed);
+        let pat = Pattern::random(n, n, density, &mut rng).with_diagonal();
+        let mut row_ptr = vec![0usize];
+        let mut col_idx: Vec<u32> = Vec::new();
+        for i in 0..n {
+            col_idx.extend_from_slice(pat.row(i));
+            row_ptr.push(col_idx.len());
+        }
+        let mut vals = vec![0.0f32; col_idx.len()];
+        let mut dense = Matrix::zeros(n, n);
+        for i in 0..n {
+            for t in row_ptr[i]..row_ptr[i + 1] {
+                let v = rng.normal();
+                vals[t] = v;
+                dense.set(i, col_idx[t] as usize, v);
+            }
+        }
+        (row_ptr, col_idx, vals, dense)
+    }
+
+    #[test]
+    fn kernel_choice_parses_and_resolves() {
+        assert_eq!(KernelChoice::parse("auto"), Ok(KernelChoice::Auto));
+        assert_eq!(KernelChoice::parse("scalar"), Ok(KernelChoice::Scalar));
+        assert_eq!(KernelChoice::parse("simd"), Ok(KernelChoice::Simd));
+        assert!(KernelChoice::parse("fast").is_err());
+        assert_eq!(KernelChoice::Scalar.resolve(), KernelKind::Scalar);
+        assert_eq!(KernelChoice::Simd.resolve(), KernelKind::Simd);
+        let auto = KernelChoice::Auto.resolve();
+        assert_eq!(auto == KernelKind::Simd, have_avx2());
+        assert_eq!(KernelKind::default(), KernelKind::Scalar);
+        assert_eq!(KernelKind::Scalar.name(), "scalar");
+        assert_eq!(KernelKind::Simd.name(), "simd");
+        assert_eq!(KernelChoice::default().name(), "auto");
+    }
+
+    #[test]
+    fn simd_matvec_matches_scalar() {
+        // 37 rows: exercises the 8-wide body and the 1..7-long tails.
+        let (rp, ci, vals, _) = random_csr(37, 0.45, 11);
+        let mut rng = Pcg32::seeded(12);
+        let x: Vec<f32> = (0..37).map(|_| rng.normal()).collect();
+        let (mut ys, mut yv) = (vec![0.0f32; 37], vec![9.0f32; 37]);
+        Scalar.matvec(&rp, &ci, &vals, &x, &mut ys);
+        Simd.matvec(&rp, &ci, &vals, &x, &mut yv);
+        for (a, b) in ys.iter().zip(&yv) {
+            assert!((a - b).abs() <= 1e-5 * (1.0 + a.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn simd_scatter_kernels_are_scalar_identical() {
+        let (rp, ci, vals, _) = random_csr(23, 0.4, 21);
+        let mut rng = Pcg32::seeded(22);
+        let x: Vec<f32> = (0..23).map(|_| rng.normal()).collect();
+        let (mut ys, mut yv) = (vec![0.0f32; 23], vec![9.0f32; 23]);
+        Scalar.matvec_t(&rp, &ci, &vals, &x, &mut ys);
+        Simd.matvec_t(&rp, &ci, &vals, &x, &mut yv);
+        assert_eq!(ys, yv);
+        let rows: Vec<u32> = vec![0, 3, 7, 8, 15, 22];
+        let n = rows.len();
+        let (mut os, mut ov) = (vec![1.0f32; n * n], vec![2.0f32; n * n]);
+        Scalar.gather_block(&rp, &ci, &vals, &rows, &mut os);
+        Simd.gather_block(&rp, &ci, &vals, &rows, &mut ov);
+        assert_eq!(os, ov);
+    }
+
+    #[test]
+    fn simd_spmm_matches_scalar() {
+        // 45 columns: exercises the 32-tile, the 8-tile, and the scalar tail.
+        let (rp, ci, vals, _) = random_csr(19, 0.5, 31);
+        let mut rng = Pcg32::seeded(32);
+        let b = Matrix::from_fn(19, 45, |_, _| rng.normal());
+        for accumulate in [false, true] {
+            let mut cs = Matrix::filled(19, 45, 0.5);
+            let mut cv = Matrix::filled(19, 45, 0.5);
+            Scalar.spmm(&rp, &ci, &vals, &b, &mut cs, accumulate);
+            Simd.spmm(&rp, &ci, &vals, &b, &mut cv, accumulate);
+            for (a, b) in cs.as_slice().iter().zip(cv.as_slice()) {
+                assert!((a - b).abs() <= 1e-4 * (1.0 + a.abs()), "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemv_cm_matches_reference() {
+        let n = 21usize; // 2×8 blocks + a 5-long tail
+        let mut rng = Pcg32::seeded(41);
+        let a_cm: Vec<f32> = (0..n * n).map(|_| rng.normal()).collect();
+        let mut x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        x[4] = 0.0; // exercise the zero-column skip
+        let mut want = vec![0.0f32; n];
+        for i in 0..n {
+            for m in 0..n {
+                want[i] += x[m] * a_cm[m * n + i];
+            }
+        }
+        let (mut ys, mut yv) = (vec![3.0f32; n], vec![4.0f32; n]);
+        Scalar.gemv_cm(&a_cm, n, &x, &mut ys);
+        Simd.gemv_cm(&a_cm, n, &x, &mut yv);
+        for i in 0..n {
+            assert!((ys[i] - want[i]).abs() <= 1e-4 * (1.0 + want[i].abs()));
+            assert!((yv[i] - ys[i]).abs() <= 1e-5 * (1.0 + ys[i].abs()));
+        }
+    }
+
+    #[test]
+    fn fold_band_matches_naive_and_simd_agrees() {
+        let mut rng = Pcg32::seeded(51);
+        let (rows, gates, theta_len) = (9usize, 3usize, 64usize);
+        // Random ragged band: row r owns `counts[r]` slots.
+        let mut band_ptr = vec![0u32];
+        for _ in 0..rows {
+            let c = (rng.next_u32() % 13) as u32;
+            band_ptr.push(band_ptr.last().unwrap() + c);
+        }
+        let len = *band_ptr.last().unwrap() as usize;
+        let theta: Vec<f32> = (0..theta_len).map(|_| rng.normal()).collect();
+        let mut widx = vec![0u32; gates * len];
+        let mut wmask = vec![0.0f32; gates * len];
+        for o in 0..gates * len {
+            if rng.next_u32() % 4 != 0 {
+                widx[o] = rng.next_u32() % theta_len as u32;
+                wmask[o] = 1.0;
+            } // else: sanitized absent entry (widx 0, wmask 0)
+        }
+        let coef_store: Vec<Vec<f32>> =
+            (0..gates).map(|_| (0..rows).map(|_| rng.normal()).collect()).collect();
+        let coefs: Vec<&[f32]> = coef_store.iter().map(|c| c.as_slice()).collect();
+        let band = BandView { rows, band_ptr: &band_ptr, gates, widx: &widx, wmask: &wmask };
+
+        let mut want = vec![0.0f32; len];
+        for r in 0..rows {
+            for t in band_ptr[r] as usize..band_ptr[r + 1] as usize {
+                for g in 0..gates {
+                    let o = g * len + t;
+                    want[t] += coef_store[g][r] * theta[widx[o] as usize] * wmask[o];
+                }
+            }
+        }
+        let (mut ds, mut dvv) = (vec![5.0f32; len], vec![6.0f32; len]);
+        Scalar.fold_band(band, &coefs, &theta, &mut ds);
+        Simd.fold_band(band, &coefs, &theta, &mut dvv);
+        for t in 0..len {
+            assert!((ds[t] - want[t]).abs() <= 1e-5 * (1.0 + want[t].abs()), "slot {t}");
+            assert!((dvv[t] - ds[t]).abs() <= 1e-5 * (1.0 + ds[t].abs()), "slot {t}");
+        }
+    }
+}

@@ -3,6 +3,13 @@
 //! written to be genuinely fast (blocked, unrolled, autovectorizable) rather
 //! than naive three-loops — the paper's cost comparisons assume a competent
 //! dense baseline.
+//!
+//! The **`_into` variants are the public API**: [`matmul_into`],
+//! [`matvec_into`], [`matvec_t_into`] write into caller-owned buffers and
+//! never allocate, which is what the per-step hot paths (cell forward,
+//! readout, influence-row updates) require under the `repro audit`
+//! hot-path contract. The allocating wrappers (`matvec`, `matvec_t`) exist
+//! only as test oracles and are hidden from the documented surface.
 
 use super::matrix::Matrix;
 
@@ -89,16 +96,64 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
 
 /// `y = A · x` into a caller-owned buffer (overwrites `y`; no allocation —
 /// the readout and cell forward hot loops route through this).
+///
+/// GEMM-shaped: rows are processed in blocks of four so each loaded `x`
+/// chunk feeds four independent 8-lane accumulator chains. Per-row
+/// reduction order is identical to [`dot`] (8 partial lanes, summed, then
+/// the scalar tail), so the blocked path is bitwise-equal to the naive
+/// row-at-a-time loop.
 // audit: hot-path
 pub fn matvec_into(a: &Matrix, x: &[f32], y: &mut [f32]) {
-    assert_eq!(a.cols(), x.len());
+    let n = x.len();
+    assert_eq!(a.cols(), n);
     assert_eq!(a.rows(), y.len());
-    for (i, out) in y.iter_mut().enumerate() {
-        *out = dot(a.row(i), x);
+    let m = a.rows();
+    let chunks = n / 8;
+    let split = chunks * 8;
+    let mut i = 0;
+    while i + 4 <= m {
+        // Reslicing to [..n] lets the bounds checks in the j loops vanish.
+        let r0 = &a.row(i)[..n];
+        let r1 = &a.row(i + 1)[..n];
+        let r2 = &a.row(i + 2)[..n];
+        let r3 = &a.row(i + 3)[..n];
+        let mut acc = [[0.0f32; 8]; 4];
+        for c in 0..chunks {
+            let b = c * 8;
+            for l in 0..8 {
+                let xl = x[b + l];
+                acc[0][l] += r0[b + l] * xl;
+                acc[1][l] += r1[b + l] * xl;
+                acc[2][l] += r2[b + l] * xl;
+                acc[3][l] += r3[b + l] * xl;
+            }
+        }
+        let mut s = [
+            acc[0].iter().sum::<f32>(),
+            acc[1].iter().sum::<f32>(),
+            acc[2].iter().sum::<f32>(),
+            acc[3].iter().sum::<f32>(),
+        ];
+        for j in split..n {
+            let xj = x[j];
+            s[0] += r0[j] * xj;
+            s[1] += r1[j] * xj;
+            s[2] += r2[j] * xj;
+            s[3] += r3[j] * xj;
+        }
+        y[i..i + 4].copy_from_slice(&s);
+        i += 4;
+    }
+    while i < m {
+        y[i] = dot(a.row(i), x);
+        i += 1;
     }
 }
 
-/// `y = A · x` (matrix-vector; thin allocating wrapper over [`matvec_into`]).
+/// `y = A · x` — allocating **test oracle** for [`matvec_into`], which is
+/// the public API. Not for production paths: the hot-path audit bans the
+/// per-call allocation.
+#[doc(hidden)]
 pub fn matvec(a: &Matrix, x: &[f32]) -> Vec<f32> {
     let mut y = vec![0.0f32; a.rows()];
     matvec_into(a, x, &mut y);
@@ -119,7 +174,10 @@ pub fn matvec_t_into(a: &Matrix, x: &[f32], y: &mut [f32]) {
     }
 }
 
-/// `y = Aᵀ · x` (thin allocating wrapper over [`matvec_t_into`]).
+/// `y = Aᵀ · x` — allocating **test oracle** for [`matvec_t_into`], which
+/// is the public API. Not for production paths: the hot-path audit bans
+/// the per-call allocation.
+#[doc(hidden)]
 pub fn matvec_t(a: &Matrix, x: &[f32]) -> Vec<f32> {
     let mut y = vec![0.0f32; a.cols()];
     matvec_t_into(a, x, &mut y);
@@ -292,6 +350,22 @@ mod tests {
         matvec_t_into(&a, &x5, &mut yt);
         for (u, v) in yt.iter().zip(matvec_t(&a, &x5)) {
             assert_eq!(u.to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn blocked_matvec_bitwise_matches_row_at_a_time_dot() {
+        // The 4-row blocking must not change results at all: per-row
+        // reduction order is the same as dot(), so equality is exact.
+        let mut rng = Pcg32::seeded(11);
+        for &(m, n) in &[(1usize, 3usize), (4, 8), (5, 7), (8, 16), (13, 33), (16, 1)] {
+            let a = Matrix::from_fn(m, n, |_, _| rng.normal());
+            let x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let mut y = vec![f32::NAN; m];
+            matvec_into(&a, &x, &mut y);
+            for (i, &yi) in y.iter().enumerate() {
+                assert_eq!(yi.to_bits(), dot(a.row(i), &x).to_bits(), "m={m} n={n} row {i}");
+            }
         }
     }
 

@@ -13,6 +13,7 @@
 use crate::cells::Arch;
 use crate::errors::Result;
 use crate::grad::Method;
+use crate::sparse::simd::KernelChoice;
 use crate::train::executor::SpawnMode;
 use std::path::PathBuf;
 
@@ -72,6 +73,12 @@ pub struct TrainConfig {
     /// [`ConfigKey`](crate::train::checkpoint::ConfigKey) (method, arch,
     /// shape, seed, …).
     pub resume_from: Option<PathBuf>,
+    /// sparse-kernel implementation (`--kernel auto|scalar|simd`), resolved
+    /// once at startup and tagged onto every lane's dynamics Jacobian. `auto`
+    /// (the default) picks SIMD when the CPU supports it. Gradients agree
+    /// across kernels up to f32 summation order; for bitwise-identical
+    /// resumes, keep the flag consistent across a checkpoint lineage.
+    pub kernel: KernelChoice,
 }
 
 impl Default for TrainConfig {
@@ -101,6 +108,7 @@ impl Default for TrainConfig {
             checkpoint_dir: None,
             checkpoint_keep: 3,
             resume_from: None,
+            kernel: KernelChoice::Auto,
         }
     }
 }
@@ -225,6 +233,7 @@ impl TrainConfigBuilder {
     setter!(checkpoint_dir: Option<PathBuf>);
     setter!(checkpoint_keep: usize);
     setter!(resume_from: Option<PathBuf>);
+    setter!(kernel: KernelChoice);
 
     /// Validate the assembled configuration and hand it over. Contradictory
     /// knob combinations come back as named errors (see

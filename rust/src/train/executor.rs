@@ -58,6 +58,7 @@ use crate::cells::Cell;
 use crate::grad::{GradAlgo, Method};
 use crate::models::{Readout, ReadoutCache, ReadoutGrad};
 use crate::opt::{step_as_delta, Optimizer};
+use crate::sparse::simd::KernelKind;
 use crate::tensor::rng::Pcg32;
 use crate::train::pool::WorkerPool;
 use crate::train::prune::Pruner;
@@ -124,10 +125,23 @@ impl<'c> LaneExecutor<'c> {
         workers: usize,
         rng: &mut Pcg32,
     ) -> Self {
-        Self::with_mode(cell, method, readout, lanes, workers, SpawnMode::Persistent, rng)
+        Self::with_mode(
+            cell,
+            method,
+            readout,
+            lanes,
+            workers,
+            SpawnMode::Persistent,
+            KernelKind::Scalar,
+            rng,
+        )
     }
 
-    /// As [`new`](Self::new), selecting the section spawn mode explicitly.
+    /// As [`new`](Self::new), selecting the section spawn mode and the
+    /// sparse-kernel implementation explicitly. The kernel is resolved once
+    /// by the caller (`KernelChoice::resolve`) and tagged onto every lane's
+    /// dynamics Jacobian here — no per-step dispatch anywhere downstream.
+    #[allow(clippy::too_many_arguments)]
     pub fn with_mode(
         cell: &'c dyn Cell,
         method: Method,
@@ -135,13 +149,14 @@ impl<'c> LaneExecutor<'c> {
         lanes: usize,
         workers: usize,
         mode: SpawnMode,
+        kernel: KernelKind,
         rng: &mut Pcg32,
     ) -> Self {
         let p = cell.num_params();
         let slots: Vec<LaneSlot<'c>> = (0..lanes.max(1))
             .map(|i| {
                 let mut lane_rng = rng.split(i as u64);
-                let algo = method.build(cell, &mut lane_rng);
+                let algo = method.build_with_kernel(cell, &mut lane_rng, kernel);
                 LaneSlot {
                     algo,
                     rng: lane_rng,
@@ -451,7 +466,16 @@ mod tests {
         mode: SpawnMode,
     ) -> LaneExecutor<'c> {
         let mut rng = Pcg32::seeded(99);
-        LaneExecutor::with_mode(cell, Method::Snap(1), readout, lanes, workers, mode, &mut rng)
+        LaneExecutor::with_mode(
+            cell,
+            Method::Snap(1),
+            readout,
+            lanes,
+            workers,
+            mode,
+            KernelKind::Scalar,
+            &mut rng,
+        )
     }
 
     #[test]

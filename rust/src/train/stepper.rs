@@ -110,7 +110,14 @@ impl<'c> Stepper<'c> {
         let p = cell.num_params();
         let theta = cell.init_params(rng);
         let exec = LaneExecutor::with_mode(
-            cell, cfg.method, &readout, cfg.batch.max(1), cfg.workers, cfg.spawn, rng,
+            cell,
+            cfg.method,
+            &readout,
+            cfg.batch.max(1),
+            cfg.workers,
+            cfg.spawn,
+            cfg.kernel.resolve(),
+            rng,
         );
         let data_streams: Arc<Mutex<Vec<Pcg32>>> =
             Arc::new(Mutex::new(exec.slots().iter().map(|s| s.rng.clone()).collect()));

@@ -12,6 +12,7 @@
 use snap_rtrl::cells::Arch;
 use snap_rtrl::grad::{Bptt, GradAlgo, Method, Rtrl, Snap};
 use snap_rtrl::sparse::pattern::{saturation_order, snap_pattern};
+use snap_rtrl::sparse::KernelKind;
 use snap_rtrl::tensor::matrix::Matrix;
 use snap_rtrl::tensor::ops::{axpy_slice, matmul, matvec_t};
 use snap_rtrl::tensor::rng::Pcg32;
@@ -150,7 +151,9 @@ fn prop_snap_bias_monotone_in_n() {
 /// Dense-D reference oracle: replay each algorithm's recursion with `D_t`
 /// materialized as a dense `Matrix` (the pre-sparse-D representation) and
 /// demand the production sparse-D pipeline reproduce the gradients within
-/// 1e-6 across architectures × densities {1.0, 0.25, 0.0625}.
+/// 1e-6 across architectures × densities {1.0, 0.25, 0.0625} — under
+/// **both** sparse kernels (scalar and SIMD), which is the ISSUE's
+/// scalar/SIMD agreement acceptance bound.
 #[test]
 fn sparse_d_pipeline_matches_dense_reference_oracle() {
     for arch in [Arch::Vanilla, Arch::Gru, Arch::Lstm] {
@@ -266,19 +269,32 @@ fn dense_oracle_case(arch: Arch, density: f64) {
         algo.flush(&theta, &mut g);
         g
     };
-    let checks: [(&str, Vec<f32>, &[f32]); 5] = [
-        ("rtrl", run(&mut Rtrl::new(cell.as_ref(), false)), &g_rtrl_o),
-        ("sparse-rtrl", run(&mut Rtrl::new(cell.as_ref(), true)), &g_rtrl_o),
-        ("snap-1", run(&mut Snap::new(cell.as_ref(), 1)), &g_snap1_o),
-        ("snap-2", run(&mut Snap::new(cell.as_ref(), 2)), &g_snap2_o),
-        ("bptt", run(&mut Bptt::new(cell.as_ref())), &g_bptt_o),
-    ];
-    for (name, got, want) in &checks {
-        let dev = max_rel_dev(got, want);
-        assert!(
-            dev < 1e-6,
-            "{arch:?} density={density} {name}: sparse-D deviates from dense oracle by {dev}"
-        );
+    for kernel in [KernelKind::Scalar, KernelKind::Simd] {
+        let mut a_rtrl = Rtrl::new(cell.as_ref(), false);
+        a_rtrl.set_kernel(kernel);
+        let mut a_sparse = Rtrl::new(cell.as_ref(), true);
+        a_sparse.set_kernel(kernel);
+        let mut a_snap1 = Snap::new(cell.as_ref(), 1);
+        a_snap1.set_kernel(kernel);
+        let mut a_snap2 = Snap::new(cell.as_ref(), 2);
+        a_snap2.set_kernel(kernel);
+        let mut a_bptt = Bptt::new(cell.as_ref());
+        a_bptt.set_kernel(kernel);
+        let checks: [(&str, Vec<f32>, &[f32]); 5] = [
+            ("rtrl", run(&mut a_rtrl), &g_rtrl_o),
+            ("sparse-rtrl", run(&mut a_sparse), &g_rtrl_o),
+            ("snap-1", run(&mut a_snap1), &g_snap1_o),
+            ("snap-2", run(&mut a_snap2), &g_snap2_o),
+            ("bptt", run(&mut a_bptt), &g_bptt_o),
+        ];
+        for (name, got, want) in &checks {
+            let dev = max_rel_dev(got, want);
+            assert!(
+                dev < 1e-6,
+                "{arch:?} density={density} {name} kernel={kernel:?}: \
+                 sparse-D deviates from dense oracle by {dev}"
+            );
+        }
     }
 }
 

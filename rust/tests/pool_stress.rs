@@ -8,6 +8,7 @@
 use snap_rtrl::cells::{Arch, Cell};
 use snap_rtrl::grad::Method;
 use snap_rtrl::models::Readout;
+use snap_rtrl::sparse::KernelKind;
 use snap_rtrl::tensor::rng::Pcg32;
 use snap_rtrl::train::{LaneExecutor, SpawnMode, WorkerPool};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -73,6 +74,7 @@ fn stress_exec<'c>(cell: &'c dyn Cell, readout: &Readout, lanes: usize) -> LaneE
         lanes,
         16,
         SpawnMode::Persistent,
+        KernelKind::Scalar,
         &mut rng,
     )
 }

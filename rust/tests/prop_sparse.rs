@@ -4,9 +4,10 @@
 use snap_rtrl::cells::Arch;
 use snap_rtrl::sparse::coljac::ColJacobian;
 use snap_rtrl::sparse::csr::Csr;
-use snap_rtrl::sparse::dynjac::DynJacobian;
+use snap_rtrl::sparse::dynjac::{DynJacobian, GateFold};
 use snap_rtrl::sparse::immediate::ImmediateJac;
 use snap_rtrl::sparse::pattern::{snap_pattern, Pattern};
+use snap_rtrl::sparse::KernelKind;
 use snap_rtrl::tensor::matrix::Matrix;
 use snap_rtrl::tensor::ops::matmul;
 use snap_rtrl::tensor::rng::Pcg32;
@@ -371,6 +372,8 @@ fn prop_coljac_to_dense_round_trips_through_vals() {
         for (i, j) in d_pat.iter() {
             d.set(i, j, rng.normal() * 0.5);
         }
+        let mut dj = DynJacobian::from_pattern(&d_pat);
+        dj.refresh_from_dense(&d);
         let n = 1 + (c.seed % 3) as usize; // SnAp order 1..=3
         let pat = snap_pattern(&d_pat, &ij.pattern(), n);
         let mut cj = ColJacobian::from_pattern(&pat);
@@ -378,7 +381,7 @@ fn prop_coljac_to_dense_round_trips_through_vals() {
             for v in ij.vals_mut() {
                 *v = rng.normal();
             }
-            cj.update(&d, &ij);
+            cj.update(&dj, &ij);
         }
         // dense ↔ vals consistency
         let dense = cj.to_dense();
@@ -416,6 +419,139 @@ fn prop_coljac_to_dense_round_trips_through_vals() {
         for (a, b) in g1.iter().zip(&g2) {
             if a.to_bits() != b.to_bits() {
                 return Err(format!("restored gradient mismatch: {a} vs {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gatefold_matches_dense_reference_under_both_kernels() {
+    // The gate-blocked refresh (block-CSR ↔ CSR equivalence): under random
+    // gate counts (1..=4, vanilla..LSTM shapes), densities and band
+    // placements, GateFold::fold_into must write exactly
+    // `dv[t] = Σ_g coef_g[row(t)]·θ[widx]·mask` into the flat CSR value
+    // band, leave unwired band slots exactly 0.0, leave rows outside the
+    // band untouched — and the SIMD kernel must agree with the scalar
+    // reference within 1e-6.
+    check("gatefold-kernels", 15, 30, gen_pat, |c| {
+        let mut rng = Pcg32::seeded(c.seed);
+        let n = 3 + c.rows.min(9);
+        let gates = 1 + rng.below_usize(4);
+        let pat = Pattern::random(n, n, c.density, &mut rng).with_diagonal();
+        let row0 = rng.below_usize(n);
+        let rows = 1 + rng.below_usize(n - row0);
+        let theta: Vec<f32> = (0..64).map(|_| rng.normal()).collect();
+        let coefs: Vec<Vec<f32>> =
+            (0..gates).map(|_| (0..rows).map(|_| rng.normal()).collect()).collect();
+        // Wiring fixed before the per-kernel runs: each structural entry in
+        // the band gets each gate with probability ~1/2 (at most once, so
+        // the reference below needs no overwrite semantics).
+        let mut wires: Vec<(usize, usize, usize, usize)> = Vec::new(); // (gate, θ, row, col)
+        for (i, j) in pat.iter() {
+            if i >= row0 && i < row0 + rows {
+                for g in 0..gates {
+                    if rng.uniform() < 0.5 {
+                        wires.push((g, rng.below_usize(theta.len()), i, j));
+                    }
+                }
+            }
+        }
+        let mut band_vals: Vec<Vec<f32>> = Vec::new();
+        for kernel in [KernelKind::Scalar, KernelKind::Simd] {
+            let mut dj = DynJacobian::from_pattern(&pat).with_kernel(kernel);
+            // NaN canaries: the fold must overwrite every band slot and
+            // nothing else.
+            for v in dj.vals_mut() {
+                *v = f32::NAN;
+            }
+            let mut fold = GateFold::new(&dj, row0, rows, gates);
+            for &(g, t, i, j) in &wires {
+                fold.wire(&dj, g, t, i, j);
+            }
+            let coef_refs: Vec<&[f32]> = coefs.iter().map(|v| v.as_slice()).collect();
+            fold.fold_into(&mut dj, &coef_refs, &theta);
+            for (i, j) in pat.iter() {
+                let got = dj.get(i, j);
+                if i < row0 || i >= row0 + rows {
+                    if !got.is_nan() {
+                        return Err(format!("fold touched ({i},{j}) outside the band"));
+                    }
+                    continue;
+                }
+                let mut want = 0.0f32;
+                let mut wired = false;
+                for &(g, t, wi, wj) in &wires {
+                    if wi == i && wj == j {
+                        want += coefs[g][i - row0] * theta[t];
+                        wired = true;
+                    }
+                }
+                if !wired && got != 0.0 {
+                    return Err(format!("unwired slot ({i},{j}) = {got}, want exactly 0.0"));
+                }
+                if (got - want).abs() > 1e-5 * (1.0 + want.abs()) {
+                    return Err(format!("({i},{j}) under {kernel:?}: {got} vs {want}"));
+                }
+            }
+            band_vals.push(
+                (row0..row0 + rows).flat_map(|i| dj.row(i).1.iter().copied()).collect(),
+            );
+        }
+        // Scalar vs SIMD A/B on the same wiring: the acceptance bound.
+        for (a, b) in band_vals[0].iter().zip(&band_vals[1]) {
+            if (a - b).abs() > 1e-6 * (1.0 + a.abs()) {
+                return Err(format!("kernels diverged: scalar {a} vs simd {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_simd_kernel_matches_scalar_on_every_dynjac_op() {
+    // Same structure + same values, tagged Scalar vs Simd: fill (already
+    // bitwise by refresh_from_dense), matvec, matvec_t, spmm and
+    // gather_block must agree within 1e-6 (gather is pure data movement, so
+    // it must be bitwise) over random patterns and densities.
+    check("simd-vs-scalar-ops", 16, 40, gen_pat, |c| {
+        let mut rng = Pcg32::seeded(c.seed);
+        let n = 2 + c.rows.min(10);
+        let pat = Pattern::random(n, n, c.density, &mut rng).with_diagonal();
+        let mut dj_s = DynJacobian::from_pattern(&pat);
+        let mut dense = Matrix::zeros(n, n);
+        for (i, j) in pat.iter() {
+            dense.set(i, j, rng.normal());
+        }
+        dj_s.refresh_from_dense(&dense);
+        let dj_v = dj_s.clone().with_kernel(KernelKind::Simd);
+
+        let x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let mut ys = vec![1.0f32; n];
+        let mut yv = vec![2.0f32; n];
+        dj_s.matvec_into(&x, &mut ys);
+        dj_v.matvec_into(&x, &mut yv);
+        snap_rtrl::testing::assert_close(&ys, &yv, 1e-6)?;
+        dj_s.matvec_t_into(&x, &mut ys);
+        dj_v.matvec_t_into(&x, &mut yv);
+        snap_rtrl::testing::assert_close(&ys, &yv, 1e-6)?;
+
+        let b = Matrix::from_fn(n, 6, |_, _| rng.normal());
+        let mut cs = Matrix::filled(n, 6, 0.5);
+        let mut cv = Matrix::filled(n, 6, 0.5);
+        dj_s.spmm_into(&b, &mut cs, true);
+        dj_v.spmm_into(&b, &mut cv, true);
+        snap_rtrl::testing::assert_close(cs.as_slice(), cv.as_slice(), 1e-6)?;
+
+        let m = 1 + rng.below_usize(n);
+        let rows: Vec<u32> = rng.choose_indices(n, m).into_iter().map(|r| r as u32).collect();
+        let mut gs = vec![0.0f32; m * m];
+        let mut gv = vec![1.0f32; m * m];
+        dj_s.gather_block(&rows, &mut gs);
+        dj_v.gather_block(&rows, &mut gv);
+        for (a, b) in gs.iter().zip(&gv) {
+            if a.to_bits() != b.to_bits() {
+                return Err(format!("gather_block diverged: {a} vs {b}"));
             }
         }
         Ok(())

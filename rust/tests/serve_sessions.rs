@@ -80,13 +80,14 @@ fn build_server<'c>(
     let embed = Embedding::new(256, cfg.embed_dim, rng);
     let readout = Readout::new(cell.hidden_size(), cfg.readout_hidden, 256, rng);
     let stepper = Stepper::new(cfg, cell, embed, readout, rng);
-    let store = SessionStore::new(cfg.method, cell, spill, resident).unwrap();
+    let store =
+        SessionStore::new(cfg.method, cell, cfg.kernel.resolve(), spill, resident).unwrap();
     let mut server = Server::new(stepper, store, cfg.batch * 4, meta_for(cfg));
     for id in 0..sessions {
         server
             .admit(
                 Session::new(cfg.seed, id),
-                Session::build_algo(cfg.seed, id, cfg.method, cell),
+                Session::build_algo(cfg.seed, id, cfg.method, cell, cfg.kernel.resolve()),
             )
             .unwrap();
     }
@@ -252,7 +253,9 @@ fn kill_and_resume_mid_traffic_is_bitwise_identical() {
     let embed = Embedding::new(256, cfg.embed_dim, &mut rng_r);
     let readout = Readout::new(cell_r.hidden_size(), cfg.readout_hidden, 256, &mut rng_r);
     let stepper = Stepper::new(&cfg, cell_r.as_ref(), embed, readout, &mut rng_r);
-    let store = SessionStore::new(cfg.method, cell_r.as_ref(), &dir_resume, 3).unwrap();
+    let store =
+        SessionStore::new(cfg.method, cell_r.as_ref(), cfg.kernel.resolve(), &dir_resume, 3)
+            .unwrap();
     let mut resumed =
         Server::from_checkpoint(stepper, store, cfg.batch * 4, meta_for(&cfg), &ckpt).unwrap();
     assert_eq!(resumed.tick_count(), KILL_AT);
@@ -275,7 +278,9 @@ fn kill_and_resume_mid_traffic_is_bitwise_identical() {
     let readout = Readout::new(cell_o.hidden_size(), other.readout_hidden, 256, &mut rng_o);
     let stepper = Stepper::new(&other, cell_o.as_ref(), embed, readout, &mut rng_o);
     let dir_bad = tmp_dir("chaos_badmeta");
-    let store = SessionStore::new(other.method, cell_o.as_ref(), &dir_bad, 3).unwrap();
+    let store =
+        SessionStore::new(other.method, cell_o.as_ref(), other.kernel.resolve(), &dir_bad, 3)
+            .unwrap();
     let err = Server::from_checkpoint(stepper, store, 8, meta_for(&other), &ckpt).unwrap_err();
     assert!(
         err.to_string().contains("different configuration"),
