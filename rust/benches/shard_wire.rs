@@ -1,0 +1,133 @@
+//! Shard wire-protocol throughput: what the multi-process lane sharding
+//! (`crate::shard`) pays per coordinator↔worker exchange.
+//!
+//! Three sweeps:
+//!
+//! * **encode / decode** — [`Msg::Partials`] serialization in isolation
+//!   (tag + per-lane gradient vectors into the checksummed container),
+//!   across lane counts × parameter sizes. This bounds the serialization
+//!   share of an update boundary.
+//! * **loopback round-trip** — a real `Partials` request/reply over a
+//!   127.0.0.1 TCP connection to an echo thread (frame write, kernel
+//!   socket hop, frame read + checksum verify both ways), i.e. the full
+//!   per-message wire cost minus the training compute.
+//!
+//! `--json PATH` writes machine-readable rows (`BENCH_shard_wire.json`).
+//!
+//! Run: `cargo bench --bench shard_wire [-- --params 4096 --json out.json]`
+
+use snap_rtrl::benchutil::{bench, flag_str, flag_usize, report, write_bench_json, JsonObj};
+use snap_rtrl::shard::{recv_msg, send_msg, Msg};
+use snap_rtrl::train::LanePartial;
+use std::time::Duration;
+
+fn partials(lanes: usize, params: usize) -> Msg {
+    let lane = LanePartial {
+        g_rec: (0..params).map(|i| i as f32 * 0.5).collect(),
+        g_ro_flat: (0..params / 4).map(|i| -(i as f32)).collect(),
+        pending: 32,
+    };
+    Msg::Partials { lanes: vec![lane; lanes] }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let params = flag_usize(&args, "--params").unwrap_or(4096).max(4);
+    let json_path = flag_str(&args, "--json");
+    let budget = Duration::from_millis(200);
+    let mut rows: Vec<JsonObj> = Vec::new();
+
+    println!("# shard_wire — lane-sharding protocol cost ({params} recurrent params/lane)\n");
+
+    println!("encode/decode sweep — Partials serialization in isolation");
+    for lanes in [1usize, 4, 16] {
+        let msg = partials(lanes, params);
+        let mut framed = Vec::new();
+        send_msg(&mut framed, &msg).expect("framing Partials");
+        let frame_len = framed.len();
+        let mb = frame_len as f64 / 1e6;
+
+        let t = bench(3, budget, || {
+            let mut buf = Vec::with_capacity(frame_len);
+            send_msg(&mut buf, &msg).expect("framing Partials");
+            buf
+        });
+        report(
+            &format!("encode/lanes{lanes}"),
+            &t,
+            &format!("{:.0} MB/s", t.per_sec() * mb),
+        );
+        rows.push(
+            JsonObj::new()
+                .str("sweep", "encode")
+                .int("lanes", lanes as u64)
+                .int("frame_bytes", frame_len as u64)
+                .num("msgs_per_sec", t.per_sec())
+                .num("mb_per_sec", t.per_sec() * mb),
+        );
+
+        let t = bench(3, budget, || {
+            recv_msg(&mut std::io::Cursor::new(&framed)).expect("decoding Partials")
+        });
+        report(
+            &format!("decode/lanes{lanes}"),
+            &t,
+            &format!("{:.0} MB/s", t.per_sec() * mb),
+        );
+        rows.push(
+            JsonObj::new()
+                .str("sweep", "decode")
+                .int("lanes", lanes as u64)
+                .int("frame_bytes", frame_len as u64)
+                .num("msgs_per_sec", t.per_sec())
+                .num("mb_per_sec", t.per_sec() * mb),
+        );
+    }
+
+    println!("\nloopback sweep — full request/reply over 127.0.0.1 TCP");
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("binding loopback");
+    let addr = listener.local_addr().expect("loopback addr");
+    let echo = std::thread::spawn(move || {
+        let (mut conn, _) = listener.accept().expect("accepting bench client");
+        conn.set_nodelay(true).ok();
+        while let Ok(msg) = recv_msg(&mut conn) {
+            if matches!(msg, Msg::Shutdown) {
+                return;
+            }
+            send_msg(&mut conn, &msg).expect("echoing");
+        }
+    });
+    let mut stream = std::net::TcpStream::connect(addr).expect("connecting to echo thread");
+    stream.set_nodelay(true).ok();
+    for lanes in [1usize, 4] {
+        let msg = partials(lanes, params);
+        let mut framed = Vec::new();
+        send_msg(&mut framed, &msg).expect("framing Partials");
+        let mb = 2.0 * framed.len() as f64 / 1e6; // both directions
+        let t = bench(3, budget, || {
+            send_msg(&mut stream, &msg).expect("sending over loopback");
+            recv_msg(&mut stream).expect("reading the echo")
+        });
+        report(
+            &format!("loopback/lanes{lanes}"),
+            &t,
+            &format!("{:.0} round-trips/s", t.per_sec()),
+        );
+        rows.push(
+            JsonObj::new()
+                .str("sweep", "loopback")
+                .int("lanes", lanes as u64)
+                .int("frame_bytes", framed.len() as u64)
+                .num("round_trips_per_sec", t.per_sec())
+                .num("mb_per_sec", t.per_sec() * mb),
+        );
+    }
+    send_msg(&mut stream, &Msg::Shutdown).expect("shutting the echo thread down");
+    echo.join().expect("echo thread");
+
+    if let Some(path) = json_path {
+        let meta = JsonObj::new().int("params", params as u64);
+        write_bench_json(path, "shard_wire", &meta, &rows).expect("writing bench json");
+        println!("\nwrote {path}");
+    }
+}

@@ -103,6 +103,7 @@ impl AuditConfig {
             serde_files: vec![
                 "rust/src/runtime/serde.rs".to_string(),
                 "rust/src/train/checkpoint.rs".to_string(),
+                "rust/src/shard/protocol.rs".to_string(),
             ],
             pin_path: Some(root.join("rust/audit/serde_format.pin")),
         }

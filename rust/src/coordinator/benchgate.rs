@@ -553,6 +553,41 @@ mod tests {
     }
 
     #[test]
+    fn no_samples_serve_row_parses_and_is_skipped() {
+        // A `--ticks 0` serve run records no latencies; `run_serve_cli` now
+        // emits 0.0 metrics with a `no_samples` marker instead of NaN. The
+        // file must stay parseable and the degenerate row must simply be
+        // excluded from comparable rows, not fail the load.
+        let dir = std::env::temp_dir().join("snap_rtrl_benchgate_no_samples_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_serve.json");
+        let path = path.to_str().unwrap().to_string();
+        let meta = JsonObj::new().str("method", "snap-1").int("ticks", 0);
+        let rows = vec![
+            JsonObj::new()
+                .int("sessions", 8)
+                .int("lanes", 4)
+                .num("p50_us", 0.0)
+                .num("p99_us", 0.0)
+                .num("steps_per_sec", 0.0)
+                .int("no_samples", 1),
+            JsonObj::new()
+                .int("sessions", 8)
+                .int("lanes", 8)
+                .num("p50_us", 12.5)
+                .num("p99_us", 31.0)
+                .num("steps_per_sec", 4000.0),
+        ];
+        write_bench_json(&path, "serve", &meta, &rows).unwrap();
+        let parsed = BenchFile::load(&path).unwrap();
+        assert_eq!(parsed.bench, "serve");
+        // Only the real measurement survives as a comparable row.
+        assert_eq!(parsed.rows.len(), 1);
+        assert_eq!(parsed.rows[0].0, "kernel=scalar lanes=8 sessions=8");
+        assert_eq!(parsed.rows[0].1, 4000.0);
+    }
+
+    #[test]
     fn kernel_field_is_identity_and_defaults_to_scalar() {
         let row = |kernel: Option<&str>| {
             let mut fields = vec![

@@ -70,6 +70,18 @@ impl Args {
         self.get(key).map(|v| v == "true" || v == "1" || v == "yes").unwrap_or(default)
     }
 
+    /// Every parsed flag as `(key, value)` pairs, **sorted by key**. The
+    /// shard coordinator forwards its whole flag set to the worker
+    /// processes it spawns; the sort makes the forwarded command line — and
+    /// therefore the workers' derived config — deterministic (HashMap
+    /// iteration order is not).
+    pub fn flags_sorted(&self) -> Vec<(String, String)> {
+        let mut out: Vec<(String, String)> =
+            self.flags.iter().map(|(k, v)| (k.clone(), v.clone())).collect();
+        out.sort();
+        out
+    }
+
     /// Comma-separated list flag.
     pub fn list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
         match self.get(key) {
@@ -212,6 +224,51 @@ Serving (session-multiplexed online adaptation):
            --curves-dir writes one per-session loss-curve CSV per session;
            --bench-json writes p50/p99 batched-step latency + session-steps/s
            (BENCH_serve.json, gated by bench-gate).
+
+Lane sharding (multi-process training):
+  shard-coordinator  Run a train/copy workload with the lane computation
+           sharded across worker processes. The coordinator keeps the whole
+           driver — data sampling, evaluation, the ordered lane-order
+           gradient reduction, optimizer updates, checkpointing — and ships
+           only lane stepping to the workers, so ANY sharding (1, 2, 4, ...
+           processes) is bitwise identical to the single-process `train` /
+           `copy` run: same curve, same final theta, byte-identical
+           --dump-state files.
+           [--task char-lm|copy --shard-workers 2 --reshard-workers N
+            --shard-attempts 3 --shard-timeout-secs 30 --shard-retries 3
+            --die-at-step 0 --dump-state PATH
+            + every train/copy flag (--method --arch --k --batch --steps
+              --dataset --checkpoint-every --checkpoint-dir --resume ...)]
+           Sharded Copy runs require --trunc 0 (full unroll): truncated Copy
+           schedules update theta mid-sequence and are refused with a named
+           error.
+           Elastic resharding: a worker that stops answering (crash, kill,
+           timeout after --shard-retries reads of --shard-timeout-secs) is
+           declared dead; the coordinator tears the fleet down and retries —
+           up to --shard-attempts times, with --reshard-workers processes —
+           resuming from the newest checkpoint in --checkpoint-dir when one
+           exists (fresh otherwise). Checkpoints hold per-lane state blobs
+           independent of the lane->process mapping, so a 2-wide run killed
+           mid-flight resumes 4-wide bitwise. --die-at-step N is the chaos
+           knob: worker 0 exits abruptly at minibatch N on the first attempt
+           (used by tests/executor_determinism.rs and CI shard-smoke).
+  shard-worker  One worker process (spawned by shard-coordinator; not for
+           manual use). Owns lanes [--lane-lo, --lane-hi) of the minibatch,
+           replays the run's deterministic construction from the forwarded
+           flags, connects back over --connect and answers the coordinator's
+           message loop.
+           Wire protocol & versioning: every message is one length-prefixed
+           frame carrying the standard SNAPRTRL container (version =
+           SHARD_WIRE_VERSION, FNV-1a-64 payload checksum). Any layout or
+           message-set change bumps SHARD_WIRE_VERSION, so mixed-build
+           fleets refuse each other on the FIRST frame with a named version
+           error; corrupt frames fail the checksum, never desynchronize. The
+           handshake also compares the worker's full derived ConfigKey
+           against the coordinator's and refuses drift field by field.
+  --dump-state PATH  (train, copy, shard-coordinator) write a canonical
+           binary digest of the finished run (theta + readout bits, loss
+           curve, tokens, curriculum level) for byte-for-byte comparison
+           between runs (`cmp` in CI shard-smoke).
 
 Runtime commands:
   aot-demo Run the AOT-compiled GRU/SnAp-1 step from the PJRT runtime

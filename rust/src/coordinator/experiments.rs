@@ -31,8 +31,10 @@ fn dataset_options(args: &Args) -> DatasetOptions {
 }
 
 /// Resolve `--dataset` (falling back to the legacy `--corpus PATH` alias,
-/// then to the synthetic default) into train/valid sources.
-fn dataset_from_args(args: &Args) -> Result<Dataset> {
+/// then to the synthetic default) into train/valid sources. `pub(crate)`
+/// for the shard coordinator, which loads data with exactly the `train`
+/// command's wiring.
+pub(crate) fn dataset_from_args(args: &Args) -> Result<Dataset> {
     let synthetic_default = || DatasetSpec::Synthetic {
         bytes: args.usize_or("corpus-bytes", 200_000),
         seed: args.u64_or("corpus-seed", 1234),
@@ -643,6 +645,7 @@ pub fn run_train(args: &Args) -> Result<()> {
     print_checkpointing(&cfg);
     let res = try_train_charlm_streams(&cfg, ds.train.as_ref(), ds.valid.as_ref())?;
     print_run(&res);
+    maybe_dump_state(args, &res)?;
     Ok(())
 }
 
@@ -748,10 +751,48 @@ not the sequential per-token schedule (see train::looper docs).",
     let res = try_train_copy(&cfg)?;
     print_run(&res);
     println!("final curriculum level: {}", res.final_level);
+    maybe_dump_state(args, &res)?;
     Ok(())
 }
 
-fn config_from_args(args: &Args) -> TrainConfig {
+/// Honour `--dump-state PATH` on the single-run commands (`train`, `copy`,
+/// `shard-coordinator`): write a canonical binary digest of the run's final
+/// state so two runs can be compared **byte for byte** (`cmp` in CI, file
+/// equality in the determinism tests) instead of parsing stdout.
+fn maybe_dump_state(args: &Args, res: &TrainResult) -> Result<()> {
+    if let Some(path) = args.get("dump-state") {
+        write_state_dump(std::path::Path::new(path), res)?;
+        println!("wrote state dump to {path}");
+    }
+    Ok(())
+}
+
+/// Serialize the bitwise-comparable facts of a finished run — θ and readout
+/// parameter bits, the full loss curve, token count and final curriculum
+/// level — into the standard checksummed container at `path`.
+pub(crate) fn write_state_dump(path: &std::path::Path, res: &TrainResult) -> Result<()> {
+    use crate::runtime::serde::{encode_container, Writer};
+    let mut w = Writer::new();
+    w.put_f32s(&res.final_theta);
+    w.put_f32s(&res.final_readout);
+    w.put_u64(res.curve.len() as u64);
+    for p in &res.curve {
+        w.put_u64(p.x);
+        w.put_f64(p.train_bpc);
+        w.put_f64(p.valid_bpc);
+        w.put_f64(p.aux);
+    }
+    w.put_u64(res.tokens_seen);
+    w.put_u64(res.final_level as u64);
+    let bytes = encode_container(1, &w.into_bytes());
+    std::fs::write(path, &bytes)
+        .with_context(|| format!("writing state dump '{}'", path.display()))
+}
+
+/// `pub(crate)`: the shard coordinator *and* its spawned workers both build
+/// their config through this exact wiring, so a forwarded flag set cannot
+/// produce a different [`TrainConfig`] on the two sides.
+pub(crate) fn config_from_args(args: &Args) -> TrainConfig {
     config_from_args_with(args, &TrainConfig {
         k: 64,
         lr: 3e-3,

@@ -27,6 +27,8 @@ pub fn dispatch(args: &Args) -> Result<()> {
         "bench-gate" => benchgate::run_bench_gate(args)?,
         "audit" => crate::analysis::run_audit_cli(args)?,
         "serve" => crate::serve::run_serve_cli(args)?,
+        "shard-coordinator" => crate::shard::run_shard_coordinator(args)?,
+        "shard-worker" => crate::shard::run_shard_worker(args)?,
         "aot-demo" => crate::runtime::demo::run_aot_demo(args)?,
         "info" => info(),
         "help" | "--help" | "-h" => println!("{USAGE}"),

@@ -12,4 +12,7 @@ pub mod stream;
 pub use copy::{CopySeq, Curriculum, COPY_CLASSES, COPY_VOCAB};
 pub use corpus::Corpus;
 pub use feeder::Feeder;
-pub use stream::{ByteSource, Dataset, DatasetOptions, DatasetSpec, FileSource, Lowercase, Shard};
+pub use stream::{
+    partition_lanes, ByteSource, Dataset, DatasetOptions, DatasetSpec, FileSource, Lowercase,
+    Shard,
+};

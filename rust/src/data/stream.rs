@@ -450,6 +450,26 @@ fn boxed(src: impl ByteSource + 'static, lowercase: bool) -> Box<dyn ByteSource>
     }
 }
 
+/// Split `lanes` minibatch lanes into `parts` contiguous `[lo, hi)` ranges,
+/// the canonical lane→process mapping of the shard runner (`crate::shard`).
+/// Earlier parts get the remainder lane, every lane lands in exactly one
+/// range, and ranges are in lane order — so a coordinator folding partials
+/// part-by-part visits lanes in exactly the single-process reduction order.
+/// `parts > lanes` yields trailing empty ranges rather than an error.
+pub fn partition_lanes(lanes: usize, parts: usize) -> Vec<(usize, usize)> {
+    let parts = parts.max(1);
+    let base = lanes / parts;
+    let extra = lanes % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut lo = 0usize;
+    for p in 0..parts {
+        let len = base + usize::from(p < extra);
+        out.push((lo, lo + len));
+        lo += len;
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -459,6 +479,30 @@ mod tests {
         let p = std::env::temp_dir().join(unique);
         std::fs::write(&p, data).unwrap();
         p
+    }
+
+    #[test]
+    fn partition_lanes_is_contiguous_and_exhaustive() {
+        for lanes in 0..12usize {
+            for parts in 1..6usize {
+                let ranges = partition_lanes(lanes, parts);
+                assert_eq!(ranges.len(), parts);
+                let mut next = 0usize;
+                for &(lo, hi) in &ranges {
+                    assert_eq!(lo, next, "lanes={lanes} parts={parts}");
+                    assert!(hi >= lo);
+                    next = hi;
+                }
+                assert_eq!(next, lanes, "every lane covered exactly once");
+                let (min, max) = ranges
+                    .iter()
+                    .map(|&(lo, hi)| hi - lo)
+                    .fold((usize::MAX, 0), |(a, b), l| (a.min(l), b.max(l)));
+                assert!(max - min <= 1, "balanced within one lane");
+            }
+        }
+        assert_eq!(partition_lanes(4, 2), vec![(0, 2), (2, 4)]);
+        assert_eq!(partition_lanes(5, 2), vec![(0, 3), (3, 5)]);
     }
 
     #[test]

@@ -28,6 +28,10 @@
 //! * [`serve`] — session-multiplexed online-adaptation server (`repro
 //!   serve`): thousands of independent stateful sessions stepped in
 //!   cross-session batches, LRU-spilled to disk, kill/resume bitwise.
+//! * [`shard`] — multi-process lane sharding (`repro shard-coordinator` /
+//!   `shard-worker`): lane computation fanned out over worker processes on
+//!   a checksummed wire protocol, bitwise identical to single-process runs,
+//!   with elastic reshard-from-checkpoint when a worker dies.
 //! * [`testing`] — deterministic property-testing mini-framework (offline
 //!   stand-in for proptest).
 //! * [`errors`] — zero-dependency error plumbing (offline stand-in for
@@ -54,6 +58,7 @@ pub mod models;
 pub mod opt;
 pub mod runtime;
 pub mod serve;
+pub mod shard;
 pub mod sparse;
 pub mod tensor;
 pub mod testing;

@@ -382,6 +382,93 @@ pub fn decode_container(bytes: &[u8], expected_version: u32) -> Result<&[u8]> {
     Ok(payload)
 }
 
+// ---------------------------------------------------------------------------
+// Stream frames
+// ---------------------------------------------------------------------------
+
+/// Write one length-prefixed frame: a u64 LE byte count followed by the
+/// [`encode_container`] envelope (magic, version, payload, FNV-1a-64
+/// checksum). The shard wire protocol (`crate::shard`) frames every message
+/// this way, so a reader always knows how many bytes to pull off the socket
+/// before validating them.
+pub fn write_frame<W: std::io::Write>(w: &mut W, version: u32, payload: &[u8]) -> Result<()> {
+    let container = encode_container(version, payload);
+    w.write_all(&(container.len() as u64).to_le_bytes())
+        .and_then(|_| w.write_all(&container))
+        .and_then(|_| w.flush())
+        .map_err(|e| Error::msg(format!("writing {}-byte frame: {e}", container.len())))
+}
+
+/// Read one frame written by [`write_frame`] and return its validated
+/// payload. Failure modes are distinct named errors:
+///
+/// * clean EOF before any length byte — "connection closed";
+/// * EOF or a read error mid-frame — "truncated frame" / the OS error;
+/// * a read timeout (`set_read_timeout` on sockets) — "timed out";
+/// * a length prefix below the container overhead or above `max_len` —
+///   rejected before any allocation;
+/// * container-level corruption — the [`decode_container`] error (bad
+///   magic, version mismatch, checksum mismatch, ...).
+pub fn read_frame<R: std::io::Read>(
+    r: &mut R,
+    expected_version: u32,
+    max_len: u64,
+) -> Result<Vec<u8>> {
+    let mut len_buf = [0u8; 8];
+    let mut got = 0usize;
+    while got < len_buf.len() {
+        match r.read(&mut len_buf[got..]) {
+            Ok(0) if got == 0 => {
+                return Err(Error::msg("connection closed before a frame length"))
+            }
+            Ok(0) => {
+                return Err(Error::msg(format!(
+                    "truncated frame: connection closed after {got} of 8 length bytes"
+                )))
+            }
+            Ok(n) => got += n,
+            Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(map_read_err(e, "frame length")),
+        }
+    }
+    let len = u64::from_le_bytes(len_buf);
+    if len < CONTAINER_OVERHEAD as u64 {
+        return Err(Error::msg(format!(
+            "corrupt frame: declared length {len} is shorter than the \
+             {CONTAINER_OVERHEAD}-byte container envelope"
+        )));
+    }
+    if len > max_len {
+        return Err(Error::msg(format!(
+            "corrupt frame: declared length {len} exceeds the {max_len}-byte frame cap"
+        )));
+    }
+    let mut buf = vec![0u8; len as usize];
+    let mut got = 0usize;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => {
+                return Err(Error::msg(format!(
+                    "truncated frame: connection closed after {got} of {len} body bytes"
+                )))
+            }
+            Ok(n) => got += n,
+            Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(map_read_err(e, "frame body")),
+        }
+    }
+    decode_container(&buf, expected_version).map(|p| p.to_vec())
+}
+
+fn map_read_err(e: std::io::Error, what: &str) -> Error {
+    match e.kind() {
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
+            Error::msg(format!("timed out reading {what}"))
+        }
+        _ => Error::msg(format!("reading {what}: {e}")),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -500,6 +587,59 @@ mod tests {
         let e = check_state_tag(5, 3, "snap-1").unwrap_err();
         let msg = e.to_string();
         assert!(msg.contains("does not match") && msg.contains("snap-1"), "{msg}");
+    }
+
+    #[test]
+    fn frames_round_trip_back_to_back() {
+        let mut buf: Vec<u8> = Vec::new();
+        write_frame(&mut buf, 2, b"first").unwrap();
+        write_frame(&mut buf, 2, b"second message").unwrap();
+        let mut cur = std::io::Cursor::new(buf);
+        assert_eq!(read_frame(&mut cur, 2, 1 << 20).unwrap(), b"first");
+        assert_eq!(read_frame(&mut cur, 2, 1 << 20).unwrap(), b"second message");
+        let e = read_frame(&mut cur, 2, 1 << 20).unwrap_err();
+        assert!(e.to_string().contains("connection closed"), "{e}");
+    }
+
+    #[test]
+    fn frame_failures_are_named() {
+        let mut buf: Vec<u8> = Vec::new();
+        write_frame(&mut buf, 1, b"payload").unwrap();
+
+        // mid-length EOF
+        let mut cur = std::io::Cursor::new(&buf[..5]);
+        let e = read_frame(&mut cur, 1, 1 << 20).unwrap_err();
+        assert!(e.to_string().contains("truncated frame"), "{e}");
+
+        // mid-body EOF
+        let mut cur = std::io::Cursor::new(&buf[..buf.len() - 2]);
+        let e = read_frame(&mut cur, 1, 1 << 20).unwrap_err();
+        assert!(e.to_string().contains("truncated frame"), "{e}");
+
+        // over-cap length prefix rejected before allocation
+        let mut cur = std::io::Cursor::new(&buf[..]);
+        let e = read_frame(&mut cur, 1, 16).unwrap_err();
+        assert!(e.to_string().contains("frame cap"), "{e}");
+
+        // absurdly small declared length
+        let mut bad = (4u64).to_le_bytes().to_vec();
+        bad.extend_from_slice(&[0; 4]);
+        let mut cur = std::io::Cursor::new(bad);
+        let e = read_frame(&mut cur, 1, 1 << 20).unwrap_err();
+        assert!(e.to_string().contains("container envelope"), "{e}");
+
+        // wrong protocol version surfaces decode_container's named error
+        let mut cur = std::io::Cursor::new(&buf[..]);
+        let e = read_frame(&mut cur, 9, 1 << 20).unwrap_err();
+        assert!(e.to_string().contains("version"), "{e}");
+
+        // flipped payload byte lands on the checksum check
+        let mut bad = buf.clone();
+        let i = bad.len() - 9; // last payload byte (before the 8-byte checksum)
+        bad[i] ^= 0x10;
+        let mut cur = std::io::Cursor::new(bad);
+        let e = read_frame(&mut cur, 1, 1 << 20).unwrap_err();
+        assert!(e.to_string().contains("checksum"), "{e}");
     }
 
     #[test]

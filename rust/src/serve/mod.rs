@@ -183,19 +183,25 @@ pub fn run_serve_cli(args: &Args) -> Result<()> {
     }
 
     latencies.sort_unstable();
+    // A run that stepped nothing (e.g. `--ticks 0` smoke runs) has no
+    // latency samples. NaN here used to flow into BENCH_serve.json, where
+    // bench-gate drops the row and then fails with "no comparable rows" —
+    // so the no-sample case reports 0.0 and the JSON row is marked
+    // `no_samples` below.
+    let no_samples = latencies.is_empty();
     let pct = |p: f64| -> f64 {
         if latencies.is_empty() {
-            return f64::NAN;
+            return 0.0;
         }
         let i = ((latencies.len() - 1) as f64 * p).round() as usize;
         latencies[i].as_secs_f64() * 1e6
     };
     let p50_us = pct(0.50);
     let p99_us = pct(0.99);
-    let steps_per_sec = if wall.as_secs_f64() > 0.0 {
+    let steps_per_sec = if !no_samples && wall.as_secs_f64() > 0.0 {
         stepped_total as f64 / wall.as_secs_f64()
     } else {
-        f64::NAN
+        0.0
     };
     println!(
         "serve: {} ticks, {stepped_total} session-steps; batched-step latency p50 \
@@ -236,12 +242,17 @@ pub fn run_serve_cli(args: &Args) -> Result<()> {
             .int("k", k as u64)
             .int("resident", resident as u64)
             .int("ticks", ticks);
-        let row = JsonObj::new()
+        let mut row = JsonObj::new()
             .int("sessions", population)
             .int("lanes", lanes as u64)
             .num("p50_us", p50_us)
             .num("p99_us", p99_us)
             .num("steps_per_sec", steps_per_sec);
+        if no_samples {
+            // Only degenerate rows carry the flag: adding it everywhere
+            // would change row identity and break baseline matching.
+            row = row.int("no_samples", 1);
+        }
         write_bench_json(path, "serve", &meta_obj, &[row])
             .map_err(|e| Error::msg(format!("writing bench JSON '{path}': {e}")))?;
         println!("serve: bench JSON at {path}");

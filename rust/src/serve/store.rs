@@ -14,7 +14,7 @@
 //! eviction never leaves a torn blob behind.
 
 use crate::cells::Cell;
-use crate::errors::Result;
+use crate::errors::{Error, Result};
 use crate::grad::{GradAlgo, Method};
 use crate::serve::session::{decode_session, encode_session, Session};
 use crate::sparse::simd::KernelKind;
@@ -64,6 +64,9 @@ impl<'c> SessionStore<'c> {
                 spill_dir.display()
             ))
         })?;
+        // A crash between create and rename leaves `session-<id>.bin.tmp`
+        // orphans behind; sweep them so they cannot accumulate forever.
+        sweep_orphaned_tmps(spill_dir);
         Ok(SessionStore {
             method,
             cell,
@@ -239,14 +242,57 @@ impl<'c> SessionStore<'c> {
     }
 }
 
-/// Write-then-rename, same discipline as `train::checkpoint`.
+/// Write-then-rename with the same crash-durability discipline as
+/// `train::checkpoint::TrainCheckpoint::write_file`: the temp file is the
+/// full filename plus `.tmp` (so `session-<id>.bin` spills through
+/// `session-<id>.bin.tmp`, which the startup sweep can find), the data is
+/// fsynced before the rename (a rename can be made durable before the data
+/// it points at otherwise), and the parent directory is fsynced best-effort
+/// so the rename itself survives a crash.
 pub(crate) fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
-    let tmp = path.with_extension("tmp");
-    std::fs::write(&tmp, bytes)
-        .and_then(|()| std::fs::rename(&tmp, path))
-        .map_err(|e| {
-            crate::errors::Error::msg(format!("writing spill file '{}': {e}", path.display()))
-        })
+    use std::io::Write as _;
+    let wrap =
+        |e: std::io::Error| Error::msg(format!("writing spill file '{}': {e}", path.display()));
+    let tmp = tmp_path(path);
+    let mut file = std::fs::File::create(&tmp).map_err(wrap)?;
+    file.write_all(bytes).map_err(wrap)?;
+    file.sync_all().map_err(wrap)?;
+    drop(file);
+    std::fs::rename(&tmp, path).map_err(wrap)?;
+    if let Some(parent) = path.parent() {
+        if let Ok(d) = std::fs::File::open(parent) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(())
+}
+
+/// `<name>.tmp` appended to the full filename (never `with_extension`,
+/// which would replace `.bin` and collide with the real blob namespace).
+fn tmp_path(path: &Path) -> PathBuf {
+    let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+    name.push(".tmp");
+    path.with_file_name(name)
+}
+
+/// Remove orphaned `.bin.tmp` files left by a crash mid-spill. Best-effort:
+/// an unremovable orphan only warns (the atomic rename discipline means it
+/// can never be confused with a real blob).
+fn sweep_orphaned_tmps(dir: &Path) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    for entry in entries.filter_map(|e| e.ok()) {
+        let p = entry.path();
+        let is_tmp = p
+            .file_name()
+            .and_then(|n| n.to_str())
+            .map(|n| n.ends_with(".bin.tmp"))
+            .unwrap_or(false);
+        if is_tmp {
+            if let Err(e) = std::fs::remove_file(&p) {
+                eprintln!("warning: could not sweep orphaned spill tmp '{}': {e}", p.display());
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -282,6 +328,36 @@ mod tests {
         assert_eq!(s0.rng.state_parts(), Session::new(1, 0).rng.state_parts());
         store.put_back(s0, a0).unwrap();
         assert_eq!(store.resident_count(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn spill_tmp_uses_the_full_filename_and_startup_sweeps_orphans() {
+        // Regression: `with_extension("tmp")` used to turn
+        // `session-<id>.bin` into `session-<id>.tmp`, so orphaned temps
+        // lived outside the `.bin.tmp` namespace and were never swept.
+        let dir = tmp("tmpname");
+        std::fs::create_dir_all(&dir).unwrap();
+        let target = dir.join("session-00000042.bin");
+        assert_eq!(
+            tmp_path(&target).file_name().unwrap().to_str().unwrap(),
+            "session-00000042.bin.tmp"
+        );
+        write_atomic(&target, b"payload").unwrap();
+        assert_eq!(std::fs::read(&target).unwrap(), b"payload");
+        assert!(!tmp_path(&target).exists(), "temp file must be renamed away");
+
+        // A crash mid-spill leaves a `.bin.tmp` orphan; opening the store
+        // sweeps it, and never touches completed blobs.
+        let orphan = dir.join("session-00000007.bin.tmp");
+        std::fs::write(&orphan, b"torn").unwrap();
+        let mut rng = Pcg32::seeded(2);
+        let cell = crate::cells::Arch::Gru.build(8, 4, 1.0, &mut rng);
+        let _store =
+            SessionStore::new(Method::Snap(1), cell.as_ref(), KernelKind::Scalar, &dir, 2)
+                .unwrap();
+        assert!(!orphan.exists(), "orphaned .bin.tmp must be swept at startup");
+        assert_eq!(std::fs::read(&target).unwrap(), b"payload");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -1,0 +1,574 @@
+//! The `repro shard-coordinator` command: multi-process lane sharding with
+//! elastic resharding.
+//!
+//! The coordinator runs the **entire** training driver
+//! (`train::looper::run_driver`) — data sampling, evaluation, the ordered
+//! lane-order gradient reduction, optimizer updates, the curve and
+//! checkpointing all execute here, unchanged. Only the lane *computation*
+//! moves: a [`NetBackend`] attached to the [`Stepper`](crate::train::Stepper)
+//! fans each update-boundary request out to `repro shard-worker` processes,
+//! each owning a contiguous lane range
+//! ([`partition_lanes`](crate::data::stream::partition_lanes)), and
+//! concatenates their per-lane replies in lane order. Because the reduction
+//! consumes identical per-lane buffers in identical order, **any sharding of
+//! lanes across processes is bitwise identical to the single-process run** —
+//! the guarantee `rust/tests/executor_determinism.rs` enforces.
+//!
+//! ## Elastic resharding
+//!
+//! A worker that stops answering (killed, crashed, wedged past the read
+//! timeout and its bounded retries) surfaces as a named `… is dead` error
+//! out of the training driver. The coordinator then tears the fleet down
+//! and starts the next attempt — possibly with a *different* worker count
+//! (`--reshard-workers`) — resuming from the newest checkpoint when one
+//! exists, fresh otherwise. Checkpoints store per-lane state blobs that are
+//! independent of the lane→process mapping, and a resumed run is bitwise
+//! identical to an uninterrupted one, so resharding inherits both
+//! guarantees: kill a worker mid-run, restart 2-wide as 4-wide, and the
+//! final θ still matches the single-process run bit for bit.
+
+use crate::coordinator::cli::Args;
+use crate::data::copy::CopySeq;
+use crate::data::stream::partition_lanes;
+use crate::errors::{Context as _, Error, Result};
+use crate::shard::protocol::{recv_msg, send_msg, Msg};
+use crate::train::checkpoint::{list_checkpoints, ConfigKey};
+use crate::train::looper::{
+    config_key_for, try_train_charlm_streams_sharded, try_train_copy_sharded, TrainResult,
+};
+use crate::train::stepper::{LanePartial, LaneState, LaneStepStats, ShardBackend};
+use std::net::{TcpListener, TcpStream};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+/// Flags the coordinator either owns itself or re-derives per worker; never
+/// forwarded to the spawned `shard-worker` processes.
+const NO_FORWARD: &[&str] = &[
+    // worker identity / wiring (re-issued per worker)
+    "connect",
+    "worker-id",
+    "lane-lo",
+    "lane-hi",
+    "task",
+    "train-bytes",
+    "valid-bytes",
+    "die-at-step",
+    // coordinator-only orchestration knobs
+    "shard-workers",
+    "reshard-workers",
+    "shard-attempts",
+    "shard-retries",
+    "shard-timeout-secs",
+    "dump-state",
+    // checkpoint/resume state lives exclusively on the coordinator
+    "resume",
+    "checkpoint-every",
+    "checkpoint-dir",
+    "checkpoint-keep",
+];
+
+/// How long to wait for the fleet to connect back after spawning.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(30);
+
+struct WorkerConn {
+    id: usize,
+    lane_lo: usize,
+    lane_hi: usize,
+    stream: TcpStream,
+    child: Child,
+}
+
+/// Socket-backed [`ShardBackend`]: one TCP connection per worker process,
+/// requests fanned out to all workers before replies are collected (workers
+/// compute concurrently), replies concatenated in lane order.
+pub struct NetBackend {
+    workers: Vec<WorkerConn>,
+    /// Bounded retry count on read timeouts before a worker is declared
+    /// dead (each retry waits one full read-timeout window).
+    retries: usize,
+}
+
+impl NetBackend {
+    fn send_to(&mut self, wi: usize, msg: &Msg) -> Result<()> {
+        let w = &mut self.workers[wi];
+        send_msg(&mut w.stream, msg).map_err(|e| declare_dead(w, e))
+    }
+
+    /// Receive one message from worker `wi`. Read timeouts retry up to
+    /// `self.retries` times; timeout exhaustion and connection failures
+    /// produce the `… is dead` error the reshard loop keys on. Protocol
+    /// errors (version/checksum/tag) are *not* softened into worker deaths:
+    /// a mismatched build must abort the run, not trigger endless reshards.
+    fn recv_from(&mut self, wi: usize) -> Result<Msg> {
+        let retries = self.retries;
+        let w = &mut self.workers[wi];
+        let mut timeouts = 0usize;
+        loop {
+            match recv_msg(&mut w.stream) {
+                Ok(m) => return Ok(m),
+                Err(e) => {
+                    let s = e.to_string();
+                    if s.contains("timed out") {
+                        timeouts += 1;
+                        if timeouts <= retries {
+                            eprintln!(
+                                "shard-coordinator: worker {} read timed out ({timeouts}/{} retries)",
+                                w.id,
+                                retries
+                            );
+                            continue;
+                        }
+                        return Err(declare_dead(
+                            w,
+                            e.context(format!("no reply after {timeouts} timeouts")),
+                        ));
+                    }
+                    if is_protocol_error(&s) {
+                        return Err(e.context(format!(
+                            "shard worker {} sent an incompatible frame",
+                            w.id
+                        )));
+                    }
+                    return Err(declare_dead(w, e));
+                }
+            }
+        }
+    }
+
+    /// Fan `make(lo, hi)` out to every worker, then collect one reply per
+    /// worker in lane order, unwrapping with `extract`.
+    fn fan<T>(
+        &mut self,
+        make: impl Fn(usize, usize) -> Msg,
+        extract: impl Fn(Msg, usize) -> Result<Vec<T>>,
+    ) -> Result<Vec<T>> {
+        for wi in 0..self.workers.len() {
+            let (lo, hi) = (self.workers[wi].lane_lo, self.workers[wi].lane_hi);
+            let msg = make(lo, hi);
+            self.send_to(wi, &msg)?;
+        }
+        let mut out = Vec::new();
+        for wi in 0..self.workers.len() {
+            let owned = self.workers[wi].lane_hi - self.workers[wi].lane_lo;
+            let id = self.workers[wi].id;
+            let reply = self.recv_from(wi)?;
+            let name = reply.name();
+            let lanes = extract(reply, owned)
+                .map_err(|e| e.context(format!("shard worker {id} replied {name}")))?;
+            out.extend(lanes);
+        }
+        Ok(out)
+    }
+}
+
+fn declare_dead(w: &WorkerConn, e: Error) -> Error {
+    Error::msg(format!(
+        "shard worker {} (lanes {}..{}) is dead: {e}",
+        w.id, w.lane_lo, w.lane_hi
+    ))
+}
+
+/// Container/decoder failures that mean "incompatible peer", not "dead
+/// peer" — these abort instead of triggering a reshard.
+fn is_protocol_error(s: &str) -> bool {
+    s.contains("version") || s.contains("checksum") || s.contains("magic")
+        || s.contains("unknown shard message tag")
+}
+
+fn expect_lanes<T>(got: Vec<T>, owned: usize, what: &str) -> Result<Vec<T>> {
+    crate::ensure!(
+        got.len() == owned,
+        "{what} carried {} lanes, expected {owned}",
+        got.len()
+    );
+    Ok(got)
+}
+
+impl ShardBackend for NetBackend {
+    fn charlm_segment(
+        &mut self,
+        crops: &[Vec<u8>],
+        t0: usize,
+        t1: usize,
+    ) -> Result<Vec<LanePartial>> {
+        self.fan(
+            |lo, hi| Msg::CharLmSegment {
+                t0: t0 as u64,
+                t1: t1 as u64,
+                crops: crops[lo..hi].to_vec(),
+            },
+            |reply, owned| match reply {
+                Msg::Partials { lanes } => expect_lanes(lanes, owned, "Partials"),
+                other => crate::bail!("expected Partials, got {}", other.name()),
+            },
+        )
+    }
+
+    fn copy_step(&mut self, seqs: &[CopySeq]) -> Result<Vec<LanePartial>> {
+        self.fan(
+            |lo, hi| Msg::CopyStep { seqs: seqs[lo..hi].to_vec() },
+            |reply, owned| match reply {
+                Msg::Partials { lanes } => expect_lanes(lanes, owned, "Partials"),
+                other => crate::bail!("expected Partials, got {}", other.name()),
+            },
+        )
+    }
+
+    fn step_stats(&mut self) -> Result<Vec<LaneStepStats>> {
+        self.fan(
+            |_, _| Msg::StatsReq,
+            |reply, owned| match reply {
+                Msg::Stats { lanes } => expect_lanes(lanes, owned, "Stats"),
+                other => crate::bail!("expected Stats, got {}", other.name()),
+            },
+        )
+    }
+
+    fn broadcast_shared(&mut self, theta: &[f32], readout_flat: &[f32]) -> Result<()> {
+        let msg = Msg::Shared { theta: theta.to_vec(), readout: readout_flat.to_vec() };
+        for wi in 0..self.workers.len() {
+            self.send_to(wi, &msg)?;
+        }
+        Ok(())
+    }
+
+    fn pull_lane_states(&mut self) -> Result<Vec<LaneState>> {
+        self.fan(
+            |_, _| Msg::PullStates,
+            |reply, owned| match reply {
+                Msg::States { lanes } => expect_lanes(lanes, owned, "States"),
+                other => crate::bail!("expected States, got {}", other.name()),
+            },
+        )
+    }
+
+    fn push_lane_states(
+        &mut self,
+        states: &[LaneState],
+        theta: &[f32],
+        readout_flat: &[f32],
+    ) -> Result<()> {
+        let acks = self.fan(
+            |lo, hi| Msg::PushStates {
+                lanes: states[lo..hi].to_vec(),
+                theta: theta.to_vec(),
+                readout: readout_flat.to_vec(),
+            },
+            |reply, _| match reply {
+                Msg::Ack => Ok(vec![()]),
+                other => crate::bail!("expected Ack, got {}", other.name()),
+            },
+        )?;
+        debug_assert_eq!(acks.len(), self.workers.len());
+        Ok(())
+    }
+}
+
+impl Drop for NetBackend {
+    /// Orderly teardown on success, forceful on failure: offer every worker
+    /// a `Shutdown`, give it a moment to answer `Bye` and exit, then reap —
+    /// killing whatever is still running so a failed attempt never leaks
+    /// processes into the next one.
+    fn drop(&mut self) {
+        for w in &mut self.workers {
+            let _ = send_msg(&mut w.stream, &Msg::Shutdown);
+        }
+        for w in &mut self.workers {
+            w.stream.set_read_timeout(Some(Duration::from_millis(500))).ok();
+            let _ = recv_msg(&mut w.stream); // Bye, best effort
+        }
+        for w in &mut self.workers {
+            let deadline = Instant::now() + Duration::from_secs(2);
+            loop {
+                match w.child.try_wait() {
+                    Ok(Some(_)) => break,
+                    Ok(None) if Instant::now() < deadline => {
+                        std::thread::sleep(Duration::from_millis(25));
+                    }
+                    _ => {
+                        let _ = w.child.kill();
+                        let _ = w.child.wait();
+                        break;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Spawn the worker fleet, wait for every Hello, verify identity + config
+/// key, and return the connected backend.
+#[allow(clippy::too_many_arguments)]
+fn spawn_fleet(
+    args: &Args,
+    task: &str,
+    lanes: usize,
+    nworkers: usize,
+    train_bytes: u64,
+    valid_bytes: u64,
+    key: &ConfigKey,
+    die_at: Option<u64>,
+    read_timeout: Duration,
+    retries: usize,
+) -> Result<NetBackend> {
+    let listener =
+        TcpListener::bind("127.0.0.1:0").context("binding the shard coordinator socket")?;
+    let addr = listener.local_addr().context("reading the coordinator socket address")?;
+    // Empty ranges (more workers than lanes) are simply not spawned.
+    let ranges: Vec<(usize, usize)> = partition_lanes(lanes, nworkers)
+        .into_iter()
+        .filter(|&(lo, hi)| hi > lo)
+        .collect();
+    let exe = std::env::current_exe().context("locating the repro binary for worker spawn")?;
+
+    let mut children: Vec<Option<Child>> = Vec::new();
+    for (id, &(lo, hi)) in ranges.iter().enumerate() {
+        let mut cmd = Command::new(&exe);
+        cmd.arg("shard-worker");
+        // Deterministic forwarding order (sorted by key); the worker derives
+        // its ConfigKey from exactly these flags.
+        for (k, v) in args.flags_sorted() {
+            if NO_FORWARD.contains(&k.as_str()) {
+                continue;
+            }
+            cmd.arg(format!("--{k}={v}"));
+        }
+        cmd.arg(format!("--connect={addr}"));
+        cmd.arg(format!("--worker-id={id}"));
+        cmd.arg(format!("--lane-lo={lo}"));
+        cmd.arg(format!("--lane-hi={hi}"));
+        cmd.arg(format!("--task={task}"));
+        cmd.arg(format!("--train-bytes={train_bytes}"));
+        cmd.arg(format!("--valid-bytes={valid_bytes}"));
+        if let (Some(step), 0) = (die_at, id) {
+            cmd.arg(format!("--die-at-step={step}"));
+        }
+        cmd.stdin(Stdio::null());
+        let child = cmd.spawn().with_context(|| format!("spawning shard worker {id}"))?;
+        children.push(Some(child));
+    }
+
+    // Accept phase: nonblocking with a deadline, watching for workers that
+    // exit before connecting (bad flags, config drift caught worker-side).
+    listener.set_nonblocking(true).context("configuring the coordinator socket")?;
+    let deadline = Instant::now() + HANDSHAKE_TIMEOUT;
+    let mut streams: Vec<TcpStream> = Vec::with_capacity(ranges.len());
+    while streams.len() < ranges.len() {
+        match listener.accept() {
+            Ok((s, _)) => {
+                s.set_nonblocking(false).context("configuring a worker connection")?;
+                streams.push(s);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                for (id, slot) in children.iter_mut().enumerate() {
+                    if let Some(child) = slot {
+                        if let Ok(Some(status)) = child.try_wait() {
+                            crate::bail!(
+                                "shard worker {id} exited during startup with {status} \
+                                 before connecting"
+                            );
+                        }
+                    }
+                }
+                crate::ensure!(
+                    Instant::now() < deadline,
+                    "timed out waiting for {} shard workers to connect (got {})",
+                    ranges.len(),
+                    streams.len()
+                );
+                std::thread::sleep(Duration::from_millis(25));
+            }
+            Err(e) => return Err(Error::from(e).context("accepting a shard worker")),
+        }
+    }
+
+    // Handshake: identify each connection, verify its lane range and config
+    // key, ack it. Connections may arrive in any order.
+    let mut conns: Vec<Option<WorkerConn>> = (0..ranges.len()).map(|_| None).collect();
+    for mut stream in streams {
+        stream
+            .set_read_timeout(Some(read_timeout))
+            .context("configuring a worker connection")?;
+        stream.set_nodelay(true).ok();
+        let hello = recv_msg(&mut stream).map_err(|e| e.context("reading a worker Hello"))?;
+        let (worker_id, lane_lo, lane_hi, worker_key) = match hello {
+            Msg::Hello { worker_id, lane_lo, lane_hi, key } => (worker_id, lane_lo, lane_hi, key),
+            other => crate::bail!("expected Hello from a connecting worker, got {}", other.name()),
+        };
+        let id = worker_id as usize;
+        crate::ensure!(id < ranges.len(), "worker announced unknown id {id}");
+        crate::ensure!(conns[id].is_none(), "worker {id} connected twice");
+        crate::ensure!(
+            (lane_lo as usize, lane_hi as usize) == ranges[id],
+            "worker {id} announced lanes {lane_lo}..{lane_hi}, expected {}..{}",
+            ranges[id].0,
+            ranges[id].1
+        );
+        worker_key
+            .ensure_matches(key)
+            .map_err(|e| e.context(format!("shard worker {id} derived a different config")))?;
+        send_msg(&mut stream, &Msg::HelloAck)?;
+        let child = children[id].take().expect("one child per worker id");
+        conns[id] = Some(WorkerConn {
+            id,
+            lane_lo: ranges[id].0,
+            lane_hi: ranges[id].1,
+            stream,
+            child,
+        });
+    }
+    let workers: Vec<WorkerConn> =
+        conns.into_iter().map(|c| c.expect("all ids handshook")).collect();
+    Ok(NetBackend { workers, retries })
+}
+
+/// Entry point for `repro shard-coordinator`.
+pub fn run_shard_coordinator(args: &Args) -> Result<()> {
+    let task = args.str_or("task", "char-lm");
+    crate::ensure!(
+        task == "char-lm" || task == "copy",
+        "shard-coordinator: unknown --task '{task}' (char-lm|copy)"
+    );
+    let cfg = crate::coordinator::experiments::config_from_args(args);
+    cfg.validate()?;
+    let nworkers = args.usize_or("shard-workers", 2);
+    crate::ensure!(nworkers >= 1, "--shard-workers must be at least 1");
+    let reshard_workers = args.usize_or("reshard-workers", nworkers);
+    let max_attempts = args.usize_or("shard-attempts", 3).max(1);
+    let die_at = args.u64_or("die-at-step", 0);
+    let retries = args.usize_or("shard-retries", 3);
+    let read_timeout = Duration::from_secs(args.u64_or("shard-timeout-secs", 30).max(1));
+
+    let ds = if task == "char-lm" {
+        Some(crate::coordinator::experiments::dataset_from_args(args)?)
+    } else {
+        None
+    };
+    let (train_bytes, valid_bytes) = ds
+        .as_ref()
+        .map(|d| (d.train.len_bytes(), d.valid.len_bytes()))
+        .unwrap_or((0, 0));
+    let lanes = cfg.batch.max(1);
+    println!(
+        "# shard-coordinator: {task} {} {} k={} lanes={lanes} across {nworkers} workers, steps={}",
+        cfg.method.name(),
+        cfg.arch.name(),
+        cfg.k,
+        cfg.steps
+    );
+
+    let mut attempt_cfg = cfg.clone();
+    for attempt in 0..max_attempts {
+        let workers_now = if attempt == 0 { nworkers } else { reshard_workers };
+        let key = config_key_for(&attempt_cfg, &task, train_bytes, valid_bytes);
+        // The chaos kill is armed on the first attempt only: the point is
+        // to exercise one death + one reshard, not an infinite crash loop.
+        let chaos = (attempt == 0 && die_at > 0).then_some(die_at);
+        let backend = spawn_fleet(
+            args,
+            &task,
+            lanes,
+            workers_now,
+            train_bytes,
+            valid_bytes,
+            &key,
+            chaos,
+            read_timeout,
+            retries,
+        )?;
+        let run = match &ds {
+            Some(d) => try_train_charlm_streams_sharded(
+                &attempt_cfg,
+                d.train.as_ref(),
+                d.valid.as_ref(),
+                Some(Box::new(backend)),
+            ),
+            None => try_train_copy_sharded(&attempt_cfg, Some(Box::new(backend))),
+        };
+        match run {
+            Ok(res) => {
+                report(&res, &task);
+                if let Some(path) = args.get("dump-state") {
+                    crate::coordinator::experiments::write_state_dump(
+                        std::path::Path::new(path),
+                        &res,
+                    )?;
+                    println!("wrote state dump to {path}");
+                }
+                return Ok(());
+            }
+            Err(e) if e.to_string().contains("is dead") && attempt + 1 < max_attempts => {
+                eprintln!("shard-coordinator: {e}");
+                // Elastic reshard: the checkpoint's per-lane blobs are
+                // mapping-independent, so the next attempt may use a
+                // different worker count and still resume bitwise.
+                match attempt_cfg.checkpoint_dir.clone() {
+                    Some(dir)
+                        if !list_checkpoints(&dir).unwrap_or_default().is_empty() =>
+                    {
+                        eprintln!(
+                            "shard-coordinator: resharding across {reshard_workers} worker(s) \
+                             from the newest checkpoint in {}",
+                            dir.display()
+                        );
+                        attempt_cfg.resume_from = Some(dir);
+                    }
+                    _ => {
+                        eprintln!(
+                            "shard-coordinator: no checkpoint on disk yet; restarting fresh \
+                             across {reshard_workers} worker(s)"
+                        );
+                        attempt_cfg.resume_from = cfg.resume_from.clone();
+                    }
+                }
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    crate::bail!("shard-coordinator: all {max_attempts} attempts failed with dead workers")
+}
+
+fn report(res: &TrainResult, task: &str) {
+    for p in &res.curve {
+        println!(
+            "x={} train_bpc={:.5} valid_bpc={:.5} aux={:.2}",
+            p.x, p.train_bpc, p.valid_bpc, p.aux
+        );
+    }
+    println!(
+        "tracking: {:.0} flops/step, {} floats; tokens seen: {}",
+        res.tracking_flops_per_step, res.tracking_memory_floats, res.tokens_seen
+    );
+    if task == "copy" {
+        println!("final curriculum level: {}", res.final_level);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forwarding_excludes_every_worker_reissued_flag() {
+        // Flags the spawner re-issues itself must be excluded from blanket
+        // forwarding, or workers would see them twice with different values.
+        for reissued in
+            ["connect", "worker-id", "lane-lo", "lane-hi", "task", "train-bytes", "valid-bytes"]
+        {
+            assert!(NO_FORWARD.contains(&reissued), "{reissued} must not be forwarded");
+        }
+        // Checkpoint state lives on the coordinator alone.
+        for ckpt in ["resume", "checkpoint-every", "checkpoint-dir", "checkpoint-keep"] {
+            assert!(NO_FORWARD.contains(&ckpt), "{ckpt} must not be forwarded");
+        }
+    }
+
+    #[test]
+    fn protocol_errors_are_distinguished_from_deaths() {
+        assert!(is_protocol_error("unsupported format version 2 (expected 1)"));
+        assert!(is_protocol_error("payload checksum mismatch"));
+        assert!(is_protocol_error("unknown shard message tag 200"));
+        assert!(!is_protocol_error("timed out reading frame length"));
+        assert!(!is_protocol_error("connection closed before a frame length"));
+    }
+}

@@ -1,0 +1,25 @@
+//! Multi-process lane sharding with elastic resharding.
+//!
+//! * [`protocol`] — the length-prefixed, checksummed wire protocol
+//!   ([`SHARD_WIRE_VERSION`]) between the coordinator and its workers.
+//! * [`worker`] — the `repro shard-worker` process: owns a contiguous lane
+//!   range, replays the deterministic construction, executes lane steps on
+//!   command.
+//! * [`coordinator`] — the `repro shard-coordinator` command: runs the full
+//!   training driver with a socket-backed
+//!   [`ShardBackend`](crate::train::ShardBackend), detects dead workers,
+//!   and reshards from the newest checkpoint under a possibly different
+//!   lane→process mapping.
+//!
+//! The headline guarantee (enforced by `rust/tests/executor_determinism.rs`
+//! and the CI `shard-smoke` job): any sharding of lanes across processes —
+//! including one interrupted by a worker death and resharded mid-run — is
+//! **bitwise identical** to the single-process run.
+
+pub mod coordinator;
+pub mod protocol;
+pub mod worker;
+
+pub use coordinator::{run_shard_coordinator, NetBackend};
+pub use protocol::{recv_msg, send_msg, Msg, MAX_FRAME_LEN, SHARD_WIRE_VERSION};
+pub use worker::run_shard_worker;

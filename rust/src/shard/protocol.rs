@@ -1,0 +1,463 @@
+//! The lane-sharding wire protocol.
+//!
+//! Every message between `repro shard-coordinator` and its `repro
+//! shard-worker` processes is one length-prefixed frame
+//! ([`runtime::serde::write_frame`](crate::runtime::serde::write_frame)):
+//! a `u64` little-endian byte length followed by the standard checksummed
+//! container (`SNAPRTRL` magic, [`SHARD_WIRE_VERSION`], FNV-1a payload
+//! checksum). The payload is a one-byte message tag followed by the
+//! message fields in [`Writer`] order. Version or checksum drift therefore
+//! fails loudly at decode time with the container's named errors, never by
+//! misreading bytes.
+//!
+//! ## Versioning rules
+//!
+//! [`SHARD_WIRE_VERSION`] covers the whole message set: any change to a
+//! message's field order, a tag's meaning, or the set of tags bumps the
+//! version. The version travels in every frame's container header, so a
+//! coordinator and worker from different builds refuse each other on the
+//! *first* frame (named "unsupported format version" error) instead of
+//! desynchronizing mid-run. Config drift (same protocol, different
+//! training run) is caught separately: the worker's [`Msg::Hello`] carries
+//! its full [`ConfigKey`] and the coordinator compares it against its own
+//! with [`ConfigKey::ensure_matches`].
+
+use crate::data::copy::CopySeq;
+use crate::errors::Result;
+use crate::runtime::serde::{read_frame, write_frame, Reader, Writer};
+use crate::train::checkpoint::ConfigKey;
+use crate::train::stepper::{LanePartial, LaneState, LaneStepStats};
+
+/// Version of the shard wire protocol (container `version` field of every
+/// frame). Bump on any change to the message set or field layouts.
+pub const SHARD_WIRE_VERSION: u32 = 1;
+
+/// Upper bound on a single frame's byte length. Frames carry at most a few
+/// lanes' dense tracking blobs; 1 GiB is orders of magnitude above any real
+/// message while still rejecting a corrupt length prefix immediately.
+pub const MAX_FRAME_LEN: u64 = 1 << 30;
+
+const TAG_HELLO: u8 = 1;
+const TAG_HELLO_ACK: u8 = 2;
+const TAG_CHARLM_SEGMENT: u8 = 3;
+const TAG_COPY_STEP: u8 = 4;
+const TAG_PARTIALS: u8 = 5;
+const TAG_SHARED: u8 = 6;
+const TAG_STATS_REQ: u8 = 7;
+const TAG_STATS: u8 = 8;
+const TAG_PULL_STATES: u8 = 9;
+const TAG_STATES: u8 = 10;
+const TAG_PUSH_STATES: u8 = 11;
+const TAG_ACK: u8 = 12;
+const TAG_SHUTDOWN: u8 = 13;
+const TAG_BYE: u8 = 14;
+
+/// One protocol message. The coordinator initiates every exchange; a worker
+/// only ever replies (`Partials`, `Stats`, `States`, `Ack`, `Bye`).
+#[derive(Clone, Debug)]
+pub enum Msg {
+    /// Worker → coordinator handshake: who I am, which lane range I own,
+    /// and the [`ConfigKey`] I derived from my forwarded flags.
+    Hello { worker_id: u64, lane_lo: u64, lane_hi: u64, key: ConfigKey },
+    /// Coordinator → worker: handshake accepted.
+    HelloAck,
+    /// Advance the owned lanes through crop positions `t0..t1` and flush.
+    /// `crops` holds only the receiving worker's lanes, in lane order.
+    CharLmSegment { t0: u64, t1: u64, crops: Vec<Vec<u8>> },
+    /// Full-unroll Copy minibatch over the owned lanes (lane order).
+    CopyStep { seqs: Vec<CopySeq> },
+    /// Worker reply: one gradient contribution per owned lane, lane order.
+    Partials { lanes: Vec<LanePartial> },
+    /// Post-update shared weights (θ + flat readout).
+    Shared { theta: Vec<f32>, readout: Vec<f32> },
+    /// Request per-lane loss/accounting for the minibatch just finished.
+    StatsReq,
+    Stats { lanes: Vec<LaneStepStats> },
+    /// Request every owned lane's transferable state (checkpoint boundary).
+    PullStates,
+    States { lanes: Vec<LaneState> },
+    /// Install lane states + shared weights (resume / elastic reshard).
+    /// `lanes` holds only the receiving worker's lanes, in lane order.
+    PushStates { lanes: Vec<LaneState>, theta: Vec<f32>, readout: Vec<f32> },
+    /// Generic worker acknowledgement (used for `PushStates`).
+    Ack,
+    /// Orderly end of run; the worker answers `Bye` and exits.
+    Shutdown,
+    Bye,
+}
+
+impl Msg {
+    /// Human-readable message name for error context.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Msg::Hello { .. } => "Hello",
+            Msg::HelloAck => "HelloAck",
+            Msg::CharLmSegment { .. } => "CharLmSegment",
+            Msg::CopyStep { .. } => "CopyStep",
+            Msg::Partials { .. } => "Partials",
+            Msg::Shared { .. } => "Shared",
+            Msg::StatsReq => "StatsReq",
+            Msg::Stats { .. } => "Stats",
+            Msg::PullStates => "PullStates",
+            Msg::States { .. } => "States",
+            Msg::PushStates { .. } => "PushStates",
+            Msg::Ack => "Ack",
+            Msg::Shutdown => "Shutdown",
+            Msg::Bye => "Bye",
+        }
+    }
+
+    /// Serialize into a frame payload (tag byte + fields).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        match self {
+            Msg::Hello { worker_id, lane_lo, lane_hi, key } => {
+                w.put_u8(TAG_HELLO);
+                w.put_u64(*worker_id);
+                w.put_u64(*lane_lo);
+                w.put_u64(*lane_hi);
+                key.write_to(&mut w);
+            }
+            Msg::HelloAck => w.put_u8(TAG_HELLO_ACK),
+            Msg::CharLmSegment { t0, t1, crops } => {
+                w.put_u8(TAG_CHARLM_SEGMENT);
+                w.put_u64(*t0);
+                w.put_u64(*t1);
+                w.put_u64(crops.len() as u64);
+                for crop in crops {
+                    w.put_bytes(crop);
+                }
+            }
+            Msg::CopyStep { seqs } => {
+                w.put_u8(TAG_COPY_STEP);
+                w.put_u64(seqs.len() as u64);
+                for seq in seqs {
+                    write_copy_seq(&mut w, seq);
+                }
+            }
+            Msg::Partials { lanes } => {
+                w.put_u8(TAG_PARTIALS);
+                w.put_u64(lanes.len() as u64);
+                for p in lanes {
+                    w.put_f32s(&p.g_rec);
+                    w.put_f32s(&p.g_ro_flat);
+                    w.put_u64(p.pending);
+                }
+            }
+            Msg::Shared { theta, readout } => {
+                w.put_u8(TAG_SHARED);
+                w.put_f32s(theta);
+                w.put_f32s(readout);
+            }
+            Msg::StatsReq => w.put_u8(TAG_STATS_REQ),
+            Msg::Stats { lanes } => {
+                w.put_u8(TAG_STATS);
+                w.put_u64(lanes.len() as u64);
+                for s in lanes {
+                    w.put_f64(s.nll_sum);
+                    w.put_u64(s.nll_n);
+                    w.put_u64(s.tokens);
+                    w.put_f64(s.flops_sum);
+                    w.put_u64(s.flops_n);
+                }
+            }
+            Msg::PullStates => w.put_u8(TAG_PULL_STATES),
+            Msg::States { lanes } => {
+                w.put_u8(TAG_STATES);
+                write_lane_states(&mut w, lanes);
+            }
+            Msg::PushStates { lanes, theta, readout } => {
+                w.put_u8(TAG_PUSH_STATES);
+                write_lane_states(&mut w, lanes);
+                w.put_f32s(theta);
+                w.put_f32s(readout);
+            }
+            Msg::Ack => w.put_u8(TAG_ACK),
+            Msg::Shutdown => w.put_u8(TAG_SHUTDOWN),
+            Msg::Bye => w.put_u8(TAG_BYE),
+        }
+        w.into_bytes()
+    }
+
+    /// Decode a frame payload. Every length and tag is validated; trailing
+    /// bytes are an error (`expect_end`), so a malformed peer cannot smuggle
+    /// extra state past the parser.
+    pub fn decode(payload: &[u8]) -> Result<Msg> {
+        let mut r = Reader::new(payload);
+        let tag = r.get_u8()?;
+        let msg = match tag {
+            TAG_HELLO => Msg::Hello {
+                worker_id: r.get_u64()?,
+                lane_lo: r.get_u64()?,
+                lane_hi: r.get_u64()?,
+                key: ConfigKey::read_from(&mut r)?,
+            },
+            TAG_HELLO_ACK => Msg::HelloAck,
+            TAG_CHARLM_SEGMENT => {
+                let t0 = r.get_u64()?;
+                let t1 = r.get_u64()?;
+                let n = r.get_u64()? as usize;
+                let mut crops = Vec::with_capacity(n.min(4096));
+                for _ in 0..n {
+                    crops.push(r.get_bytes()?);
+                }
+                Msg::CharLmSegment { t0, t1, crops }
+            }
+            TAG_COPY_STEP => {
+                let n = r.get_u64()? as usize;
+                let mut seqs = Vec::with_capacity(n.min(4096));
+                for _ in 0..n {
+                    seqs.push(read_copy_seq(&mut r)?);
+                }
+                Msg::CopyStep { seqs }
+            }
+            TAG_PARTIALS => {
+                let n = r.get_u64()? as usize;
+                let mut lanes = Vec::with_capacity(n.min(4096));
+                for _ in 0..n {
+                    lanes.push(LanePartial {
+                        g_rec: r.get_f32s()?,
+                        g_ro_flat: r.get_f32s()?,
+                        pending: r.get_u64()?,
+                    });
+                }
+                Msg::Partials { lanes }
+            }
+            TAG_SHARED => Msg::Shared { theta: r.get_f32s()?, readout: r.get_f32s()? },
+            TAG_STATS_REQ => Msg::StatsReq,
+            TAG_STATS => {
+                let n = r.get_u64()? as usize;
+                let mut lanes = Vec::with_capacity(n.min(4096));
+                for _ in 0..n {
+                    lanes.push(LaneStepStats {
+                        nll_sum: r.get_f64()?,
+                        nll_n: r.get_u64()?,
+                        tokens: r.get_u64()?,
+                        flops_sum: r.get_f64()?,
+                        flops_n: r.get_u64()?,
+                    });
+                }
+                Msg::Stats { lanes }
+            }
+            TAG_PULL_STATES => Msg::PullStates,
+            TAG_STATES => Msg::States { lanes: read_lane_states(&mut r)? },
+            TAG_PUSH_STATES => Msg::PushStates {
+                lanes: read_lane_states(&mut r)?,
+                theta: r.get_f32s()?,
+                readout: r.get_f32s()?,
+            },
+            TAG_ACK => Msg::Ack,
+            TAG_SHUTDOWN => Msg::Shutdown,
+            TAG_BYE => Msg::Bye,
+            other => crate::bail!("unknown shard message tag {other}"),
+        };
+        r.expect_end()?;
+        Ok(msg)
+    }
+}
+
+fn write_copy_seq(w: &mut Writer, seq: &CopySeq) {
+    w.put_u64(seq.inputs.len() as u64);
+    for &tok in &seq.inputs {
+        w.put_u8(tok as u8); // Copy vocabulary is 5 tokens
+    }
+    w.put_u64(seq.targets.len() as u64);
+    for t in &seq.targets {
+        match t {
+            Some(bit) => {
+                w.put_bool(true);
+                w.put_u8(*bit as u8);
+            }
+            None => w.put_bool(false),
+        }
+    }
+    w.put_u64(seq.target_len as u64);
+}
+
+fn read_copy_seq(r: &mut Reader) -> Result<CopySeq> {
+    let n = r.get_u64()? as usize;
+    let mut inputs = Vec::with_capacity(n.min(65_536));
+    for _ in 0..n {
+        inputs.push(r.get_u8()? as usize);
+    }
+    let m = r.get_u64()? as usize;
+    let mut targets = Vec::with_capacity(m.min(65_536));
+    for _ in 0..m {
+        targets.push(if r.get_bool()? { Some(r.get_u8()? as usize) } else { None });
+    }
+    let target_len = r.get_u64()? as usize;
+    Ok(CopySeq { inputs, targets, target_len })
+}
+
+fn write_lane_states(w: &mut Writer, lanes: &[LaneState]) {
+    w.put_u64(lanes.len() as u64);
+    for st in lanes {
+        w.put_bytes(&st.algo);
+        w.put_u64(st.rng.0);
+        w.put_u64(st.rng.1);
+        w.put_u64(st.tokens);
+        w.put_f64(st.flops_sum);
+        w.put_u64(st.flops_n);
+    }
+}
+
+fn read_lane_states(r: &mut Reader) -> Result<Vec<LaneState>> {
+    let n = r.get_u64()? as usize;
+    let mut lanes = Vec::with_capacity(n.min(4096));
+    for _ in 0..n {
+        lanes.push(LaneState {
+            algo: r.get_bytes()?,
+            rng: (r.get_u64()?, r.get_u64()?),
+            tokens: r.get_u64()?,
+            flops_sum: r.get_f64()?,
+            flops_n: r.get_u64()?,
+        });
+    }
+    Ok(lanes)
+}
+
+/// Write `msg` as one frame to `w`.
+pub fn send_msg<W: std::io::Write>(w: &mut W, msg: &Msg) -> Result<()> {
+    write_frame(w, SHARD_WIRE_VERSION, &msg.encode())
+        .map_err(|e| e.context(format!("sending {}", msg.name())))
+}
+
+/// Read one frame from `r` and decode it.
+pub fn recv_msg<R: std::io::Read>(r: &mut R) -> Result<Msg> {
+    Msg::decode(&read_frame(r, SHARD_WIRE_VERSION, MAX_FRAME_LEN)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::rng::Pcg32;
+
+    fn round_trip(msg: &Msg) -> Msg {
+        let mut buf = Vec::new();
+        send_msg(&mut buf, msg).unwrap();
+        recv_msg(&mut std::io::Cursor::new(buf)).unwrap()
+    }
+
+    fn sample_key() -> ConfigKey {
+        ConfigKey {
+            task: "char-lm".into(),
+            method: "snap1".into(),
+            arch: "gru".into(),
+            k: 16,
+            density_bits: 1.0f64.to_bits(),
+            batch: 4,
+            seq_len: 32,
+            truncation: 0,
+            seed: 33,
+            readout_hidden: 32,
+            embed_dim: 8,
+            log_every: 3,
+            eval_span: 512,
+            prune: "none".into(),
+            train_bytes: 19_000,
+            valid_bytes: 1_000,
+        }
+    }
+
+    #[test]
+    fn every_message_round_trips() {
+        let mut rng = Pcg32::seeded(7);
+        let seq = CopySeq::generate(5, &mut rng);
+        let partial = LanePartial {
+            g_rec: vec![0.5, -1.25, 3.0],
+            g_ro_flat: vec![2.0, 0.0],
+            pending: 12,
+        };
+        let stat = LaneStepStats {
+            nll_sum: 1.5,
+            nll_n: 31,
+            tokens: 640,
+            flops_sum: 123.0,
+            flops_n: 640,
+        };
+        let state = LaneState {
+            algo: vec![1, 2, 3, 4],
+            rng: (99, 101),
+            tokens: 640,
+            flops_sum: 123.0,
+            flops_n: 640,
+        };
+        let msgs = vec![
+            Msg::Hello { worker_id: 1, lane_lo: 2, lane_hi: 4, key: sample_key() },
+            Msg::HelloAck,
+            Msg::CharLmSegment { t0: 0, t1: 16, crops: vec![vec![1, 2, 3], vec![4, 5]] },
+            Msg::CopyStep { seqs: vec![seq.clone()] },
+            Msg::Partials { lanes: vec![partial.clone()] },
+            Msg::Shared { theta: vec![1.0, 2.0], readout: vec![3.0] },
+            Msg::StatsReq,
+            Msg::Stats { lanes: vec![stat.clone()] },
+            Msg::PullStates,
+            Msg::States { lanes: vec![state.clone()] },
+            Msg::PushStates {
+                lanes: vec![state.clone()],
+                theta: vec![0.25],
+                readout: vec![-0.5, 0.5],
+            },
+            Msg::Ack,
+            Msg::Shutdown,
+            Msg::Bye,
+        ];
+        for msg in &msgs {
+            let back = round_trip(msg);
+            assert_eq!(back.name(), msg.name());
+            // Field-level spot checks on the data-bearing messages.
+            match (&back, msg) {
+                (Msg::Hello { key: a, .. }, Msg::Hello { key: b, .. }) => {
+                    a.ensure_matches(b).unwrap();
+                }
+                (
+                    Msg::CharLmSegment { t1, crops, .. },
+                    Msg::CharLmSegment { t1: t1b, crops: cb, .. },
+                ) => {
+                    assert_eq!(t1, t1b);
+                    assert_eq!(crops, cb);
+                }
+                (Msg::CopyStep { seqs: a }, Msg::CopyStep { seqs: b }) => {
+                    assert_eq!(a[0].inputs, b[0].inputs);
+                    assert_eq!(a[0].targets, b[0].targets);
+                    assert_eq!(a[0].target_len, b[0].target_len);
+                }
+                (Msg::Partials { lanes: a }, Msg::Partials { lanes: b }) => {
+                    assert_eq!(a[0].g_rec, b[0].g_rec);
+                    assert_eq!(a[0].g_ro_flat, b[0].g_ro_flat);
+                    assert_eq!(a[0].pending, b[0].pending);
+                }
+                (Msg::Stats { lanes: a }, Msg::Stats { lanes: b }) => {
+                    assert_eq!(a[0].nll_sum, b[0].nll_sum);
+                    assert_eq!(a[0].tokens, b[0].tokens);
+                }
+                (Msg::States { lanes: a }, Msg::States { lanes: b }) => {
+                    assert_eq!(a[0].algo, b[0].algo);
+                    assert_eq!(a[0].rng, b[0].rng);
+                }
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_tag_and_trailing_bytes_are_named_errors() {
+        let mut w = Writer::new();
+        w.put_u8(200);
+        let e = Msg::decode(&w.into_bytes()).unwrap_err();
+        assert!(e.to_string().contains("unknown shard message tag 200"), "{e}");
+
+        let mut w = Writer::new();
+        w.put_u8(TAG_ACK);
+        w.put_u8(77); // trailing garbage after a complete message
+        assert!(Msg::decode(&w.into_bytes()).is_err());
+    }
+
+    #[test]
+    fn version_drift_is_refused_at_the_frame_layer() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, SHARD_WIRE_VERSION + 1, &Msg::Ack.encode()).unwrap();
+        let e = recv_msg(&mut std::io::Cursor::new(buf)).unwrap_err();
+        assert!(e.to_string().contains("version"), "{e}");
+    }
+}

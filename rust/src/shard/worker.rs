@@ -1,0 +1,300 @@
+//! The `repro shard-worker` process: owns a contiguous lane range of a
+//! sharded training run and executes lane computation on the coordinator's
+//! command.
+//!
+//! A worker is **stateless orchestration-wise**: it never samples data,
+//! never updates θ and never touches a checkpoint file. It replays the
+//! driver's deterministic construction (cell masks, embedding, readout,
+//! θ init, per-lane RNG splits — see
+//! [`LaneExecutor::with_mode_range`](crate::train::executor::LaneExecutor::with_mode_range))
+//! so its owned lanes start bitwise identical to the same lanes of a
+//! single-process run, then answers the coordinator's message loop:
+//! advance lanes, report gradient partials, install broadcast weights,
+//! and move per-lane state at checkpoint/reshard boundaries.
+//!
+//! `--die-at-step N` (chaos knob, used by the resharding tests and the CI
+//! `shard-smoke` job) makes the worker exit abruptly at the start of
+//! minibatch `N` — exercising the coordinator's dead-worker detection and
+//! elastic reshard-from-checkpoint path.
+
+use crate::coordinator::cli::Args;
+use crate::data::copy::{COPY_CLASSES, COPY_VOCAB};
+use crate::errors::{Context as _, Result};
+use crate::models::{Embedding, Readout};
+use crate::runtime::serde::{Reader, Writer};
+use crate::shard::protocol::{recv_msg, send_msg, Msg};
+use crate::tensor::rng::Pcg32;
+use crate::train::executor::LaneExecutor;
+use crate::train::looper::config_key_for;
+use crate::train::stepper::{lane_step_charlm, lane_step_copy, LanePartial, LaneStepStats};
+
+/// Entry point for `repro shard-worker` (spawned by the coordinator; see
+/// the module docs — not normally invoked by hand).
+pub fn run_shard_worker(args: &Args) -> Result<()> {
+    let connect = args
+        .get("connect")
+        .context("shard-worker needs --connect HOST:PORT (it is spawned by shard-coordinator)")?
+        .to_string();
+    let worker_id = args.u64_or("worker-id", 0);
+    let lane_lo = args.usize_or("lane-lo", 0);
+    let lane_hi = args.usize_or("lane-hi", 0);
+    let task = args.str_or("task", "char-lm");
+    let train_bytes = args.u64_or("train-bytes", 0);
+    let valid_bytes = args.u64_or("valid-bytes", 0);
+    let die_at = args.u64_or("die-at-step", 0);
+
+    let cfg = crate::coordinator::experiments::config_from_args(args);
+    cfg.validate()?;
+    let lanes = cfg.batch.max(1);
+    crate::ensure!(
+        lane_lo < lane_hi && lane_hi <= lanes,
+        "shard worker {worker_id}: lane range [{lane_lo},{lane_hi}) is invalid for {lanes} lanes"
+    );
+    let key = config_key_for(&cfg, &task, train_bytes, valid_bytes);
+
+    // Replay the driver construction exactly (see looper/stepper docs):
+    // cell → embedding → readout → θ → per-lane RNG splits. The range
+    // constructor replays *every* lane's split, so the owned lanes carry
+    // the same streams they have in a single-process run.
+    let mut rng = Pcg32::seeded(cfg.seed);
+    let (cell, embed, mut readout) = match task.as_str() {
+        "char-lm" => {
+            let cell = cfg.arch.build(cfg.k, cfg.embed_dim, cfg.density, &mut rng);
+            let embed = Embedding::new(256, cfg.embed_dim, &mut rng);
+            let readout = Readout::new(cell.hidden_size(), cfg.readout_hidden, 256, &mut rng);
+            (cell, embed, readout)
+        }
+        "copy" => {
+            let cell = cfg.arch.build(cfg.k, COPY_VOCAB, cfg.density, &mut rng);
+            let embed = Embedding::one_hot(COPY_VOCAB);
+            let readout =
+                Readout::new(cell.hidden_size(), cfg.readout_hidden, COPY_CLASSES, &mut rng);
+            (cell, embed, readout)
+        }
+        other => crate::bail!("shard worker: unknown --task '{other}' (char-lm|copy)"),
+    };
+    let mut theta = cell.init_params(&mut rng);
+    let mut exec = LaneExecutor::with_mode_range(
+        cell.as_ref(),
+        cfg.method,
+        &readout,
+        lanes,
+        lane_lo,
+        lane_hi,
+        cfg.workers,
+        cfg.spawn,
+        cfg.kernel.resolve(),
+        &mut rng,
+    );
+    let trains_rec = cfg.method.trains_recurrent();
+
+    let mut stream = std::net::TcpStream::connect(&connect)
+        .with_context(|| format!("shard worker {worker_id}: connecting to {connect}"))?;
+    stream.set_nodelay(true).ok();
+    send_msg(
+        &mut stream,
+        &Msg::Hello {
+            worker_id,
+            lane_lo: lane_lo as u64,
+            lane_hi: lane_hi as u64,
+            key,
+        },
+    )?;
+    match recv_msg(&mut stream)? {
+        Msg::HelloAck => {}
+        other => crate::bail!("shard worker {worker_id}: expected HelloAck, got {}", other.name()),
+    }
+
+    let mut steps_started = 0u64;
+    loop {
+        let msg = match recv_msg(&mut stream) {
+            Ok(m) => m,
+            // Coordinator gone between messages: a clean exit, not an error
+            // (the coordinator reports its own failure; a worker lingering
+            // as a zombie would only obscure it).
+            Err(e) if e.to_string().contains("connection closed before a frame length") => {
+                return Ok(());
+            }
+            Err(e) => return Err(e.context(format!("shard worker {worker_id}"))),
+        };
+        match msg {
+            Msg::CharLmSegment { t0, t1, crops } => {
+                if t0 == 0 {
+                    minibatch_start(worker_id, die_at, &mut steps_started);
+                    exec.reset_lanes();
+                }
+                crate::ensure!(
+                    crops.len() == exec.lanes(),
+                    "shard worker {worker_id}: got {} crops for {} owned lanes",
+                    crops.len(),
+                    exec.lanes()
+                );
+                let (t0, t1) = (t0 as usize, t1 as usize);
+                {
+                    let theta_ref: &[f32] = &theta;
+                    let embed_ref = &embed;
+                    let ro: &Readout = &readout;
+                    exec.for_each_lane(|i, slot| {
+                        let crop = &crops[i];
+                        for t in t0..t1 {
+                            lane_step_charlm(slot, theta_ref, embed_ref, ro, crop, t, trains_rec);
+                        }
+                        slot.algo.flush(theta_ref, &mut slot.g_rec);
+                    });
+                }
+                send_msg(&mut stream, &Msg::Partials { lanes: take_partials(&mut exec) })?;
+            }
+            Msg::CopyStep { seqs } => {
+                minibatch_start(worker_id, die_at, &mut steps_started);
+                crate::ensure!(
+                    seqs.len() == exec.lanes(),
+                    "shard worker {worker_id}: got {} sequences for {} owned lanes",
+                    seqs.len(),
+                    exec.lanes()
+                );
+                exec.reset_lanes();
+                {
+                    let theta_ref: &[f32] = &theta;
+                    let embed_ref = &embed;
+                    let ro: &Readout = &readout;
+                    exec.for_each_lane_stealing(|i, slot| {
+                        let seq = &seqs[i];
+                        for (t, &tok) in seq.inputs.iter().enumerate() {
+                            lane_step_copy(
+                                slot, theta_ref, embed_ref, ro, tok, seq.targets[t], trains_rec,
+                            );
+                        }
+                        slot.algo.flush(theta_ref, &mut slot.g_rec);
+                    });
+                }
+                send_msg(&mut stream, &Msg::Partials { lanes: take_partials(&mut exec) })?;
+            }
+            Msg::Shared { theta: new_theta, readout: new_ro } => {
+                crate::ensure!(
+                    new_theta.len() == theta.len(),
+                    "shard worker {worker_id}: broadcast θ has {} params, expected {}",
+                    new_theta.len(),
+                    theta.len()
+                );
+                crate::ensure!(
+                    new_ro.len() == readout.num_params(),
+                    "shard worker {worker_id}: broadcast readout has {} params, expected {}",
+                    new_ro.len(),
+                    readout.num_params()
+                );
+                theta.copy_from_slice(&new_theta);
+                readout.set_params(&new_ro);
+            }
+            Msg::StatsReq => {
+                let lanes: Vec<LaneStepStats> = exec
+                    .slots_mut()
+                    .iter_mut()
+                    .map(|s| {
+                        let st = LaneStepStats {
+                            nll_sum: s.nll_sum,
+                            nll_n: s.nll_n,
+                            tokens: s.tokens,
+                            flops_sum: s.flops_sum,
+                            flops_n: s.flops_n,
+                        };
+                        // Mirror the single-process drain: the loss window
+                        // covers exactly one minibatch step.
+                        s.nll_sum = 0.0;
+                        s.nll_n = 0;
+                        st
+                    })
+                    .collect();
+                send_msg(&mut stream, &Msg::Stats { lanes })?;
+            }
+            Msg::PullStates => {
+                let lanes = exec
+                    .slots()
+                    .iter()
+                    .map(|s| {
+                        let mut w = Writer::new();
+                        s.algo.save_state(&mut w);
+                        crate::train::stepper::LaneState {
+                            algo: w.into_bytes(),
+                            rng: s.rng.state_parts(),
+                            tokens: s.tokens,
+                            flops_sum: s.flops_sum,
+                            flops_n: s.flops_n,
+                        }
+                    })
+                    .collect();
+                send_msg(&mut stream, &Msg::States { lanes })?;
+            }
+            Msg::PushStates { lanes: states, theta: new_theta, readout: new_ro } => {
+                crate::ensure!(
+                    states.len() == exec.lanes(),
+                    "shard worker {worker_id}: push carries {} lane states for {} owned lanes",
+                    states.len(),
+                    exec.lanes()
+                );
+                crate::ensure!(
+                    new_theta.len() == theta.len() && new_ro.len() == readout.num_params(),
+                    "shard worker {worker_id}: pushed shared weights have the wrong shape"
+                );
+                theta.copy_from_slice(&new_theta);
+                readout.set_params(&new_ro);
+                for (i, (slot, st)) in
+                    exec.slots_mut().iter_mut().zip(&states).enumerate()
+                {
+                    slot.rng = Pcg32::from_parts(st.rng.0, st.rng.1);
+                    slot.tokens = st.tokens;
+                    slot.flops_sum = st.flops_sum;
+                    slot.flops_n = st.flops_n;
+                    slot.algo.load_state(&mut Reader::new(&st.algo)).map_err(|e| {
+                        e.context(format!(
+                            "shard worker {worker_id}: installing pushed state for lane {}",
+                            lane_lo + i
+                        ))
+                    })?;
+                }
+                send_msg(&mut stream, &Msg::Ack)?;
+            }
+            Msg::Shutdown => {
+                send_msg(&mut stream, &Msg::Bye).ok();
+                return Ok(());
+            }
+            other => crate::bail!(
+                "shard worker {worker_id}: unexpected {} from the coordinator",
+                other.name()
+            ),
+        }
+    }
+}
+
+/// Minibatch-start bookkeeping: the chaos exit (`--die-at-step`) fires here,
+/// *before* any lane advances, so the death lands between update boundaries
+/// exactly like a real crash.
+fn minibatch_start(worker_id: u64, die_at: u64, steps_started: &mut u64) {
+    if die_at > 0 && *steps_started >= die_at {
+        eprintln!(
+            "shard worker {worker_id}: --die-at-step {die_at} reached, exiting abruptly"
+        );
+        std::process::exit(9);
+    }
+    *steps_started += 1;
+}
+
+/// Snapshot every owned lane's gradient contribution, then clear the
+/// buffers exactly as the single-process reduction would
+/// ([`LaneExecutor::reduce_and_update`] zeroes `g_rec`/`g_ro` and the
+/// pending counter after folding them in).
+fn take_partials(exec: &mut LaneExecutor<'_>) -> Vec<LanePartial> {
+    exec.slots_mut()
+        .iter_mut()
+        .map(|s| {
+            let p = LanePartial {
+                g_rec: s.g_rec.clone(),
+                g_ro_flat: s.g_ro.flat.clone(),
+                pending: s.pending as u64,
+            };
+            s.g_rec.iter_mut().for_each(|v| *v = 0.0);
+            s.g_ro.clear();
+            s.pending = 0;
+            p
+        })
+        .collect()
+}

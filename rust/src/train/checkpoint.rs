@@ -117,6 +117,50 @@ pub struct ConfigKey {
 }
 
 impl ConfigKey {
+    /// Serialize the key fields in payload order. Shared by the checkpoint
+    /// payload and the shard handshake (`crate::shard`), so a worker and the
+    /// coordinator compare exactly the facts a checkpoint records.
+    pub(crate) fn write_to(&self, w: &mut Writer) {
+        w.put_str(&self.task);
+        w.put_str(&self.method);
+        w.put_str(&self.arch);
+        w.put_u64(self.k);
+        w.put_u64(self.density_bits);
+        w.put_u64(self.batch);
+        w.put_u64(self.seq_len);
+        w.put_u64(self.truncation);
+        w.put_u64(self.seed);
+        w.put_u64(self.readout_hidden);
+        w.put_u64(self.embed_dim);
+        w.put_u64(self.log_every);
+        w.put_u64(self.eval_span);
+        w.put_str(&self.prune);
+        w.put_u64(self.train_bytes);
+        w.put_u64(self.valid_bytes);
+    }
+
+    /// Parse the fields written by [`write_to`](Self::write_to).
+    pub(crate) fn read_from(r: &mut Reader) -> Result<ConfigKey> {
+        Ok(ConfigKey {
+            task: r.get_str()?,
+            method: r.get_str()?,
+            arch: r.get_str()?,
+            k: r.get_u64()?,
+            density_bits: r.get_u64()?,
+            batch: r.get_u64()?,
+            seq_len: r.get_u64()?,
+            truncation: r.get_u64()?,
+            seed: r.get_u64()?,
+            readout_hidden: r.get_u64()?,
+            embed_dim: r.get_u64()?,
+            log_every: r.get_u64()?,
+            eval_span: r.get_u64()?,
+            prune: r.get_str()?,
+            train_bytes: r.get_u64()?,
+            valid_bytes: r.get_u64()?,
+        })
+    }
+
     /// Refuse a checkpoint whose writing run disagrees with the resuming
     /// run on any key field, naming the first mismatch.
     pub fn ensure_matches(&self, run: &ConfigKey) -> Result<()> {
@@ -207,22 +251,7 @@ impl TrainCheckpoint {
     pub fn encode(&self) -> Vec<u8> {
         let mut w = Writer::new();
         // key
-        w.put_str(&self.key.task);
-        w.put_str(&self.key.method);
-        w.put_str(&self.key.arch);
-        w.put_u64(self.key.k);
-        w.put_u64(self.key.density_bits);
-        w.put_u64(self.key.batch);
-        w.put_u64(self.key.seq_len);
-        w.put_u64(self.key.truncation);
-        w.put_u64(self.key.seed);
-        w.put_u64(self.key.readout_hidden);
-        w.put_u64(self.key.embed_dim);
-        w.put_u64(self.key.log_every);
-        w.put_u64(self.key.eval_span);
-        w.put_str(&self.key.prune);
-        w.put_u64(self.key.train_bytes);
-        w.put_u64(self.key.valid_bytes);
+        self.key.write_to(&mut w);
         // progress
         w.put_u64(self.next_step);
         w.put_u64(self.opt_steps);
@@ -274,24 +303,7 @@ impl TrainCheckpoint {
     pub fn decode(bytes: &[u8]) -> Result<TrainCheckpoint> {
         let payload = decode_container(bytes, CHECKPOINT_VERSION)?;
         let mut r = Reader::new(payload);
-        let key = ConfigKey {
-            task: r.get_str()?,
-            method: r.get_str()?,
-            arch: r.get_str()?,
-            k: r.get_u64()?,
-            density_bits: r.get_u64()?,
-            batch: r.get_u64()?,
-            seq_len: r.get_u64()?,
-            truncation: r.get_u64()?,
-            seed: r.get_u64()?,
-            readout_hidden: r.get_u64()?,
-            embed_dim: r.get_u64()?,
-            log_every: r.get_u64()?,
-            eval_span: r.get_u64()?,
-            prune: r.get_str()?,
-            train_bytes: r.get_u64()?,
-            valid_bytes: r.get_u64()?,
-        };
+        let key = ConfigKey::read_from(&mut r)?;
         let next_step = r.get_u64()?;
         let opt_steps = r.get_u64()?;
         let curriculum_level = r.get_u64()?;
@@ -533,13 +545,16 @@ impl CheckpointSink {
                 if *old == path {
                     continue;
                 }
-                if let Err(e) = std::fs::remove_file(old) {
-                    eprintln!(
+                // Only successful deletions count against the excess: a
+                // file that refuses to die would otherwise consume the
+                // budget and leave the directory over `keep` forever.
+                match std::fs::remove_file(old) {
+                    Ok(()) => excess -= 1,
+                    Err(e) => eprintln!(
                         "warning: could not prune old checkpoint '{}': {e}",
                         old.display()
-                    );
+                    ),
                 }
-                excess -= 1;
             }
         }
         Ok(path)
@@ -708,6 +723,33 @@ mod tests {
             list_checkpoints(&dir).unwrap().iter().map(|(s, _)| *s).collect();
         assert!(steps.contains(&10), "fresh step 10 retained: {steps:?}");
         assert_eq!(steps.len(), 3, "retention still bounds the total: {steps:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn retention_counts_only_successful_deletions() {
+        // Regression: `excess` used to be decremented even when
+        // `remove_file` failed, so one undeletable entry left the directory
+        // permanently over `keep`. An undeletable "checkpoint" is simulated
+        // portably by a *directory* carrying a checkpoint filename —
+        // `remove_file` refuses it on every platform.
+        let dir = std::env::temp_dir()
+            .join(format!("snap_rtrl_ckpt_undeletable_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::create_dir(dir.join(file_name(1))).unwrap();
+        let sink =
+            CheckpointSink::from_config(5, Some(dir.as_path()), 2, true).unwrap().unwrap();
+        for step in [2u64, 3, 4, 5] {
+            sink.write(&sample_checkpoint(step)).unwrap();
+        }
+        // The failed deletion of the impostor must not consume the pruning
+        // budget: real old checkpoints still get deleted, so the directory
+        // converges to `keep` entries (the impostor + the newest snapshot)
+        // instead of sticking at `keep + 1` forever.
+        let steps: Vec<u64> =
+            list_checkpoints(&dir).unwrap().iter().map(|(s, _)| *s).collect();
+        assert_eq!(steps, vec![1, 5], "undeletable entry must not eat the prune budget");
         std::fs::remove_dir_all(&dir).ok();
     }
 

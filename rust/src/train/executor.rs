@@ -152,26 +152,60 @@ impl<'c> LaneExecutor<'c> {
         kernel: KernelKind,
         rng: &mut Pcg32,
     ) -> Self {
+        Self::with_mode_range(cell, method, readout, lanes, 0, lanes.max(1), workers, mode, kernel, rng)
+    }
+
+    /// As [`with_mode`](Self::with_mode), materializing only the contiguous
+    /// lane sub-range `[lane_lo, lane_hi)` of a `lanes`-wide minibatch — the
+    /// constructor shard workers (`crate::shard`) use. Every lane's RNG
+    /// split is still replayed (`Pcg32::split` advances the parent), so this
+    /// leaves `rng` in exactly the state the full construction would, and
+    /// owned lanes get exactly the streams they have in a single-process
+    /// run. Lane indices inside the executor are local (`0..hi-lo`); the
+    /// caller maps them back with `lane_lo + i`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_mode_range(
+        cell: &'c dyn Cell,
+        method: Method,
+        readout: &Readout,
+        lanes: usize,
+        lane_lo: usize,
+        lane_hi: usize,
+        workers: usize,
+        mode: SpawnMode,
+        kernel: KernelKind,
+        rng: &mut Pcg32,
+    ) -> Self {
+        let total = lanes.max(1);
+        assert!(
+            lane_lo <= lane_hi && lane_hi <= total,
+            "lane range [{lane_lo},{lane_hi}) outside 0..{total}"
+        );
         let p = cell.num_params();
-        let slots: Vec<LaneSlot<'c>> = (0..lanes.max(1))
-            .map(|i| {
-                let mut lane_rng = rng.split(i as u64);
-                let algo = method.build_with_kernel(cell, &mut lane_rng, kernel);
-                LaneSlot {
-                    algo,
-                    rng: lane_rng,
-                    g_rec: vec![0.0; p],
-                    g_ro: readout.make_grad(),
-                    cache: ReadoutCache::default(),
-                    nll_sum: 0.0,
-                    nll_n: 0,
-                    flops_sum: 0.0,
-                    flops_n: 0,
-                    tokens: 0,
-                    pending: 0,
-                }
-            })
-            .collect();
+        let mut slots: Vec<LaneSlot<'c>> = Vec::with_capacity(lane_hi - lane_lo);
+        for i in 0..total {
+            let mut lane_rng = rng.split(i as u64);
+            if i < lane_lo || i >= lane_hi {
+                // Unowned lane: the split above already advanced the parent
+                // stream; algorithm construction draws only from `lane_rng`,
+                // so skipping it changes nothing downstream.
+                continue;
+            }
+            let algo = method.build_with_kernel(cell, &mut lane_rng, kernel);
+            slots.push(LaneSlot {
+                algo,
+                rng: lane_rng,
+                g_rec: vec![0.0; p],
+                g_ro: readout.make_grad(),
+                cache: ReadoutCache::default(),
+                nll_sum: 0.0,
+                nll_n: 0,
+                flops_sum: 0.0,
+                flops_n: 0,
+                tokens: 0,
+                pending: 0,
+            });
+        }
         let workers = if workers == 0 {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
         } else {
@@ -564,6 +598,48 @@ mod tests {
             LaneExecutor::new(cell_b.as_ref(), Method::Snap(1), &readout_b, 4, 8, &mut rng_b);
         for (sa, sb) in a.slots_mut().iter_mut().zip(b.slots_mut().iter_mut()) {
             assert_eq!(sa.rng.next_u64(), sb.rng.next_u64());
+        }
+    }
+
+    #[test]
+    fn range_construction_replays_every_rng_split() {
+        // Shard workers build only their own lane range; the parent RNG and
+        // the owned lanes' streams must match the full construction exactly.
+        let mk = |seed: u64| {
+            let mut rng = Pcg32::seeded(seed);
+            let cell = Arch::Gru.build(6, 3, 1.0, &mut rng);
+            let readout = Readout::new(6, 8, 4, &mut rng);
+            (cell, readout, rng)
+        };
+        let (cell_f, ro_f, mut rng_f) = mk(11);
+        let (cell_a, ro_a, mut rng_a) = mk(11);
+        let (cell_b, ro_b, mut rng_b) = mk(11);
+        let mut full = LaneExecutor::with_mode(
+            cell_f.as_ref(), Method::Snap(1), &ro_f, 6, 1,
+            SpawnMode::Persistent, KernelKind::Scalar, &mut rng_f,
+        );
+        let mut lo = LaneExecutor::with_mode_range(
+            cell_a.as_ref(), Method::Snap(1), &ro_a, 6, 0, 3, 1,
+            SpawnMode::Persistent, KernelKind::Scalar, &mut rng_a,
+        );
+        let mut hi = LaneExecutor::with_mode_range(
+            cell_b.as_ref(), Method::Snap(1), &ro_b, 6, 3, 6, 1,
+            SpawnMode::Persistent, KernelKind::Scalar, &mut rng_b,
+        );
+        assert_eq!(lo.lanes(), 3);
+        assert_eq!(hi.lanes(), 3);
+        // Parent streams all left in the same state.
+        assert_eq!(rng_f.state_parts(), rng_a.state_parts());
+        assert_eq!(rng_f.state_parts(), rng_b.state_parts());
+        // Owned lanes carry the full run's per-lane streams.
+        for i in 0..6 {
+            let want = full.slot_mut(i).rng.next_u64();
+            let got = if i < 3 {
+                lo.slot_mut(i).rng.next_u64()
+            } else {
+                hi.slot_mut(i - 3).rng.next_u64()
+            };
+            assert_eq!(want, got, "lane {i}");
         }
     }
 

@@ -75,7 +75,7 @@ use crate::train::checkpoint::{
 };
 use crate::train::config::TrainConfig;
 use crate::train::metrics::{bpc_from_nats, CurvePoint, RunningMean};
-use crate::train::stepper::{StepInput, Stepper};
+use crate::train::stepper::{ShardBackend, StepInput, Stepper};
 use std::sync::Arc;
 
 /// Result of one training run.
@@ -95,6 +95,9 @@ pub struct TrainResult {
     /// kill/resume-is-bitwise-identical guarantee
     /// (`rust/tests/checkpoint_resume.rs` compares these bit for bit)
     pub final_theta: Vec<f32>,
+    /// final readout parameters (flat layout) — compared bit for bit by the
+    /// sharding determinism tests alongside `final_theta`
+    pub final_readout: Vec<f32>,
 }
 
 /// Character-level language modelling (§5.1) over an in-memory corpus:
@@ -140,11 +143,33 @@ pub fn try_train_charlm_streams(
     train: &dyn ByteSource,
     valid: &dyn ByteSource,
 ) -> Result<TrainResult> {
+    try_train_charlm_streams_sharded(cfg, train, valid, None)
+}
+
+/// [`try_train_charlm_streams`] with the lane computation optionally fanned
+/// out through a [`ShardBackend`] (`repro shard-coordinator`). `None` is the
+/// ordinary in-process run; the two are bitwise identical by construction —
+/// the backend only relocates lane stepping, while data sampling,
+/// evaluation, reduction order and checkpointing all stay here.
+pub fn try_train_charlm_streams_sharded(
+    cfg: &TrainConfig,
+    train: &dyn ByteSource,
+    valid: &dyn ByteSource,
+    backend: Option<Box<dyn ShardBackend>>,
+) -> Result<TrainResult> {
     let mut rng = Pcg32::seeded(cfg.seed);
     let cell = cfg.arch.build(cfg.k, cfg.embed_dim, cfg.density, &mut rng);
     let embed = Embedding::new(256, cfg.embed_dim, &mut rng);
     let readout = Readout::new(cell.hidden_size(), cfg.readout_hidden, 256, &mut rng);
-    run_driver(cfg, cell.as_ref(), embed, readout, &mut rng, Task::CharLm { train, valid })
+    run_driver(
+        cfg,
+        cell.as_ref(),
+        embed,
+        readout,
+        &mut rng,
+        Task::CharLm { train, valid },
+        backend,
+    )
 }
 
 /// Copy task with curriculum (§5.2).
@@ -157,11 +182,20 @@ pub fn train_copy(cfg: &TrainConfig) -> TrainResult {
 
 /// Fallible [`train_copy`] (checkpoint/resume errors as `Result`).
 pub fn try_train_copy(cfg: &TrainConfig) -> Result<TrainResult> {
+    try_train_copy_sharded(cfg, None)
+}
+
+/// [`try_train_copy`] with an optional [`ShardBackend`] (see
+/// [`try_train_charlm_streams_sharded`]).
+pub fn try_train_copy_sharded(
+    cfg: &TrainConfig,
+    backend: Option<Box<dyn ShardBackend>>,
+) -> Result<TrainResult> {
     let mut rng = Pcg32::seeded(cfg.seed);
     let cell = cfg.arch.build(cfg.k, COPY_VOCAB, cfg.density, &mut rng);
     let embed = Embedding::one_hot(COPY_VOCAB);
     let readout = Readout::new(cell.hidden_size(), cfg.readout_hidden, COPY_CLASSES, &mut rng);
-    run_driver(cfg, cell.as_ref(), embed, readout, &mut rng, Task::Copy)
+    run_driver(cfg, cell.as_ref(), embed, readout, &mut rng, Task::Copy, backend)
 }
 
 enum Task<'a> {
@@ -176,26 +210,18 @@ enum DataFeed<'scope> {
     Copy(Feeder<'scope, usize, Vec<CopySeq>>),
 }
 
-fn run_driver(
+/// The [`ConfigKey`] a run writes into its checkpoints. Factored out so a
+/// shard worker (`crate::shard`) can assemble the *same* key from its
+/// forwarded flags and the coordinator can refuse a worker whose config
+/// drifted — the handshake compares exactly the facts a checkpoint records.
+pub(crate) fn config_key_for(
     cfg: &TrainConfig,
-    cell: &dyn Cell,
-    embed: Embedding,
-    readout: Readout,
-    rng: &mut Pcg32,
-    task: Task<'_>,
-) -> Result<TrainResult> {
-    cfg.validate()?;
-    let mut stepper = Stepper::new(cfg, cell, embed, readout, rng);
-
-    let (train_bytes, valid_bytes) = match &task {
-        Task::CharLm { train, valid } => (train.len_bytes(), valid.len_bytes()),
-        Task::Copy => (0, 0),
-    };
-    let key = ConfigKey {
-        task: match &task {
-            Task::CharLm { .. } => "char-lm".into(),
-            Task::Copy => "copy".into(),
-        },
+    task: &str,
+    train_bytes: u64,
+    valid_bytes: u64,
+) -> ConfigKey {
+    ConfigKey {
+        task: task.into(),
         method: cfg.method.name(),
         arch: cfg.arch.name().into(),
         k: cfg.k as u64,
@@ -223,7 +249,33 @@ fn run_driver(
         },
         train_bytes,
         valid_bytes,
+    }
+}
+
+fn run_driver(
+    cfg: &TrainConfig,
+    cell: &dyn Cell,
+    embed: Embedding,
+    readout: Readout,
+    rng: &mut Pcg32,
+    task: Task<'_>,
+    backend: Option<Box<dyn ShardBackend>>,
+) -> Result<TrainResult> {
+    cfg.validate()?;
+    let mut stepper = Stepper::new(cfg, cell, embed, readout, rng);
+    if let Some(backend) = backend {
+        stepper.set_backend(backend);
+    }
+
+    let (train_bytes, valid_bytes) = match &task {
+        Task::CharLm { train, valid } => (train.len_bytes(), valid.len_bytes()),
+        Task::Copy => (0, 0),
     };
+    let task_name = match &task {
+        Task::CharLm { .. } => "char-lm",
+        Task::Copy => "copy",
+    };
+    let key = config_key_for(cfg, task_name, train_bytes, valid_bytes);
     let sink = CheckpointSink::from_config(
         cfg.checkpoint_every,
         cfg.checkpoint_dir.as_deref(),
@@ -258,6 +310,12 @@ fn run_driver(
         last_train_bpc = point.last_train_bpc;
         last_valid_bpc = point.last_valid_bpc;
         curve = point.curve;
+        // Sharded resume: the restored per-lane state must reach whichever
+        // worker owns each lane *now* — the per-lane blobs are mapping-
+        // independent, so this is what makes resharding elastic. A fresh
+        // sharded start needs no push: workers replay the deterministic
+        // construction and already agree.
+        stepper.push_lanes_to_backend()?;
     }
 
     // The prefetch thread lives on this scope; dropping the feeder at the
@@ -326,14 +384,14 @@ fn run_driver(
                         // step (compute + evaluation).
                         feeder.request(());
                     }
-                    stepper.step(StepInput::CharLm { crops: &crops })
+                    stepper.step(StepInput::CharLm { crops: &crops })?
                 }
                 Task::Copy => {
                     let seqs = {
                         let DataFeed::Copy(feeder) = &mut feed else { unreachable!() };
                         feeder.recv()
                     };
-                    stepper.step(StepInput::Copy { seqs: &seqs })
+                    stepper.step(StepInput::Copy { seqs: &seqs })?
                 }
             };
             // Minibatch loss: ordered per-lane drain inside the stepper, so
@@ -367,6 +425,10 @@ fn run_driver(
 
             if ckpt_now {
                 let sink = sink.as_ref().expect("ckpt_now implies a sink");
+                // Sharded runs: refresh the local lane mirrors (tracking
+                // blobs, slot RNGs, counters) from the workers so the
+                // snapshot below is identical to a single-process run's.
+                stepper.sync_lanes_from_backend()?;
                 let ck = stepper.save_state(
                     &key,
                     (step + 1) as u64,
@@ -404,6 +466,7 @@ fn run_driver(
             tokens_seen: stepper.tokens_seen(),
             final_level: curriculum.level(),
             final_theta: stepper.theta().to_vec(),
+            final_readout: stepper.readout().params_flat(),
         })
     })
 }

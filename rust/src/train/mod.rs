@@ -23,9 +23,13 @@ pub use executor::{LaneExecutor, LaneSlot, SpawnMode};
 pub use flops::{table1_memory, table1_time, CostInputs};
 pub use looper::{
     evaluate_charlm, train_charlm, train_charlm_streams, train_copy, try_train_charlm,
-    try_train_charlm_streams, try_train_copy, TrainResult,
+    try_train_charlm_streams, try_train_charlm_streams_sharded, try_train_copy,
+    try_train_copy_sharded, TrainResult,
 };
 pub use metrics::{bpc_from_nats, CurvePoint, Ema, RunningMean};
 pub use pool::WorkerPool;
 pub use prune::Pruner;
-pub use stepper::{ResumePoint, StepInput, StepResult, Stepper};
+pub use stepper::{
+    LanePartial, LaneState, LaneStepStats, ResumePoint, ShardBackend, StepInput, StepResult,
+    Stepper,
+};

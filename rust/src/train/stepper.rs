@@ -72,6 +72,89 @@ pub struct ResumePoint {
     pub curve: Vec<CurvePoint>,
 }
 
+// ---------------------------------------------------------------------------
+// Lane sharding
+// ---------------------------------------------------------------------------
+
+/// One lane's gradient contribution at one update boundary, produced by the
+/// shard worker that owns the lane. Exactly what the lane's local buffers
+/// would hold in a single-process run — the coordinator copies it into its
+/// own [`LaneSlot`] and runs the ordinary lane-order reduction, so sharding
+/// reuses the arithmetic (and its bitwise-determinism guarantee) verbatim.
+#[derive(Clone, Debug)]
+pub struct LanePartial {
+    /// Recurrent-parameter gradient accumulator (`num_params` long).
+    pub g_rec: Vec<f32>,
+    /// Readout gradient accumulator (flat layout).
+    pub g_ro_flat: Vec<f32>,
+    /// Lane-steps contributed since the previous update boundary.
+    pub pending: u64,
+}
+
+/// One lane's loss/accounting report at the end of a minibatch step.
+/// `nll_sum`/`nll_n` cover the step just finished (the worker zeroes them
+/// after reporting, mirroring `drain_step_nll`); `tokens` and the FLOP
+/// counters are absolute run totals and are assigned, not added.
+#[derive(Clone, Debug)]
+pub struct LaneStepStats {
+    pub nll_sum: f64,
+    pub nll_n: u64,
+    pub tokens: u64,
+    pub flops_sum: f64,
+    pub flops_n: u64,
+}
+
+/// One lane's complete transferable state — the wire twin of
+/// [`LaneCheckpoint`], moved between the coordinator and a worker at
+/// checkpoint boundaries (pull before save, push after a resume/reshard).
+#[derive(Clone, Debug)]
+pub struct LaneState {
+    /// Opaque [`GradAlgo::save_state`] blob.
+    pub algo: Vec<u8>,
+    /// The slot's `Pcg32` stream (`state`, `inc`).
+    pub rng: (u64, u64),
+    pub tokens: u64,
+    pub flops_sum: f64,
+    pub flops_n: u64,
+}
+
+/// The coordinator side of a lane-sharded run. An implementation (the
+/// socket-backed one lives in `crate::shard`) fans each request out to the
+/// worker processes owning the lanes and returns the per-lane results **in
+/// lane order** across all workers. The [`Stepper`] stays the single owner
+/// of θ, the readout and both optimizers; a backend only moves data.
+pub trait ShardBackend {
+    /// Advance every lane through crop positions `t0..t1` and return each
+    /// lane's flushed gradient contribution.
+    fn charlm_segment(
+        &mut self,
+        crops: &[Vec<u8>],
+        t0: usize,
+        t1: usize,
+    ) -> Result<Vec<LanePartial>>;
+
+    /// Full-unroll Copy minibatch: each lane consumes its whole sequence;
+    /// one gradient contribution per lane.
+    fn copy_step(&mut self, seqs: &[CopySeq]) -> Result<Vec<LanePartial>>;
+
+    /// Per-lane loss/accounting for the minibatch step just finished.
+    fn step_stats(&mut self) -> Result<Vec<LaneStepStats>>;
+
+    /// Ship the post-update shared weights to every worker.
+    fn broadcast_shared(&mut self, theta: &[f32], readout_flat: &[f32]) -> Result<()>;
+
+    /// Collect every lane's tracking state (checkpoint boundary).
+    fn pull_lane_states(&mut self) -> Result<Vec<LaneState>>;
+
+    /// Install lane states + shared weights on the workers (resume/reshard).
+    fn push_lane_states(
+        &mut self,
+        states: &[LaneState],
+        theta: &[f32],
+        readout_flat: &[f32],
+    ) -> Result<()>;
+}
+
 /// The step-level training engine. See the module docs for the contract.
 pub struct Stepper<'c> {
     cell: &'c dyn Cell,
@@ -93,6 +176,11 @@ pub struct Stepper<'c> {
     trains_rec: bool,
     seq_len: usize,
     truncation: usize,
+    /// `Some` when lane computation is sharded across worker processes. The
+    /// local slots then act as state mirrors: gradients arrive as
+    /// [`LanePartial`]s, tracking state is refreshed from the workers at
+    /// checkpoint boundaries ([`sync_lanes_from_backend`](Self::sync_lanes_from_backend)).
+    backend: Option<Box<dyn ShardBackend>>,
 }
 
 impl<'c> Stepper<'c> {
@@ -148,7 +236,18 @@ impl<'c> Stepper<'c> {
             trains_rec: cfg.method.trains_recurrent(),
             seq_len: cfg.seq_len,
             truncation: cfg.truncation,
+            backend: None,
         }
+    }
+
+    /// Attach a shard backend: every subsequent [`step`](Self::step) fans the
+    /// lane computation out through it instead of the local executor.
+    pub fn set_backend(&mut self, backend: Box<dyn ShardBackend>) {
+        self.backend = Some(backend);
+    }
+
+    pub fn has_backend(&self) -> bool {
+        self.backend.is_some()
     }
 
     // --- accessors -------------------------------------------------------
@@ -208,15 +307,25 @@ impl<'c> Stepper<'c> {
     /// One full minibatch step: every token of `input` is consumed and every
     /// θ update the schedule calls for is applied. Returns the minibatch
     /// loss (ordered per-lane drain, so the mean — and anything fed from it,
-    /// like the Copy curriculum — is worker-count independent).
-    pub fn step(&mut self, input: StepInput<'_>) -> StepResult {
-        match input {
-            StepInput::CharLm { crops } => self.step_charlm(crops),
-            StepInput::Copy { seqs } => self.step_copy(seqs),
+    /// like the Copy curriculum — is worker-count independent). Only a shard
+    /// backend can fail here: the local paths are infallible.
+    pub fn step(&mut self, input: StepInput<'_>) -> Result<StepResult> {
+        if let Some(mut backend) = self.backend.take() {
+            let stepped = match input {
+                StepInput::CharLm { crops } => self.step_charlm_sharded(&mut *backend, crops),
+                StepInput::Copy { seqs } => self.step_copy_sharded(&mut *backend, seqs),
+            };
+            self.backend = Some(backend);
+            stepped?;
+        } else {
+            match input {
+                StepInput::CharLm { crops } => self.step_charlm(crops),
+                StepInput::Copy { seqs } => self.step_copy(seqs),
+            }
         }
         let (nll_sum, nll_n) = self.exec.drain_step_nll();
         let mean = if nll_n == 0 { f64::NAN } else { nll_sum / nll_n as f64 };
-        StepResult { train_bpc: bpc_from_nats(mean), nll_sum, nll_n }
+        Ok(StepResult { train_bpc: bpc_from_nats(mean), nll_sum, nll_n })
     }
 
     /// B independent crops, one per lane, advanced in lockstep segments of
@@ -371,6 +480,166 @@ impl<'c> Stepper<'c> {
             slot.nll_sum = 0.0;
             slot.nll_n = 0;
         }
+    }
+
+    // --- sharded steps ---------------------------------------------------
+
+    /// Char-LM step with the lane computation on remote workers. Same
+    /// segment schedule as [`step_charlm`](Self::step_charlm); each segment
+    /// boundary pulls per-lane partials, runs the **local** lane-order
+    /// reduction, and broadcasts the updated shared weights. The local
+    /// slots' tracking state is not advanced here — it is refreshed from
+    /// the workers at checkpoint boundaries.
+    fn step_charlm_sharded(
+        &mut self,
+        backend: &mut dyn ShardBackend,
+        crops: &[Vec<u8>],
+    ) -> Result<()> {
+        let seg = if self.truncation == 0 { self.seq_len } else { self.truncation };
+        let mut t0 = 0usize;
+        while t0 < self.seq_len {
+            let t1 = (t0 + seg).min(self.seq_len);
+            let partials = backend.charlm_segment(crops, t0, t1)?;
+            self.install_partials(&partials)?;
+            self.reduce();
+            backend.broadcast_shared(&self.theta, &self.readout.params_flat())?;
+            t0 = t1;
+        }
+        self.install_stats(&backend.step_stats()?)
+    }
+
+    /// Copy-task step on remote workers. Only the full-unroll schedule
+    /// (`truncation == 0`) shards: it has exactly one update boundary per
+    /// minibatch. The truncated schedules update θ mid-sequence — the
+    /// legacy single-worker walk serially across lanes — so sharding them
+    /// is refused with a named error rather than silently retrained under
+    /// different semantics.
+    fn step_copy_sharded(
+        &mut self,
+        backend: &mut dyn ShardBackend,
+        seqs: &[CopySeq],
+    ) -> Result<()> {
+        crate::ensure!(
+            self.truncation == 0,
+            "lane sharding supports the Copy task only with --trunc 0 (full unroll); \
+             truncated Copy schedules update θ mid-sequence and are not shardable"
+        );
+        let partials = backend.copy_step(seqs)?;
+        self.install_partials(&partials)?;
+        self.reduce();
+        backend.broadcast_shared(&self.theta, &self.readout.params_flat())?;
+        self.install_stats(&backend.step_stats()?)
+    }
+
+    /// Copy worker-computed gradient contributions into the local lane
+    /// slots, in lane order, exactly where the local parallel sections
+    /// would have left them.
+    fn install_partials(&mut self, partials: &[LanePartial]) -> Result<()> {
+        crate::ensure!(
+            partials.len() == self.exec.lanes(),
+            "shard backend returned {} lane partials for {} lanes",
+            partials.len(),
+            self.exec.lanes()
+        );
+        for (i, (slot, p)) in self.exec.slots_mut().iter_mut().zip(partials).enumerate() {
+            crate::ensure!(
+                p.g_rec.len() == slot.g_rec.len(),
+                "lane {i}: worker sent a {}-element recurrent gradient, expected {}",
+                p.g_rec.len(),
+                slot.g_rec.len()
+            );
+            crate::ensure!(
+                p.g_ro_flat.len() == slot.g_ro.flat.len(),
+                "lane {i}: worker sent a {}-element readout gradient, expected {}",
+                p.g_ro_flat.len(),
+                slot.g_ro.flat.len()
+            );
+            slot.g_rec.copy_from_slice(&p.g_rec);
+            slot.g_ro.flat.copy_from_slice(&p.g_ro_flat);
+            slot.pending = p.pending as usize;
+        }
+        Ok(())
+    }
+
+    /// Install per-lane loss/accounting reports (see [`LaneStepStats`] for
+    /// the assign-vs-accumulate semantics).
+    fn install_stats(&mut self, stats: &[LaneStepStats]) -> Result<()> {
+        crate::ensure!(
+            stats.len() == self.exec.lanes(),
+            "shard backend returned {} lane stats for {} lanes",
+            stats.len(),
+            self.exec.lanes()
+        );
+        for (slot, st) in self.exec.slots_mut().iter_mut().zip(stats) {
+            slot.nll_sum = st.nll_sum;
+            slot.nll_n = st.nll_n;
+            slot.tokens = st.tokens;
+            slot.flops_sum = st.flops_sum;
+            slot.flops_n = st.flops_n;
+        }
+        Ok(())
+    }
+
+    /// Refresh the local lane mirrors from the workers — tracking blobs,
+    /// slot RNGs and counters. The looper calls this right before
+    /// [`save_state`](Self::save_state) on sharded runs, making the
+    /// assembled checkpoint identical to a single-process run's. No-op
+    /// without a backend.
+    pub fn sync_lanes_from_backend(&mut self) -> Result<()> {
+        let Some(mut backend) = self.backend.take() else { return Ok(()) };
+        let synced = self.sync_lanes_inner(&mut *backend);
+        self.backend = Some(backend);
+        synced
+    }
+
+    fn sync_lanes_inner(&mut self, backend: &mut dyn ShardBackend) -> Result<()> {
+        let states = backend.pull_lane_states()?;
+        crate::ensure!(
+            states.len() == self.exec.lanes(),
+            "shard backend returned {} lane states for {} lanes",
+            states.len(),
+            self.exec.lanes()
+        );
+        for (i, (slot, st)) in self.exec.slots_mut().iter_mut().zip(&states).enumerate() {
+            slot.rng = Pcg32::from_parts(st.rng.0, st.rng.1);
+            slot.tokens = st.tokens;
+            slot.flops_sum = st.flops_sum;
+            slot.flops_n = st.flops_n;
+            slot.algo.load_state(&mut Reader::new(&st.algo)).map_err(|e| {
+                e.context(format!("installing lane {i} tracking state from its shard worker"))
+            })?;
+        }
+        Ok(())
+    }
+
+    /// Ship the local lane state (typically just restored by
+    /// [`load_state`](Self::load_state)) plus the shared weights to the
+    /// workers — the second half of an elastic reshard: any lane→process
+    /// mapping receives exactly the states the checkpoint holds. No-op
+    /// without a backend. A **fresh** sharded start needs no push: workers
+    /// replay the deterministic construction and are already identical.
+    pub fn push_lanes_to_backend(&mut self) -> Result<()> {
+        let Some(mut backend) = self.backend.take() else { return Ok(()) };
+        let states: Vec<LaneState> = self
+            .exec
+            .slots()
+            .iter()
+            .map(|s| {
+                let mut w = Writer::new();
+                s.algo.save_state(&mut w);
+                LaneState {
+                    algo: w.into_bytes(),
+                    rng: s.rng.state_parts(),
+                    tokens: s.tokens,
+                    flops_sum: s.flops_sum,
+                    flops_n: s.flops_n,
+                }
+            })
+            .collect();
+        let pushed =
+            backend.push_lane_states(&states, &self.theta, &self.readout.params_flat());
+        self.backend = Some(backend);
+        pushed
     }
 
     /// Ordered reduction + shared weight update (see

@@ -237,6 +237,179 @@ fn charlm_file_backed_corpus_identical_for_workers_1_2_4_16_prefetch_spawn() {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Multi-process sharding (crate::shard): the same bitwise guarantee, with
+// lanes owned by separate worker *processes* instead of threads. Each test
+// runs the real `repro` binary end to end and compares `--dump-state` files
+// byte for byte — θ, readout, the full curve, token counts, curriculum level.
+// ---------------------------------------------------------------------------
+
+fn repro(args: &[String]) -> std::process::Output {
+    std::process::Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(args)
+        .output()
+        .expect("spawning the repro binary")
+}
+
+fn repro_ok(args: &[String]) -> std::process::Output {
+    let out = repro(args);
+    assert!(
+        out.status.success(),
+        "repro {:?} failed:\n--- stdout ---\n{}\n--- stderr ---\n{}",
+        args,
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    out
+}
+
+/// Fresh scratch dir per test (recreated, so reruns start clean).
+fn scratch(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("snap_shard_{}_{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn read_dump(path: &std::path::Path) -> Vec<u8> {
+    let bytes = std::fs::read(path)
+        .unwrap_or_else(|e| panic!("reading state dump {}: {e}", path.display()));
+    assert!(!bytes.is_empty(), "state dump {} is empty", path.display());
+    bytes
+}
+
+fn charlm_flags(dump: &std::path::Path) -> Vec<String> {
+    [
+        "--dataset=synthetic",
+        "--corpus-bytes=20000",
+        "--corpus-seed=17",
+        "--arch=gru",
+        "--method=snap1",
+        "--k=16",
+        "--batch=4",
+        "--seq-len=32",
+        "--trunc=0",
+        "--steps=6",
+        "--seed=33",
+        "--readout-hidden=32",
+        "--embed-dim=8",
+        "--log-every=3",
+        "--workers=1",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .chain([format!("--dump-state={}", dump.display())])
+    .collect()
+}
+
+fn copy_flags(dump: &std::path::Path) -> Vec<String> {
+    [
+        "--arch=gru",
+        "--method=snap1",
+        "--k=16",
+        "--batch=4",
+        "--trunc=0",
+        "--steps=12",
+        "--seed=44",
+        "--readout-hidden=32",
+        "--log-every=4",
+        "--workers=1",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .chain([format!("--dump-state={}", dump.display())])
+    .collect()
+}
+
+#[test]
+fn sharded_charlm_matches_single_process_for_1_2_4_worker_processes() {
+    let dir = scratch("charlm");
+    let base_dump = dir.join("single.bin");
+    let mut base_args = vec!["train".to_string()];
+    base_args.extend(charlm_flags(&base_dump));
+    repro_ok(&base_args);
+    let base = read_dump(&base_dump);
+
+    for nworkers in [1usize, 2, 4] {
+        let dump = dir.join(format!("sharded_{nworkers}.bin"));
+        let mut args =
+            vec!["shard-coordinator".to_string(), "--task=char-lm".to_string()];
+        args.extend(charlm_flags(&dump));
+        args.push(format!("--shard-workers={nworkers}"));
+        repro_ok(&args);
+        assert_eq!(
+            base,
+            read_dump(&dump),
+            "char-LM sharded across {nworkers} processes diverged from single-process"
+        );
+    }
+}
+
+#[test]
+fn sharded_copy_full_unroll_matches_single_process() {
+    let dir = scratch("copy");
+    let base_dump = dir.join("single.bin");
+    let mut base_args = vec!["copy".to_string()];
+    base_args.extend(copy_flags(&base_dump));
+    repro_ok(&base_args);
+    let base = read_dump(&base_dump);
+
+    for nworkers in [2usize, 4] {
+        let dump = dir.join(format!("sharded_{nworkers}.bin"));
+        let mut args = vec!["shard-coordinator".to_string(), "--task=copy".to_string()];
+        args.extend(copy_flags(&dump));
+        args.push(format!("--shard-workers={nworkers}"));
+        repro_ok(&args);
+        assert_eq!(
+            base,
+            read_dump(&dump),
+            "Copy sharded across {nworkers} processes diverged from single-process"
+        );
+    }
+}
+
+#[test]
+fn killed_worker_reshards_from_checkpoint_and_stays_bitwise() {
+    // Chaos run: worker 0 of 2 exits abruptly mid-run (--die-at-step), after
+    // a checkpoint exists (--checkpoint-every 2 < death step). The
+    // coordinator must declare it dead, reshard the 4 lanes across a
+    // *different* process count (4), resume from the newest checkpoint and
+    // still finish bitwise identical to an uninterrupted single-process run.
+    let dir = scratch("reshard");
+    let base_dump = dir.join("single.bin");
+    let mut base_args = vec!["train".to_string()];
+    base_args.extend(charlm_flags(&base_dump));
+    repro_ok(&base_args);
+    let base = read_dump(&base_dump);
+
+    let ckpt_dir = dir.join("ckpts");
+    let dump = dir.join("resharded.bin");
+    let mut args = vec!["shard-coordinator".to_string(), "--task=char-lm".to_string()];
+    args.extend(charlm_flags(&dump));
+    args.extend([
+        "--shard-workers=2".to_string(),
+        "--reshard-workers=4".to_string(),
+        "--die-at-step=3".to_string(),
+        "--checkpoint-every=2".to_string(),
+        format!("--checkpoint-dir={}", ckpt_dir.display()),
+    ]);
+    let out = repro_ok(&args);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        stderr.contains("is dead"),
+        "the chaos kill never fired — stderr:\n{stderr}"
+    );
+    assert!(
+        stderr.contains("resharding across 4 worker(s)"),
+        "expected a reshard-from-checkpoint, stderr:\n{stderr}"
+    );
+    assert_eq!(
+        base,
+        read_dump(&dump),
+        "kill + elastic reshard diverged from the uninterrupted single-process run"
+    );
+}
+
 #[test]
 fn copy_sequential_online_schedule_unchanged_by_prefetch() {
     // workers=1 Copy-online is the paper-faithful sequential walk; routing
