@@ -4,11 +4,18 @@
 //! sparse dynamics-Jacobian pipeline: at high sparsity, SnAp-2 / RTRL /
 //! BPTT per-step times must track nnz(D), not k².
 //!
-//! Every configuration runs under **both sparse kernels** (`scalar` and
-//! `simd`) so the JSON carries an A/B pair per row — the CI artifact that
-//! proves the SIMD layer's speedup on real step shapes. On machines without
-//! AVX2 the `simd` rows run the scalar fallback and the pair collapses to
-//! parity; the `kernel` field still distinguishes the rows.
+//! Every configuration runs under **every sparse kernel backend the host
+//! supports** (`available_backends()`: always `scalar`, plus `simd`/`avx512`
+//! on capable x86 and `neon` on aarch64) so the JSON carries an A/B group
+//! per row — the CI artifact that proves each SIMD tier's speedup on real
+//! step shapes. On machines without the wide units the sweep simply has
+//! fewer rows; the `kernel` field distinguishes them.
+//!
+//! SnAp-2 rows additionally run a fused-vs-two-pass A/B: the default rows
+//! measure the fused influence update (the shipping hot path) and extra
+//! rows tagged `"update": "two-pass"` re-run the same configuration with
+//! the historical gather + GEMV + merge formulation, quantifying what the
+//! fusion alone buys at each density × kernel.
 //!
 //! Run: `cargo bench --bench step_costs [-- --k 128 --ms 300 --json PATH]`
 //!
@@ -19,7 +26,7 @@
 use snap_rtrl::benchutil::{bench, flag_str, flag_usize, report, write_bench_json, JsonObj};
 use snap_rtrl::cells::Arch;
 use snap_rtrl::grad::Method;
-use snap_rtrl::sparse::{KernelChoice, KernelKind};
+use snap_rtrl::sparse::{available_backends, KernelChoice, KernelKind};
 use snap_rtrl::tensor::rng::Pcg32;
 use std::time::Duration;
 
@@ -30,11 +37,12 @@ fn main() {
     let ms = flag_usize(&args, "--ms").unwrap_or(300);
     let budget = Duration::from_millis(ms as u64);
     let json_path = flag_str(&args, "--json");
-    // `--kernel scalar|simd|auto` restricts the sweep to one kernel (auto
-    // resolves to the machine's best); default is to run both for the A/B.
+    // `--kernel auto|scalar|simd|avx512|neon` restricts the sweep to one
+    // kernel (auto resolves to the machine's best); the default sweeps every
+    // backend this host can actually run, narrowest first.
     let kernels: Vec<KernelKind> = match flag_str(&args, "--kernel") {
         Some(s) => vec![KernelChoice::parse(&s).expect("bad --kernel").resolve()],
-        None => vec![KernelKind::Scalar, KernelKind::Simd],
+        None => available_backends(),
     };
     let mut rows: Vec<JsonObj> = Vec::new();
 
@@ -94,6 +102,43 @@ fn main() {
                             .int("tracking_flops", algo.tracking_flops_per_step())
                             .int("tracking_floats", algo.tracking_memory_floats() as u64),
                     );
+                    // Fused-vs-two-pass A/B: SnAp-2 is the only method whose
+                    // tracking runs the ColJacobian run kernel, so only its
+                    // rows get the historical-formulation counterpart (tagged
+                    // with an extra identity field the gate treats as a
+                    // distinct row).
+                    if m == Method::Snap(2) {
+                        algo.set_two_pass_update(true);
+                        let t2 = bench(3, budget, || {
+                            algo.step(&theta, &x);
+                            algo.inject_loss(&dl, &mut g);
+                            algo.flush(&theta, &mut g);
+                            g[0]
+                        });
+                        report(
+                            &format!(
+                                "{}/{}/d={:.4}/{kname}/two-pass",
+                                arch.name(),
+                                m.name(),
+                                density
+                            ),
+                            &t2,
+                            &format!("[fused {:.2}x]", t2.mean_ns() / t.mean_ns()),
+                        );
+                        rows.push(
+                            JsonObj::new()
+                                .str("arch", arch.name())
+                                .str("method", &m.name())
+                                .num("density", density)
+                                .int("k", k as u64)
+                                .str("kernel", kname)
+                                .str("update", "two-pass")
+                                .num("steps_per_sec", t2.per_sec())
+                                .num("ns_per_step", t2.mean_ns())
+                                .int("tracking_flops", algo.tracking_flops_per_step())
+                                .int("tracking_floats", algo.tracking_memory_floats() as u64),
+                        );
+                    }
                 }
             }
             println!();

@@ -1,0 +1,39 @@
+//! Build-time toolchain sniff for the AVX-512 kernel bodies.
+//!
+//! The crate's MSRV is 1.74, but the `_mm512_*` intrinsics and
+//! `#[target_feature(enable = "avx512f")]` only stabilized in rustc 1.89.
+//! Instead of raising the floor for one optional backend, this script asks
+//! the compiler its version and emits `snap_avx512` when the AVX-512
+//! surface is available; `sparse/simd.rs` gates the 512-bit bodies (and the
+//! `have_avx512()` runtime sniff) on that cfg, so older toolchains still
+//! build every other backend and `KernelChoice::Auto` simply never selects
+//! a kernel the binary doesn't contain.
+//!
+//! No external crates (the build image is offline): the version is parsed
+//! straight out of `rustc --version`.
+
+use std::process::Command;
+
+fn rustc_minor() -> Option<u32> {
+    let rustc = std::env::var("RUSTC").unwrap_or_else(|_| "rustc".to_string());
+    let out = Command::new(rustc).arg("--version").output().ok()?;
+    let text = String::from_utf8(out.stdout).ok()?;
+    // "rustc 1.89.0 (…)" — second whitespace-separated field, dot-split.
+    let version = text.split_whitespace().nth(1)?;
+    version.split('.').nth(1)?.parse().ok()
+}
+
+fn main() {
+    println!("cargo:rerun-if-changed=build.rs");
+    // Unknown-version fallback: no cfg, i.e. no AVX-512 bodies — the safe
+    // direction (the scalar/AVX2/NEON backends cover every host).
+    let minor = rustc_minor().unwrap_or(0);
+    if minor >= 80 {
+        // Declare the custom cfg so `unexpected_cfgs` (lint since 1.80)
+        // stays quiet under `clippy -D warnings` whether or not it is set.
+        println!("cargo::rustc-check-cfg=cfg(snap_avx512)");
+    }
+    if minor >= 89 {
+        println!("cargo:rustc-cfg=snap_avx512");
+    }
+}

@@ -212,12 +212,14 @@ fn determinism_rule(sf: &SourceFile, config: &AuditConfig, findings: &mut Vec<Fi
 
 /// SIMD containment: `std::arch` / `core::arch` intrinsic paths and
 /// `#[target_feature]` may appear only in [`SIMD_MODULES`], and a module
-/// using `#[target_feature]` must also contain a runtime
-/// `is_x86_feature_detected!` guard — the static witness that every
-/// feature-gated entry point sits behind detection with a scalar fallback,
-/// never called bare. (A bare `arch` identifier is ubiquitous — `Arch`,
-/// `arch_s` — so the rule matches the unambiguous path/attribute spellings
-/// on the stripped code, not the token.)
+/// using `#[target_feature]` must also contain a runtime feature-detection
+/// guard (`is_x86_feature_detected!` or, on arm,
+/// `is_aarch64_feature_detected!`) — the static witness that every
+/// feature-gated entry point (AVX2, AVX-512, NEON alike) sits behind
+/// detection with a scalar fallback, never called bare. (A bare `arch`
+/// identifier is ubiquitous — `Arch`, `arch_s` — so the rule matches the
+/// unambiguous path/attribute spellings on the stripped code, not the
+/// token.)
 fn simd_rule(sf: &SourceFile, findings: &mut Vec<Finding>) {
     let mut hits: Vec<(usize, &str)> = Vec::new();
     for needle in ["std::arch", "core::arch"] {
@@ -238,7 +240,8 @@ fn simd_rule(sf: &SourceFile, findings: &mut Vec<Finding>) {
     let in_simd_module = SIMD_MODULES
         .iter()
         .any(|m| &sf.path == m || sf.path.ends_with(&format!("/{m}")));
-    let has_detection = !sf.find_token("is_x86_feature_detected").is_empty();
+    let has_detection = !sf.find_token("is_x86_feature_detected").is_empty()
+        || !sf.find_token("is_aarch64_feature_detected").is_empty();
     let mut flagged_lines: Vec<usize> = Vec::new();
     for (off, what) in hits {
         let line = sf.line_of(off);
@@ -263,9 +266,10 @@ fn simd_rule(sf: &SourceFile, findings: &mut Vec<Finding>) {
                 &sf.path,
                 line,
                 "simd",
-                "`#[target_feature]` without any `is_x86_feature_detected!` guard \
-                 in the module; feature-gated kernels must sit behind runtime \
-                 detection with a scalar fallback"
+                "`#[target_feature]` without any `is_x86_feature_detected!` / \
+                 `is_aarch64_feature_detected!` guard in the module; \
+                 feature-gated kernels must sit behind runtime detection with \
+                 a scalar fallback"
                     .to_string(),
             ));
         }
@@ -740,6 +744,35 @@ unsafe fn k() {}
             .collect();
         assert_eq!(f.len(), 1, "{f:?}");
         assert!(f[0].message.contains("is_x86_feature_detected"), "{}", f[0].message);
+
+        // AVX-512 and NEON spellings are covered by the same containment:
+        // intrinsic paths outside the module are flagged whatever the width
+        // or architecture.
+        let avx512_out = "use std::arch::x86_64::_mm512_fmadd_ps;\nfn f() {}\n";
+        let sf = SourceFile::parse("rust/src/grad/snap.rs", avx512_out);
+        let f = run_all(std::slice::from_ref(&sf), &cfg());
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "simd");
+        let neon_out = "use std::arch::aarch64::vfmaq_f32;\nfn f() {}\n";
+        let sf = SourceFile::parse("rust/src/tensor/ops.rs", neon_out);
+        let f = run_all(std::slice::from_ref(&sf), &cfg());
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "simd");
+
+        // The aarch64 detection macro is an accepted witness for
+        // target_feature inside the module (the NEON kernels guard with it).
+        let neon_guarded = "\
+use std::arch::aarch64::vfmaq_f32;
+fn have() -> bool { std::arch::is_aarch64_feature_detected!(\"neon\") }
+#[target_feature(enable = \"neon\")]
+unsafe fn k() {}
+";
+        let sf = SourceFile::parse("rust/src/sparse/simd.rs", neon_guarded);
+        let f: Vec<_> = run_all(std::slice::from_ref(&sf), &cfg())
+            .into_iter()
+            .filter(|x| x.rule == "simd")
+            .collect();
+        assert!(f.is_empty(), "{f:?}");
 
         // A mention in a comment or string must not trip the rule.
         let commented = "// std::arch is discussed here; \"target_feature\" too\nfn f() {}\n";

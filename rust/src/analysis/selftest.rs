@@ -198,6 +198,19 @@ fn case_simd_containment() -> Result<(), String> {
     let findings = fx.audit(&fx.config())?;
     expect(&findings, &[("simd", 1)])?;
     expect_one_containing(&findings, "SparseKernel")?;
+    // The containment covers every vector ISA, not just AVX2: seeded
+    // AVX-512 and NEON intrinsic paths outside the module are violations
+    // too.
+    fx.write(
+        "src/grad/fast.rs",
+        "use std::arch::x86_64::_mm512_fmadd_ps;\npub fn f() {}\n",
+    )?;
+    expect(&fx.audit(&fx.config())?, &[("simd", 1)])?;
+    fx.write(
+        "src/grad/fast.rs",
+        "use std::arch::aarch64::vfmaq_f32;\npub fn f() {}\n",
+    )?;
+    expect(&fx.audit(&fx.config())?, &[("simd", 1)])?;
     // Moving them into the kernel module without a detection guard is still
     // a violation (no scalar-fallback witness)…
     fx.write("src/grad/fast.rs", "pub fn f() {}\n")?;
@@ -219,6 +232,18 @@ fn case_simd_containment() -> Result<(), String> {
     fx.write(
         "rust/src/sparse/simd.rs",
         "pub fn have() -> bool {\n    is_x86_feature_detected!(\"avx2\")\n}\n#[target_feature(enable = \"avx2\")]\npub unsafe fn k() {}\n",
+    )?;
+    let findings: Vec<Finding> = fx
+        .audit(&config)?
+        .into_iter()
+        .filter(|f| f.rule == "simd")
+        .collect();
+    expect(&findings, &[])?;
+    // The aarch64 detection macro is an equally valid witness — NEON
+    // kernels guarded with it are clean.
+    fx.write(
+        "rust/src/sparse/simd.rs",
+        "pub fn have() -> bool {\n    std::arch::is_aarch64_feature_detected!(\"neon\")\n}\n#[target_feature(enable = \"neon\")]\npub unsafe fn k() {}\n",
     )?;
     let findings: Vec<Finding> = fx
         .audit(&config)?

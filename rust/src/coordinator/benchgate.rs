@@ -329,10 +329,14 @@ impl BenchFile {
 /// `kernel` is part of identity: a scalar row must never be compared
 /// against a SIMD row of the same configuration (that silent cross-compare
 /// would read the SIMD speedup as a scalar "regression", or vice versa).
-/// Rows written before the kernel sweep existed carry no `kernel` field;
-/// they measured the scalar code paths, so the implicit `kernel=scalar` is
-/// injected here to keep pre-sweep baselines matchable against the scalar
-/// half of a post-sweep run.
+/// The same holds for every backend value step_costs emits (`scalar`,
+/// `simd`, `avx512`, `neon`) and for the `update` field of its
+/// fused-vs-two-pass rows — any non-measurement field lands in the
+/// identity, so new axes never cross-compare. Rows written before the
+/// kernel sweep existed carry no `kernel` field; they measured the scalar
+/// code paths, so the implicit `kernel=scalar` is injected here to keep
+/// pre-sweep baselines matchable against the scalar half of a post-sweep
+/// run.
 fn row_identity(row: &Json) -> Option<String> {
     let Json::Obj(fields) = row else { return None };
     let mut parts: Vec<String> = fields

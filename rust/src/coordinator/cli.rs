@@ -181,16 +181,21 @@ CI commands:
               CHECKPOINT_VERSION). See rust/src/analysis/ for the rule definitions.
 
 Throughput knobs (training results are bitwise identical for any setting):
-  --kernel K      sparse-kernel implementation every DynJacobian product and
-                  gate-blocked refresh dispatches through, resolved ONCE at
-                  startup (train, copy, file-lm, serve, step_costs bench):
-                    auto    (default) simd when the CPU has AVX2+FMA, else scalar
+  --kernel K      sparse-kernel implementation every DynJacobian product,
+                  fused influence update and gate-blocked refresh dispatches
+                  through, resolved ONCE at startup and logged to stderr
+                  (train, copy, file-lm, serve, shard-worker, step_costs bench):
+                    auto    (default) the widest backend the CPU supports:
+                            avx512 > simd > neon > scalar
                     scalar  portable reference kernels
                     simd    gate-blocked AVX2/FMA kernels (scalar fallback if
                             the CPU lacks them)
+                    avx512  16-wide AVX-512F kernels (needs an AVX-512 CPU and
+                            a toolchain >= 1.89; falls back to simd otherwise)
+                    neon    aarch64 NEON kernels (scalar fallback off-arm)
                   Checkpoints do not record the kernel (blobs are kernel-
-                  agnostic); scalar and simd agree to ~1e-6 per step, so keep
-                  the flag consistent across a checkpoint lineage when bitwise
+                  agnostic); backends agree to ~1e-6 per step, so keep the
+                  flag consistent across a checkpoint lineage when bitwise
                   reproducibility matters. Unsafe/intrinsics stay confined to
                   rust/src/sparse/simd.rs (enforced by the audit `simd` rule).
   --workers N     step the minibatch lanes on N threads from a persistent

@@ -834,7 +834,7 @@ fn config_from_args_with(args: &Args, d: &TrainConfig) -> TrainConfig {
         checkpoint_keep: args.usize_or("checkpoint-keep", d.checkpoint_keep),
         resume_from: args.get("resume").map(PathBuf::from).or_else(|| d.resume_from.clone()),
         kernel: crate::sparse::KernelChoice::parse(&args.str_or("kernel", d.kernel.name()))
-            .expect("bad --kernel (auto|scalar|simd)"),
+            .expect("bad --kernel (auto|scalar|simd|avx512|neon)"),
         ..d.clone()
     }
 }

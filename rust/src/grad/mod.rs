@@ -81,6 +81,14 @@ pub trait GradAlgo: Send {
     /// f32 slots held by the tracking state — drives Table 1's memory column.
     fn tracking_memory_floats(&self) -> usize;
 
+    /// Bench A/B hook: force the historical two-pass influence update
+    /// instead of the fused kernel. Only meaningful for SnAp's
+    /// [`ColJacobian`](crate::sparse::ColJacobian)-backed tracking — the
+    /// default is a no-op so every other method ignores it. Numerics are
+    /// unchanged either way (the scalar fused kernel is bitwise-identical
+    /// to the two-pass order).
+    fn set_two_pass_update(&mut self, _two_pass: bool) {}
+
     /// Serialize the algorithm's complete mutable tracking state (recurrent
     /// state + influence estimate + any private RNG) into `w` — one blob per
     /// lane inside a training checkpoint (`train::checkpoint`). Every

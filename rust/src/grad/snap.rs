@@ -138,6 +138,10 @@ impl GradAlgo for Snap<'_> {
         self.j.nnz()
     }
 
+    fn set_two_pass_update(&mut self, two_pass: bool) {
+        self.j.set_two_pass(two_pass);
+    }
+
     fn save_state(&self, w: &mut Writer) {
         w.put_u8(state_tags::SNAP);
         w.put_u64(self.n as u64);

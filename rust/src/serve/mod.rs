@@ -78,7 +78,7 @@ pub fn run_serve_cli(args: &Args) -> Result<()> {
     let readout_hidden = args.usize_or("readout-hidden", 32);
     let kernel_s = args.str_or("kernel", "auto");
     let kernel = KernelChoice::parse(&kernel_s)
-        .ok_or_else(|| Error::msg(format!("unknown --kernel '{kernel_s}' (auto|scalar|simd)")))?;
+        .ok_or_else(|| Error::msg(format!("unknown --kernel '{kernel_s}' (auto|scalar|simd|avx512|neon)")))?;
     let queue_cap = args.usize_or("queue-cap", lanes.saturating_mul(4));
     let kill_after = args.u64_or("kill-after", 0);
     let checkpoint = args.get("checkpoint").map(PathBuf::from);
@@ -108,7 +108,7 @@ pub fn run_serve_cli(args: &Args) -> Result<()> {
         .seed(seed)
         .kernel(kernel)
         .build()?;
-    let kernel_kind = cfg.kernel.resolve();
+    let kernel_kind = cfg.kernel.resolve_logged("serve");
 
     let mut rng = Pcg32::seeded(cfg.seed);
     let cell = cfg.arch.build(cfg.k, cfg.embed_dim, cfg.density, &mut rng);

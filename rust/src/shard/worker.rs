@@ -83,7 +83,7 @@ pub fn run_shard_worker(args: &Args) -> Result<()> {
         lane_hi,
         cfg.workers,
         cfg.spawn,
-        cfg.kernel.resolve(),
+        cfg.kernel.resolve_logged("shard-worker"),
         &mut rng,
     );
     let trains_rec = cfg.method.trains_recurrent();

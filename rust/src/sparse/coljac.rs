@@ -19,14 +19,21 @@
 //! scratch (`RunScratch`) is owned by the `ColJacobian`, and the
 //! `available_parallelism()` lookup plus the thread-partition plan over runs
 //! are resolved **once at construction** (they are pattern-static), not per
-//! timestep as before.
+//! timestep as before. Per run, the whole `J ← D·J + I` step goes through
+//! the kernel's fused influence update
+//! ([`SparseKernel::fused_influence_update`]): gather, product and
+//! immediate merge in one pass, so each influence value is read once and
+//! written once per step. The historical two-pass formulation (gather +
+//! `gemv_cm` + separate merge) is kept behind [`ColJacobian::set_two_pass`]
+//! as the bench A/B reference; the scalar fused kernel is bitwise-identical
+//! to it by construction.
 //!
 //! This is the library's hottest native kernel; see EXPERIMENTS.md §Perf.
 
 use crate::sparse::dynjac::DynJacobian;
 use crate::sparse::immediate::ImmediateJac;
 use crate::sparse::pattern::Pattern;
-use crate::sparse::simd::SparseKernel;
+use crate::sparse::simd::{RunView, SparseKernel};
 use crate::tensor::matrix::Matrix;
 
 /// Above this many update FLOPs the masked product fans out across threads
@@ -81,6 +88,9 @@ pub struct ColJacobian {
     par_bounds: Vec<usize>,
     /// One persistent scratch per parallel chunk.
     par_scratch: Vec<RunScratch>,
+    /// Force the historical two-pass update (gather + `gemv_cm` + separate
+    /// immediate merge) instead of the fused kernel — bench A/B only.
+    two_pass: bool,
 }
 
 impl ColJacobian {
@@ -151,7 +161,18 @@ impl ColJacobian {
             scratch: RunScratch::new(max_col),
             par_bounds,
             par_scratch,
+            two_pass: false,
         }
+    }
+
+    /// Select the update formulation: `true` runs the historical two-pass
+    /// path (run-gather, `gemv_cm`, then a separate immediate merge);
+    /// `false` (the default) runs the kernel's fused influence update.
+    /// Numerics are identical — the scalar fused kernel reproduces the
+    /// two-pass operation order bit for bit, the wide backends agree to
+    /// rounding — so this exists purely for the step-cost A/B bench.
+    pub fn set_two_pass(&mut self, enabled: bool) {
+        self.two_pass = enabled;
     }
 
     #[inline]
@@ -226,8 +247,8 @@ impl ColJacobian {
     /// * SnAp-1 (every column has one row): fused `v = diag·v + I`, no
     ///   per-column scratch, D's diagonal gathered once per step from its
     ///   cached diagonal slots;
-    /// * small general patterns: single-threaded masked product with a
-    ///   sparse `D[R, R]` run-gather into the owned scratch;
+    /// * small general patterns: single-threaded fused influence update
+    ///   (gather + product + immediate merge in one kernel call per run);
     /// * large patterns (SnAp-2/3 at scale): the same kernel fanned out over
     ///   scoped threads on the construction-time run partition.
     // audit: hot-path
@@ -265,6 +286,7 @@ impl ColJacobian {
                 d,
                 i_jac,
                 &mut self.scratch,
+                self.two_pass,
             );
         }
     }
@@ -278,6 +300,7 @@ impl ColJacobian {
         let runs = &self.runs;
         let bounds = &self.par_bounds;
         let par_scratch = &mut self.par_scratch;
+        let two_pass = self.two_pass;
         let vals: &mut [f32] = &mut self.vals;
         std::thread::scope(move |s| {
             let mut tail = vals;
@@ -290,13 +313,19 @@ impl ColJacobian {
                 consumed = end;
                 tail = rest;
                 s.spawn(move || {
-                    update_runs(col_ptr, row_idx, runs, head, r0, r1, base, d, i_jac, scratch);
+                    update_runs(
+                        col_ptr, row_idx, runs, head, r0, r1, base, d, i_jac, scratch, two_pass,
+                    );
                 });
             }
         });
     }
 
-    /// Exact FLOPs of the fixed-pattern product (cached at construction).
+    /// Exact FLOPs of the fixed-pattern product (cached at construction):
+    /// `Σ_j 2|R_j|²`. This is the arithmetic of the masked product alone —
+    /// the run gather moves data but multiplies nothing — so the count is
+    /// the same for the fused single-pass kernel and the two-pass A/B
+    /// reference (fusion removes memory traffic, not FLOPs).
     pub fn product_flops(&self) -> u64 {
         self.product_flops
     }
@@ -355,6 +384,13 @@ impl ColJacobian {
     /// `product_flops` cache computed at construction — this is O(1), safe
     /// to call every timestep (it used to rescan `col_ptr`, an O(params)
     /// walk on the hot path).
+    ///
+    /// This counts the **single-pass** arithmetic of the fused kernel
+    /// exactly: the gather is pure data movement (0 FLOPs), the product is
+    /// `product_flops`, and the immediate merge is one add per `I` nonzero.
+    /// The two-pass A/B path performs the same arithmetic (it only touches
+    /// memory more), so Table 3's tracking-FLOPs column is
+    /// formulation-independent — `flop_count_formula` pins this.
     pub fn update_flops(&self, i_nnz: usize) -> u64 {
         self.product_flops + i_nnz as u64
     }
@@ -372,20 +408,24 @@ impl ColJacobian {
     }
 }
 
-/// Per-thread scratch for the run-GEMM update. Owned by the `ColJacobian`
+/// Per-thread scratch for the run update. Owned by the `ColJacobian`
 /// (one for the sequential path, one per parallel chunk) so the hot loop
 /// never allocates; reconstructible, never serialized.
+///
+/// One flat buffer of `max_col·(max_col + 1)` floats: the fused kernel
+/// carves its own `n·n` D-submatrix + `n` column buffer out of it per run,
+/// and the two-pass A/B path splits it at `cap·cap` into the historical
+/// `dsub`/`old` pair.
 #[derive(Clone, Debug)]
 struct RunScratch {
-    /// gathered D submatrix, column-major (n × n)
-    dsub: Vec<f32>,
-    /// old values of one column
-    old: Vec<f32>,
+    /// `max_col` — fixes where `buf` splits for the two-pass layout.
+    cap: usize,
+    buf: Vec<f32>,
 }
 
 impl RunScratch {
     fn new(max_col: usize) -> Self {
-        RunScratch { dsub: vec![0.0; max_col * max_col], old: vec![0.0; max_col] }
+        RunScratch { cap: max_col, buf: vec![0.0; max_col * (max_col + 1)] }
     }
 }
 
@@ -393,13 +433,16 @@ impl RunScratch {
 /// is the slice of value storage covering exactly those runs; `base` is the
 /// global offset of `vals[0]`.
 ///
-/// §Perf: per run, the D entries needed (`D[R, R]`) are gathered ONCE into a
-/// column-major submatrix — straight off D's CSR rows, so the gather cost is
-/// the nnz of the touched rows, not |R|² — then every column in the run is
-/// updated with contiguous AXPYs — a small dense GEMM (`out = Dsub · Old`).
-/// Parameters wired into the same unit share their row set, so runs are long
-/// (≈ the block width) and the gather amortizes to nothing; the product runs
-/// at SIMD speed instead of gather speed (~3–4× on SnAp-2/3 shapes).
+/// §Perf: per run, one [`SparseKernel::fused_influence_update`] call does
+/// everything — gathers `D[R, R]` straight off D's CSR rows (cost tracks the
+/// nnz of the touched rows, not |R|²), runs the small dense GEMM over every
+/// column, and merges the immediate term in the same pass, so each influence
+/// value is loaded and stored exactly once per step. Parameters wired into
+/// the same unit share their row set, so runs are long (≈ the block width)
+/// and the gather amortizes to nothing. With `two_pass` the historical
+/// formulation runs instead: gather, per-column `gemv_cm`, then a separate
+/// immediate merge — kept only as the bench A/B reference (the scalar fused
+/// kernel is bitwise-identical to it).
 // audit: hot-path
 #[allow(clippy::too_many_arguments)]
 fn update_runs(
@@ -413,7 +456,9 @@ fn update_runs(
     d: &DynJacobian,
     i_jac: &ImmediateJac,
     scratch: &mut RunScratch,
+    two_pass: bool,
 ) {
+    let (i_col_ptr, i_row_idx, i_vals) = i_jac.csc();
     for ri in r0..r1 {
         let j_start = runs[ri] as usize;
         let j_end = runs[ri + 1] as usize;
@@ -423,17 +468,31 @@ fn update_runs(
             continue;
         }
         let rows = &row_idx[s0..e0];
+        if !two_pass {
+            let run = RunView {
+                rows,
+                j0: j_start,
+                width: j_end - j_start,
+                i_col_ptr,
+                i_row_idx,
+                i_vals,
+            };
+            let (cs, ce) = (col_ptr[j_start], col_ptr[j_end]);
+            d.fused_influence_update(run, &mut vals[cs - base..ce - base], &mut scratch.buf);
+            continue;
+        }
+        // --- Two-pass A/B reference (the pre-fusion hot path, verbatim). ---
+        let (dsub_all, old_all) = scratch.buf.split_at_mut(scratch.cap * scratch.cap);
         // Gather Dsub column-major: dsub[m_slot*n + r_slot] = D[rows[r_slot], rows[m_slot]].
-        let dsub = &mut scratch.dsub[..n * n];
+        let dsub = &mut dsub_all[..n * n];
         d.gather_block(rows, dsub);
         // Every column in the run: out = Dsub · old — the small dense GEMV
-        // dispatched through D's kernel tag (the SIMD path runs 8 rows of
-        // Dsub per FMA; the scalar path is the historical AXPY loop).
+        // dispatched through D's kernel tag.
         let kernel = d.kernel();
         for j in j_start..j_end {
             let (s, e) = (col_ptr[j], col_ptr[j + 1]);
             let col_vals = &mut vals[s - base..e - base];
-            let old = &mut scratch.old[..n];
+            let old = &mut old_all[..n];
             old.copy_from_slice(col_vals);
             kernel.gemv_cm(dsub, n, old, col_vals);
             // Immediate term (≤2 entries; rows of I ⊆ R_j, both sorted).
@@ -609,6 +668,29 @@ mod tests {
             .sum::<u64>()
             + ij.nnz() as u64;
         assert_eq!(f, manual);
+    }
+
+    #[test]
+    fn fused_update_is_bitwise_identical_to_two_pass() {
+        // The default (fused) update and the historical two-pass path must
+        // agree bit for bit on the scalar kernel — the fused scalar body
+        // reproduces the exact per-element operation order. Multi-step so
+        // divergence would compound if present.
+        let (p, d, mut ij) = setup(9, 27, 51);
+        let mut fused = ColJacobian::from_pattern(&p);
+        let mut two_pass = ColJacobian::from_pattern(&p);
+        two_pass.set_two_pass(true);
+        let mut rng = Pcg32::seeded(52);
+        for _ in 0..4 {
+            for v in ij.vals_mut() {
+                *v = rng.normal();
+            }
+            fused.update(&d, &ij);
+            two_pass.update(&d, &ij);
+        }
+        for (x, y) in fused.vals().iter().zip(two_pass.vals()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
     }
 
     #[test]

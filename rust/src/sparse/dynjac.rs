@@ -203,6 +203,23 @@ impl DynJacobian {
         self.kernel.gather_block(&self.row_ptr, &self.col_idx, &self.vals, rows, out);
     }
 
+    /// Fused influence update for one run (SnAp's hot loop): compute
+    /// `J[R, j] ← D[R, R]·J[R, j] + I[R, j]` for the run described by
+    /// `run`, writing the run's column-major influence values `j_vals`
+    /// in place — each value is read and written exactly once per step (see
+    /// [`SparseKernel::fused_influence_update`] for the contract; `scratch`
+    /// must hold ≥ `rows.len()·(rows.len() + 1)` floats).
+    // audit: hot-path
+    pub fn fused_influence_update(
+        &self,
+        run: crate::sparse::simd::RunView<'_>,
+        j_vals: &mut [f32],
+        scratch: &mut [f32],
+    ) {
+        self.kernel
+            .fused_influence_update(&self.row_ptr, &self.col_idx, &self.vals, run, j_vals, scratch);
+    }
+
     /// Refresh values from a dense matrix at the structural positions
     /// (tests / dense-reference oracles).
     pub fn refresh_from_dense(&mut self, dense: &Matrix) {
@@ -463,6 +480,23 @@ mod tests {
         simd.spmm_into(&b, &mut cv, false);
         for (a, b) in cs.as_slice().iter().zip(cv.as_slice()) {
             assert!((a - b).abs() <= 1e-4 * (1.0 + a.abs()));
+        }
+        // The wide tags (which runtime-fall-back where the host lacks the
+        // units) agree with scalar on the same products.
+        for tag in [KernelKind::Avx512, KernelKind::Neon] {
+            let wide = dj.clone().with_kernel(tag);
+            assert_eq!(wide.kernel(), tag);
+            let mut yw = vec![0.0f32; 33];
+            wide.matvec_into(&x, &mut yw);
+            dj.matvec_into(&x, &mut ys);
+            for (a, b) in ys.iter().zip(&yw) {
+                assert!((a - b).abs() <= 1e-5 * (1.0 + a.abs()), "{tag:?} matvec");
+            }
+            let mut cw = Matrix::zeros(33, 17);
+            wide.spmm_into(&b, &mut cw, false);
+            for (a, b) in cs.as_slice().iter().zip(cw.as_slice()) {
+                assert!((a - b).abs() <= 1e-4 * (1.0 + a.abs()), "{tag:?} spmm");
+            }
         }
     }
 

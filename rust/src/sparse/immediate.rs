@@ -65,6 +65,14 @@ impl ImmediateJac {
         &mut self.vals[s..e]
     }
 
+    /// Raw CSC slices `(col_ptr, row_idx, vals)` — the borrow the fused
+    /// influence update threads into [`crate::sparse::RunView`] so the
+    /// kernel can merge `I` entries without per-column method calls.
+    #[inline]
+    pub fn csc(&self) -> (&[usize], &[u32], &[f32]) {
+        (&self.col_ptr, &self.row_idx, &self.vals)
+    }
+
     #[inline]
     pub fn vals(&self) -> &[f32] {
         &self.vals

@@ -23,10 +23,14 @@
 //! ## The kernel layer
 //!
 //! Every one of those products dispatches through [`simd::SparseKernel`]:
-//! a [`simd::KernelKind`] tag (scalar reference kernels, or AVX2+FMA SIMD
-//! with scalar fallback) is resolved once at construction from
-//! `--kernel auto|scalar|simd` and stamped into each [`DynJacobian`], so
-//! the hot path has no per-step dynamic dispatch. Cells refresh gated
+//! a [`simd::KernelKind`] tag (scalar reference kernels, AVX2+FMA SIMD,
+//! 16-wide AVX-512, or aarch64 NEON — each with runtime detection and a
+//! scalar fallback) is resolved once at construction from
+//! `--kernel auto|scalar|simd|avx512|neon` and stamped into each
+//! [`DynJacobian`], so the hot path has no per-step dynamic dispatch.
+//! SnAp's per-run `J ← D·J + I` goes through the kernel's fused
+//! influence update ([`simd::SparseKernel::fused_influence_update`]), which
+//! touches each influence value exactly once per step. Cells refresh gated
 //! values through [`dynjac::GateFold`] — a gate-blocked band layout that
 //! stores each shared GRU/LSTM column pattern once and folds all 3–4 gate
 //! contributions in one vectorizable pass.
@@ -43,4 +47,4 @@ pub use csr::Csr;
 pub use dynjac::{DynJacobian, GateFold};
 pub use immediate::ImmediateJac;
 pub use pattern::{snap_pattern, saturation_order, Pattern};
-pub use simd::{BandView, KernelChoice, KernelKind, SparseKernel};
+pub use simd::{available_backends, BandView, KernelChoice, KernelKind, RunView, SparseKernel};

@@ -1,22 +1,49 @@
 //! Unified sparse-kernel dispatch: every hot product of the tracking step —
 //! `D·x`, `Dᵀ·x`, `D·J` (CSR × dense), SnAp's run-submatrix gather, the
-//! run-GEMM `y = A_cm·x`, and the gate-blocked band fold that refreshes
-//! `D_t`'s values — goes through one [`SparseKernel`] trait with two
-//! implementations:
+//! run-GEMM `y = A_cm·x`, the fused influence update `J ← D·J + I`
+//! ([`SparseKernel::fused_influence_update`]), and the gate-blocked band
+//! fold that refreshes `D_t`'s values — goes through one [`SparseKernel`]
+//! trait with four implementations:
 //!
 //! * [`Scalar`] — the portable reference kernels, line-for-line the loops
 //!   the sparse-D pipeline shipped with (bitwise-identical results);
 //! * [`Simd`] — AVX2+FMA (`std::arch`) kernels behind a runtime
 //!   `is_x86_feature_detected!` guard, falling back to [`Scalar`] on every
 //!   other machine. Gather-heavy products (`matvec`, `spmm`, `gemv_cm`,
-//!   `fold_band`) vectorize 8/32-wide; scatter-bound ones (`matvec_t`,
-//!   `gather_block`) stay scalar — they are merge-limited, not FLOP-limited.
+//!   `fold_band`, the fused update) vectorize 8/32-wide; scatter-bound ones
+//!   (`matvec_t`, `gather_block`) stay scalar — they are merge-limited, not
+//!   FLOP-limited;
+//! * [`Avx512`] — 16-wide `avx512f` bodies for the contiguous-load kernels
+//!   (`spmm`, `gemv_cm`, the fused update), falling back to [`Simd`] for
+//!   the gather-shaped ones and on machines (or toolchains — the 512-bit
+//!   intrinsics need rustc ≥ 1.89, sniffed by `build.rs` into the
+//!   `snap_avx512` cfg) without the feature;
+//! * [`Neon`] — aarch64 4-wide NEON bodies for the same contiguous kernels
+//!   behind `is_aarch64_feature_detected!`, scalar elsewhere, so one binary
+//!   serves Apple/Graviton hosts.
+//!
+//! ## The fused influence-update contract
+//!
+//! SnAp's per-step cost is `J ← D·J + I` restricted to the kept pattern,
+//! processed per *run* (a maximal range of influence columns sharing one row
+//! set `R`, see [`RunView`]). The fused kernel performs, for one run, the
+//! gather of `D[R, R]`, the per-column FMA accumulation, **and** the
+//! immediate-Jacobian merge in a single pass: each influence value is read
+//! once and written once per step, and no caller-visible run-GEMM scratch
+//! output survives the call (`scratch` is garbage afterwards). The
+//! [`Scalar`] body is the bitwise pin: it performs, per output element, the
+//! exact f32 operation sequence of the historical two-pass path
+//! (`gather_block` → `gemv_cm` → sorted merge), so fused-vs-two-pass under
+//! [`Scalar`] is bit-identical, while the wide backends agree to the usual
+//! SIMD reassociation tolerance (≤ 1e-6 relative, property-tested).
 //!
 //! The kernel is chosen **once at construction** ([`KernelChoice::resolve`],
-//! driven by `TrainConfig { kernel }` / `--kernel auto|scalar|simd`) and
-//! stamped into each [`crate::sparse::DynJacobian`] as a [`KernelKind`] tag.
-//! `KernelKind` dispatches by `match` on a two-variant `Copy` enum — no
-//! vtable, no per-step dynamic dispatch in the audit hot-path regions.
+//! driven by `TrainConfig { kernel }` /
+//! `--kernel auto|scalar|simd|avx512|neon`; `Auto` resolves avx512 > simd >
+//! scalar on x86_64 and neon > scalar on aarch64) and stamped into each
+//! [`crate::sparse::DynJacobian`] as a [`KernelKind`] tag. `KernelKind`
+//! dispatches by `match` on a small `Copy` enum — no vtable, no per-step
+//! dynamic dispatch in the audit hot-path regions.
 //!
 //! This module is the **only** place SIMD intrinsics and their `unsafe` are
 //! allowed (`repro audit` rule `simd`, allowlisted in
@@ -46,6 +73,29 @@ pub struct BandView<'a> {
     pub gates: usize,
     pub widx: &'a [u32],
     pub wmask: &'a [f32],
+}
+
+/// One run of influence columns for
+/// [`SparseKernel::fused_influence_update`]: `width` consecutive columns
+/// (`j0 ..`) of the influence matrix that share the sorted row set `rows`,
+/// plus the immediate Jacobian's CSC slices (over **all** columns — the
+/// kernel indexes them with the absolute column id `j0 + c`). Every
+/// immediate row index within the run must be a member of `rows` (the SnAp
+/// pattern-closure invariant, debug-asserted by the kernels).
+#[derive(Clone, Copy)]
+pub struct RunView<'a> {
+    /// Sorted row set shared by every column of the run (`n = rows.len()`).
+    pub rows: &'a [u32],
+    /// Absolute index of the run's first column.
+    pub j0: usize,
+    /// Number of columns in the run.
+    pub width: usize,
+    /// Immediate-Jacobian CSC column pointers (len = total columns + 1).
+    pub i_col_ptr: &'a [usize],
+    /// Immediate-Jacobian CSC row indices.
+    pub i_row_idx: &'a [u32],
+    /// Immediate-Jacobian CSC values.
+    pub i_vals: &'a [f32],
 }
 
 /// The sparse/dense kernel surface of the tracking step. CSR arguments are
@@ -89,6 +139,22 @@ pub trait SparseKernel {
     /// dense block (overwrites `y`) — SnAp's per-run GEMV, skipping zero
     /// `x[m]` columns.
     fn gemv_cm(&self, a_cm: &[f32], n: usize, x: &[f32], y: &mut [f32]);
+
+    /// Fused influence update for one run (see [`RunView`] and the module
+    /// docs): `J[R, j] ← D[R, R]·J[R, j] + I[R, j]` for every column `j` of
+    /// the run, in one pass over `j_vals` — the run's influence values,
+    /// column-major (`n = rows.len()` entries per column, column `c` at
+    /// `j_vals[c·n ..]`). The CSR slices are `D`; `scratch` must hold at
+    /// least `n·(n + 1)` floats and holds garbage afterwards.
+    fn fused_influence_update(
+        &self,
+        row_ptr: &[usize],
+        col_idx: &[u32],
+        vals: &[f32],
+        run: RunView<'_>,
+        j_vals: &mut [f32],
+        scratch: &mut [f32],
+    );
 
     /// Gate-blocked band fold (see [`BandView`]): refresh a contiguous
     /// range of `D_t` values from per-gate coefficients × recurrent
@@ -197,6 +263,79 @@ impl SparseKernel for Scalar {
         }
     }
 
+    // The bitwise pin for every other backend: per output element this is
+    // the exact f32 operation sequence of the historical two-pass path.
+    // The gather is *row*-major (`dsub[r_slot·n + m_slot]`, transposed
+    // relative to `gather_block`) so each CSR row walk writes contiguously
+    // and each output row's dot reads contiguously; per element, products
+    // still accumulate over `m` ascending with the same zero-`x[m]` skip as
+    // `gemv_cm`'s axpy order, so the sums are bit-identical — only the
+    // ~2n² intermediate y-vector reads/writes of the zero+axpy formulation
+    // are gone, replaced by one register accumulator and one store.
+    // audit: hot-path
+    fn fused_influence_update(
+        &self,
+        row_ptr: &[usize],
+        col_idx: &[u32],
+        vals: &[f32],
+        run: RunView<'_>,
+        j_vals: &mut [f32],
+        scratch: &mut [f32],
+    ) {
+        let n = run.rows.len();
+        debug_assert_eq!(j_vals.len(), n * run.width);
+        debug_assert!(scratch.len() >= n * (n + 1));
+        let (dsub, colbuf) = scratch.split_at_mut(n * n);
+        dsub.iter_mut().for_each(|v| *v = 0.0);
+        for (r_slot, &r) in run.rows.iter().enumerate() {
+            let (s, e) = (row_ptr[r as usize], row_ptr[r as usize + 1]);
+            let drow = &mut dsub[r_slot * n..r_slot * n + n];
+            let mut m_slot = 0usize;
+            for (&j, &v) in col_idx[s..e].iter().zip(&vals[s..e]) {
+                while m_slot < n && run.rows[m_slot] < j {
+                    m_slot += 1;
+                }
+                if m_slot == n {
+                    break;
+                }
+                if run.rows[m_slot] == j {
+                    drow[m_slot] = v;
+                    m_slot += 1;
+                }
+            }
+        }
+        let colbuf = &mut colbuf[..n];
+        for c in 0..run.width {
+            let col_vals = &mut j_vals[c * n..(c + 1) * n];
+            colbuf.copy_from_slice(col_vals);
+            for (i, out) in col_vals.iter_mut().enumerate() {
+                let drow = &dsub[i * n..i * n + n];
+                let mut acc = 0.0f32;
+                for (m, &xm) in colbuf.iter().enumerate() {
+                    if xm != 0.0 {
+                        acc += xm * drow[m];
+                    }
+                }
+                *out = acc;
+            }
+            // Immediate-Jacobian merge: both row lists are sorted, and the
+            // pattern closure guarantees every I row is present in `rows`.
+            let j = run.j0 + c;
+            let (s, e) = (run.i_col_ptr[j], run.i_col_ptr[j + 1]);
+            let mut cursor = 0usize;
+            for (&ir, &iv) in run.i_row_idx[s..e].iter().zip(&run.i_vals[s..e]) {
+                while cursor < n && run.rows[cursor] < ir {
+                    cursor += 1;
+                }
+                debug_assert!(
+                    cursor < n && run.rows[cursor] == ir,
+                    "I entry outside the kept influence pattern"
+                );
+                col_vals[cursor] += iv;
+            }
+        }
+    }
+
     // audit: hot-path
     fn fold_band(&self, band: BandView<'_>, coefs: &[&[f32]], theta: &[f32], dv: &mut [f32]) {
         let len = dv.len();
@@ -292,6 +431,26 @@ impl SparseKernel for Simd {
     }
 
     // audit: hot-path
+    fn fused_influence_update(
+        &self,
+        row_ptr: &[usize],
+        col_idx: &[u32],
+        vals: &[f32],
+        run: RunView<'_>,
+        j_vals: &mut [f32],
+        scratch: &mut [f32],
+    ) {
+        #[cfg(target_arch = "x86_64")]
+        if have_avx2() {
+            // SAFETY: have_avx2() verified AVX2+FMA on this CPU; slice
+            // bounds are debug-asserted inside against the RunView shape.
+            unsafe { x86::fused_influence_update_avx2(row_ptr, col_idx, vals, run, j_vals, scratch) };
+            return;
+        }
+        Scalar.fused_influence_update(row_ptr, col_idx, vals, run, j_vals, scratch)
+    }
+
+    // audit: hot-path
     fn fold_band(&self, band: BandView<'_>, coefs: &[&[f32]], theta: &[f32], dv: &mut [f32]) {
         #[cfg(target_arch = "x86_64")]
         if have_avx2() {
@@ -304,14 +463,209 @@ impl SparseKernel for Simd {
     }
 }
 
+/// 16-wide `avx512f` kernels for the contiguous-load products (`spmm`,
+/// `gemv_cm`, the fused influence update); gather-shaped products delegate
+/// to [`Simd`] (whose AVX2 bodies have hardware gathers) and scatter-bound
+/// ones to [`Scalar`]. Every method runtime-checks the CPU via
+/// [`have_avx512`] and falls back, so `Avx512` is safe to select anywhere —
+/// including toolchains below rustc 1.89, where the 512-bit bodies are
+/// compiled out entirely (`build.rs` / `snap_avx512` cfg) and this struct
+/// degrades to [`Simd`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Avx512;
+
+impl SparseKernel for Avx512 {
+    fn name(&self) -> &'static str {
+        "avx512"
+    }
+
+    // audit: hot-path
+    fn matvec(&self, row_ptr: &[usize], col_idx: &[u32], vals: &[f32], x: &[f32], y: &mut [f32]) {
+        // Gather-bound: the AVX2 hardware-gather body is the best we ship.
+        Simd.matvec(row_ptr, col_idx, vals, x, y)
+    }
+
+    // audit: hot-path
+    fn matvec_t(&self, row_ptr: &[usize], col_idx: &[u32], vals: &[f32], x: &[f32], y: &mut [f32]) {
+        Scalar.matvec_t(row_ptr, col_idx, vals, x, y)
+    }
+
+    // audit: hot-path
+    fn spmm(
+        &self,
+        row_ptr: &[usize],
+        col_idx: &[u32],
+        vals: &[f32],
+        b: &Matrix,
+        c: &mut Matrix,
+        accumulate: bool,
+    ) {
+        #[cfg(all(target_arch = "x86_64", snap_avx512))]
+        if have_avx512() {
+            // SAFETY: have_avx512() verified avx512f on this CPU.
+            unsafe { x86_512::spmm_avx512(row_ptr, col_idx, vals, b, c, accumulate) };
+            return;
+        }
+        Simd.spmm(row_ptr, col_idx, vals, b, c, accumulate)
+    }
+
+    // audit: hot-path
+    fn gather_block(
+        &self,
+        row_ptr: &[usize],
+        col_idx: &[u32],
+        vals: &[f32],
+        rows: &[u32],
+        out: &mut [f32],
+    ) {
+        Scalar.gather_block(row_ptr, col_idx, vals, rows, out)
+    }
+
+    // audit: hot-path
+    fn gemv_cm(&self, a_cm: &[f32], n: usize, x: &[f32], y: &mut [f32]) {
+        #[cfg(all(target_arch = "x86_64", snap_avx512))]
+        if have_avx512() {
+            // SAFETY: have_avx512() verified avx512f on this CPU.
+            unsafe { x86_512::gemv_cm_avx512(a_cm, n, x, y) };
+            return;
+        }
+        Simd.gemv_cm(a_cm, n, x, y)
+    }
+
+    // audit: hot-path
+    fn fused_influence_update(
+        &self,
+        row_ptr: &[usize],
+        col_idx: &[u32],
+        vals: &[f32],
+        run: RunView<'_>,
+        j_vals: &mut [f32],
+        scratch: &mut [f32],
+    ) {
+        #[cfg(all(target_arch = "x86_64", snap_avx512))]
+        if have_avx512() {
+            // SAFETY: have_avx512() verified avx512f on this CPU; slice
+            // bounds are debug-asserted inside against the RunView shape.
+            unsafe {
+                x86_512::fused_influence_update_avx512(row_ptr, col_idx, vals, run, j_vals, scratch)
+            };
+            return;
+        }
+        Simd.fused_influence_update(row_ptr, col_idx, vals, run, j_vals, scratch)
+    }
+
+    // audit: hot-path
+    fn fold_band(&self, band: BandView<'_>, coefs: &[&[f32]], theta: &[f32], dv: &mut [f32]) {
+        // θ-gather-bound: the AVX2 hardware-gather body is the best we ship.
+        Simd.fold_band(band, coefs, theta, dv)
+    }
+}
+
+/// aarch64 NEON kernels (4-wide `float32x4_t` FMA) for the contiguous-load
+/// products; gather/scatter-shaped ones stay [`Scalar`] (NEON has no
+/// hardware gather). Runtime-checked via [`have_neon`] with a scalar
+/// fallback, mirroring the x86 containment pattern, so `Neon` is safe to
+/// select anywhere.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Neon;
+
+impl SparseKernel for Neon {
+    fn name(&self) -> &'static str {
+        "neon"
+    }
+
+    // audit: hot-path
+    fn matvec(&self, row_ptr: &[usize], col_idx: &[u32], vals: &[f32], x: &[f32], y: &mut [f32]) {
+        // Gather-bound (indexed x reads): stays scalar on aarch64.
+        Scalar.matvec(row_ptr, col_idx, vals, x, y)
+    }
+
+    // audit: hot-path
+    fn matvec_t(&self, row_ptr: &[usize], col_idx: &[u32], vals: &[f32], x: &[f32], y: &mut [f32]) {
+        Scalar.matvec_t(row_ptr, col_idx, vals, x, y)
+    }
+
+    // audit: hot-path
+    fn spmm(
+        &self,
+        row_ptr: &[usize],
+        col_idx: &[u32],
+        vals: &[f32],
+        b: &Matrix,
+        c: &mut Matrix,
+        accumulate: bool,
+    ) {
+        #[cfg(target_arch = "aarch64")]
+        if have_neon() {
+            // SAFETY: have_neon() verified NEON on this CPU.
+            unsafe { arm::spmm_neon(row_ptr, col_idx, vals, b, c, accumulate) };
+            return;
+        }
+        Scalar.spmm(row_ptr, col_idx, vals, b, c, accumulate)
+    }
+
+    // audit: hot-path
+    fn gather_block(
+        &self,
+        row_ptr: &[usize],
+        col_idx: &[u32],
+        vals: &[f32],
+        rows: &[u32],
+        out: &mut [f32],
+    ) {
+        Scalar.gather_block(row_ptr, col_idx, vals, rows, out)
+    }
+
+    // audit: hot-path
+    fn gemv_cm(&self, a_cm: &[f32], n: usize, x: &[f32], y: &mut [f32]) {
+        #[cfg(target_arch = "aarch64")]
+        if have_neon() {
+            // SAFETY: have_neon() verified NEON on this CPU.
+            unsafe { arm::gemv_cm_neon(a_cm, n, x, y) };
+            return;
+        }
+        Scalar.gemv_cm(a_cm, n, x, y)
+    }
+
+    // audit: hot-path
+    fn fused_influence_update(
+        &self,
+        row_ptr: &[usize],
+        col_idx: &[u32],
+        vals: &[f32],
+        run: RunView<'_>,
+        j_vals: &mut [f32],
+        scratch: &mut [f32],
+    ) {
+        #[cfg(target_arch = "aarch64")]
+        if have_neon() {
+            // SAFETY: have_neon() verified NEON on this CPU; slice bounds
+            // are debug-asserted inside against the RunView shape.
+            unsafe { arm::fused_influence_update_neon(row_ptr, col_idx, vals, run, j_vals, scratch) };
+            return;
+        }
+        Scalar.fused_influence_update(row_ptr, col_idx, vals, run, j_vals, scratch)
+    }
+
+    // audit: hot-path
+    fn fold_band(&self, band: BandView<'_>, coefs: &[&[f32]], theta: &[f32], dv: &mut [f32]) {
+        // θ-gather-bound: stays scalar on aarch64.
+        Scalar.fold_band(band, coefs, theta, dv)
+    }
+}
+
 /// The resolved kernel tag stamped into every `DynJacobian` at
-/// construction. Two-variant `Copy` enum ⇒ `match` dispatch inlines to a
-/// direct call — no vtable on the hot path.
+/// construction. Small `Copy` enum ⇒ `match` dispatch inlines to a direct
+/// call — no vtable on the hot path. Every variant exists on every
+/// platform (an unavailable backend's methods runtime-check and fall back),
+/// so checkpoints and configs never encode platform-dependent enums.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum KernelKind {
     #[default]
     Scalar,
     Simd,
+    Avx512,
+    Neon,
 }
 
 impl SparseKernel for KernelKind {
@@ -320,6 +674,8 @@ impl SparseKernel for KernelKind {
         match self {
             KernelKind::Scalar => Scalar.name(),
             KernelKind::Simd => Simd.name(),
+            KernelKind::Avx512 => Avx512.name(),
+            KernelKind::Neon => Neon.name(),
         }
     }
 
@@ -329,6 +685,8 @@ impl SparseKernel for KernelKind {
         match self {
             KernelKind::Scalar => Scalar.matvec(row_ptr, col_idx, vals, x, y),
             KernelKind::Simd => Simd.matvec(row_ptr, col_idx, vals, x, y),
+            KernelKind::Avx512 => Avx512.matvec(row_ptr, col_idx, vals, x, y),
+            KernelKind::Neon => Neon.matvec(row_ptr, col_idx, vals, x, y),
         }
     }
 
@@ -338,6 +696,8 @@ impl SparseKernel for KernelKind {
         match self {
             KernelKind::Scalar => Scalar.matvec_t(row_ptr, col_idx, vals, x, y),
             KernelKind::Simd => Simd.matvec_t(row_ptr, col_idx, vals, x, y),
+            KernelKind::Avx512 => Avx512.matvec_t(row_ptr, col_idx, vals, x, y),
+            KernelKind::Neon => Neon.matvec_t(row_ptr, col_idx, vals, x, y),
         }
     }
 
@@ -355,6 +715,8 @@ impl SparseKernel for KernelKind {
         match self {
             KernelKind::Scalar => Scalar.spmm(row_ptr, col_idx, vals, b, c, accumulate),
             KernelKind::Simd => Simd.spmm(row_ptr, col_idx, vals, b, c, accumulate),
+            KernelKind::Avx512 => Avx512.spmm(row_ptr, col_idx, vals, b, c, accumulate),
+            KernelKind::Neon => Neon.spmm(row_ptr, col_idx, vals, b, c, accumulate),
         }
     }
 
@@ -371,6 +733,8 @@ impl SparseKernel for KernelKind {
         match self {
             KernelKind::Scalar => Scalar.gather_block(row_ptr, col_idx, vals, rows, out),
             KernelKind::Simd => Simd.gather_block(row_ptr, col_idx, vals, rows, out),
+            KernelKind::Avx512 => Avx512.gather_block(row_ptr, col_idx, vals, rows, out),
+            KernelKind::Neon => Neon.gather_block(row_ptr, col_idx, vals, rows, out),
         }
     }
 
@@ -380,6 +744,35 @@ impl SparseKernel for KernelKind {
         match self {
             KernelKind::Scalar => Scalar.gemv_cm(a_cm, n, x, y),
             KernelKind::Simd => Simd.gemv_cm(a_cm, n, x, y),
+            KernelKind::Avx512 => Avx512.gemv_cm(a_cm, n, x, y),
+            KernelKind::Neon => Neon.gemv_cm(a_cm, n, x, y),
+        }
+    }
+
+    // audit: hot-path
+    #[inline]
+    fn fused_influence_update(
+        &self,
+        row_ptr: &[usize],
+        col_idx: &[u32],
+        vals: &[f32],
+        run: RunView<'_>,
+        j_vals: &mut [f32],
+        scratch: &mut [f32],
+    ) {
+        match self {
+            KernelKind::Scalar => {
+                Scalar.fused_influence_update(row_ptr, col_idx, vals, run, j_vals, scratch)
+            }
+            KernelKind::Simd => {
+                Simd.fused_influence_update(row_ptr, col_idx, vals, run, j_vals, scratch)
+            }
+            KernelKind::Avx512 => {
+                Avx512.fused_influence_update(row_ptr, col_idx, vals, run, j_vals, scratch)
+            }
+            KernelKind::Neon => {
+                Neon.fused_influence_update(row_ptr, col_idx, vals, run, j_vals, scratch)
+            }
         }
     }
 
@@ -389,19 +782,24 @@ impl SparseKernel for KernelKind {
         match self {
             KernelKind::Scalar => Scalar.fold_band(band, coefs, theta, dv),
             KernelKind::Simd => Simd.fold_band(band, coefs, theta, dv),
+            KernelKind::Avx512 => Avx512.fold_band(band, coefs, theta, dv),
+            KernelKind::Neon => Neon.fold_band(band, coefs, theta, dv),
         }
     }
 }
 
-/// User-facing kernel selection (`--kernel auto|scalar|simd`), resolved to
-/// a [`KernelKind`] once per run.
+/// User-facing kernel selection (`--kernel auto|scalar|simd|avx512|neon`),
+/// resolved to a [`KernelKind`] once per run.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum KernelChoice {
-    /// SIMD when the CPU has AVX2+FMA, scalar otherwise (the default).
+    /// Widest kernel the host supports: avx512 > simd > scalar on x86_64,
+    /// neon > scalar on aarch64 (the default).
     #[default]
     Auto,
     Scalar,
     Simd,
+    Avx512,
+    Neon,
 }
 
 impl KernelChoice {
@@ -410,7 +808,9 @@ impl KernelChoice {
             "auto" => Ok(KernelChoice::Auto),
             "scalar" => Ok(KernelChoice::Scalar),
             "simd" => Ok(KernelChoice::Simd),
-            other => Err(format!("unknown kernel '{other}' (expected auto|scalar|simd)")),
+            "avx512" => Ok(KernelChoice::Avx512),
+            "neon" => Ok(KernelChoice::Neon),
+            other => Err(format!("unknown kernel '{other}' (expected auto|scalar|simd|avx512|neon)")),
         }
     }
 
@@ -419,22 +819,50 @@ impl KernelChoice {
             KernelChoice::Auto => "auto",
             KernelChoice::Scalar => "scalar",
             KernelChoice::Simd => "simd",
+            KernelChoice::Avx512 => "avx512",
+            KernelChoice::Neon => "neon",
         }
     }
 
-    /// Resolve to a concrete kernel for this machine.
+    /// Resolve to a concrete kernel for this machine. An explicit choice is
+    /// honored verbatim (every backend is safe anywhere — its methods
+    /// runtime-check and fall back); `Auto` picks the widest backend the
+    /// host actually has so the hot loop never re-checks.
     pub fn resolve(self) -> KernelKind {
         match self {
             KernelChoice::Scalar => KernelKind::Scalar,
             KernelChoice::Simd => KernelKind::Simd,
+            KernelChoice::Avx512 => KernelKind::Avx512,
+            KernelChoice::Neon => KernelKind::Neon,
             KernelChoice::Auto => {
-                if have_avx2() {
+                if have_avx512() {
+                    KernelKind::Avx512
+                } else if have_avx2() {
                     KernelKind::Simd
+                } else if have_neon() {
+                    KernelKind::Neon
                 } else {
                     KernelKind::Scalar
                 }
             }
         }
+    }
+
+    /// [`resolve`](Self::resolve), plus a once-per-process stderr line
+    /// recording which backend actually runs — called on the CLI startup
+    /// paths (train/copy/file-lm/serve/shard-worker) so CI logs and bench
+    /// artifacts can be cross-checked against the kernel that produced them.
+    pub fn resolve_logged(self, context: &str) -> KernelKind {
+        let kind = self.resolve();
+        static LOGGED: std::sync::Once = std::sync::Once::new();
+        LOGGED.call_once(|| {
+            eprintln!(
+                "kernel[{context}]: --kernel {} resolved to '{}'",
+                self.name(),
+                kind.name()
+            );
+        });
+        kind
     }
 }
 
@@ -453,16 +881,65 @@ pub fn have_avx2() -> bool {
     }
 }
 
+/// Runtime check for the [`Avx512`] bodies (`avx512f`). Compile-time false
+/// when the toolchain predates the stabilized AVX-512 surface (rustc 1.89,
+/// sniffed by `build.rs` into the `snap_avx512` cfg) — on such builds the
+/// bodies don't exist, so `Auto` must never route to them.
+#[inline]
+pub fn have_avx512() -> bool {
+    #[cfg(all(target_arch = "x86_64", snap_avx512))]
+    {
+        is_x86_feature_detected!("avx512f")
+    }
+    #[cfg(not(all(target_arch = "x86_64", snap_avx512)))]
+    {
+        false
+    }
+}
+
+/// Runtime check for the [`Neon`] bodies. aarch64 mandates NEON in
+/// practice, but the detection witness keeps the containment pattern (and
+/// the audit `simd` rule) uniform across architectures.
+#[inline]
+pub fn have_neon() -> bool {
+    #[cfg(target_arch = "aarch64")]
+    {
+        std::arch::is_aarch64_feature_detected!("neon")
+    }
+    #[cfg(not(target_arch = "aarch64"))]
+    {
+        false
+    }
+}
+
+/// Every kernel backend that can actually run on this host, narrowest
+/// first (so the last entry is what [`KernelChoice::Auto`] resolves to).
+/// Test suites and the bench sweep iterate this to cover each backend the
+/// CI runner supports; not a hot-path call.
+pub fn available_backends() -> Vec<KernelKind> {
+    let mut v = vec![KernelKind::Scalar];
+    if have_neon() {
+        v.push(KernelKind::Neon);
+    }
+    if have_avx2() {
+        v.push(KernelKind::Simd);
+    }
+    if have_avx512() {
+        v.push(KernelKind::Avx512);
+    }
+    v
+}
+
 /// The AVX2+FMA kernel bodies. Everything here is `unsafe` twice over —
 /// `#[target_feature]` entry points plus bounds-check-free inner loops —
 /// and is reachable only through the `have_avx2()` guards above, each with
 /// a scalar fallback (enforced by the `simd` audit rule).
 #[cfg(target_arch = "x86_64")]
 mod x86 {
-    use super::BandView;
+    use super::{BandView, RunView, Scalar, SparseKernel};
     use crate::tensor::matrix::Matrix;
     use std::arch::x86_64::{
-        __m256, __m256i, _mm256_add_ps, _mm256_castps256_ps128, _mm256_extractf128_ps,
+        __m256, __m256i, _mm256_castps256_ps128, _mm256_extractf128_ps,
         _mm256_fmadd_ps, _mm256_i32gather_ps, _mm256_loadu_ps, _mm256_loadu_si256,
         _mm256_mul_ps, _mm256_set1_ps, _mm256_setzero_ps, _mm256_storeu_ps, _mm_add_ps,
         _mm_add_ss, _mm_cvtss_f32, _mm_movehdup_ps, _mm_movehl_ps,
@@ -645,6 +1122,48 @@ mod x86 {
         }
     }
 
+    /// Fused influence update for one run: column-major `D[R, R]` gather
+    /// (the merge-limited scalar walk), then per column one 8-wide
+    /// broadcast-FMA GEMV straight into the influence values followed by
+    /// the immediate-Jacobian merge — influence values are streamed once.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn fused_influence_update_avx2(
+        row_ptr: &[usize],
+        col_idx: &[u32],
+        vals: &[f32],
+        run: RunView<'_>,
+        j_vals: &mut [f32],
+        scratch: &mut [f32],
+    ) {
+        let n = run.rows.len();
+        debug_assert_eq!(j_vals.len(), n * run.width);
+        debug_assert!(scratch.len() >= n * (n + 1));
+        let (dsub, colbuf) = scratch.split_at_mut(n * n);
+        Scalar.gather_block(row_ptr, col_idx, vals, run.rows, dsub);
+        for c in 0..run.width {
+            let col_vals = &mut j_vals[c * n..(c + 1) * n];
+            colbuf[..n].copy_from_slice(col_vals);
+            // SAFETY: caller guarantees AVX2+FMA; `dsub` is the n×n block
+            // gathered above and both slices are exactly n long.
+            unsafe { gemv_cm_avx2(dsub, n, &colbuf[..n], col_vals) };
+            // Sorted immediate-Jacobian merge (≤ a few entries per column);
+            // safe indexing — it is merge-limited, not FLOP-limited.
+            let j = run.j0 + c;
+            let (s, e) = (run.i_col_ptr[j], run.i_col_ptr[j + 1]);
+            let mut cursor = 0usize;
+            for (&ir, &iv) in run.i_row_idx[s..e].iter().zip(&run.i_vals[s..e]) {
+                while cursor < n && run.rows[cursor] < ir {
+                    cursor += 1;
+                }
+                debug_assert!(
+                    cursor < n && run.rows[cursor] == ir,
+                    "I entry outside the kept influence pattern"
+                );
+                col_vals[cursor] += iv;
+            }
+        }
+    }
+
     /// Gate-blocked band fold: per row, 8 slots at a time, the gate loop
     /// broadcasts one coefficient, gathers 8 θ weights, masks, and FMAs.
     #[target_feature(enable = "avx2,fma")]
@@ -699,6 +1218,343 @@ mod x86 {
     }
 }
 
+/// The `avx512f` kernel bodies — 16-wide ZMM tiles for the contiguous-load
+/// products only (no 512-bit gathers: the gather-shaped kernels stay on the
+/// AVX2 bodies). Compiled only when `build.rs` found a toolchain with the
+/// stabilized AVX-512 surface (`snap_avx512`, rustc ≥ 1.89); reachable only
+/// through the `have_avx512()` guards, each with a fallback.
+#[cfg(all(target_arch = "x86_64", snap_avx512))]
+mod x86_512 {
+    use super::{RunView, Scalar, SparseKernel};
+    use crate::tensor::matrix::Matrix;
+    use std::arch::x86_64::{
+        _mm512_fmadd_ps, _mm512_loadu_ps, _mm512_set1_ps, _mm512_setzero_ps, _mm512_storeu_ps,
+    };
+
+    /// `C (+)= A·B`, register-tiled: per C row, 32-wide column tiles held in
+    /// two ZMM accumulators while the row's nonzeros stream through one
+    /// broadcast-FMA each, then a 16-tile and a scalar tail.
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn spmm_avx512(
+        row_ptr: &[usize],
+        col_idx: &[u32],
+        vals: &[f32],
+        b: &Matrix,
+        c: &mut Matrix,
+        accumulate: bool,
+    ) {
+        // SAFETY: caller guarantees avx512f and spmm shape invariants
+        // (b.rows() == A-cols, c is A-rows × b.cols()); tile loads/stores
+        // are bounded by `ncols - 32` / `ncols - 16`, and column ids index
+        // valid rows of `b`.
+        unsafe {
+            let ncols = b.cols();
+            for i in 0..c.rows() {
+                let (s, e) = (*row_ptr.get_unchecked(i), *row_ptr.get_unchecked(i + 1));
+                let crow = c.row_mut(i);
+                let cp = crow.as_mut_ptr();
+                let mut j = 0usize;
+                while j + 32 <= ncols {
+                    let (mut a0, mut a1) = if accumulate {
+                        (_mm512_loadu_ps(cp.add(j)), _mm512_loadu_ps(cp.add(j + 16)))
+                    } else {
+                        (_mm512_setzero_ps(), _mm512_setzero_ps())
+                    };
+                    for t in s..e {
+                        let v = *vals.get_unchecked(t);
+                        if v == 0.0 {
+                            continue;
+                        }
+                        let bp = b.row(*col_idx.get_unchecked(t) as usize).as_ptr();
+                        let vv = _mm512_set1_ps(v);
+                        a0 = _mm512_fmadd_ps(vv, _mm512_loadu_ps(bp.add(j)), a0);
+                        a1 = _mm512_fmadd_ps(vv, _mm512_loadu_ps(bp.add(j + 16)), a1);
+                    }
+                    _mm512_storeu_ps(cp.add(j), a0);
+                    _mm512_storeu_ps(cp.add(j + 16), a1);
+                    j += 32;
+                }
+                while j + 16 <= ncols {
+                    let mut a0 = if accumulate {
+                        _mm512_loadu_ps(cp.add(j))
+                    } else {
+                        _mm512_setzero_ps()
+                    };
+                    for t in s..e {
+                        let v = *vals.get_unchecked(t);
+                        if v == 0.0 {
+                            continue;
+                        }
+                        let bp = b.row(*col_idx.get_unchecked(t) as usize).as_ptr();
+                        a0 = _mm512_fmadd_ps(_mm512_set1_ps(v), _mm512_loadu_ps(bp.add(j)), a0);
+                    }
+                    _mm512_storeu_ps(cp.add(j), a0);
+                    j += 16;
+                }
+                while j < ncols {
+                    let mut acc = if accumulate { *crow.get_unchecked(j) } else { 0.0 };
+                    for t in s..e {
+                        let v = *vals.get_unchecked(t);
+                        if v == 0.0 {
+                            continue;
+                        }
+                        acc += v * *b.row(*col_idx.get_unchecked(t) as usize).get_unchecked(j);
+                    }
+                    *crow.get_unchecked_mut(j) = acc;
+                    j += 1;
+                }
+            }
+        }
+    }
+
+    /// Column-major GEMV `y[i] = Σ_m x[m]·a_cm[m·n + i]`, 16 rows per pass
+    /// so each `x[m]` broadcast feeds one contiguous load + FMA.
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn gemv_cm_avx512(a_cm: &[f32], n: usize, x: &[f32], y: &mut [f32]) {
+        // SAFETY: caller guarantees avx512f, `a_cm.len() >= n·n`,
+        // `x.len() >= n`, `y.len() >= n`; 16-wide accesses are bounded by
+        // `n - 16` within each n-long column.
+        unsafe {
+            let mut i = 0usize;
+            while i + 16 <= n {
+                let mut acc = _mm512_setzero_ps();
+                for m in 0..n {
+                    let xm = *x.get_unchecked(m);
+                    if xm == 0.0 {
+                        continue;
+                    }
+                    let col = a_cm.as_ptr().add(m * n + i);
+                    acc = _mm512_fmadd_ps(_mm512_set1_ps(xm), _mm512_loadu_ps(col), acc);
+                }
+                _mm512_storeu_ps(y.as_mut_ptr().add(i), acc);
+                i += 16;
+            }
+            while i < n {
+                let mut acc = 0.0f32;
+                for m in 0..n {
+                    let xm = *x.get_unchecked(m);
+                    if xm != 0.0 {
+                        acc += xm * *a_cm.get_unchecked(m * n + i);
+                    }
+                }
+                *y.get_unchecked_mut(i) = acc;
+                i += 1;
+            }
+        }
+    }
+
+    /// Fused influence update, 16-wide: the AVX2 body's shape with the ZMM
+    /// GEMV (see `x86::fused_influence_update_avx2`).
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn fused_influence_update_avx512(
+        row_ptr: &[usize],
+        col_idx: &[u32],
+        vals: &[f32],
+        run: RunView<'_>,
+        j_vals: &mut [f32],
+        scratch: &mut [f32],
+    ) {
+        let n = run.rows.len();
+        debug_assert_eq!(j_vals.len(), n * run.width);
+        debug_assert!(scratch.len() >= n * (n + 1));
+        let (dsub, colbuf) = scratch.split_at_mut(n * n);
+        Scalar.gather_block(row_ptr, col_idx, vals, run.rows, dsub);
+        for c in 0..run.width {
+            let col_vals = &mut j_vals[c * n..(c + 1) * n];
+            colbuf[..n].copy_from_slice(col_vals);
+            // SAFETY: caller guarantees avx512f; `dsub` is the n×n block
+            // gathered above and both slices are exactly n long.
+            unsafe { gemv_cm_avx512(dsub, n, &colbuf[..n], col_vals) };
+            let j = run.j0 + c;
+            let (s, e) = (run.i_col_ptr[j], run.i_col_ptr[j + 1]);
+            let mut cursor = 0usize;
+            for (&ir, &iv) in run.i_row_idx[s..e].iter().zip(&run.i_vals[s..e]) {
+                while cursor < n && run.rows[cursor] < ir {
+                    cursor += 1;
+                }
+                debug_assert!(
+                    cursor < n && run.rows[cursor] == ir,
+                    "I entry outside the kept influence pattern"
+                );
+                col_vals[cursor] += iv;
+            }
+        }
+    }
+}
+
+/// The aarch64 NEON kernel bodies — 4-wide `float32x4_t` FMA for the
+/// contiguous-load products. Reachable only through the `have_neon()`
+/// guards (`is_aarch64_feature_detected!`), each with a scalar fallback;
+/// the `cross-aarch64` CI job (`cargo check --target
+/// aarch64-unknown-linux-gnu`) keeps this module compiling on x86 runners.
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use super::{RunView, Scalar, SparseKernel};
+    use crate::tensor::matrix::Matrix;
+    use std::arch::aarch64::{vdupq_n_f32, vfmaq_f32, vld1q_f32, vst1q_f32};
+
+    /// `C (+)= A·B`, register-tiled: per C row, 16-wide column tiles held
+    /// in four Q accumulators while the row's nonzeros stream through one
+    /// broadcast-FMA each, then a 4-tile and a scalar tail.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn spmm_neon(
+        row_ptr: &[usize],
+        col_idx: &[u32],
+        vals: &[f32],
+        b: &Matrix,
+        c: &mut Matrix,
+        accumulate: bool,
+    ) {
+        // SAFETY: caller guarantees NEON and spmm shape invariants
+        // (b.rows() == A-cols, c is A-rows × b.cols()); tile loads/stores
+        // are bounded by `ncols - 16` / `ncols - 4`, and column ids index
+        // valid rows of `b`.
+        unsafe {
+            let ncols = b.cols();
+            for i in 0..c.rows() {
+                let (s, e) = (*row_ptr.get_unchecked(i), *row_ptr.get_unchecked(i + 1));
+                let crow = c.row_mut(i);
+                let cp = crow.as_mut_ptr();
+                let mut j = 0usize;
+                while j + 16 <= ncols {
+                    let (mut a0, mut a1, mut a2, mut a3) = if accumulate {
+                        (
+                            vld1q_f32(cp.add(j)),
+                            vld1q_f32(cp.add(j + 4)),
+                            vld1q_f32(cp.add(j + 8)),
+                            vld1q_f32(cp.add(j + 12)),
+                        )
+                    } else {
+                        (
+                            vdupq_n_f32(0.0),
+                            vdupq_n_f32(0.0),
+                            vdupq_n_f32(0.0),
+                            vdupq_n_f32(0.0),
+                        )
+                    };
+                    for t in s..e {
+                        let v = *vals.get_unchecked(t);
+                        if v == 0.0 {
+                            continue;
+                        }
+                        let bp = b.row(*col_idx.get_unchecked(t) as usize).as_ptr();
+                        let vv = vdupq_n_f32(v);
+                        a0 = vfmaq_f32(a0, vv, vld1q_f32(bp.add(j)));
+                        a1 = vfmaq_f32(a1, vv, vld1q_f32(bp.add(j + 4)));
+                        a2 = vfmaq_f32(a2, vv, vld1q_f32(bp.add(j + 8)));
+                        a3 = vfmaq_f32(a3, vv, vld1q_f32(bp.add(j + 12)));
+                    }
+                    vst1q_f32(cp.add(j), a0);
+                    vst1q_f32(cp.add(j + 4), a1);
+                    vst1q_f32(cp.add(j + 8), a2);
+                    vst1q_f32(cp.add(j + 12), a3);
+                    j += 16;
+                }
+                while j + 4 <= ncols {
+                    let mut a0 =
+                        if accumulate { vld1q_f32(cp.add(j)) } else { vdupq_n_f32(0.0) };
+                    for t in s..e {
+                        let v = *vals.get_unchecked(t);
+                        if v == 0.0 {
+                            continue;
+                        }
+                        let bp = b.row(*col_idx.get_unchecked(t) as usize).as_ptr();
+                        a0 = vfmaq_f32(a0, vdupq_n_f32(v), vld1q_f32(bp.add(j)));
+                    }
+                    vst1q_f32(cp.add(j), a0);
+                    j += 4;
+                }
+                while j < ncols {
+                    let mut acc = if accumulate { *crow.get_unchecked(j) } else { 0.0 };
+                    for t in s..e {
+                        let v = *vals.get_unchecked(t);
+                        if v == 0.0 {
+                            continue;
+                        }
+                        acc += v * *b.row(*col_idx.get_unchecked(t) as usize).get_unchecked(j);
+                    }
+                    *crow.get_unchecked_mut(j) = acc;
+                    j += 1;
+                }
+            }
+        }
+    }
+
+    /// Column-major GEMV `y[i] = Σ_m x[m]·a_cm[m·n + i]`, 4 rows per pass
+    /// so each `x[m]` broadcast feeds one contiguous load + FMA.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn gemv_cm_neon(a_cm: &[f32], n: usize, x: &[f32], y: &mut [f32]) {
+        // SAFETY: caller guarantees NEON, `a_cm.len() >= n·n`,
+        // `x.len() >= n`, `y.len() >= n`; 4-wide accesses are bounded by
+        // `n - 4` within each n-long column.
+        unsafe {
+            let mut i = 0usize;
+            while i + 4 <= n {
+                let mut acc = vdupq_n_f32(0.0);
+                for m in 0..n {
+                    let xm = *x.get_unchecked(m);
+                    if xm == 0.0 {
+                        continue;
+                    }
+                    let col = a_cm.as_ptr().add(m * n + i);
+                    acc = vfmaq_f32(acc, vdupq_n_f32(xm), vld1q_f32(col));
+                }
+                vst1q_f32(y.as_mut_ptr().add(i), acc);
+                i += 4;
+            }
+            while i < n {
+                let mut acc = 0.0f32;
+                for m in 0..n {
+                    let xm = *x.get_unchecked(m);
+                    if xm != 0.0 {
+                        acc += xm * *a_cm.get_unchecked(m * n + i);
+                    }
+                }
+                *y.get_unchecked_mut(i) = acc;
+                i += 1;
+            }
+        }
+    }
+
+    /// Fused influence update, 4-wide: the x86 bodies' shape with the NEON
+    /// GEMV (see `x86::fused_influence_update_avx2`).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn fused_influence_update_neon(
+        row_ptr: &[usize],
+        col_idx: &[u32],
+        vals: &[f32],
+        run: RunView<'_>,
+        j_vals: &mut [f32],
+        scratch: &mut [f32],
+    ) {
+        let n = run.rows.len();
+        debug_assert_eq!(j_vals.len(), n * run.width);
+        debug_assert!(scratch.len() >= n * (n + 1));
+        let (dsub, colbuf) = scratch.split_at_mut(n * n);
+        Scalar.gather_block(row_ptr, col_idx, vals, run.rows, dsub);
+        for c in 0..run.width {
+            let col_vals = &mut j_vals[c * n..(c + 1) * n];
+            colbuf[..n].copy_from_slice(col_vals);
+            // SAFETY: caller guarantees NEON; `dsub` is the n×n block
+            // gathered above and both slices are exactly n long.
+            unsafe { gemv_cm_neon(dsub, n, &colbuf[..n], col_vals) };
+            let j = run.j0 + c;
+            let (s, e) = (run.i_col_ptr[j], run.i_col_ptr[j + 1]);
+            let mut cursor = 0usize;
+            for (&ir, &iv) in run.i_row_idx[s..e].iter().zip(&run.i_vals[s..e]) {
+                while cursor < n && run.rows[cursor] < ir {
+                    cursor += 1;
+                }
+                debug_assert!(
+                    cursor < n && run.rows[cursor] == ir,
+                    "I entry outside the kept influence pattern"
+                );
+                col_vals[cursor] += iv;
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -735,15 +1591,144 @@ mod tests {
         assert_eq!(KernelChoice::parse("auto"), Ok(KernelChoice::Auto));
         assert_eq!(KernelChoice::parse("scalar"), Ok(KernelChoice::Scalar));
         assert_eq!(KernelChoice::parse("simd"), Ok(KernelChoice::Simd));
+        assert_eq!(KernelChoice::parse("avx512"), Ok(KernelChoice::Avx512));
+        assert_eq!(KernelChoice::parse("neon"), Ok(KernelChoice::Neon));
         assert!(KernelChoice::parse("fast").is_err());
         assert_eq!(KernelChoice::Scalar.resolve(), KernelKind::Scalar);
         assert_eq!(KernelChoice::Simd.resolve(), KernelKind::Simd);
-        let auto = KernelChoice::Auto.resolve();
-        assert_eq!(auto == KernelKind::Simd, have_avx2());
+        assert_eq!(KernelChoice::Avx512.resolve(), KernelKind::Avx512);
+        assert_eq!(KernelChoice::Neon.resolve(), KernelKind::Neon);
+        // Auto picks the widest backend this host actually has.
+        let expect = if have_avx512() {
+            KernelKind::Avx512
+        } else if have_avx2() {
+            KernelKind::Simd
+        } else if have_neon() {
+            KernelKind::Neon
+        } else {
+            KernelKind::Scalar
+        };
+        assert_eq!(KernelChoice::Auto.resolve(), expect);
         assert_eq!(KernelKind::default(), KernelKind::Scalar);
         assert_eq!(KernelKind::Scalar.name(), "scalar");
         assert_eq!(KernelKind::Simd.name(), "simd");
+        assert_eq!(KernelKind::Avx512.name(), "avx512");
+        assert_eq!(KernelKind::Neon.name(), "neon");
         assert_eq!(KernelChoice::default().name(), "auto");
+        // available_backends: scalar is always runnable and listed first;
+        // the last (widest) entry is what Auto resolves to.
+        let backs = available_backends();
+        assert_eq!(backs[0], KernelKind::Scalar);
+        assert_eq!(*backs.last().unwrap(), KernelChoice::Auto.resolve());
+    }
+
+    /// Build a single-run fixture: a 25-row shared pattern (exercising the
+    /// 16-, 8- and 4-wide bodies plus tails), 3 columns, and an immediate
+    /// Jacobian with 0–2 entries per column, all inside the row set.
+    #[allow(clippy::type_complexity)]
+    fn fused_fixture() -> (Vec<usize>, Vec<u32>, Vec<f32>, Vec<u32>, Vec<usize>, Vec<u32>, Vec<f32>, Vec<f32>)
+    {
+        let n_state = 29usize;
+        let (rp, ci, vals, _) = random_csr(n_state, 0.4, 61);
+        let rows: Vec<u32> = (0..n_state as u32).filter(|r| r % 7 != 3).collect();
+        let n = rows.len();
+        assert_eq!(n, 25);
+        let mut rng = Pcg32::seeded(62);
+        let width = 3usize;
+        let j_vals: Vec<f32> = (0..n * width).map(|_| rng.normal()).collect();
+        let i_col_ptr = vec![0usize, 2, 2, 3];
+        let i_row_idx = vec![rows[0], rows[5], rows[24]];
+        let i_vals: Vec<f32> = (0..3).map(|_| rng.normal()).collect();
+        (rp, ci, vals, rows, i_col_ptr, i_row_idx, i_vals, j_vals)
+    }
+
+    #[test]
+    fn fused_influence_update_matches_two_pass_and_scalar_is_bitwise() {
+        let (rp, ci, vals, rows, i_col_ptr, i_row_idx, i_vals, j0_vals) = fused_fixture();
+        let n = rows.len();
+        let width = i_col_ptr.len() - 1;
+        // Historical two-pass reference: gather_block → per-column copy +
+        // gemv_cm → sorted immediate merge, all on the Scalar kernel.
+        let mut want = j0_vals.clone();
+        let mut dsub = vec![0.0f32; n * n];
+        let mut old = vec![0.0f32; n];
+        Scalar.gather_block(&rp, &ci, &vals, &rows, &mut dsub);
+        for c in 0..width {
+            let col = &mut want[c * n..(c + 1) * n];
+            old.copy_from_slice(col);
+            Scalar.gemv_cm(&dsub, n, &old, col);
+            let mut cursor = 0usize;
+            for t in i_col_ptr[c]..i_col_ptr[c + 1] {
+                let ir = i_row_idx[t];
+                while cursor < n && rows[cursor] < ir {
+                    cursor += 1;
+                }
+                col[cursor] += i_vals[t];
+            }
+        }
+        let run = RunView {
+            rows: &rows,
+            j0: 0,
+            width,
+            i_col_ptr: &i_col_ptr,
+            i_row_idx: &i_row_idx,
+            i_vals: &i_vals,
+        };
+        let mut scratch = vec![0.0f32; n * (n + 1)];
+        // Scalar fused is the bitwise pin of the two-pass order.
+        let mut got = j0_vals.clone();
+        Scalar.fused_influence_update(&rp, &ci, &vals, run, &mut got, &mut scratch);
+        assert_eq!(got, want);
+        // Every backend runnable on this host agrees to SIMD tolerance.
+        for kernel in available_backends() {
+            let mut got = j0_vals.clone();
+            kernel.fused_influence_update(&rp, &ci, &vals, run, &mut got, &mut scratch);
+            for (a, b) in got.iter().zip(&want) {
+                assert!(
+                    (a - b).abs() <= 1e-5 * (1.0 + b.abs()),
+                    "{} fused: {a} vs {b}",
+                    SparseKernel::name(&kernel)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn wide_backends_match_scalar_on_every_kernel_op() {
+        // Avx512/Neon delegate or fall back on hosts without the feature,
+        // so this exercises whatever path the CI runner actually takes.
+        let (rp, ci, vals, _) = random_csr(37, 0.45, 71);
+        let mut rng = Pcg32::seeded(72);
+        let x: Vec<f32> = (0..37).map(|_| rng.normal()).collect();
+        let b = Matrix::from_fn(37, 45, |_, _| rng.normal());
+        for kernel in [KernelKind::Avx512, KernelKind::Neon] {
+            let (mut ys, mut yv) = (vec![0.0f32; 37], vec![9.0f32; 37]);
+            Scalar.matvec(&rp, &ci, &vals, &x, &mut ys);
+            kernel.matvec(&rp, &ci, &vals, &x, &mut yv);
+            for (a, b) in ys.iter().zip(&yv) {
+                assert!((a - b).abs() <= 1e-5 * (1.0 + a.abs()), "{a} vs {b}");
+            }
+            Scalar.matvec_t(&rp, &ci, &vals, &x, &mut ys);
+            kernel.matvec_t(&rp, &ci, &vals, &x, &mut yv);
+            assert_eq!(ys, yv);
+            for accumulate in [false, true] {
+                let mut cs = Matrix::filled(37, 45, 0.5);
+                let mut cv = Matrix::filled(37, 45, 0.5);
+                Scalar.spmm(&rp, &ci, &vals, &b, &mut cs, accumulate);
+                kernel.spmm(&rp, &ci, &vals, &b, &mut cv, accumulate);
+                for (a, b) in cs.as_slice().iter().zip(cv.as_slice()) {
+                    assert!((a - b).abs() <= 1e-4 * (1.0 + a.abs()), "{a} vs {b}");
+                }
+            }
+            let n = 21usize;
+            let a_cm: Vec<f32> = (0..n * n).map(|_| rng.normal()).collect();
+            let (mut gs, mut gv) = (vec![3.0f32; n], vec![4.0f32; n]);
+            Scalar.gemv_cm(&a_cm, n, &x[..n], &mut gs);
+            kernel.gemv_cm(&a_cm, n, &x[..n], &mut gv);
+            for (a, b) in gs.iter().zip(&gv) {
+                assert!((a - b).abs() <= 1e-4 * (1.0 + a.abs()), "{a} vs {b}");
+            }
+        }
     }
 
     #[test]

@@ -73,11 +73,14 @@ pub struct TrainConfig {
     /// [`ConfigKey`](crate::train::checkpoint::ConfigKey) (method, arch,
     /// shape, seed, …).
     pub resume_from: Option<PathBuf>,
-    /// sparse-kernel implementation (`--kernel auto|scalar|simd`), resolved
-    /// once at startup and tagged onto every lane's dynamics Jacobian. `auto`
-    /// (the default) picks SIMD when the CPU supports it. Gradients agree
-    /// across kernels up to f32 summation order; for bitwise-identical
-    /// resumes, keep the flag consistent across a checkpoint lineage.
+    /// sparse-kernel implementation (`--kernel auto|scalar|simd|avx512|neon`),
+    /// resolved once at startup (logged to stderr by the drivers) and tagged
+    /// onto every lane's dynamics Jacobian. `auto` (the default) picks the
+    /// widest backend the CPU supports (avx512 > simd > neon > scalar).
+    /// Gradients agree across kernels up to f32 summation order; for
+    /// bitwise-identical resumes, keep the flag consistent across a
+    /// checkpoint lineage (checkpoints themselves are kernel-agnostic —
+    /// they carry no kernel tag).
     pub kernel: KernelChoice,
 }
 

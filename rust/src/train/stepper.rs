@@ -204,7 +204,7 @@ impl<'c> Stepper<'c> {
             cfg.batch.max(1),
             cfg.workers,
             cfg.spawn,
-            cfg.kernel.resolve(),
+            cfg.kernel.resolve_logged("stepper"),
             rng,
         );
         let data_streams: Arc<Mutex<Vec<Pcg32>>> =
